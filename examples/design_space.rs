@@ -1,0 +1,61 @@
+//! Design-space exploration: sweep array geometry and PE sparsity
+//! patterns for a workload of your choice — the tool a hardware team
+//! would use to size KAN-SAs for a new application.
+//!
+//! ```bash
+//! cargo run --release --example design_space [-- app-name]
+//! ```
+
+use kan_sas::arch::ArrayConfig;
+use kan_sas::cost::{array_area_mm2, normalized_energy, PeCost};
+use kan_sas::report::Table;
+use kan_sas::sim::analytic;
+use kan_sas::workloads;
+
+fn main() {
+    let target = std::env::args().nth(1).unwrap_or_else(|| "MNIST-KAN".to_string());
+    let apps = workloads::table2();
+    let app = apps
+        .iter()
+        .find(|a| a.name.eq_ignore_ascii_case(&target))
+        .unwrap_or_else(|| {
+            eprintln!(
+                "unknown app '{target}'; available: {}",
+                apps.iter().map(|a| a.name).collect::<Vec<_>>().join(", ")
+            );
+            std::process::exit(1);
+        });
+    let wls = workloads::app_workloads(app, workloads::DEFAULT_BS, None);
+    let (g, p) = (app.g, app.p);
+    let (n, m) = (p + 1, g + p);
+
+    let mut t = Table::new(&[
+        "config", "area mm^2", "cycles", "util %", "runtime us @fmax", "norm. energy/PE",
+    ])
+    .with_title(format!("design space — {} (G={g}, P={p}, N:M = {n}:{m})", app.name).as_str());
+    for (r, c) in [(4, 4), (8, 8), (16, 16), (32, 32), (8, 16), (16, 32)] {
+        for kan in [false, true] {
+            let cfg = if kan {
+                ArrayConfig::kan_sas(r, c, n, m)
+            } else {
+                ArrayConfig::conventional(r, c)
+            };
+            let s = analytic::simulate_app(&cfg, &wls);
+            let pe = PeCost::of(cfg.pe);
+            let us = s.cycles as f64 * pe.delay_ns * 1e-3;
+            t.row(vec![
+                cfg.label(),
+                format!("{:.3}", array_area_mm2(&cfg)),
+                s.cycles.to_string(),
+                format!("{:.1}", s.utilization() * 100.0),
+                format!("{us:.1}"),
+                format!(
+                    "{:.2}",
+                    if kan { normalized_energy(n, m) } else { 1.0 }
+                ),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+    println!("(runtime uses each PE's own critical-path delay as the clock)");
+}

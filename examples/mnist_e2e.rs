@@ -1,0 +1,105 @@
+//! End-to-end driver (EXPERIMENTS.md "E2E"): the full system on a real
+//! small workload.
+//!
+//! * regenerates the synth-digits test set exactly as training did
+//!   (same generator, same seed — see python/compile/data.py);
+//! * classifies it with the bit-exact int8 engine (the KAN-SAs datapath)
+//!   and with the AOT fp32 PJRT path;
+//! * reports accuracy (fp32 vs int8, the paper's <1% claim), CPU
+//!   throughput, and the simulated accelerator cycles on both the
+//!   conventional SA and KAN-SAs at similar area.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example mnist_e2e
+//! ```
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use kan_sas::arch::ArrayConfig;
+use kan_sas::cost::array_area_mm2;
+use kan_sas::kan::{Engine, QuantizedModel};
+use kan_sas::quant;
+use kan_sas::runtime::{FloatEngine, ModelArtifacts};
+use kan_sas::util::container::Container;
+
+fn main() -> Result<()> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let qm = QuantizedModel::load(&dir.join("mnist_kan.kanq"))
+        .context("run `make artifacts` first")?;
+    let engine = Engine::new(qm);
+
+    // the golden container carries a labelled slice of the test set
+    let golden = Container::open(&dir.join("mnist_kan_golden.kgld"))?;
+    let (x_q, xs) = golden.u8("x_q")?;
+    let (labels, _) = golden.i32("labels")?;
+    let (n, in_dim) = (xs[0], xs[1]);
+    println!("MNIST-KAN [784, 64, 10] G=10 P=3 — {n} labelled test digits");
+
+    // 1. int8 engine accuracy + throughput
+    let t0 = Instant::now();
+    let fwd = engine.forward_from_q(&x_q, n)?;
+    let dt = t0.elapsed();
+    let int8_correct = fwd
+        .predictions()
+        .iter()
+        .zip(&labels)
+        .filter(|&(&p, &l)| p as i32 == l)
+        .count();
+    println!(
+        "int8 engine:  {}/{} = {:.2}%  ({:.1} rows/s on CPU)",
+        int8_correct,
+        n,
+        100.0 * int8_correct as f64 / n as f64,
+        n as f64 / dt.as_secs_f64()
+    );
+
+    // 2. fp32 PJRT path on the same rows
+    let client = xla::PjRtClient::cpu()?;
+    let art = ModelArtifacts::new(&dir, "mnist_kan");
+    let bs = 32;
+    let fe = FloatEngine::load(&client, &art, bs)?;
+    let mut fp_correct = 0usize;
+    let mut counted = 0usize;
+    let t0 = Instant::now();
+    for chunk in 0..n / bs {
+        let rows = &x_q[chunk * bs * in_dim..(chunk + 1) * bs * in_dim];
+        let x: Vec<f32> = rows.iter().map(|&q| quant::dequantize_activation(q)).collect();
+        let logits = fe.execute(&x)?;
+        for (i, p) in fe.predictions(&logits).into_iter().enumerate() {
+            if p as i32 == labels[chunk * bs + i] {
+                fp_correct += 1;
+            }
+            counted += 1;
+        }
+    }
+    let dt = t0.elapsed();
+    println!(
+        "fp32 (PJRT):  {}/{} = {:.2}%  ({:.1} rows/s on CPU)",
+        fp_correct,
+        counted,
+        100.0 * fp_correct as f64 / counted as f64,
+        counted as f64 / dt.as_secs_f64()
+    );
+    println!(
+        "accuracy drop int8 vs fp32: {:.2} pp (paper target: < 1 pp)",
+        100.0 * (fp_correct as f64 / counted as f64 - int8_correct as f64 / n as f64)
+    );
+
+    // 3. accelerator cost at similar area (the Fig. 8 pair)
+    println!("\nsimulated accelerator cost for the {n}-digit batch:");
+    for cfg in [ArrayConfig::conventional(32, 32), ArrayConfig::kan_sas(16, 16, 4, 13)] {
+        let s = engine.simulate_batch(&cfg, n);
+        println!(
+            "  {} ({:.3} mm^2): {:>9} cycles ({:.1} us @500MHz), util {:.1}%",
+            cfg.label(),
+            array_area_mm2(&cfg),
+            s.cycles,
+            s.cycles as f64 * 2e-3,
+            s.utilization() * 100.0
+        );
+    }
+    println!("\nmnist_e2e OK");
+    Ok(())
+}

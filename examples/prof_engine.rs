@@ -1,0 +1,154 @@
+//! Manual phase profiling of the int8 engine hot path (perf events are
+//! unavailable in the build sandbox). Times each stage of MNIST-KAN
+//! layer 1 in isolation.
+
+use std::time::Instant;
+
+use kan_sas::bspline::BsplineUnit;
+use kan_sas::kan::{Engine, QuantizedModel};
+use kan_sas::util::rng::Rng;
+
+fn main() {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let engine = Engine::new(QuantizedModel::load(&dir.join("mnist_kan.kanq")).unwrap());
+    let l = &engine.model.layers[0];
+    let (kdim, n, m, p) = (l.in_dim, l.out_dim, l.num_bases(), l.degree);
+    let bs = 128;
+    let mut rng = Rng::new(3);
+    let x_q: Vec<u8> = (0..bs * kdim).map(|_| rng.below(256) as u8).collect();
+    let unit = BsplineUnit::new(l.lut.clone(), l.grid);
+    let coeff = l.coeff.data();
+    let reps = 50;
+
+    // (a) unit evals only
+    let t0 = Instant::now();
+    let mut sink = 0u64;
+    for _ in 0..reps {
+        for &xq in &x_q {
+            let (v, k) = unit.eval_into(xq);
+            sink = sink.wrapping_add(v[0] as u64 + k as u64);
+        }
+    }
+    println!("unit evals:      {:?}  (sink {sink})", t0.elapsed() / reps);
+
+    // (b) spline MACs, feature-major, fused 4-row
+    let t0 = Instant::now();
+    let mut acc = vec![0i32; bs * n];
+    for _ in 0..reps {
+        acc.iter_mut().for_each(|a| *a = 0);
+        for feat in 0..kdim {
+            let crow = &coeff[feat * m * n..(feat + 1) * m * n];
+            for b in 0..bs {
+                let (vals, k) = unit.eval_into(x_q[b * kdim + feat]);
+                let wbase = (k - p) * n;
+                let arow = &mut acc[b * n..(b + 1) * n];
+                let (v0, v1, v2, v3) =
+                    (vals[0] as i32, vals[1] as i32, vals[2] as i32, vals[3] as i32);
+                let w = &crow[wbase..wbase + 4 * n];
+                let (w0, rest) = w.split_at(n);
+                let (w1, rest) = rest.split_at(n);
+                let (w2, w3) = rest.split_at(n);
+                for i in 0..n {
+                    arow[i] += v0 * w0[i] as i32
+                        + v1 * w1[i] as i32
+                        + v2 * w2[i] as i32
+                        + v3 * w3[i] as i32;
+                }
+            }
+        }
+    }
+    println!("spline fused:    {:?}  (acc[0] {})", t0.elapsed() / reps, acc[0]);
+
+    // (c) spline MACs, batch-major j-loop (the original layout)
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        acc.iter_mut().for_each(|a| *a = 0);
+        for b in 0..bs {
+            let arow = &mut acc[b * n..(b + 1) * n];
+            for feat in 0..kdim {
+                let (vals, k) = unit.eval_into(x_q[b * kdim + feat]);
+                let crow = &coeff[feat * m * n..(feat + 1) * m * n];
+                let wbase = (k - p) * n;
+                for (j, &v) in vals.iter().enumerate() {
+                    if v == 0 {
+                        continue;
+                    }
+                    let v = v as i32;
+                    let wrow = &crow[wbase + j * n..wbase + (j + 1) * n];
+                    for (a, &w) in arow.iter_mut().zip(wrow) {
+                        *a += v * w as i32;
+                    }
+                }
+            }
+        }
+    }
+    println!("spline j-loop:   {:?}  (acc[0] {})", t0.elapsed() / reps, acc[0]);
+
+    // (d) i16-pair trick: widen weights once to i16, use i32 muls — or
+    //     precompute per-feature transposed layout? measure plain i16 copy
+    let coeff16: Vec<i16> = coeff.iter().map(|&w| w as i16).collect();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        acc.iter_mut().for_each(|a| *a = 0);
+        for feat in 0..kdim {
+            let crow = &coeff16[feat * m * n..(feat + 1) * m * n];
+            for b in 0..bs {
+                let (vals, k) = unit.eval_into(x_q[b * kdim + feat]);
+                let wbase = (k - p) * n;
+                let arow = &mut acc[b * n..(b + 1) * n];
+                let (v0, v1, v2, v3) =
+                    (vals[0] as i32, vals[1] as i32, vals[2] as i32, vals[3] as i32);
+                let w = &crow[wbase..wbase + 4 * n];
+                let (w0, rest) = w.split_at(n);
+                let (w1, rest) = rest.split_at(n);
+                let (w2, w3) = rest.split_at(n);
+                for i in 0..n {
+                    arow[i] += v0 * w0[i] as i32
+                        + v1 * w1[i] as i32
+                        + v2 * w2[i] as i32
+                        + v3 * w3[i] as i32;
+                }
+            }
+        }
+    }
+    println!("spline i16 wts:  {:?}  (acc[0] {})", t0.elapsed() / reps, acc[0]);
+
+    // (d2) blocked batch: acc chunk stays in L1
+    let coeff16b: Vec<i16> = coeff.iter().map(|&w| w as i16).collect();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        acc.iter_mut().for_each(|a| *a = 0);
+        const BB: usize = 16;
+        for b0 in (0..bs).step_by(BB) {
+            let bl = BB.min(bs - b0);
+            for feat in 0..kdim {
+                let crow = &coeff16b[feat * m * n..(feat + 1) * m * n];
+                for b in b0..b0 + bl {
+                    let (vals, k) = unit.eval_into(x_q[b * kdim + feat]);
+                    let wbase = (k - p) * n;
+                    let arow = &mut acc[b * n..(b + 1) * n];
+                    let (v0, v1, v2, v3) =
+                        (vals[0] as i32, vals[1] as i32, vals[2] as i32, vals[3] as i32);
+                    let w = &crow[wbase..wbase + 4 * n];
+                    let (w0, rest) = w.split_at(n);
+                    let (w1, rest) = rest.split_at(n);
+                    let (w2, w3) = rest.split_at(n);
+                    for i in 0..n {
+                        arow[i] += v0 * w0[i] as i32
+                            + v1 * w1[i] as i32
+                            + v2 * w2[i] as i32
+                            + v3 * w3[i] as i32;
+                    }
+                }
+            }
+        }
+    }
+    println!("spline blocked16:{:?}  (acc[0] {})", t0.elapsed() / reps, acc[0]);
+
+    // (e) full engine reference
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(engine.forward_from_q(&x_q, bs).unwrap());
+    }
+    println!("full forward:    {:?}", t0.elapsed() / reps);
+}

@@ -1,0 +1,53 @@
+//! Quickstart: load the tiny trained KAN, run one inference through both
+//! engines (bit-exact int8 + PJRT fp32), and simulate it on KAN-SAs.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+use kan_sas::arch::ArrayConfig;
+use kan_sas::cost::array_area_mm2;
+use kan_sas::kan::{Engine, QuantizedModel};
+use kan_sas::runtime::{FloatEngine, ModelArtifacts};
+
+fn main() -> Result<()> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+
+    // 1. the bit-exact integer engine (the accelerated datapath)
+    let qm = QuantizedModel::load(&dir.join("quickstart_kan.kanq"))
+        .context("run `make artifacts` first")?;
+    println!(
+        "loaded {}: dims {:?}, G={}, P={}, {} int8 params",
+        qm.name,
+        qm.dims,
+        qm.layers[0].grid,
+        qm.layers[0].degree,
+        qm.num_params()
+    );
+    let engine = Engine::new(qm);
+    let x = [0.25f32, -0.5, 0.75, 0.1];
+    let fwd = engine.forward(&x, 1)?;
+    println!("int8 engine: accumulators {:?} -> class {}", fwd.t, fwd.predictions()[0]);
+
+    // 2. the same model through the AOT fp32 path (jax -> HLO -> PJRT)
+    let client = xla::PjRtClient::cpu()?;
+    let fe = FloatEngine::load(&client, &ModelArtifacts::new(&dir, "quickstart_kan"), 1)?;
+    let logits = fe.execute(&x)?;
+    println!("pjrt fp32: logits {logits:?} -> class {}", fe.predictions(&logits)[0]);
+
+    // 3. what would this batch cost on the accelerator?
+    for cfg in [ArrayConfig::conventional(8, 8), ArrayConfig::kan_sas(8, 8, 4, 8)] {
+        let s = engine.simulate_batch(&cfg, 1);
+        println!(
+            "simulated {} ({:.3} mm^2): {} cycles, {:.1}% utilization",
+            cfg.label(),
+            array_area_mm2(&cfg),
+            s.cycles,
+            s.utilization() * 100.0
+        );
+    }
+    Ok(())
+}

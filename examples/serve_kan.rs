@@ -1,0 +1,65 @@
+//! Serving demo: batched KAN inference through the coordinator —
+//! concurrent clients, dynamic batching, latency/throughput report
+//! (what a deployment of the paper's accelerator would look like from
+//! the software side).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_kan
+//! ```
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+use kan_sas::arch::ArrayConfig;
+use kan_sas::coordinator::{BatchPolicy, Server, ServerConfig};
+use kan_sas::kan::{Engine, QuantizedModel};
+use kan_sas::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let qm = QuantizedModel::load(&dir.join("mnist_kan.kanq"))
+        .context("run `make artifacts` first")?;
+    let in_dim = qm.in_dim();
+    let engine = Engine::new(qm);
+
+    for (max_batch, clients) in [(1usize, 8usize), (16, 8), (64, 8)] {
+        let server = Server::start(
+            engine.clone(),
+            ServerConfig {
+                policy: BatchPolicy { max_batch, max_wait: Duration::from_millis(1) },
+                sim_array: ArrayConfig::kan_sas(16, 16, 4, 13),
+            },
+        );
+        let per_client = 128;
+        let t0 = Instant::now();
+        let mut threads = Vec::new();
+        for c in 0..clients {
+            let h = server.handle();
+            threads.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(c as u64);
+                for _ in 0..per_client {
+                    let x: Vec<f32> =
+                        (0..in_dim).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+                    h.infer(&x).expect("infer");
+                }
+            }));
+        }
+        for t in threads {
+            t.join().unwrap();
+        }
+        let wall = t0.elapsed();
+        let m = server.shutdown();
+        let lat = m.latency().unwrap();
+        println!(
+            "max_batch {max_batch:>3}: {:>6.0} req/s  mean-batch {:>5.1}  p50 {:>6} us  p99 {:>6} us  sim {:>9} cycles",
+            (clients * per_client) as f64 / wall.as_secs_f64(),
+            m.mean_batch_size(),
+            lat.p50_us,
+            lat.p99_us,
+            m.sim_cycles
+        );
+    }
+    println!("serve_kan OK — batching trades latency for throughput as expected");
+    Ok(())
+}

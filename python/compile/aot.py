@@ -1,0 +1,299 @@
+"""AOT artifact builder: train -> quantize -> export (the `make artifacts` entry).
+
+Produces everything the rust layer consumes, under ``artifacts/``:
+
+* ``<model>_params.npz``      — trained float parameters (build cache).
+* ``<model>.kanq``            — quantized model for the bit-exact integer
+                                engine (``rust/src/kan``): LUTs, int8
+                                coefficients/base weights, requantization
+                                constants. Custom binary format, below.
+* ``<model>_golden.kgld``     — golden vectors (inputs + expected
+                                intermediate and final integer tensors)
+                                replayed by rust tests for exact equality.
+* ``<model>_b<BS>.hlo.txt``   — the fp32 forward pass (L2 jax calling the
+                                L1 Pallas kernels) lowered to **HLO text**
+                                for the PJRT runtime. Text, not
+                                ``.serialize()``: jax >= 0.5 emits protos
+                                with 64-bit instruction ids that
+                                xla_extension 0.5.1 rejects; the text
+                                parser reassigns ids and round-trips.
+* ``train_metrics.json`` / ``quant_metrics.json`` — accuracy bookkeeping
+                                for EXPERIMENTS.md.
+
+Binary container format (shared by .kanq and .kgld): the file starts with
+an 8-byte magic, a little-endian u32 JSON-header length, the UTF-8 JSON
+header, then raw little-endian tensor blobs. The header's ``tensors``
+table maps names to (dtype, shape, offset, nbytes) with offsets relative
+to the end of the header. ``rust/src/util/container.rs`` is the reader.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import struct
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, quantize, train
+from .kernels import bspline_lut
+
+ROOT = Path(__file__).resolve().parents[2]
+ARTIFACTS = ROOT / "artifacts"
+
+MAGIC_KANQ = b"KANQ0001"
+MAGIC_GOLD = b"KGLD0001"
+MAGIC_WTS = b"KWTS0001"
+
+
+# ---------------------------------------------------------------------------
+# Binary container writer
+# ---------------------------------------------------------------------------
+
+def write_container(path: Path, magic: bytes, meta: dict, tensors: dict[str, np.ndarray]) -> None:
+    assert len(magic) == 8
+    blobs = []
+    table = {}
+    off = 0
+    for name, arr in tensors.items():
+        arr = np.ascontiguousarray(arr)
+        raw = arr.tobytes()
+        table[name] = {
+            "dtype": arr.dtype.name,
+            "shape": list(arr.shape),
+            "offset": off,
+            "nbytes": len(raw),
+        }
+        blobs.append(raw)
+        off += len(raw)
+    header = dict(meta)
+    header["tensors"] = table
+    hraw = json.dumps(header).encode("utf-8")
+    with open(path, "wb") as f:
+        f.write(magic)
+        f.write(struct.pack("<I", len(hraw)))
+        f.write(hraw)
+        for b in blobs:
+            f.write(b)
+
+
+# ---------------------------------------------------------------------------
+# Quantized model + golden export
+# ---------------------------------------------------------------------------
+
+def export_kanq(qm: quantize.QuantizedModel, path: Path) -> None:
+    spec = qm.spec
+    meta = {
+        "name": spec.name,
+        "dims": list(spec.dims),
+        "grid": spec.grid,
+        "degree": spec.degree,
+        "shift": quantize.SHIFT,
+        "zero_point": quantize.ZP,
+        "lut_size": quantize.LUT_SIZE,
+        "layers": [],
+    }
+    tensors = {}
+    for i, layer in enumerate(qm.layers):
+        meta["layers"].append(
+            {
+                "in_dim": layer.spec.in_dim,
+                "out_dim": layer.spec.out_dim,
+                "grid": layer.spec.grid,
+                "degree": layer.spec.degree,
+                "s_b": layer.s_b,
+                "s_c": layer.s_c,
+                "s_w": layer.s_w,
+                "m1": layer.m1,
+                "m2": layer.m2,
+                "s1": layer.s1,
+                "s2": layer.s2,
+            }
+        )
+        tensors[f"l{i}.lut"] = layer.lut            # (256, P+1) u8
+        tensors[f"l{i}.coeff"] = layer.coeff_q      # (K, M, N)  i8
+        tensors[f"l{i}.base"] = layer.base_q        # (K, N)     i8
+    write_container(path, MAGIC_KANQ, meta, tensors)
+
+
+def export_golden(
+    qm: quantize.QuantizedModel, x: np.ndarray, y: np.ndarray, path: Path
+) -> None:
+    """Golden vectors: inputs, layer-0 unit outputs, final accumulators."""
+    spec = qm.spec
+    x_q = quantize.quantize_activations(np.asarray(x, dtype=np.float32))
+    l0 = qm.layers[0]
+    vals0, k0 = quantize.bspline_unit_q(x_q, l0.lut, l0.spec.grid, l0.spec.degree)
+    # per-layer activation trace
+    acts = [x_q]
+    t = None
+    cur = x_q
+    for i, layer in enumerate(qm.layers):
+        t = layer.forward_int(cur)
+        if i + 1 < len(qm.layers):
+            cur = layer.requantize(t)
+            acts.append(cur)
+    tensors = {
+        "x_q": x_q,
+        "labels": y.astype(np.int32),
+        "l0.vals": vals0,
+        "l0.k": k0,
+        "t_final": t.astype(np.int64),
+        "pred": np.argmax(t, axis=-1).astype(np.int32),
+    }
+    for i, a in enumerate(acts[1:], start=1):
+        tensors[f"act{i}"] = a
+    write_container(
+        path,
+        MAGIC_GOLD,
+        {"name": spec.name, "batch": int(x_q.shape[0]), "dims": list(spec.dims)},
+        tensors,
+    )
+
+
+# ---------------------------------------------------------------------------
+# HLO text export (the jax -> rust interchange)
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_hlo(
+    params: list[dict], spec: model.KanModelSpec, batch_sizes: tuple[int, ...], outdir: Path
+) -> list[str]:
+    """Lower the fp32 forward (Pallas kernels included, interpret=True) to
+    HLO text, one module per static batch size.
+
+    Weights (and the per-layer B-spline LUTs) are *explicit leading
+    parameters* in a recorded order, fed once as literals by the rust
+    runtime — jax would otherwise hoist the closed-over arrays into
+    parameters in an order we don't control. The order is written to
+    ``<model>.kwts`` alongside the fp32 tensors.
+    """
+    written = []
+    # Flat, explicitly ordered weight list: per layer [coeff, base, lut].
+    names: list[str] = []
+    flats: list[jnp.ndarray] = []
+    for i, (layer_params, layer_spec) in enumerate(zip(params, spec.layers)):
+        names.append(f"l{i}.coeff")
+        flats.append(jnp.asarray(layer_params["coeff"], jnp.float32))
+        names.append(f"l{i}.base")
+        flats.append(jnp.asarray(layer_params["base"], jnp.float32))
+        names.append(f"l{i}.lut")
+        flats.append(bspline_lut.build_lut(layer_spec.degree))
+
+    def fwd(*args):
+        *wts, x = args
+        ps = [
+            {"coeff": wts[3 * i], "base": wts[3 * i + 1]}
+            for i in range(len(spec.layers))
+        ]
+        luts = [wts[3 * i + 2] for i in range(len(spec.layers))]
+        return (model.kan_forward(ps, x, spec, use_pallas=True, luts=luts),)
+
+    for bs in batch_sizes:
+        arg_specs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in flats]
+        arg_specs.append(jax.ShapeDtypeStruct((bs, spec.dims[0]), jnp.float32))
+        lowered = jax.jit(fwd).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        path = outdir / f"{spec.name}_b{bs}.hlo.txt"
+        path.write_text(text)
+        written.append(path.name)
+
+    write_container(
+        outdir / f"{spec.name}.kwts",
+        MAGIC_WTS,
+        {"name": spec.name, "order": names, "batch_sizes": list(batch_sizes)},
+        {n: np.asarray(a) for n, a in zip(names, flats)},
+    )
+    return written
+
+
+# ---------------------------------------------------------------------------
+# Orchestration
+# ---------------------------------------------------------------------------
+
+def build_model(name: str, retrain: bool, quant_metrics: dict) -> None:
+    if name == "quickstart_kan":
+        spec = model.quickstart_kan()
+        datasets = train.blob_datasets()
+        trainer = train.train_quickstart
+        batch_sizes = (1, 32)
+    elif name == "mnist_kan":
+        spec = model.mnist_kan()
+        datasets = train.digit_datasets()
+        trainer = train.train_mnist_kan
+        batch_sizes = (1, 32, 128)
+    elif name == "catch22_kan":
+        spec = model.catch22_kan(10)
+        datasets = train.timeseries_datasets()
+        trainer = train.train_catch22
+        batch_sizes = (1, 32)
+    else:
+        raise ValueError(f"unknown model {name}")
+
+    params_path = ARTIFACTS / f"{spec.name}_params.npz"
+    if params_path.exists() and not retrain:
+        params = train.load_params(params_path)
+        metrics = {"name": spec.name, "cached": True}
+    else:
+        params, metrics = trainer()
+        train.save_params(params, params_path)
+
+    xtr, ytr, xte, yte = datasets
+    # fp32 reference accuracy (oracle path)
+    logits = model.kan_forward(params, jnp.asarray(xte), spec, use_pallas=False)
+    fp32_acc = float(model.accuracy(logits, jnp.asarray(yte)))
+
+    qm = quantize.QuantizedModel(params, spec)
+    int8_acc = qm.accuracy(xte, yte)
+    export_kanq(qm, ARTIFACTS / f"{spec.name}.kanq")
+    export_golden(qm, xte[:64], yte[:64], ARTIFACTS / f"{spec.name}_golden.kgld")
+    hlos = export_hlo(params, spec, batch_sizes, ARTIFACTS)
+
+    quant_metrics[spec.name] = {
+        "fp32_test_acc": fp32_acc,
+        "int8_test_acc": int8_acc,
+        "acc_drop": fp32_acc - int8_acc,
+        "hlo_modules": hlos,
+        "train": metrics if metrics.get("cached") else {k: v for k, v in metrics.items() if k != "history"},
+    }
+    print(
+        f"[{spec.name}] fp32 {fp32_acc:.4f}  int8 {int8_acc:.4f}  "
+        f"drop {fp32_acc - int8_acc:.4f}  hlo {hlos}"
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None, help="unused (kept for Makefile compat)")
+    ap.add_argument("--retrain", action="store_true", help="ignore cached params")
+    ap.add_argument(
+        "--models", nargs="*", default=["quickstart_kan", "mnist_kan", "catch22_kan"],
+        help="which models to build",
+    )
+    args = ap.parse_args()
+    ARTIFACTS.mkdir(exist_ok=True)
+    quant_metrics = {}
+    for name in args.models:
+        build_model(name, args.retrain, quant_metrics)
+    path = ARTIFACTS / "quant_metrics.json"
+    existing = json.loads(path.read_text()) if path.exists() else {}
+    existing.update(quant_metrics)
+    path.write_text(json.dumps(existing, indent=2))
+    # marker consumed by the Makefile's up-to-date check
+    (ARTIFACTS / ".stamp").write_text("ok\n")
+    print(f"artifacts written to {ARTIFACTS}")
+
+
+if __name__ == "__main__":
+    main()

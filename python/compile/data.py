@@ -1,0 +1,172 @@
+"""Synthetic datasets (build-time only).
+
+The image has no network access, so MNIST cannot be downloaded. Per the
+substitution policy in DESIGN.md, MNIST is replaced by **synth-digits**:
+procedurally rendered 28x28 grayscale digits built from seven-segment
+style strokes with random affine jitter and noise. The evaluation only
+needs (a) a learnable non-trivial 10-class task of the same tensor shape
+so MNIST-KAN trains to a high-90s accuracy, and (b) the trained network's
+B-spline activation statistics for the quantization-accuracy experiment —
+both of which synth-digits provides. Everything is seeded and
+deterministic.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# Seven-segment layout on a unit square: (x0, y0, x1, y1) per segment.
+#     _a_
+#    f| g |b
+#     |_ _|
+#    e|   |c
+#     |_d_|
+_SEGS = {
+    "a": (0.2, 0.1, 0.8, 0.1),
+    "b": (0.8, 0.1, 0.8, 0.5),
+    "c": (0.8, 0.5, 0.8, 0.9),
+    "d": (0.2, 0.9, 0.8, 0.9),
+    "e": (0.2, 0.5, 0.2, 0.9),
+    "f": (0.2, 0.1, 0.2, 0.5),
+    "g": (0.2, 0.5, 0.8, 0.5),
+}
+
+_DIGIT_SEGS = {
+    0: "abcdef",
+    1: "bc",
+    2: "abged",
+    3: "abgcd",
+    4: "fgbc",
+    5: "afgcd",
+    6: "afgedc",
+    7: "abc",
+    8: "abcdefg",
+    9: "abcdfg",
+}
+
+
+def _render(digit: int, rng: np.random.Generator, size: int = 28) -> np.ndarray:
+    """Rasterize one jittered digit to a (size, size) float image in [0,1]."""
+    img = np.zeros((size, size), dtype=np.float32)
+    ang = rng.uniform(-0.25, 0.25)
+    scale = rng.uniform(0.75, 1.05)
+    dx, dy = rng.uniform(-0.08, 0.08, size=2)
+    ca, sa = np.cos(ang), np.sin(ang)
+    thick = rng.uniform(0.9, 1.6)
+    for s in _DIGIT_SEGS[digit]:
+        x0, y0, x1, y1 = _SEGS[s]
+        # sample points along the segment, map through the jitter transform
+        t = np.linspace(0.0, 1.0, 24)
+        xs = x0 + (x1 - x0) * t - 0.5
+        ys = y0 + (y1 - y0) * t - 0.5
+        xr = (ca * xs - sa * ys) * scale + 0.5 + dx
+        yr = (sa * xs + ca * ys) * scale + 0.5 + dy
+        px = np.clip(xr * (size - 1), 0, size - 1)
+        py = np.clip(yr * (size - 1), 0, size - 1)
+        for cx, cy in zip(px, py):
+            ix, iy = int(cx), int(cy)
+            for ox in (0, 1):
+                for oy in (0, 1):
+                    x, y = ix + ox, iy + oy
+                    if x < size and y < size:
+                        w = max(0.0, 1.0 - abs(cx - x) / thick) * max(
+                            0.0, 1.0 - abs(cy - y) / thick
+                        )
+                        img[y, x] = max(img[y, x], w)
+    img += rng.normal(0.0, 0.06, img.shape).astype(np.float32)
+    return np.clip(img, 0.0, 1.0)
+
+
+def synth_digits(
+    n: int, seed: int = 0, size: int = 28
+) -> tuple[np.ndarray, np.ndarray]:
+    """n jittered digit images -> (images (n, size*size) in [0,1], labels)."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, size=n).astype(np.int32)
+    imgs = np.stack([_render(int(d), rng, size) for d in labels])
+    return imgs.reshape(n, size * size), labels
+
+
+def synth_blobs(
+    n: int, dim: int = 4, classes: int = 3, seed: int = 0, center_seed: int = 7
+) -> tuple[np.ndarray, np.ndarray]:
+    """Gaussian-blob classification in [-1,1]^dim for the quickstart model.
+
+    Class centers are drawn from ``center_seed`` (fixed across splits so
+    train and test share the same distribution); ``seed`` only drives the
+    per-sample draws.
+    """
+    centers = (
+        np.random.default_rng(center_seed)
+        .uniform(-0.7, 0.7, size=(classes, dim))
+        .astype(np.float32)
+    )
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, classes, size=n).astype(np.int32)
+    x = centers[labels] + rng.normal(0, 0.25, size=(n, dim)).astype(np.float32)
+    return np.clip(x, -1.0, 1.0), labels
+
+
+def _catch22ish_features(ts: np.ndarray) -> np.ndarray:
+    """22 cheap catch22-style summary statistics of one time series.
+
+    Not the canonical catch22 set (pycatch22 is unavailable offline), but
+    a comparable mix of moments, autocorrelations, spectral and
+    distributional summaries — enough for the Catch22-KAN workload shape
+    (a [22, X] single-layer KAN) and a learnable classification task.
+    """
+    n = len(ts)
+    mu, sd = ts.mean(), ts.std() + 1e-9
+    z = (ts - mu) / sd
+    diff = np.diff(ts)
+    acf = [float(np.dot(z[:-k], z[k:]) / (n - k)) for k in (1, 2, 3, 5, 8, 13)]
+    spec = np.abs(np.fft.rfft(z)) ** 2
+    spec = spec / (spec.sum() + 1e-9)
+    feats = np.array(
+        [
+            mu,
+            sd,
+            float(((z > 0).sum()) / n),
+            float(np.abs(diff).mean()),
+            float(diff.std()),
+            *acf,
+            float(z.max()),
+            float(z.min()),
+            float(np.median(z)),
+            float((z**3).mean()),  # skew
+            float((z**4).mean()),  # kurtosis
+            float(spec[: len(spec) // 4].sum()),  # low-band power
+            float(spec[len(spec) // 4 :].sum()),  # high-band power
+            float(-(spec * np.log(spec + 1e-12)).sum()),  # spectral entropy
+            float((np.sign(z[:-1]) != np.sign(z[1:])).mean()),  # zero crossings
+            float(np.percentile(z, 90) - np.percentile(z, 10)),
+            float((diff > 0).mean()),
+        ],
+        dtype=np.float32,
+    )
+    assert feats.shape == (22,)
+    return feats
+
+
+def synth_timeseries_features(
+    n: int, classes: int = 10, length: int = 128, seed: int = 0
+) -> tuple[np.ndarray, np.ndarray]:
+    """UCR-style synthetic task: each class is a parameterized process
+    (sine freq/phase + AR noise + trend); features are catch22-style.
+    Features are tanh-squashed into the spline domain [-1, 1]."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, classes, size=n).astype(np.int32)
+    t = np.arange(length) / length
+    feats = np.empty((n, 22), dtype=np.float32)
+    for i, c in enumerate(labels):
+        freq = 2.0 + 1.7 * c
+        amp = 0.5 + 0.1 * (c % 3)
+        trend = 0.3 * ((c % 4) - 1.5)
+        ar = 0.3 + 0.05 * (c % 5)
+        noise = np.zeros(length)
+        eps = rng.normal(0, 0.3, length)
+        for k in range(1, length):
+            noise[k] = ar * noise[k - 1] + eps[k]
+        ts = amp * np.sin(2 * np.pi * freq * t + rng.uniform(0, 2 * np.pi)) + trend * t + noise
+        feats[i] = _catch22ish_features(ts)
+    return np.tanh(feats * 0.5), labels

@@ -1,0 +1,203 @@
+"""L1 Pallas kernel: non-recursive, tabulated B-spline evaluation.
+
+This is the software twin of the paper's *B-spline unit* (Sec. III-B,
+Figs. 4-5). Instead of running the Cox-de Boor recursion (Eq. 2) per
+input — ~20 multipliers for a single P=3 function — the unit exploits
+three properties of uniform-grid B-splines:
+
+1. **translation/scale invariance**: every ``B_{t_k,P}`` equals the
+   *cardinal* spline ``B_{0,P}`` evaluated at ``u - k`` with
+   ``u = (x - t_0)/Δ`` (Eq. 4), so a single tabulated function serves all
+   grids and all ``G+P`` bases;
+2. **local support**: at most ``N = P+1`` bases are non-zero for any
+   input, at consecutive indices ``k-P .. k``;
+3. **symmetry** about ``(P+1)/2``: only half of ``B_{0,P}`` needs storing.
+
+The hardware stores 256 rows of two packed values and mirrors the address
+(``~addr``) for the upper half; here we materialize the equivalent
+*full* table ``LUT[a, j] = B_{0,P}(a/(S-1) + j)`` (shape ``(S, P+1)``) —
+bit-identical information, better suited to a vectorized lookup. The
+bit-exact half-table + address-inversion hardware scheme is implemented
+and property-tested in the rust layer (``rust/src/bspline/``); equivalence
+of the two layouts is asserted in ``python/tests/test_bspline_kernel.py``.
+
+Hardware adaptation (TPU): the LUT is a small VMEM-resident constant; the
+lookup is expressed as ``one_hot(addr) @ LUT`` so the heavy lifting is an
+(S x (P+1)) matmul on the MXU rather than a serial gather, and the
+align/compare stage is pure VPU elementwise work. ``interpret=True``
+everywhere — real-TPU lowering emits Mosaic custom-calls the CPU PJRT
+plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Depth of the tabulation (the paper uses 256 = an 8-bit address).
+LUT_SIZE = 256
+
+
+@functools.lru_cache(maxsize=None)
+def _lut_cached(p: int, size: int) -> jax.Array:
+    a = jnp.arange(size, dtype=jnp.float32) / (size - 1)  # x_a in [0, 1]
+    offs = jnp.arange(p + 1, dtype=jnp.float32)
+    return ref.cardinal_bspline(a[:, None] + offs[None, :], p)  # (S, P+1)
+
+
+def build_lut(p: int, size: int = LUT_SIZE) -> jax.Array:
+    """Full float tabulation ``LUT[a, j] = B_{0,P}(a/(S-1) + j)``.
+
+    Row ``a`` holds the values of all ``P+1`` non-zero bases for an
+    aligned input ``x_a = a/(S-1)``; column ``j`` corresponds to basis
+    index ``k - P + j`` (see :func:`ref.nonzero_bases`).
+    """
+    return _lut_cached(p, size)
+
+
+def build_lut_quantized(p: int, size: int = LUT_SIZE) -> tuple[jax.Array, float]:
+    """uint8 tabulation + dequantization scale (hardware ROM contents).
+
+    The scale maximizes uint8 precision: ``max(B_{0,P})`` maps to 255.
+    (The paper's Fig. 5 example values 0/32/127 correspond to a scale of
+    ~192; the choice folds into the requantization constants either way.)
+    """
+    lut = build_lut(p, size)
+    max_v = float(lut.max())
+    scale = 255.0 / max_v
+    q = jnp.clip(jnp.round(lut * scale), 0, 255).astype(jnp.uint8)
+    return q, 1.0 / scale
+
+
+def _bspline_kernel(x_ref, lut_ref, vals_ref, k_ref, *, g, p, lo, hi, lut_size, use_onehot):
+    """Pallas body: align -> compare -> LUT fetch for one input tile.
+
+    Mirrors the hardware pipeline of Fig. 5:
+      Compare: interval search producing k (here: floor on the uniform grid,
+               which is what the synthesized comparator tree reduces to);
+      Align:   Eq. 4/5 — map x to the cardinal coordinate and quantize the
+               fractional part to the LUT address;
+      LUT:     fetch the P+1 non-zero basis values.
+    """
+    x = x_ref[...]
+    dx = (hi - lo) / g
+    xc = jnp.clip(x, lo, hi)
+    # Compare unit: interval index within the input domain, offset by P
+    # into the extended grid (k in [P, G+P-1]).
+    ki = jnp.clip(jnp.floor((xc - lo) / dx), 0, g - 1).astype(jnp.int32)
+    k = ki + p
+    # Align unit: cardinal coordinate relative to t_0 = lo - P*dx is
+    # u = (x - lo)/dx + P; the fractional part within interval k is
+    # x_a = u - k in [0, 1).
+    xa = (xc - lo) / dx - ki.astype(x.dtype)
+    addr = jnp.clip(jnp.round(xa * (lut_size - 1)), 0, lut_size - 1).astype(jnp.int32)
+
+    lut = lut_ref[...]  # (S, P+1), VMEM-resident
+    if use_onehot:
+        # MXU formulation: one-hot rows times the table.
+        oh = (addr[..., None] == jax.lax.broadcasted_iota(jnp.int32, (*addr.shape, lut_size), len(addr.shape))).astype(lut.dtype)
+        flat = oh.reshape(-1, lut_size) @ lut  # (B*K, P+1)
+        vals = flat.reshape(*addr.shape, p + 1)
+    else:
+        vals = lut[addr]  # vectorized gather
+    # LUT column j holds B_{0,P}(x_a + j) = B_{t_{k-j},P}(x): *descending*
+    # basis index — the hardware's "reverse-packed" output (Fig. 5). Flip to
+    # the ascending k-P..k order used by the SA coefficient mux and the
+    # oracle.
+    vals = vals[..., ::-1]
+    vals_ref[...] = vals.astype(vals_ref.dtype)
+    k_ref[...] = k
+
+
+def bspline_activations(
+    x: jax.Array,
+    g: int,
+    p: int,
+    lo: float = -1.0,
+    hi: float = 1.0,
+    *,
+    lut_size: int = LUT_SIZE,
+    use_onehot: bool = True,
+    block_rows: int = 128,
+    lut: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Evaluate the N:M sparse B-spline view of ``x`` via the LUT kernel.
+
+    Args:
+        x: input activations, shape ``(BS, K)``.
+        g, p: grid size and spline degree (KAN layer hyperparameters).
+        lo, hi: input domain ``[t_P, t_{P+G}]``.
+        lut_size: tabulation depth (256 in the paper's 8-bit unit).
+        use_onehot: one-hot-matmul (MXU) vs gather formulation.
+        block_rows: batch tile per grid step (VMEM sizing knob).
+        lut: optionally pass the tabulation as an explicit operand (the AOT
+            export does this so the table becomes a named HLO parameter fed
+            by the rust runtime instead of a trace-hoisted constant).
+
+    Returns:
+        ``(vals, k)`` with ``vals: (BS, K, P+1)`` float32 and
+        ``k: (BS, K)`` int32 — exactly the signal pair the hardware
+        B-spline unit streams into its row of N:M PEs (Fig. 6).
+    """
+    if x.ndim != 2:
+        raise ValueError(f"expected (BS, K) input, got shape {x.shape}")
+    if p < 1:
+        # P=0 is a discontinuous indicator: address rounding at the interval
+        # boundary cannot represent it. The paper's workloads use P in
+        # {1,2,3} (Table II); the Cox-de Boor oracle still covers P=0.
+        raise ValueError(f"tabulated unit requires degree P >= 1, got {p}")
+    bs, kdim = x.shape
+    if lut is None:
+        lut = build_lut(p, lut_size)
+    if lut.shape != (lut_size, p + 1):
+        raise ValueError(f"LUT shape {lut.shape} != {(lut_size, p + 1)}")
+    rows = min(block_rows, bs)
+    grid = (pl.cdiv(bs, rows),)
+    kernel = functools.partial(
+        _bspline_kernel,
+        g=g, p=p, lo=lo, hi=hi, lut_size=lut_size, use_onehot=use_onehot,
+    )
+    vals, k = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows, kdim), lambda i: (i, 0)),
+            pl.BlockSpec((lut_size, p + 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((rows, kdim, p + 1), lambda i: (i, 0, 0)),
+            pl.BlockSpec((rows, kdim), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bs, kdim, p + 1), jnp.float32),
+            jax.ShapeDtypeStruct((bs, kdim), jnp.int32),
+        ],
+        interpret=True,  # CPU-PJRT cannot run Mosaic custom-calls
+    )(x, lut)
+    return vals, k
+
+
+def bspline_dense(
+    x: jax.Array,
+    g: int,
+    p: int,
+    lo: float = -1.0,
+    hi: float = 1.0,
+    **kw,
+) -> jax.Array:
+    """Dense ``(BS, K*(G+P))`` B-spline activation matrix (paper Fig. 1c).
+
+    This is the matrix **B** a conventional SA consumes; KAN-SAs never
+    materializes it (the sparse ``(vals, k)`` pair goes straight to the
+    vector PEs), but the GEMM formulation needs it and it doubles as a
+    second oracle for the sparse path.
+    """
+    bs, kdim = x.shape
+    vals, k = bspline_activations(x, g, p, lo, hi, **kw)
+    dense = ref.dense_from_sparse(vals, k, g, p)  # (BS, K, G+P)
+    return dense.reshape(bs, kdim * (g + p))

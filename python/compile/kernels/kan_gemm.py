@@ -1,0 +1,164 @@
+"""L1 Pallas kernel: tiled GEMM for the KAN linear-combination stage.
+
+Once the B-spline unit has produced the activation matrix **B** (dense
+``(BS, K*(G+P))`` or sparse ``(vals, k)``), the rest of the KAN layer is a
+plain GEMM against the coefficient matrix ``C`` of shape
+``(K*(G+P), N)`` (paper Fig. 1c / Sec. II-A). Two kernels live here:
+
+* :func:`matmul` — a classic VMEM-blocked weight-stationary matmul. The
+  BlockSpec is the software analogue of the paper's dataflow: the ``C``
+  tile stays resident (weight-stationary) while activation tiles stream
+  through and partial sums accumulate in a VMEM scratch tile.
+* :func:`kan_matmul_sparse` — the N:M-aware formulation the vector PEs
+  implement (Sec. IV-B): for each input feature only the ``P+1`` non-zero
+  basis values are multiplied, against coefficient rows selected by the
+  streamed index ``k`` — i.e. ``psum += sum_j vals[j] * C[k-P+j, :]``.
+  On TPU the selection is expressed as a small one-hot matmul so it maps
+  onto the MXU rather than a serial gather (the hardware uses an M-to-N
+  mux; one-hot-matmul is its systolic equivalent).
+
+``interpret=True`` everywhere — see ``bspline_lut.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k):
+    """One (i, j, kb) grid step of the blocked matmul."""
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(kb == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    """Blocked ``a @ b`` with a VMEM accumulator (weight-stationary tiles).
+
+    Block shapes are clamped to the operand shapes so small KAN layers
+    (most of Table II) don't over-allocate VMEM.
+    """
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+        raise ValueError(f"bad matmul shapes {a.shape} x {b.shape}")
+    m, k = a.shape
+    _, n = b.shape
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    # Zero-pad to block multiples: interpret-mode Pallas fills out-of-bounds
+    # block reads with NaN, which would poison the accumulator (the hardware
+    # analogue is the tiler padding partial tiles with zeros — same thing the
+    # cycle simulator's `imperfect tiling` accounting models).
+    mp, np_, kp = -(-m // bm) * bm, -(-n // bn) * bn, -(-k // bk) * bk
+    if (mp, kp) != (m, k):
+        a = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    if (kp, np_) != (k, n):
+        b = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+    grid = (mp // bm, np_ // bn, kp // bk)
+    kernel = functools.partial(_matmul_kernel, n_k=grid[2])
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kb: (i, kb)),
+            pl.BlockSpec((bk, bn), lambda i, j, kb: (kb, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kb: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        scratch_shapes=[_vmem_f32((bm, bn))],
+        interpret=True,
+    )(a, b)
+    return out[:m, :n]
+
+
+def _vmem_f32(shape):
+    """VMEM f32 accumulator scratch (lazy pltpu import: CPU-wheel safe)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, jnp.float32)
+
+
+def _sparse_kernel(vals_ref, k_ref, c_ref, o_ref, *, g, p, block_rows):
+    """N:M KAN matmul tile: select N coefficient rows per feature via k.
+
+    vals: (bm, K, P+1), k: (bm, K), c: (K, G+P, N) -> o: (bm, N).
+    The inner contraction is exactly what one KAN-SAs vector-PE column
+    performs over time: for every (row, feature) it multiplies the P+1
+    non-zero B-spline values with the mux-selected coefficients and
+    accumulates into the output partial sum.
+    """
+    vals = vals_ref[...]
+    kk = k_ref[...]
+    c = c_ref[...]
+    m = g + p
+    offs = jax.lax.broadcasted_iota(jnp.int32, (p + 1,), 0)
+    idx = (kk[..., None] - p) + offs  # (bm, K, P+1) in [0, M-1]
+    # One-hot selection (the M-to-N mux): (bm, K, P+1, M)
+    sel = (idx[..., None] == jax.lax.broadcasted_iota(jnp.int32, (*idx.shape, m), idx.ndim)).astype(vals.dtype)
+    # Scatter vals into dense M lanes, then contract against C on the MXU:
+    # dense (bm, K, M) = sum_j vals[..., j] * sel[..., j, :]
+    dense = jnp.einsum("bkj,bkjm->bkm", vals, sel)
+    o_ref[...] = jnp.einsum("bkm,kmn->bn", dense, c).astype(o_ref.dtype)
+
+
+def kan_matmul_sparse(
+    vals: jax.Array,
+    k: jax.Array,
+    coeffs: jax.Array,
+    g: int,
+    p: int,
+    *,
+    block_rows: int = 128,
+) -> jax.Array:
+    """KAN layer GEMM from the sparse N:M view.
+
+    Args:
+        vals: ``(BS, K, P+1)`` non-zero B-spline values.
+        k: ``(BS, K)`` interval indices.
+        coeffs: ``(K, G+P, N)`` spline coefficients.
+        g, p: layer hyperparameters.
+
+    Returns:
+        ``(BS, N)`` spline-term output, numerically equal to
+        ``dense_B @ coeffs.reshape(K*(G+P), N)``.
+    """
+    bs, kdim, _ = vals.shape
+    n = coeffs.shape[-1]
+    bm = min(block_rows, bs)
+    bsp = -(-bs // bm) * bm
+    if bsp != bs:  # zero-pad the batch: see matmul() on interpret-mode NaN fill
+        vals = jnp.pad(vals, ((0, bsp - bs), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, bsp - bs), (0, 0)), constant_values=p)
+    grid = (bsp // bm,)
+    kernel = functools.partial(_sparse_kernel, g=g, p=p, block_rows=bm)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, kdim, p + 1), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bm, kdim), lambda i: (i, 0)),
+            pl.BlockSpec((kdim, g + p, n), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsp, n), jnp.float32),
+        interpret=True,
+    )(vals, k, coeffs)[:bs]

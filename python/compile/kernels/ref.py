@@ -1,0 +1,151 @@
+"""Pure-jnp Cox-de Boor oracle for B-spline bases.
+
+This is the correctness reference for everything else in the repo:
+
+* the L1 Pallas tabulation kernel (``bspline_lut.py``) is asserted against
+  it in ``python/tests/test_bspline_kernel.py``;
+* the quantized LUT exported to the rust engine is sampled from it;
+* the rust ``bspline::reference`` module mirrors it and is cross-checked
+  through golden vectors written by ``aot.py``.
+
+Grid convention (paper Fig. 2): a uniform grid of size ``G`` covers the
+input domain ``[t_P, t_{P+G}]`` and is extended by ``P`` intervals on each
+side, giving ``G + 2P`` intervals, knots ``t_0 .. t_{G+2P}`` and
+``N_b = G + P`` basis functions of degree ``P``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def make_grid(g: int, p: int, lo: float = -1.0, hi: float = 1.0) -> jnp.ndarray:
+    """Extended uniform knot vector ``t_0 .. t_{G+2P}`` (Fig. 2).
+
+    The *input domain* is ``[lo, hi] == [t_P, t_{P+G}]``; ``P`` extra
+    uniform intervals are prepended/appended so that every B-spline with
+    support intersecting the domain is representable.
+    """
+    if g < 1:
+        raise ValueError(f"grid size G must be >= 1, got {g}")
+    if p < 0:
+        raise ValueError(f"degree P must be >= 0, got {p}")
+    if not hi > lo:
+        raise ValueError(f"domain must satisfy hi > lo, got [{lo}, {hi}]")
+    dx = (hi - lo) / g
+    return lo + dx * jnp.arange(-p, g + p + 1, dtype=jnp.float32)
+
+
+def num_bases(g: int, p: int) -> int:
+    """Number of degree-``P`` basis functions on the extended grid."""
+    return g + p
+
+
+def cox_de_boor(x: jnp.ndarray, knots: jnp.ndarray, p: int) -> jnp.ndarray:
+    """Evaluate all ``G+P`` degree-``p`` B-splines at ``x`` (recursion Eqs. 2-3).
+
+    Args:
+        x: arbitrary-shaped batch of evaluation points.
+        knots: extended knot vector from :func:`make_grid` (length
+            ``G + 2P + 1``).
+        p: spline degree.
+
+    Returns:
+        array of shape ``x.shape + (G + P,)`` with ``B_{t_i,p}(x)``.
+
+    The implementation is the standard iterative (vectorized) form of the
+    Cox-de Boor recursion: degree-0 indicators on every interval, then
+    ``p`` blending passes. Division-by-zero guards follow the usual
+    0/0 := 0 convention for repeated knots (never triggered on uniform
+    grids but kept for generality).
+    """
+    x = jnp.asarray(x)
+    t = jnp.asarray(knots)
+    n_intervals = t.shape[0] - 1  # == G + 2P
+    xe = x[..., None]
+
+    # Degree 0: indicator of [t_i, t_{i+1}). Make the final interval
+    # right-closed so x == t_last is representable.
+    left = t[:-1]
+    right = t[1:]
+    b = jnp.where((xe >= left) & (xe < right), 1.0, 0.0)
+    last = (xe >= left) & (xe == right) & (jnp.arange(n_intervals) == n_intervals - 1)
+    b = jnp.where(last, 1.0, b).astype(jnp.float32)
+
+    for d in range(1, p + 1):
+        n = n_intervals - d  # number of degree-d functions
+        denom_l = t[d : d + n] - t[0:n]
+        denom_r = t[d + 1 : d + 1 + n] - t[1 : 1 + n]
+        wl = jnp.where(denom_l > 0, (xe - t[0:n]) / jnp.where(denom_l > 0, denom_l, 1.0), 0.0)
+        wr = jnp.where(
+            denom_r > 0,
+            (t[d + 1 : d + 1 + n] - xe) / jnp.where(denom_r > 0, denom_r, 1.0),
+            0.0,
+        )
+        b = wl * b[..., 0:n] + wr * b[..., 1 : 1 + n]
+    return b
+
+
+def cardinal_bspline(u: jnp.ndarray, p: int) -> jnp.ndarray:
+    """``B_{0,P}`` on integer knots ``0..P+1`` (the tabulated function).
+
+    Support is ``[0, P+1)``; symmetric about ``(P+1)/2`` (paper Sec.
+    III-B). Implemented directly from the recursion on the integer knot
+    vector, which is exactly what the tabulation strategy stores.
+    """
+    knots = jnp.arange(0, p + 2, dtype=jnp.float32)
+    u = jnp.asarray(u, dtype=jnp.float32)
+    ue = u[..., None]
+    b = jnp.where((ue >= knots[:-1]) & (ue < knots[1:]), 1.0, 0.0).astype(jnp.float32)
+    for d in range(1, p + 1):
+        n = (p + 1) - d
+        wl = (ue - knots[0:n]) / d
+        wr = (knots[d + 1 : d + 1 + n] - ue) / d
+        b = wl * b[..., 0:n] + wr * b[..., 1 : 1 + n]
+    return b[..., 0]
+
+
+def interval_index(
+    x: jnp.ndarray, g: int, p: int, lo: float = -1.0, hi: float = 1.0
+) -> jnp.ndarray:
+    """Knot-interval index ``k`` such that ``x in [t_k, t_{k+1})``.
+
+    Inputs are clamped to the input domain ``[t_P, t_{P+G}]`` first (the
+    hardware Compare unit does the same interval search over the grid
+    registers), so ``k in [P, G+P-1]``.
+    """
+    dx = (hi - lo) / g
+    u = (jnp.clip(x, lo, hi) - lo) / dx  # in [0, G]
+    k = jnp.clip(jnp.floor(u).astype(jnp.int32), 0, g - 1) + p
+    return k
+
+
+def nonzero_bases(
+    x: jnp.ndarray, g: int, p: int, lo: float = -1.0, hi: float = 1.0
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """The N:M sparse view: the ``P+1`` (potentially) non-zero B-splines.
+
+    Returns ``(values, k)`` where ``values[..., j] == B_{t_{k-P+j},P}(x)``
+    for ``j = 0..P`` and ``k`` is the interval index. All other bases are
+    exactly zero by local support — this is the paper's dynamic N:M
+    (``N = P+1``, ``M = G+P``) density-bound block.
+    """
+    knots = make_grid(g, p, lo, hi)
+    dense = cox_de_boor(jnp.clip(x, lo, hi), knots, p)
+    k = interval_index(x, g, p, lo, hi)
+    # gather the window [k-P, k] from the dense basis
+    offs = jnp.arange(p + 1)
+    idx = (k[..., None] - p) + offs  # in [0, G+P-1]
+    vals = jnp.take_along_axis(dense, idx, axis=-1)
+    return vals, k
+
+
+def dense_from_sparse(
+    vals: jnp.ndarray, k: jnp.ndarray, g: int, p: int
+) -> jnp.ndarray:
+    """Scatter the N:M sparse view back to the dense ``G+P`` basis vector."""
+    m = g + p
+    offs = jnp.arange(p + 1)
+    idx = (k[..., None] - p) + offs
+    oh = (idx[..., None] == jnp.arange(m)).astype(vals.dtype)  # (..., P+1, M)
+    return jnp.einsum("...n,...nm->...m", vals, oh)

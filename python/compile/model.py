@@ -1,0 +1,205 @@
+"""L2: KAN models in JAX, built on the L1 Pallas kernels.
+
+A KAN layer (paper Eq. 1) computes, per output unit,
+
+    KANLayer(x) = sum_i w_i phi_i(x_i) + w_b * b(x)
+
+where each ``phi_i`` is a learnable spline ``phi(x) = sum_j c_j B_j(x)``
+in the (G+P)-function B-spline basis, and the second term is an ordinary
+MLP path with a fixed non-linearity ``b`` (the paper replaces the usual
+SiLU with ReLU; we follow it). At inference the ``w_i`` scales are
+absorbed into the coefficients, so the layer is exactly:
+
+    y = B(x) @ C + relu(x) @ Wb            (Fig. 1c)
+
+with ``B(x)`` the ``(BS, K*(G+P))`` B-spline activation matrix produced
+by the L1 tabulation kernel and ``C`` the ``(K*(G+P), N)`` coefficient
+matrix. This file provides the layer, whole-model forward passes for the
+benchmark applications, parameter init, and a small self-contained Adam
+trainer (optax is not available in the build image).
+
+Between layers the pre-activations are squashed with ``tanh`` so they
+land in the spline input domain ``[-1, 1]`` — the standard efficient-KAN
+style domain-keeping trick; the hardware Compare unit clamps anything
+that still escapes, and the JAX path clips identically, so the two
+implementations agree bit-for-bit after quantization.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bspline_lut, kan_gemm, ref
+
+
+class KanLayerSpec(NamedTuple):
+    """Static hyperparameters of one KAN layer."""
+
+    in_dim: int
+    out_dim: int
+    grid: int = 5       # G
+    degree: int = 3     # P
+    lo: float = -1.0    # t_P
+    hi: float = 1.0     # t_{P+G}
+
+    @property
+    def num_bases(self) -> int:
+        return self.grid + self.degree
+
+    @property
+    def coeff_shape(self) -> tuple[int, int, int]:
+        return (self.in_dim, self.num_bases, self.out_dim)
+
+
+class KanModelSpec(NamedTuple):
+    """A stack of KAN layers: dims [d0, d1, ..., dL], shared G/P."""
+
+    dims: tuple[int, ...]
+    grid: int = 5
+    degree: int = 3
+    name: str = "kan"
+
+    @property
+    def layers(self) -> list[KanLayerSpec]:
+        return [
+            KanLayerSpec(self.dims[i], self.dims[i + 1], self.grid, self.degree)
+            for i in range(len(self.dims) - 1)
+        ]
+
+
+def init_layer(key: jax.Array, spec: KanLayerSpec) -> dict[str, jax.Array]:
+    """Initialize one layer: spline coefficients + base (ReLU-path) weights.
+
+    Coefficients start as small noise (so the splines begin near zero and
+    the ReLU base path dominates early training — the init used by the
+    reference KAN implementations), base weights use Kaiming-uniform.
+    """
+    kc, kb = jax.random.split(key)
+    coeff = 0.1 * jax.random.normal(kc, spec.coeff_shape, dtype=jnp.float32) / math.sqrt(spec.in_dim)
+    bound = math.sqrt(6.0 / spec.in_dim)
+    base = jax.random.uniform(kb, (spec.in_dim, spec.out_dim), jnp.float32, -bound, bound)
+    return {"coeff": coeff, "base": base}
+
+
+def init_model(key: jax.Array, spec: KanModelSpec) -> list[dict[str, jax.Array]]:
+    keys = jax.random.split(key, len(spec.layers))
+    return [init_layer(k, layer) for k, layer in zip(keys, spec.layers)]
+
+
+def kan_layer(
+    params: dict[str, jax.Array],
+    x: jax.Array,
+    spec: KanLayerSpec,
+    *,
+    use_pallas: bool = True,
+    lut: jax.Array | None = None,
+) -> jax.Array:
+    """Forward one KAN layer: spline term + ReLU base term (Eq. 1).
+
+    ``use_pallas=True`` routes through the L1 kernels (tabulated B-spline
+    unit + blocked GEMM); ``False`` uses the Cox-de Boor oracle — the pair
+    is the layer-level correctness check in the test suite, and the oracle
+    path is what training differentiates through (the LUT has no useful
+    gradient in the tabulated direction).
+    """
+    if use_pallas:
+        vals, k = bspline_lut.bspline_activations(
+            x, spec.grid, spec.degree, spec.lo, spec.hi, lut=lut
+        )
+        spline = kan_gemm.kan_matmul_sparse(vals, k, params["coeff"], spec.grid, spec.degree)
+    else:
+        knots = ref.make_grid(spec.grid, spec.degree, spec.lo, spec.hi)
+        b = ref.cox_de_boor(jnp.clip(x, spec.lo, spec.hi), knots, spec.degree)
+        spline = jnp.einsum("bkm,kmn->bn", b, params["coeff"])
+    base = jax.nn.relu(x) @ params["base"]
+    return spline + base
+
+
+def kan_forward(
+    params: Sequence[dict[str, jax.Array]],
+    x: jax.Array,
+    spec: KanModelSpec,
+    *,
+    use_pallas: bool = True,
+    luts: Sequence[jax.Array] | None = None,
+) -> jax.Array:
+    """Whole-model forward. Hidden pre-activations are hard-clipped into
+    the spline domain; the final layer output is returned raw (logits)."""
+    h = x
+    for i, layer in enumerate(spec.layers):
+        lut = None if luts is None else luts[i]
+        h = kan_layer(params[i], h, layer, use_pallas=use_pallas, lut=lut)
+        if i + 1 < len(spec.layers):
+            h = jnp.clip(h, layer.lo, layer.hi)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Benchmark model zoo (paper Table II shapes that we actually train/run).
+# ---------------------------------------------------------------------------
+
+def mnist_kan() -> KanModelSpec:
+    """MNIST-KAN [784, 64, 10], G=10, P=3 (paper Sec. V-C / [28])."""
+    return KanModelSpec(dims=(784, 64, 10), grid=10, degree=3, name="mnist_kan")
+
+
+def quickstart_kan() -> KanModelSpec:
+    """Tiny [4, 8, 3] KAN used by the quickstart example and smoke tests."""
+    return KanModelSpec(dims=(4, 8, 3), grid=5, degree=3, name="quickstart_kan")
+
+
+def catch22_kan(num_classes: int = 10) -> KanModelSpec:
+    """Catch22-KAN [22, X] single layer, G=3, P=3 (paper Table II / [26])."""
+    return KanModelSpec(dims=(22, num_classes), grid=3, degree=3, name="catch22_kan")
+
+
+# ---------------------------------------------------------------------------
+# Self-contained Adam (optax is unavailable offline).
+# ---------------------------------------------------------------------------
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adam_init(params: Any) -> AdamState:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return AdamState(jnp.zeros((), jnp.int32), zeros, jax.tree.map(jnp.zeros_like, params))
+
+
+def adam_update(
+    grads: Any,
+    state: AdamState,
+    params: Any,
+    lr: float = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> tuple[Any, AdamState]:
+    step = state.step + 1
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+    t = step.astype(jnp.float32)
+    bc1 = 1 - b1**t
+    bc2 = 1 - b2**t
+    new_params = jax.tree.map(
+        lambda p, m, v: p - lr * (m / bc1 / (jnp.sqrt(v / bc2) + eps) + weight_decay * p),
+        params, mu, nu,
+    )
+    return new_params, AdamState(step, mu, nu)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - ll)
+
+
+def accuracy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))

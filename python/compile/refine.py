@@ -1,0 +1,86 @@
+"""Grid refinement without retraining (paper Sec. II-B / [1]).
+
+KAN-SAs assumes uniform grids; the paper argues this does not limit
+generality because a spline on any grid can be re-fit on a *finer uniform
+grid* by least squares on the coefficients — "it is possible to fine-grain
+the grid without retraining, using least squares to compute the new
+coefficients". This module implements that operation and is exercised by
+`python/tests/test_refine.py` and the LUT-size ablation.
+
+Given a trained layer with coefficients `c` on grid G_old, we sample the
+learned activations at dense points, evaluate the new basis (grid G_new)
+at the same points, and solve `B_new @ c_new ~= phi(x)` per (input,
+output) pair — vectorized as a single lstsq with multiple right-hand
+sides.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from . import model
+
+
+def refine_layer(
+    params: dict[str, jnp.ndarray],
+    spec: model.KanLayerSpec,
+    new_grid: int,
+    samples: int = 512,
+) -> tuple[dict[str, jnp.ndarray], model.KanLayerSpec]:
+    """Re-fit one layer's spline coefficients on a finer uniform grid.
+
+    Returns (new_params, new_spec). The base-path weights are unchanged
+    (the ReLU term does not depend on the grid).
+    """
+    if new_grid < spec.grid:
+        raise ValueError(f"refinement must not coarsen: {spec.grid} -> {new_grid}")
+    xs = jnp.linspace(spec.lo, spec.hi, samples)
+    b_old = ref.cox_de_boor(xs, ref.make_grid(spec.grid, spec.degree, spec.lo, spec.hi), spec.degree)
+    b_new = ref.cox_de_boor(xs, ref.make_grid(new_grid, spec.degree, spec.lo, spec.hi), spec.degree)
+
+    coeff = np.asarray(params["coeff"])  # (K, M_old, N)
+    k_dim, m_old, n_out = coeff.shape
+    # activations of every learned phi at the sample points:
+    # (samples, M_old) @ (K, M_old, N) -> (K, samples, N)
+    targets = np.einsum("sm,kmn->ksn", np.asarray(b_old), coeff)
+    # one lstsq, shared design matrix: (samples, M_new) x (K*N rhs)
+    rhs = targets.transpose(1, 0, 2).reshape(samples, k_dim * n_out)
+    sol, *_ = np.linalg.lstsq(np.asarray(b_new), rhs, rcond=None)
+    new_coeff = sol.reshape(new_grid + spec.degree, k_dim, n_out).transpose(1, 0, 2)
+
+    new_spec = spec._replace(grid=new_grid)
+    return (
+        {"coeff": jnp.asarray(new_coeff, jnp.float32), "base": params["base"]},
+        new_spec,
+    )
+
+
+def refine_model(
+    params: list[dict[str, jnp.ndarray]],
+    spec: model.KanModelSpec,
+    new_grid: int,
+) -> tuple[list[dict[str, jnp.ndarray]], model.KanModelSpec]:
+    """Refine every layer of a model to `new_grid`."""
+    out = []
+    for p, layer in zip(params, spec.layers):
+        np_, _ = refine_layer(p, layer, new_grid)
+        out.append(np_)
+    return out, spec._replace(grid=new_grid)
+
+
+def refinement_error(
+    params: dict[str, jnp.ndarray],
+    spec: model.KanLayerSpec,
+    new_params: dict[str, jnp.ndarray],
+    new_spec: model.KanLayerSpec,
+    samples: int = 1024,
+) -> float:
+    """Max |phi_old(x) - phi_new(x)| over the domain, across all splines."""
+    xs = jnp.linspace(spec.lo, spec.hi, samples)
+    b_old = ref.cox_de_boor(xs, ref.make_grid(spec.grid, spec.degree, spec.lo, spec.hi), spec.degree)
+    b_new = ref.cox_de_boor(xs, ref.make_grid(new_spec.grid, new_spec.degree, spec.lo, spec.hi), new_spec.degree)
+    old = np.einsum("sm,kmn->ksn", np.asarray(b_old), np.asarray(params["coeff"]))
+    new = np.einsum("sm,kmn->ksn", np.asarray(b_new), np.asarray(new_params["coeff"]))
+    return float(np.abs(old - new).max())

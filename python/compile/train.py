@@ -1,0 +1,165 @@
+"""Build-time training of the benchmark KAN models (L2).
+
+Trains through the Cox-de Boor oracle path (differentiable); the tabulated
+LUT path is inference-only, mirroring the paper's inference accelerator.
+Run as ``python -m compile.train`` (from ``python/``) or via ``aot.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data, model
+
+
+def _batches(rng: np.random.Generator, n: int, bs: int):
+    while True:
+        idx = rng.permutation(n)
+        for i in range(0, n - bs + 1, bs):
+            yield idx[i : i + bs]
+
+
+def train_model(
+    spec: model.KanModelSpec,
+    x_train: np.ndarray,
+    y_train: np.ndarray,
+    x_test: np.ndarray,
+    y_test: np.ndarray,
+    *,
+    steps: int = 400,
+    batch_size: int = 128,
+    lr: float = 2e-3,
+    weight_decay: float = 1e-5,
+    seed: int = 0,
+    log_every: int = 50,
+    input_scale: float = 1.0,
+) -> tuple[list[dict[str, jax.Array]], dict]:
+    """Train ``spec`` with Adam + cross-entropy; returns (params, metrics).
+
+    ``input_scale`` maps raw inputs into the first layer's spline domain
+    (synth-digits pixels live in [0,1]; we stretch to [-1,1] upstream, so
+    the default is identity here).
+    """
+    params = model.init_model(jax.random.PRNGKey(seed), spec)
+    opt = model.adam_init(params)
+
+    @jax.jit
+    def loss_fn(params, xb, yb):
+        logits = model.kan_forward(params, xb * input_scale, spec, use_pallas=False)
+        return model.cross_entropy(logits, yb)
+
+    @jax.jit
+    def step_fn(params, opt, xb, yb):
+        loss, grads = jax.value_and_grad(loss_fn)(params, xb, yb)
+        params, opt = model.adam_update(grads, opt, params, lr=lr, weight_decay=weight_decay)
+        return params, opt, loss
+
+    @jax.jit
+    def eval_fn(params, xb, yb):
+        logits = model.kan_forward(params, xb * input_scale, spec, use_pallas=False)
+        return model.accuracy(logits, yb)
+
+    rng = np.random.default_rng(seed)
+    it = _batches(rng, len(x_train), batch_size)
+    history = []
+    t0 = time.time()
+    for s in range(steps):
+        idx = next(it)
+        xb = jnp.asarray(x_train[idx])
+        yb = jnp.asarray(y_train[idx])
+        params, opt, loss = step_fn(params, opt, xb, yb)
+        if (s + 1) % log_every == 0 or s == 0:
+            acc = float(eval_fn(params, jnp.asarray(x_test), jnp.asarray(y_test)))
+            history.append({"step": s + 1, "loss": float(loss), "test_acc": acc})
+            print(f"[{spec.name}] step {s+1:5d}  loss {float(loss):.4f}  test_acc {acc:.4f}")
+    final_acc = float(eval_fn(params, jnp.asarray(x_test), jnp.asarray(y_test)))
+    metrics = {
+        "name": spec.name,
+        "dims": list(spec.dims),
+        "grid": spec.grid,
+        "degree": spec.degree,
+        "steps": steps,
+        "fp32_test_acc": final_acc,
+        "train_seconds": time.time() - t0,
+        "history": history,
+    }
+    return params, metrics
+
+
+@functools.lru_cache(maxsize=None)
+def digit_datasets(n_train: int = 6000, n_test: int = 1000):
+    """Seeded synth-digits splits, pixels remapped to the spline domain [-1,1]."""
+    xtr, ytr = data.synth_digits(n_train, seed=1)
+    xte, yte = data.synth_digits(n_test, seed=2)
+    return 2.0 * xtr - 1.0, ytr, 2.0 * xte - 1.0, yte
+
+
+@functools.lru_cache(maxsize=None)
+def blob_datasets(n_train: int = 2000, n_test: int = 500):
+    xtr, ytr = data.synth_blobs(n_train, seed=3)
+    xte, yte = data.synth_blobs(n_test, seed=4)
+    return xtr, ytr, xte, yte
+
+
+def train_mnist_kan(steps: int = 500) -> tuple[list[dict], dict]:
+    xtr, ytr, xte, yte = digit_datasets()
+    return train_model(model.mnist_kan(), xtr, ytr, xte, yte, steps=steps)
+
+
+def train_quickstart(steps: int = 300) -> tuple[list[dict], dict]:
+    xtr, ytr, xte, yte = blob_datasets()
+    return train_model(model.quickstart_kan(), xtr, ytr, xte, yte, steps=steps, batch_size=64)
+
+
+def save_params(params: list[dict[str, jax.Array]], path: Path) -> None:
+    flat = {}
+    for i, layer in enumerate(params):
+        flat[f"l{i}_coeff"] = np.asarray(layer["coeff"])
+        flat[f"l{i}_base"] = np.asarray(layer["base"])
+    np.savez(path, **flat)
+
+
+def load_params(path: Path) -> list[dict[str, jnp.ndarray]]:
+    z = np.load(path)
+    n_layers = sum(1 for k in z.files if k.endswith("_coeff"))
+    return [
+        {"coeff": jnp.asarray(z[f"l{i}_coeff"]), "base": jnp.asarray(z[f"l{i}_base"])}
+        for i in range(n_layers)
+    ]
+
+
+def main() -> None:
+    out = Path(__file__).resolve().parents[2] / "artifacts"
+    out.mkdir(exist_ok=True)
+    all_metrics = {}
+    for name, fn in [("quickstart_kan", train_quickstart), ("mnist_kan", train_mnist_kan)]:
+        params, metrics = fn()
+        save_params(params, out / f"{name}_params.npz")
+        all_metrics[name] = metrics
+    (out / "train_metrics.json").write_text(json.dumps(all_metrics, indent=2))
+    print(json.dumps({k: v["fp32_test_acc"] for k, v in all_metrics.items()}, indent=2))
+
+
+if __name__ == "__main__":
+    main()
+
+
+@functools.lru_cache(maxsize=None)
+def timeseries_datasets(n_train: int = 4000, n_test: int = 800):
+    xtr, ytr = data.synth_timeseries_features(n_train, seed=5)
+    xte, yte = data.synth_timeseries_features(n_test, seed=6)
+    return xtr, ytr, xte, yte
+
+
+def train_catch22(steps: int = 400) -> tuple[list[dict], dict]:
+    xtr, ytr, xte, yte = timeseries_datasets()
+    return train_model(
+        model.catch22_kan(10), xtr, ytr, xte, yte, steps=steps, batch_size=128, lr=5e-3
+    )

@@ -1,0 +1,127 @@
+"""L1 Pallas tabulation kernel vs the Cox-de Boor oracle.
+
+This is the core correctness signal for the B-spline unit: the kernel's
+align -> compare -> LUT pipeline must agree with the recursion up to the
+LUT's address-quantization resolution (1/255 in x_a, which bounds the
+value error by the spline's Lipschitz constant / 255).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import bspline_lut as bl
+from compile.kernels import ref
+
+# max |B'| <= 1 for all P>=1, so address resolution 1/255 with rounding to
+# the nearest sample bounds the value error by ~0.5/255 * G (the cardinal
+# coordinate stretches x by G/(hi-lo)); keep a conservative tolerance.
+TOL = 5e-3
+
+
+@pytest.mark.parametrize("g,p", [(5, 3), (3, 3), (10, 3), (4, 1), (6, 2), (1, 3), (2, 1)])
+@pytest.mark.parametrize("use_onehot", [True, False])
+def test_kernel_matches_oracle(g, p, use_onehot):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.uniform(-1.4, 1.4, (48, 5)).astype(np.float32))
+    vals, k = bl.bspline_activations(x, g, p, use_onehot=use_onehot)
+    rvals, rk = ref.nonzero_bases(x, g, p)
+    np.testing.assert_array_equal(np.asarray(k), np.asarray(rk))
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(rvals), atol=TOL)
+
+
+@pytest.mark.parametrize("g,p", [(5, 3), (4, 2)])
+def test_dense_matches_oracle(g, p):
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.uniform(-1, 1, (33, 7)).astype(np.float32))
+    dense = bl.bspline_dense(x, g, p)
+    full = ref.cox_de_boor(jnp.clip(x, -1, 1), ref.make_grid(g, p), p)
+    np.testing.assert_allclose(
+        np.asarray(dense), np.asarray(full).reshape(33, -1), atol=TOL
+    )
+
+
+@pytest.mark.parametrize("bs", [1, 7, 128, 300])
+def test_batch_tiling(bs):
+    """Non-divisible batch sizes must not change results (block padding)."""
+    g, p = 5, 3
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.uniform(-1, 1, (bs, 3)).astype(np.float32))
+    vals, k = bl.bspline_activations(x, g, p, block_rows=64)
+    rvals, rk = ref.nonzero_bases(x, g, p)
+    np.testing.assert_array_equal(np.asarray(k), np.asarray(rk))
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(rvals), atol=TOL)
+
+
+def test_partition_of_unity_through_lut():
+    """Sum of the P+1 LUT values == 1 (the kernel's own sanity invariant)."""
+    g, p = 7, 3
+    x = jnp.asarray(np.linspace(-1, 1, 101, dtype=np.float32)[:, None])
+    vals, _ = bl.bspline_activations(x, g, p)
+    np.testing.assert_allclose(np.asarray(vals.sum(-1)), 1.0, atol=2 * TOL)
+
+
+def test_out_of_domain_clamped():
+    """Inputs beyond [lo, hi] behave exactly like the clamped boundary."""
+    g, p = 5, 3
+    far = jnp.asarray([[-9.0, 9.0]], dtype=jnp.float32)
+    edge = jnp.asarray([[-1.0, 1.0]], dtype=jnp.float32)
+    v1, k1 = bl.bspline_activations(far, g, p)
+    v2, k2 = bl.bspline_activations(edge, g, p)
+    np.testing.assert_array_equal(np.asarray(k1), np.asarray(k2))
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), atol=1e-6)
+
+
+def test_rejects_bad_inputs():
+    x = jnp.zeros((4, 4), dtype=jnp.float32)
+    with pytest.raises(ValueError):
+        bl.bspline_activations(jnp.zeros((4,)), 5, 3)
+    with pytest.raises(ValueError):
+        bl.bspline_activations(x, 5, 0)
+    with pytest.raises(ValueError):
+        bl.bspline_activations(x, 5, 3, lut=jnp.zeros((16, 4)))
+
+
+def test_quantized_lut_scale():
+    lut, scale = bl.build_lut_quantized(3)
+    assert lut.dtype == jnp.uint8
+    assert int(lut.max()) == 255  # full-range quantization
+    full = bl.build_lut(3)
+    np.testing.assert_allclose(
+        np.asarray(lut, dtype=np.float32) * scale, np.asarray(full), atol=scale
+    )
+
+
+def test_half_table_packed_scheme():
+    """The paper's Fig. 5 storage: half of B_{0,3} with two packed values
+    per row and bitwise-inverted addressing reconstructs the full table."""
+    p = 3
+    full = np.asarray(bl.build_lut(p))  # (256, 4): col j = B(x_a + j)
+    # packed rows: (B(x_a), B(x_a + 1)) only — half the support [0, 2]
+    packed = full[:, :2]
+    recon = np.empty_like(full)
+    for a in range(256):
+        v = packed[a]
+        w = packed[255 - a]  # ~addr: x_a -> 1 - x_a
+        # j=2: B(x_a+2) = B(2-x_a) = packed[~a][1];  j=3: B(x_a+3) = B(1-x_a)
+        recon[a] = [v[0], v[1], w[1], w[0]]
+    np.testing.assert_allclose(recon, full, atol=1e-6)
+
+
+@given(
+    g=st.integers(1, 12),
+    p=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+    bs=st.integers(1, 40),
+    feats=st.integers(1, 8),
+)
+@settings(max_examples=25, deadline=None)
+def test_kernel_hypothesis_sweep(g, p, seed, bs, feats):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-2, 2, (bs, feats)).astype(np.float32))
+    vals, k = bl.bspline_activations(x, g, p)
+    rvals, rk = ref.nonzero_bases(x, g, p)
+    np.testing.assert_array_equal(np.asarray(k), np.asarray(rk))
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(rvals), atol=TOL)

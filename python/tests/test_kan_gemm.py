@@ -1,0 +1,78 @@
+"""L1 GEMM kernels: blocked matmul + the N:M sparse KAN formulation."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import bspline_lut as bl
+from compile.kernels import kan_gemm as kg
+
+
+@pytest.mark.parametrize(
+    "m,k,n", [(8, 8, 8), (128, 128, 128), (300, 257, 130), (1, 64, 10), (33, 5, 3)]
+)
+def test_matmul_matches_jnp(m, k, n):
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    got = kg.matmul(a, b)
+    want = a @ b
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3, rtol=1e-4)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(32, 32, 32), (128, 128, 64), (16, 64, 256)])
+def test_matmul_block_shapes(bm, bn, bk):
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.normal(size=(100, 90)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(90, 70)).astype(np.float32))
+    got = kg.matmul(a, b, block_m=bm, block_n=bn, block_k=bk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(a @ b), atol=1e-3, rtol=1e-4)
+
+
+def test_matmul_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        kg.matmul(jnp.zeros((4, 5)), jnp.zeros((6, 7)))
+
+
+@pytest.mark.parametrize("g,p,kdim,n,bs", [(5, 3, 7, 4, 33), (3, 3, 22, 10, 64), (10, 3, 12, 6, 1)])
+def test_sparse_equals_dense_gemm(g, p, kdim, n, bs):
+    """kan_matmul_sparse == dense B @ C — the N:M PE's defining identity."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.uniform(-1, 1, (bs, kdim)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(kdim, g + p, n)).astype(np.float32))
+    vals, k = bl.bspline_activations(x, g, p)
+    sparse = kg.kan_matmul_sparse(vals, k, c, g, p)
+    dense = bl.bspline_dense(x, g, p) @ c.reshape(kdim * (g + p), n)
+    np.testing.assert_allclose(np.asarray(sparse), np.asarray(dense), atol=1e-4, rtol=1e-4)
+
+
+def test_sparse_batch_padding():
+    g, p, kdim, n = 5, 3, 4, 3
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.uniform(-1, 1, (200, kdim)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(kdim, g + p, n)).astype(np.float32))
+    vals, k = bl.bspline_activations(x, g, p)
+    out = kg.kan_matmul_sparse(vals, k, c, g, p, block_rows=128)
+    dense = bl.bspline_dense(x, g, p) @ c.reshape(-1, n)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(dense), atol=1e-4, rtol=1e-4)
+
+
+@given(
+    m=st.integers(1, 80),
+    k=st.integers(1, 80),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=20, deadline=None)
+def test_matmul_hypothesis(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(kg.matmul(a, b, block_m=32, block_n=32, block_k=32)),
+        np.asarray(a @ b),
+        atol=2e-3,
+        rtol=1e-3,
+    )

@@ -1,0 +1,85 @@
+"""L2 model: layer equivalence (pallas vs oracle), shapes, training."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, train
+
+
+@pytest.mark.parametrize("g,p,kdim,n", [(5, 3, 6, 4), (3, 3, 22, 10), (10, 3, 8, 5)])
+def test_layer_pallas_matches_oracle(g, p, kdim, n):
+    spec = model.KanLayerSpec(kdim, n, g, p)
+    params = model.init_layer(jax.random.PRNGKey(0), spec)
+    x = jnp.asarray(np.random.default_rng(0).uniform(-1, 1, (17, kdim)).astype(np.float32))
+    got = model.kan_layer(params, x, spec, use_pallas=True)
+    want = model.kan_layer(params, x, spec, use_pallas=False)
+    # pallas path quantizes the LUT address (1/255); coefficients amplify it
+    amax = float(jnp.abs(params["coeff"]).sum(axis=(0, 1)).max())
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=6e-3 * max(amax, 1.0))
+
+
+def test_forward_shapes():
+    spec = model.quickstart_kan()
+    params = model.init_model(jax.random.PRNGKey(1), spec)
+    x = jnp.zeros((9, spec.dims[0]))
+    out = model.kan_forward(params, x, spec, use_pallas=False)
+    assert out.shape == (9, spec.dims[-1])
+
+
+def test_init_shapes():
+    spec = model.KanLayerSpec(7, 5, 4, 2)
+    params = model.init_layer(jax.random.PRNGKey(0), spec)
+    assert params["coeff"].shape == (7, 6, 5)
+    assert params["base"].shape == (7, 5)
+    assert spec.num_bases == 6
+
+
+def test_model_spec_layers():
+    spec = model.KanModelSpec(dims=(4, 8, 3), grid=5, degree=3)
+    layers = spec.layers
+    assert [(l.in_dim, l.out_dim) for l in layers] == [(4, 8), (8, 3)]
+    assert all(l.grid == 5 and l.degree == 3 for l in layers)
+
+
+def test_training_reduces_loss():
+    spec = model.quickstart_kan()
+    xtr, ytr, xte, yte = train.blob_datasets()
+    params, metrics = train.train_model(
+        spec, xtr, ytr, xte, yte, steps=60, batch_size=64, log_every=30
+    )
+    hist = metrics["history"]
+    assert hist[-1]["loss"] < hist[0]["loss"]
+    assert metrics["fp32_test_acc"] > 0.5  # well above 1/3 chance
+
+
+def test_adam_step_moves_params():
+    spec = model.quickstart_kan()
+    params = model.init_model(jax.random.PRNGKey(2), spec)
+    opt = model.adam_init(params)
+    g = jax.tree.map(jnp.ones_like, params)
+    new_params, opt2 = model.adam_update(g, opt, params, lr=1e-2)
+    diff = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()), params, new_params)
+    assert max(jax.tree.leaves(diff)) > 0
+    assert int(opt2.step) == 1
+
+
+def test_cross_entropy_matches_manual():
+    logits = jnp.asarray([[2.0, 0.0, -1.0], [0.0, 1.0, 0.0]])
+    labels = jnp.asarray([0, 1])
+    got = float(model.cross_entropy(logits, labels))
+    probs = jax.nn.softmax(logits)
+    want = float(-jnp.mean(jnp.log(probs[jnp.arange(2), labels])))
+    assert abs(got - want) < 1e-6
+
+
+def test_params_save_load_roundtrip(tmp_path):
+    spec = model.quickstart_kan()
+    params = model.init_model(jax.random.PRNGKey(3), spec)
+    path = tmp_path / "p.npz"
+    train.save_params(params, path)
+    loaded = train.load_params(path)
+    for a, b in zip(params, loaded):
+        np.testing.assert_array_equal(np.asarray(a["coeff"]), np.asarray(b["coeff"]))
+        np.testing.assert_array_equal(np.asarray(a["base"]), np.asarray(b["base"]))

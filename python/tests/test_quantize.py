@@ -1,0 +1,128 @@
+"""Integer-only quantized pipeline: the bit-exact spec the rust engine mirrors."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import model, quantize, train
+from compile.kernels import ref
+
+
+def test_activation_quant_roundtrip():
+    x = np.linspace(-1, 127 / 128, 256, dtype=np.float32)
+    xq = quantize.quantize_activations(x)
+    xd = quantize.dequantize_activations(xq)
+    assert np.abs(xd - x).max() <= 0.5 / 128 + 1e-6
+    assert xq.dtype == np.uint8
+
+
+def test_activation_quant_zero_point():
+    assert quantize.quantize_activations(np.float32(0.0)) == quantize.ZP
+    assert quantize.quantize_activations(np.float32(-1.0)) == 0
+    assert quantize.quantize_activations(np.float32(1.0)) == 255
+
+
+def test_symmetric_quant_roundtrip():
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(20, 30)).astype(np.float32)
+    q, s = quantize.quantize_symmetric(w)
+    assert q.dtype == np.int8
+    assert np.abs(q.astype(np.float32) * s - w).max() <= s / 2 + 1e-7
+
+
+def test_symmetric_quant_zero_tensor():
+    q, s = quantize.quantize_symmetric(np.zeros((3, 3), np.float32))
+    assert (q == 0).all() and s == 1.0
+
+
+@pytest.mark.parametrize("p", [1, 2, 3])
+def test_lut_q_matches_cardinal(p):
+    lut, s_b = quantize.build_lut_q(p)
+    assert lut.shape == (256, p + 1)
+    a = np.arange(256) / 256.0
+    for j in range(p + 1):
+        want = np.asarray(ref.cardinal_bspline(jnp.asarray(a + (p - j), dtype=jnp.float32), p))
+        got = lut[:, j].astype(np.float64) * s_b
+        assert np.abs(got - want).max() <= s_b / 2 + 1e-6
+
+
+@pytest.mark.parametrize("g,p", [(5, 3), (3, 3), (10, 3), (4, 1), (6, 2)])
+def test_bspline_unit_q_vs_oracle(g, p):
+    """Integer unit (Compare/Align/LUT) matches the float oracle at the
+    dequantized input points, within LUT resolution."""
+    lut, s_b = quantize.build_lut_q(p)
+    rng = np.random.default_rng(1)
+    x = rng.uniform(-1, 127 / 128, (64, 3)).astype(np.float32)
+    xq = quantize.quantize_activations(x)
+    vals, k = quantize.bspline_unit_q(xq, lut, g, p)
+    xd = jnp.asarray(quantize.dequantize_activations(xq))
+    rvals, rk = ref.nonzero_bases(xd, g, p)
+    np.testing.assert_array_equal(k, np.asarray(rk))
+    # value error <= address resolution (g/256 in x_a) + LUT quantization
+    tol = s_b + (g / 256.0) * 1.1
+    assert np.abs(vals.astype(np.float64) * s_b - np.asarray(rvals)).max() <= tol
+
+
+def test_bspline_unit_q_partition_of_unity():
+    g, p = 5, 3
+    lut, s_b = quantize.build_lut_q(p)
+    xq = np.arange(256, dtype=np.uint8)[:, None]
+    vals, _ = quantize.bspline_unit_q(xq, lut, g, p)
+    sums = vals.astype(np.float64).sum(-1) * s_b
+    np.testing.assert_allclose(sums, 1.0, atol=0.02)
+
+
+def test_bspline_unit_q_edges():
+    g, p = 5, 3
+    lut, _ = quantize.build_lut_q(p)
+    vals, k = quantize.bspline_unit_q(np.asarray([[0], [255]], np.uint8), lut, g, p)
+    assert k[0, 0] == p  # first interval
+    assert k[1, 0] == g + p - 1  # last interval
+
+
+def test_quantized_model_accuracy_close_to_fp32():
+    spec = model.quickstart_kan()
+    xtr, ytr, xte, yte = train.blob_datasets()
+    params, metrics = train.train_model(
+        spec, xtr, ytr, xte, yte, steps=150, batch_size=64, log_every=100
+    )
+    qm = quantize.QuantizedModel(params, spec)
+    drop = metrics["fp32_test_acc"] - qm.accuracy(xte, yte)
+    assert abs(drop) < 0.03, f"quantization drop {drop}"  # paper: < 1%
+
+
+def test_requantize_rounding():
+    layer = _tiny_layer()
+    t = np.asarray([0, 1 << quantize.SHIFT, -(1 << quantize.SHIFT)], dtype=np.int64)
+    yq = layer.requantize(t)
+    np.testing.assert_array_equal(yq, [128, 129, 127])
+
+
+def test_requantize_saturates():
+    layer = _tiny_layer()
+    big = np.asarray([1 << 62, -(1 << 62)], dtype=np.int64)
+    yq = layer.requantize(big)
+    np.testing.assert_array_equal(yq, [255, 0])
+
+
+def _tiny_layer():
+    spec = model.KanLayerSpec(2, 2, 3, 3)
+    params = {
+        "coeff": np.ones(spec.coeff_shape, np.float32) * 0.1,
+        "base": np.ones((2, 2), np.float32) * 0.1,
+    }
+    return quantize.QuantizedLayer(params, spec)
+
+
+@given(seed=st.integers(0, 2**31 - 1), g=st.integers(1, 12), p=st.integers(1, 3))
+@settings(max_examples=25, deadline=None)
+def test_unit_q_hypothesis(seed, g, p):
+    """k always lands in [P, G+P-1]; addresses stay in range; vals bounded."""
+    lut, _ = quantize.build_lut_q(p)
+    rng = np.random.default_rng(seed)
+    xq = rng.integers(0, 256, (16, 4)).astype(np.uint8)
+    vals, k = quantize.bspline_unit_q(xq, lut, g, p)
+    assert k.min() >= p and k.max() <= g + p - 1
+    assert vals.dtype == np.uint8

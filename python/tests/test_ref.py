@@ -1,0 +1,114 @@
+"""Properties of the Cox-de Boor oracle (the root of the correctness chain)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+
+GRIDS = [(1, 0), (3, 1), (5, 2), (5, 3), (3, 3), (10, 3), (2, 3), (4, 1)]
+
+
+@pytest.mark.parametrize("g,p", GRIDS)
+def test_partition_of_unity(g, p):
+    """B-splines sum to 1 everywhere inside the input domain."""
+    knots = ref.make_grid(g, p)
+    x = jnp.linspace(-1.0, 1.0, 257)
+    b = ref.cox_de_boor(x, knots, p)
+    np.testing.assert_allclose(np.asarray(b.sum(-1)), 1.0, atol=1e-5)
+
+
+@pytest.mark.parametrize("g,p", GRIDS)
+def test_local_support(g, p):
+    """At most P+1 bases are non-zero at any point (paper Sec. IV-A)."""
+    knots = ref.make_grid(g, p)
+    x = jnp.linspace(-1.0, 1.0, 511)
+    b = ref.cox_de_boor(x, knots, p)
+    assert int((np.asarray(b) > 1e-12).sum(-1).max()) <= p + 1
+
+
+@pytest.mark.parametrize("g,p", GRIDS)
+def test_nonnegative(g, p):
+    knots = ref.make_grid(g, p)
+    x = jnp.linspace(-1.0, 1.0, 257)
+    b = ref.cox_de_boor(x, knots, p)
+    assert float(b.min()) >= -1e-7
+
+
+@pytest.mark.parametrize("g,p", GRIDS)
+def test_shape(g, p):
+    knots = ref.make_grid(g, p)
+    x = jnp.zeros((4, 6))
+    assert ref.cox_de_boor(x, knots, p).shape == (4, 6, g + p)
+    assert ref.num_bases(g, p) == g + p
+
+
+@pytest.mark.parametrize("p", [1, 2, 3, 4])
+def test_cardinal_symmetry(p):
+    """B_{0,P} is symmetric about (P+1)/2 (enables half-table storage)."""
+    u = jnp.linspace(0.0, p + 1.0, 401)
+    a = ref.cardinal_bspline(u, p)
+    b = ref.cardinal_bspline(p + 1.0 - u, p)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+@pytest.mark.parametrize("p", [1, 2, 3])
+def test_cardinal_peak_at_midpoint(p):
+    mid = (p + 1) / 2.0
+    peak = float(ref.cardinal_bspline(jnp.float32(mid), p))
+    u = jnp.linspace(0.0, p + 1.0, 401)
+    assert peak >= float(ref.cardinal_bspline(u, p).max()) - 1e-6
+
+
+@pytest.mark.parametrize("g,p", [(5, 3), (3, 2), (10, 3), (4, 1)])
+def test_translation_invariance(g, p):
+    """Eq. 4: B_{t_k,P}(x) == B_{0,P}((x - t_0)/dx - k)."""
+    knots = ref.make_grid(g, p)
+    x = jnp.linspace(-1.0, 0.999, 101)
+    dense = ref.cox_de_boor(x, knots, p)
+    dx = 2.0 / g
+    u = (x + 1.0) / dx + p  # (x - t_0)/dx
+    for i in range(g + p):
+        card = ref.cardinal_bspline(u - i, p)
+        np.testing.assert_allclose(np.asarray(card), np.asarray(dense[:, i]), atol=3e-5)
+
+
+@pytest.mark.parametrize("g,p", [(5, 3), (3, 1), (7, 2)])
+def test_sparse_dense_roundtrip(g, p):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.uniform(-1.3, 1.3, (32, 5)).astype(np.float32))
+    vals, k = ref.nonzero_bases(x, g, p)
+    dense = ref.dense_from_sparse(vals, k, g, p)
+    full = ref.cox_de_boor(jnp.clip(x, -1, 1), ref.make_grid(g, p), p)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(full), atol=1e-6)
+
+
+@pytest.mark.parametrize("g,p", [(5, 3), (3, 1)])
+def test_interval_index_bounds(g, p):
+    x = jnp.asarray(np.random.default_rng(1).uniform(-5, 5, 200).astype(np.float32))
+    k = np.asarray(ref.interval_index(x, g, p))
+    assert k.min() >= p and k.max() <= g + p - 1
+
+
+@given(
+    g=st.integers(1, 12),
+    p=st.integers(0, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_partition_of_unity_hypothesis(g, p, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-1, 1, 64).astype(np.float32))
+    b = ref.cox_de_boor(x, ref.make_grid(g, p), p)
+    np.testing.assert_allclose(np.asarray(b.sum(-1)), 1.0, atol=1e-4)
+
+
+def test_make_grid_validation():
+    with pytest.raises(ValueError):
+        ref.make_grid(0, 3)
+    with pytest.raises(ValueError):
+        ref.make_grid(5, -1)
+    with pytest.raises(ValueError):
+        ref.make_grid(5, 3, 1.0, -1.0)

@@ -1,0 +1,66 @@
+"""Grid refinement (paper Sec. II-B): finer uniform grids reproduce the
+learned activations without retraining."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, refine, train
+
+
+def _layer(seed=0, g=3, p=3, k=4, n=3):
+    spec = model.KanLayerSpec(k, n, g, p)
+    params = model.init_layer(jax.random.PRNGKey(seed), spec)
+    return params, spec
+
+
+@pytest.mark.parametrize("new_g", [6, 9, 12, 24])
+def test_refinement_preserves_activations(new_g):
+    """A degree-P spline space on grid G embeds in the space on grid cG
+    (uniform knots are nested under integer subdivision), so refinement
+    must be near-exact."""
+    params, spec = _layer(g=3)
+    new_params, new_spec = refine.refine_layer(params, spec, new_g)
+    err = refine.refinement_error(params, spec, new_params, new_spec)
+    assert err < 1e-4, f"G=3 -> G={new_g}: err {err}"
+
+
+def test_non_nested_refinement_small_error():
+    # G=3 -> G=5 is not nested; the lstsq fit is approximate but close
+    params, spec = _layer(g=3)
+    new_params, new_spec = refine.refine_layer(params, spec, 5)
+    err = refine.refinement_error(params, spec, new_params, new_spec)
+    scale = float(jnp.abs(params["coeff"]).max())
+    assert err < 0.12 * max(scale, 1e-6), f"err {err} vs coeff scale {scale}"
+
+
+def test_coarsening_rejected():
+    params, spec = _layer(g=5)
+    with pytest.raises(ValueError):
+        refine.refine_layer(params, spec, 3)
+
+
+def test_refined_model_keeps_accuracy():
+    """End-to-end: refine the trained quickstart model to a finer grid and
+    check classification accuracy is preserved (the paper's argument for
+    the uniform-grid-only hardware assumption)."""
+    spec = model.quickstart_kan()  # G=5
+    xtr, ytr, xte, yte = train.blob_datasets()
+    params, metrics = train.train_model(
+        spec, xtr, ytr, xte, yte, steps=150, batch_size=64, log_every=150
+    )
+    new_params, new_spec = refine.refine_model(params, spec, 10)
+    logits = model.kan_forward(new_params, jnp.asarray(xte), new_spec, use_pallas=False)
+    acc = float(model.accuracy(logits, jnp.asarray(yte)))
+    assert acc >= metrics["fp32_test_acc"] - 0.02, (
+        f"refined acc {acc} vs original {metrics['fp32_test_acc']}"
+    )
+
+
+def test_base_weights_untouched():
+    params, spec = _layer()
+    new_params, _ = refine.refine_layer(params, spec, 6)
+    np.testing.assert_array_equal(
+        np.asarray(params["base"]), np.asarray(new_params["base"])
+    )

@@ -1,0 +1,118 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. weight-load policy (amortized double-buffering vs counted loads) —
+//!    how much of KAN-SAs' cycle advantage survives if coefficient loads
+//!    serialize with compute;
+//! 2. GKAN G/P variants — the N:M pattern's effect on the utilization gap;
+//! 3. CF-KAN dataset sizes — imperfect tiling vs layer width;
+//! 4. LUT depth — ROM bits vs worst-case B-spline value error.
+
+use kan_sas::arch::{ArrayConfig, WeightLoad};
+use kan_sas::bspline::reference;
+use kan_sas::report::Table;
+use kan_sas::sim::analytic;
+use kan_sas::util::round_clamp;
+use kan_sas::workloads;
+
+fn main() {
+    weight_load_ablation();
+    gkan_ablation();
+    cfkan_ablation();
+    lut_depth_ablation();
+}
+
+fn weight_load_ablation() {
+    let apps = workloads::fig7_workloads();
+    let mut t = Table::new(&["policy", "conv 32x32 cycles", "KAN-SAs 16x16 cycles", "ratio"])
+        .with_title("Ablation 1 — weight-load accounting (all Fig. 7 apps, G=5 P=3)");
+    for (policy, label) in [(WeightLoad::Amortized, "amortized (paper)"), (WeightLoad::Counted, "counted")] {
+        let mut conv = ArrayConfig::conventional(32, 32);
+        let mut kan = ArrayConfig::kan_sas(16, 16, 4, 8);
+        conv.weight_load = policy;
+        kan.weight_load = policy;
+        let c: u64 = apps.iter().map(|(_, w)| analytic::simulate_app(&conv, w).cycles).sum();
+        let k: u64 = apps.iter().map(|(_, w)| analytic::simulate_app(&kan, w).cycles).sum();
+        t.row(vec![
+            label.into(),
+            c.to_string(),
+            k.to_string(),
+            format!("{:.2}x", c as f64 / k as f64),
+        ]);
+    }
+    print!("{}", t.render());
+    println!();
+}
+
+fn gkan_ablation() {
+    let mut t = Table::new(&["G", "P", "N:M", "conv util %", "KAN-SAs util %", "cycle ratio"])
+        .with_title("Ablation 2 — GKAN G/P variants (paper Table II: G in {2,3}, P in {1,2,3})");
+    for (g, p, wls) in workloads::gkan_variants() {
+        let conv = ArrayConfig::conventional(32, 32);
+        let kan = ArrayConfig::kan_sas(16, 16, p + 1, g + p);
+        let cs = analytic::simulate_app(&conv, &wls);
+        let ks = analytic::simulate_app(&kan, &wls);
+        t.row(vec![
+            g.to_string(),
+            p.to_string(),
+            format!("{}:{}", p + 1, g + p),
+            format!("{:.1}", cs.utilization() * 100.0),
+            format!("{:.1}", ks.utilization() * 100.0),
+            format!("{:.2}x", cs.cycles as f64 / ks.cycles as f64),
+        ]);
+    }
+    print!("{}", t.render());
+    println!();
+}
+
+fn cfkan_ablation() {
+    let mut t = Table::new(&["X", "conv util %", "KAN-SAs util %", "cycle ratio"])
+        .with_title("Ablation 3 — CF-KAN dataset sizes (X in Table II)");
+    for (x, wls) in workloads::cfkan_variants() {
+        let conv = ArrayConfig::conventional(32, 32);
+        let kan = ArrayConfig::kan_sas(16, 16, 4, 5);
+        let cs = analytic::simulate_app(&conv, &wls);
+        let ks = analytic::simulate_app(&kan, &wls);
+        t.row(vec![
+            x.to_string(),
+            format!("{:.1}", cs.utilization() * 100.0),
+            format!("{:.1}", ks.utilization() * 100.0),
+            format!("{:.2}x", cs.cycles as f64 / ks.cycles as f64),
+        ]);
+    }
+    print!("{}", t.render());
+    println!();
+}
+
+fn lut_depth_ablation() {
+    // worst-case |LUT dequant - exact B_{0,3}| across a dense input sweep,
+    // for different ROM depths: the paper's 256 rows vs alternatives
+    let p = 3;
+    let peak = reference::cardinal_peak(p);
+    let mut t = Table::new(&["LUT rows", "ROM bits (full)", "max abs err", "err / peak %"])
+        .with_title("Ablation 4 — tabulation depth vs B-spline value error (P=3)");
+    for rows in [32usize, 64, 128, 256, 512, 1024] {
+        let scale = peak / 255.0;
+        let mut max_err = 0.0f64;
+        for i in 0..8192 {
+            let u = 4.0 * i as f64 / 8192.0; // support [0, P+1)
+            let exact = reference::cardinal_bspline(u, p);
+            // quantize u to the row grid the same way the unit does
+            let frac = u.fract();
+            let base = u.trunc();
+            let addr = ((frac * rows as f64) as usize).min(rows - 1);
+            let stored =
+                round_clamp(reference::cardinal_bspline(addr as f64 / rows as f64 + base, p) / scale, 0, 255)
+                    as f64
+                    * scale;
+            max_err = max_err.max((stored - exact).abs());
+        }
+        t.row(vec![
+            rows.to_string(),
+            (rows * (p + 1) * 8).to_string(),
+            format!("{max_err:.5}"),
+            format!("{:.2}", 100.0 * max_err / peak),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("(256 rows — the paper's 8-bit address — keeps worst-case error ~1 quantization LSB)");
+}

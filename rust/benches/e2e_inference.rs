@@ -1,0 +1,35 @@
+//! Bench: end-to-end integer inference (the serving hot path) across
+//! batch sizes, plus the simulated accelerator cycles per batch.
+
+use std::path::PathBuf;
+
+use kan_sas::arch::ArrayConfig;
+use kan_sas::bench::bench_val;
+use kan_sas::kan::{Engine, QuantizedModel};
+use kan_sas::util::rng::Rng;
+
+fn main() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let path = dir.join("mnist_kan.kanq");
+    if !path.exists() {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::new(QuantizedModel::load(&path).unwrap());
+    let in_dim = engine.model.in_dim();
+    let mut rng = Rng::new(3);
+
+    for bs in [1usize, 8, 32, 128] {
+        let x_q: Vec<u8> = (0..bs * in_dim).map(|_| rng.below(256) as u8).collect();
+        let stats = bench_val(&format!("mnist_kan int8 forward, bs={bs}"), || {
+            engine.forward_from_q(&x_q, bs).unwrap()
+        });
+        let sim = engine.simulate_batch(&ArrayConfig::kan_sas(16, 16, 4, 8), bs);
+        println!(
+            "    -> {:.0} rows/s on CPU; simulated KAN-SAs 16x16: {} cycles ({:.1} us @500MHz)",
+            stats.per_second(bs as u64),
+            sim.cycles,
+            sim.cycles as f64 * 2e-3
+        );
+    }
+}

@@ -1,0 +1,19 @@
+//! Bench: regenerate Fig. 7a (utilization vs area) and Fig. 7b (runtime
+//! vs area) and time the full design-space sweep.
+
+use kan_sas::bench::bench_val;
+use kan_sas::experiments;
+
+fn main() {
+    let (a, b) = experiments::fig7(Some(std::path::Path::new("bench_out")));
+    println!("{a}");
+    println!("{b}");
+    println!(
+        "equal-area cycle ratio (conv 32x32 / KAN-SAs 16x16): {:.2}x (paper: ~2x)",
+        experiments::equal_area_cycle_ratio()
+    );
+    println!("\n=== sweep wallclock (both families, all sizes, all apps) ===");
+    bench_val("fig7 full design-space sweep", || {
+        (experiments::fig7_sweep(false), experiments::fig7_sweep(true))
+    });
+}

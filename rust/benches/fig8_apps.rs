@@ -1,0 +1,12 @@
+//! Bench: regenerate Fig. 8 (per-application utilization at similar area)
+//! and time the per-app simulation.
+
+use kan_sas::bench::bench_val;
+use kan_sas::experiments;
+
+fn main() {
+    let (t, avg, _) = experiments::fig8();
+    print!("{}", t.render());
+    println!("average absolute improvement: {avg:.1} pp (paper: 39.9)\n");
+    bench_val("fig8 per-app simulation", experiments::fig8);
+}

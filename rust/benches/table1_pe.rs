@@ -1,0 +1,40 @@
+//! Bench: regenerate Table I (PE delay/power/normalized-energy) and time
+//! the functional PE models' hot loops.
+
+use kan_sas::arch::{ScalarPe, VectorPe};
+use kan_sas::bench::bench_val;
+use kan_sas::experiments;
+use kan_sas::util::rng::Rng;
+
+fn main() {
+    println!("=== Table I regeneration ===");
+    print!("{}", experiments::table1().render());
+
+    println!("=== functional PE throughput (simulator hot loop) ===");
+    let mut rng = Rng::new(1);
+    let acts: Vec<u8> = (0..65536).map(|_| 1 + rng.below(255) as u8).collect();
+
+    let mut spe = ScalarPe::default();
+    spe.load(37);
+    bench_val("scalar PE: 64k MACs", || {
+        let mut psum = 0i32;
+        for &a in &acts {
+            psum = spe.step(a, psum);
+        }
+        psum
+    });
+
+    let mut vpe = VectorPe::new(4, 8);
+    vpe.load(&[1, -2, 3, -4, 5, -6, 7, -8]);
+    let vals: Vec<[u8; 4]> = (0..16384)
+        .map(|_| [0; 4].map(|_| 1 + rng.below(255) as u8))
+        .collect();
+    let ks: Vec<usize> = (0..16384).map(|_| 3 + rng.below(5)).collect();
+    bench_val("4:8 vector PE: 16k vector-MACs (64k lanes)", || {
+        let mut psum = 0i32;
+        for (v, &k) in vals.iter().zip(&ks) {
+            psum = vpe.step_kan(v, k, psum);
+        }
+        psum
+    });
+}

@@ -1,0 +1,93 @@
+//! Array-level configuration of the weight-stationary systolic array.
+
+use super::pe::PeKind;
+
+/// How tile (coefficient) loads are accounted in the cycle model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WeightLoad {
+    /// Loads overlap with compute (double-buffered weight registers) —
+    /// the paper's runtime numbers are consistent with this policy
+    /// ("coefficients are loaded in the PE and then reused for several
+    /// cycles"), so it is the default.
+    Amortized,
+    /// Loads serialize with compute: one tile row per cycle through the
+    /// C-wide weight bus (R cycles for a scalar tile, R*M / R*N for
+    /// vector tiles). Exposed for the ablation bench.
+    Counted,
+}
+
+/// A weight-stationary systolic array: R x C grid of `pe` elements, one
+/// B-spline unit per row (Fig. 3 / Fig. 6).
+#[derive(Clone, Copy, Debug)]
+pub struct ArrayConfig {
+    pub rows: usize,
+    pub cols: usize,
+    pub pe: PeKind,
+    pub weight_load: WeightLoad,
+}
+
+impl ArrayConfig {
+    pub fn conventional(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, pe: PeKind::Scalar, weight_load: WeightLoad::Amortized }
+    }
+
+    pub fn kan_sas(rows: usize, cols: usize, n: usize, m: usize) -> Self {
+        assert!(n >= 1 && m >= n, "need M >= N >= 1");
+        Self { rows, cols, pe: PeKind::Vector { n, m }, weight_load: WeightLoad::Amortized }
+    }
+
+    /// Total multiplier lanes in the array (the utilization denominator
+    /// is `lanes * cycles`).
+    pub fn lanes(&self) -> usize {
+        self.rows * self.cols * self.pe.lanes()
+    }
+
+    /// Reduction rows one coefficient tile covers for a KAN (spline)
+    /// workload, measured in *expanded* B-spline rows: scalar tiles
+    /// cover R rows; vector tiles cover R*M (each PE holds a feature's
+    /// full M-wide basis).
+    pub fn kan_tile_rows(&self) -> usize {
+        match self.pe {
+            PeKind::Scalar => self.rows,
+            PeKind::Vector { m, .. } => self.rows * m,
+        }
+    }
+
+    /// Reduction rows per tile for a dense (non-KAN) workload: R for
+    /// scalar, R*N for vector (all lanes carry dense inputs).
+    pub fn dense_tile_rows(&self) -> usize {
+        match self.pe {
+            PeKind::Scalar => self.rows,
+            PeKind::Vector { n, .. } => self.rows * n,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}x{} {}", self.rows, self.cols, self.pe.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tile_row_coverage() {
+        let conv = ArrayConfig::conventional(16, 16);
+        assert_eq!(conv.kan_tile_rows(), 16);
+        assert_eq!(conv.dense_tile_rows(), 16);
+        assert_eq!(conv.lanes(), 256);
+
+        let ks = ArrayConfig::kan_sas(16, 16, 4, 8);
+        assert_eq!(ks.kan_tile_rows(), 128); // R * M
+        assert_eq!(ks.dense_tile_rows(), 64); // R * N
+        assert_eq!(ks.lanes(), 1024); // R * C * N
+        assert_eq!(ks.label(), "16x16 4:8");
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_n_gt_m() {
+        ArrayConfig::kan_sas(4, 4, 6, 3);
+    }
+}

@@ -1,0 +1,8 @@
+//! Architectural models: processing elements and the systolic array
+//! organization (paper Secs. III-IV).
+
+pub mod array;
+pub mod pe;
+
+pub use array::{ArrayConfig, WeightLoad};
+pub use pe::{PeKind, ScalarPe, VectorPe};

@@ -1,0 +1,226 @@
+//! Processing elements: the conventional scalar MAC PE and the paper's
+//! N:M sparsity-aware vector PE (Sec. IV-B, Fig. 6).
+//!
+//! The structs here are *functional* models used by the cycle-level
+//! simulator and the integer engine; their timing/area/power live in
+//! `crate::cost::pe`.
+
+/// Which PE the array is built from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PeKind {
+    /// Conventional scalar multiply-accumulate (the paper's "1:1").
+    Scalar,
+    /// N:M density-bound-block vector PE: `n` multiplier lanes, `m`
+    /// coefficient registers, an M-to-N mux steered by the streamed
+    /// index k, and an (n+1)-operand adder tree.
+    Vector { n: usize, m: usize },
+}
+
+impl PeKind {
+    /// For a KAN layer with grid G and degree P the paper instantiates
+    /// N = P+1, M = G+P.
+    pub fn for_kan(g: usize, p: usize) -> Self {
+        PeKind::Vector { n: p + 1, m: g + p }
+    }
+
+    /// Multiplier lanes per PE (1 for scalar).
+    pub fn lanes(&self) -> usize {
+        match self {
+            PeKind::Scalar => 1,
+            PeKind::Vector { n, .. } => *n,
+        }
+    }
+
+    /// Coefficient registers per PE.
+    pub fn coeff_regs(&self) -> usize {
+        match self {
+            PeKind::Scalar => 1,
+            PeKind::Vector { m, .. } => *m,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            PeKind::Scalar => "1:1".to_string(),
+            PeKind::Vector { n, m } => format!("{n}:{m}"),
+        }
+    }
+}
+
+/// Conventional weight-stationary scalar PE: holds one weight, performs
+/// `psum += a * w` per cycle.
+#[derive(Clone, Debug, Default)]
+pub struct ScalarPe {
+    pub weight: i8,
+    /// MACs performed with a non-zero activation operand (the paper's
+    /// utilization numerator).
+    pub useful_macs: u64,
+    /// Total cycles the PE was clocked while the array was active.
+    pub cycles: u64,
+}
+
+impl ScalarPe {
+    pub fn load(&mut self, w: i8) {
+        self.weight = w;
+    }
+
+    /// One cycle: multiply the incoming activation, add to the incoming
+    /// partial sum, pass both along. Returns the outgoing psum.
+    #[inline]
+    pub fn step(&mut self, a: u8, psum_in: i32) -> i32 {
+        self.cycles += 1;
+        if a != 0 {
+            self.useful_macs += 1;
+        }
+        psum_in + a as i32 * self.weight as i32
+    }
+}
+
+/// The paper's N:M vector PE: `m` stationary coefficients, `n` multiplier
+/// lanes fed by the B-spline unit's non-zero values, a mux selecting the
+/// coefficient window `[k-P, k]`, and an (n+1)-operand adder tree.
+#[derive(Clone, Debug)]
+pub struct VectorPe {
+    pub coeffs: Vec<i8>, // m stationary coefficients
+    pub n: usize,
+    pub useful_macs: u64,
+    pub cycles: u64,
+}
+
+impl VectorPe {
+    pub fn new(n: usize, m: usize) -> Self {
+        assert!(n >= 1 && m >= n, "need M >= N >= 1, got {n}:{m}");
+        Self { coeffs: vec![0; m], n, useful_macs: 0, cycles: 0 }
+    }
+
+    pub fn load(&mut self, coeffs: &[i8]) {
+        assert_eq!(coeffs.len(), self.coeffs.len(), "coefficient tile width");
+        self.coeffs.copy_from_slice(coeffs);
+    }
+
+    /// One cycle of the KAN path: multiply the `n` streamed non-zero
+    /// B-spline values against the mux-selected window ending at
+    /// register `sel_end` (= basis index k), accumulate all lanes.
+    ///
+    /// `sel_end` is the index streamed alongside the activations
+    /// (Fig. 6); the window is `[sel_end + 1 - n, sel_end]`.
+    #[inline]
+    pub fn step_kan(&mut self, vals: &[u8], sel_end: usize, psum_in: i32) -> i32 {
+        debug_assert_eq!(vals.len(), self.n);
+        debug_assert!(sel_end < self.coeffs.len() && sel_end + 1 >= self.n);
+        self.cycles += 1;
+        let base = sel_end + 1 - self.n;
+        let mut acc = psum_in;
+        for (j, &v) in vals.iter().enumerate() {
+            if v != 0 {
+                self.useful_macs += 1;
+                acc += v as i32 * self.coeffs[base + j] as i32;
+            }
+        }
+        acc
+    }
+
+    /// One cycle of the dense (MLP base term) path: all `n` lanes consume
+    /// `n` consecutive dense activations against the first `n` registers
+    /// (the paper's `(R x N, C)` tiling of non-KAN workloads).
+    #[inline]
+    pub fn step_dense(&mut self, vals: &[u8], psum_in: i32) -> i32 {
+        debug_assert!(vals.len() <= self.n);
+        self.cycles += 1;
+        let mut acc = psum_in;
+        for (j, &v) in vals.iter().enumerate() {
+            if v != 0 {
+                self.useful_macs += 1;
+                acc += v as i32 * self.coeffs[j] as i32;
+            }
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_for_kan() {
+        assert_eq!(PeKind::for_kan(5, 3), PeKind::Vector { n: 4, m: 8 });
+        assert_eq!(PeKind::for_kan(10, 3).label(), "4:13");
+        assert_eq!(PeKind::Scalar.lanes(), 1);
+        assert_eq!(PeKind::Vector { n: 2, m: 6 }.coeff_regs(), 6);
+    }
+
+    #[test]
+    fn scalar_pe_mac() {
+        let mut pe = ScalarPe::default();
+        pe.load(3);
+        assert_eq!(pe.step(2, 10), 16);
+        assert_eq!(pe.step(0, 16), 16); // zero operand: no useful mac
+        assert_eq!(pe.useful_macs, 1);
+        assert_eq!(pe.cycles, 2);
+    }
+
+    #[test]
+    fn scalar_pe_negative_weights() {
+        let mut pe = ScalarPe::default();
+        pe.load(-128i8 as i8);
+        assert_eq!(pe.step(255, 0), 255 * -128);
+    }
+
+    #[test]
+    fn vector_pe_window_selection() {
+        let mut pe = VectorPe::new(4, 8);
+        pe.load(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        // k = 3 selects registers [0..=3]
+        let out = pe.step_kan(&[1, 1, 1, 1], 3, 0);
+        assert_eq!(out, 1 + 2 + 3 + 4);
+        // k = 7 selects registers [4..=7]
+        let out = pe.step_kan(&[1, 1, 1, 1], 7, 0);
+        assert_eq!(out, 5 + 6 + 7 + 8);
+        assert_eq!(pe.useful_macs, 8);
+    }
+
+    #[test]
+    fn vector_pe_zero_lanes_not_useful() {
+        let mut pe = VectorPe::new(4, 8);
+        pe.load(&[1; 8]);
+        pe.step_kan(&[0, 5, 0, 7], 3, 0);
+        assert_eq!(pe.useful_macs, 2);
+    }
+
+    #[test]
+    fn vector_pe_dense_path() {
+        let mut pe = VectorPe::new(4, 8);
+        pe.load(&[1, 2, 3, 4, 0, 0, 0, 0]);
+        let out = pe.step_dense(&[10, 10, 10, 10], 5);
+        assert_eq!(out, 5 + 10 * (1 + 2 + 3 + 4));
+    }
+
+    #[test]
+    #[should_panic(expected = "M >= N")]
+    fn vector_pe_bad_shape() {
+        VectorPe::new(4, 2);
+    }
+
+    #[test]
+    fn vector_pe_equals_scalar_sum() {
+        // one vector-PE KAN step == N scalar-PE steps on the same window
+        use crate::util::rng::{check, Rng};
+        check(100, 41, |rng: &mut Rng| {
+            let (n, m) = (4usize, 8usize);
+            let coeffs: Vec<i8> = (0..m).map(|_| rng.range_i64(-127, 127) as i8).collect();
+            let vals: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+            let k = n - 1 + rng.below(m - n + 1);
+            let mut vpe = VectorPe::new(n, m);
+            vpe.load(&coeffs);
+            let got = vpe.step_kan(&vals, k, 0);
+            let mut want = 0i32;
+            for j in 0..n {
+                let mut spe = ScalarPe::default();
+                spe.load(coeffs[k + 1 - n + j]);
+                want = spe.step(vals[j], want);
+            }
+            assert_eq!(got, want);
+        });
+    }
+}

@@ -1,0 +1,86 @@
+//! Micro-benchmark harness (criterion replacement for the offline image).
+//!
+//! Each bench target is a plain `harness = false` binary that calls
+//! [`bench`] / [`bench_with_result`]: warm up, run timed samples, report
+//! median/mean/p95 and derived throughput. Deterministic sample counts
+//! keep runs comparable across the perf-iteration log in EXPERIMENTS.md.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Copy, Debug)]
+pub struct BenchStats {
+    pub samples: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchStats {
+    pub fn per_second(&self, items: u64) -> f64 {
+        items as f64 / self.median.as_secs_f64()
+    }
+}
+
+/// Time `f` (re-run until ~`target_time` or `max_samples`); prints a
+/// criterion-style line and returns the stats.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchStats {
+    bench_with(name, Duration::from_millis(700), 200, &mut f)
+}
+
+/// Like [`bench`] but keeps the closure's result out of the optimizer.
+pub fn bench_val<T, F: FnMut() -> T>(name: &str, mut f: F) -> BenchStats {
+    bench_with(name, Duration::from_millis(700), 200, &mut || {
+        black_box(f());
+    })
+}
+
+fn bench_with<F: FnMut()>(name: &str, target: Duration, max_samples: usize, f: &mut F) -> BenchStats {
+    // warmup
+    for _ in 0..2 {
+        f();
+    }
+    let mut times = Vec::new();
+    let t0 = Instant::now();
+    while times.len() < max_samples && (t0.elapsed() < target || times.len() < 5) {
+        let s = Instant::now();
+        f();
+        times.push(s.elapsed());
+    }
+    times.sort();
+    let stats = BenchStats {
+        samples: times.len(),
+        median: times[times.len() / 2],
+        mean: times.iter().sum::<Duration>() / times.len() as u32,
+        p95: times[(times.len() as f64 * 0.95) as usize - if times.len() > 1 { 1 } else { 0 }],
+        min: times[0],
+    };
+    println!(
+        "{name:<52} median {:>10.3?}  mean {:>10.3?}  p95 {:>10.3?}  ({} samples)",
+        stats.median, stats.mean, stats.p95, stats.samples
+    );
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let mut n = 0u64;
+        let s = bench("noop", || {
+            n += 1;
+        });
+        assert!(s.samples >= 5);
+        assert!(n as usize >= s.samples);
+        assert!(s.min <= s.median && s.median <= s.p95);
+    }
+
+    #[test]
+    fn per_second_positive() {
+        let s = bench_val("spin", || std::hint::black_box((0..100).sum::<u64>()));
+        assert!(s.per_second(100) > 0.0);
+    }
+}

@@ -1,0 +1,118 @@
+//! Quantized tabulation of the cardinal B-spline (the unit's ROM).
+//!
+//! Mirrors `python/compile/quantize.py::build_lut_q` bit-for-bit:
+//! `LUT[a][j] = round(B_{0,P}(a/256 + P - j) / s_B)` with
+//! `s_B = peak / 255` — column j is in *ascending* basis order
+//! (`k - P + j`), i.e. the hardware's reverse-packed read is already
+//! resolved. 256 rows = the paper's 8-bit address.
+
+use crate::bspline::reference::{cardinal_bspline, cardinal_peak};
+use crate::util::round_clamp;
+
+pub const LUT_SIZE: usize = 256;
+
+#[derive(Clone, Debug)]
+pub struct Lut {
+    /// Row-major `(256, P+1)` uint8 table.
+    values: Vec<u8>,
+    /// Spline degree P.
+    pub degree: usize,
+    /// Dequantization scale: stored `v` represents `v * scale`.
+    pub scale: f64,
+}
+
+impl Lut {
+    /// Build the table for degree `p` (P >= 1; P=0 is a discontinuous
+    /// indicator the 8-bit address cannot represent — same restriction as
+    /// the python kernel).
+    pub fn build(p: usize) -> Self {
+        assert!(p >= 1, "tabulated unit requires degree P >= 1");
+        let peak = cardinal_peak(p);
+        let scale = peak / 255.0;
+        let mut values = Vec::with_capacity(LUT_SIZE * (p + 1));
+        for a in 0..LUT_SIZE {
+            let xa = a as f64 / LUT_SIZE as f64;
+            for j in 0..=p {
+                let u = xa + (p - j) as f64;
+                values.push(round_clamp(cardinal_bspline(u, p) / scale, 0, 255) as u8);
+            }
+        }
+        Self { values, degree: p, scale }
+    }
+
+    /// Load a table exported by python (`l<i>.lut` tensor in a .kanq).
+    pub fn from_raw(values: Vec<u8>, degree: usize, scale: f64) -> Self {
+        assert_eq!(values.len(), LUT_SIZE * (degree + 1), "lut size mismatch");
+        Self { values, degree, scale }
+    }
+
+    /// Row `addr`: the `P+1` non-zero basis values (ascending basis order).
+    #[inline]
+    pub fn row(&self, addr: u8) -> &[u8] {
+        let w = self.degree + 1;
+        &self.values[addr as usize * w..(addr as usize + 1) * w]
+    }
+
+    pub fn raw(&self) -> &[u8] {
+        &self.values
+    }
+
+    /// ROM size in bits (for the cost model: the paper's unit stores half
+    /// of this thanks to symmetry — see `packed`).
+    pub fn rom_bits(&self) -> usize {
+        self.values.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bspline::reference::cardinal_bspline;
+
+    #[test]
+    fn matches_reference_within_lsb() {
+        for p in 1..=3 {
+            let lut = Lut::build(p);
+            for a in 0..LUT_SIZE {
+                let xa = a as f64 / 256.0;
+                for j in 0..=p {
+                    let want = cardinal_bspline(xa + (p - j) as f64, p);
+                    let got = lut.row(a as u8)[j] as f64 * lut.scale;
+                    assert!(
+                        (got - want).abs() <= lut.scale / 2.0 + 1e-12,
+                        "p={p} a={a} j={j}: {got} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn full_range_quantization() {
+        for p in 1..=3 {
+            let lut = Lut::build(p);
+            assert_eq!(lut.raw().iter().copied().max(), Some(255), "p={p}");
+        }
+    }
+
+    #[test]
+    fn rows_sum_to_one() {
+        // partition of unity survives quantization to ~1 LSB per entry
+        let lut = Lut::build(3);
+        for a in 0..LUT_SIZE {
+            let sum: f64 = lut.row(a as u8).iter().map(|&v| v as f64 * lut.scale).sum();
+            assert!((sum - 1.0).abs() < 4.0 * lut.scale, "a={a} sum={sum}");
+        }
+    }
+
+    #[test]
+    fn rom_bits_p3() {
+        assert_eq!(Lut::build(3).rom_bits(), 256 * 4 * 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "P >= 1")]
+    fn degree_zero_rejected() {
+        Lut::build(0);
+    }
+}

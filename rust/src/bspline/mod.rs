@@ -1,0 +1,17 @@
+//! B-splines: the f64 Cox-de Boor reference, the quantized tabulation, and
+//! the bit-accurate hardware B-spline unit (paper Sec. III-B).
+//!
+//! Correctness chain: `reference` mirrors `python/compile/kernels/ref.py`
+//! (same recursion); `lut` mirrors `quantize.build_lut_q`; `unit` mirrors
+//! `quantize.bspline_unit_q` exactly (same integer ops) and is replayed
+//! against exported golden vectors in the integration tests. `packed` is
+//! the paper-exact Fig. 5 half-table ROM with inverted addressing,
+//! demonstrating the 2x storage saving at <=1 LSB cost.
+
+pub mod lut;
+pub mod packed;
+pub mod reference;
+pub mod unit;
+
+pub use lut::Lut;
+pub use unit::BsplineUnit;

@@ -1,0 +1,119 @@
+//! The paper-exact Fig. 5 ROM: half-table storage with inverted addressing.
+//!
+//! Symmetry of the cardinal spline about `(P+1)/2` means only the interval
+//! `[0, (P+1)/2]` needs storing. For the cubic (P=3) case the hardware
+//! stores 256 rows of *two* packed values `(B(x_a), B(x_a + 1))` covering
+//! `[0, 2]`; a read at `addr` yields the values for basis indices `k` and
+//! `k-1`, and a second read at the bitwise complement `~addr` yields — in
+//! reverse order — the values for `k-2` and `k-3`:
+//!
+//! ```text
+//! B(x_a + 2) = B(2 - x_a) ~= row[~addr][1]
+//! B(x_a + 3) = B(1 - x_a) ~= row[~addr][0]
+//! ```
+//!
+//! `~addr = 255 - addr` maps `x_a -> (255 - 256*x_a)/256 = 1 - x_a - 1/256`,
+//! one address LSB away from the exact mirror, so the packed unit is
+//! allowed a 1-2 LSB deviation from the full table (`Lut`). The paper's
+//! example values (0, 32 at addr 0; reversed 127, 32 at ~addr) correspond
+//! to rows of this ROM. Storage: 256 x 2 bytes vs 256 x 4 — the 2x saving
+//! the paper's 450 um^2 unit area assumes.
+
+use super::lut::{Lut, LUT_SIZE};
+use crate::bspline::reference::{cardinal_bspline, cardinal_peak};
+use crate::util::round_clamp;
+
+/// Half-table ROM for cubic (P=3) B-splines, as synthesized in the paper.
+#[derive(Clone, Debug)]
+pub struct PackedLut {
+    /// 256 rows x 2 packed values: `(B(x_a), B(x_a + 1))`.
+    rows: Vec<[u8; 2]>,
+    pub scale: f64,
+}
+
+impl PackedLut {
+    pub fn build() -> Self {
+        let p = 3;
+        let peak = cardinal_peak(p);
+        let scale = peak / 255.0;
+        let rows = (0..LUT_SIZE)
+            .map(|a| {
+                let xa = a as f64 / LUT_SIZE as f64;
+                [
+                    round_clamp(cardinal_bspline(xa, p) / scale, 0, 255) as u8,
+                    round_clamp(cardinal_bspline(xa + 1.0, p) / scale, 0, 255) as u8,
+                ]
+            })
+            .collect();
+        Self { rows, scale }
+    }
+
+    /// One evaluation: returns the 4 non-zero cubic basis values in
+    /// ascending basis order `k-3 .. k` (matching `Lut::row` + flip).
+    #[inline]
+    pub fn fetch(&self, addr: u8) -> [u8; 4] {
+        let direct = self.rows[addr as usize]; // (B(x_a), B(x_a+1)) -> bases k, k-1
+        let mirror = self.rows[!addr as usize]; // ~addr: bases k-2, k-3 reversed
+        // ascending order k-3, k-2, k-1, k:
+        [mirror[0], mirror[1], direct[1], direct[0]]
+    }
+
+    /// ROM size in bits: half of the full table.
+    pub fn rom_bits(&self) -> usize {
+        self.rows.len() * 2 * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn within_two_lsb_of_full_table() {
+        let full = Lut::build(3);
+        let packed = PackedLut::build();
+        for a in 0..=255u8 {
+            let want = full.row(a);
+            let got = packed.fetch(a);
+            for j in 0..4 {
+                let d = (want[j] as i32 - got[j] as i32).abs();
+                assert!(d <= 2, "addr={a} j={j}: packed {} vs full {}", got[j], want[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn paper_example_addr_zero() {
+        // Fig. 5: at x_addr = 0 the direct read is (0, 32)-like: B(0) = 0
+        // and B(1) = 1/6 -> small; the mirrored read gives the peak-side
+        // values in reverse.
+        let packed = PackedLut::build();
+        let row = packed.rows[0];
+        assert_eq!(row[0], 0); // B(0) = 0
+        assert!(row[1] > 0 && row[1] < 80); // B(1) = 1/6 scaled
+        let out = packed.fetch(0);
+        // ascending k-3..k: B(1-0)=B(1), B(2-0)=B(2)=peak-ish, B(1), B(0)
+        assert_eq!(out[3], 0);
+        assert!(out[1] >= 250); // B(2) = 2/3 = peak -> 255 region
+    }
+
+    #[test]
+    fn storage_is_half() {
+        assert_eq!(PackedLut::build().rom_bits() * 2, Lut::build(3).rom_bits());
+    }
+
+    #[test]
+    fn symmetric_pairs() {
+        // fetch(a) ascending == reverse of fetch at the mirrored address,
+        // up to the 1-LSB addressing skew tolerance
+        let packed = PackedLut::build();
+        for a in 0..=255u8 {
+            let fwd = packed.fetch(a);
+            let bwd = packed.fetch(!a);
+            for j in 0..4 {
+                let d = (fwd[j] as i32 - bwd[3 - j] as i32).abs();
+                assert!(d <= 2, "addr={a} j={j}");
+            }
+        }
+    }
+}

@@ -1,0 +1,192 @@
+//! f64 Cox-de Boor reference evaluator (Eqs. 2-3 of the paper).
+//!
+//! Mirrors `python/compile/kernels/ref.py`; used as the oracle for the
+//! integer unit and for property tests of the sparsity structure that the
+//! simulator relies on (local support => at most P+1 non-zeros).
+
+/// Extended uniform knot vector `t_0 .. t_{G+2P}` (paper Fig. 2): the
+/// input domain `[lo, hi]` is `[t_P, t_{P+G}]`, extended by P intervals
+/// on each side.
+pub fn make_grid(g: usize, p: usize, lo: f64, hi: f64) -> Vec<f64> {
+    assert!(g >= 1, "grid size G must be >= 1");
+    assert!(hi > lo, "domain must satisfy hi > lo");
+    let dx = (hi - lo) / g as f64;
+    (0..=g + 2 * p)
+        .map(|i| lo + dx * (i as f64 - p as f64))
+        .collect()
+}
+
+/// Number of degree-P basis functions on the extended grid: `G + P`.
+pub fn num_bases(g: usize, p: usize) -> usize {
+    g + p
+}
+
+/// Evaluate all `G+P` degree-`p` B-splines at `x` via the Cox-de Boor
+/// recursion. `knots` must come from [`make_grid`].
+pub fn cox_de_boor(x: f64, knots: &[f64], p: usize) -> Vec<f64> {
+    let n_int = knots.len() - 1; // G + 2P intervals
+    // degree 0: indicators (final interval right-closed)
+    let mut b: Vec<f64> = (0..n_int)
+        .map(|i| {
+            let inside = x >= knots[i] && x < knots[i + 1];
+            let last = i == n_int - 1 && x == knots[i + 1];
+            if inside || last {
+                1.0
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    for d in 1..=p {
+        let n = n_int - d;
+        let mut next = vec![0.0; n];
+        for i in 0..n {
+            let dl = knots[i + d] - knots[i];
+            let dr = knots[i + d + 1] - knots[i + 1];
+            let wl = if dl > 0.0 { (x - knots[i]) / dl } else { 0.0 };
+            let wr = if dr > 0.0 { (knots[i + d + 1] - x) / dr } else { 0.0 };
+            next[i] = wl * b[i] + wr * b[i + 1];
+        }
+        b = next;
+    }
+    b
+}
+
+/// Cardinal B-spline `B_{0,P}` on integer knots `0..=P+1` — the function
+/// the hardware tabulates (translation/scale invariance, Eq. 4).
+pub fn cardinal_bspline(u: f64, p: usize) -> f64 {
+    if !(0.0..(p as f64 + 1.0)).contains(&u) {
+        return 0.0;
+    }
+    let mut b: Vec<f64> = (0..=p)
+        .map(|i| if u >= i as f64 && u < i as f64 + 1.0 { 1.0 } else { 0.0 })
+        .collect();
+    for d in 1..=p {
+        let n = (p + 1) - d;
+        let mut next = vec![0.0; n];
+        for i in 0..n {
+            let wl = (u - i as f64) / d as f64;
+            let wr = ((i + d + 1) as f64 - u) / d as f64;
+            next[i] = wl * b[i] + wr * b[i + 1];
+        }
+        b = next;
+    }
+    b[0]
+}
+
+/// Peak value of the cardinal spline (at the support midpoint); the
+/// quantized LUT maps this to 255.
+pub fn cardinal_peak(p: usize) -> f64 {
+    cardinal_bspline((p as f64 + 1.0) / 2.0, p)
+}
+
+/// Interval index k with `x in [t_k, t_{k+1})`, clamped into the input
+/// domain: k in `[P, G+P-1]` (the hardware Compare unit).
+pub fn interval_index(x: f64, g: usize, p: usize, lo: f64, hi: f64) -> usize {
+    let dx = (hi - lo) / g as f64;
+    let u = ((x.clamp(lo, hi)) - lo) / dx;
+    (u.floor() as usize).min(g - 1) + p
+}
+
+/// The N:M sparse view: values of the `P+1` (potentially) non-zero bases
+/// `B_{k-P} .. B_k` plus the index k.
+pub fn nonzero_bases(x: f64, g: usize, p: usize, lo: f64, hi: f64) -> (Vec<f64>, usize) {
+    let knots = make_grid(g, p, lo, hi);
+    let dense = cox_de_boor(x.clamp(lo, hi), &knots, p);
+    let k = interval_index(x, g, p, lo, hi);
+    let vals = (0..=p).map(|j| dense[k - p + j]).collect();
+    (vals, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{check, Rng};
+
+    #[test]
+    fn partition_of_unity() {
+        for (g, p) in [(5, 3), (3, 3), (10, 3), (4, 1), (6, 2), (1, 0)] {
+            let knots = make_grid(g, p, -1.0, 1.0);
+            for i in 0..=100 {
+                let x = -1.0 + 2.0 * i as f64 / 100.0;
+                let sum: f64 = cox_de_boor(x, &knots, p).iter().sum();
+                assert!((sum - 1.0).abs() < 1e-12, "g={g} p={p} x={x} sum={sum}");
+            }
+        }
+    }
+
+    #[test]
+    fn local_support_at_most_p_plus_1() {
+        check(200, 21, |rng: &mut Rng| {
+            let g = 1 + rng.below(12);
+            let p = rng.below(4);
+            let x = rng.uniform(-1.0, 1.0);
+            let knots = make_grid(g, p, -1.0, 1.0);
+            let nnz = cox_de_boor(x, &knots, p).iter().filter(|v| **v > 1e-14).count();
+            assert!(nnz <= p + 1, "g={g} p={p} x={x} nnz={nnz}");
+        });
+    }
+
+    #[test]
+    fn nonzero_window_covers_all_mass() {
+        check(200, 22, |rng: &mut Rng| {
+            let g = 1 + rng.below(10);
+            let p = 1 + rng.below(3);
+            let x = rng.uniform(-1.5, 1.5);
+            let (vals, _k) = nonzero_bases(x, g, p, -1.0, 1.0);
+            let sum: f64 = vals.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-12, "window must sum to 1, got {sum}");
+        });
+    }
+
+    #[test]
+    fn cardinal_symmetry_and_peak() {
+        for p in 1..=4 {
+            for i in 0..=200 {
+                let u = (p as f64 + 1.0) * i as f64 / 200.0;
+                let a = cardinal_bspline(u, p);
+                let b = cardinal_bspline(p as f64 + 1.0 - u, p);
+                assert!((a - b).abs() < 1e-12, "p={p} u={u}");
+            }
+            assert!(cardinal_peak(p) > 0.0);
+        }
+        // known closed-form values for the cubic
+        assert!((cardinal_bspline(1.0, 3) - 1.0 / 6.0).abs() < 1e-12);
+        assert!((cardinal_bspline(2.0, 3) - 2.0 / 3.0).abs() < 1e-12);
+        assert!((cardinal_peak(3) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn translation_invariance_eq4() {
+        // B_{t_i,P}(x) == B_{0,P}((x - t_0)/dx - i)
+        let (g, p) = (5usize, 3usize);
+        let knots = make_grid(g, p, -1.0, 1.0);
+        let dx = 2.0 / g as f64;
+        check(100, 23, |rng: &mut Rng| {
+            let x = rng.uniform(-1.0, 1.0 - 1e-9);
+            let dense = cox_de_boor(x, &knots, p);
+            let u = (x + 1.0) / dx + p as f64;
+            for (i, &want) in dense.iter().enumerate() {
+                let got = cardinal_bspline(u - i as f64, p);
+                assert!((got - want).abs() < 1e-12, "i={i} x={x}");
+            }
+        });
+    }
+
+    #[test]
+    fn interval_index_clamps() {
+        assert_eq!(interval_index(-9.0, 5, 3, -1.0, 1.0), 3);
+        assert_eq!(interval_index(9.0, 5, 3, -1.0, 1.0), 7);
+        assert_eq!(interval_index(0.0, 5, 3, -1.0, 1.0), 5); // middle of G=5
+    }
+
+    #[test]
+    fn matches_python_oracle_spot_values() {
+        // values computed with python/compile/kernels/ref.py for g=5,p=3
+        let knots = make_grid(5, 3, -1.0, 1.0);
+        let b = cox_de_boor(0.1, &knots, 3);
+        let sum: f64 = b.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+        assert_eq!(b.len(), 8);
+    }
+}

@@ -1,0 +1,157 @@
+//! Run configuration: accelerator + serving settings, loadable from a
+//! JSON file (`--config path.json`) with CLI-friendly defaults.
+//!
+//! Example:
+//! ```json
+//! {
+//!   "array": {"rows": 16, "cols": 16, "pe": "4:8", "weight_load": "amortized"},
+//!   "serve": {"max_batch": 32, "max_wait_ms": 2},
+//!   "batch_size": 32
+//! }
+//! ```
+
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::arch::{ArrayConfig, PeKind, WeightLoad};
+use crate::coordinator::BatchPolicy;
+use crate::util::json::Value;
+
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub array: ArrayConfig,
+    pub policy: BatchPolicy,
+    /// Default workload batch rows for simulations.
+    pub batch_size: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            array: ArrayConfig::kan_sas(16, 16, 4, 8),
+            policy: BatchPolicy::default(),
+            batch_size: crate::workloads::DEFAULT_BS,
+        }
+    }
+}
+
+/// Parse a PE spec: "scalar", "1:1", or "N:M".
+pub fn parse_pe(s: &str) -> Result<PeKind> {
+    if s.eq_ignore_ascii_case("scalar") || s == "1:1" {
+        return Ok(PeKind::Scalar);
+    }
+    let (n, m) = s.split_once(':').with_context(|| format!("bad PE spec '{s}'"))?;
+    let n: usize = n.trim().parse().with_context(|| format!("bad N in '{s}'"))?;
+    let m: usize = m.trim().parse().with_context(|| format!("bad M in '{s}'"))?;
+    if n < 1 || m < n {
+        bail!("PE spec '{s}' needs M >= N >= 1");
+    }
+    Ok(PeKind::Vector { n, m })
+}
+
+impl RunConfig {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = Value::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut cfg = Self::default();
+
+        if let Some(arr) = v.get("array") {
+            let rows = arr.get("rows").and_then(Value::as_usize).unwrap_or(cfg.array.rows);
+            let cols = arr.get("cols").and_then(Value::as_usize).unwrap_or(cfg.array.cols);
+            let pe = match arr.get("pe").and_then(Value::as_str) {
+                Some(s) => parse_pe(s)?,
+                None => cfg.array.pe,
+            };
+            let weight_load = match arr.get("weight_load").and_then(Value::as_str) {
+                Some("amortized") | None => WeightLoad::Amortized,
+                Some("counted") => WeightLoad::Counted,
+                Some(other) => bail!("weight_load '{other}' (want amortized|counted)"),
+            };
+            if rows == 0 || cols == 0 {
+                bail!("array dims must be positive");
+            }
+            cfg.array = ArrayConfig { rows, cols, pe, weight_load };
+        }
+        if let Some(s) = v.get("serve") {
+            if let Some(b) = s.get("max_batch").and_then(Value::as_usize) {
+                if b == 0 {
+                    bail!("max_batch must be positive");
+                }
+                cfg.policy.max_batch = b;
+            }
+            if let Some(ms) = s.get("max_wait_ms").and_then(Value::as_f64) {
+                cfg.policy.max_wait = Duration::from_micros((ms * 1000.0) as u64);
+            }
+        }
+        if let Some(b) = v.get("batch_size").and_then(Value::as_usize) {
+            cfg.batch_size = b;
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn parse_pe_specs() {
+        assert_eq!(parse_pe("scalar").unwrap(), PeKind::Scalar);
+        assert_eq!(parse_pe("1:1").unwrap(), PeKind::Scalar);
+        assert_eq!(parse_pe("4:8").unwrap(), PeKind::Vector { n: 4, m: 8 });
+        assert!(parse_pe("8:4").is_err());
+        assert!(parse_pe("x").is_err());
+        assert!(parse_pe("0:3").is_err());
+    }
+
+    #[test]
+    fn load_full_config() {
+        let mut f = tempfile("cfg1.json");
+        write!(
+            f,
+            r#"{{"array": {{"rows": 8, "cols": 4, "pe": "2:6", "weight_load": "counted"}},
+                "serve": {{"max_batch": 64, "max_wait_ms": 5}},
+                "batch_size": 16}}"#
+        )
+        .unwrap();
+        let cfg = RunConfig::load(&path("cfg1.json")).unwrap();
+        assert_eq!(cfg.array.rows, 8);
+        assert_eq!(cfg.array.cols, 4);
+        assert_eq!(cfg.array.pe, PeKind::Vector { n: 2, m: 6 });
+        assert_eq!(cfg.array.weight_load, WeightLoad::Counted);
+        assert_eq!(cfg.policy.max_batch, 64);
+        assert_eq!(cfg.policy.max_wait, Duration::from_millis(5));
+        assert_eq!(cfg.batch_size, 16);
+    }
+
+    #[test]
+    fn defaults_fill_missing() {
+        let mut f = tempfile("cfg2.json");
+        write!(f, "{{}}").unwrap();
+        let cfg = RunConfig::load(&path("cfg2.json")).unwrap();
+        assert_eq!(cfg.array.rows, 16);
+        assert_eq!(cfg.batch_size, crate::workloads::DEFAULT_BS);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let mut f = tempfile("cfg3.json");
+        write!(f, r#"{{"array": {{"rows": 0}}}}"#).unwrap();
+        assert!(RunConfig::load(&path("cfg3.json")).is_err());
+        let mut f = tempfile("cfg4.json");
+        write!(f, r#"{{"array": {{"weight_load": "magic"}}}}"#).unwrap();
+        assert!(RunConfig::load(&path("cfg4.json")).is_err());
+    }
+
+    fn path(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("kansas-test-{name}"))
+    }
+
+    fn tempfile(name: &str) -> std::fs::File {
+        std::fs::File::create(path(name)).unwrap()
+    }
+}

@@ -1,0 +1,120 @@
+//! Dynamic batching policy and queue draining.
+
+use std::time::{Duration, Instant};
+
+/// When to close a batch.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Maximum requests per batch (bounded by the compiled HLO's static
+    /// batch dimension on the fp32 path).
+    pub max_batch: usize,
+    /// Maximum time the oldest queued request may wait before the batch
+    /// is dispatched anyway.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 32, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Accumulates items with arrival timestamps and decides dispatch.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    policy: BatchPolicy,
+    items: Vec<T>,
+    oldest: Option<Instant>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        assert!(policy.max_batch >= 1);
+        Self { policy, items: Vec::new(), oldest: None }
+    }
+
+    pub fn push(&mut self, item: T) {
+        if self.items.is_empty() {
+            self.oldest = Some(Instant::now());
+        }
+        self.items.push(item);
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Should the current batch be dispatched now?
+    pub fn ready(&self) -> bool {
+        if self.items.len() >= self.policy.max_batch {
+            return true;
+        }
+        match self.oldest {
+            Some(t0) => !self.items.is_empty() && t0.elapsed() >= self.policy.max_wait,
+            None => false,
+        }
+    }
+
+    /// Time until the deadline would force a dispatch (for recv timeouts).
+    pub fn time_left(&self) -> Duration {
+        match self.oldest {
+            Some(t0) => self.policy.max_wait.saturating_sub(t0.elapsed()),
+            None => self.policy.max_wait,
+        }
+    }
+
+    /// Take up to `max_batch` items (FIFO), leaving the rest queued.
+    pub fn drain(&mut self) -> Vec<T> {
+        let take = self.items.len().min(self.policy.max_batch);
+        let batch: Vec<T> = self.items.drain(..take).collect();
+        self.oldest = if self.items.is_empty() { None } else { Some(Instant::now()) };
+        batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dispatches_on_size() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(9) });
+        b.push(1);
+        b.push(2);
+        assert!(!b.ready());
+        b.push(3);
+        assert!(b.ready());
+        assert_eq!(b.drain(), vec![1, 2, 3]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn dispatches_on_deadline() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(1) });
+        b.push(7);
+        std::thread::sleep(Duration::from_millis(3));
+        assert!(b.ready());
+        assert_eq!(b.drain(), vec![7]);
+    }
+
+    #[test]
+    fn drain_respects_max_batch_fifo() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(1) });
+        for i in 0..5 {
+            b.push(i);
+        }
+        assert_eq!(b.drain(), vec![0, 1]);
+        assert_eq!(b.drain(), vec![2, 3]);
+        assert_eq!(b.drain(), vec![4]);
+    }
+
+    #[test]
+    fn empty_never_ready() {
+        let b: Batcher<i32> = Batcher::new(BatchPolicy::default());
+        assert!(!b.ready());
+    }
+}

@@ -1,0 +1,104 @@
+//! Request-level metrics: latency percentiles and throughput.
+
+use std::time::Duration;
+
+/// Online latency collector (stores all samples; serving runs here are
+/// bounded, so memory is a non-issue and exact percentiles beat sketches).
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    latencies_us: Vec<u64>,
+    pub batches: u64,
+    pub batch_rows: u64,
+    pub sim_cycles: u64,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct LatencyStats {
+    pub count: usize,
+    pub mean_us: f64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+}
+
+impl Metrics {
+    pub fn record_request(&mut self, latency: Duration) {
+        self.latencies_us.push(latency.as_micros() as u64);
+    }
+
+    pub fn record_batch(&mut self, rows: usize, sim_cycles: u64) {
+        self.batches += 1;
+        self.batch_rows += rows as u64;
+        self.sim_cycles += sim_cycles;
+    }
+
+    pub fn merge(&mut self, other: &Metrics) {
+        self.latencies_us.extend_from_slice(&other.latencies_us);
+        self.batches += other.batches;
+        self.batch_rows += other.batch_rows;
+        self.sim_cycles += other.sim_cycles;
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.batch_rows as f64 / self.batches as f64
+    }
+
+    pub fn latency(&self) -> Option<LatencyStats> {
+        if self.latencies_us.is_empty() {
+            return None;
+        }
+        let mut v = self.latencies_us.clone();
+        v.sort_unstable();
+        let pct = |p: f64| v[((v.len() as f64 * p) as usize).min(v.len() - 1)];
+        Some(LatencyStats {
+            count: v.len(),
+            mean_us: v.iter().sum::<u64>() as f64 / v.len() as f64,
+            p50_us: pct(0.50),
+            p95_us: pct(0.95),
+            p99_us: pct(0.99),
+            max_us: *v.last().unwrap(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_sorted() {
+        let mut m = Metrics::default();
+        for us in [5u64, 1, 9, 3, 7, 2, 8, 4, 6, 10] {
+            m.record_request(Duration::from_micros(us));
+        }
+        let s = m.latency().unwrap();
+        assert_eq!(s.count, 10);
+        assert_eq!(s.p50_us, 6);
+        assert_eq!(s.max_us, 10);
+        assert!((s.mean_us - 5.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_latency_none() {
+        assert!(Metrics::default().latency().is_none());
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = Metrics::default();
+        a.record_batch(4, 100);
+        let mut b = Metrics::default();
+        b.record_batch(8, 200);
+        b.record_request(Duration::from_micros(5));
+        a.merge(&b);
+        assert_eq!(a.batches, 2);
+        assert_eq!(a.batch_rows, 12);
+        assert_eq!(a.sim_cycles, 300);
+        assert!((a.mean_batch_size() - 6.0).abs() < 1e-9);
+        assert_eq!(a.latency().unwrap().count, 1);
+    }
+}

@@ -1,0 +1,22 @@
+//! Serving coordinator: the L3 request path.
+//!
+//! A thread-per-worker design over std mpsc channels (tokio is not
+//! available offline, and the workload — CPU-bound batched inference —
+//! doesn't want an async reactor anyway):
+//!
+//! * clients submit [`Request`]s to a bounded queue and receive their
+//!   logits on a per-request oneshot-style channel;
+//! * the [`batcher`] collects requests into batches under a size/deadline
+//!   policy (the classic dynamic-batching tradeoff: larger batches
+//!   amortize fill/drain, older requests must not starve);
+//! * worker threads run the integer engine (and optionally the PJRT fp32
+//!   engine) per batch and attach simulated accelerator stats;
+//! * [`metrics`] aggregates latency percentiles and throughput.
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use metrics::{LatencyStats, Metrics};
+pub use server::{Server, ServerConfig};

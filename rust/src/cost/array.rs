@@ -1,0 +1,41 @@
+//! Array-level area composition (Fig. 8's equal-area comparison axis).
+
+use crate::arch::ArrayConfig;
+
+use super::pe::PeCost;
+use super::BSPLINE_UNIT_UM2;
+
+/// Post-synthesis area estimate for an array: R*C PEs plus one B-spline
+/// unit per row (both the conventional SA and KAN-SAs include the units —
+/// the conventional baseline also evaluates B-splines on the fly, it just
+/// streams the dense expansion into scalar PEs; see paper Sec. V intro).
+pub fn array_area_um2(cfg: &ArrayConfig) -> f64 {
+    let pe = PeCost::of(cfg.pe).area_um2;
+    (cfg.rows * cfg.cols) as f64 * pe + cfg.rows as f64 * BSPLINE_UNIT_UM2
+}
+
+pub fn array_area_mm2(cfg: &ArrayConfig) -> f64 {
+    array_area_um2(cfg) * 1e-6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ArrayConfig;
+
+    #[test]
+    fn paper_equal_area_pair() {
+        // Fig. 8: conventional 32x32 ~ 0.50 mm^2, KAN-SAs 16x16 4:8 ~ 0.47 mm^2
+        let conv = array_area_mm2(&ArrayConfig::conventional(32, 32));
+        let kan = array_area_mm2(&ArrayConfig::kan_sas(16, 16, 4, 8));
+        assert!((conv - 0.50).abs() < 0.02, "conventional 32x32 area {conv}");
+        assert!((kan - 0.47).abs() < 0.02, "KAN-SAs 16x16 area {kan}");
+    }
+
+    #[test]
+    fn area_scales_with_rc() {
+        let a = array_area_mm2(&ArrayConfig::conventional(8, 8));
+        let b = array_area_mm2(&ArrayConfig::conventional(16, 16));
+        assert!(b / a > 3.5 && b / a < 4.5);
+    }
+}

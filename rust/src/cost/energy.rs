@@ -1,0 +1,61 @@
+//! Energy model reproducing Table I's "Normalized Energy" row.
+//!
+//! Methodology (paper Sec. V-A): energy = power x cycles; on a KAN
+//! workload a scalar PE needs (G+P) = M times more cycles than an N:M PE
+//! (N = P+1, M = G+P), so
+//!
+//! `normalized_energy(N:M) = (power(N:M) / power(1:1)) / M`.
+
+use super::pe::PeCost;
+
+/// Energy of an N:M PE running a KAN workload, normalized to the scalar
+/// (1:1) PE running the same workload.
+pub fn normalized_energy(n: usize, m: usize) -> f64 {
+    let p = PeCost::of_nm(n, m).power_mw;
+    let p11 = PeCost::of_nm(1, 1).power_mw;
+    (p / p11) / m as f64
+}
+
+/// Absolute energy estimate in nanojoules for `cycles` at `power_mw`,
+/// 500 MHz (2 ns period).
+pub fn energy_nj(power_mw: f64, cycles: u64) -> f64 {
+    power_mw * 1e-3 * cycles as f64 * 2e-9 * 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_normalized_energy_row() {
+        // paper Table I: 1.00, 0.57, 0.44, 0.37, 0.47, 0.40
+        let want = [
+            (1, 1, 1.00),
+            (1, 2, 0.57),
+            (2, 4, 0.44),
+            (2, 6, 0.37),
+            (4, 6, 0.47),
+            (4, 8, 0.40),
+        ];
+        for (n, m, e) in want {
+            let got = normalized_energy(n, m);
+            assert!(
+                (got - e).abs() < 0.005,
+                "{n}:{m}: got {got:.3}, paper {e}"
+            );
+        }
+    }
+
+    #[test]
+    fn nm_always_beats_scalar_on_kan() {
+        // every published N:M point consumes less energy than 1:1
+        for (n, m) in [(1, 2), (2, 4), (2, 6), (4, 6), (4, 8), (4, 13)] {
+            assert!(normalized_energy(n, m) < 1.0, "{n}:{m}");
+        }
+    }
+
+    #[test]
+    fn energy_nj_linear() {
+        assert!((energy_nj(1.0, 500_000_000) - 1e6).abs() < 1.0);
+    }
+}

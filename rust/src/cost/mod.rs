@@ -1,0 +1,27 @@
+//! Synthesis-calibrated cost models (delay / power / area / energy).
+//!
+//! The paper reports post-synthesis numbers on ST 28nm FD-SOI (Synopsys
+//! DC). We cannot run a PDK here, so `pe` reproduces Table I through (a)
+//! an exact calibration table at the six published design points and (b)
+//! an analytic gate-composition formula — multiplier lanes, the M-to-N
+//! one-hot mux, the (N+1)-operand adder tree — fitted to those anchors
+//! for interpolation to other N:M. Area anchors come from the paper's
+//! Fig. 8 equal-area pair (conventional 32x32 = 0.50 mm^2, KAN-SAs 16x16
+//! 4:8 = 0.47 mm^2) and the 450 um^2 B-spline unit. See DESIGN.md
+//! "Substitutions".
+
+pub mod array;
+pub mod energy;
+pub mod pe;
+
+pub use array::array_area_mm2;
+pub use energy::normalized_energy;
+pub use pe::PeCost;
+
+/// Paper Sec. V-B: tabulation-based B-spline unit standard-cell area.
+pub const BSPLINE_UNIT_UM2: f64 = 450.0;
+
+/// FPMax single-precision FMA (paper's ArKANe area reference [24]).
+pub const FPMAX_FMA_MM2: f64 = 0.0081;
+/// FPMax FMA pipeline latency in cycles.
+pub const FPMAX_FMA_LATENCY: u64 = 4;

@@ -1,0 +1,162 @@
+//! PE delay / power / area model, calibrated to Table I.
+//!
+//! Table I (ST28nm FD-SOI, 8-bit inputs, 32-bit accumulate, 500 MHz):
+//!
+//! | N:M        | 1:1  | 1:2  | 2:4  | 2:6  | 4:6  | 4:8  |
+//! | delay (ns) | 1.02 | 1.05 | 1.15 | 1.19 | 1.28 | 1.31 |
+//! | power (mW) | 0.35 | 0.40 | 0.62 | 0.77 | 0.98 | 1.12 |
+//!
+//! The published points are returned exactly; other N:M use the analytic
+//! composition below (critical path = multiplier + mux stages + adder
+//! tree; power/area = per-block sums), whose parameters are fitted to
+//! the anchors (unit tests bound the residuals).
+
+use crate::arch::PeKind;
+
+/// Calibration table: (n, m, delay_ns, power_mw).
+const TABLE1: &[(usize, usize, f64, f64)] = &[
+    (1, 1, 1.02, 0.35),
+    (1, 2, 1.05, 0.40),
+    (2, 4, 1.15, 0.62),
+    (2, 6, 1.19, 0.77),
+    (4, 6, 1.28, 0.98),
+    (4, 8, 1.31, 1.12),
+];
+
+/// Analytic model parameters (fitted to TABLE1; see module docs).
+const DELAY_BASE_NS: f64 = 1.02; // int8 mult + 32-bit acc + reg setup
+const DELAY_ADDER_STAGE_NS: f64 = 0.085; // per extra adder-tree level
+const DELAY_MUX_STAGE_NS: f64 = 0.033; // per mux level (log2 M)
+
+const POWER_BASE_MW: f64 = 0.196; // accumulator + clocking
+const POWER_MULT_MW: f64 = 0.0845; // per multiplier lane
+const POWER_REG_MW: f64 = 0.0588; // per coefficient register
+const POWER_MUX_MW: f64 = 0.0037; // per mux crosspoint (n*m)
+
+const AREA_BASE_UM2: f64 = 287.0; // accumulator + control + output reg
+const AREA_MULT_UM2: f64 = 150.0; // 8-bit multiplier lane
+const AREA_REG_UM2: f64 = 12.0; // 8-bit coefficient register
+const AREA_MUX_UM2: f64 = 25.0; // mux crosspoint (n*m)
+
+fn log2_ceil(x: usize) -> u32 {
+    assert!(x >= 1);
+    usize::BITS - (x - 1).leading_zeros()
+}
+
+/// Cost of one PE.
+#[derive(Clone, Copy, Debug)]
+pub struct PeCost {
+    pub delay_ns: f64,
+    pub power_mw: f64,
+    pub area_um2: f64,
+}
+
+impl PeCost {
+    pub fn of(pe: PeKind) -> Self {
+        let (n, m) = match pe {
+            PeKind::Scalar => (1, 1),
+            PeKind::Vector { n, m } => (n, m),
+        };
+        Self::of_nm(n, m)
+    }
+
+    pub fn of_nm(n: usize, m: usize) -> Self {
+        assert!(n >= 1 && m >= n, "need M >= N >= 1, got {n}:{m}");
+        let area = area_model(n, m);
+        if let Some(&(_, _, d, p)) = TABLE1.iter().find(|&&(tn, tm, _, _)| tn == n && tm == m) {
+            return Self { delay_ns: d, power_mw: p, area_um2: area };
+        }
+        Self { delay_ns: delay_model(n, m), power_mw: power_model(n, m), area_um2: area }
+    }
+
+    /// Max clock frequency implied by the critical path.
+    pub fn fmax_mhz(&self) -> f64 {
+        1000.0 / self.delay_ns
+    }
+}
+
+/// Critical path: base MAC + extra adder-tree levels (N products + the
+/// incoming psum = N+1 operands) + mux select levels (log2 M).
+pub fn delay_model(n: usize, m: usize) -> f64 {
+    let extra_adder_levels = (log2_ceil(n + 1).saturating_sub(1)) as f64;
+    let mux_levels = log2_ceil(m) as f64;
+    DELAY_BASE_NS + DELAY_ADDER_STAGE_NS * extra_adder_levels + DELAY_MUX_STAGE_NS * mux_levels
+}
+
+/// Activity-based power at 500 MHz: per-block contributions.
+pub fn power_model(n: usize, m: usize) -> f64 {
+    POWER_BASE_MW
+        + POWER_MULT_MW * n as f64
+        + POWER_REG_MW * m as f64
+        + POWER_MUX_MW * (n * m) as f64
+}
+
+/// Standard-cell area: lanes + coefficient registers + mux crosspoints.
+pub fn area_model(n: usize, m: usize) -> f64 {
+    AREA_BASE_UM2
+        + AREA_MULT_UM2 * n as f64
+        + AREA_REG_UM2 * m as f64
+        + AREA_MUX_UM2 * (n * m) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_points_exact() {
+        for &(n, m, d, p) in TABLE1 {
+            let c = PeCost::of_nm(n, m);
+            assert_eq!(c.delay_ns, d, "{n}:{m} delay");
+            assert_eq!(c.power_mw, p, "{n}:{m} power");
+        }
+    }
+
+    #[test]
+    fn analytic_close_to_anchors() {
+        // the fitted formulas must stay near the published points so that
+        // interpolated N:M configs are credible
+        for &(n, m, d, p) in TABLE1 {
+            let dd = delay_model(n, m);
+            let pp = power_model(n, m);
+            assert!((dd - d).abs() / d < 0.06, "{n}:{m} delay {dd} vs {d}");
+            assert!((pp - p).abs() / p < 0.03, "{n}:{m} power {pp} vs {p}");
+        }
+    }
+
+    #[test]
+    fn delay_monotone_in_n_and_m() {
+        assert!(delay_model(2, 4) > delay_model(1, 2));
+        assert!(delay_model(4, 8) > delay_model(2, 8));
+        assert!(delay_model(4, 13) > delay_model(4, 8));
+    }
+
+    #[test]
+    fn scalar_area_anchor() {
+        // fitted so conventional 32x32 + 32 B-spline units ~ 0.50 mm^2
+        let a = PeCost::of(PeKind::Scalar).area_um2;
+        assert!((a - 474.0).abs() < 2.0, "scalar PE area {a}");
+    }
+
+    #[test]
+    fn vector_4_8_area_anchor() {
+        // fitted so KAN-SAs 16x16 4:8 + 16 units ~ 0.47 mm^2
+        let a = PeCost::of_nm(4, 8).area_um2;
+        assert!((1650.0..1950.0).contains(&a), "4:8 PE area {a}");
+    }
+
+    #[test]
+    fn meets_500mhz_at_all_table_points() {
+        for &(n, m, _, _) in TABLE1 {
+            // paper synthesizes at 500 MHz target; delays < 2 ns period
+            assert!(PeCost::of_nm(n, m).fmax_mhz() > 500.0);
+        }
+    }
+
+    #[test]
+    fn mnist_kan_4_13_extrapolation_sane() {
+        let c = PeCost::of_nm(4, 13);
+        assert!(c.delay_ns > 1.31 && c.delay_ns < 1.6);
+        assert!(c.power_mw > 1.12 && c.power_mw < 2.0);
+    }
+}

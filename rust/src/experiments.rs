@@ -1,0 +1,284 @@
+//! Experiment drivers: one function per paper table/figure, shared by the
+//! `kansas` CLI and the bench targets (DESIGN.md "experiment index").
+
+use crate::arch::ArrayConfig;
+use crate::arkane;
+use crate::cost::{array_area_mm2, normalized_energy, PeCost};
+use crate::report::{write_csv, AsciiPlot, Table};
+use crate::sim::{analytic, SimStats};
+use crate::sim::workload::Workload;
+use crate::workloads;
+
+/// Utilization for Figs. 7a/8 is measured over the *spline* GEMMs — the
+/// B-spline sparsity effect the figures isolate. (The paper's
+/// conventional-SA MNIST-KAN utilization of ~30% equals the 4/13 density
+/// bound exactly, which the dense base-term GEMMs would otherwise lift
+/// to ~35%.) Runtime (Fig. 7b) includes every GEMM, base terms and all.
+fn spline_util(cfg: &crate::arch::ArrayConfig, wls: &[Workload]) -> f64 {
+    let spline: Vec<Workload> =
+        wls.iter().filter(|w| w.kind.is_kan()).cloned().collect();
+    analytic::simulate_app(cfg, &spline).utilization()
+}
+
+/// Table I: PE delay / power / normalized energy across N:M points.
+pub fn table1() -> Table {
+    let points = [(1usize, 1usize), (1, 2), (2, 4), (2, 6), (4, 6), (4, 8)];
+    let mut t = Table::new(&["N:M", "Delay (ns)", "Power (mW)", "Norm. Energy", "Area (um^2)"])
+        .with_title("Table I — PE synthesis model (ST28nm anchors; 8-bit in, 32-bit acc, 500 MHz)");
+    for (n, m) in points {
+        let c = PeCost::of_nm(n, m);
+        t.row(vec![
+            if (n, m) == (1, 1) { "1:1 (scalar)".into() } else { format!("{n}:{m}") },
+            format!("{:.2}", c.delay_ns),
+            format!("{:.2}", c.power_mw),
+            format!("{:.2}", normalized_energy(n, m)),
+            format!("{:.0}", c.area_um2),
+        ]);
+    }
+    t
+}
+
+/// Table II: the collected KAN workloads.
+pub fn table2() -> Table {
+    let mut t = Table::new(&["Application", "Layers", "G", "P", "GEMMs", "MACs (dense)"])
+        .with_title("Table II — collected KAN workloads");
+    for app in workloads::table2() {
+        let wls = workloads::app_workloads(&app, workloads::DEFAULT_BS, None);
+        let layers = if app.name == "ResKAN18" {
+            "20 ConvKAN layers".to_string()
+        } else {
+            app.nets
+                .iter()
+                .map(|n| format!("{n:?}"))
+                .collect::<Vec<_>>()
+                .join(", ")
+        };
+        let macs: u64 = wls.iter().map(|w| w.dense_macs()).sum();
+        t.row(vec![
+            app.name.to_string(),
+            layers,
+            app.g.to_string(),
+            app.p.to_string(),
+            wls.len().to_string(),
+            macs.to_string(),
+        ]);
+    }
+    t
+}
+
+/// One point of the Fig. 7 design-space sweep.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub cfg: ArrayConfig,
+    pub area_mm2: f64,
+    /// Mean PE utilization across applications.
+    pub mean_util: f64,
+    /// Mean runtime (cycles) across applications.
+    pub mean_cycles: f64,
+}
+
+/// The array sizes swept in Fig. 7 (square points are the paper's
+/// markers; rectangular points fill the curve).
+pub fn fig7_sizes() -> Vec<(usize, usize)> {
+    vec![
+        (2, 2), (2, 4), (4, 4), (4, 8), (8, 8), (8, 16), (16, 16), (16, 32), (32, 32),
+    ]
+}
+
+/// Fig. 7 sweep for one PE family. `kan_sas = false` -> conventional
+/// scalar arrays; `true` -> 4:8 vector arrays (G=5, P=3 override, as the
+/// paper fixes).
+pub fn fig7_sweep(kan_sas: bool) -> Vec<SweepPoint> {
+    let apps = workloads::fig7_workloads();
+    fig7_sizes()
+        .into_iter()
+        .map(|(r, c)| {
+            let cfg = if kan_sas {
+                ArrayConfig::kan_sas(r, c, 4, 8)
+            } else {
+                ArrayConfig::conventional(r, c)
+            };
+            let per_app: Vec<SimStats> = apps
+                .iter()
+                .map(|(_, wls)| analytic::simulate_app(&cfg, wls))
+                .collect();
+            let mean_util = apps.iter().map(|(_, wls)| spline_util(&cfg, wls)).sum::<f64>()
+                / apps.len() as f64;
+            let mean_cycles =
+                per_app.iter().map(|s| s.cycles as f64).sum::<f64>() / per_app.len() as f64;
+            SweepPoint { cfg, area_mm2: array_area_mm2(&cfg), mean_util, mean_cycles }
+        })
+        .collect()
+}
+
+/// Render Fig. 7a (utilization vs area) and 7b (cycles vs area), write
+/// CSVs next to `out_dir`, and return the ASCII plots.
+pub fn fig7(out_dir: Option<&std::path::Path>) -> (String, String) {
+    let conv = fig7_sweep(false);
+    let kan = fig7_sweep(true);
+    let ua = AsciiPlot::new(
+        "Fig. 7a — avg PE utilization vs area (G=5, P=3, all apps except MNIST-KAN)",
+        "area mm^2",
+        "utilization",
+    )
+    .log_axes(true, false)
+    .series("conventional SA", 'o', conv.iter().map(|p| (p.area_mm2, p.mean_util)).collect())
+    .series("KAN-SAs", '#', kan.iter().map(|p| (p.area_mm2, p.mean_util)).collect());
+    let ub = AsciiPlot::new(
+        "Fig. 7b — avg runtime (cycles) vs area",
+        "area mm^2",
+        "cycles",
+    )
+    .log_axes(true, true)
+    .series("conventional SA", 'o', conv.iter().map(|p| (p.area_mm2, p.mean_cycles)).collect())
+    .series("KAN-SAs", '#', kan.iter().map(|p| (p.area_mm2, p.mean_cycles)).collect());
+
+    if let Some(dir) = out_dir {
+        let rows: Vec<Vec<String>> = conv
+            .iter()
+            .map(|p| ("conventional", p))
+            .chain(kan.iter().map(|p| ("kan_sas", p)))
+            .map(|(fam, p)| {
+                vec![
+                    fam.to_string(),
+                    p.cfg.rows.to_string(),
+                    p.cfg.cols.to_string(),
+                    format!("{:.6}", p.area_mm2),
+                    format!("{:.4}", p.mean_util),
+                    format!("{:.1}", p.mean_cycles),
+                ]
+            })
+            .collect();
+        let _ = write_csv(
+            &dir.join("fig7.csv"),
+            &["family", "rows", "cols", "area_mm2", "mean_util", "mean_cycles"],
+            &rows,
+        );
+    }
+    (ua.render(), ub.render())
+}
+
+/// Fig. 8: per-application utilization, KAN-SAs 16x16 (per-app N:M) vs
+/// conventional 32x32 — the paper's similar-area pair.
+pub fn fig8() -> (Table, f64, Vec<(String, f64, f64)>) {
+    let conv_cfg = ArrayConfig::conventional(32, 32);
+    let mut t = Table::new(&[
+        "Application", "conv 32x32 util %", "KAN-SAs 16x16 util %", "improvement pp",
+    ])
+    .with_title(format!(
+        "Fig. 8 — PE utilization (conventional {:.2} mm^2 vs KAN-SAs 4:8 {:.2} mm^2)",
+        array_area_mm2(&conv_cfg),
+        array_area_mm2(&ArrayConfig::kan_sas(16, 16, 4, 8))
+    )
+    .as_str());
+    let mut rows = Vec::new();
+    let mut improvements = Vec::new();
+    for (name, g, p, wls) in workloads::fig8_workloads() {
+        let kan_cfg = ArrayConfig::kan_sas(16, 16, p + 1, g + p);
+        let cu = spline_util(&conv_cfg, &wls);
+        let ku = spline_util(&kan_cfg, &wls);
+        improvements.push((ku - cu) * 100.0);
+        rows.push((name.clone(), cu, ku));
+        t.row(vec![
+            name,
+            format!("{:.1}", cu * 100.0),
+            format!("{:.1}", ku * 100.0),
+            format!("{:+.1}", (ku - cu) * 100.0),
+        ]);
+    }
+    let avg = improvements.iter().sum::<f64>() / improvements.len() as f64;
+    t.row(vec![
+        "AVERAGE".into(),
+        format!("{:.1}", rows.iter().map(|r| r.1).sum::<f64>() / rows.len() as f64 * 100.0),
+        format!("{:.1}", rows.iter().map(|r| r.2).sum::<f64>() / rows.len() as f64 * 100.0),
+        format!("{avg:+.1}"),
+    ]);
+    (t, avg, rows)
+}
+
+/// Sec. V-B: the ArKANe comparison.
+pub fn arkane_comparison() -> Table {
+    let mut t = Table::new(&[
+        "M inputs", "ArKANe cycles", "tab. units (equal area)", "tab. cycles", "speedup x",
+    ])
+    .with_title("Sec. V-B — B-spline evaluation: tabulation vs ArKANe (G=5, P=3, equal area)");
+    let units = arkane::units_in_arkane_area(3);
+    for m_in in [72u64, 720, 7_200, 72_000, 720_000] {
+        t.row(vec![
+            m_in.to_string(),
+            arkane::arkane_cycles(5, 3, m_in).to_string(),
+            units.to_string(),
+            arkane::tabulation_cycles(m_in, units).to_string(),
+            format!("{:.1}", arkane::equal_area_speedup(5, 3, m_in)),
+        ]);
+    }
+    t
+}
+
+/// Headline check used by tests and EXPERIMENTS.md: the equal-area cycle
+/// ratio between conventional and KAN-SAs at matched area (Fig. 7b's
+/// "~2x at the same area").
+pub fn equal_area_cycle_ratio() -> f64 {
+    // conventional 32x32 (0.50 mm^2) vs KAN-SAs 16x16 (0.47 mm^2)
+    let apps = workloads::fig7_workloads();
+    let conv = ArrayConfig::conventional(32, 32);
+    let kan = ArrayConfig::kan_sas(16, 16, 4, 8);
+    let c: f64 = apps.iter().map(|(_, w)| analytic::simulate_app(&conv, w).cycles as f64).sum();
+    let k: f64 = apps.iter().map(|(_, w)| analytic::simulate_app(&kan, w).cycles as f64).sum();
+    c / k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_renders_all_points() {
+        let s = table1().render();
+        for label in ["1:1 (scalar)", "1:2", "2:4", "2:6", "4:6", "4:8"] {
+            assert!(s.contains(label), "{label} missing:\n{s}");
+        }
+    }
+
+    #[test]
+    fn fig7_kan_dominates_everywhere() {
+        let conv = fig7_sweep(false);
+        let kan = fig7_sweep(true);
+        for (c, k) in conv.iter().zip(&kan) {
+            assert!(k.mean_util > c.mean_util, "{}", c.cfg.label());
+        }
+    }
+
+    #[test]
+    fn fig7_utilization_shrinks_with_array_size() {
+        // imperfect tiling bites harder as arrays grow (paper Fig. 7a trend)
+        let conv = fig7_sweep(false);
+        assert!(conv.first().unwrap().mean_util > conv.last().unwrap().mean_util);
+    }
+
+    #[test]
+    fn fig8_average_improvement_matches_paper_band() {
+        // paper: 39.9% average absolute improvement, max 69.3% (MNIST-KAN)
+        let (_t, avg, rows) = fig8();
+        assert!(avg > 25.0 && avg < 55.0, "avg improvement {avg}pp");
+        let mnist = rows.iter().find(|r| r.0 == "MNIST-KAN").unwrap();
+        let delta = (mnist.2 - mnist.1) * 100.0;
+        assert!(delta > 50.0, "MNIST-KAN improvement {delta}pp (paper: 69.3)");
+        // MNIST-KAN conventional utilization ~30% (4/13 bound)
+        assert!(mnist.1 < 0.31, "MNIST-KAN conv util {}", mnist.1);
+        assert!(mnist.2 > 0.9, "MNIST-KAN KAN-SAs util {}", mnist.2);
+    }
+
+    #[test]
+    fn equal_area_speedup_near_2x() {
+        // paper Fig. 7b: ~2x cycles reduction at equal area
+        let r = equal_area_cycle_ratio();
+        assert!(r > 1.5 && r < 3.0, "equal-area cycle ratio {r}");
+    }
+
+    #[test]
+    fn arkane_table_lists_72x() {
+        let s = arkane_comparison().render();
+        assert!(s.contains("72"), "{s}");
+    }
+}

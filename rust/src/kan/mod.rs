@@ -1,0 +1,14 @@
+//! The bit-exact integer KAN inference engine (the paper's accelerated
+//! datapath, executed functionally).
+//!
+//! Loads `.kanq` artifacts exported by `python/compile/aot.py` and runs
+//! integer-only inference: B-spline unit -> N:M spline GEMM -> integer
+//! ReLU base path -> fixed-point requantization, layer by layer. Every
+//! operation mirrors `python/compile/quantize.py`; the exported golden
+//! vectors must replay *exactly* (integration tests in `rust/tests/`).
+
+pub mod engine;
+pub mod model;
+
+pub use engine::Engine;
+pub use model::{LayerParams, QuantizedModel};

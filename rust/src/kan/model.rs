@@ -1,0 +1,156 @@
+//! Quantized KAN model: .kanq loading and parameter layout.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::bspline::Lut;
+use crate::tensor::Tensor;
+use crate::util::container::Container;
+use crate::util::json::Value;
+
+/// One quantized KAN layer's parameters.
+#[derive(Clone, Debug)]
+pub struct LayerParams {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub grid: usize,
+    pub degree: usize,
+    /// The B-spline unit's ROM (256 x (P+1) uint8 + scale).
+    pub lut: Lut,
+    /// Spline coefficients `(K, M, N)` int8.
+    pub coeff: Tensor<i8>,
+    /// Base-path weights `(K, N)` int8.
+    pub base: Tensor<i8>,
+    /// Requantization multipliers (fixed-point, SHIFT bits).
+    pub m1: i64,
+    pub m2: i64,
+    /// Float dequant scales (reporting only; classification never needs
+    /// floats).
+    pub s1: f64,
+    pub s2: f64,
+}
+
+impl LayerParams {
+    pub fn num_bases(&self) -> usize {
+        self.grid + self.degree
+    }
+}
+
+/// A stack of quantized KAN layers loaded from a `.kanq` artifact.
+#[derive(Clone, Debug)]
+pub struct QuantizedModel {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub layers: Vec<LayerParams>,
+}
+
+impl QuantizedModel {
+    pub fn load(path: &Path) -> Result<Self> {
+        let c = Container::open(path)?;
+        c.expect_magic(b"KANQ0001")?;
+        let h = &c.header;
+        let name = h.get("name").and_then(Value::as_str).context("name")?.to_string();
+        let dims: Vec<usize> = h
+            .get("dims")
+            .and_then(Value::as_arr)
+            .context("dims")?
+            .iter()
+            .map(|v| v.as_usize().context("dim"))
+            .collect::<Result<_>>()?;
+        let shift = h.get("shift").and_then(Value::as_i64).context("shift")?;
+        if shift != crate::quant::SHIFT as i64 {
+            bail!("artifact SHIFT {shift} != engine SHIFT {}", crate::quant::SHIFT);
+        }
+        let meta = h.get("layers").and_then(Value::as_arr).context("layers")?;
+        if meta.len() + 1 != dims.len() {
+            bail!("layer count {} inconsistent with dims {:?}", meta.len(), dims);
+        }
+
+        let mut layers = Vec::with_capacity(meta.len());
+        for (i, lm) in meta.iter().enumerate() {
+            let grid = lm.get("grid").and_then(Value::as_usize).context("grid")?;
+            let degree = lm.get("degree").and_then(Value::as_usize).context("degree")?;
+            let in_dim = lm.get("in_dim").and_then(Value::as_usize).context("in_dim")?;
+            let out_dim = lm.get("out_dim").and_then(Value::as_usize).context("out_dim")?;
+            let s_b = lm.get("s_b").and_then(Value::as_f64).context("s_b")?;
+
+            let (lut_raw, lut_shape) = c.u8(&format!("l{i}.lut"))?;
+            if lut_shape != [256, degree + 1] {
+                bail!("layer {i} lut shape {lut_shape:?}");
+            }
+            let (coeff_raw, cs) = c.i8(&format!("l{i}.coeff"))?;
+            if cs != [in_dim, grid + degree, out_dim] {
+                bail!("layer {i} coeff shape {cs:?}");
+            }
+            let (base_raw, bs) = c.i8(&format!("l{i}.base"))?;
+            if bs != [in_dim, out_dim] {
+                bail!("layer {i} base shape {bs:?}");
+            }
+            layers.push(LayerParams {
+                in_dim,
+                out_dim,
+                grid,
+                degree,
+                lut: Lut::from_raw(lut_raw, degree, s_b),
+                coeff: Tensor::from_vec(coeff_raw, &cs),
+                base: Tensor::from_vec(base_raw, &bs),
+                m1: lm.get("m1").and_then(Value::as_i64).context("m1")?,
+                m2: lm.get("m2").and_then(Value::as_i64).context("m2")?,
+                s1: lm.get("s1").and_then(Value::as_f64).context("s1")?,
+                s2: lm.get("s2").and_then(Value::as_f64).context("s2")?,
+            });
+        }
+        Ok(Self { name, dims, layers })
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.dims[0]
+    }
+
+    pub fn out_dim(&self) -> usize {
+        *self.dims.last().unwrap()
+    }
+
+    /// Total int8 parameters (coefficients + base weights).
+    pub fn num_params(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.coeff.len() + l.base.len())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifact(name: &str) -> Option<PathBuf> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(name);
+        p.exists().then_some(p)
+    }
+
+    #[test]
+    fn loads_quickstart_artifact() {
+        let Some(path) = artifact("quickstart_kan.kanq") else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = QuantizedModel::load(&path).unwrap();
+        assert_eq!(m.dims, vec![4, 8, 3]);
+        assert_eq!(m.layers.len(), 2);
+        assert_eq!(m.layers[0].grid, 5);
+        assert_eq!(m.layers[0].degree, 3);
+        assert!(m.num_params() > 0);
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        let Some(path) = artifact("quickstart_kan_golden.kgld") else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert!(QuantizedModel::load(&path).is_err());
+    }
+}

@@ -1,0 +1,37 @@
+//! # KAN-SAs — Kolmogorov-Arnold Networks on Systolic Arrays
+//!
+//! Reproduction of *"KAN-SAs: Efficient Acceleration of Kolmogorov-Arnold
+//! Networks on Systolic Arrays"* (Errabii, Sentieys, Traiola — CS.AR 2025).
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! * **L1 (python, build time)** — Pallas kernel implementing the paper's
+//!   tabulated, non-recursive B-spline evaluation; checked against a pure-jnp
+//!   Cox-de Boor oracle.
+//! * **L2 (python, build time)** — JAX KAN model (spline + base term) that
+//!   calls the L1 kernel and is AOT-lowered to HLO text in `artifacts/`.
+//! * **L3 (this crate, runtime)** — loads the artifacts through PJRT
+//!   ([`runtime`]), owns the bit-accurate integer inference engine
+//!   ([`kan`]), the cycle-level systolic-array simulator ([`sim`], [`arch`]),
+//!   the synthesis-calibrated cost models ([`cost`]), the workload registry
+//!   ([`workloads`]) and the serving coordinator ([`coordinator`]).
+//!
+//! Python never runs on the request path: after `make artifacts` the `kansas`
+//! binary and all examples are self-contained.
+
+pub mod bench;
+pub mod bspline;
+pub mod quant;
+pub mod tensor;
+pub mod arch;
+pub mod sim;
+pub mod cost;
+pub mod arkane;
+pub mod workloads;
+pub mod kan;
+pub mod runtime;
+pub mod coordinator;
+pub mod report;
+pub mod config;
+pub mod experiments;
+pub mod util;

@@ -1,0 +1,296 @@
+//! `kansas` — the KAN-SAs leader binary.
+//!
+//! Subcommands map one-to-one onto the paper's evaluation artifacts (see
+//! DESIGN.md's experiment index) plus the serving/simulation entrypoints:
+//!
+//! ```text
+//! kansas table1                    # Table I  — PE cost model
+//! kansas table2                    # Table II — workload registry
+//! kansas fig7 [--csv DIR]          # Fig. 7a/7b — design-space sweep
+//! kansas fig8                      # Fig. 8 — per-app utilization
+//! kansas arkane                    # Sec. V-B — B-spline vs ArKANe
+//! kansas accuracy [--model NAME]   # int8 vs fp32 accuracy (golden batch)
+//! kansas simulate [--rows R --cols C --pe N:M --bs B]   # one config
+//! kansas serve [--model NAME --requests N --max-batch B] # serving demo
+//! kansas quickstart                # minimal end-to-end smoke
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use kan_sas::arch::{ArrayConfig, WeightLoad};
+use kan_sas::config::{parse_pe, RunConfig};
+use kan_sas::coordinator::{BatchPolicy, Server, ServerConfig};
+use kan_sas::cost::array_area_mm2;
+use kan_sas::experiments;
+use kan_sas::kan::{Engine, QuantizedModel};
+use kan_sas::report::Table;
+use kan_sas::runtime::{FloatEngine, ModelArtifacts};
+use kan_sas::sim::analytic;
+use kan_sas::util::container::Container;
+use kan_sas::util::rng::Rng;
+use kan_sas::workloads;
+
+fn artifacts_dir() -> PathBuf {
+    std::env::var("KANSAS_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+/// Tiny argv reader: `--key value` pairs after the subcommand.
+struct Args {
+    rest: Vec<String>,
+}
+
+impl Args {
+    fn get(&self, key: &str) -> Option<&str> {
+        self.rest
+            .iter()
+            .position(|a| a == key)
+            .and_then(|i| self.rest.get(i + 1))
+            .map(|s| s.as_str())
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        self.rest.iter().any(|a| a == key)
+    }
+
+    fn parsed<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("bad value for {key}: '{v}'")),
+        }
+    }
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().map(|s| s.as_str()) else {
+        print_help();
+        return Ok(());
+    };
+    let args = Args { rest: argv[1..].to_vec() };
+    match cmd {
+        "table1" => print!("{}", experiments::table1().render()),
+        "table2" => print!("{}", experiments::table2().render()),
+        "fig7" => cmd_fig7(&args)?,
+        "fig8" => {
+            let (t, avg, _) = experiments::fig8();
+            print!("{}", t.render());
+            println!("average absolute utilization improvement: {avg:.1} pp (paper: 39.9)");
+            println!(
+                "equal-area cycle ratio (conv 32x32 / KAN-SAs 16x16): {:.2}x (paper: ~2x)",
+                experiments::equal_area_cycle_ratio()
+            );
+        }
+        "arkane" => print!("{}", experiments::arkane_comparison().render()),
+        "accuracy" => cmd_accuracy(&args)?,
+        "simulate" => cmd_simulate(&args)?,
+        "serve" => cmd_serve(&args)?,
+        "quickstart" => cmd_quickstart()?,
+        "help" | "--help" | "-h" => print_help(),
+        other => {
+            print_help();
+            bail!("unknown subcommand '{other}'");
+        }
+    }
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "kansas — KAN-SAs: Kolmogorov-Arnold Networks on systolic arrays\n\
+         \n\
+         experiments:   table1 | table2 | fig7 [--csv DIR] | fig8 | arkane\n\
+         validation:    accuracy [--model mnist_kan]\n\
+         simulation:    simulate [--rows R --cols C --pe N:M|scalar --bs B --counted-loads]\n\
+         serving:       serve [--model NAME --requests N --max-batch B --clients C]\n\
+         smoke:         quickstart\n\
+         \n\
+         --config FILE (json) applies to simulate/serve; artifacts are read\n\
+         from ./artifacts (override with KANSAS_ARTIFACTS)."
+    );
+}
+
+fn cmd_fig7(args: &Args) -> Result<()> {
+    let csv = args.get("--csv").map(PathBuf::from);
+    let (a, b) = experiments::fig7(csv.as_deref());
+    println!("{a}");
+    println!("{b}");
+    if let Some(dir) = csv {
+        println!("wrote {}", dir.join("fig7.csv").display());
+    }
+    Ok(())
+}
+
+fn load_run_config(args: &Args) -> Result<RunConfig> {
+    match args.get("--config") {
+        Some(p) => RunConfig::load(std::path::Path::new(p)),
+        None => Ok(RunConfig::default()),
+    }
+}
+
+fn cmd_accuracy(args: &Args) -> Result<()> {
+    let model = args.get("--model").unwrap_or("mnist_kan");
+    let dir = artifacts_dir();
+    let qm = QuantizedModel::load(&dir.join(format!("{model}.kanq")))
+        .context("run `make artifacts` first")?;
+    let engine = Engine::new(qm);
+    let golden = Container::open(&dir.join(format!("{model}_golden.kgld")))?;
+    let (x_q, xs) = golden.u8("x_q")?;
+    let (labels, _) = golden.i32("labels")?;
+    let fwd = engine.forward_from_q(&x_q, xs[0])?;
+    let correct = fwd
+        .predictions()
+        .iter()
+        .zip(&labels)
+        .filter(|&(&p, &l)| p as i32 == l)
+        .count();
+    println!(
+        "{model}: int8 accuracy on the golden batch: {}/{} = {:.2}%",
+        correct,
+        labels.len(),
+        100.0 * correct as f64 / labels.len() as f64
+    );
+    // full quant metrics from the python export, if present
+    if let Ok(text) = std::fs::read_to_string(dir.join("quant_metrics.json")) {
+        if let Ok(v) = kan_sas::util::json::Value::parse(&text) {
+            if let Some(m) = v.get(model) {
+                let fp = m.get("fp32_test_acc").and_then(|x| x.as_f64()).unwrap_or(0.0);
+                let i8a = m.get("int8_test_acc").and_then(|x| x.as_f64()).unwrap_or(0.0);
+                println!(
+                    "full test set (from build): fp32 {:.2}%  int8 {:.2}%  drop {:.2}pp (paper target: <1pp)",
+                    fp * 100.0,
+                    i8a * 100.0,
+                    (fp - i8a) * 100.0
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let base = load_run_config(args)?;
+    let rows = args.parsed("--rows", base.array.rows)?;
+    let cols = args.parsed("--cols", base.array.cols)?;
+    let pe = match args.get("--pe") {
+        Some(s) => parse_pe(s)?,
+        None => base.array.pe,
+    };
+    let bs = args.parsed("--bs", base.batch_size)?;
+    let weight_load =
+        if args.flag("--counted-loads") { WeightLoad::Counted } else { base.array.weight_load };
+    let cfg = ArrayConfig { rows, cols, pe, weight_load };
+
+    let mut t = Table::new(&[
+        "Application", "GEMMs", "cycles", "util %", "useful MACs",
+    ])
+    .with_title(format!(
+        "simulate — {} ({:.3} mm^2), BS={bs}",
+        cfg.label(),
+        array_area_mm2(&cfg)
+    )
+    .as_str());
+    for app in workloads::table2() {
+        let wls = workloads::app_workloads(&app, bs, None);
+        let compatible = wls.iter().all(|w| analytic::compatible(&cfg, w));
+        if !compatible {
+            t.row(vec![
+                app.name.to_string(),
+                wls.len().to_string(),
+                "-".into(),
+                "needs matching N:M".into(),
+                "-".into(),
+            ]);
+            continue;
+        }
+        let s = analytic::simulate_app(&cfg, &wls);
+        t.row(vec![
+            app.name.to_string(),
+            wls.len().to_string(),
+            s.cycles.to_string(),
+            format!("{:.1}", s.utilization() * 100.0),
+            s.useful_macs.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let base = load_run_config(args)?;
+    let model = args.get("--model").unwrap_or("mnist_kan");
+    let requests: usize = args.parsed("--requests", 256)?;
+    let clients: usize = args.parsed("--clients", 4)?;
+    let max_batch: usize = args.parsed("--max-batch", base.policy.max_batch)?;
+    let dir = artifacts_dir();
+    let qm = QuantizedModel::load(&dir.join(format!("{model}.kanq")))
+        .context("run `make artifacts` first")?;
+    let in_dim = qm.in_dim();
+    let engine = Engine::new(qm);
+    let server = Server::start(
+        engine,
+        ServerConfig {
+            policy: BatchPolicy { max_batch, ..base.policy },
+            sim_array: base.array,
+        },
+    );
+    let t0 = std::time::Instant::now();
+    let per_client = requests / clients;
+    let mut threads = Vec::new();
+    for c in 0..clients {
+        let h = server.handle();
+        threads.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(c as u64);
+            for _ in 0..per_client {
+                let x: Vec<f32> = (0..in_dim).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+                h.infer(&x).expect("infer");
+            }
+        }));
+    }
+    for th in threads {
+        th.join().unwrap();
+    }
+    let wall = t0.elapsed();
+    let metrics = server.shutdown();
+    let lat = metrics.latency().context("no requests recorded")?;
+    println!("serve — model {model}, {clients} clients x {per_client} requests, max_batch {max_batch}");
+    println!(
+        "throughput: {:.0} req/s   mean batch {:.1}   batches {}",
+        (per_client * clients) as f64 / wall.as_secs_f64(),
+        metrics.mean_batch_size(),
+        metrics.batches
+    );
+    println!(
+        "latency us: mean {:.0}  p50 {}  p95 {}  p99 {}  max {}",
+        lat.mean_us, lat.p50_us, lat.p95_us, lat.p99_us, lat.max_us
+    );
+    println!(
+        "simulated accelerator: {} cycles total on {} ({:.3} mm^2)",
+        metrics.sim_cycles,
+        base.array.label(),
+        array_area_mm2(&base.array)
+    );
+    Ok(())
+}
+
+fn cmd_quickstart() -> Result<()> {
+    let dir = artifacts_dir();
+    let qm = QuantizedModel::load(&dir.join("quickstart_kan.kanq"))
+        .context("run `make artifacts` first")?;
+    let engine = Engine::new(qm);
+    let x = vec![0.25f32, -0.5, 0.75, 0.1];
+    let fwd = engine.forward(&x, 1)?;
+    println!("int8 engine prediction: class {}", fwd.predictions()[0]);
+
+    let client = xla::PjRtClient::cpu()?;
+    let art = ModelArtifacts::new(&dir, "quickstart_kan");
+    let fe = FloatEngine::load(&client, &art, 1)?;
+    let logits = fe.execute(&x)?;
+    println!("pjrt fp32 logits: {logits:?}");
+    println!("pjrt fp32 prediction: class {}", fe.predictions(&logits)[0]);
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,132 @@
+//! Affine integer quantization — the rust half of the bit-exact integer
+//! pipeline specified in `python/compile/quantize.py` (Jacob et al. [18]
+//! style, as the paper's Sec. V uses).
+//!
+//! Conventions (shared with python, asserted by golden tests):
+//! * activations: uint8, zero-point 128, scale 1/128 over the spline
+//!   domain `[-1, 127/128]`;
+//! * weights: int8 symmetric per-tensor;
+//! * accumulation: i32 (u8 x i8 products), i64 after requant multipliers;
+//! * requantization: `y_q = clamp(128 + (t + 2^(SHIFT-1)) >> SHIFT)` with
+//!   SHIFT = 24 and per-layer integer multipliers m1/m2.
+
+use crate::util::round_clamp;
+
+/// Activation zero point (the quantized value of x = 0).
+pub const ZP: i64 = 128;
+/// Requantization fixed-point shift.
+pub const SHIFT: u32 = 24;
+
+/// Float (spline-domain) activation -> uint8.
+pub fn quantize_activation(x: f32) -> u8 {
+    round_clamp(x as f64 * 128.0 + ZP as f64, 0, 255) as u8
+}
+
+/// uint8 activation -> float.
+pub fn dequantize_activation(q: u8) -> f32 {
+    (q as f32 - ZP as f32) / 128.0
+}
+
+pub fn quantize_activations(xs: &[f32]) -> Vec<u8> {
+    xs.iter().map(|&x| quantize_activation(x)).collect()
+}
+
+/// Symmetric per-tensor int8 quantization; returns (values, scale).
+pub fn quantize_symmetric(w: &[f32]) -> (Vec<i8>, f32) {
+    let amax = w.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    let scale = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+    let q = w
+        .iter()
+        .map(|&x| round_clamp((x / scale) as f64, -127, 127) as i8)
+        .collect();
+    (q, scale)
+}
+
+/// Integer ReLU around the zero point: uint8 -> [0, 127] at scale 1/128.
+pub fn relu_q(x_q: u8) -> u8 {
+    x_q.saturating_sub(ZP as u8)
+}
+
+/// The fixed-point requantization of [18]: i64 accumulator -> next-layer
+/// uint8 activation. Arithmetic shift implements floor division by 2^SHIFT
+/// (matching numpy's `>>` on int64).
+pub fn requantize(t: i64) -> u8 {
+    let y = (t + (1i64 << (SHIFT - 1))) >> SHIFT;
+    (y + ZP).clamp(0, 255) as u8
+}
+
+/// Build the per-layer requant multiplier: `round(scale * 128 * 2^SHIFT)`.
+/// (`scale` is the float factor that dequantizes the i32 accumulator.)
+pub fn requant_multiplier(scale: f64) -> i64 {
+    crate::util::round_half_even(scale * 128.0 * (1u64 << SHIFT) as f64) as i64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{check, Rng};
+
+    #[test]
+    fn activation_anchors() {
+        assert_eq!(quantize_activation(0.0), 128);
+        assert_eq!(quantize_activation(-1.0), 0);
+        assert_eq!(quantize_activation(1.0), 255);
+        assert_eq!(quantize_activation(-2.0), 0); // saturates
+        assert_eq!(quantize_activation(0.5), 192);
+    }
+
+    #[test]
+    fn activation_roundtrip_error_bounded() {
+        check(200, 5, |rng: &mut Rng| {
+            let x = rng.uniform(-1.0, 127.0 / 128.0) as f32;
+            let err = (dequantize_activation(quantize_activation(x)) - x).abs();
+            assert!(err <= 0.5 / 128.0 + 1e-6, "x={x} err={err}");
+        });
+    }
+
+    #[test]
+    fn symmetric_roundtrip_error_bounded() {
+        check(50, 6, |rng: &mut Rng| {
+            let w: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+            let (q, s) = quantize_symmetric(&w);
+            for (&qi, &wi) in q.iter().zip(&w) {
+                assert!((qi as f32 * s - wi).abs() <= s / 2.0 + 1e-6);
+            }
+        });
+    }
+
+    #[test]
+    fn symmetric_zero_tensor() {
+        let (q, s) = quantize_symmetric(&[0.0; 8]);
+        assert!(q.iter().all(|&x| x == 0));
+        assert_eq!(s, 1.0);
+    }
+
+    #[test]
+    fn relu_q_anchors() {
+        assert_eq!(relu_q(0), 0);
+        assert_eq!(relu_q(128), 0);
+        assert_eq!(relu_q(129), 1);
+        assert_eq!(relu_q(255), 127);
+    }
+
+    #[test]
+    fn requantize_matches_python_spec() {
+        // mirrors python/tests/test_quantize.py::test_requantize_rounding
+        assert_eq!(requantize(0), 128);
+        assert_eq!(requantize(1i64 << SHIFT), 129);
+        assert_eq!(requantize(-(1i64 << SHIFT)), 127);
+        // saturation
+        assert_eq!(requantize(1i64 << 62), 255);
+        assert_eq!(requantize(-(1i64 << 62)), 0);
+    }
+
+    #[test]
+    fn requantize_floor_division_negative() {
+        // numpy >> is floor division; check a value just below a boundary
+        let t = -(1i64 << (SHIFT - 1)) - 1; // rounds to -1 after shift
+        assert_eq!(requantize(t), 127);
+        let t2 = -(1i64 << (SHIFT - 1)); // exactly -0.5: (t + half) >> s == 0
+        assert_eq!(requantize(t2), 128);
+    }
+}

@@ -1,0 +1,23 @@
+//! Result rendering: ASCII tables, CSV emission, and terminal scatter
+//! plots for the paper's figures.
+
+pub mod plot;
+pub mod table;
+
+pub use plot::AsciiPlot;
+pub use table::Table;
+
+/// Write CSV rows (header + data) to a file, creating parent dirs.
+pub fn write_csv(path: &std::path::Path, header: &[&str], rows: &[Vec<String>]) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut out = String::new();
+    out.push_str(&header.join(","));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&row.join(","));
+        out.push('\n');
+    }
+    std::fs::write(path, out)
+}

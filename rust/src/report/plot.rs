@@ -1,0 +1,143 @@
+//! ASCII scatter/line plots for the figure benches (Figs. 7a/7b style:
+//! two series over a shared x axis).
+
+pub struct AsciiPlot {
+    width: usize,
+    height: usize,
+    title: String,
+    x_label: String,
+    y_label: String,
+    series: Vec<(String, char, Vec<(f64, f64)>)>,
+    log_x: bool,
+    log_y: bool,
+}
+
+impl AsciiPlot {
+    pub fn new(title: &str, x_label: &str, y_label: &str) -> Self {
+        Self {
+            width: 72,
+            height: 20,
+            title: title.to_string(),
+            x_label: x_label.to_string(),
+            y_label: y_label.to_string(),
+            series: Vec::new(),
+            log_x: false,
+            log_y: false,
+        }
+    }
+
+    pub fn log_axes(mut self, x: bool, y: bool) -> Self {
+        self.log_x = x;
+        self.log_y = y;
+        self
+    }
+
+    pub fn series(mut self, name: &str, marker: char, pts: Vec<(f64, f64)>) -> Self {
+        self.series.push((name.to_string(), marker, pts));
+        self
+    }
+
+    fn tx(&self, x: f64) -> f64 {
+        if self.log_x { x.max(1e-12).log10() } else { x }
+    }
+
+    fn ty(&self, y: f64) -> f64 {
+        if self.log_y { y.max(1e-12).log10() } else { y }
+    }
+
+    pub fn render(&self) -> String {
+        let all: Vec<(f64, f64)> = self
+            .series
+            .iter()
+            .flat_map(|(_, _, pts)| pts.iter().map(|&(x, y)| (self.tx(x), self.ty(y))))
+            .collect();
+        if all.is_empty() {
+            return format!("{} (no data)\n", self.title);
+        }
+        let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+        let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &(x, y) in &all {
+            x0 = x0.min(x);
+            x1 = x1.max(x);
+            y0 = y0.min(y);
+            y1 = y1.max(y);
+        }
+        if (x1 - x0).abs() < 1e-12 {
+            x1 = x0 + 1.0;
+        }
+        if (y1 - y0).abs() < 1e-12 {
+            y1 = y0 + 1.0;
+        }
+        let mut grid = vec![vec![' '; self.width]; self.height];
+        for (_, marker, pts) in &self.series {
+            for &(x, y) in pts {
+                let (x, y) = (self.tx(x), self.ty(y));
+                let cx = ((x - x0) / (x1 - x0) * (self.width - 1) as f64).round() as usize;
+                let cy = ((y - y0) / (y1 - y0) * (self.height - 1) as f64).round() as usize;
+                grid[self.height - 1 - cy][cx] = *marker;
+            }
+        }
+        let mut out = format!("{}\n", self.title);
+        for (i, row) in grid.iter().enumerate() {
+            let label = if i == 0 {
+                format!("{:>9.3} ", if self.log_y { 10f64.powf(y1) } else { y1 })
+            } else if i == self.height - 1 {
+                format!("{:>9.3} ", if self.log_y { 10f64.powf(y0) } else { y0 })
+            } else {
+                " ".repeat(10)
+            };
+            out.push_str(&label);
+            out.push('|');
+            out.push_str(&row.iter().collect::<String>());
+            out.push('\n');
+        }
+        out.push_str(&" ".repeat(10));
+        out.push('+');
+        out.push_str(&"-".repeat(self.width));
+        out.push('\n');
+        out.push_str(&format!(
+            "{:>10} {:<30} {:>38}\n",
+            "",
+            format!(
+                "{} = {:.3}",
+                self.x_label,
+                if self.log_x { 10f64.powf(x0) } else { x0 }
+            ),
+            format!("{:.3} ({})", if self.log_x { 10f64.powf(x1) } else { x1 }, self.y_label)
+        ));
+        for (name, marker, _) in &self.series {
+            out.push_str(&format!("{:>12} {} {}\n", "", marker, name));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_both_series() {
+        let p = AsciiPlot::new("t", "x", "y")
+            .series("a", 'o', vec![(1.0, 1.0), (2.0, 2.0)])
+            .series("b", 'x', vec![(1.0, 2.0), (2.0, 4.0)]);
+        let s = p.render();
+        assert!(s.contains('o') && s.contains('x'));
+        assert!(s.contains("o a") && s.contains("x b"));
+    }
+
+    #[test]
+    fn empty_plot_safe() {
+        let s = AsciiPlot::new("t", "x", "y").render();
+        assert!(s.contains("no data"));
+    }
+
+    #[test]
+    fn log_axes_do_not_panic() {
+        let s = AsciiPlot::new("t", "x", "y")
+            .log_axes(true, true)
+            .series("a", '*', vec![(0.1, 10.0), (100.0, 1000.0)])
+            .render();
+        assert!(s.contains('*'));
+    }
+}

@@ -1,0 +1,127 @@
+//! PJRT execution engine for the AOT fp32 forward pass.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::container::Container;
+use crate::util::json::Value;
+
+/// Locations of one model's AOT artifacts.
+#[derive(Clone, Debug)]
+pub struct ModelArtifacts {
+    pub name: String,
+    pub dir: PathBuf,
+}
+
+impl ModelArtifacts {
+    pub fn new(dir: &Path, name: &str) -> Self {
+        Self { name: name.to_string(), dir: dir.to_path_buf() }
+    }
+
+    pub fn hlo_path(&self, batch: usize) -> PathBuf {
+        self.dir.join(format!("{}_b{}.hlo.txt", self.name, batch))
+    }
+
+    pub fn weights_path(&self) -> PathBuf {
+        self.dir.join(format!("{}.kwts", self.name))
+    }
+
+    /// Batch sizes with an exported HLO module.
+    pub fn available_batches(&self) -> Result<Vec<usize>> {
+        let c = Container::open(&self.weights_path())?;
+        c.expect_magic(b"KWTS0001")?;
+        c.header
+            .get("batch_sizes")
+            .and_then(Value::as_arr)
+            .context("batch_sizes")?
+            .iter()
+            .map(|v| v.as_usize().context("batch size"))
+            .collect()
+    }
+}
+
+/// A compiled fp32 forward for one static batch size, weights resident.
+pub struct FloatEngine {
+    exe: xla::PjRtLoadedExecutable,
+    /// Weight literals in the recorded parameter order (input appended
+    /// per call).
+    weights: Vec<xla::Literal>,
+    pub batch: usize,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub name: String,
+}
+
+impl FloatEngine {
+    /// Compile `artifacts/<name>_b<batch>.hlo.txt` on the PJRT CPU client
+    /// and upload the `.kwts` weights.
+    pub fn load(client: &xla::PjRtClient, art: &ModelArtifacts, batch: usize) -> Result<Self> {
+        let hlo = art.hlo_path(batch);
+        if !hlo.exists() {
+            bail!("missing {} (run `make artifacts`)", hlo.display());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo.to_str().context("non-utf8 path")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+
+        let wts = Container::open(&art.weights_path())?;
+        wts.expect_magic(b"KWTS0001")?;
+        let order: Vec<String> = wts
+            .header
+            .get("order")
+            .and_then(Value::as_arr)
+            .context("order")?
+            .iter()
+            .map(|v| Ok(v.as_str().context("order entry")?.to_string()))
+            .collect::<Result<_>>()?;
+        let mut weights = Vec::with_capacity(order.len());
+        let mut in_dim = 0usize;
+        let mut out_dim = 0usize;
+        for name in &order {
+            let (data, shape) = wts.f32(name)?;
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(&data).reshape(&dims)?;
+            // first layer coeff (K, M, N) fixes in_dim; last base (K, N)
+            // fixes out_dim
+            if name == "l0.coeff" {
+                in_dim = shape[0];
+            }
+            if name.ends_with(".base") {
+                out_dim = shape[1];
+            }
+            weights.push(lit);
+        }
+        Ok(Self { exe, weights, batch, in_dim, out_dim, name: art.name.clone() })
+    }
+
+    /// Execute one batch: `x` is `(batch, in_dim)` row-major fp32; returns
+    /// `(batch, out_dim)` logits.
+    pub fn execute(&self, x: &[f32]) -> Result<Vec<f32>> {
+        if x.len() != self.batch * self.in_dim {
+            bail!("input len {} != {}x{}", x.len(), self.batch, self.in_dim);
+        }
+        let xl = xla::Literal::vec1(x).reshape(&[self.batch as i64, self.in_dim as i64])?;
+        let mut args: Vec<&xla::Literal> = self.weights.iter().collect();
+        args.push(&xl);
+        let result = self.exe.execute(&args)?[0][0].to_literal_sync()?;
+        // the module was lowered with return_tuple=True
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    pub fn predictions(&self, logits: &[f32]) -> Vec<usize> {
+        logits
+            .chunks_exact(self.out_dim)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap()
+            })
+            .collect()
+    }
+}

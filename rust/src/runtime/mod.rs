@@ -1,0 +1,13 @@
+//! PJRT runtime: load the AOT-lowered HLO text and execute the fp32 KAN
+//! forward from rust — python never runs on this path.
+//!
+//! The interchange is **HLO text** (not serialized `HloModuleProto`):
+//! jax >= 0.5 emits protos with 64-bit instruction ids which the image's
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids. Weights
+//! and per-layer B-spline LUTs are explicit leading parameters whose
+//! order is recorded in the `.kwts` container — the runtime uploads them
+//! once and reuses them for every batch.
+
+pub mod engine;
+
+pub use engine::{FloatEngine, ModelArtifacts};

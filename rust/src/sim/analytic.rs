@@ -1,0 +1,166 @@
+//! Closed-form simulation — the fast path for the design-space sweeps.
+//!
+//! Cycle and lane-slot counts are *identical* to the event-exact
+//! [`super::cycle`] engine (property-tested in `rust/tests/`); useful-MAC
+//! counts use the exact N:M expectation (all P+1 window values non-zero),
+//! which the cycle engine confirms to within the ~1/256 LUT-row-0 effect.
+
+use crate::arch::{ArrayConfig, PeKind, WeightLoad};
+use crate::sim::stats::SimStats;
+use crate::sim::workload::{GemmKind, Workload};
+
+/// Tiles needed to cover `dim` with tiles of `size`.
+pub fn tiles(dim: usize, size: usize) -> u64 {
+    dim.div_ceil(size) as u64
+}
+
+/// Reduction-dimension tile count for this (array, workload) pair.
+fn k_tiles(cfg: &ArrayConfig, wl: &Workload) -> u64 {
+    match (cfg.pe, wl.kind) {
+        (PeKind::Scalar, _) => tiles(wl.expanded_reduction(), cfg.rows),
+        // one feature per PE row; the M-wide basis lives in the registers
+        (PeKind::Vector { .. }, GemmKind::KanSpline { .. }) => tiles(wl.k_feats, cfg.rows),
+        (PeKind::Vector { n, .. }, GemmKind::Dense) => tiles(wl.k_feats, cfg.rows * n),
+    }
+}
+
+/// Coefficient rows loaded per tile (the `Counted` policy's cost).
+fn load_rows(cfg: &ArrayConfig, wl: &Workload) -> u64 {
+    match (cfg.pe, wl.kind) {
+        (PeKind::Scalar, _) => cfg.rows as u64,
+        (PeKind::Vector { m, .. }, GemmKind::KanSpline { .. }) => (cfg.rows * m) as u64,
+        (PeKind::Vector { n, .. }, GemmKind::Dense) => (cfg.rows * n) as u64,
+    }
+}
+
+/// Check that a vector-PE array can execute a workload directly (the mux
+/// depth and lane count are design-time parameters fixed to the layer's
+/// N = P+1, M = G+P, Sec. IV-B).
+pub fn compatible(cfg: &ArrayConfig, wl: &Workload) -> bool {
+    match (cfg.pe, wl.kind) {
+        (PeKind::Scalar, _) => true,
+        (PeKind::Vector { .. }, GemmKind::Dense) => true,
+        (PeKind::Vector { n, m }, GemmKind::KanSpline { g, p }) => n == p + 1 && m == g + p,
+    }
+}
+
+/// Closed-form stats for one workload on one array.
+pub fn simulate(cfg: &ArrayConfig, wl: &Workload) -> SimStats {
+    assert!(
+        compatible(cfg, wl),
+        "array {} cannot execute workload {} directly",
+        cfg.label(),
+        wl.name
+    );
+    let kt = k_tiles(cfg, wl);
+    let nt = tiles(wl.n_out, cfg.cols);
+    let stream = (wl.bs + cfg.rows + cfg.cols - 2) as u64;
+    let load = match cfg.weight_load {
+        WeightLoad::Amortized => 0,
+        WeightLoad::Counted => load_rows(cfg, wl),
+    };
+    let tiles_total = kt * nt;
+    let cycles = tiles_total * (stream + load);
+    SimStats {
+        cycles,
+        // utilization denominator: lanes during the BS streaming window
+        active_slots: cfg.lanes() as u64 * wl.bs as u64 * tiles_total,
+        useful_macs: wl.useful_macs(),
+        tiles: tiles_total,
+    }
+}
+
+/// Simulate a list of workloads (an application) and aggregate.
+pub fn simulate_app(cfg: &ArrayConfig, workloads: &[Workload]) -> SimStats {
+    let mut total = SimStats::default();
+    for wl in workloads {
+        total += simulate(cfg, wl);
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiles_ceil() {
+        assert_eq!(tiles(10, 4), 3);
+        assert_eq!(tiles(8, 4), 2);
+        assert_eq!(tiles(1, 16), 1);
+    }
+
+    #[test]
+    fn scalar_vs_vector_cycle_ratio_is_m() {
+        // the paper's Table I note: a scalar PE array needs (G+P)x more
+        // cycles than the N:M array on the same KAN workload (exact when
+        // the tiling divides evenly)
+        let (g, p) = (3usize, 3usize); // M = 6, N = 4
+        let wl = Workload::kan("w", 64, 24, 8, g, p);
+        let conv = simulate(&ArrayConfig::conventional(8, 8), &wl);
+        let kan = simulate(&ArrayConfig::kan_sas(8, 8, p + 1, g + p), &wl);
+        assert_eq!(conv.cycles, (g + p) as u64 * kan.cycles);
+    }
+
+    #[test]
+    fn utilization_bounds() {
+        let wl = Workload::kan("w", 32, 22, 10, 5, 3);
+        for cfg in [
+            ArrayConfig::conventional(4, 4),
+            ArrayConfig::conventional(32, 32),
+            ArrayConfig::kan_sas(16, 16, 4, 8),
+        ] {
+            if compatible(&cfg, &wl) {
+                let s = simulate(&cfg, &wl);
+                let u = s.utilization();
+                assert!(u > 0.0 && u <= 1.0, "{}: {u}", cfg.label());
+            }
+        }
+    }
+
+    #[test]
+    fn conventional_utilization_upper_bounded_by_density() {
+        let wl = Workload::kan("w", 1024, 64, 64, 10, 3); // density 4/13
+        let s = simulate(&ArrayConfig::conventional(8, 8), &wl);
+        assert!(s.utilization() <= 4.0 / 13.0 + 1e-9);
+        assert!(s.utilization() > 0.25); // big workload: tiling loss small
+    }
+
+    #[test]
+    fn kansas_utilization_approaches_one() {
+        let wl = Workload::kan("w", 2048, 64, 64, 5, 3);
+        let s = simulate(&ArrayConfig::kan_sas(16, 16, 4, 8), &wl);
+        assert!(s.utilization() > 0.9, "{}", s.utilization());
+    }
+
+    #[test]
+    fn incompatible_rejected() {
+        let wl = Workload::kan("w", 4, 4, 4, 10, 3); // needs 4:13
+        assert!(!compatible(&ArrayConfig::kan_sas(4, 4, 4, 8), &wl));
+        assert!(compatible(&ArrayConfig::kan_sas(4, 4, 4, 13), &wl));
+        assert!(compatible(&ArrayConfig::conventional(4, 4), &wl));
+    }
+
+    #[test]
+    fn dense_on_vector_covers_n_rows_per_pe() {
+        let wl = Workload::dense("d", 16, 64, 8);
+        let conv = simulate(&ArrayConfig::conventional(8, 8), &wl);
+        let kan = simulate(&ArrayConfig::kan_sas(8, 8, 4, 8), &wl);
+        // 64 rows: scalar needs 8 k-tiles, vector 2 — 4x fewer
+        assert_eq!(conv.tiles, 8);
+        assert_eq!(kan.tiles, 2);
+        assert_eq!(conv.useful_macs, kan.useful_macs);
+    }
+
+    #[test]
+    fn app_aggregation_adds() {
+        let wls = vec![
+            Workload::kan("a", 8, 4, 4, 5, 3),
+            Workload::dense("b", 8, 16, 4),
+        ];
+        let cfg = ArrayConfig::kan_sas(4, 4, 4, 8);
+        let total = simulate_app(&cfg, &wls);
+        let sum: u64 = wls.iter().map(|w| simulate(&cfg, w).cycles).sum();
+        assert_eq!(total.cycles, sum);
+    }
+}

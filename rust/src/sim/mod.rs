@@ -1,0 +1,28 @@
+//! Cycle-level simulation of KAN GEMM workloads on weight-stationary
+//! systolic arrays (paper Sec. V-C methodology).
+//!
+//! Two engines share one set of definitions:
+//!
+//! * [`cycle`] — event-exact: streams actual (quantized) activation data
+//!   through functional PEs tile by tile, counting per-lane useful MACs
+//!   and cycles. The ground truth; used by tests and small workloads.
+//! * [`analytic`] — closed-form counts with a density parameter; matches
+//!   `cycle` exactly on cycles/slots (property-tested) and is what the
+//!   design-space sweeps (Figs. 7-8) run, since ResKAN18-scale workloads
+//!   make per-event simulation unnecessary.
+//!
+//! Definitions (used consistently everywhere):
+//! * a *lane-slot* is one multiplier lane for one active cycle;
+//! * a MAC is *useful* iff its activation operand is non-zero and it
+//!   falls inside the unpadded region of the tile;
+//! * utilization = useful MACs / lane-slots — the paper's "computations
+//!   involving non-zero B-spline activations" per PE resource.
+
+pub mod analytic;
+pub mod cycle;
+pub mod stats;
+pub mod synth;
+pub mod workload;
+
+pub use stats::SimStats;
+pub use workload::{GemmKind, Workload};

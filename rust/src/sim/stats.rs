@@ -1,0 +1,76 @@
+//! Simulation statistics and aggregation.
+
+use std::ops::AddAssign;
+
+/// Counts from simulating one or more workloads on one array config.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SimStats {
+    /// Total clock cycles the array was busy (streaming + fill/drain
+    /// skew + optional weight loads): the *runtime* metric of Fig. 7b.
+    pub cycles: u64,
+    /// Multiplier-lane slots during the active streaming window
+    /// (lanes * BS per tile): the *utilization* denominator of Figs.
+    /// 7a/8. Fill/drain skew counts toward runtime but not utilization —
+    /// matching the paper, whose conventional-SA MNIST-KAN utilization
+    /// (~30%) equals the N:M density bound 4/13 exactly, which is only
+    /// possible if the skew is excluded.
+    pub active_slots: u64,
+    /// MACs whose activation operand was non-zero and inside the
+    /// unpadded tile region.
+    pub useful_macs: u64,
+    /// Number of coefficient tiles processed.
+    pub tiles: u64,
+}
+
+impl SimStats {
+    /// PE utilization per the paper: useful MACs over active lane-slots.
+    pub fn utilization(&self) -> f64 {
+        if self.active_slots == 0 {
+            return 0.0;
+        }
+        self.useful_macs as f64 / self.active_slots as f64
+    }
+}
+
+impl AddAssign for SimStats {
+    fn add_assign(&mut self, rhs: Self) {
+        self.cycles += rhs.cycles;
+        self.active_slots += rhs.active_slots;
+        self.useful_macs += rhs.useful_macs;
+        self.tiles += rhs.tiles;
+    }
+}
+
+/// Mean utilization and total cycles across per-workload stats (Fig. 7
+/// averages applications this way: utilization is averaged, runtimes
+/// summed per app then averaged).
+pub fn aggregate(stats: &[SimStats]) -> SimStats {
+    let mut total = SimStats::default();
+    for s in stats {
+        total += *s;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn utilization_ratio() {
+        let s = SimStats { cycles: 10, active_slots: 100, useful_macs: 30, tiles: 1 };
+        assert!((s.utilization() - 0.3).abs() < 1e-12);
+        assert_eq!(SimStats::default().utilization(), 0.0);
+    }
+
+    #[test]
+    fn aggregate_sums() {
+        let a = SimStats { cycles: 5, active_slots: 50, useful_macs: 10, tiles: 1 };
+        let b = SimStats { cycles: 7, active_slots: 70, useful_macs: 30, tiles: 2 };
+        let t = aggregate(&[a, b]);
+        assert_eq!(t.cycles, 12);
+        assert_eq!(t.active_slots, 120);
+        assert_eq!(t.useful_macs, 40);
+        assert_eq!(t.tiles, 3);
+    }
+}

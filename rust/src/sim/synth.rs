@@ -1,0 +1,96 @@
+//! Synthetic quantized data generators for the cycle simulator and tests.
+
+use crate::bspline::{BsplineUnit, Lut};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Random dense uint8 activations with no zeros (the paper's evaluation
+/// "focuses solely on B-spline sparsity" — other dynamic sparsity is
+/// deliberately excluded).
+pub fn dense_activations(bs: usize, red: usize, rng: &mut Rng) -> Tensor<u8> {
+    let data = (0..bs * red).map(|_| 1 + rng.below(255) as u8).collect();
+    Tensor::from_vec(data, &[bs, red])
+}
+
+/// Random int8 weights (zero allowed; weight sparsity is out of scope and
+/// does not affect the activation-operand utilization definition).
+pub fn weights(red: usize, n: usize, rng: &mut Rng) -> Tensor<i8> {
+    let data = (0..red * n).map(|_| rng.range_i64(-127, 127) as i8).collect();
+    Tensor::from_vec(data, &[red, n])
+}
+
+/// Random spline coefficients `(K, M, N)`.
+pub fn coefficients(k_feats: usize, m: usize, n: usize, rng: &mut Rng) -> Tensor<i8> {
+    let data = (0..k_feats * m * n).map(|_| rng.range_i64(-127, 127) as i8).collect();
+    Tensor::from_vec(data, &[k_feats, m, n])
+}
+
+/// `(K, M, N)` coefficients -> `(K*M, N)` dense weight matrix (what the
+/// conventional array loads).
+pub fn flatten_coeff(coeff: &Tensor<i8>) -> Tensor<i8> {
+    let s = coeff.shape();
+    coeff.clone().reshape(&[s[0] * s[1], s[2]])
+}
+
+/// Run random quantized inputs through a real B-spline unit, returning
+/// the sparse view `(vals (BS,K,P+1), ks (BS,K))` and the dense
+/// expansion `(BS, K*(G+P))` a conventional array would consume.
+pub fn kan_activations(
+    bs: usize,
+    k_feats: usize,
+    g: usize,
+    p: usize,
+    rng: &mut Rng,
+) -> (Tensor<u8>, Tensor<i32>, Tensor<u8>) {
+    let unit = BsplineUnit::new(Lut::build(p), g);
+    let m = g + p;
+    let mut vals = Vec::with_capacity(bs * k_feats * (p + 1));
+    let mut ks = Vec::with_capacity(bs * k_feats);
+    let mut dense = Vec::with_capacity(bs * k_feats * m);
+    for _ in 0..bs * k_feats {
+        let xq = rng.below(256) as u8;
+        let (v, k) = unit.eval_into(xq);
+        vals.extend_from_slice(v);
+        ks.push(k as i32);
+        dense.extend_from_slice(&unit.eval_dense(xq));
+    }
+    (
+        Tensor::from_vec(vals, &[bs, k_feats, p + 1]),
+        Tensor::from_vec(ks, &[bs, k_feats]),
+        Tensor::from_vec(dense, &[bs, k_feats * m]),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_has_no_zeros() {
+        let mut rng = Rng::new(1);
+        let a = dense_activations(4, 100, &mut rng);
+        assert!(a.data().iter().all(|&v| v != 0));
+    }
+
+    #[test]
+    fn kan_sparse_and_dense_agree() {
+        let mut rng = Rng::new(2);
+        let (vals, ks, dense) = kan_activations(3, 4, 5, 3, &mut rng);
+        assert_eq!(vals.shape(), &[3, 4, 4]);
+        assert_eq!(ks.shape(), &[3, 4]);
+        assert_eq!(dense.shape(), &[3, 32]);
+        // total mass matches between views
+        let sv: u32 = vals.data().iter().map(|&v| v as u32).sum();
+        let sd: u32 = dense.data().iter().map(|&v| v as u32).sum();
+        assert_eq!(sv, sd);
+    }
+
+    #[test]
+    fn flatten_is_row_major() {
+        let mut rng = Rng::new(3);
+        let c = coefficients(2, 3, 4, &mut rng);
+        let f = flatten_coeff(&c);
+        assert_eq!(f.shape(), &[6, 4]);
+        assert_eq!(f.at(&[4, 2]), c.at(&[1, 1, 2]));
+    }
+}

@@ -1,0 +1,102 @@
+//! GEMM workload descriptions (the unit of work the array executes).
+
+/// What the left-hand matrix of the GEMM is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GemmKind {
+    /// B-spline activation matrix from a KAN layer with grid `g`,
+    /// degree `p`: logical shape `(BS, K*(G+P))` with the paper's
+    /// dynamic N:M structure (N = P+1 non-zeros per feature).
+    KanSpline { g: usize, p: usize },
+    /// Dense activations (the MLP/base term of Eq. 1, or any non-KAN
+    /// layer): shape `(BS, K)`.
+    Dense,
+}
+
+impl GemmKind {
+    pub fn is_kan(&self) -> bool {
+        matches!(self, GemmKind::KanSpline { .. })
+    }
+}
+
+/// One GEMM to run: `(BS, reduction) x (reduction, n_out)`.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub name: String,
+    /// Batch rows streamed through the array.
+    pub bs: usize,
+    /// Input features K (pre-expansion for KAN workloads).
+    pub k_feats: usize,
+    /// Output columns N of the layer.
+    pub n_out: usize,
+    pub kind: GemmKind,
+}
+
+impl Workload {
+    pub fn kan(name: &str, bs: usize, k_feats: usize, n_out: usize, g: usize, p: usize) -> Self {
+        assert!(bs > 0 && k_feats > 0 && n_out > 0 && g >= 1 && p >= 1);
+        Self { name: name.to_string(), bs, k_feats, n_out, kind: GemmKind::KanSpline { g, p } }
+    }
+
+    pub fn dense(name: &str, bs: usize, k_feats: usize, n_out: usize) -> Self {
+        assert!(bs > 0 && k_feats > 0 && n_out > 0);
+        Self { name: name.to_string(), bs, k_feats, n_out, kind: GemmKind::Dense }
+    }
+
+    /// Length of the reduction dimension as the *conventional* array sees
+    /// it: K*(G+P) for spline workloads (the dense B matrix), K otherwise.
+    pub fn expanded_reduction(&self) -> usize {
+        match self.kind {
+            GemmKind::KanSpline { g, p } => self.k_feats * (g + p),
+            GemmKind::Dense => self.k_feats,
+        }
+    }
+
+    /// MACs a dense execution of this GEMM performs (the roofline count).
+    pub fn dense_macs(&self) -> u64 {
+        self.bs as u64 * self.expanded_reduction() as u64 * self.n_out as u64
+    }
+
+    /// Expected useful MACs: only non-zero B-spline activations multiply
+    /// (density (P+1)/(G+P) of the expanded reduction), everything for
+    /// dense workloads. (Exact zeros from LUT row 0 are measure-~1/256
+    /// and are captured by the cycle simulator, not this expectation.)
+    pub fn useful_macs(&self) -> u64 {
+        match self.kind {
+            GemmKind::KanSpline { g, p } => {
+                self.bs as u64 * (self.k_feats * (p + 1)) as u64 * self.n_out as u64
+                    + 0 * g as u64
+            }
+            GemmKind::Dense => self.dense_macs(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expansion_and_counts() {
+        let w = Workload::kan("t", 32, 22, 10, 3, 3);
+        assert_eq!(w.expanded_reduction(), 22 * 6);
+        assert_eq!(w.dense_macs(), 32 * 132 * 10);
+        assert_eq!(w.useful_macs(), 32 * 22 * 4 * 10);
+
+        let d = Workload::dense("d", 8, 64, 16);
+        assert_eq!(d.expanded_reduction(), 64);
+        assert_eq!(d.useful_macs(), d.dense_macs());
+    }
+
+    #[test]
+    fn kan_density_is_n_over_m() {
+        let w = Workload::kan("t", 4, 10, 5, 10, 3); // 4:13
+        let density = w.useful_macs() as f64 / w.dense_macs() as f64;
+        assert!((density - 4.0 / 13.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_zero_dims() {
+        Workload::dense("bad", 0, 1, 1);
+    }
+}

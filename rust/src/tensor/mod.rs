@@ -1,0 +1,212 @@
+//! Minimal dense tensor used across the integer engine and simulator.
+//!
+//! Row-major, owned storage, shape-checked ops. Deliberately small: the
+//! heavy lifting happens either in the PJRT runtime (fp32 path) or in the
+//! hand-written integer kernels in `kan::engine` (int8 path); this type
+//! mostly carries data between them with explicit shapes.
+
+use std::fmt;
+
+#[derive(Clone, PartialEq)]
+pub struct Tensor<T> {
+    data: Vec<T>,
+    shape: Vec<usize>,
+}
+
+impl<T: fmt::Debug> fmt::Debug for Tensor<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}(len={})", self.shape, self.data.len())
+    }
+}
+
+impl<T: Clone + Default> Tensor<T> {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { data: vec![T::default(); n], shape: shape.to_vec() }
+    }
+}
+
+impl<T> Tensor<T> {
+    pub fn from_vec(data: Vec<T>, shape: &[usize]) -> Self {
+        assert_eq!(
+            data.len(),
+            shape.iter().product::<usize>(),
+            "data length {} != shape {:?}",
+            data.len(),
+            shape
+        );
+        Self { data, shape: shape.to_vec() }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<T> {
+        self.data
+    }
+
+    /// Flat offset of a multi-index (row-major).
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        assert_eq!(idx.len(), self.shape.len(), "index rank mismatch");
+        let mut off = 0;
+        for (i, (&ix, &dim)) in idx.iter().zip(&self.shape).enumerate() {
+            assert!(ix < dim, "index {ix} out of bounds for dim {i} (size {dim})");
+            off = off * dim + ix;
+        }
+        off
+    }
+
+    pub fn at(&self, idx: &[usize]) -> &T {
+        &self.data[self.offset(idx)]
+    }
+
+    pub fn at_mut(&mut self, idx: &[usize]) -> &mut T {
+        let off = self.offset(idx);
+        &mut self.data[off]
+    }
+
+    /// Contiguous row `r` of a rank-2 tensor.
+    pub fn row(&self, r: usize) -> &[T] {
+        assert_eq!(self.rank(), 2);
+        let cols = self.shape[1];
+        &self.data[r * cols..(r + 1) * cols]
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(self.data.len(), shape.iter().product::<usize>());
+        self.shape = shape.to_vec();
+        self
+    }
+}
+
+/// f32 GEMM: `out[m,n] = sum_k a[m,k] * b[k,n]` (reference/test helper; the
+/// serving fp32 path goes through PJRT instead).
+pub fn matmul_f32(a: &Tensor<f32>, b: &Tensor<f32>) -> Tensor<f32> {
+    assert_eq!(a.rank(), 2);
+    assert_eq!(b.rank(), 2);
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (k2, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2, "inner dims {k} vs {k2}");
+    let mut out = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        let arow = a.row(i);
+        let orow = &mut out.data[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b.data[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// Integer GEMM with i32 accumulation (u8 activations x i8 weights), the
+/// arithmetic of the paper's PE datapath (8-bit in, 32-bit out).
+pub fn matmul_u8_i8(a: &Tensor<u8>, b: &Tensor<i8>) -> Tensor<i32> {
+    assert_eq!(a.rank(), 2);
+    assert_eq!(b.rank(), 2);
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (k2, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2, "inner dims {k} vs {k2}");
+    let mut out = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        let arow = a.row(i);
+        let orow = &mut out.data[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0 {
+                continue;
+            }
+            let av = av as i32;
+            let brow = &b.data[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv as i32;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{check, Rng};
+
+    #[test]
+    fn indexing_row_major() {
+        let t = Tensor::from_vec((0..24).collect::<Vec<i32>>(), &[2, 3, 4]);
+        assert_eq!(*t.at(&[0, 0, 0]), 0);
+        assert_eq!(*t.at(&[1, 2, 3]), 23);
+        assert_eq!(*t.at(&[1, 0, 2]), 14);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn oob_panics() {
+        let t = Tensor::from_vec(vec![1, 2], &[2]);
+        t.at(&[2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "data length")]
+    fn bad_shape_panics() {
+        Tensor::from_vec(vec![1, 2, 3], &[2, 2]);
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        let b = Tensor::from_vec(vec![1.0, 1.0, 1.0, 1.0], &[2, 2]);
+        let c = matmul_f32(&a, &b);
+        assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_int_matches_float() {
+        check(20, 11, |rng: &mut Rng| {
+            let (m, k, n) = (1 + rng.below(6), 1 + rng.below(6), 1 + rng.below(6));
+            let a: Vec<u8> = (0..m * k).map(|_| rng.below(256) as u8).collect();
+            let b: Vec<i8> = (0..k * n).map(|_| rng.range_i64(-127, 127) as i8).collect();
+            let ai = Tensor::from_vec(a.clone(), &[m, k]);
+            let bi = Tensor::from_vec(b.clone(), &[k, n]);
+            let got = matmul_u8_i8(&ai, &bi);
+            let af = Tensor::from_vec(a.iter().map(|&x| x as f32).collect(), &[m, k]);
+            let bf = Tensor::from_vec(b.iter().map(|&x| x as f32).collect(), &[k, n]);
+            let want = matmul_f32(&af, &bf);
+            for (g, w) in got.data().iter().zip(want.data()) {
+                assert_eq!(*g as f32, *w);
+            }
+        });
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec((0..6).collect::<Vec<i32>>(), &[2, 3]).reshape(&[3, 2]);
+        assert_eq!(t.shape(), &[3, 2]);
+        assert_eq!(*t.at(&[2, 1]), 5);
+    }
+}

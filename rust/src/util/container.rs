@@ -1,0 +1,199 @@
+//! Reader for the artifact tensor container written by `python/compile/aot.py`.
+//!
+//! Layout: 8-byte magic | u32 LE header length | UTF-8 JSON header | raw
+//! little-endian tensor blobs. The header's `tensors` table maps names to
+//! `{dtype, shape, offset, nbytes}` with offsets relative to the end of
+//! the header. Three magics are in use: `KANQ0001` (quantized model),
+//! `KGLD0001` (golden vectors), `KWTS0001` (fp32 weights for the PJRT
+//! runtime).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::json::Value;
+
+#[derive(Debug, Clone)]
+pub struct TensorInfo {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+#[derive(Debug)]
+pub struct Container {
+    pub magic: [u8; 8],
+    pub header: Value,
+    tensors: BTreeMap<String, TensorInfo>,
+    body: Vec<u8>,
+}
+
+impl Container {
+    pub fn open(path: &Path) -> Result<Self> {
+        let raw = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        Self::from_bytes(raw).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn from_bytes(raw: Vec<u8>) -> Result<Self> {
+        if raw.len() < 12 {
+            bail!("container too short ({} bytes)", raw.len());
+        }
+        let mut magic = [0u8; 8];
+        magic.copy_from_slice(&raw[..8]);
+        let hlen = u32::from_le_bytes(raw[8..12].try_into().unwrap()) as usize;
+        if raw.len() < 12 + hlen {
+            bail!("truncated header (want {hlen} bytes)");
+        }
+        let header_text = std::str::from_utf8(&raw[12..12 + hlen]).context("header not utf-8")?;
+        let header = Value::parse(header_text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut tensors = BTreeMap::new();
+        let table = header
+            .get("tensors")
+            .and_then(Value::as_obj)
+            .context("header missing tensors table")?;
+        let body = raw[12 + hlen..].to_vec();
+        for (name, t) in table {
+            let info = TensorInfo {
+                dtype: t.get("dtype").and_then(Value::as_str).context("dtype")?.to_string(),
+                shape: t
+                    .get("shape")
+                    .and_then(Value::as_arr)
+                    .context("shape")?
+                    .iter()
+                    .map(|v| v.as_usize().context("shape dim"))
+                    .collect::<Result<_>>()?,
+                offset: t.get("offset").and_then(Value::as_usize).context("offset")?,
+                nbytes: t.get("nbytes").and_then(Value::as_usize).context("nbytes")?,
+            };
+            if info.offset + info.nbytes > body.len() {
+                bail!("tensor {name} overruns body");
+            }
+            tensors.insert(name.clone(), info);
+        }
+        Ok(Self { magic, header, tensors, body })
+    }
+
+    pub fn expect_magic(&self, want: &[u8; 8]) -> Result<()> {
+        if &self.magic != want {
+            bail!(
+                "bad magic {:?} (want {:?})",
+                String::from_utf8_lossy(&self.magic),
+                String::from_utf8_lossy(want)
+            );
+        }
+        Ok(())
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.tensors.keys().map(|s| s.as_str())
+    }
+
+    pub fn info(&self, name: &str) -> Result<&TensorInfo> {
+        self.tensors.get(name).with_context(|| format!("tensor '{name}' missing"))
+    }
+
+    fn bytes_of(&self, name: &str, dtype: &str, elem: usize) -> Result<(&[u8], &TensorInfo)> {
+        let info = self.info(name)?;
+        if info.dtype != dtype {
+            bail!("tensor '{name}' has dtype {} (want {dtype})", info.dtype);
+        }
+        let n: usize = info.shape.iter().product();
+        if n * elem != info.nbytes {
+            bail!("tensor '{name}' size mismatch");
+        }
+        Ok((&self.body[info.offset..info.offset + info.nbytes], info))
+    }
+
+    pub fn u8(&self, name: &str) -> Result<(Vec<u8>, Vec<usize>)> {
+        let (b, info) = self.bytes_of(name, "uint8", 1)?;
+        Ok((b.to_vec(), info.shape.clone()))
+    }
+
+    pub fn i8(&self, name: &str) -> Result<(Vec<i8>, Vec<usize>)> {
+        let (b, info) = self.bytes_of(name, "int8", 1)?;
+        Ok((b.iter().map(|&x| x as i8).collect(), info.shape.clone()))
+    }
+
+    pub fn i32(&self, name: &str) -> Result<(Vec<i32>, Vec<usize>)> {
+        let (b, info) = self.bytes_of(name, "int32", 4)?;
+        Ok((
+            b.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect(),
+            info.shape.clone(),
+        ))
+    }
+
+    pub fn i64(&self, name: &str) -> Result<(Vec<i64>, Vec<usize>)> {
+        let (b, info) = self.bytes_of(name, "int64", 8)?;
+        Ok((
+            b.chunks_exact(8).map(|c| i64::from_le_bytes(c.try_into().unwrap())).collect(),
+            info.shape.clone(),
+        ))
+    }
+
+    pub fn f32(&self, name: &str) -> Result<(Vec<f32>, Vec<usize>)> {
+        let (b, info) = self.bytes_of(name, "float32", 4)?;
+        Ok((
+            b.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+            info.shape.clone(),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a container in-memory exactly the way aot.write_container does.
+    fn sample(magic: &[u8; 8]) -> Vec<u8> {
+        let data: Vec<u8> = vec![1, 2, 3, 4, 5, 6];
+        let header = format!(
+            r#"{{"name": "t", "tensors": {{"x": {{"dtype": "uint8", "shape": [2, 3], "offset": 0, "nbytes": {}}}}}}}"#,
+            data.len()
+        );
+        let mut raw = Vec::new();
+        raw.extend_from_slice(magic);
+        raw.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        raw.extend_from_slice(header.as_bytes());
+        raw.extend_from_slice(&data);
+        raw
+    }
+
+    #[test]
+    fn roundtrip() {
+        let c = Container::from_bytes(sample(b"KANQ0001")).unwrap();
+        c.expect_magic(b"KANQ0001").unwrap();
+        let (v, shape) = c.u8("x").unwrap();
+        assert_eq!(v, vec![1, 2, 3, 4, 5, 6]);
+        assert_eq!(shape, vec![2, 3]);
+        assert_eq!(c.header.get("name").unwrap().as_str(), Some("t"));
+    }
+
+    #[test]
+    fn wrong_magic_rejected() {
+        let c = Container::from_bytes(sample(b"KANQ0001")).unwrap();
+        assert!(c.expect_magic(b"KGLD0001").is_err());
+    }
+
+    #[test]
+    fn wrong_dtype_rejected() {
+        let c = Container::from_bytes(sample(b"KANQ0001")).unwrap();
+        assert!(c.i8("x").is_err());
+        assert!(c.f32("x").is_err());
+    }
+
+    #[test]
+    fn missing_tensor_rejected() {
+        let c = Container::from_bytes(sample(b"KANQ0001")).unwrap();
+        assert!(c.u8("nope").is_err());
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let mut raw = sample(b"KANQ0001");
+        raw.truncate(raw.len() - 3); // cut into the tensor body
+        assert!(Container::from_bytes(raw).is_err());
+        assert!(Container::from_bytes(vec![1, 2, 3]).is_err());
+    }
+}

@@ -1,0 +1,70 @@
+//! Shared low-level utilities: seeded PRNG + property-test harness, a
+//! minimal JSON reader, and the binary tensor-container reader for the
+//! artifacts produced by `python/compile/aot.py`.
+//!
+//! Everything here is std-only — the offline build image vendors only the
+//! `xla` crate's dependency closure, so serde/proptest/criterion are
+//! replaced by small in-tree equivalents.
+
+pub mod container;
+pub mod json;
+pub mod rng;
+
+/// numpy-compatible rounding: round half to even ("banker's rounding").
+///
+/// `python/compile/quantize.py` uses `np.round` / python `round`, both of
+/// which round ties to even; `f64::round` rounds ties away from zero. The
+/// integer pipeline must be bit-exact across the two languages, so every
+/// float->int conversion on the artifact path goes through this.
+pub fn round_half_even(x: f64) -> f64 {
+    if (x - x.trunc()).abs() == 0.5 {
+        // tie: pick the even neighbour
+        let down = x.floor();
+        let up = x.ceil();
+        if (down as i64) % 2 == 0 {
+            down
+        } else {
+            up
+        }
+    } else {
+        x.round()
+    }
+}
+
+/// Clamp to an inclusive integer range after banker's rounding.
+pub fn round_clamp(x: f64, lo: i64, hi: i64) -> i64 {
+    (round_half_even(x) as i64).clamp(lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_half_even_matches_numpy() {
+        // (input, np.round(input))
+        for (x, want) in [
+            (0.5, 0.0),
+            (1.5, 2.0),
+            (2.5, 2.0),
+            (3.5, 4.0),
+            (-0.5, 0.0),
+            (-1.5, -2.0),
+            (-2.5, -2.0),
+            (0.4999, 0.0),
+            (0.5001, 1.0),
+            (127.5, 128.0),
+            (126.5, 126.0),
+            (-127.5, -128.0),
+        ] {
+            assert_eq!(round_half_even(x), want, "x={x}");
+        }
+    }
+
+    #[test]
+    fn round_clamp_saturates() {
+        assert_eq!(round_clamp(300.0, 0, 255), 255);
+        assert_eq!(round_clamp(-1.2, 0, 255), 0);
+        assert_eq!(round_clamp(12.3, 0, 255), 12);
+    }
+}

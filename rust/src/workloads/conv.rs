@@ -1,0 +1,88 @@
+//! ResKAN18: ResNet-18 with ConvKAN layers (every scalar conv weight
+//! replaced by a learnable spline), im2col-lowered to KAN GEMMs.
+//!
+//! CIFAR-10 geometry (32x32 input, conv1 kept 3x3/stride-1 as usual for
+//! CIFAR variants). 20 ConvKAN layers, matching the paper's count:
+//! conv1, 16 block convs (4 stages x 2 basic blocks x 2 convs), and 3
+//! 1x1 downsample convs (stages 2-4).
+
+use crate::sim::workload::Workload;
+
+/// (name, c_in, c_out, kernel, stride, input HxW)
+const LAYERS: &[(&str, usize, usize, usize, usize, usize)] = &[
+    ("conv1", 3, 64, 3, 1, 32),
+    // stage 1: 64 -> 64, 32x32
+    ("s1b1c1", 64, 64, 3, 1, 32),
+    ("s1b1c2", 64, 64, 3, 1, 32),
+    ("s1b2c1", 64, 64, 3, 1, 32),
+    ("s1b2c2", 64, 64, 3, 1, 32),
+    // stage 2: 64 -> 128, stride 2 (16x16), + 1x1 downsample
+    ("s2b1c1", 64, 128, 3, 2, 32),
+    ("s2b1c2", 128, 128, 3, 1, 16),
+    ("s2ds", 64, 128, 1, 2, 32),
+    ("s2b2c1", 128, 128, 3, 1, 16),
+    ("s2b2c2", 128, 128, 3, 1, 16),
+    // stage 3: 128 -> 256, stride 2 (8x8), + 1x1 downsample
+    ("s3b1c1", 128, 256, 3, 2, 16),
+    ("s3b1c2", 256, 256, 3, 1, 8),
+    ("s3ds", 128, 256, 1, 2, 16),
+    ("s3b2c1", 256, 256, 3, 1, 8),
+    ("s3b2c2", 256, 256, 3, 1, 8),
+    // stage 4: 256 -> 512, stride 2 (4x4), + 1x1 downsample
+    ("s4b1c1", 256, 512, 3, 2, 8),
+    ("s4b1c2", 512, 512, 3, 1, 4),
+    ("s4ds", 256, 512, 1, 2, 8),
+    ("s4b2c1", 512, 512, 3, 1, 4),
+    ("s4b2c2", 512, 512, 3, 1, 4),
+];
+
+/// im2col: a conv over `HxW` with stride `s` yields `(H/s)*(W/s)`
+/// activation rows of `c_in * k * k` features; ConvKAN expands each
+/// feature into its `G+P` B-spline activations.
+pub fn reskan18_workloads(g: usize, p: usize) -> Vec<Workload> {
+    LAYERS
+        .iter()
+        .map(|&(name, cin, cout, k, s, hw)| {
+            let out_hw = hw / s;
+            let rows = out_hw * out_hw; // one image (see module docs)
+            let feats = cin * k * k;
+            Workload::kan(&format!("ResKAN18/{name}"), rows, feats, cout, g, p)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exactly_twenty_layers() {
+        assert_eq!(LAYERS.len(), 20); // paper Table II: "20 ConvKAN layers"
+        assert_eq!(reskan18_workloads(3, 3).len(), 20);
+    }
+
+    #[test]
+    fn conv1_shape() {
+        let wls = reskan18_workloads(3, 3);
+        assert_eq!(wls[0].bs, 32 * 32);
+        assert_eq!(wls[0].k_feats, 3 * 9);
+        assert_eq!(wls[0].n_out, 64);
+        assert_eq!(wls[0].expanded_reduction(), 27 * 6);
+    }
+
+    #[test]
+    fn downsample_is_1x1() {
+        let wls = reskan18_workloads(3, 3);
+        let ds = wls.iter().find(|w| w.name.contains("s2ds")).unwrap();
+        assert_eq!(ds.k_feats, 64); // 1x1 kernel: c_in features
+        assert_eq!(ds.bs, 16 * 16); // stride 2 halves the map
+    }
+
+    #[test]
+    fn strides_shrink_rows() {
+        let wls = reskan18_workloads(3, 3);
+        let s4 = wls.iter().find(|w| w.name.contains("s4b2c2")).unwrap();
+        assert_eq!(s4.bs, 16); // 4x4 map
+        assert_eq!(s4.k_feats, 512 * 9);
+    }
+}

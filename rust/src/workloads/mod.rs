@@ -1,0 +1,250 @@
+//! The Table II application registry: every KAN application the paper
+//! collects from prior work, expanded into the GEMM workloads (spline
+//! term + MLP base term) that the simulator executes.
+//!
+//! Parameters the paper leaves implicit are fixed here and documented:
+//! * batch size: 32 rows per fully-connected workload (the paper sweeps
+//!   none; BS only shifts the fill/drain amortization identically for
+//!   both arrays);
+//! * Catch22-KAN's X (UCR class count, "< 60"): 10;
+//! * CF-KAN's X: the paper's three dataset sizes, we default to 6969;
+//! * ConvKAN (ResKAN18): im2col lowering with one CIFAR-10 image
+//!   (32x32), so a conv contributes `H*W x Cin*k*k` activation rows.
+
+pub mod conv;
+
+use crate::sim::workload::Workload;
+
+/// Default batch rows for fully-connected workloads.
+pub const DEFAULT_BS: usize = 32;
+
+/// One collected application: a set of networks with shared (G, P).
+#[derive(Clone, Debug)]
+pub struct App {
+    pub name: &'static str,
+    /// Each inner vec is one network's layer widths.
+    pub nets: Vec<Vec<usize>>,
+    pub g: usize,
+    pub p: usize,
+    /// Include the Eq. 1 MLP base term as an extra dense GEMM per layer.
+    pub include_base: bool,
+}
+
+impl App {
+    /// Expand into GEMM workloads, optionally overriding (G, P) — Fig. 7
+    /// fixes G=5, P=3 across applications.
+    pub fn workloads(&self, bs: usize, override_gp: Option<(usize, usize)>) -> Vec<Workload> {
+        let (g, p) = override_gp.unwrap_or((self.g, self.p));
+        let mut out = Vec::new();
+        for (ni, net) in self.nets.iter().enumerate() {
+            for (li, win) in net.windows(2).enumerate() {
+                let (k, n) = (win[0], win[1]);
+                let name = format!("{}/net{}/l{}", self.name, ni, li);
+                out.push(Workload::kan(&name, bs, k, n, g, p));
+                if self.include_base {
+                    out.push(Workload::dense(&format!("{name}/base"), bs, k, n));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// The Table II collection. `CF-KAN`'s X and `Catch22`'s class count are
+/// fixed as documented in the module docs.
+pub fn table2() -> Vec<App> {
+    vec![
+        App {
+            name: "5G-STARDUST",
+            nets: vec![vec![168, 40, 40, 40, 24]],
+            g: 5,
+            p: 3,
+            include_base: true,
+        },
+        App {
+            name: "Catch22-KAN",
+            nets: vec![vec![22, 10]],
+            g: 3,
+            p: 3,
+            include_base: false,
+        },
+        App {
+            name: "CF-KAN",
+            nets: vec![vec![6969, 512, 6969]],
+            g: 2,
+            p: 3,
+            include_base: false,
+        },
+        App {
+            name: "U-KAN",
+            nets: vec![vec![512, 1024, 512], vec![512, 512]],
+            g: 5,
+            p: 3,
+            include_base: true,
+        },
+        App {
+            name: "GKAN",
+            nets: vec![vec![200, 16, 7], vec![100, 20, 7]],
+            g: 3, // paper explores G in {2,3}, P in {1,2,3}; default 3,3
+            p: 3,
+            include_base: false,
+        },
+        App {
+            name: "Prefetcher",
+            nets: vec![vec![5, 64, 128]],
+            g: 4,
+            p: 3,
+            include_base: true,
+        },
+        App {
+            name: "MNIST-KAN",
+            nets: vec![vec![784, 64, 10]],
+            g: 10,
+            p: 3,
+            include_base: true,
+        },
+        App {
+            name: "ResKAN18",
+            nets: vec![], // conv layers generated in `conv`
+            g: 3,
+            p: 3,
+            include_base: false,
+        },
+    ]
+}
+
+/// Workloads for one app, resolving the ConvKAN special case.
+pub fn app_workloads(app: &App, bs: usize, override_gp: Option<(usize, usize)>) -> Vec<Workload> {
+    if app.name == "ResKAN18" {
+        let (g, p) = override_gp.unwrap_or((app.g, app.p));
+        conv::reskan18_workloads(g, p)
+    } else {
+        app.workloads(bs, override_gp)
+    }
+}
+
+/// All apps expanded, Fig. 7 style: G=5, P=3 override, MNIST-KAN excluded
+/// (the paper excludes it from the sweep because it requires G=10).
+pub fn fig7_workloads() -> Vec<(String, Vec<Workload>)> {
+    table2()
+        .iter()
+        .filter(|a| a.name != "MNIST-KAN")
+        .map(|a| (a.name.to_string(), app_workloads(a, DEFAULT_BS, Some((5, 3)))))
+        .collect()
+}
+
+/// All apps with native (G, P), Fig. 8 style.
+pub fn fig8_workloads() -> Vec<(String, usize, usize, Vec<Workload>)> {
+    table2()
+        .iter()
+        .map(|a| (a.name.to_string(), a.g, a.p, app_workloads(a, DEFAULT_BS, None)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::workload::GemmKind;
+
+    #[test]
+    fn table2_has_all_eight_apps() {
+        let apps = table2();
+        assert_eq!(apps.len(), 8);
+        let names: Vec<_> = apps.iter().map(|a| a.name).collect();
+        for want in [
+            "5G-STARDUST", "Catch22-KAN", "CF-KAN", "U-KAN", "GKAN", "Prefetcher",
+            "MNIST-KAN", "ResKAN18",
+        ] {
+            assert!(names.contains(&want), "{want} missing");
+        }
+    }
+
+    #[test]
+    fn stardust_layer_count() {
+        let app = &table2()[0];
+        let wls = app.workloads(32, None);
+        // 4 layers x (spline + base)
+        assert_eq!(wls.len(), 8);
+        assert_eq!(wls[0].k_feats, 168);
+        assert_eq!(wls[0].n_out, 40);
+        assert!(matches!(wls[0].kind, GemmKind::KanSpline { g: 5, p: 3 }));
+        assert!(matches!(wls[1].kind, GemmKind::Dense));
+    }
+
+    #[test]
+    fn fig7_excludes_mnist_and_overrides_gp() {
+        let wls = fig7_workloads();
+        assert_eq!(wls.len(), 7);
+        for (app, list) in &wls {
+            assert_ne!(app, "MNIST-KAN");
+            for wl in list {
+                if let GemmKind::KanSpline { g, p } = wl.kind {
+                    assert_eq!((g, p), (5, 3), "{app}/{}", wl.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fig8_keeps_native_gp() {
+        let wls = fig8_workloads();
+        assert_eq!(wls.len(), 8);
+        let mnist = wls.iter().find(|(n, ..)| n == "MNIST-KAN").unwrap();
+        assert_eq!((mnist.1, mnist.2), (10, 3));
+        assert!(!mnist.3.is_empty());
+    }
+
+    #[test]
+    fn catch22_matches_paper_shape() {
+        // paper: B matrix of dimensions (BS, 22 * (G+P))
+        let app = table2().into_iter().find(|a| a.name == "Catch22-KAN").unwrap();
+        let wls = app.workloads(16, None);
+        assert_eq!(wls.len(), 1);
+        assert_eq!(wls[0].expanded_reduction(), 22 * 6);
+    }
+}
+
+/// GKAN hyperparameter variants the paper explores (G in {2,3}, P in
+/// {1,2,3}) — used by the ablation bench to show how N:M shapes the
+/// utilization gap.
+pub fn gkan_variants() -> Vec<(usize, usize, Vec<Workload>)> {
+    let nets = [vec![200usize, 16, 7], vec![100, 20, 7]];
+    let mut out = Vec::new();
+    for g in [2usize, 3] {
+        for p in [1usize, 2, 3] {
+            let mut wls = Vec::new();
+            for (ni, net) in nets.iter().enumerate() {
+                for (li, win) in net.windows(2).enumerate() {
+                    wls.push(Workload::kan(
+                        &format!("GKAN[g{g}p{p}]/net{ni}/l{li}"),
+                        DEFAULT_BS,
+                        win[0],
+                        win[1],
+                        g,
+                        p,
+                    ));
+                }
+            }
+            out.push((g, p, wls));
+        }
+    }
+    out
+}
+
+/// CF-KAN dataset-size variants from Table II: X in {2810, 34395, 6969}.
+pub fn cfkan_variants() -> Vec<(usize, Vec<Workload>)> {
+    [2810usize, 34395, 6969]
+        .into_iter()
+        .map(|x| {
+            let net = [x, 512, x];
+            let wls = net
+                .windows(2)
+                .enumerate()
+                .map(|(li, win)| {
+                    Workload::kan(&format!("CF-KAN[x{x}]/l{li}"), DEFAULT_BS, win[0], win[1], 2, 3)
+                })
+                .collect();
+            (x, wls)
+        })
+        .collect()
+}

@@ -1,0 +1,141 @@
+//! Coordinator integration: conservation (every request answered exactly
+//! once), batching behaviour under concurrency, metrics sanity. Uses the
+//! quickstart artifact when present, otherwise a hand-built tiny model.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use kan_sas::arch::ArrayConfig;
+use kan_sas::bspline::Lut;
+use kan_sas::coordinator::{BatchPolicy, Server, ServerConfig};
+use kan_sas::kan::{Engine, LayerParams, QuantizedModel};
+use kan_sas::tensor::Tensor;
+use kan_sas::util::rng::Rng;
+
+fn tiny_engine() -> Engine {
+    let (g, p, k, n) = (5usize, 3usize, 4usize, 3usize);
+    let m = g + p;
+    let mut rng = Rng::new(99);
+    let coeff: Vec<i8> = (0..k * m * n).map(|_| rng.range_i64(-50, 50) as i8).collect();
+    let base: Vec<i8> = (0..k * n).map(|_| rng.range_i64(-50, 50) as i8).collect();
+    Engine::new(QuantizedModel {
+        name: "tiny".into(),
+        dims: vec![k, n],
+        layers: vec![LayerParams {
+            in_dim: k,
+            out_dim: n,
+            grid: g,
+            degree: p,
+            lut: Lut::build(p),
+            coeff: Tensor::from_vec(coeff, &[k, m, n]),
+            base: Tensor::from_vec(base, &[k, n]),
+            m1: 1000,
+            m2: 1000,
+            s1: 1.0,
+            s2: 1.0,
+        }],
+    })
+}
+
+fn load_engine() -> Engine {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/quickstart_kan.kanq");
+    if path.exists() {
+        Engine::new(QuantizedModel::load(&path).unwrap())
+    } else {
+        tiny_engine()
+    }
+}
+
+#[test]
+fn every_request_answered_exactly_once() {
+    let engine = load_engine();
+    let in_dim = engine.model.in_dim();
+    let server = Server::start(
+        engine,
+        ServerConfig {
+            policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+            sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
+        },
+    );
+    let n_clients = 4;
+    let per_client = 50;
+    let mut threads = Vec::new();
+    for c in 0..n_clients {
+        let h = server.handle();
+        threads.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(c as u64);
+            let mut answered = 0;
+            for _ in 0..per_client {
+                let x: Vec<f32> = (0..in_dim).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+                let resp = h.infer(&x).expect("inference");
+                assert!(!resp.t.is_empty());
+                answered += 1;
+            }
+            answered
+        }));
+    }
+    let total: usize = threads.into_iter().map(|t| t.join().unwrap()).sum();
+    assert_eq!(total, n_clients * per_client);
+    let metrics = server.shutdown();
+    let lat = metrics.latency().unwrap();
+    assert_eq!(lat.count, n_clients * per_client, "latency sample per request");
+    assert_eq!(metrics.batch_rows as usize, n_clients * per_client, "rows conserved");
+    assert!(metrics.batches as usize <= n_clients * per_client);
+    assert!(metrics.sim_cycles > 0, "simulated cycles attached");
+}
+
+#[test]
+fn batching_actually_batches() {
+    // with a generous deadline and many concurrent clients the mean batch
+    // size must exceed 1 (requests coalesce)
+    let server = Server::start(
+        load_engine(),
+        ServerConfig {
+            policy: BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(20) },
+            sim_array: ArrayConfig::conventional(8, 8),
+        },
+    );
+    let in_dim = server.handle().infer(&vec![0.0; 0]).err().map(|_| ()).is_some();
+    let _ = in_dim;
+    let engine_dim = 4; // quickstart/tiny both have in_dim 4
+    let mut threads = Vec::new();
+    for c in 0..8 {
+        let h = server.handle();
+        threads.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(100 + c as u64);
+            for _ in 0..20 {
+                let x: Vec<f32> = (0..engine_dim).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+                h.infer(&x).unwrap();
+            }
+        }));
+    }
+    for t in threads {
+        t.join().unwrap();
+    }
+    let metrics = server.shutdown();
+    assert!(
+        metrics.mean_batch_size() > 1.2,
+        "mean batch size {} — dynamic batching not coalescing",
+        metrics.mean_batch_size()
+    );
+}
+
+#[test]
+fn deterministic_responses() {
+    // same input always yields the same accumulators (pure integer path)
+    let server = Server::start(load_engine(), ServerConfig::default());
+    let h = server.handle();
+    let x = vec![0.25f32, -0.5, 0.75, 0.1];
+    let a = h.infer(&x).unwrap();
+    let b = h.infer(&x).unwrap();
+    assert_eq!(a.t, b.t);
+    let _ = a.prediction();
+    server.shutdown();
+}
+
+#[test]
+fn wrong_dim_rejected() {
+    let server = Server::start(load_engine(), ServerConfig::default());
+    assert!(server.handle().infer(&[0.0; 3]).is_err());
+    server.shutdown();
+}

@@ -1,0 +1,104 @@
+//! Cross-language bit-exactness: replay the golden vectors exported by
+//! `python/compile/aot.py` through the rust integer engine and require
+//! *exact* equality at every recorded point (unit outputs, per-layer
+//! activations, final accumulators, predictions).
+//!
+//! These tests are artifact-gated: they skip (with a notice) when
+//! `make artifacts` has not run.
+
+use std::path::PathBuf;
+
+use kan_sas::bspline::BsplineUnit;
+use kan_sas::kan::{Engine, QuantizedModel};
+use kan_sas::quant;
+use kan_sas::util::container::Container;
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn open_pair(name: &str) -> Option<(QuantizedModel, Container)> {
+    let kanq = artifacts().join(format!("{name}.kanq"));
+    let gold = artifacts().join(format!("{name}_golden.kgld"));
+    if !kanq.exists() || !gold.exists() {
+        eprintln!("skipping {name}: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    let model = QuantizedModel::load(&kanq).expect("load kanq");
+    let golden = Container::open(&gold).expect("open golden");
+    golden.expect_magic(b"KGLD0001").expect("golden magic");
+    Some((model, golden))
+}
+
+fn replay(name: &str) {
+    let Some((model, golden)) = open_pair(name) else { return };
+    let engine = Engine::new(model);
+    let (x_q, xs) = golden.u8("x_q").unwrap();
+    let (bs, in_dim) = (xs[0], xs[1]);
+    assert_eq!(in_dim, engine.model.in_dim());
+
+    // 1. layer-0 B-spline unit outputs must match element-for-element
+    let l0 = &engine.model.layers[0];
+    let unit = BsplineUnit::new(l0.lut.clone(), l0.grid);
+    let (want_vals, vshape) = golden.u8("l0.vals").unwrap();
+    let (want_k, _) = golden.i32("l0.k").unwrap();
+    assert_eq!(vshape, vec![bs, in_dim, l0.degree + 1]);
+    let (got_vals, got_k) = unit.eval_batch(&x_q);
+    assert_eq!(got_vals, want_vals, "{name}: l0 unit values diverge");
+    let got_k32: Vec<i32> = got_k.iter().map(|&k| k as i32).collect();
+    assert_eq!(got_k32, want_k, "{name}: l0 unit indices diverge");
+
+    // 2. intermediate activations after each requantization
+    let fwd = engine.forward_from_q(&x_q, bs).unwrap();
+    let mut cur = x_q.clone();
+    for (i, layer) in engine.model.layers.iter().enumerate() {
+        let t = engine.layer_forward(layer, &cur, bs);
+        if i + 1 < engine.model.layers.len() {
+            cur = t.iter().map(|&v| quant::requantize(v)).collect();
+            let (want_act, _) = golden.u8(&format!("act{}", i + 1)).unwrap();
+            assert_eq!(cur, want_act, "{name}: act{} diverges", i + 1);
+        }
+    }
+
+    // 3. final accumulators and predictions, exactly
+    let (want_t, tshape) = golden.i64("t_final").unwrap();
+    assert_eq!(tshape, vec![bs, engine.model.out_dim()]);
+    assert_eq!(fwd.t, want_t, "{name}: final accumulators diverge");
+    let (want_pred, _) = golden.i32("pred").unwrap();
+    let got_pred: Vec<i32> = fwd.predictions().iter().map(|&p| p as i32).collect();
+    assert_eq!(got_pred, want_pred, "{name}: predictions diverge");
+}
+
+#[test]
+fn quickstart_golden_replays_exactly() {
+    replay("quickstart_kan");
+}
+
+#[test]
+fn mnist_golden_replays_exactly() {
+    replay("mnist_kan");
+}
+
+#[test]
+fn catch22_golden_replays_exactly() {
+    replay("catch22_kan");
+}
+
+#[test]
+fn golden_labels_give_reasonable_accuracy() {
+    // the golden batch carries true labels; the quantized engine should
+    // classify most of them correctly (paper: <1% drop from ~96% fp32)
+    let Some((model, golden)) = open_pair("mnist_kan") else { return };
+    let engine = Engine::new(model);
+    let (x_q, xs) = golden.u8("x_q").unwrap();
+    let (labels, _) = golden.i32("labels").unwrap();
+    let fwd = engine.forward_from_q(&x_q, xs[0]).unwrap();
+    let correct = fwd
+        .predictions()
+        .iter()
+        .zip(&labels)
+        .filter(|&(&p, &l)| p as i32 == l)
+        .count();
+    let acc = correct as f64 / labels.len() as f64;
+    assert!(acc > 0.9, "golden-batch accuracy {acc}");
+}

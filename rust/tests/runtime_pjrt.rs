@@ -1,0 +1,103 @@
+//! PJRT round-trip: load the AOT HLO text, compile on the CPU client,
+//! execute with the exported weights, and cross-check against both the
+//! golden labels and the integer engine. Artifact-gated.
+
+use std::path::PathBuf;
+
+use kan_sas::kan::{Engine, QuantizedModel};
+use kan_sas::quant;
+use kan_sas::runtime::{FloatEngine, ModelArtifacts};
+use kan_sas::util::container::Container;
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have(name: &str) -> bool {
+    artifacts().join(name).exists()
+}
+
+#[test]
+fn quickstart_hlo_executes() {
+    if !have("quickstart_kan.kwts") {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let client = xla::PjRtClient::cpu().expect("pjrt cpu client");
+    let art = ModelArtifacts::new(&artifacts(), "quickstart_kan");
+    let batches = art.available_batches().unwrap();
+    assert!(batches.contains(&1), "batches {batches:?}");
+    let engine = FloatEngine::load(&client, &art, 1).expect("compile hlo");
+    assert_eq!(engine.in_dim, 4);
+    assert_eq!(engine.out_dim, 3);
+    let logits = engine.execute(&[0.1, -0.4, 0.3, 0.7]).unwrap();
+    assert_eq!(logits.len(), 3);
+    assert!(logits.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn fp32_and_int8_engines_agree_on_golden_batch() {
+    // the PJRT fp32 path and the integer engine must agree on almost all
+    // predictions (they differ only by quantization error, which the
+    // paper bounds at <1% accuracy)
+    if !have("quickstart_kan.kwts") || !have("quickstart_kan_golden.kgld") {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let client = xla::PjRtClient::cpu().unwrap();
+    let art = ModelArtifacts::new(&artifacts(), "quickstart_kan");
+    let fe = FloatEngine::load(&client, &art, 32).unwrap();
+
+    let golden = Container::open(&artifacts().join("quickstart_kan_golden.kgld")).unwrap();
+    let (x_q, xs) = golden.u8("x_q").unwrap();
+    let bs = 32.min(xs[0]);
+    let in_dim = xs[1];
+    let x: Vec<f32> = x_q[..bs * in_dim].iter().map(|&q| quant::dequantize_activation(q)).collect();
+
+    let logits = fe.execute(&x).unwrap();
+    let fp_preds = fe.predictions(&logits);
+
+    let qm = QuantizedModel::load(&artifacts().join("quickstart_kan.kanq")).unwrap();
+    let ie = Engine::new(qm);
+    let int_preds = ie.forward_from_q(&x_q[..bs * in_dim], bs).unwrap().predictions();
+
+    let agree = fp_preds.iter().zip(&int_preds).filter(|(a, b)| a == b).count();
+    assert!(
+        agree as f64 / bs as f64 >= 0.9,
+        "fp32/int8 prediction agreement {agree}/{bs}"
+    );
+}
+
+#[test]
+fn mnist_hlo_batch128_executes() {
+    if !have("mnist_kan.kwts") {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let client = xla::PjRtClient::cpu().unwrap();
+    let art = ModelArtifacts::new(&artifacts(), "mnist_kan");
+    let fe = FloatEngine::load(&client, &art, 128).unwrap();
+    let x = vec![0.0f32; 128 * 784];
+    let logits = fe.execute(&x).unwrap();
+    assert_eq!(logits.len(), 128 * 10);
+    // all rows identical for identical inputs
+    let first = &logits[..10];
+    for row in logits.chunks_exact(10).skip(1) {
+        for (a, b) in row.iter().zip(first) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+}
+
+#[test]
+fn wrong_batch_size_rejected() {
+    if !have("quickstart_kan.kwts") {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let client = xla::PjRtClient::cpu().unwrap();
+    let art = ModelArtifacts::new(&artifacts(), "quickstart_kan");
+    let fe = FloatEngine::load(&client, &art, 1).unwrap();
+    assert!(fe.execute(&[0.0; 8]).is_err()); // 2 rows into a b1 module
+    assert!(FloatEngine::load(&client, &art, 999).is_err()); // no such module
+}
