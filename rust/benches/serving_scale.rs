@@ -1,0 +1,105 @@
+//! Serving-pool scale sweep: replica count x offered load.
+//!
+//! Two measurements, both on a synthetic model (offline, no artifacts):
+//!
+//! 1. **Closed-loop saturation** per replica count — peak rows/sec with
+//!    16 hammering clients. The acceptance bar is >= 2x rows/sec at 4
+//!    replicas vs 1 on the steady load; weights stay one Arc-shared
+//!    allocation, so pool memory is ~flat in replica count (printed, and
+//!    asserted by `clones_alias_one_weight_allocation` in kan::engine).
+//! 2. **Open-loop scenario mixes** at fixed replicas — offered vs
+//!    achieved rate, shed rate, and tail latency for steady / diurnal /
+//!    flash-crowd arrival processes.
+//!
+//! ```bash
+//! cargo bench --bench serving_scale
+//! ```
+
+use std::time::Duration;
+
+use kan_sas::arch::ArrayConfig;
+use kan_sas::coordinator::{BatchPolicy, Pool, PoolConfig, ShedPolicy};
+use kan_sas::kan::{Engine, QuantizedModel};
+use kan_sas::loadgen::{self, Scenario};
+use kan_sas::report::Table;
+
+fn bench_engine() -> Engine {
+    // big enough that per-batch compute dominates queue/lock overhead
+    Engine::new(QuantizedModel::synthetic("bench_kan", &[64, 128, 64, 10], 5, 3, 42))
+}
+
+fn pool_config(replicas: usize, queue_cap: usize, shed: ShedPolicy) -> PoolConfig {
+    PoolConfig {
+        replicas,
+        queue_cap,
+        shed,
+        policy: BatchPolicy { max_batch: 32, max_wait: Duration::from_micros(500) },
+        sim_array: ArrayConfig::kan_sas(16, 16, 4, 8),
+    }
+}
+
+fn main() {
+    let engine = bench_engine();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!(
+        "serving_scale — model {} ({} KiB weights, Arc-shared: pool memory ~flat in replicas), {} cores\n",
+        engine.model.name,
+        engine.param_bytes() / 1024,
+        cores
+    );
+
+    // 1. closed-loop saturation sweep
+    let mut t = Table::new(&["replicas", "rows/s", "speedup", "req/s", "mean batch", "p50 us", "p99 us"])
+        .with_title("closed-loop saturation (16 clients, 700ms, steady hammering)");
+    let mut baseline_rows = 0.0f64;
+    let mut rows_at = std::collections::BTreeMap::new();
+    for &replicas in &[1usize, 2, 4, 8] {
+        let pool = Pool::start(engine.clone(), pool_config(replicas, 4096, ShedPolicy::Block));
+        let rep = loadgen::closed_loop(&pool.handle(), 16, Duration::from_millis(700), None, 7);
+        let stats = pool.shutdown();
+        let rows_s = stats.merged.batch_rows as f64 / rep.wall.as_secs_f64();
+        if replicas == 1 {
+            baseline_rows = rows_s;
+        }
+        rows_at.insert(replicas, rows_s);
+        let (p50, p99) = rep.latency.map(|l| (l.p50_us, l.p99_us)).unwrap_or((0, 0));
+        t.row(vec![
+            replicas.to_string(),
+            format!("{rows_s:.0}"),
+            format!("{:.2}x", rows_s / baseline_rows.max(1.0)),
+            format!("{:.0}", rep.achieved_rps),
+            format!("{:.1}", stats.merged.mean_batch_size()),
+            p50.to_string(),
+            p99.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    let x4 = rows_at.get(&4).copied().unwrap_or(0.0) / baseline_rows.max(1.0);
+    println!(
+        "4-replica scaling: {x4:.2}x rows/s vs 1 replica (target >= 2x; ideal bounded by {} cores)\n",
+        cores
+    );
+
+    // 2. open-loop scenario mixes on a fixed pool size
+    let replicas = cores.clamp(2, 4);
+    let rate = rows_at.get(&replicas).copied().unwrap_or(4000.0) * 0.6; // below saturation
+    println!("open-loop scenarios ({replicas} replicas, headline rate {rate:.0} rps, RejectNew, queue 256):");
+    for name in ["steady", "diurnal", "flash-crowd"] {
+        let pool = Pool::start(engine.clone(), pool_config(replicas, 256, ShedPolicy::RejectNew));
+        let sc = Scenario::by_name(name, rate, Duration::from_millis(900)).unwrap();
+        let rep = loadgen::run(&pool.handle(), &sc, 11);
+        let stats = pool.shutdown();
+        println!("  {}", rep.summary());
+        let per: Vec<String> = stats
+            .per_replica
+            .iter()
+            .enumerate()
+            .map(|(i, m)| format!("r{i}: {} rows, {:.0}% util", m.batch_rows, 100.0 * m.sim_utilization()))
+            .collect();
+        println!(
+            "    peak queue {:>4}  | {}",
+            stats.peak_depth,
+            per.join("  ")
+        );
+    }
+}

@@ -6,6 +6,7 @@
 //! {
 //!   "array": {"rows": 16, "cols": 16, "pe": "4:8", "weight_load": "amortized"},
 //!   "serve": {"max_batch": 32, "max_wait_ms": 2},
+//!   "pool": {"replicas": 4, "queue_cap": 1024, "shed": "reject"},
 //!   "batch_size": 32
 //! }
 //! ```
@@ -16,7 +17,7 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use crate::arch::{ArrayConfig, PeKind, WeightLoad};
-use crate::coordinator::BatchPolicy;
+use crate::coordinator::{BatchPolicy, PoolConfig, ShedPolicy};
 use crate::util::json::Value;
 
 #[derive(Clone, Debug)]
@@ -25,15 +26,35 @@ pub struct RunConfig {
     pub policy: BatchPolicy,
     /// Default workload batch rows for simulations.
     pub batch_size: usize,
+    /// Serving-pool replicas (worker threads, each an Arc-shared engine).
+    pub replicas: usize,
+    /// Admission queue capacity.
+    pub queue_cap: usize,
+    /// Load-shedding policy when the admission queue is full.
+    pub shed: ShedPolicy,
 }
 
 impl Default for RunConfig {
     fn default() -> Self {
+        let pool = PoolConfig::default();
         Self {
             array: ArrayConfig::kan_sas(16, 16, 4, 8),
             policy: BatchPolicy::default(),
             batch_size: crate::workloads::DEFAULT_BS,
+            replicas: pool.replicas,
+            queue_cap: pool.queue_cap,
+            shed: pool.shed,
         }
+    }
+}
+
+/// Parse a shed policy: "reject", "drop-oldest", or "block".
+pub fn parse_shed(s: &str) -> Result<ShedPolicy> {
+    match s {
+        "reject" | "reject-new" => Ok(ShedPolicy::RejectNew),
+        "drop-oldest" | "drop_oldest" => Ok(ShedPolicy::DropOldest),
+        "block" => Ok(ShedPolicy::Block),
+        other => bail!("shed policy '{other}' (want reject|drop-oldest|block)"),
     }
 }
 
@@ -86,10 +107,38 @@ impl RunConfig {
                 cfg.policy.max_wait = Duration::from_micros((ms * 1000.0) as u64);
             }
         }
+        if let Some(p) = v.get("pool") {
+            if let Some(r) = p.get("replicas").and_then(Value::as_usize) {
+                if r == 0 {
+                    bail!("replicas must be positive");
+                }
+                cfg.replicas = r;
+            }
+            if let Some(q) = p.get("queue_cap").and_then(Value::as_usize) {
+                if q == 0 {
+                    bail!("queue_cap must be positive");
+                }
+                cfg.queue_cap = q;
+            }
+            if let Some(s) = p.get("shed").and_then(Value::as_str) {
+                cfg.shed = parse_shed(s)?;
+            }
+        }
         if let Some(b) = v.get("batch_size").and_then(Value::as_usize) {
             cfg.batch_size = b;
         }
         Ok(cfg)
+    }
+
+    /// The serving-pool configuration this run config describes.
+    pub fn to_pool_config(&self) -> PoolConfig {
+        PoolConfig {
+            replicas: self.replicas,
+            queue_cap: self.queue_cap,
+            shed: self.shed,
+            policy: self.policy,
+            sim_array: self.array,
+        }
     }
 }
 
@@ -135,6 +184,34 @@ mod tests {
         let cfg = RunConfig::load(&path("cfg2.json")).unwrap();
         assert_eq!(cfg.array.rows, 16);
         assert_eq!(cfg.batch_size, crate::workloads::DEFAULT_BS);
+    }
+
+    #[test]
+    fn parse_shed_policies() {
+        assert_eq!(parse_shed("reject").unwrap(), ShedPolicy::RejectNew);
+        assert_eq!(parse_shed("drop-oldest").unwrap(), ShedPolicy::DropOldest);
+        assert_eq!(parse_shed("block").unwrap(), ShedPolicy::Block);
+        assert!(parse_shed("yolo").is_err());
+    }
+
+    #[test]
+    fn load_pool_section() {
+        let mut f = tempfile("cfg5.json");
+        write!(
+            f,
+            r#"{{"pool": {{"replicas": 3, "queue_cap": 77, "shed": "drop-oldest"}}}}"#
+        )
+        .unwrap();
+        let cfg = RunConfig::load(&path("cfg5.json")).unwrap();
+        assert_eq!(cfg.replicas, 3);
+        assert_eq!(cfg.queue_cap, 77);
+        assert_eq!(cfg.shed, ShedPolicy::DropOldest);
+        let pc = cfg.to_pool_config();
+        assert_eq!(pc.replicas, 3);
+        assert_eq!(pc.queue_cap, 77);
+        let mut f = tempfile("cfg6.json");
+        write!(f, r#"{{"pool": {{"replicas": 0}}}}"#).unwrap();
+        assert!(RunConfig::load(&path("cfg6.json")).is_err());
     }
 
     #[test]

@@ -20,10 +20,18 @@ impl Default for BatchPolicy {
 }
 
 /// Accumulates items with arrival timestamps and decides dispatch.
+///
+/// Every item keeps its *true* arrival time: when a full drain leaves
+/// items queued, their `max_wait` window keeps counting from arrival
+/// instead of restarting (the deadline-reset bug would silently double
+/// the tail latency of every overflow request). The pool's workers also
+/// backdate arrivals to the admission-queue submit time via
+/// [`Batcher::push_arrived`], so the deadline covers shared-queue wait.
 #[derive(Debug)]
 pub struct Batcher<T> {
     policy: BatchPolicy,
-    items: Vec<T>,
+    items: Vec<(Instant, T)>,
+    /// Earliest arrival among queued items (cached; recomputed on drain).
     oldest: Option<Instant>,
 }
 
@@ -34,10 +42,18 @@ impl<T> Batcher<T> {
     }
 
     pub fn push(&mut self, item: T) {
-        if self.items.is_empty() {
-            self.oldest = Some(Instant::now());
-        }
-        self.items.push(item);
+        self.push_arrived(Instant::now(), item);
+    }
+
+    /// Push an item that arrived at `at` (possibly before now: requests
+    /// that waited in an upstream admission queue keep that wait on
+    /// their deadline clock).
+    pub fn push_arrived(&mut self, at: Instant, item: T) {
+        self.oldest = Some(match self.oldest {
+            Some(t0) => t0.min(at),
+            None => at,
+        });
+        self.items.push((at, item));
     }
 
     pub fn len(&self) -> usize {
@@ -67,11 +83,12 @@ impl<T> Batcher<T> {
         }
     }
 
-    /// Take up to `max_batch` items (FIFO), leaving the rest queued.
+    /// Take up to `max_batch` items (FIFO), leaving the rest queued with
+    /// their original arrival times.
     pub fn drain(&mut self) -> Vec<T> {
         let take = self.items.len().min(self.policy.max_batch);
-        let batch: Vec<T> = self.items.drain(..take).collect();
-        self.oldest = if self.items.is_empty() { None } else { Some(Instant::now()) };
+        let batch: Vec<T> = self.items.drain(..take).map(|(_, item)| item).collect();
+        self.oldest = self.items.iter().map(|&(at, _)| at).min();
         batch
     }
 }
@@ -116,5 +133,31 @@ mod tests {
     fn empty_never_ready() {
         let b: Batcher<i32> = Batcher::new(BatchPolicy::default());
         assert!(!b.ready());
+    }
+
+    #[test]
+    fn drain_preserves_leftover_deadline() {
+        // regression: drain() used to stamp leftover items with a fresh
+        // Instant::now(), restarting their max_wait window on every drain
+        let mut b = Batcher::new(BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(40) });
+        b.push(1);
+        b.push(2);
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(b.ready());
+        assert_eq!(b.drain(), vec![1]);
+        // item 2 arrived >40ms ago: already past its deadline
+        assert!(b.ready(), "leftover deadline was reset by drain");
+        assert_eq!(b.time_left(), Duration::ZERO);
+        assert_eq!(b.drain(), vec![2]);
+        assert!(b.is_empty());
+        assert_eq!(b.time_left(), Duration::from_millis(40));
+    }
+
+    #[test]
+    fn push_arrived_backdates_deadline() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(50) });
+        b.push_arrived(Instant::now() - Duration::from_millis(200), 1);
+        assert!(b.ready(), "backdated arrival must count toward max_wait");
+        assert_eq!(b.time_left(), Duration::ZERO);
     }
 }

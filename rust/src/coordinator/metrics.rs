@@ -1,6 +1,10 @@
-//! Request-level metrics: latency percentiles and throughput.
+//! Request-level metrics: latency percentiles, throughput, and attached
+//! accelerator-simulation counters (one `Metrics` per pool replica;
+//! replicas merge into pool-level stats).
 
 use std::time::Duration;
+
+use crate::sim::SimStats;
 
 /// Online latency collector (stores all samples; serving runs here are
 /// bounded, so memory is a non-issue and exact percentiles beat sketches).
@@ -10,6 +14,10 @@ pub struct Metrics {
     pub batches: u64,
     pub batch_rows: u64,
     pub sim_cycles: u64,
+    /// Lane-slot denominator of the simulated utilization (Figs. 7a/8).
+    pub sim_active_slots: u64,
+    /// Useful-MAC numerator of the simulated utilization.
+    pub sim_useful_macs: u64,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -33,11 +41,20 @@ impl Metrics {
         self.sim_cycles += sim_cycles;
     }
 
+    /// Record a served batch with its full simulated accelerator stats.
+    pub fn record_batch_sim(&mut self, rows: usize, sim: &SimStats) {
+        self.record_batch(rows, sim.cycles);
+        self.sim_active_slots += sim.active_slots;
+        self.sim_useful_macs += sim.useful_macs;
+    }
+
     pub fn merge(&mut self, other: &Metrics) {
         self.latencies_us.extend_from_slice(&other.latencies_us);
         self.batches += other.batches;
         self.batch_rows += other.batch_rows;
         self.sim_cycles += other.sim_cycles;
+        self.sim_active_slots += other.sim_active_slots;
+        self.sim_useful_macs += other.sim_useful_macs;
     }
 
     pub fn mean_batch_size(&self) -> f64 {
@@ -45,6 +62,15 @@ impl Metrics {
             return 0.0;
         }
         self.batch_rows as f64 / self.batches as f64
+    }
+
+    /// Simulated PE utilization across everything this replica served
+    /// (useful MACs over active lane-slots, the paper's metric).
+    pub fn sim_utilization(&self) -> f64 {
+        if self.sim_active_slots == 0 {
+            return 0.0;
+        }
+        self.sim_useful_macs as f64 / self.sim_active_slots as f64
     }
 
     pub fn latency(&self) -> Option<LatencyStats> {
@@ -100,5 +126,19 @@ mod tests {
         assert_eq!(a.sim_cycles, 300);
         assert!((a.mean_batch_size() - 6.0).abs() < 1e-9);
         assert_eq!(a.latency().unwrap().count, 1);
+    }
+
+    #[test]
+    fn sim_stats_flow_through() {
+        let mut a = Metrics::default();
+        a.record_batch_sim(4, &SimStats { cycles: 10, active_slots: 100, useful_macs: 30, tiles: 1 });
+        assert_eq!(a.sim_cycles, 10);
+        assert!((a.sim_utilization() - 0.3).abs() < 1e-12);
+        let mut b = Metrics::default();
+        b.record_batch_sim(2, &SimStats { cycles: 5, active_slots: 100, useful_macs: 70, tiles: 1 });
+        a.merge(&b);
+        assert_eq!(a.sim_active_slots, 200);
+        assert!((a.sim_utilization() - 0.5).abs() < 1e-12);
+        assert_eq!(Metrics::default().sim_utilization(), 0.0);
     }
 }

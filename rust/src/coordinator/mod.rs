@@ -1,22 +1,36 @@
 //! Serving coordinator: the L3 request path.
 //!
-//! A thread-per-worker design over std mpsc channels (tokio is not
+//! A thread-per-worker design over std sync primitives (tokio is not
 //! available offline, and the workload — CPU-bound batched inference —
 //! doesn't want an async reactor anyway):
 //!
-//! * clients submit [`Request`]s to a bounded queue and receive their
-//!   logits on a per-request oneshot-style channel;
-//! * the [`batcher`] collects requests into batches under a size/deadline
-//!   policy (the classic dynamic-batching tradeoff: larger batches
-//!   amortize fill/drain, older requests must not starve);
-//! * worker threads run the integer engine (and optionally the PJRT fp32
-//!   engine) per batch and attach simulated accelerator stats;
-//! * [`metrics`] aggregates latency percentiles and throughput.
+//! * clients submit requests to a **bounded admission queue** shared by
+//!   the whole pool, and receive their logits on a per-request
+//!   oneshot-style channel (blocking [`PoolHandle::infer`] or open-loop
+//!   [`PoolHandle::submit_q`] + [`Ticket`]);
+//! * overload is explicit: a full queue sheds per [`ShedPolicy`]
+//!   (`QueueFull` rejection, oldest-eviction, or blocking backpressure);
+//! * [`pool`] runs N worker threads, each owning an `Engine` replica
+//!   (weights `Arc`-shared: N replicas ≈ 1x model memory) and its own
+//!   dynamic [`batcher`] (the classic tradeoff: larger batches amortize
+//!   fill/drain, older requests must not starve — deadlines anchored at
+//!   admission time);
+//! * workers attach simulated accelerator stats to every batch; per-
+//!   replica [`metrics`] merge into [`PoolStats`] (latency percentiles,
+//!   throughput, shed counts, queue high-water mark, per-replica
+//!   simulated utilization);
+//! * [`server`] keeps the original single-replica `Server` API as the
+//!   1-replica special case of the pool.
 
 pub mod batcher;
 pub mod metrics;
+pub mod pool;
 pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use metrics::{LatencyStats, Metrics};
-pub use server::{Server, ServerConfig};
+pub use pool::{
+    default_replicas, Pool, PoolConfig, PoolError, PoolHandle, PoolStats, Response, ShedPolicy,
+    Ticket,
+};
+pub use server::{Handle, Server, ServerConfig};

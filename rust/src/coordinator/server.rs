@@ -1,22 +1,22 @@
-//! The serving loop: request queue -> dynamic batcher -> engine worker.
+//! The single-replica serving facade: `Server` is the 1-replica special
+//! case of [`pool::Pool`](super::pool::Pool).
 //!
-//! One dispatcher thread owns the integer engine and the batcher; clients
-//! hold a cloneable [`Handle`] that submits requests and blocks on a
-//! per-request response channel. Every request is answered exactly once
-//! (conservation is property-tested in the integration suite).
-
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
-use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
-use std::time::Instant;
+//! It keeps the original API (blocking `Handle::infer`, `anyhow` errors,
+//! never-reject semantics) by running a pool with one worker, a deep
+//! admission queue, and [`ShedPolicy::Block`] backpressure — so the
+//! dispatcher loop, batching, metrics, and shutdown-drain behaviour are
+//! the pool's, tested once.
 
 use anyhow::{anyhow, Result};
 
 use crate::arch::ArrayConfig;
 use crate::kan::Engine;
 
-use super::batcher::{BatchPolicy, Batcher};
+use super::batcher::BatchPolicy;
 use super::metrics::Metrics;
+use super::pool::{Pool, PoolConfig, PoolHandle, ShedPolicy};
+
+pub use super::pool::Response;
 
 /// Server configuration.
 #[derive(Clone, Debug)]
@@ -34,49 +34,16 @@ impl Default for ServerConfig {
     }
 }
 
-/// One inference request: quantized input row + response channel.
-struct Request {
-    x_q: Vec<u8>,
-    submitted: Instant,
-    resp: Sender<Result<Response, String>>,
-}
-
-/// Response: i64 accumulators for the row (argmax = class) + timing.
-#[derive(Clone, Debug)]
-pub struct Response {
-    pub t: Vec<i64>,
-    pub latency_us: u64,
-}
-
-impl Response {
-    pub fn prediction(&self) -> usize {
-        self.t
-            .iter()
-            .enumerate()
-            .max_by_key(|&(_, v)| *v)
-            .map(|(i, _)| i)
-            .unwrap()
-    }
-}
-
 /// Cloneable client handle.
 #[derive(Clone)]
 pub struct Handle {
-    tx: Sender<Request>,
-    in_dim: usize,
+    inner: PoolHandle,
 }
 
 impl Handle {
     /// Submit one quantized row and wait for its logits.
     pub fn infer_q(&self, x_q: Vec<u8>) -> Result<Response> {
-        if x_q.len() != self.in_dim {
-            return Err(anyhow!("input dim {} != model {}", x_q.len(), self.in_dim));
-        }
-        let (tx, rx) = channel();
-        self.tx
-            .send(Request { x_q, submitted: Instant::now(), resp: tx })
-            .map_err(|_| anyhow!("server stopped"))?;
-        rx.recv().map_err(|_| anyhow!("server dropped request"))?.map_err(|e| anyhow!(e))
+        self.inner.infer_q(x_q).map_err(|e| anyhow!(e))
     }
 
     /// Submit a float (spline-domain) row.
@@ -85,107 +52,43 @@ impl Handle {
     }
 }
 
-/// A running server; dropping it (after `shutdown`) joins the worker.
+/// A running server; `shutdown` drains queued requests and joins the
+/// worker. Every request is answered exactly once (conservation is
+/// property-tested in the integration suite, against the pool).
 pub struct Server {
-    handle: Handle,
-    worker: Option<JoinHandle<()>>,
-    metrics: Arc<Mutex<Metrics>>,
-    stop_tx: Sender<()>,
+    pool: Pool,
 }
 
 impl Server {
     pub fn start(engine: Engine, cfg: ServerConfig) -> Self {
-        let (req_tx, req_rx) = channel::<Request>();
-        let (stop_tx, stop_rx) = channel::<()>();
-        let metrics = Arc::new(Mutex::new(Metrics::default()));
-        let metrics_worker = Arc::clone(&metrics);
-        let in_dim = engine.model.in_dim();
-        let worker = std::thread::Builder::new()
-            .name("kansas-dispatch".into())
-            .spawn(move || dispatch_loop(engine, cfg, req_rx, stop_rx, metrics_worker))
-            .expect("spawn dispatcher");
-        Self { handle: Handle { tx: req_tx, in_dim }, worker: Some(worker), metrics, stop_tx }
+        Self {
+            pool: Pool::start(
+                engine,
+                PoolConfig {
+                    replicas: 1,
+                    // deep queue + blocking admission reproduce the old
+                    // unbounded-channel semantics: clients wait, nothing
+                    // is ever answered QueueFull
+                    queue_cap: 65_536,
+                    shed: ShedPolicy::Block,
+                    policy: cfg.policy,
+                    sim_array: cfg.sim_array,
+                },
+            ),
+        }
     }
 
     pub fn handle(&self) -> Handle {
-        self.handle.clone()
+        Handle { inner: self.pool.handle() }
     }
 
     pub fn metrics(&self) -> Metrics {
-        self.metrics.lock().unwrap().clone()
+        self.pool.stats().merged
     }
 
-    /// Stop accepting work and join the dispatcher (queued requests are
+    /// Stop accepting work and join the worker (queued requests are
     /// drained first).
-    pub fn shutdown(mut self) -> Metrics {
-        let _ = self.stop_tx.send(());
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
-        self.metrics.lock().unwrap().clone()
-    }
-}
-
-fn dispatch_loop(
-    engine: Engine,
-    cfg: ServerConfig,
-    req_rx: Receiver<Request>,
-    stop_rx: Receiver<()>,
-    metrics: Arc<Mutex<Metrics>>,
-) {
-    let mut batcher: Batcher<Request> = Batcher::new(cfg.policy);
-    let mut stopping = false;
-    loop {
-        if !stopping && matches!(stop_rx.try_recv(), Ok(()) | Err(TryRecvError::Disconnected)) {
-            stopping = true;
-        }
-        // pull requests until the batch closes or the queue stalls
-        match req_rx.recv_timeout(batcher.time_left()) {
-            Ok(req) => batcher.push(req),
-            Err(_) => {
-                if stopping && batcher.is_empty() {
-                    // drain anything that raced in, then exit
-                    while let Ok(req) = req_rx.try_recv() {
-                        batcher.push(req);
-                    }
-                    if batcher.is_empty() {
-                        break;
-                    }
-                }
-            }
-        }
-        if !(batcher.ready() || (stopping && !batcher.is_empty())) {
-            continue;
-        }
-        let batch = batcher.drain();
-        let bs = batch.len();
-        let in_dim = engine.model.in_dim();
-        let out_dim = engine.model.out_dim();
-        let mut x_q = Vec::with_capacity(bs * in_dim);
-        for r in &batch {
-            x_q.extend_from_slice(&r.x_q);
-        }
-        let result = engine.forward_from_q(&x_q, bs);
-        let sim = engine.simulate_batch(&cfg.sim_array, bs);
-        let mut m = metrics.lock().unwrap();
-        m.record_batch(bs, sim.cycles);
-        match result {
-            Ok(fwd) => {
-                for (i, req) in batch.into_iter().enumerate() {
-                    let latency = req.submitted.elapsed();
-                    m.record_request(latency);
-                    let _ = req.resp.send(Ok(Response {
-                        t: fwd.t[i * out_dim..(i + 1) * out_dim].to_vec(),
-                        latency_us: latency.as_micros() as u64,
-                    }));
-                }
-            }
-            Err(e) => {
-                let msg = format!("inference failed: {e}");
-                for req in batch {
-                    let _ = req.resp.send(Err(msg.clone()));
-                }
-            }
-        }
+    pub fn shutdown(self) -> Metrics {
+        self.pool.shutdown().merged
     }
 }

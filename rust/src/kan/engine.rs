@@ -11,6 +11,8 @@
 //! 4. **requantize**: `t = acc1*m1 + acc2*m2` (i64) -> next uint8
 //!    activations, or raw `t` logits at the last layer.
 
+use std::sync::Arc;
+
 use anyhow::{ensure, Result};
 
 use crate::quant;
@@ -22,9 +24,21 @@ use crate::arch::ArrayConfig;
 use super::model::{LayerParams, QuantizedModel};
 
 /// Inference engine over a loaded quantized model.
+///
+/// All parameter state is behind `Arc`: cloning an `Engine` produces a
+/// replica that *aliases* the same model weights, LUT ROMs, and widened
+/// MAC tables, so an N-replica serving pool (`coordinator::pool`) costs
+/// ~1x model memory regardless of N. Verified by
+/// [`Engine::shares_weights_with`] and the aliasing test below.
 #[derive(Clone, Debug)]
 pub struct Engine {
-    pub model: QuantizedModel,
+    pub model: Arc<QuantizedModel>,
+    tables: Arc<EngineTables>,
+}
+
+/// Derived read-only per-layer state shared across replicas.
+#[derive(Debug)]
+struct EngineTables {
     /// One B-spline unit per layer, built once (perf: `layer_forward` is
     /// the serving hot path; constructing a unit clones the LUT).
     units: Vec<crate::bspline::BsplineUnit>,
@@ -56,21 +70,19 @@ impl Forward {
     }
 
     pub fn predictions(&self) -> Vec<usize> {
-        (0..self.bs)
-            .map(|b| {
-                let row = &self.t[b * self.out_dim..(b + 1) * self.out_dim];
-                row.iter()
-                    .enumerate()
-                    .max_by_key(|&(_, v)| *v)
-                    .map(|(i, _)| i)
-                    .unwrap()
-            })
-            .collect()
+        self.t.chunks_exact(self.out_dim).map(|row| crate::util::argmax(row)).collect()
     }
 }
 
 impl Engine {
     pub fn new(model: QuantizedModel) -> Self {
+        Self::from_shared(Arc::new(model))
+    }
+
+    /// Build an engine over an already-shared model (additional replicas
+    /// should just `clone()` an existing engine, which also shares the
+    /// derived tables).
+    pub fn from_shared(model: Arc<QuantizedModel>) -> Self {
         let units = model
             .layers
             .iter()
@@ -86,7 +98,33 @@ impl Engine {
             .iter()
             .map(|l| l.base.data().iter().map(|&w| w as i16).collect())
             .collect();
-        Self { model, units, coeff16, base16 }
+        Self { model, tables: Arc::new(EngineTables { units, coeff16, base16 }) }
+    }
+
+    /// True when `self` and `other` alias the same parameter storage —
+    /// i.e. they are replicas of one model, not independent copies.
+    pub fn shares_weights_with(&self, other: &Engine) -> bool {
+        Arc::ptr_eq(&self.model, &other.model) && Arc::ptr_eq(&self.tables, &other.tables)
+    }
+
+    /// Bytes of parameter + derived-table storage. Counted once per model:
+    /// clones share the same allocations, so a pool's weight footprint is
+    /// `param_bytes()` regardless of replica count.
+    pub fn param_bytes(&self) -> usize {
+        let model: usize = self
+            .model
+            .layers
+            .iter()
+            .map(|l| l.coeff.len() + l.base.len() + l.lut.raw().len())
+            .sum();
+        let widened: usize = self
+            .tables
+            .coeff16
+            .iter()
+            .chain(self.tables.base16.iter())
+            .map(|v| v.len() * 2)
+            .sum();
+        model + widened
     }
 
     /// Forward one layer: uint8 activations `(BS, K)` -> i64 `t (BS, N)`.
@@ -110,9 +148,9 @@ impl Engine {
         let (unit_owned, coeff_owned, base_owned);
         match idx {
             Some(i) => {
-                unit = &self.units[i];
-                coeff = self.coeff16[i].as_slice();
-                base = self.base16[i].as_slice();
+                unit = &self.tables.units[i];
+                coeff = self.tables.coeff16[i].as_slice();
+                base = self.tables.base16[i].as_slice();
             }
             None => {
                 unit_owned = crate::bspline::BsplineUnit::new(layer.lut.clone(), layer.grid);
@@ -387,6 +425,33 @@ mod tests {
     fn rejects_bad_input_size() {
         let e = Engine::new(tiny_model());
         assert!(e.forward_from_q(&[0, 1, 2], 2).is_err());
+    }
+
+    #[test]
+    fn clones_alias_one_weight_allocation() {
+        // pool replicas are engine clones: they must share (not copy) the
+        // coefficient storage, so N replicas cost ~1x model memory
+        let a = Engine::new(tiny_model());
+        let b = a.clone();
+        assert!(a.shares_weights_with(&b));
+        assert_eq!(
+            a.model.layers[0].coeff.data().as_ptr(),
+            b.model.layers[0].coeff.data().as_ptr(),
+            "coefficient tensors must alias one allocation"
+        );
+        assert_eq!(
+            a.tables.coeff16[0].as_ptr(),
+            b.tables.coeff16[0].as_ptr(),
+            "widened MAC tables must alias one allocation"
+        );
+        assert_eq!(a.param_bytes(), b.param_bytes());
+        assert!(a.param_bytes() > 0);
+        // an independent engine over an equal model does NOT alias
+        let c = Engine::new(tiny_model());
+        assert!(!a.shares_weights_with(&c));
+        // replicas stay bit-identical
+        let x_q = vec![3u8, 200, 90, 17];
+        assert_eq!(a.forward_from_q(&x_q, 2).unwrap().t, b.forward_from_q(&x_q, 2).unwrap().t);
     }
 
     #[test]

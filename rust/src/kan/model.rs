@@ -104,6 +104,41 @@ impl QuantizedModel {
         Ok(Self { name, dims, layers })
     }
 
+    /// Deterministic random model for tests, benches, and artifact-free
+    /// serving runs (`kansas serve --synthetic`). The weights are noise —
+    /// the integer datapath does the same work as a trained model of the
+    /// same shape, which is all throughput/latency measurement needs.
+    /// Requant multipliers are sized so mid-layer activations use a
+    /// reasonable slice of the uint8 range instead of saturating.
+    pub fn synthetic(name: &str, dims: &[usize], grid: usize, degree: usize, seed: u64) -> Self {
+        assert!(dims.len() >= 2, "need at least one layer");
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let m = grid + degree;
+        let layers = dims
+            .windows(2)
+            .map(|w| {
+                let (k, n) = (w[0], w[1]);
+                let coeff: Vec<i8> =
+                    (0..k * m * n).map(|_| rng.range_i64(-60, 60) as i8).collect();
+                let base: Vec<i8> = (0..k * n).map(|_| rng.range_i64(-60, 60) as i8).collect();
+                LayerParams {
+                    in_dim: k,
+                    out_dim: n,
+                    grid,
+                    degree,
+                    lut: Lut::build(degree),
+                    coeff: Tensor::from_vec(coeff, &[k, m, n]),
+                    base: Tensor::from_vec(base, &[k, n]),
+                    m1: 9000,
+                    m2: 3000,
+                    s1: 1.0,
+                    s2: 1.0,
+                }
+            })
+            .collect();
+        Self { name: name.to_string(), dims: dims.to_vec(), layers }
+    }
+
     pub fn in_dim(&self) -> usize {
         self.dims[0]
     }
@@ -143,6 +178,19 @@ mod tests {
         assert_eq!(m.layers[0].grid, 5);
         assert_eq!(m.layers[0].degree, 3);
         assert!(m.num_params() > 0);
+    }
+
+    #[test]
+    fn synthetic_is_deterministic_and_runs() {
+        let a = QuantizedModel::synthetic("syn", &[4, 8, 3], 5, 3, 7);
+        let b = QuantizedModel::synthetic("syn", &[4, 8, 3], 5, 3, 7);
+        assert_eq!(a.layers.len(), 2);
+        assert_eq!(a.in_dim(), 4);
+        assert_eq!(a.out_dim(), 3);
+        assert_eq!(a.layers[0].coeff.data(), b.layers[0].coeff.data());
+        let e = crate::kan::Engine::new(a);
+        let fwd = e.forward_from_q(&[0, 128, 37, 255], 1).unwrap();
+        assert_eq!(fwd.t.len(), 3);
     }
 
     #[test]

@@ -11,13 +11,42 @@
 //! * **L2 (python, build time)** — JAX KAN model (spline + base term) that
 //!   calls the L1 kernel and is AOT-lowered to HLO text in `artifacts/`.
 //! * **L3 (this crate, runtime)** — loads the artifacts through PJRT
-//!   ([`runtime`]), owns the bit-accurate integer inference engine
-//!   ([`kan`]), the cycle-level systolic-array simulator ([`sim`], [`arch`]),
-//!   the synthesis-calibrated cost models ([`cost`]), the workload registry
-//!   ([`workloads`]) and the serving coordinator ([`coordinator`]).
+//!   ([`runtime`], behind the `xla` feature), owns the bit-accurate integer
+//!   inference engine ([`kan`]), the cycle-level systolic-array simulator
+//!   ([`sim`], [`arch`]), the synthesis-calibrated cost models ([`cost`]),
+//!   the workload registry ([`workloads`]) and the serving stack
+//!   ([`coordinator`], [`loadgen`]).
+//!
+//! ## Serving architecture
+//!
+//! The paper's utilization argument — a conventional SA idles on B-splines,
+//! KAN-SAs keeps every PE lane busy — repeats one level up at the serving
+//! tier, so the request path is a **sharded multi-replica pool**
+//! ([`coordinator::pool`]):
+//!
+//! * N worker threads each own an [`kan::Engine`] replica; replicas share
+//!   the model's weights, LUTs, and widened MAC tables through `Arc`, so N
+//!   replicas cost ~1x model memory (`Engine::shares_weights_with`).
+//! * Clients submit through a **bounded admission queue** with an explicit
+//!   shed policy ([`coordinator::ShedPolicy`]): reject new arrivals with
+//!   `QueueFull`, drop the oldest queued request, or block for backpressure.
+//! * Each worker runs its own dynamic [`coordinator::Batcher`] (size +
+//!   deadline policy, deadlines anchored at true arrival times) and attaches
+//!   simulated accelerator cycles to every served batch.
+//! * Per-replica [`coordinator::Metrics`] merge into a pool-level
+//!   [`coordinator::PoolStats`] (queue depth, shed count, per-replica rows
+//!   and simulated utilization).
+//!
+//! The single-`Server` API survives as the 1-replica special case of the
+//! pool. Offered load comes from [`loadgen`]: an open-loop Poisson
+//! generator with named scenario mixes (`steady`, `diurnal`, `flash-crowd`)
+//! so throughput/latency/shed-rate curves are measured, not anecdotal —
+//! see the `serving_scale` bench.
 //!
 //! Python never runs on the request path: after `make artifacts` the `kansas`
-//! binary and all examples are self-contained.
+//! binary and all examples are self-contained. Without artifacts, synthetic
+//! models ([`kan::QuantizedModel::synthetic`]) keep the serving stack,
+//! tests, and benches fully exercisable offline.
 
 pub mod bench;
 pub mod bspline;
@@ -29,8 +58,10 @@ pub mod cost;
 pub mod arkane;
 pub mod workloads;
 pub mod kan;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod coordinator;
+pub mod loadgen;
 pub mod report;
 pub mod config;
 pub mod experiments;

@@ -1,0 +1,402 @@
+//! Open-loop traffic generation against the serving pool.
+//!
+//! Closed-loop clients (submit, wait, repeat) can never overload a
+//! server — their arrival rate adapts to service rate, which is exactly
+//! the coordinated-omission trap. The generator here is **open-loop**:
+//! arrivals follow a Poisson process at the scenario's offered rate
+//! whether or not earlier requests have finished, so queue growth, shed
+//! rate, and tail latency under overload are measured rather than hidden.
+//!
+//! A [`Scenario`] is a named mix of piecewise-constant-rate phases,
+//! mirroring the application mixes of the paper's Fig. 8 one level up
+//! (each served row still carries its per-app simulated cycle cost):
+//!
+//! * `steady` — one flat phase; the throughput/latency baseline;
+//! * `diurnal` — a sinusoid-shaped ramp between base and peak rate, the
+//!   slow capacity sweep;
+//! * `flash-crowd` — flat baseline with a sudden multi-x spike in the
+//!   middle, the admission-control stress test.
+//!
+//! [`run`] drives a [`PoolHandle`] and returns a [`LoadReport`]
+//! (offered vs achieved rate, shed counts, latency percentiles).
+//! [`closed_loop`] is the saturation counterpart used by the
+//! `serving_scale` bench to measure peak rows/sec per replica count.
+
+use std::sync::mpsc::channel;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{LatencyStats, Metrics, PoolError, PoolHandle, Ticket};
+use crate::util::rng::Rng;
+
+/// One constant-rate segment of a scenario.
+#[derive(Clone, Debug)]
+pub struct Phase {
+    pub rate_rps: f64,
+    pub duration: Duration,
+}
+
+/// A named piecewise-constant offered-load schedule.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: String,
+    pub phases: Vec<Phase>,
+}
+
+impl Scenario {
+    pub fn steady(rate_rps: f64, duration: Duration) -> Self {
+        Self { name: "steady".into(), phases: vec![Phase { rate_rps, duration }] }
+    }
+
+    /// Diurnal ramp: a half-sine day between `base_rps` and `peak_rps`,
+    /// sampled as 8 piecewise-constant steps.
+    pub fn diurnal(base_rps: f64, peak_rps: f64, duration: Duration) -> Self {
+        const STEPS: u32 = 8;
+        let step = duration / STEPS;
+        let phases = (0..STEPS)
+            .map(|i| {
+                let frac = (i as f64 + 0.5) / STEPS as f64;
+                let level = (std::f64::consts::PI * frac).sin();
+                Phase { rate_rps: base_rps + (peak_rps - base_rps) * level, duration: step }
+            })
+            .collect();
+        Self { name: "diurnal".into(), phases }
+    }
+
+    /// Flash crowd: steady baseline, a `spike_mult`x spike for the middle
+    /// fifth, then recovery.
+    pub fn flash_crowd(base_rps: f64, spike_mult: f64, duration: Duration) -> Self {
+        let fifth = duration / 5;
+        Self {
+            name: "flash-crowd".into(),
+            phases: vec![
+                Phase { rate_rps: base_rps, duration: fifth * 2 },
+                Phase { rate_rps: base_rps * spike_mult, duration: fifth },
+                Phase { rate_rps: base_rps, duration: fifth * 2 },
+            ],
+        }
+    }
+
+    /// Named mixes for CLIs and benches. `rate_rps` is the headline rate:
+    /// steady runs flat at it, diurnal peaks at it (base = rate/4), and
+    /// flash-crowd spikes to 2x it (base = rate/2, 4x spike).
+    pub fn by_name(name: &str, rate_rps: f64, duration: Duration) -> Option<Self> {
+        match name {
+            "steady" => Some(Self::steady(rate_rps, duration)),
+            "diurnal" => Some(Self::diurnal(rate_rps * 0.25, rate_rps, duration)),
+            "flash-crowd" | "flash_crowd" => Some(Self::flash_crowd(rate_rps * 0.5, 4.0, duration)),
+            _ => None,
+        }
+    }
+
+    pub fn total_duration(&self) -> Duration {
+        self.phases.iter().map(|p| p.duration).sum()
+    }
+
+    /// Expected number of arrivals over the whole schedule.
+    pub fn expected_arrivals(&self) -> f64 {
+        self.phases.iter().map(|p| p.rate_rps * p.duration.as_secs_f64()).sum()
+    }
+
+    /// Time-averaged offered rate.
+    pub fn offered_rps(&self) -> f64 {
+        let secs = self.total_duration().as_secs_f64();
+        if secs == 0.0 {
+            return 0.0;
+        }
+        self.expected_arrivals() / secs
+    }
+}
+
+/// Outcome counts and latency distribution of one generator run.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub scenario: String,
+    /// Submissions the generator attempted (admitted + shed + failed).
+    pub submitted: u64,
+    /// Requests answered with logits.
+    pub ok: u64,
+    /// Requests answered `QueueFull` (at submit or by eviction).
+    pub shed: u64,
+    /// Other terminal errors (pool closed mid-run, inference failures).
+    pub failed: u64,
+    /// Wall time from first arrival to last response collected.
+    pub wall: Duration,
+    pub offered_rps: f64,
+    /// Completed requests per second of wall time.
+    pub achieved_rps: f64,
+    pub latency: Option<LatencyStats>,
+}
+
+impl LoadReport {
+    pub fn shed_rate(&self) -> f64 {
+        if self.submitted == 0 {
+            return 0.0;
+        }
+        self.shed as f64 / self.submitted as f64
+    }
+
+    /// One-line human summary for benches and the CLI.
+    pub fn summary(&self) -> String {
+        let lat = match &self.latency {
+            Some(l) => format!("p50 {} us  p99 {} us", l.p50_us, l.p99_us),
+            None => "no completions".to_string(),
+        };
+        format!(
+            "{:<12} offered {:>7.0} rps  achieved {:>7.0} rps  ok {:>6}  shed {:>5} ({:>5.1}%)  {lat}",
+            self.scenario,
+            self.offered_rps,
+            self.achieved_rps,
+            self.ok,
+            self.shed,
+            100.0 * self.shed_rate()
+        )
+    }
+}
+
+/// Sleep to an absolute instant with sub-millisecond accuracy: coarse
+/// `thread::sleep` for the bulk, yield-spin for the last stretch.
+fn sleep_until(t: Instant) {
+    loop {
+        let now = Instant::now();
+        if now >= t {
+            return;
+        }
+        let left = t - now;
+        if left > Duration::from_millis(2) {
+            thread::sleep(left - Duration::from_millis(1));
+        } else {
+            thread::yield_now();
+        }
+    }
+}
+
+/// Drive `handle` with the scenario's open-loop Poisson arrivals; block
+/// until every in-flight ticket resolves. Deterministic per `seed` in
+/// which inputs are generated (arrival *times* are wall-clock, so counts
+/// are statistical).
+pub fn run(handle: &PoolHandle, scenario: &Scenario, seed: u64) -> LoadReport {
+    let in_dim = handle.in_dim();
+    let (tick_tx, tick_rx) = channel::<Ticket>();
+    // collector: resolves tickets concurrently so the generator never
+    // waits on responses (open loop)
+    let collector = thread::spawn(move || {
+        let mut m = Metrics::default();
+        let (mut ok, mut shed, mut failed) = (0u64, 0u64, 0u64);
+        while let Ok(t) = tick_rx.recv() {
+            match t.wait() {
+                Ok(resp) => {
+                    ok += 1;
+                    m.record_request(Duration::from_micros(resp.latency_us));
+                }
+                Err(PoolError::QueueFull) => shed += 1,
+                Err(_) => failed += 1,
+            }
+        }
+        (m, ok, shed, failed)
+    });
+
+    let mut rng = Rng::new(seed);
+    let t0 = Instant::now();
+    let mut phase_start = t0;
+    let mut submitted = 0u64;
+    let mut shed_at_submit = 0u64;
+    let mut failed_at_submit = 0u64;
+    'phases: for ph in &scenario.phases {
+        let phase_end = phase_start + ph.duration;
+        if ph.rate_rps > 0.0 {
+            let mut cursor = phase_start;
+            loop {
+                let dt = -(1.0 - rng.next_f64()).ln() / ph.rate_rps;
+                cursor += Duration::from_secs_f64(dt);
+                if cursor >= phase_end {
+                    break;
+                }
+                sleep_until(cursor);
+                let x_q: Vec<u8> = (0..in_dim).map(|_| rng.below(256) as u8).collect();
+                submitted += 1;
+                match handle.submit_q(x_q) {
+                    Ok(t) => {
+                        let _ = tick_tx.send(t);
+                    }
+                    Err(PoolError::QueueFull) => shed_at_submit += 1,
+                    Err(PoolError::Closed) => {
+                        failed_at_submit += 1;
+                        break 'phases;
+                    }
+                    Err(_) => failed_at_submit += 1,
+                }
+            }
+        }
+        sleep_until(phase_end);
+        phase_start = phase_end;
+    }
+    drop(tick_tx);
+    let (m, ok, shed_in_flight, failed_in_flight) = collector.join().expect("collector");
+    let wall = t0.elapsed();
+    LoadReport {
+        scenario: scenario.name.clone(),
+        submitted,
+        ok,
+        shed: shed_at_submit + shed_in_flight,
+        failed: failed_at_submit + failed_in_flight,
+        wall,
+        offered_rps: scenario.offered_rps(),
+        achieved_rps: ok as f64 / wall.as_secs_f64(),
+        latency: m.latency(),
+    }
+}
+
+/// Closed-loop saturation: `clients` threads hammer the pool (submit,
+/// wait, repeat) until `duration` elapses — or until a thread has issued
+/// `per_client` requests, when a budget is given. Measures peak service
+/// capacity rather than behaviour at a fixed offered rate; `offered_rps`
+/// is the attempt rate (including shed), `achieved_rps` the completion
+/// rate.
+pub fn closed_loop(
+    handle: &PoolHandle,
+    clients: usize,
+    duration: Duration,
+    per_client: Option<usize>,
+    seed: u64,
+) -> LoadReport {
+    let in_dim = handle.in_dim();
+    let t0 = Instant::now();
+    let deadline = t0 + duration;
+    let budget = per_client.unwrap_or(usize::MAX);
+    let mut threads = Vec::with_capacity(clients);
+    for c in 0..clients {
+        let h = handle.clone();
+        threads.push(thread::spawn(move || {
+            let mut rng = Rng::new(seed.wrapping_add((c as u64).wrapping_mul(0x9E37_79B9)));
+            let mut m = Metrics::default();
+            let (mut ok, mut shed, mut failed) = (0u64, 0u64, 0u64);
+            let mut sent = 0usize;
+            while sent < budget && Instant::now() < deadline {
+                sent += 1;
+                let x_q: Vec<u8> = (0..in_dim).map(|_| rng.below(256) as u8).collect();
+                match h.infer_q(x_q) {
+                    Ok(r) => {
+                        ok += 1;
+                        m.record_request(Duration::from_micros(r.latency_us));
+                    }
+                    Err(PoolError::QueueFull) => shed += 1,
+                    Err(PoolError::Closed) => {
+                        failed += 1;
+                        break;
+                    }
+                    Err(_) => failed += 1,
+                }
+            }
+            (m, ok, shed, failed)
+        }));
+    }
+    let mut merged = Metrics::default();
+    let (mut ok, mut shed, mut failed) = (0u64, 0u64, 0u64);
+    for t in threads {
+        let (m, o, s, f) = t.join().expect("client thread");
+        merged.merge(&m);
+        ok += o;
+        shed += s;
+        failed += f;
+    }
+    let wall = t0.elapsed();
+    LoadReport {
+        scenario: "closed-loop".into(),
+        submitted: ok + shed + failed,
+        ok,
+        shed,
+        failed,
+        wall,
+        offered_rps: (ok + shed + failed) as f64 / wall.as_secs_f64(),
+        achieved_rps: ok as f64 / wall.as_secs_f64(),
+        latency: merged.latency(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ArrayConfig;
+    use crate::coordinator::{BatchPolicy, Pool, PoolConfig, ShedPolicy};
+    use crate::kan::{Engine, QuantizedModel};
+
+    fn tiny_pool(replicas: usize, queue_cap: usize, shed: ShedPolicy) -> Pool {
+        let engine = Engine::new(QuantizedModel::synthetic("lg", &[4, 8, 3], 5, 3, 1));
+        Pool::start(
+            engine,
+            PoolConfig {
+                replicas,
+                queue_cap,
+                shed,
+                policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+                sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
+            },
+        )
+    }
+
+    #[test]
+    fn scenario_shapes() {
+        let total = Duration::from_millis(1000);
+        let s = Scenario::steady(100.0, total);
+        assert_eq!(s.total_duration(), total);
+        assert!((s.expected_arrivals() - 100.0).abs() < 1e-9);
+        assert!((s.offered_rps() - 100.0).abs() < 1e-9);
+
+        let d = Scenario::diurnal(10.0, 100.0, total);
+        assert_eq!(d.phases.len(), 8);
+        assert_eq!(d.total_duration(), total);
+        let peak = d.phases.iter().map(|p| p.rate_rps).fold(0.0f64, f64::max);
+        let low = d.phases.iter().map(|p| p.rate_rps).fold(f64::INFINITY, f64::min);
+        assert!(peak > low, "ramp must actually ramp");
+        assert!(peak <= 100.0 + 1e-9 && low >= 10.0 - 1e-9);
+
+        let f = Scenario::flash_crowd(50.0, 4.0, total);
+        assert_eq!(f.phases.len(), 3);
+        assert!((f.phases[1].rate_rps - 200.0).abs() < 1e-9);
+        assert_eq!(f.total_duration(), total);
+
+        assert!(Scenario::by_name("steady", 10.0, total).is_some());
+        assert!(Scenario::by_name("diurnal", 10.0, total).is_some());
+        assert!(Scenario::by_name("flash-crowd", 10.0, total).is_some());
+        assert!(Scenario::by_name("bogus", 10.0, total).is_none());
+    }
+
+    #[test]
+    fn open_loop_conserves_outcomes() {
+        let pool = tiny_pool(2, 64, ShedPolicy::RejectNew);
+        let sc = Scenario::steady(2000.0, Duration::from_millis(150));
+        let rep = run(&pool.handle(), &sc, 11);
+        let stats = pool.shutdown();
+        assert_eq!(rep.submitted, rep.ok + rep.shed + rep.failed, "every arrival has one outcome");
+        assert!(rep.ok > 0, "a 2-replica pool must serve something at 2k rps");
+        assert_eq!(rep.failed, 0, "healthy pool, valid inputs: no failures");
+        assert_eq!(stats.completed, rep.ok);
+        assert_eq!(stats.shed, rep.shed);
+        assert_eq!(stats.submitted, rep.submitted);
+        assert_eq!(rep.latency.unwrap().count as u64, rep.ok);
+        assert_eq!(rep.scenario, "steady");
+    }
+
+    #[test]
+    fn closed_loop_reports_capacity() {
+        let pool = tiny_pool(2, 64, ShedPolicy::Block);
+        let rep = closed_loop(&pool.handle(), 4, Duration::from_millis(120), None, 3);
+        let stats = pool.shutdown();
+        assert!(rep.ok > 0);
+        assert_eq!(rep.shed, 0, "Block policy never sheds");
+        assert_eq!(stats.completed, rep.ok);
+        assert!(rep.achieved_rps > 0.0);
+    }
+
+    #[test]
+    fn closed_loop_respects_request_budget() {
+        let pool = tiny_pool(1, 64, ShedPolicy::Block);
+        let rep = closed_loop(&pool.handle(), 3, Duration::from_secs(30), Some(5), 3);
+        let stats = pool.shutdown();
+        assert_eq!(rep.submitted, 15, "3 clients x 5 requests");
+        assert_eq!(rep.ok, 15);
+        assert_eq!(stats.completed, 15);
+        assert!(rep.wall < Duration::from_secs(30), "budget ends the run, not the deadline");
+    }
+}

@@ -11,25 +11,25 @@
 //! kansas arkane                    # Sec. V-B — B-spline vs ArKANe
 //! kansas accuracy [--model NAME]   # int8 vs fp32 accuracy (golden batch)
 //! kansas simulate [--rows R --cols C --pe N:M --bs B]   # one config
-//! kansas serve [--model NAME --requests N --max-batch B] # serving demo
+//! kansas serve [--model NAME --replicas R --scenario MIX] # replica pool
 //! kansas quickstart                # minimal end-to-end smoke
 //! ```
 
 use std::path::PathBuf;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
 use kan_sas::arch::{ArrayConfig, WeightLoad};
-use kan_sas::config::{parse_pe, RunConfig};
-use kan_sas::coordinator::{BatchPolicy, Server, ServerConfig};
+use kan_sas::config::{parse_pe, parse_shed, RunConfig};
+use kan_sas::coordinator::{BatchPolicy, Pool};
 use kan_sas::cost::array_area_mm2;
 use kan_sas::experiments;
 use kan_sas::kan::{Engine, QuantizedModel};
+use kan_sas::loadgen::{self, Scenario};
 use kan_sas::report::Table;
-use kan_sas::runtime::{FloatEngine, ModelArtifacts};
 use kan_sas::sim::analytic;
 use kan_sas::util::container::Container;
-use kan_sas::util::rng::Rng;
 use kan_sas::workloads;
 
 fn artifacts_dir() -> PathBuf {
@@ -105,9 +105,14 @@ fn print_help() {
          experiments:   table1 | table2 | fig7 [--csv DIR] | fig8 | arkane\n\
          validation:    accuracy [--model mnist_kan]\n\
          simulation:    simulate [--rows R --cols C --pe N:M|scalar --bs B --counted-loads]\n\
-         serving:       serve [--model NAME --requests N --max-batch B --clients C]\n\
+         serving:       serve [--model NAME --synthetic --replicas R --queue-cap Q\n\
+                               --shed reject|drop-oldest|block --max-batch B\n\
+                               --requests N --clients C\n\
+                               --scenario steady|diurnal|flash-crowd --rate RPS --duration-ms MS]\n\
          smoke:         quickstart\n\
          \n\
+         serve runs the N-replica pool: closed-loop clients by default, or an\n\
+         open-loop load-generator scenario with --scenario.\n\
          --config FILE (json) applies to simulate/serve; artifacts are read\n\
          from ./artifacts (override with KANSAS_ARTIFACTS)."
     );
@@ -225,54 +230,85 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let requests: usize = args.parsed("--requests", 256)?;
     let clients: usize = args.parsed("--clients", 4)?;
     let max_batch: usize = args.parsed("--max-batch", base.policy.max_batch)?;
-    let dir = artifacts_dir();
-    let qm = QuantizedModel::load(&dir.join(format!("{model}.kanq")))
-        .context("run `make artifacts` first")?;
-    let in_dim = qm.in_dim();
-    let engine = Engine::new(qm);
-    let server = Server::start(
-        engine,
-        ServerConfig {
-            policy: BatchPolicy { max_batch, ..base.policy },
-            sim_array: base.array,
-        },
-    );
-    let t0 = std::time::Instant::now();
-    let per_client = requests / clients;
-    let mut threads = Vec::new();
-    for c in 0..clients {
-        let h = server.handle();
-        threads.push(std::thread::spawn(move || {
-            let mut rng = Rng::new(c as u64);
-            for _ in 0..per_client {
-                let x: Vec<f32> = (0..in_dim).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
-                h.infer(&x).expect("infer");
-            }
-        }));
+    let mut pool_cfg = base.to_pool_config();
+    pool_cfg.policy = BatchPolicy { max_batch, ..base.policy };
+    pool_cfg.replicas = args.parsed("--replicas", pool_cfg.replicas)?;
+    pool_cfg.queue_cap = args.parsed("--queue-cap", pool_cfg.queue_cap)?;
+    if let Some(s) = args.get("--shed") {
+        pool_cfg.shed = parse_shed(s)?;
     }
-    for th in threads {
-        th.join().unwrap();
+    let engine = if args.flag("--synthetic") {
+        Engine::new(QuantizedModel::synthetic("synthetic_kan", &[64, 64, 10], 5, 3, 17))
+    } else {
+        let dir = artifacts_dir();
+        let qm = QuantizedModel::load(&dir.join(format!("{model}.kanq")))
+            .context("run `make artifacts` first (or pass --synthetic)")?;
+        Engine::new(qm)
+    };
+    println!(
+        "serve — {} replicas x {} (queue {} / {:?}), weights shared: {} KiB total",
+        pool_cfg.replicas,
+        engine.model.name,
+        pool_cfg.queue_cap,
+        pool_cfg.shed,
+        engine.param_bytes() / 1024
+    );
+    let replicas = pool_cfg.replicas;
+    let pool = Pool::start(engine, pool_cfg);
+
+    let report = if let Some(name) = args.get("--scenario") {
+        let rate: f64 = args.parsed("--rate", 2000.0)?;
+        let dur_ms: u64 = args.parsed("--duration-ms", 2000)?;
+        let sc = Scenario::by_name(name, rate, Duration::from_millis(dur_ms))
+            .with_context(|| format!("unknown scenario '{name}' (steady|diurnal|flash-crowd)"))?;
+        loadgen::run(&pool.handle(), &sc, 12345)
+    } else {
+        // legacy closed-loop mode, sized by --requests/--clients
+        let per_client = requests / clients.max(1);
+        loadgen::closed_loop(
+            &pool.handle(),
+            clients,
+            Duration::from_secs(3600),
+            Some(per_client),
+            12345,
+        )
+    };
+
+    let stats = pool.shutdown();
+    println!("{}", report.summary());
+    println!(
+        "throughput: {:.0} rows/s over {:.2}s   mean batch {:.1}   batches {}   peak queue {}",
+        stats.merged.batch_rows as f64 / report.wall.as_secs_f64(),
+        report.wall.as_secs_f64(),
+        stats.merged.mean_batch_size(),
+        stats.merged.batches,
+        stats.peak_depth
+    );
+    if let Some(lat) = stats.merged.latency() {
+        println!(
+            "latency us: mean {:.0}  p50 {}  p95 {}  p99 {}  max {}",
+            lat.mean_us, lat.p50_us, lat.p95_us, lat.p99_us, lat.max_us
+        );
     }
-    let wall = t0.elapsed();
-    let metrics = server.shutdown();
-    let lat = metrics.latency().context("no requests recorded")?;
-    println!("serve — model {model}, {clients} clients x {per_client} requests, max_batch {max_batch}");
     println!(
-        "throughput: {:.0} req/s   mean batch {:.1}   batches {}",
-        (per_client * clients) as f64 / wall.as_secs_f64(),
-        metrics.mean_batch_size(),
-        metrics.batches
-    );
-    println!(
-        "latency us: mean {:.0}  p50 {}  p95 {}  p99 {}  max {}",
-        lat.mean_us, lat.p50_us, lat.p95_us, lat.p99_us, lat.max_us
-    );
-    println!(
-        "simulated accelerator: {} cycles total on {} ({:.3} mm^2)",
-        metrics.sim_cycles,
+        "simulated accelerator: {} cycles total on {} ({:.3} mm^2), utilization {:.1}%",
+        stats.merged.sim_cycles,
         base.array.label(),
-        array_area_mm2(&base.array)
+        array_area_mm2(&base.array),
+        100.0 * stats.merged.sim_utilization()
     );
+    let mut t = Table::new(&["replica", "rows", "batches", "sim cycles", "sim util %"])
+        .with_title(format!("per-replica load balance ({replicas} replicas)").as_str());
+    for (i, m) in stats.per_replica.iter().enumerate() {
+        t.row(vec![
+            i.to_string(),
+            m.batch_rows.to_string(),
+            m.batches.to_string(),
+            m.sim_cycles.to_string(),
+            format!("{:.1}", 100.0 * m.sim_utilization()),
+        ]);
+    }
+    print!("{}", t.render());
     Ok(())
 }
 
@@ -285,12 +321,18 @@ fn cmd_quickstart() -> Result<()> {
     let fwd = engine.forward(&x, 1)?;
     println!("int8 engine prediction: class {}", fwd.predictions()[0]);
 
-    let client = xla::PjRtClient::cpu()?;
-    let art = ModelArtifacts::new(&dir, "quickstart_kan");
-    let fe = FloatEngine::load(&client, &art, 1)?;
-    let logits = fe.execute(&x)?;
-    println!("pjrt fp32 logits: {logits:?}");
-    println!("pjrt fp32 prediction: class {}", fe.predictions(&logits)[0]);
+    #[cfg(feature = "xla")]
+    {
+        use kan_sas::runtime::{FloatEngine, ModelArtifacts};
+        let client = xla::PjRtClient::cpu()?;
+        let art = ModelArtifacts::new(&dir, "quickstart_kan");
+        let fe = FloatEngine::load(&client, &art, 1)?;
+        let logits = fe.execute(&x)?;
+        println!("pjrt fp32 logits: {logits:?}");
+        println!("pjrt fp32 prediction: class {}", fe.predictions(&logits)[0]);
+    }
+    #[cfg(not(feature = "xla"))]
+    println!("pjrt fp32 cross-check skipped (rebuild with --features xla)");
     println!("quickstart OK");
     Ok(())
 }

@@ -113,15 +113,6 @@ impl FloatEngine {
     }
 
     pub fn predictions(&self, logits: &[f32]) -> Vec<usize> {
-        logits
-            .chunks_exact(self.out_dim)
-            .map(|row| {
-                row.iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .map(|(i, _)| i)
-                    .unwrap()
-            })
-            .collect()
+        logits.chunks_exact(self.out_dim).map(|row| crate::util::argmax(row)).collect()
     }
 }

@@ -36,6 +36,31 @@ pub fn round_clamp(x: f64, lo: i64, hi: i64) -> i64 {
     (round_half_even(x) as i64).clamp(lo, hi)
 }
 
+/// Index of the largest element; on ties the *last* maximal index wins
+/// (the `Iterator::max_by_key` convention every pre-dedup argmax here
+/// used, so golden predictions are unchanged). Incomparable values (NaN
+/// — detected as `x != x`) never become or displace the best: any
+/// comparable element beats an incomparable one, even a leading NaN.
+/// Panics on an empty slice.
+pub fn argmax<T: PartialOrd>(xs: &[T]) -> usize {
+    assert!(!xs.is_empty(), "argmax of empty slice");
+    let incomparable = |x: &T| x != x;
+    let mut best = 0;
+    for i in 1..xs.len() {
+        match xs[i].partial_cmp(&xs[best]) {
+            Some(std::cmp::Ordering::Greater | std::cmp::Ordering::Equal) => best = i,
+            Some(std::cmp::Ordering::Less) => {}
+            // NaN on one side: a comparable candidate evicts a NaN best
+            None => {
+                if incomparable(&xs[best]) && !incomparable(&xs[i]) {
+                    best = i;
+                }
+            }
+        }
+    }
+    best
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -66,5 +91,29 @@ mod tests {
         assert_eq!(round_clamp(300.0, 0, 255), 255);
         assert_eq!(round_clamp(-1.2, 0, 255), 0);
         assert_eq!(round_clamp(12.3, 0, 255), 12);
+    }
+
+    #[test]
+    fn argmax_matches_max_by_key_convention() {
+        assert_eq!(argmax(&[5i64, 9, 1]), 1);
+        assert_eq!(argmax(&[-3i64, -1, -2]), 1);
+        assert_eq!(argmax(&[7i64]), 0);
+        // ties: last maximal index, like Iterator::max_by_key
+        assert_eq!(argmax(&[2i64, 5, 5, 1]), 2);
+        assert_eq!(
+            argmax(&[3i64, 3, 3]),
+            [3i64, 3, 3].iter().enumerate().max_by_key(|&(_, v)| *v).unwrap().0
+        );
+        // floats, NaN never wins — even in the leading (seed) position
+        assert_eq!(argmax(&[0.5f32, f32::NAN, 2.0, 1.0]), 2);
+        assert_eq!(argmax(&[f32::NAN, 0.5, 2.0, 1.0]), 2);
+        assert_eq!(argmax(&[f32::NAN, -1.0]), 1);
+        assert_eq!(argmax(&[f32::NAN]), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty")]
+    fn argmax_empty_panics() {
+        argmax::<i64>(&[]);
     }
 }

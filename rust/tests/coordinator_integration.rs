@@ -1,13 +1,17 @@
 //! Coordinator integration: conservation (every request answered exactly
-//! once), batching behaviour under concurrency, metrics sanity. Uses the
-//! quickstart artifact when present, otherwise a hand-built tiny model.
+//! once — including under load-shedding and shutdown races), batching
+//! behaviour under concurrency, replica weight-sharing, metrics sanity.
+//! Uses the quickstart artifact when present, otherwise a hand-built tiny
+//! model.
 
 use std::path::PathBuf;
 use std::time::Duration;
 
 use kan_sas::arch::ArrayConfig;
 use kan_sas::bspline::Lut;
-use kan_sas::coordinator::{BatchPolicy, Server, ServerConfig};
+use kan_sas::coordinator::{
+    BatchPolicy, Pool, PoolConfig, PoolError, Server, ServerConfig, ShedPolicy,
+};
 use kan_sas::kan::{Engine, LayerParams, QuantizedModel};
 use kan_sas::tensor::Tensor;
 use kan_sas::util::rng::Rng;
@@ -138,4 +142,182 @@ fn wrong_dim_rejected() {
     let server = Server::start(load_engine(), ServerConfig::default());
     assert!(server.handle().infer(&[0.0; 3]).is_err());
     server.shutdown();
+}
+
+// ---------------- pool (multi-replica + admission control) ----------------
+
+fn pool_config(replicas: usize, queue_cap: usize, shed: ShedPolicy) -> PoolConfig {
+    PoolConfig {
+        replicas,
+        queue_cap,
+        shed,
+        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+        sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
+    }
+}
+
+#[test]
+fn pool_conserves_under_load_shedding() {
+    // a deliberately tiny queue + RejectNew: every submission must get
+    // exactly one terminal outcome (Ok or QueueFull), and the client-side
+    // tallies must reconcile exactly with the pool's own counters
+    let pool = Pool::start(load_engine(), pool_config(2, 4, ShedPolicy::RejectNew));
+    let in_dim = pool.handle().in_dim();
+    let n_clients = 6;
+    let per_client = 120;
+    let mut threads = Vec::new();
+    for c in 0..n_clients {
+        let h = pool.handle();
+        threads.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(500 + c as u64);
+            let (mut ok, mut shed) = (0u64, 0u64);
+            // burst tickets to put real pressure on the admission queue
+            let mut tickets = Vec::new();
+            for i in 0..per_client {
+                let x_q: Vec<u8> = (0..in_dim).map(|_| rng.below(256) as u8).collect();
+                match h.submit_q(x_q) {
+                    Ok(t) => tickets.push(t),
+                    Err(PoolError::QueueFull) => shed += 1,
+                    Err(e) => panic!("unexpected submit error: {e}"),
+                }
+                if i % 16 == 15 {
+                    // drain the burst so some requests also complete
+                    for t in tickets.drain(..) {
+                        match t.wait() {
+                            Ok(r) => {
+                                ok += 1;
+                                assert!(!r.t.is_empty());
+                            }
+                            Err(PoolError::QueueFull) => shed += 1,
+                            Err(e) => panic!("unexpected terminal: {e}"),
+                        }
+                    }
+                }
+            }
+            for t in tickets {
+                match t.wait() {
+                    Ok(_) => ok += 1,
+                    Err(PoolError::QueueFull) => shed += 1,
+                    Err(e) => panic!("unexpected terminal: {e}"),
+                }
+            }
+            (ok, shed)
+        }));
+    }
+    let (mut ok, mut shed) = (0u64, 0u64);
+    for t in threads {
+        let (o, s) = t.join().unwrap();
+        ok += o;
+        shed += s;
+    }
+    let total = (n_clients * per_client) as u64;
+    assert_eq!(ok + shed, total, "every submission answered exactly once");
+    let stats = pool.shutdown();
+    assert_eq!(stats.submitted, total);
+    assert_eq!(stats.completed, ok);
+    assert_eq!(stats.shed, shed);
+    assert_eq!(stats.failed, 0);
+    assert_eq!(stats.submitted, stats.completed + stats.shed + stats.failed, "conservation");
+    assert_eq!(stats.merged.latency().map(|l| l.count).unwrap_or(0) as u64, ok);
+    assert_eq!(stats.merged.batch_rows, ok, "served rows == completed requests");
+    assert!(stats.peak_depth <= 4, "bounded queue respected");
+}
+
+#[test]
+fn pool_conserves_across_shutdown_race() {
+    // clients keep submitting while the pool shuts down mid-flight: each
+    // submission still resolves exactly once (Ok | QueueFull | Closed),
+    // and everything admitted before close is served, never dropped
+    let pool = Pool::start(load_engine(), pool_config(3, 64, ShedPolicy::RejectNew));
+    let in_dim = pool.handle().in_dim();
+    let mut threads = Vec::new();
+    for c in 0..4 {
+        let h = pool.handle();
+        threads.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(900 + c as u64);
+            let (mut ok, mut shed, mut closed) = (0u64, 0u64, 0u64);
+            let mut submitted = 0u64;
+            loop {
+                let x_q: Vec<u8> = (0..in_dim).map(|_| rng.below(256) as u8).collect();
+                submitted += 1;
+                match h.infer_q(x_q) {
+                    Ok(_) => ok += 1,
+                    Err(PoolError::QueueFull) => shed += 1,
+                    Err(PoolError::Closed) => {
+                        closed += 1;
+                        break;
+                    }
+                    Err(e) => panic!("unexpected terminal: {e}"),
+                }
+            }
+            (submitted, ok, shed, closed)
+        }));
+    }
+    std::thread::sleep(Duration::from_millis(30));
+    let stats = pool.shutdown();
+    let (mut submitted, mut ok, mut shed, mut closed) = (0u64, 0u64, 0u64, 0u64);
+    for t in threads {
+        let (su, o, s, cl) = t.join().unwrap();
+        submitted += su;
+        ok += o;
+        shed += s;
+        closed += cl;
+    }
+    assert_eq!(submitted, ok + shed + closed, "every submission resolved exactly once");
+    assert!(ok > 0, "pool served requests before shutdown");
+    // pool-side counters exclude Closed (never admitted, never shed)
+    assert_eq!(stats.submitted, ok + shed);
+    assert_eq!(stats.completed, ok);
+    assert_eq!(stats.shed, shed);
+    assert_eq!(stats.merged.batch_rows, ok, "admitted-before-close requests all served");
+}
+
+#[test]
+fn pool_replicas_share_weights_and_balance_load() {
+    let engine = load_engine();
+    let replica = engine.clone();
+    assert!(engine.shares_weights_with(&replica), "replicas alias one weight allocation");
+    assert_eq!(
+        engine.model.layers[0].coeff.data().as_ptr(),
+        replica.model.layers[0].coeff.data().as_ptr(),
+        "coefficient tensors alias one allocation (pool memory ~flat in replicas)"
+    );
+    let pool = Pool::start(engine, pool_config(4, 256, ShedPolicy::Block));
+    let h = pool.handle();
+    let in_dim = h.in_dim();
+    let mut threads = Vec::new();
+    for c in 0..8 {
+        let h = h.clone();
+        threads.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(c as u64);
+            for _ in 0..40 {
+                let x_q: Vec<u8> = (0..in_dim).map(|_| rng.below(256) as u8).collect();
+                h.infer_q(x_q).expect("Block policy never sheds");
+            }
+        }));
+    }
+    for t in threads {
+        t.join().unwrap();
+    }
+    let stats = pool.shutdown();
+    assert_eq!(stats.completed, 8 * 40);
+    assert_eq!(stats.per_replica.len(), 4);
+    let rows: u64 = stats.per_replica.iter().map(|m| m.batch_rows).sum();
+    assert_eq!(rows, 8 * 40, "per-replica rows sum to the total");
+    let busy = stats.per_replica.iter().filter(|m| m.batch_rows > 0).count();
+    assert!(busy >= 2, "work spread across replicas (got {busy} busy of 4)");
+    assert!(stats.merged.sim_cycles > 0, "simulated cycles attached per replica");
+}
+
+#[test]
+fn pool_deterministic_same_input_same_logits() {
+    let pool = Pool::start(load_engine(), pool_config(3, 64, ShedPolicy::Block));
+    let h = pool.handle();
+    let x = vec![0.25f32, -0.5, 0.75, 0.1];
+    let a = h.infer(&x).unwrap();
+    // replicas are bit-identical: whichever worker serves it, same t
+    for _ in 0..10 {
+        assert_eq!(h.infer(&x).unwrap().t, a.t);
+    }
+    pool.shutdown();
 }

@@ -1,6 +1,8 @@
 //! PJRT round-trip: load the AOT HLO text, compile on the CPU client,
 //! execute with the exported weights, and cross-check against both the
-//! golden labels and the integer engine. Artifact-gated.
+//! golden labels and the integer engine. Artifact-gated, and compiled
+//! only with the `xla` feature (the default offline build has no PJRT).
+#![cfg(feature = "xla")]
 
 use std::path::PathBuf;
 

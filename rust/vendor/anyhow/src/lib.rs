@@ -1,0 +1,179 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build image has no registry access, so this crate provides the
+//! subset of anyhow's API the workspace actually uses — `Error`,
+//! `Result<T>`, `Context` on both `Result` and `Option`, and the
+//! `anyhow!` / `bail!` / `ensure!` macros — with the same semantics at
+//! those call sites (context prepends `"{ctx}: {cause}"`, `?` converts
+//! any `std::error::Error`, ties to the real crate's macro grammar).
+//! Errors carry a rendered message only; no backtraces or source chains.
+
+use std::fmt;
+
+/// A rendered error message (anyhow's `Error`, minus backtraces).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable (anyhow's `Error::msg`).
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Self { msg: m.to_string() }
+    }
+
+    /// Prepend a context layer: `"{ctx}: {self}"`.
+    pub fn context<C: fmt::Display>(self, ctx: C) -> Self {
+        Self { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// `?` conversion from any std error. `Error` itself deliberately does NOT
+// implement `std::error::Error`, exactly like the real anyhow, so this
+// blanket impl cannot overlap the reflexive `From<T> for T`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Self::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with a defaulted error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to the error/`None` arm of a `Result` or `Option`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{ctx}: {e}") })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn macro_forms() {
+        let lit = anyhow!("plain");
+        assert_eq!(lit.to_string(), "plain");
+        let x = 7;
+        let cap = anyhow!("x = {x}");
+        assert_eq!(cap.to_string(), "x = 7");
+        let args = anyhow!("{} + {}", 1, 2);
+        assert_eq!(args.to_string(), "1 + 2");
+        let from_string = anyhow!(String::from("owned"));
+        assert_eq!(from_string.to_string(), "owned");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {flag}");
+            let n = 3;
+            ensure!(n > 2);
+            if n == 99 {
+                bail!("unreachable {n}");
+            }
+            Ok(n)
+        }
+        assert_eq!(f(true).unwrap(), 3);
+        assert_eq!(f(false).unwrap_err().to_string(), "flag was false");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading x").unwrap_err();
+        assert_eq!(e.to_string(), "reading x: gone");
+
+        let o: Option<u8> = None;
+        let e = o.with_context(|| format!("missing {}", "y")).unwrap_err();
+        assert_eq!(e.to_string(), "missing y");
+        assert_eq!(Some(5u8).context("fine").unwrap(), 5);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err::<(), std::io::Error>(io_err())?;
+            Ok(())
+        }
+        assert_eq!(f().unwrap_err().to_string(), "gone");
+    }
+
+    #[test]
+    fn collect_with_default_param() {
+        let v: Result<Vec<u32>> = ["1", "2"].iter().map(|s| s.parse::<u32>().context("num")).collect();
+        assert_eq!(v.unwrap(), vec![1, 2]);
+    }
+}
