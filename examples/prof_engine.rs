@@ -5,12 +5,17 @@
 use std::time::Instant;
 
 use kan_sas::bspline::BsplineUnit;
-use kan_sas::kan::{Engine, QuantizedModel};
+use kan_sas::kan::{Engine, QuantizedModel, Scratch};
 use kan_sas::util::rng::Rng;
 
 fn main() {
     let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let engine = Engine::new(QuantizedModel::load(&dir.join("mnist_kan.kanq")).unwrap());
+    let engine = Engine::new(QuantizedModel::load(&dir.join("mnist_kan.kanq")).unwrap_or_else(
+        |_| {
+            eprintln!("(artifacts not built — profiling a synthetic MNIST-shaped model)");
+            QuantizedModel::synthetic("mnist_kan_synth", &[784, 64, 10], 5, 3, 3)
+        },
+    ));
     let l = &engine.model.layers[0];
     let (kdim, n, m, p) = (l.in_dim, l.out_dim, l.num_bases(), l.degree);
     let bs = 128;
@@ -145,10 +150,20 @@ fn main() {
     }
     println!("spline blocked16:{:?}  (acc[0] {})", t0.elapsed() / reps, acc[0]);
 
-    // (e) full engine reference
+    // (e) full engine reference (allocating compatibility wrapper)
     let t0 = Instant::now();
     for _ in 0..reps {
         std::hint::black_box(engine.forward_from_q(&x_q, bs).unwrap());
     }
     println!("full forward:    {:?}", t0.elapsed() / reps);
+
+    // (f) compiled plan + reused scratch arena — the zero-allocation
+    //     path the serving pool runs in steady state
+    let mut scratch = Scratch::for_plan(engine.plan(), bs);
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        let t = engine.forward_into(&x_q, bs, &mut scratch).unwrap();
+        std::hint::black_box(t[0]);
+    }
+    println!("plan fwd_into:   {:?}", t0.elapsed() / reps);
 }

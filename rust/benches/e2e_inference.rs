@@ -1,35 +1,114 @@
 //! Bench: end-to-end integer inference (the serving hot path) across
 //! batch sizes, plus the simulated accelerator cycles per batch.
+//!
+//! Measures both execution paths so the perf trajectory of the planned
+//! refactor stays machine-checkable:
+//!
+//! * `forward_into` — the compiled-plan, scratch-arena path (zero
+//!   steady-state allocations; see `tests/zero_alloc.rs`);
+//! * `forward_from_q` — the allocating compatibility wrapper, whose
+//!   per-call allocation profile matches the pre-plan engine.
+//!
+//! Results (throughput, p50/p95/p99 latency, allocs-per-forward for both
+//! paths) are written to `BENCH_engine.json` in the working directory.
+//! Falls back to a synthetic MNIST-shaped model when artifacts are not
+//! built, so the bench always runs offline.
 
 use std::path::PathBuf;
 
 use kan_sas::arch::ArrayConfig;
-use kan_sas::bench::bench_val;
-use kan_sas::kan::{Engine, QuantizedModel};
+use kan_sas::bench::{bench, BenchStats};
+use kan_sas::kan::{Engine, QuantizedModel, Scratch};
+use kan_sas::util::alloc_count::{self, CountingAllocator};
+use kan_sas::util::json::Value;
 use kan_sas::util::rng::Rng;
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+fn path_json(s: &BenchStats, bs: usize, allocs_per_forward: f64) -> Value {
+    Value::obj([
+        ("rows_per_s", Value::num(s.per_second(bs as u64))),
+        ("p50_us", Value::num(s.median.as_secs_f64() * 1e6)),
+        ("p95_us", Value::num(s.p95.as_secs_f64() * 1e6)),
+        ("p99_us", Value::num(s.p99.as_secs_f64() * 1e6)),
+        ("allocs_per_forward", Value::num(allocs_per_forward)),
+    ])
+}
+
+/// Allocator events per call of `f`, averaged over `reps` runs.
+fn allocs_per_call<F: FnMut()>(reps: u64, mut f: F) -> f64 {
+    let before = alloc_count::events();
+    for _ in 0..reps {
+        f();
+    }
+    (alloc_count::events() - before) as f64 / reps as f64
+}
 
 fn main() {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let path = dir.join("mnist_kan.kanq");
-    if !path.exists() {
-        eprintln!("artifacts not built — run `make artifacts` first");
-        return;
-    }
-    let engine = Engine::new(QuantizedModel::load(&path).unwrap());
+    let (model, synthetic) = if path.exists() {
+        (QuantizedModel::load(&path).unwrap(), false)
+    } else {
+        eprintln!("artifacts not built — benching a synthetic MNIST-shaped model");
+        (QuantizedModel::synthetic("mnist_kan_synth", &[784, 64, 10], 5, 3, 3), true)
+    };
+    let engine = Engine::new(model);
     let in_dim = engine.model.in_dim();
     let mut rng = Rng::new(3);
+    let mut batches = Vec::new();
 
     for bs in [1usize, 8, 32, 128] {
         let x_q: Vec<u8> = (0..bs * in_dim).map(|_| rng.below(256) as u8).collect();
-        let stats = bench_val(&format!("mnist_kan int8 forward, bs={bs}"), || {
-            engine.forward_from_q(&x_q, bs).unwrap()
+        let mut scratch = Scratch::for_plan(engine.plan(), bs);
+
+        let planned = bench(&format!("{} planned forward_into, bs={bs}", engine.model.name), || {
+            let t = engine.forward_into(&x_q, bs, &mut scratch).unwrap();
+            std::hint::black_box(t[t.len() - 1]);
         });
+        let wrapper = bench(&format!("{} wrapper forward_from_q, bs={bs}", engine.model.name), || {
+            std::hint::black_box(engine.forward_from_q(&x_q, bs).unwrap().t.len());
+        });
+
+        // allocator events per forward on each path (planned must be 0
+        // after warmup — hard-asserted by tests/zero_alloc.rs; reported
+        // here so BENCH_engine.json tracks the before/after trajectory)
+        let allocs_planned = allocs_per_call(64, || {
+            std::hint::black_box(engine.forward_into(&x_q, bs, &mut scratch).unwrap().len());
+        });
+        let allocs_wrapper = allocs_per_call(64, || {
+            std::hint::black_box(engine.forward_from_q(&x_q, bs).unwrap().t.len());
+        });
+
         let sim = engine.simulate_batch(&ArrayConfig::kan_sas(16, 16, 4, 8), bs);
         println!(
-            "    -> {:.0} rows/s on CPU; simulated KAN-SAs 16x16: {} cycles ({:.1} us @500MHz)",
-            stats.per_second(bs as u64),
+            "    -> {:.0} rows/s planned ({:.0} via wrapper); allocs/forward {:.1} vs {:.1}; \
+             simulated KAN-SAs 16x16: {} cycles ({:.1} us @500MHz)",
+            planned.per_second(bs as u64),
+            wrapper.per_second(bs as u64),
+            allocs_planned,
+            allocs_wrapper,
             sim.cycles,
             sim.cycles as f64 * 2e-3
         );
+
+        batches.push(Value::obj([
+            ("bs", Value::num(bs as f64)),
+            ("planned", path_json(&planned, bs, allocs_planned)),
+            ("wrapper", path_json(&wrapper, bs, allocs_wrapper)),
+            ("sim_cycles", Value::num(sim.cycles as f64)),
+        ]));
     }
+
+    let doc = Value::obj([
+        ("bench", Value::str("e2e_inference")),
+        ("model", Value::str(engine.model.name.clone())),
+        ("synthetic", Value::Bool(synthetic)),
+        ("param_bytes", Value::num(engine.param_bytes() as f64)),
+        ("batches", Value::arr(batches)),
+    ]);
+    let out = "BENCH_engine.json";
+    std::fs::write(out, doc.render() + "\n").expect("write bench artifact");
+    println!("wrote {out}");
 }

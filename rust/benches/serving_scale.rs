@@ -14,6 +14,11 @@
 //! ```bash
 //! cargo bench --bench serving_scale
 //! ```
+//!
+//! Besides the printed tables, the run writes `BENCH_serving.json`
+//! (throughput per replica count, scenario shed rates, p50/p99 latency)
+//! so the serving perf trajectory is tracked across PRs instead of
+//! anecdotal.
 
 use std::time::Duration;
 
@@ -22,6 +27,7 @@ use kan_sas::coordinator::{BatchPolicy, Pool, PoolConfig, ShedPolicy};
 use kan_sas::kan::{Engine, QuantizedModel};
 use kan_sas::loadgen::{self, Scenario};
 use kan_sas::report::Table;
+use kan_sas::util::json::Value;
 
 fn bench_engine() -> Engine {
     // big enough that per-batch compute dominates queue/lock overhead
@@ -53,6 +59,7 @@ fn main() {
         .with_title("closed-loop saturation (16 clients, 700ms, steady hammering)");
     let mut baseline_rows = 0.0f64;
     let mut rows_at = std::collections::BTreeMap::new();
+    let mut closed_json = Vec::new();
     for &replicas in &[1usize, 2, 4, 8] {
         let pool = Pool::start(engine.clone(), pool_config(replicas, 4096, ShedPolicy::Block));
         let rep = loadgen::closed_loop(&pool.handle(), 16, Duration::from_millis(700), None, 7);
@@ -72,6 +79,15 @@ fn main() {
             p50.to_string(),
             p99.to_string(),
         ]);
+        closed_json.push(Value::obj([
+            ("replicas", Value::num(replicas as f64)),
+            ("rows_per_s", Value::num(rows_s)),
+            ("speedup", Value::num(rows_s / baseline_rows.max(1.0))),
+            ("achieved_rps", Value::num(rep.achieved_rps)),
+            ("mean_batch", Value::num(stats.merged.mean_batch_size())),
+            ("p50_us", Value::num(p50 as f64)),
+            ("p99_us", Value::num(p99 as f64)),
+        ]));
     }
     print!("{}", t.render());
     let x4 = rows_at.get(&4).copied().unwrap_or(0.0) / baseline_rows.max(1.0);
@@ -84,6 +100,7 @@ fn main() {
     let replicas = cores.clamp(2, 4);
     let rate = rows_at.get(&replicas).copied().unwrap_or(4000.0) * 0.6; // below saturation
     println!("open-loop scenarios ({replicas} replicas, headline rate {rate:.0} rps, RejectNew, queue 256):");
+    let mut scenario_json = Vec::new();
     for name in ["steady", "diurnal", "flash-crowd"] {
         let pool = Pool::start(engine.clone(), pool_config(replicas, 256, ShedPolicy::RejectNew));
         let sc = Scenario::by_name(name, rate, Duration::from_millis(900)).unwrap();
@@ -101,5 +118,29 @@ fn main() {
             stats.peak_depth,
             per.join("  ")
         );
+        let (p50, p99) = rep.latency.map(|l| (l.p50_us, l.p99_us)).unwrap_or((0, 0));
+        scenario_json.push(Value::obj([
+            ("scenario", Value::str(name)),
+            ("offered_rps", Value::num(rep.offered_rps)),
+            ("achieved_rps", Value::num(rep.achieved_rps)),
+            ("ok", Value::num(rep.ok as f64)),
+            ("shed", Value::num(rep.shed as f64)),
+            ("shed_rate", Value::num(rep.shed_rate())),
+            ("p50_us", Value::num(p50 as f64)),
+            ("p99_us", Value::num(p99 as f64)),
+            ("peak_queue", Value::num(stats.peak_depth as f64)),
+        ]));
     }
+
+    let doc = Value::obj([
+        ("bench", Value::str("serving_scale")),
+        ("model", Value::str(engine.model.name.clone())),
+        ("param_bytes", Value::num(engine.param_bytes() as f64)),
+        ("cores", Value::num(cores as f64)),
+        ("closed_loop", Value::arr(closed_json)),
+        ("open_loop", Value::arr(scenario_json)),
+    ]);
+    let out = "BENCH_serving.json";
+    std::fs::write(out, doc.render() + "\n").expect("write bench artifact");
+    println!("wrote {out}");
 }

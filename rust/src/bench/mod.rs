@@ -14,6 +14,7 @@ pub struct BenchStats {
     pub median: Duration,
     pub mean: Duration,
     pub p95: Duration,
+    pub p99: Duration,
     pub min: Duration,
 }
 
@@ -49,11 +50,13 @@ fn bench_with<F: FnMut()>(name: &str, target: Duration, max_samples: usize, f: &
         times.push(s.elapsed());
     }
     times.sort();
+    let pct = |p: f64| times[((times.len() as f64 * p) as usize).min(times.len() - 1)];
     let stats = BenchStats {
         samples: times.len(),
         median: times[times.len() / 2],
         mean: times.iter().sum::<Duration>() / times.len() as u32,
-        p95: times[(times.len() as f64 * 0.95) as usize - if times.len() > 1 { 1 } else { 0 }],
+        p95: pct(0.95),
+        p99: pct(0.99),
         min: times[0],
     };
     println!(
@@ -75,7 +78,7 @@ mod tests {
         });
         assert!(s.samples >= 5);
         assert!(n as usize >= s.samples);
-        assert!(s.min <= s.median && s.median <= s.p95);
+        assert!(s.min <= s.median && s.median <= s.p95 && s.p95 <= s.p99);
     }
 
     #[test]

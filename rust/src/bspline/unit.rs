@@ -71,15 +71,26 @@ impl BsplineUnit {
     /// Evaluate a batch of rows: `(BS, K)` u8 -> vals `(BS, K, P+1)` and
     /// k `(BS, K)`.
     pub fn eval_batch(&self, x_q: &[u8]) -> (Vec<u8>, Vec<usize>) {
+        let mut vals = Vec::new();
+        let mut ks = Vec::new();
+        self.eval_batch_into(x_q, &mut vals, &mut ks);
+        (vals, ks)
+    }
+
+    /// Batch evaluation into caller-owned buffers (cleared first) —
+    /// allocation-free once the buffers have warmed up, for callers that
+    /// stream many batches through one pair of arenas.
+    pub fn eval_batch_into(&self, x_q: &[u8], vals: &mut Vec<u8>, ks: &mut Vec<usize>) {
         let n = self.p + 1;
-        let mut vals = Vec::with_capacity(x_q.len() * n);
-        let mut ks = Vec::with_capacity(x_q.len());
+        vals.clear();
+        vals.reserve(x_q.len() * n);
+        ks.clear();
+        ks.reserve(x_q.len());
         for &x in x_q {
             let (row, k) = self.eval_into(x);
             vals.extend_from_slice(row);
             ks.push(k);
         }
-        (vals, ks)
     }
 
     /// Scatter one evaluation to the dense `G+P` vector (what a
@@ -180,6 +191,17 @@ mod tests {
             assert_eq!(&vals[i * 3..(i + 1) * 3], v);
             assert_eq!(ks[i], k);
         }
+    }
+
+    #[test]
+    fn batch_into_reuses_buffers() {
+        let u = unit(5, 3);
+        let (mut vals, mut ks) = (Vec::new(), Vec::new());
+        u.eval_batch_into(&[0, 128, 255], &mut vals, &mut ks);
+        assert_eq!((vals.clone(), ks.clone()), u.eval_batch(&[0, 128, 255]));
+        // a second, smaller batch through the same buffers: cleared, not appended
+        u.eval_batch_into(&[7], &mut vals, &mut ks);
+        assert_eq!((vals, ks), u.eval_batch(&[7]));
     }
 
     #[test]

@@ -86,10 +86,21 @@ impl<T> Batcher<T> {
     /// Take up to `max_batch` items (FIFO), leaving the rest queued with
     /// their original arrival times.
     pub fn drain(&mut self) -> Vec<T> {
-        let take = self.items.len().min(self.policy.max_batch);
-        let batch: Vec<T> = self.items.drain(..take).map(|(_, item)| item).collect();
-        self.oldest = self.items.iter().map(|&(at, _)| at).min();
+        let mut batch = Vec::new();
+        self.drain_into(&mut batch);
         batch
+    }
+
+    /// Like [`Batcher::drain`], but into a caller-owned `Vec` (cleared
+    /// first) so a long-lived worker reuses one batch allocation across
+    /// every dispatch instead of allocating per drain. Returns the number
+    /// of items drained.
+    pub fn drain_into(&mut self, out: &mut Vec<T>) -> usize {
+        let take = self.items.len().min(self.policy.max_batch);
+        out.clear();
+        out.extend(self.items.drain(..take).map(|(_, item)| item));
+        self.oldest = self.items.iter().map(|&(at, _)| at).min();
+        take
     }
 }
 
@@ -151,6 +162,25 @@ mod tests {
         assert_eq!(b.drain(), vec![2]);
         assert!(b.is_empty());
         assert_eq!(b.time_left(), Duration::from_millis(40));
+    }
+
+    #[test]
+    fn drain_into_reuses_one_vec() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(1) });
+        for i in 0..5 {
+            b.push(i);
+        }
+        let mut batch = Vec::new();
+        assert_eq!(b.drain_into(&mut batch), 2);
+        assert_eq!(batch, vec![0, 1]);
+        let cap = batch.capacity();
+        assert_eq!(b.drain_into(&mut batch), 2);
+        assert_eq!(batch, vec![2, 3], "drain_into clears, not appends");
+        assert_eq!(batch.capacity(), cap, "no reallocation across drains");
+        assert_eq!(b.drain_into(&mut batch), 1);
+        assert_eq!(batch, vec![4]);
+        assert_eq!(b.drain_into(&mut batch), 0);
+        assert!(batch.is_empty());
     }
 
     #[test]

@@ -24,6 +24,17 @@
 //! simulated accelerator cycles, and records into a per-replica
 //! [`Metrics`]; [`Pool::stats`] merges them into a [`PoolStats`].
 //!
+//! The dispatch hot path is allocation-light by construction: every
+//! worker owns a [`Scratch`](crate::kan::Scratch) arena and one reusable
+//! batch `Vec` ([`Batcher::drain_into`]), gathers request rows straight
+//! into the scratch's staging buffer, runs the engine's planned
+//! zero-allocation `forward_staged`, and scatters output rows into
+//! response buffers that were pre-sized at submit time — so the
+//! gather/forward/scatter core of dispatch does no per-request
+//! allocation. (The response-channel send and latency-sample recording
+//! still allocate per request; response-buffer pooling is listed as
+//! future work in ROADMAP.md.)
+//!
 //! Conservation invariant (integration-tested, including shutdown races):
 //! every submission the pool *counts* is answered exactly once —
 //! `submitted == completed + shed + failed` over the [`PoolStats`]
@@ -38,7 +49,7 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::arch::ArrayConfig;
-use crate::kan::Engine;
+use crate::kan::{Engine, Scratch};
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::Metrics;
@@ -127,9 +138,14 @@ impl Response {
     }
 }
 
-/// One admitted request: quantized input row + response channel.
+/// One admitted request: quantized input row + response channel. The
+/// output buffer is allocated (to exact capacity) by the *submitting*
+/// thread, so the worker's scatter is a pure `extend_from_slice` — no
+/// allocation on the serving hot path.
 struct PoolRequest {
     x_q: Vec<u8>,
+    /// Pre-sized (capacity `out_dim`) response buffer the worker fills.
+    out: Vec<i64>,
     submitted: Instant,
     resp: Sender<Result<Response, PoolError>>,
 }
@@ -191,11 +207,16 @@ impl Ticket {
 pub struct PoolHandle {
     shared: Arc<Shared>,
     in_dim: usize,
+    out_dim: usize,
 }
 
 impl PoolHandle {
     pub fn in_dim(&self) -> usize {
         self.in_dim
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.out_dim
     }
 
     /// Requests currently waiting for a worker.
@@ -215,9 +236,7 @@ impl PoolHandle {
                 self.in_dim
             )));
         }
-        let (tx, rx) = channel();
         let submitted = Instant::now();
-        let req = PoolRequest { x_q, submitted, resp: tx };
         let mut st = self.shared.state.lock().unwrap();
         if !st.open {
             return Err(PoolError::Closed);
@@ -243,8 +262,17 @@ impl PoolHandle {
                 }
             }
         }
+        // admitted: only now pay for the response channel and the
+        // pre-sized output buffer, so shed requests (the overload path)
+        // cost no heap allocations
+        let (tx, rx) = channel();
         st.submitted += 1;
-        st.items.push_back(req);
+        st.items.push_back(PoolRequest {
+            x_q,
+            out: Vec::with_capacity(self.out_dim),
+            submitted,
+            resp: tx,
+        });
         st.peak_depth = st.peak_depth.max(st.items.len());
         drop(st);
         self.shared.nonempty.notify_one();
@@ -321,6 +349,7 @@ impl Pool {
             failed: AtomicU64::new(0),
         });
         let in_dim = engine.model.in_dim();
+        let out_dim = engine.model.out_dim();
         let mut workers = Vec::with_capacity(cfg.replicas);
         let mut per_worker = Vec::with_capacity(cfg.replicas);
         for i in 0..cfg.replicas {
@@ -336,7 +365,7 @@ impl Pool {
                 .expect("spawn pool worker");
             workers.push(w);
         }
-        let handle = PoolHandle { shared: Arc::clone(&shared), in_dim };
+        let handle = PoolHandle { shared: Arc::clone(&shared), in_dim, out_dim };
         Self { shared, workers, per_worker, handle }
     }
 
@@ -395,6 +424,11 @@ fn worker_loop(
     metrics: Arc<Mutex<Metrics>>,
 ) {
     let mut batcher: Batcher<PoolRequest> = Batcher::new(policy);
+    // Worker-owned execution state, allocated once per replica: the
+    // engine's scratch arena (zero-allocation steady-state forwards) and
+    // the batch Vec every drain reuses.
+    let mut scratch = Scratch::for_plan(engine.plan(), policy.max_batch);
+    let mut batch: Vec<PoolRequest> = Vec::with_capacity(policy.max_batch);
     loop {
         // Phase 1: block until at least one request is admitted (or the
         // pool is closed and drained — the only exit).
@@ -437,8 +471,8 @@ fn worker_loop(
                 shared.space.notify_all();
             }
         }
-        let batch = batcher.drain();
-        serve_batch(&engine, &sim_array, batch, &shared, &metrics);
+        batcher.drain_into(&mut batch);
+        serve_batch(&engine, &sim_array, &mut batch, &mut scratch, &shared, &metrics);
     }
 }
 
@@ -461,39 +495,48 @@ fn pull_into(
     admitted
 }
 
+/// Serve one drained batch on this worker's replica. Inputs are gathered
+/// straight into the scratch's staging buffer and outputs scattered as
+/// slices into each request's pre-sized response buffer — the
+/// gather/forward/scatter core allocates nothing per request (the mpsc
+/// response send and latency recording still do).
 fn serve_batch(
     engine: &Engine,
     sim_array: &ArrayConfig,
-    batch: Vec<PoolRequest>,
+    batch: &mut Vec<PoolRequest>,
+    scratch: &mut Scratch,
     shared: &Shared,
     metrics: &Mutex<Metrics>,
 ) {
     let bs = batch.len();
     let in_dim = engine.model.in_dim();
     let out_dim = engine.model.out_dim();
-    let mut x_q = Vec::with_capacity(bs * in_dim);
-    for r in &batch {
-        x_q.extend_from_slice(&r.x_q);
+    {
+        let staging = scratch.stage_input(bs * in_dim);
+        for r in batch.iter() {
+            staging.extend_from_slice(&r.x_q);
+        }
     }
-    let result = engine.forward_from_q(&x_q, bs);
+    let result = engine.forward_staged(bs, scratch);
     let sim = engine.simulate_batch(sim_array, bs);
     let mut m = metrics.lock().unwrap();
     m.record_batch_sim(bs, &sim);
     match result {
-        Ok(fwd) => {
-            for (i, req) in batch.into_iter().enumerate() {
+        Ok(t) => {
+            for (i, mut req) in batch.drain(..).enumerate() {
                 let latency = req.submitted.elapsed();
                 m.record_request(latency);
                 shared.completed.fetch_add(1, Ordering::Relaxed);
+                req.out.extend_from_slice(&t[i * out_dim..(i + 1) * out_dim]);
                 let _ = req.resp.send(Ok(Response {
-                    t: fwd.t[i * out_dim..(i + 1) * out_dim].to_vec(),
+                    t: req.out,
                     latency_us: latency.as_micros() as u64,
                 }));
             }
         }
         Err(e) => {
             let msg = format!("inference failed: {e}");
-            for req in batch {
+            for req in batch.drain(..) {
                 shared.failed.fetch_add(1, Ordering::Relaxed);
                 let _ = req.resp.send(Err(PoolError::Inference(msg.clone())));
             }
@@ -583,6 +626,7 @@ mod tests {
                 failed: AtomicU64::new(0),
             }),
             in_dim: 4,
+            out_dim: 3,
         }
     }
 

@@ -5,7 +5,9 @@
 //! never-reject semantics) by running a pool with one worker, a deep
 //! admission queue, and [`ShedPolicy::Block`] backpressure — so the
 //! dispatcher loop, batching, metrics, and shutdown-drain behaviour are
-//! the pool's, tested once.
+//! the pool's, tested once. That single worker owns the server's
+//! [`Scratch`](crate::kan::Scratch) arena, so `Server` inherits the
+//! pool's zero-allocation steady-state dispatch path too.
 
 use anyhow::{anyhow, Result};
 

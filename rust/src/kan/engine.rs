@@ -10,8 +10,15 @@
 //! 3. **base path**: integer ReLU then a dense i32 GEMM;
 //! 4. **requantize**: `t = acc1*m1 + acc2*m2` (i64) -> next uint8
 //!    activations, or raw `t` logits at the last layer.
+//!
+//! The engine follows a compile/execute split (see [`super::plan`]): all
+//! per-layer state is resolved once into an [`ExecutionPlan`] when the
+//! engine is built — mirroring the accelerator, which wires LUT ROMs and
+//! window widths before the first activation streams in — and the hot
+//! path [`Engine::forward_into`] runs the plan against a caller-owned
+//! [`Scratch`] with zero steady-state heap allocations.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{ensure, Result};
 
@@ -21,34 +28,40 @@ use crate::sim::analytic;
 use crate::sim::workload::Workload;
 use crate::arch::ArrayConfig;
 
-use super::model::{LayerParams, QuantizedModel};
+use super::model::QuantizedModel;
+use super::plan::{ExecutionPlan, Scratch};
 
 /// Inference engine over a loaded quantized model.
 ///
 /// All parameter state is behind `Arc`: cloning an `Engine` produces a
-/// replica that *aliases* the same model weights, LUT ROMs, and widened
-/// MAC tables, so an N-replica serving pool (`coordinator::pool`) costs
-/// ~1x model memory regardless of N. Verified by
-/// [`Engine::shares_weights_with`] and the aliasing test below.
-#[derive(Clone, Debug)]
+/// replica that *aliases* the same model weights and compiled
+/// [`ExecutionPlan`] (LUT ROMs, widened MAC tables), so an N-replica
+/// serving pool (`coordinator::pool`) costs ~1x model memory regardless
+/// of N. Verified by [`Engine::shares_weights_with`] and the aliasing
+/// test below. Each clone gets its own (empty) compatibility scratch.
+#[derive(Debug)]
 pub struct Engine {
     pub model: Arc<QuantizedModel>,
-    tables: Arc<EngineTables>,
+    plan: Arc<ExecutionPlan>,
+    /// Lazily-grown scratch backing the allocating compatibility wrappers
+    /// ([`Engine::forward`] / [`Engine::forward_from_q`]). The mutex is
+    /// uncontended in practice — serving workers own their `Scratch` and
+    /// call [`Engine::forward_into`] / [`Engine::forward_staged`] instead.
+    /// Grow-only: one huge-batch wrapper call pins that arena size for
+    /// the engine's lifetime (batch-size-bound callers like
+    /// [`Engine::accuracy`] chunk their input; callers that need the
+    /// memory back should own a `Scratch` and drop it).
+    scratch: Mutex<Scratch>,
 }
 
-/// Derived read-only per-layer state shared across replicas.
-#[derive(Debug)]
-struct EngineTables {
-    /// One B-spline unit per layer, built once (perf: `layer_forward` is
-    /// the serving hot path; constructing a unit clones the LUT).
-    units: Vec<crate::bspline::BsplineUnit>,
-    /// i16-widened copies of the int8 coefficient/base tensors. Values
-    /// are identical (sign-extended); the widening lets LLVM vectorize
-    /// the i16 -> i32 MAC loops ~1.7x better than i8 -> i32 (see
-    /// EXPERIMENTS.md §Perf). Bit-exactness is untouched — golden tests
-    /// still pass — it is purely a storage-width change.
-    coeff16: Vec<Vec<i16>>,
-    base16: Vec<Vec<i16>>,
+impl Clone for Engine {
+    fn clone(&self) -> Self {
+        Self {
+            model: Arc::clone(&self.model),
+            plan: Arc::clone(&self.plan),
+            scratch: Mutex::new(Scratch::new()),
+        }
+    }
 }
 
 /// Result of a batched forward pass.
@@ -62,10 +75,9 @@ pub struct Forward {
 }
 
 impl Forward {
-    pub fn logits_f64(&self, last: &LayerParams) -> Vec<f64> {
+    pub fn logits_f64(&self) -> Vec<f64> {
         // dequantize for reporting: t / (128 * 2^SHIFT) (see python)
         let denom = 128.0 * (1u64 << quant::SHIFT) as f64;
-        let _ = last;
         self.t.iter().map(|&v| v as f64 / denom).collect()
     }
 
@@ -79,37 +91,28 @@ impl Engine {
         Self::from_shared(Arc::new(model))
     }
 
-    /// Build an engine over an already-shared model (additional replicas
-    /// should just `clone()` an existing engine, which also shares the
-    /// derived tables).
+    /// Build an engine over an already-shared model, compiling its
+    /// [`ExecutionPlan`] once (additional replicas should just `clone()`
+    /// an existing engine, which also shares the compiled plan).
     pub fn from_shared(model: Arc<QuantizedModel>) -> Self {
-        let units = model
-            .layers
-            .iter()
-            .map(|l| crate::bspline::BsplineUnit::new(l.lut.clone(), l.grid))
-            .collect();
-        let coeff16 = model
-            .layers
-            .iter()
-            .map(|l| l.coeff.data().iter().map(|&w| w as i16).collect())
-            .collect();
-        let base16 = model
-            .layers
-            .iter()
-            .map(|l| l.base.data().iter().map(|&w| w as i16).collect())
-            .collect();
-        Self { model, tables: Arc::new(EngineTables { units, coeff16, base16 }) }
+        let plan = Arc::new(ExecutionPlan::compile(&model));
+        Self { model, plan, scratch: Mutex::new(Scratch::new()) }
+    }
+
+    /// The compiled execution plan (shared by all replicas).
+    pub fn plan(&self) -> &ExecutionPlan {
+        &self.plan
     }
 
     /// True when `self` and `other` alias the same parameter storage —
     /// i.e. they are replicas of one model, not independent copies.
     pub fn shares_weights_with(&self, other: &Engine) -> bool {
-        Arc::ptr_eq(&self.model, &other.model) && Arc::ptr_eq(&self.tables, &other.tables)
+        Arc::ptr_eq(&self.model, &other.model) && Arc::ptr_eq(&self.plan, &other.plan)
     }
 
-    /// Bytes of parameter + derived-table storage. Counted once per model:
-    /// clones share the same allocations, so a pool's weight footprint is
-    /// `param_bytes()` regardless of replica count.
+    /// Bytes of parameter + compiled-plan storage. Counted once per
+    /// model: clones share the same allocations, so a pool's weight
+    /// footprint is `param_bytes()` regardless of replica count.
     pub fn param_bytes(&self) -> usize {
         let model: usize = self
             .model
@@ -117,120 +120,35 @@ impl Engine {
             .iter()
             .map(|l| l.coeff.len() + l.base.len() + l.lut.raw().len())
             .sum();
-        let widened: usize = self
-            .tables
-            .coeff16
-            .iter()
-            .chain(self.tables.base16.iter())
-            .map(|v| v.len() * 2)
-            .sum();
-        model + widened
+        model + self.plan.derived_bytes()
     }
 
-    /// Forward one layer: uint8 activations `(BS, K)` -> i64 `t (BS, N)`.
-    ///
-    /// Hot-path layout (see EXPERIMENTS.md §Perf): *feature-major* — the
-    /// outer loop walks input features so each feature's `M x N` int8
-    /// coefficient block (832 B for MNIST-KAN layer 1) stays in L1 while
-    /// every batch row consumes it, instead of streaming the full 650 KB
-    /// coefficient tensor once per row. This mirrors the accelerator's
-    /// weight-stationary reuse, which is why it wins.
-    pub fn layer_forward(&self, layer: &LayerParams, x_q: &[u8], bs: usize) -> Vec<i64> {
-        // resolve the prebuilt unit + widened weights for this layer (the
-        // public signature takes &LayerParams for testability; fall back
-        // to building on the fly if handed a foreign layer)
-        let idx = self
-            .model
-            .layers
-            .iter()
-            .position(|l| std::ptr::eq(l.lut.raw(), layer.lut.raw()));
-        let (unit, coeff, base);
-        let (unit_owned, coeff_owned, base_owned);
-        match idx {
-            Some(i) => {
-                unit = &self.tables.units[i];
-                coeff = self.tables.coeff16[i].as_slice();
-                base = self.tables.base16[i].as_slice();
-            }
-            None => {
-                unit_owned = crate::bspline::BsplineUnit::new(layer.lut.clone(), layer.grid);
-                coeff_owned = layer.coeff.data().iter().map(|&w| w as i16).collect::<Vec<_>>();
-                base_owned = layer.base.data().iter().map(|&w| w as i16).collect::<Vec<_>>();
-                unit = &unit_owned;
-                coeff = coeff_owned.as_slice();
-                base = base_owned.as_slice();
-            }
-        }
-        let (kdim, n, p) = (layer.in_dim, layer.out_dim, layer.degree);
-        debug_assert_eq!(x_q.len(), bs * kdim);
-        let m = layer.num_bases();
-
+    /// Forward one layer of the compiled plan: uint8 activations
+    /// `(BS, K)` -> i64 `t (BS, N)`. A debug/test entry point (golden
+    /// replay inspects per-layer activations); the serving path executes
+    /// the whole plan via [`Engine::forward_into`].
+    pub fn layer_forward(&self, layer_idx: usize, x_q: &[u8], bs: usize) -> Vec<i64> {
+        let lp = &self.plan.layers[layer_idx];
+        let n = lp.out_dim;
         let mut acc = vec![0i32; bs * n];
         let mut acc_base = vec![0i32; bs * n];
-        // batch blocking: keep the active accumulator slice L1-resident
-        // while a feature's coefficient block streams through (measured
-        // ~17% over unblocked feature-major; EXPERIMENTS.md §Perf)
-        const BB: usize = 16;
-        for b0 in (0..bs).step_by(BB) {
-        let bl = BB.min(bs - b0);
-        for feat in 0..kdim {
-            let crow = &coeff[feat * m * n..(feat + 1) * m * n];
-            let brow = &base[feat * n..(feat + 1) * n];
-            for b in b0..b0 + bl {
-                let xq = x_q[b * kdim + feat];
-                // 1. B-spline unit (one LUT fetch for all P+1 non-zeros)
-                let (vals, k) = unit.eval_into(xq);
-                // 2. N:M spline MACs: window [k-P, k] of this feature's
-                //    M coefficient rows
-                let arow = &mut acc[b * n..(b + 1) * n];
-                let wbase = (k - p) * n;
-                if p == 3 {
-                    // fused 4-row vector MAC (one accumulator pass instead
-                    // of four): the software mirror of the 4-lane PE
-                    let (v0, v1, v2, v3) =
-                        (vals[0] as i32, vals[1] as i32, vals[2] as i32, vals[3] as i32);
-                    let w = &crow[wbase..wbase + 4 * n];
-                    let (w0, rest) = w.split_at(n);
-                    let (w1, rest) = rest.split_at(n);
-                    let (w2, w3) = rest.split_at(n);
-                    for ((((a, &x0), &x1), &x2), &x3) in
-                        arow.iter_mut().zip(w0).zip(w1).zip(w2).zip(w3)
-                    {
-                        *a += v0 * x0 as i32 + v1 * x1 as i32 + v2 * x2 as i32 + v3 * x3 as i32;
-                    }
-                } else {
-                    for (j, &v) in vals.iter().enumerate() {
-                        if v == 0 {
-                            continue;
-                        }
-                        let v = v as i32;
-                        let wrow = &crow[wbase + j * n..wbase + (j + 1) * n];
-                        for (a, &w) in arow.iter_mut().zip(wrow) {
-                            *a += v * w as i32;
-                        }
-                    }
-                }
-                // 3. base path (integer ReLU)
-                let r = quant::relu_q(xq) as i32;
-                if r != 0 {
-                    let arow = &mut acc_base[b * n..(b + 1) * n];
-                    for (a, &w) in arow.iter_mut().zip(brow) {
-                        *a += r * w as i32;
-                    }
-                }
-            }
-        }
-        }
-        // 4. combine with the fixed-point multipliers
         let mut t = vec![0i64; bs * n];
-        for ((tt, &a1), &a2) in t.iter_mut().zip(&acc).zip(&acc_base) {
-            *tt = a1 as i64 * layer.m1 + a2 as i64 * layer.m2;
-        }
+        lp.forward_into(x_q, bs, &mut acc, &mut acc_base, &mut t);
         t
     }
 
-    /// Full forward from uint8 inputs.
-    pub fn forward_from_q(&self, x_q: &[u8], bs: usize) -> Result<Forward> {
+    /// Allocation-free full forward from uint8 inputs: executes the plan
+    /// against a caller-owned scratch and returns the final-layer i64
+    /// accumulators `(bs, out_dim)` living in that scratch. After the
+    /// scratch has warmed up at a batch size, subsequent calls at that
+    /// size (or smaller) perform zero heap allocations
+    /// (`tests/zero_alloc.rs` asserts this with a counting allocator).
+    pub fn forward_into<'s>(
+        &self,
+        x_q: &[u8],
+        bs: usize,
+        scratch: &'s mut Scratch,
+    ) -> Result<&'s [i64]> {
         ensure!(
             x_q.len() == bs * self.model.in_dim(),
             "input size {} != bs {} x in_dim {}",
@@ -238,34 +156,58 @@ impl Engine {
             bs,
             self.model.in_dim()
         );
-        let n_layers = self.model.layers.len();
-        let mut cur = x_q.to_vec();
-        let mut t = Vec::new();
-        for (i, layer) in self.model.layers.iter().enumerate() {
-            t = self.layer_forward(layer, &cur, bs);
-            if i + 1 < n_layers {
-                cur = t.iter().map(|&v| quant::requantize(v)).collect();
-            }
-        }
-        Ok(Forward { t, bs, out_dim: self.model.out_dim() })
+        Ok(self.plan.execute(x_q, bs, scratch))
     }
 
-    /// Full forward from float (spline-domain) inputs.
+    /// Allocation-free forward over inputs already gathered into the
+    /// scratch's staging buffer (see [`Scratch::stage_input`]) — the
+    /// serving-pool path: workers copy request rows straight into staging
+    /// and execute, with no intermediate batch `Vec`.
+    pub fn forward_staged<'s>(&self, bs: usize, scratch: &'s mut Scratch) -> Result<&'s [i64]> {
+        ensure!(
+            scratch.staged_len() == bs * self.model.in_dim(),
+            "staged input size {} != bs {} x in_dim {}",
+            scratch.staged_len(),
+            bs,
+            self.model.in_dim()
+        );
+        Ok(self.plan.execute_staged(bs, scratch))
+    }
+
+    /// Full forward from uint8 inputs (compatibility wrapper: runs
+    /// [`Engine::forward_into`] over the engine's lazily-owned scratch
+    /// and copies the result out into an owned [`Forward`]).
+    pub fn forward_from_q(&self, x_q: &[u8], bs: usize) -> Result<Forward> {
+        let mut scratch = self.scratch.lock().unwrap();
+        let t = self.forward_into(x_q, bs, &mut scratch)?;
+        Ok(Forward { t: t.to_vec(), bs, out_dim: self.model.out_dim() })
+    }
+
+    /// Full forward from float (spline-domain) inputs (compatibility
+    /// wrapper; quantizes into the scratch's staging buffer).
     pub fn forward(&self, x: &[f32], bs: usize) -> Result<Forward> {
-        self.forward_from_q(&quant::quantize_activations(x), bs)
+        let mut scratch = self.scratch.lock().unwrap();
+        quant::quantize_activations_into(x, scratch.stage_input(x.len()));
+        let t = self.forward_staged(bs, &mut scratch)?;
+        Ok(Forward { t: t.to_vec(), bs, out_dim: self.model.out_dim() })
     }
 
-    /// Accuracy over a labelled set.
+    /// Accuracy over a labelled set. One scratch serves every chunk, so
+    /// the sweep allocates only during the first batch.
     pub fn accuracy(&self, x: &[f32], labels: &[i32], bs_chunk: usize) -> Result<f64> {
         let in_dim = self.model.in_dim();
+        let out_dim = self.model.out_dim();
         let n = labels.len();
         ensure!(x.len() == n * in_dim);
+        let mut scratch = self.scratch.lock().unwrap();
         let mut correct = 0usize;
         for start in (0..n).step_by(bs_chunk) {
             let bs = bs_chunk.min(n - start);
-            let fwd = self.forward(&x[start * in_dim..(start + bs) * in_dim], bs)?;
-            for (pred, &want) in fwd.predictions().iter().zip(&labels[start..start + bs]) {
-                if *pred as i32 == want {
+            let chunk = &x[start * in_dim..(start + bs) * in_dim];
+            quant::quantize_activations_into(chunk, scratch.stage_input(chunk.len()));
+            let t = self.forward_staged(bs, &mut scratch)?;
+            for (row, &want) in t.chunks_exact(out_dim).zip(&labels[start..start + bs]) {
+                if crate::util::argmax(row) as i32 == want {
                     correct += 1;
                 }
             }
@@ -324,6 +266,7 @@ impl Engine {
 mod tests {
     use super::*;
     use crate::bspline::Lut;
+    use crate::kan::LayerParams;
     use crate::tensor::Tensor;
 
     /// Hand-built single-layer model for closed-form checks.
@@ -354,6 +297,39 @@ mod tests {
         }
     }
 
+    /// Bit-exact scalar reference: dense B-spline expansion + dense
+    /// GEMMs + the same requant chain, written with none of the engine's
+    /// layout/blocking tricks. The oracle for the plan refactor.
+    fn oracle_forward(model: &QuantizedModel, x_q: &[u8], bs: usize) -> Vec<i64> {
+        let mut cur = x_q.to_vec();
+        let mut t = Vec::new();
+        for (li, l) in model.layers.iter().enumerate() {
+            let (k, n, m) = (l.in_dim, l.out_dim, l.num_bases());
+            let unit = crate::bspline::BsplineUnit::new(l.lut.clone(), l.grid);
+            t = vec![0i64; bs * n];
+            for b in 0..bs {
+                for out in 0..n {
+                    let mut a1 = 0i32;
+                    let mut a2 = 0i32;
+                    for feat in 0..k {
+                        let xq = cur[b * k + feat];
+                        let dense = unit.eval_dense(xq);
+                        for (basis, &v) in dense.iter().enumerate() {
+                            a1 += v as i32
+                                * l.coeff.data()[feat * m * n + basis * n + out] as i32;
+                        }
+                        a2 += quant::relu_q(xq) as i32 * l.base.data()[feat * n + out] as i32;
+                    }
+                    t[b * n + out] = a1 as i64 * l.m1 + a2 as i64 * l.m2;
+                }
+            }
+            if li + 1 < model.layers.len() {
+                cur = t.iter().map(|&v| quant::requantize(v)).collect();
+            }
+        }
+        t
+    }
+
     #[test]
     fn partition_of_unity_through_engine() {
         // with all-ones coefficients the spline accumulator per output is
@@ -372,6 +348,15 @@ mod tests {
     fn predictions_argmax() {
         let f = Forward { t: vec![5, 9, 1, -3, -1, -2], bs: 2, out_dim: 3 };
         assert_eq!(f.predictions(), vec![1, 1]);
+    }
+
+    #[test]
+    fn logits_f64_monotone_with_t() {
+        let f = Forward { t: vec![-(1i64 << 31), 0, 1i64 << 31], bs: 1, out_dim: 3 };
+        let l = f.logits_f64();
+        assert_eq!(l.len(), 3);
+        assert!(l[0] < l[1] && l[1] < l[2]);
+        assert_eq!(l[1], 0.0);
     }
 
     #[test]
@@ -422,9 +407,66 @@ mod tests {
     }
 
     #[test]
+    fn forward_into_bit_exact_vs_oracle() {
+        // property test over random (G, P, dims, bs): the planned
+        // zero-allocation path must reproduce the scalar dense-expansion
+        // oracle bit for bit, multi-layer models and base path included
+        use crate::util::rng::{check, Rng};
+        check(20, 77, |rng: &mut Rng| {
+            let g = 1 + rng.below(8);
+            let p = 1 + rng.below(3);
+            let n_layers = 1 + rng.below(3);
+            let dims: Vec<usize> = (0..=n_layers).map(|_| 1 + rng.below(6)).collect();
+            let bs = 1 + rng.below(5);
+            let model = QuantizedModel::synthetic("prop", &dims, g, p, rng.below(1 << 30) as u64);
+            let x_q: Vec<u8> = (0..bs * dims[0]).map(|_| rng.below(256) as u8).collect();
+            let want = oracle_forward(&model, &x_q, bs);
+            let e = Engine::new(model);
+            let mut scratch = Scratch::new();
+            let got = e.forward_into(&x_q, bs, &mut scratch).unwrap();
+            assert_eq!(got, &want[..], "g={g} p={p} dims={dims:?} bs={bs}");
+            // and the allocating wrapper agrees with the planned path
+            assert_eq!(e.forward_from_q(&x_q, bs).unwrap().t, want);
+        });
+    }
+
+    #[test]
+    fn scratch_reuse_across_mismatched_batch_sizes() {
+        // grow/shrink/grow through ONE scratch must equal fresh-scratch
+        // runs byte for byte (stale arena contents must never leak in)
+        use crate::util::rng::Rng;
+        let model = QuantizedModel::synthetic("reuse", &[5, 7, 4], 5, 3, 23);
+        let e = Engine::new(model);
+        let mut rng = Rng::new(99);
+        let mut shared = Scratch::new();
+        for &bs in &[4usize, 1, 16, 3, 16, 2, 9] {
+            let x_q: Vec<u8> = (0..bs * 5).map(|_| rng.below(256) as u8).collect();
+            let got = e.forward_into(&x_q, bs, &mut shared).unwrap().to_vec();
+            let mut fresh = Scratch::new();
+            let want = e.forward_into(&x_q, bs, &mut fresh).unwrap();
+            assert_eq!(got, want, "bs={bs} diverged between reused and fresh scratch");
+        }
+    }
+
+    #[test]
+    fn staged_path_matches_external_input() {
+        let e = Engine::new(QuantizedModel::synthetic("staged", &[4, 6, 3], 5, 3, 8));
+        let x_q = vec![3u8, 200, 90, 17, 0, 255, 128, 64];
+        let mut s = Scratch::new();
+        let want = e.forward_into(&x_q, 2, &mut s).unwrap().to_vec();
+        s.stage_input(x_q.len()).extend_from_slice(&x_q);
+        assert_eq!(e.forward_staged(2, &mut s).unwrap(), &want[..]);
+        // staged length must match bs * in_dim
+        s.stage_input(3).extend_from_slice(&[1, 2, 3]);
+        assert!(e.forward_staged(2, &mut s).is_err());
+    }
+
+    #[test]
     fn rejects_bad_input_size() {
         let e = Engine::new(tiny_model());
         assert!(e.forward_from_q(&[0, 1, 2], 2).is_err());
+        let mut s = Scratch::new();
+        assert!(e.forward_into(&[0, 1, 2], 2, &mut s).is_err());
     }
 
     #[test]
@@ -440,9 +482,9 @@ mod tests {
             "coefficient tensors must alias one allocation"
         );
         assert_eq!(
-            a.tables.coeff16[0].as_ptr(),
-            b.tables.coeff16[0].as_ptr(),
-            "widened MAC tables must alias one allocation"
+            a.plan().layers[0].coeff16.as_ptr(),
+            b.plan().layers[0].coeff16.as_ptr(),
+            "compiled plans must alias one allocation"
         );
         assert_eq!(a.param_bytes(), b.param_bytes());
         assert!(a.param_bytes() > 0);

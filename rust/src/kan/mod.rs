@@ -9,6 +9,8 @@
 
 pub mod engine;
 pub mod model;
+pub mod plan;
 
 pub use engine::Engine;
 pub use model::{LayerParams, QuantizedModel};
+pub use plan::{ExecutionPlan, LayerPlan, Scratch};

@@ -1,0 +1,395 @@
+//! Compile/execute split for the integer engine: everything the PE
+//! datapath resolves at configuration time — LUT ROMs, N:M window widths,
+//! widened MAC tables, requant multipliers, buffer sizes — is compiled
+//! *once* into an [`ExecutionPlan`]; steady-state inference then runs the
+//! plan against a worker-owned [`Scratch`] arena with **zero heap
+//! allocations** (asserted by `tests/zero_alloc.rs`), the software mirror
+//! of systolic execution where no state is re-derived per activation
+//! stream (paper Sec. IV).
+//!
+//! The split is bit-exact: a plan executes the same integer arithmetic as
+//! the pre-plan engine, so the golden replay vectors are byte-identical.
+
+use crate::bspline::BsplineUnit;
+use crate::quant;
+
+use super::model::{LayerParams, QuantizedModel};
+
+/// One layer, fully resolved for execution: the prebuilt B-spline unit,
+/// i16-widened coefficient/base tables (sign-extended int8 — the widening
+/// lets LLVM vectorize the i16 -> i32 MAC loops ~1.7x better, see
+/// EXPERIMENTS.md §Perf), dims, degree window, and requant multipliers.
+#[derive(Clone, Debug)]
+pub struct LayerPlan {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    /// Grid size G. Introspection metadata only — execution reads it
+    /// through `unit`/`num_bases`; kept so a plan layer answers the same
+    /// shape questions as its source `LayerParams` (e.g. building a
+    /// matching per-layer `ArrayConfig`).
+    pub grid: usize,
+    pub degree: usize,
+    /// `grid + degree` — coefficient rows per input feature.
+    pub num_bases: usize,
+    /// Prebuilt B-spline unit (owns its LUT ROM copy).
+    pub unit: BsplineUnit,
+    /// `(K, M, N)` spline coefficients, widened to i16.
+    pub coeff16: Vec<i16>,
+    /// `(K, N)` base-path weights, widened to i16.
+    pub base16: Vec<i16>,
+    pub m1: i64,
+    pub m2: i64,
+}
+
+impl LayerPlan {
+    pub fn compile(l: &LayerParams) -> Self {
+        Self {
+            in_dim: l.in_dim,
+            out_dim: l.out_dim,
+            grid: l.grid,
+            degree: l.degree,
+            num_bases: l.num_bases(),
+            unit: BsplineUnit::new(l.lut.clone(), l.grid),
+            coeff16: l.coeff.data().iter().map(|&w| w as i16).collect(),
+            base16: l.base.data().iter().map(|&w| w as i16).collect(),
+            m1: l.m1,
+            m2: l.m2,
+        }
+    }
+
+    /// Bytes of derived (widened) tables this plan layer adds on top of
+    /// the model's own storage.
+    pub fn derived_bytes(&self) -> usize {
+        (self.coeff16.len() + self.base16.len()) * 2
+    }
+
+    /// Forward one layer into caller-provided buffers: uint8 activations
+    /// `(BS, K)` -> i64 accumulators `t (BS, N)`. Allocation-free.
+    ///
+    /// Hot-path layout (see EXPERIMENTS.md §Perf): *feature-major* — the
+    /// outer loop walks input features so each feature's `M x N` int8
+    /// coefficient block (832 B for MNIST-KAN layer 1) stays in L1 while
+    /// every batch row consumes it, instead of streaming the full 650 KB
+    /// coefficient tensor once per row. This mirrors the accelerator's
+    /// weight-stationary reuse, which is why it wins.
+    pub fn forward_into(
+        &self,
+        x_q: &[u8],
+        bs: usize,
+        acc: &mut [i32],
+        acc_base: &mut [i32],
+        t: &mut [i64],
+    ) {
+        let (kdim, n, p, m) = (self.in_dim, self.out_dim, self.degree, self.num_bases);
+        debug_assert_eq!(x_q.len(), bs * kdim);
+        debug_assert_eq!(acc.len(), bs * n);
+        debug_assert_eq!(acc_base.len(), bs * n);
+        debug_assert_eq!(t.len(), bs * n);
+        acc.fill(0);
+        acc_base.fill(0);
+        let (coeff, base) = (self.coeff16.as_slice(), self.base16.as_slice());
+        // batch blocking: keep the active accumulator slice L1-resident
+        // while a feature's coefficient block streams through (measured
+        // ~17% over unblocked feature-major; EXPERIMENTS.md §Perf)
+        const BB: usize = 16;
+        for b0 in (0..bs).step_by(BB) {
+            let bl = BB.min(bs - b0);
+            for feat in 0..kdim {
+                let crow = &coeff[feat * m * n..(feat + 1) * m * n];
+                let brow = &base[feat * n..(feat + 1) * n];
+                for b in b0..b0 + bl {
+                    let xq = x_q[b * kdim + feat];
+                    // 1. B-spline unit (one LUT fetch for all P+1 non-zeros)
+                    let (vals, k) = self.unit.eval_into(xq);
+                    // 2. N:M spline MACs: window [k-P, k] of this feature's
+                    //    M coefficient rows
+                    let arow = &mut acc[b * n..(b + 1) * n];
+                    let wbase = (k - p) * n;
+                    if p == 3 {
+                        // fused 4-row vector MAC (one accumulator pass instead
+                        // of four): the software mirror of the 4-lane PE
+                        let (v0, v1, v2, v3) =
+                            (vals[0] as i32, vals[1] as i32, vals[2] as i32, vals[3] as i32);
+                        let w = &crow[wbase..wbase + 4 * n];
+                        let (w0, rest) = w.split_at(n);
+                        let (w1, rest) = rest.split_at(n);
+                        let (w2, w3) = rest.split_at(n);
+                        for ((((a, &x0), &x1), &x2), &x3) in
+                            arow.iter_mut().zip(w0).zip(w1).zip(w2).zip(w3)
+                        {
+                            *a += v0 * x0 as i32
+                                + v1 * x1 as i32
+                                + v2 * x2 as i32
+                                + v3 * x3 as i32;
+                        }
+                    } else {
+                        for (j, &v) in vals.iter().enumerate() {
+                            if v == 0 {
+                                continue;
+                            }
+                            let v = v as i32;
+                            let wrow = &crow[wbase + j * n..wbase + (j + 1) * n];
+                            for (a, &w) in arow.iter_mut().zip(wrow) {
+                                *a += v * w as i32;
+                            }
+                        }
+                    }
+                    // 3. base path (integer ReLU)
+                    let r = quant::relu_q(xq) as i32;
+                    if r != 0 {
+                        let arow = &mut acc_base[b * n..(b + 1) * n];
+                        for (a, &w) in arow.iter_mut().zip(brow) {
+                            *a += r * w as i32;
+                        }
+                    }
+                }
+            }
+        }
+        // 4. combine with the fixed-point multipliers
+        for ((tt, &a1), &a2) in t.iter_mut().zip(acc.iter()).zip(acc_base.iter()) {
+            *tt = a1 as i64 * self.m1 + a2 as i64 * self.m2;
+        }
+    }
+}
+
+/// The whole model, compiled for execution: per-layer [`LayerPlan`]s plus
+/// the sizing spec for the ping-pong activation buffers a [`Scratch`]
+/// must provide. Built once in `Engine::from_shared` and `Arc`-shared by
+/// every replica.
+#[derive(Clone, Debug)]
+pub struct ExecutionPlan {
+    pub layers: Vec<LayerPlan>,
+    in_dim: usize,
+    out_dim: usize,
+    /// Widest accumulator row (max out_dim over layers) — sizes
+    /// `Scratch::{acc, acc_base, t}` per batch row.
+    max_out: usize,
+    /// Widest requantized activation row (max out_dim over *non-last*
+    /// layers) — sizes the ping-pong activation buffers per batch row.
+    max_act: usize,
+}
+
+impl ExecutionPlan {
+    pub fn compile(model: &QuantizedModel) -> Self {
+        assert!(!model.layers.is_empty(), "plan needs at least one layer");
+        let layers: Vec<LayerPlan> = model.layers.iter().map(LayerPlan::compile).collect();
+        let max_out = layers.iter().map(|l| l.out_dim).max().unwrap_or(0);
+        let n = layers.len();
+        let max_act = layers[..n - 1].iter().map(|l| l.out_dim).max().unwrap_or(0);
+        Self { layers, in_dim: model.in_dim(), out_dim: model.out_dim(), max_out, max_act }
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.in_dim
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+
+    /// Bytes of derived per-layer tables (the plan's storage on top of
+    /// the model's int8 tensors).
+    pub fn derived_bytes(&self) -> usize {
+        self.layers.iter().map(LayerPlan::derived_bytes).sum()
+    }
+
+    /// Execute the plan on externally provided quantized inputs. Returns
+    /// the final-layer i64 accumulators `(bs, out_dim)` living in the
+    /// scratch. Allocation-free once `scratch` has warmed up at this (or
+    /// any larger) batch size.
+    pub fn execute<'s>(&self, x_q: &[u8], bs: usize, scratch: &'s mut Scratch) -> &'s [i64] {
+        debug_assert_eq!(x_q.len(), bs * self.in_dim);
+        scratch.ensure(self, bs);
+        self.run(Some(x_q), bs, scratch)
+    }
+
+    /// Execute on inputs previously gathered into the scratch's staging
+    /// buffer (see [`Scratch::stage_input`]) — the serving-pool path,
+    /// where workers gather request rows straight into staging instead of
+    /// building a batch `Vec` per dispatch.
+    pub fn execute_staged<'s>(&self, bs: usize, scratch: &'s mut Scratch) -> &'s [i64] {
+        debug_assert_eq!(scratch.staging.len(), bs * self.in_dim);
+        scratch.ensure(self, bs);
+        self.run(None, bs, scratch)
+    }
+
+    fn run<'s>(&self, external: Option<&[u8]>, bs: usize, scratch: &'s mut Scratch) -> &'s [i64] {
+        let Scratch { acc, acc_base, t, act, staging } = scratch;
+        let [buf_a, buf_b] = act;
+        // `prev` holds the current layer's input activations (for i > 0);
+        // `cur` receives its requantized output, then the two swap.
+        let (mut prev, mut cur): (&mut Vec<u8>, &mut Vec<u8>) = (buf_a, buf_b);
+        let n_layers = self.layers.len();
+        for (i, lp) in self.layers.iter().enumerate() {
+            let (k, n) = (lp.in_dim, lp.out_dim);
+            let x: &[u8] = if i == 0 {
+                match external {
+                    Some(x) => x,
+                    None => &staging[..bs * k],
+                }
+            } else {
+                &prev[..bs * k]
+            };
+            lp.forward_into(x, bs, &mut acc[..bs * n], &mut acc_base[..bs * n], &mut t[..bs * n]);
+            if i + 1 < n_layers {
+                for (d, &v) in cur[..bs * n].iter_mut().zip(t[..bs * n].iter()) {
+                    *d = quant::requantize(v);
+                }
+                std::mem::swap(&mut prev, &mut cur);
+            }
+        }
+        &t[..bs * self.out_dim]
+    }
+}
+
+/// Worker-owned mutable execution state: accumulators, the final-layer
+/// i64 buffer, ping-pong requantized-activation buffers, and an input
+/// staging buffer for batch gather. Grow-only — after one forward at a
+/// pool's peak batch size, every subsequent forward (at that size or
+/// smaller) performs **zero heap allocations**.
+///
+/// A `Scratch` is plain mutable state with no lock: each pool worker (and
+/// the `Server`'s single worker) owns one; `Engine`'s compatibility
+/// wrappers keep a lazily-grown private one behind a mutex.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    /// Spline-path i32 accumulators, `bs * max_out`.
+    acc: Vec<i32>,
+    /// Base-path i32 accumulators, `bs * max_out`.
+    acc_base: Vec<i32>,
+    /// Final-layer i64 accumulators (the forward's output), `bs * max_out`.
+    t: Vec<i64>,
+    /// Ping-pong buffers for requantized inter-layer activations.
+    act: [Vec<u8>; 2],
+    /// Quantized-input staging for batch gather / float quantization.
+    staging: Vec<u8>,
+}
+
+impl Scratch {
+    /// An empty arena; grows on first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// An arena pre-sized for `plan` at batch sizes up to `max_bs`, so
+    /// even the first forward is allocation-free.
+    pub fn for_plan(plan: &ExecutionPlan, max_bs: usize) -> Self {
+        let mut s = Self::new();
+        s.ensure(plan, max_bs);
+        s.staging.reserve(max_bs * plan.in_dim);
+        s
+    }
+
+    /// Grow (never shrink) to fit one forward of `plan` at `bs` rows.
+    fn ensure(&mut self, plan: &ExecutionPlan, bs: usize) {
+        let n = bs * plan.max_out;
+        if self.acc.len() < n {
+            self.acc.resize(n, 0);
+        }
+        if self.acc_base.len() < n {
+            self.acc_base.resize(n, 0);
+        }
+        if self.t.len() < n {
+            self.t.resize(n, 0);
+        }
+        let a = bs * plan.max_act;
+        for buf in &mut self.act {
+            if buf.len() < a {
+                buf.resize(a, 0);
+            }
+        }
+    }
+
+    /// Clear the staging buffer and reserve `len` bytes; the caller then
+    /// gathers quantized input rows with `extend_from_slice`. The reserve
+    /// is amortized: after warmup at the peak batch size it never
+    /// reallocates.
+    pub fn stage_input(&mut self, len: usize) -> &mut Vec<u8> {
+        self.staging.clear();
+        self.staging.reserve(len);
+        &mut self.staging
+    }
+
+    /// Rows * in_dim bytes currently staged (see [`Scratch::stage_input`]).
+    pub fn staged_len(&self) -> usize {
+        self.staging.len()
+    }
+
+    /// Bytes currently held by the arena (capacity, not length).
+    pub fn capacity_bytes(&self) -> usize {
+        self.acc.capacity() * 4
+            + self.acc_base.capacity() * 4
+            + self.t.capacity() * 8
+            + self.act.iter().map(|b| b.capacity()).sum::<usize>()
+            + self.staging.capacity()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> QuantizedModel {
+        QuantizedModel::synthetic("plan", &[6, 9, 4, 3], 5, 3, 11)
+    }
+
+    #[test]
+    fn compile_resolves_all_layers() {
+        let m = model();
+        let plan = ExecutionPlan::compile(&m);
+        assert_eq!(plan.layers.len(), 3);
+        assert_eq!(plan.in_dim(), 6);
+        assert_eq!(plan.out_dim(), 3);
+        assert_eq!(plan.max_out, 9);
+        assert_eq!(plan.max_act, 9, "last layer's width never hits the act buffers");
+        for (lp, l) in plan.layers.iter().zip(&m.layers) {
+            assert_eq!(lp.num_bases, l.num_bases());
+            assert_eq!(lp.coeff16.len(), l.coeff.len());
+            assert_eq!(
+                lp.coeff16.iter().map(|&w| w as i64).sum::<i64>(),
+                l.coeff.data().iter().map(|&w| w as i64).sum::<i64>(),
+                "widening must be value-preserving"
+            );
+        }
+        assert!(plan.derived_bytes() > 0);
+    }
+
+    #[test]
+    fn execute_matches_across_scratch_states() {
+        let m = model();
+        let plan = ExecutionPlan::compile(&m);
+        let x_q: Vec<u8> = (0..2 * 6).map(|i| (i * 37 % 256) as u8).collect();
+        let mut fresh = Scratch::new();
+        let want = plan.execute(&x_q, 2, &mut fresh).to_vec();
+        // pre-sized and reused arenas produce the identical bytes
+        let mut sized = Scratch::for_plan(&plan, 8);
+        assert_eq!(plan.execute(&x_q, 2, &mut sized), &want[..]);
+        assert_eq!(plan.execute(&x_q, 2, &mut sized), &want[..]);
+        // staged path too
+        sized.stage_input(x_q.len()).extend_from_slice(&x_q);
+        assert_eq!(plan.execute_staged(2, &mut sized), &want[..]);
+    }
+
+    #[test]
+    fn scratch_grows_monotonically() {
+        let plan = ExecutionPlan::compile(&model());
+        let mut s = Scratch::new();
+        s.ensure(&plan, 4);
+        let cap4 = s.capacity_bytes();
+        s.ensure(&plan, 2);
+        assert_eq!(s.capacity_bytes(), cap4, "shrinking batch must not shrink the arena");
+        s.ensure(&plan, 16);
+        assert!(s.capacity_bytes() > cap4);
+    }
+
+    #[test]
+    fn single_layer_model_needs_no_act_buffers() {
+        let m = QuantizedModel::synthetic("one", &[4, 3], 5, 3, 2);
+        let plan = ExecutionPlan::compile(&m);
+        assert_eq!(plan.max_act, 0);
+        let mut s = Scratch::new();
+        let t = plan.execute(&[0, 128, 60, 255], 1, &mut s);
+        assert_eq!(t.len(), 3);
+        assert!(s.act.iter().all(|b| b.is_empty()));
+    }
+}

@@ -33,6 +33,12 @@
 //! * Each worker runs its own dynamic [`coordinator::Batcher`] (size +
 //!   deadline policy, deadlines anchored at true arrival times) and attaches
 //!   simulated accelerator cycles to every served batch.
+//! * Inference follows a **compile/execute split** ([`kan::plan`]): the
+//!   engine compiles an [`kan::ExecutionPlan`] once (resolved B-spline
+//!   units, i16-widened MAC tables, buffer sizing — what the accelerator
+//!   wires at configuration time), and each worker owns a [`kan::Scratch`]
+//!   arena so steady-state forwards perform zero heap allocations
+//!   (`tests/zero_alloc.rs` enforces this with a counting allocator).
 //! * Per-replica [`coordinator::Metrics`] merge into a pool-level
 //!   [`coordinator::PoolStats`] (queue depth, shed count, per-replica rows
 //!   and simulated utilization).

@@ -318,8 +318,12 @@ fn cmd_quickstart() -> Result<()> {
         .context("run `make artifacts` first")?;
     let engine = Engine::new(qm);
     let x = vec![0.25f32, -0.5, 0.75, 0.1];
-    let fwd = engine.forward(&x, 1)?;
-    println!("int8 engine prediction: class {}", fwd.predictions()[0]);
+    // drive the compiled-plan path the serving pool runs: quantize into
+    // the scratch's staging buffer, execute, argmax the returned slice
+    let mut scratch = kan_sas::kan::Scratch::new();
+    kan_sas::quant::quantize_activations_into(&x, scratch.stage_input(x.len()));
+    let t = engine.forward_staged(1, &mut scratch)?;
+    println!("int8 engine prediction: class {}", kan_sas::util::argmax(t));
 
     #[cfg(feature = "xla")]
     {

@@ -28,7 +28,16 @@ pub fn dequantize_activation(q: u8) -> f32 {
 }
 
 pub fn quantize_activations(xs: &[f32]) -> Vec<u8> {
-    xs.iter().map(|&x| quantize_activation(x)).collect()
+    let mut out = Vec::new();
+    quantize_activations_into(xs, &mut out);
+    out
+}
+
+/// Quantize into a caller-owned buffer (cleared first) — the
+/// allocation-free staging path used by `kan::plan::Scratch`.
+pub fn quantize_activations_into(xs: &[f32], out: &mut Vec<u8>) {
+    out.clear();
+    out.extend(xs.iter().map(|&x| quantize_activation(x)));
 }
 
 /// Symmetric per-tensor int8 quantization; returns (values, scale).

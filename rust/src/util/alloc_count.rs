@@ -1,0 +1,70 @@
+//! A counting global allocator for zero-allocation assertions.
+//!
+//! The planned execution core (`kan::plan`) promises steady-state
+//! forwards with zero heap allocations; that promise is only worth
+//! anything if it is *measured*. Binaries opt in by installing the
+//! allocator:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: kan_sas::util::alloc_count::CountingAllocator =
+//!     kan_sas::util::alloc_count::CountingAllocator;
+//!
+//! let before = alloc_count::allocations();
+//! // ... hot path ...
+//! assert_eq!(alloc_count::allocations() - before, 0);
+//! ```
+//!
+//! Used by `tests/zero_alloc.rs` (hard assertion) and the
+//! `e2e_inference` bench (reports allocs-per-forward in
+//! `BENCH_engine.json`). Counts are process-wide, so measured sections
+//! must not race other allocating threads.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+static REALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// `System`, instrumented with allocation counters. Zero-cost when not
+/// installed as the `#[global_allocator]`.
+pub struct CountingAllocator;
+
+// SAFETY: delegates every operation to `System` unchanged; the counters
+// are side effects only.
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        REALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+/// Fresh allocations (`alloc` + `alloc_zeroed`) since process start.
+pub fn allocations() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
+
+/// Reallocations (`Vec` growth etc.) since process start.
+pub fn reallocations() -> u64 {
+    REALLOCATIONS.load(Ordering::Relaxed)
+}
+
+/// Total allocator events (allocations + reallocations) — the number a
+/// zero-allocation hot path must hold constant.
+pub fn events() -> u64 {
+    allocations() + reallocations()
+}

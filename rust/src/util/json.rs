@@ -98,6 +98,92 @@ impl Value {
         }
     }
 
+    // -- construction helpers (for the machine-readable bench artifacts) --
+
+    pub fn obj(entries: impl IntoIterator<Item = (&'static str, Value)>) -> Value {
+        Value::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn arr(items: impl IntoIterator<Item = Value>) -> Value {
+        Value::Arr(items.into_iter().collect())
+    }
+
+    pub fn num(n: f64) -> Value {
+        Value::Num(n)
+    }
+
+    pub fn str(s: impl Into<String>) -> Value {
+        Value::Str(s.into())
+    }
+
+    /// Serialize back to JSON text. Round-trips through [`Value::parse`]
+    /// (non-finite numbers, which JSON cannot express, degrade to
+    /// `null`); integral numbers print without a fractional part so
+    /// counters stay readable. Object keys are emitted in `BTreeMap`
+    /// order, so output is deterministic.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_to(&mut out, 0);
+        out
+    }
+
+    fn render_to(&self, out: &mut String, indent: usize) {
+        use std::fmt::Write;
+        match self {
+            Value::Null => out.push_str("null"),
+            Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Value::Num(n) => {
+                if !n.is_finite() {
+                    // JSON has no NaN/inf; null keeps the document parseable
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 9.0e15 {
+                    let _ = write!(out, "{}", *n as i64);
+                } else {
+                    let _ = write!(out, "{n}");
+                }
+            }
+            Value::Str(s) => render_str(s, out),
+            Value::Arr(items) => {
+                if items.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    out.push_str(&"  ".repeat(indent + 1));
+                    v.render_to(out, indent + 1);
+                }
+                out.push('\n');
+                out.push_str(&"  ".repeat(indent));
+                out.push(']');
+            }
+            Value::Obj(map) => {
+                if map.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    out.push_str(&"  ".repeat(indent + 1));
+                    render_str(k, out);
+                    out.push_str(": ");
+                    v.render_to(out, indent + 1);
+                }
+                out.push('\n');
+                out.push_str(&"  ".repeat(indent));
+                out.push('}');
+            }
+        }
+    }
+
     /// `obj["a"]["b"][2]`-style path lookup, `/`-separated.
     pub fn path(&self, path: &str) -> Option<&Value> {
         let mut cur = self;
@@ -110,6 +196,27 @@ impl Value {
         }
         Some(cur)
     }
+}
+
+/// Escape + quote one string (shared by string values and object keys —
+/// keys need the same treatment or a quote in a key breaks the document).
+fn render_str(s: &str, out: &mut String) {
+    use std::fmt::Write;
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 struct Parser<'a> {
@@ -326,6 +433,41 @@ mod tests {
     #[test]
     fn multibyte_utf8_passthrough() {
         assert_eq!(Value::parse("\"héllo\"").unwrap(), Value::Str("héllo".into()));
+    }
+
+    #[test]
+    fn render_round_trips() {
+        let v = Value::obj([
+            ("name", Value::str("bench \"x\"\n")),
+            ("count", Value::num(42.0)),
+            ("rate", Value::num(1.5)),
+            ("ok", Value::Bool(true)),
+            ("items", Value::arr([Value::num(1.0), Value::Null])),
+            ("empty", Value::arr([])),
+        ]);
+        let text = v.render();
+        assert_eq!(Value::parse(&text).unwrap(), v);
+        assert!(text.contains("\"count\": 42"), "integral numbers render bare: {text}");
+        assert!(text.contains("\"rate\": 1.5"));
+    }
+
+    #[test]
+    fn render_escapes_object_keys() {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("he\"llo\\\n".to_string(), Value::Num(1.0));
+        let v = Value::Obj(m);
+        let text = v.render();
+        assert_eq!(Value::parse(&text).unwrap(), v, "keys with quotes must round-trip: {text}");
+    }
+
+    #[test]
+    fn render_degrades_non_finite_to_null() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let v = Value::obj([("x", Value::num(bad))]);
+            let text = v.render();
+            assert!(text.contains("\"x\": null"), "non-finite must render as null: {text}");
+            assert!(Value::parse(&text).is_ok(), "rendered document must stay parseable");
+        }
     }
 
     #[test]

@@ -1,11 +1,13 @@
 //! Shared low-level utilities: seeded PRNG + property-test harness, a
-//! minimal JSON reader, and the binary tensor-container reader for the
-//! artifacts produced by `python/compile/aot.py`.
+//! minimal JSON reader/writer, the binary tensor-container reader for
+//! the artifacts produced by `python/compile/aot.py`, and a counting
+//! allocator backing the zero-allocation assertions.
 //!
 //! Everything here is std-only — the offline build image vendors only the
 //! `xla` crate's dependency closure, so serde/proptest/criterion are
 //! replaced by small in-tree equivalents.
 
+pub mod alloc_count;
 pub mod container;
 pub mod json;
 pub mod rng;

@@ -38,32 +38,43 @@ fn replay(name: &str) {
     assert_eq!(in_dim, engine.model.in_dim());
 
     // 1. layer-0 B-spline unit outputs must match element-for-element
+    //    (driven through the allocation-free batch entry point)
     let l0 = &engine.model.layers[0];
     let unit = BsplineUnit::new(l0.lut.clone(), l0.grid);
     let (want_vals, vshape) = golden.u8("l0.vals").unwrap();
     let (want_k, _) = golden.i32("l0.k").unwrap();
     assert_eq!(vshape, vec![bs, in_dim, l0.degree + 1]);
-    let (got_vals, got_k) = unit.eval_batch(&x_q);
+    let (mut got_vals, mut got_k) = (Vec::new(), Vec::new());
+    unit.eval_batch_into(&x_q, &mut got_vals, &mut got_k);
     assert_eq!(got_vals, want_vals, "{name}: l0 unit values diverge");
     let got_k32: Vec<i32> = got_k.iter().map(|&k| k as i32).collect();
     assert_eq!(got_k32, want_k, "{name}: l0 unit indices diverge");
 
-    // 2. intermediate activations after each requantization
+    // 2. intermediate activations after each requantization, replayed
+    //    layer by layer through the compiled plan
     let fwd = engine.forward_from_q(&x_q, bs).unwrap();
+    let n_layers = engine.model.layers.len();
     let mut cur = x_q.clone();
-    for (i, layer) in engine.model.layers.iter().enumerate() {
-        let t = engine.layer_forward(layer, &cur, bs);
-        if i + 1 < engine.model.layers.len() {
+    for i in 0..n_layers {
+        let t = engine.layer_forward(i, &cur, bs);
+        if i + 1 < n_layers {
             cur = t.iter().map(|&v| quant::requantize(v)).collect();
             let (want_act, _) = golden.u8(&format!("act{}", i + 1)).unwrap();
             assert_eq!(cur, want_act, "{name}: act{} diverges", i + 1);
         }
     }
 
-    // 3. final accumulators and predictions, exactly
+    // 3. final accumulators and predictions, exactly — on the wrapper
+    //    AND on the planned zero-allocation path
     let (want_t, tshape) = golden.i64("t_final").unwrap();
     assert_eq!(tshape, vec![bs, engine.model.out_dim()]);
     assert_eq!(fwd.t, want_t, "{name}: final accumulators diverge");
+    let mut scratch = kan_sas::kan::Scratch::new();
+    assert_eq!(
+        engine.forward_into(&x_q, bs, &mut scratch).unwrap(),
+        &want_t[..],
+        "{name}: planned forward_into diverges from golden"
+    );
     let (want_pred, _) = golden.i32("pred").unwrap();
     let got_pred: Vec<i32> = fwd.predictions().iter().map(|&p| p as i32).collect();
     assert_eq!(got_pred, want_pred, "{name}: predictions diverge");

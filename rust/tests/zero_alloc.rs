@@ -1,0 +1,60 @@
+//! Hard acceptance gate for the planned execution core: after warmup,
+//! `Engine::forward_into` / `Engine::forward_staged` must perform ZERO
+//! heap allocations, measured by installing a counting global allocator
+//! in this test binary.
+//!
+//! Kept to a single `#[test]` on purpose — the counters are process-wide
+//! and the default harness runs tests of one binary concurrently, so a
+//! second test here could allocate inside the measured window.
+
+use kan_sas::kan::{Engine, QuantizedModel, Scratch};
+use kan_sas::util::alloc_count::{self, CountingAllocator};
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+#[test]
+fn planned_forward_is_allocation_free_after_warmup() {
+    let in_dim = 32usize;
+    let engine =
+        Engine::new(QuantizedModel::synthetic("zero_alloc", &[in_dim, 48, 24, 10], 5, 3, 7));
+    let mk = |bs: usize| -> Vec<u8> {
+        (0..bs * in_dim).map(|i| (i.wrapping_mul(131) % 256) as u8).collect()
+    };
+    let x16 = mk(16);
+    let x3 = mk(3);
+
+    // warmup: grows the arena to the peak batch size (16) on both paths
+    let mut scratch = Scratch::new();
+    let want16 = engine.forward_into(&x16, 16, &mut scratch).unwrap().to_vec();
+    let want3 = engine.forward_into(&x3, 3, &mut scratch).unwrap().to_vec();
+    scratch.stage_input(x16.len()).extend_from_slice(&x16);
+    engine.forward_staged(16, &mut scratch).unwrap();
+
+    let before = alloc_count::events();
+    for _ in 0..16 {
+        // external-input path, peak batch
+        let t = engine.forward_into(&x16, 16, &mut scratch).unwrap();
+        assert_eq!(t, &want16[..]);
+        // shrunken batch through the same arena
+        let t = engine.forward_into(&x3, 3, &mut scratch).unwrap();
+        assert_eq!(t, &want3[..]);
+        // gather-into-staging path (what pool workers run)
+        scratch.stage_input(x16.len()).extend_from_slice(&x16);
+        let t = engine.forward_staged(16, &mut scratch).unwrap();
+        assert_eq!(t, &want16[..]);
+    }
+    let events = alloc_count::events() - before;
+    assert_eq!(
+        events, 0,
+        "steady-state planned forwards must not touch the heap ({events} allocator events)"
+    );
+
+    // a pre-sized arena is allocation-free from the very first forward
+    let mut sized = Scratch::for_plan(engine.plan(), 16);
+    sized.stage_input(x16.len()).extend_from_slice(&x16);
+    let before = alloc_count::events();
+    let t = engine.forward_staged(16, &mut sized).unwrap();
+    assert_eq!(t, &want16[..]);
+    assert_eq!(alloc_count::events() - before, 0, "Scratch::for_plan must pre-size everything");
+}
