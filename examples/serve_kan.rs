@@ -1,8 +1,9 @@
-//! Serving demo: the N-replica pool under batched KAN inference —
-//! closed-loop throughput scaling across replica counts, then an
-//! open-loop flash-crowd showing admission control shedding load
-//! (what a deployment of the paper's accelerator would look like from
-//! the software side).
+//! Serving demo: the replica fleet under batched KAN inference —
+//! closed-loop throughput scaling across replica counts, an open-loop
+//! flash-crowd showing admission control shedding load, then the
+//! multi-tenant Gateway serving an application mix over one fleet (what
+//! a deployment of the paper's accelerator would look like from the
+//! software side; the mix is Fig. 8 at the serving tier).
 //!
 //! ```bash
 //! cargo run --release --example serve_kan
@@ -16,9 +17,11 @@ use std::time::Duration;
 
 use anyhow::Result;
 use kan_sas::arch::ArrayConfig;
-use kan_sas::coordinator::{BatchPolicy, Pool, PoolConfig, ShedPolicy};
+use kan_sas::coordinator::{
+    BatchPolicy, GatewayBuilder, GatewayConfig, Pool, PoolConfig, ShedPolicy,
+};
 use kan_sas::kan::{Engine, QuantizedModel};
-use kan_sas::loadgen::{self, Scenario};
+use kan_sas::loadgen::{self, MixEntry, Scenario};
 
 fn pool_config(replicas: usize, shed: ShedPolicy) -> PoolConfig {
     PoolConfig {
@@ -72,6 +75,49 @@ fn main() -> Result<()> {
         "peak queue {} / shed {} of {} — load-shedding kept the pool live through the spike",
         stats.peak_depth, stats.shed, stats.submitted
     );
-    println!("serve_kan OK — replicas scale throughput; admission control bounds overload");
+
+    // 3. multi-tenant gateway: the MNIST model and a HAR-shaped tenant
+    //    share ONE fleet and admission queue; batches never mix models,
+    //    and accounting is per model
+    let mut builder = GatewayBuilder::with_config(GatewayConfig {
+        replicas: 2,
+        queue_cap: 512,
+        shed: ShedPolicy::RejectNew,
+        policy: BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(1) },
+        sim_array: ArrayConfig::kan_sas(16, 16, 4, 13),
+    });
+    let mnist = builder.register("mnist", engine.clone());
+    let har = builder.register(
+        "har",
+        Engine::new(QuantizedModel::synthetic("har_synth", &[16, 32, 6], 5, 3, 3)),
+    );
+    let gateway = builder.start();
+    let entries = [
+        MixEntry { handle: gateway.handle(mnist), weight: 3.0 },
+        MixEntry { handle: gateway.handle(har), weight: 1.0 },
+    ];
+    let mix = loadgen::run_mix(&entries, &Scenario::steady(2000.0, Duration::from_millis(1000)), 5);
+    let gstats = gateway.shutdown();
+    println!("\nmulti-tenant gateway (3:1 mnist:har mix over one 2-replica fleet):");
+    for rep in &mix.per_model {
+        println!("  {}", rep.summary());
+    }
+    for m in &gstats.per_model {
+        println!(
+            "  {}: conserved={} ({} == {} ok + {} shed + {} failed)  queue {:.0} us + service {:.0} us",
+            m.name,
+            m.conserved(),
+            m.submitted,
+            m.completed,
+            m.shed,
+            m.failed,
+            m.metrics.mean_queue_us(),
+            m.metrics.mean_service_us(),
+        );
+    }
+    println!(
+        "serve_kan OK — replicas scale throughput; admission control bounds overload; \
+         one fleet serves the whole model mix"
+    );
     Ok(())
 }

@@ -1,6 +1,6 @@
-//! Serving-pool scale sweep: replica count x offered load.
+//! Serving scale sweep: replica count x offered load x model mix.
 //!
-//! Two measurements, both on a synthetic model (offline, no artifacts):
+//! Three measurements, all on synthetic models (offline, no artifacts):
 //!
 //! 1. **Closed-loop saturation** per replica count — peak rows/sec with
 //!    16 hammering clients. The acceptance bar is >= 2x rows/sec at 4
@@ -10,22 +10,29 @@
 //! 2. **Open-loop scenario mixes** at fixed replicas — offered vs
 //!    achieved rate, shed rate, and tail latency for steady / diurnal /
 //!    flash-crowd arrival processes.
+//! 3. **Multi-model gateway mixes** — two differently-shaped tenants
+//!    (an MNIST-like and a HAR-like model, the serving-tier analogue of
+//!    Fig. 8's application mix) share one fleet; the sweep crosses mix
+//!    weights x replica counts and records per-model achieved rate,
+//!    shed, p99, and the per-model conservation check.
 //!
 //! ```bash
 //! cargo bench --bench serving_scale
 //! ```
 //!
 //! Besides the printed tables, the run writes `BENCH_serving.json`
-//! (throughput per replica count, scenario shed rates, p50/p99 latency)
-//! so the serving perf trajectory is tracked across PRs instead of
-//! anecdotal.
+//! (throughput per replica count, scenario shed rates, p50/p99 latency,
+//! multi-model mix rows) so the serving perf trajectory is tracked
+//! across PRs instead of anecdotal.
 
 use std::time::Duration;
 
 use kan_sas::arch::ArrayConfig;
-use kan_sas::coordinator::{BatchPolicy, Pool, PoolConfig, ShedPolicy};
+use kan_sas::coordinator::{
+    BatchPolicy, GatewayBuilder, GatewayConfig, Pool, PoolConfig, ShedPolicy,
+};
 use kan_sas::kan::{Engine, QuantizedModel};
-use kan_sas::loadgen::{self, Scenario};
+use kan_sas::loadgen::{self, MixEntry, Scenario};
 use kan_sas::report::Table;
 use kan_sas::util::json::Value;
 
@@ -132,6 +139,77 @@ fn main() {
         ]));
     }
 
+    // 3. multi-model gateway: mix weights x replica counts on one fleet
+    let mnist_like =
+        Engine::new(QuantizedModel::synthetic("mnist_mix", &[64, 128, 64, 10], 5, 3, 42));
+    let har_like = Engine::new(QuantizedModel::synthetic("har_mix", &[16, 32, 6], 5, 3, 43));
+    let mix_rate = rows_at.get(&2).copied().unwrap_or(4000.0) * 0.6;
+    println!(
+        "\nmulti-model gateway (mnist_mix + har_mix, RejectNew, queue 256, {mix_rate:.0} rps):"
+    );
+    let mut t = Table::new(&[
+        "replicas", "mix", "model", "offered", "achieved", "shed %", "p99 us", "conserved",
+    ])
+    .with_title("mix x replicas sweep (one fleet, per-model batchers)");
+    let mut mix_json = Vec::new();
+    for &replicas in &[2usize, 4] {
+        for &(wa, wb) in &[(1.0f64, 1.0f64), (4.0, 1.0)] {
+            let mut b = GatewayBuilder::with_config(GatewayConfig {
+                replicas,
+                queue_cap: 256,
+                shed: ShedPolicy::RejectNew,
+                policy: BatchPolicy { max_batch: 32, max_wait: Duration::from_micros(500) },
+                sim_array: ArrayConfig::kan_sas(16, 16, 4, 8),
+            });
+            let a = b.register("mnist_mix", mnist_like.clone());
+            let h = b.register("har_mix", har_like.clone());
+            let gw = b.start();
+            let entries = [
+                MixEntry { handle: gw.handle(a), weight: wa },
+                MixEntry { handle: gw.handle(h), weight: wb },
+            ];
+            let sc = Scenario::steady(mix_rate, Duration::from_millis(700));
+            let mix = loadgen::run_mix(&entries, &sc, 13);
+            let stats = gw.shutdown();
+            let mix_label = format!("{wa:.0}:{wb:.0}");
+            let mut per_model_json = Vec::new();
+            for (rep, ms) in mix.per_model.iter().zip(&stats.per_model) {
+                let p99 = rep.latency.map(|l| l.p99_us).unwrap_or(0);
+                t.row(vec![
+                    replicas.to_string(),
+                    mix_label.clone(),
+                    rep.scenario.clone(),
+                    format!("{:.0}", rep.offered_rps),
+                    format!("{:.0}", rep.achieved_rps),
+                    format!("{:.1}", 100.0 * rep.shed_rate()),
+                    p99.to_string(),
+                    if ms.conserved() { "yes".into() } else { "NO".into() },
+                ]);
+                per_model_json.push(Value::obj([
+                    ("model", Value::str(rep.scenario.clone())),
+                    ("offered_rps", Value::num(rep.offered_rps)),
+                    ("achieved_rps", Value::num(rep.achieved_rps)),
+                    ("ok", Value::num(rep.ok as f64)),
+                    ("shed", Value::num(rep.shed as f64)),
+                    ("shed_rate", Value::num(rep.shed_rate())),
+                    ("p99_us", Value::num(p99 as f64)),
+                    ("mean_queue_us", Value::num(ms.metrics.mean_queue_us())),
+                    ("mean_service_us", Value::num(ms.metrics.mean_service_us())),
+                    ("conserved", Value::num(if ms.conserved() { 1.0 } else { 0.0 })),
+                ]));
+            }
+            mix_json.push(Value::obj([
+                ("replicas", Value::num(replicas as f64)),
+                ("mix", Value::str(mix_label)),
+                ("offered_rps", Value::num(mix.total.offered_rps)),
+                ("achieved_rps", Value::num(mix.total.achieved_rps)),
+                ("peak_queue", Value::num(stats.peak_depth as f64)),
+                ("per_model", Value::arr(per_model_json)),
+            ]));
+        }
+    }
+    print!("{}", t.render());
+
     let doc = Value::obj([
         ("bench", Value::str("serving_scale")),
         ("model", Value::str(engine.model.name.clone())),
@@ -139,6 +217,7 @@ fn main() {
         ("cores", Value::num(cores as f64)),
         ("closed_loop", Value::arr(closed_json)),
         ("open_loop", Value::arr(scenario_json)),
+        ("multi_model", Value::arr(mix_json)),
     ]);
     let out = "BENCH_serving.json";
     std::fs::write(out, doc.render() + "\n").expect("write bench artifact");

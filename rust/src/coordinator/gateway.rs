@@ -1,0 +1,1298 @@
+//! Multi-tenant serving gateway: one typed front door for many models
+//! over one replica fleet.
+//!
+//! The paper evaluates KAN-SAs across a *mix* of applications (Fig. 8:
+//! MNIST, CIFAR, HAR, …) time-sharing one accelerator; the [`Gateway`]
+//! is that picture at the serving tier. A [`GatewayBuilder`] registers N
+//! models ([`GatewayBuilder::register`] → [`ModelId`]); the started
+//! gateway shares **one bounded admission queue and one worker fleet**
+//! across all of them, routing each admitted request to its model's
+//! compiled [`ExecutionPlan`](crate::kan::ExecutionPlan):
+//!
+//! * every worker owns engine replicas for *all* registered models
+//!   (clones alias the originals' weights through `Arc`, so the fleet
+//!   costs ~1x total model memory) and **one**
+//!   [`Scratch`](crate::kan::Scratch) arena sized to the widest model;
+//! * each worker runs **per-model batchers**, so a served batch is never
+//!   mixed-model — exactly like the accelerator, which must reconfigure
+//!   LUT ROMs and N:M windows between applications;
+//! * admission control is shared: one queue capacity, one
+//!   [`ShedPolicy`], with [`Priority`] classes ordering
+//!   [`ShedPolicy::DropOldest`] eviction (low-priority victims first).
+//!
+//! The client surface is typed end to end: [`ModelHandle`] submits a
+//! [`Request`] (quantized or f32 row, optional deadline, priority) and
+//! gets a [`Ticket`]; every terminal outcome is a [`ServeError`] — one
+//! enum for the whole serving stack, replacing the old
+//! `PoolError`-vs-`anyhow` split. [`GatewayStats`] breaks the counters
+//! down per model *and* per replica, with the conservation invariant
+//! held **per model**: `submitted == completed + shed + failed`
+//! (deadline-lapsed requests are answered
+//! [`ServeError::DeadlineExceeded`] and counted inside `shed`, reported
+//! separately as `expired`).
+//!
+//! Response buffers are pooled: each answered request's pre-sized
+//! `Vec<i64>` returns to a per-model free-list ([`BufferPool`]) when the
+//! [`Response`] drops, so steady-state submission pays no buffer
+//! allocation (asserted by `tests/gateway_alloc.rs` with a counting
+//! allocator).
+//!
+//! `coordinator::pool::Pool` is the 1-model special case of the gateway
+//! and `coordinator::server::Server` the 1-model/1-replica one.
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::arch::ArrayConfig;
+use crate::kan::{Engine, Scratch};
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::metrics::Metrics;
+
+/// What to do with a new submission when the admission queue is full.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Reject the new arrival with [`ServeError::QueueFull`].
+    RejectNew,
+    /// Evict a queued request — the oldest among the *lowest*
+    /// [`Priority`] class present — answer it `QueueFull`, and admit the
+    /// newcomer. A newcomer whose priority is below everything queued is
+    /// itself rejected (eviction never sacrifices a higher class).
+    DropOldest,
+    /// Block the submitting thread until a worker frees space.
+    Block,
+}
+
+/// Request priority class. Only [`ShedPolicy::DropOldest`] eviction
+/// looks at it (victims are chosen lowest-class-first, oldest within the
+/// class); dispatch order within the queue stays FIFO.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Priority {
+    /// First to be evicted (bulk / best-effort traffic).
+    Low,
+    /// The default class.
+    #[default]
+    Normal,
+    /// Last to be evicted (interactive traffic).
+    High,
+}
+
+/// Gateway sizing and policy, shared by every registered model.
+#[derive(Clone, Debug)]
+pub struct GatewayConfig {
+    /// Worker threads; each owns one replica of *every* registered model
+    /// (replicas alias the registered engines' weights via `Arc`).
+    pub replicas: usize,
+    /// Admission queue capacity (requests, not batches; shared across
+    /// models).
+    pub queue_cap: usize,
+    pub shed: ShedPolicy,
+    /// Per-worker, per-model dynamic batching policy.
+    pub policy: BatchPolicy,
+    /// Accelerator config used to attach simulated cycle counts to each
+    /// served batch.
+    pub sim_array: ArrayConfig,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        Self {
+            replicas: super::pool::default_replicas(),
+            queue_cap: 1024,
+            shed: ShedPolicy::RejectNew,
+            policy: BatchPolicy::default(),
+            sim_array: ArrayConfig::kan_sas(16, 16, 4, 8),
+        }
+    }
+}
+
+/// Identifies a registered model within its [`Gateway`] (returned by
+/// [`GatewayBuilder::register`], embedded in every [`ModelHandle`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ModelId(pub(crate) usize);
+
+impl ModelId {
+    /// Index into [`GatewayStats::per_model`].
+    pub fn index(self) -> usize {
+        self.0
+    }
+}
+
+impl fmt::Display for ModelId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "m{}", self.0)
+    }
+}
+
+/// Terminal outcomes across the whole serving stack — gateway, pool, and
+/// server answer with this one enum (no more `PoolError` here,
+/// `anyhow` there).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// Shed by admission control: rejected at submit, or evicted under
+    /// [`ShedPolicy::DropOldest`].
+    QueueFull,
+    /// The request's deadline lapsed before a worker could serve it.
+    DeadlineExceeded,
+    /// The gateway shut down before the request could be admitted.
+    Closed,
+    /// Input validation failed (wrong dimension).
+    InvalidInput(String),
+    /// No model registered under that name ([`Gateway::handle_by_name`]
+    /// and the CLI's `--models` routing).
+    UnknownModel(String),
+    /// The engine rejected the whole batch.
+    Inference(String),
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::QueueFull => write!(f, "admission queue full (request shed)"),
+            ServeError::DeadlineExceeded => write!(f, "deadline exceeded before service"),
+            ServeError::Closed => write!(f, "gateway stopped"),
+            ServeError::InvalidInput(m) => write!(f, "{m}"),
+            ServeError::UnknownModel(m) => write!(f, "unknown model '{m}'"),
+            ServeError::Inference(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// A free-list of pre-sized response buffers, one per registered model.
+///
+/// [`BufferPool::acquire`] pops a recycled `Vec<i64>` (or allocates one
+/// to exact `out_dim` capacity on a miss); the buffer rides through the
+/// worker's scatter into the [`Response`], and returns to the list when
+/// the response drops. After warmup, acquire/release cycles perform zero
+/// heap allocations (`tests/gateway_alloc.rs`); the list is capped so an
+/// overload burst cannot pin unbounded memory.
+#[derive(Debug)]
+pub struct BufferPool {
+    free: Mutex<Vec<Vec<i64>>>,
+    /// Row width every buffer is pre-sized to.
+    out_dim: usize,
+    /// Maximum buffers retained on the free-list.
+    retain: usize,
+    created: AtomicU64,
+    recycled: AtomicU64,
+}
+
+impl BufferPool {
+    pub fn new(out_dim: usize, retain: usize) -> Self {
+        Self {
+            free: Mutex::new(Vec::new()),
+            out_dim,
+            retain,
+            created: AtomicU64::new(0),
+            recycled: AtomicU64::new(0),
+        }
+    }
+
+    /// An empty buffer with capacity `out_dim` — recycled when the
+    /// free-list has one, freshly allocated otherwise.
+    pub fn acquire(&self) -> Vec<i64> {
+        if let Some(buf) = self.free.lock().unwrap().pop() {
+            self.recycled.fetch_add(1, Ordering::Relaxed);
+            return buf;
+        }
+        self.created.fetch_add(1, Ordering::Relaxed);
+        Vec::with_capacity(self.out_dim)
+    }
+
+    /// Return a buffer to the free-list (dropped if the list is full or
+    /// the buffer was grown past the model's row width).
+    pub fn release(&self, mut buf: Vec<i64>) {
+        if buf.capacity() < self.out_dim || buf.capacity() > 4 * self.out_dim.max(1) {
+            return; // wrong-sized stray; let it free normally
+        }
+        buf.clear();
+        let mut free = self.free.lock().unwrap();
+        if free.len() < self.retain {
+            free.push(buf);
+        }
+    }
+
+    /// `(fresh allocations, recycled acquires, buffers currently free)`.
+    pub fn counts(&self) -> (u64, u64, usize) {
+        (
+            self.created.load(Ordering::Relaxed),
+            self.recycled.load(Ordering::Relaxed),
+            self.free.lock().unwrap().len(),
+        )
+    }
+}
+
+/// Response: i64 accumulators for the row (argmax = class) + split
+/// timing. The accumulator buffer is pooled — dropping the response
+/// recycles it through the model's [`BufferPool`].
+#[derive(Debug)]
+pub struct Response {
+    /// Final-layer i64 accumulators for the row.
+    pub t: Vec<i64>,
+    /// Microseconds from admission to the start of the serving batch
+    /// (queueing + batching delay).
+    pub queue_us: u64,
+    /// Microseconds from batch-serve start to the response being sent
+    /// (compute + scatter).
+    pub service_us: u64,
+    /// Recycles `t` on drop when set.
+    pool: Option<Arc<BufferPool>>,
+}
+
+impl Response {
+    /// End-to-end latency: `queue_us + service_us` (the pre-split
+    /// `latency_us` field, kept as a method for compatibility).
+    pub fn latency_us(&self) -> u64 {
+        self.queue_us + self.service_us
+    }
+
+    pub fn prediction(&self) -> usize {
+        crate::util::argmax(&self.t)
+    }
+}
+
+impl Clone for Response {
+    fn clone(&self) -> Self {
+        Self {
+            t: self.t.clone(),
+            queue_us: self.queue_us,
+            service_us: self.service_us,
+            // the clone's buffer is fresh (not pool-sized bookkeeping);
+            // only the original recycles
+            pool: None,
+        }
+    }
+}
+
+impl Drop for Response {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.take() {
+            pool.release(std::mem::take(&mut self.t));
+        }
+    }
+}
+
+/// One inference request, built with options before submission:
+///
+/// ```ignore
+/// let ticket = handle.submit(
+///     Request::from_f32(&x)
+///         .with_deadline(Duration::from_millis(20))
+///         .with_priority(Priority::High),
+/// )?;
+/// ```
+#[derive(Clone, Debug)]
+pub struct Request {
+    x_q: Vec<u8>,
+    /// Service deadline relative to submission; a request still queued
+    /// when it lapses is answered [`ServeError::DeadlineExceeded`].
+    deadline: Option<Duration>,
+    priority: Priority,
+}
+
+impl Request {
+    /// A request over an already-quantized activation row.
+    pub fn from_q(x_q: Vec<u8>) -> Self {
+        Self { x_q, deadline: None, priority: Priority::Normal }
+    }
+
+    /// A request over a float (spline-domain) row; quantized here, on
+    /// the client thread.
+    pub fn from_f32(x: &[f32]) -> Self {
+        Self::from_q(crate::quant::quantize_activations(x))
+    }
+
+    /// Give the request a service deadline (measured from submission).
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Assign a [`Priority`] class (eviction ordering under
+    /// [`ShedPolicy::DropOldest`]).
+    pub fn with_priority(mut self, priority: Priority) -> Self {
+        self.priority = priority;
+        self
+    }
+}
+
+/// One admitted request flowing through the shared queue: routed by
+/// `model`, carrying its pooled output buffer so the worker's scatter is
+/// a pure `extend_from_slice`.
+struct GwRequest {
+    model: ModelId,
+    x_q: Vec<u8>,
+    /// Pre-sized (capacity `out_dim`) pooled response buffer.
+    out: Vec<i64>,
+    submitted: Instant,
+    deadline: Option<Instant>,
+    priority: Priority,
+    resp: Sender<Result<Response, ServeError>>,
+}
+
+/// Mutex-guarded queue state + the submit-side per-model counters.
+struct GwState {
+    items: VecDeque<GwRequest>,
+    open: bool,
+    /// Per-model: valid submissions counted by admission control
+    /// (admitted or rejected-new; Block submissions that observe
+    /// `Closed` are not counted).
+    submitted: Vec<u64>,
+    /// Per-model: requests answered `QueueFull` at admission (submit
+    /// rejection or eviction).
+    shed: Vec<u64>,
+    peak_depth: usize,
+}
+
+/// Worker-side per-model counters (atomics: workers never take the queue
+/// lock to account a served batch).
+#[derive(Default)]
+struct ModelCounters {
+    /// Requests answered with logits.
+    completed: AtomicU64,
+    /// Requests answered with an inference error.
+    failed: AtomicU64,
+    /// Requests answered `DeadlineExceeded` (a subset of the model's
+    /// `shed` total).
+    expired: AtomicU64,
+}
+
+struct Shared {
+    state: Mutex<GwState>,
+    /// Signalled when a request is admitted (workers wait here).
+    nonempty: Condvar,
+    /// Signalled when a worker frees queue space (Block submitters wait).
+    space: Condvar,
+    cap: usize,
+    shed_policy: ShedPolicy,
+    counters: Vec<ModelCounters>,
+    buffers: Vec<Arc<BufferPool>>,
+}
+
+/// A pending response. Dropping it abandons the answer (the gateway
+/// still serves and counts the request).
+pub struct Ticket {
+    rx: Receiver<Result<Response, ServeError>>,
+    pub submitted: Instant,
+}
+
+impl Ticket {
+    /// Block until the request resolves. A worker failure that loses the
+    /// channel maps to [`ServeError::Closed`], so this can never hang.
+    pub fn wait(self) -> Result<Response, ServeError> {
+        self.rx.recv().unwrap_or(Err(ServeError::Closed))
+    }
+
+    /// Non-blocking poll; `None` while still in flight. A lost worker
+    /// (disconnected channel) is a terminal [`ServeError::Closed`], not
+    /// `None` — pollers must never spin forever on a dead ticket.
+    pub fn try_wait(&self) -> Option<Result<Response, ServeError>> {
+        match self.rx.try_recv() {
+            Ok(r) => Some(r),
+            Err(std::sync::mpsc::TryRecvError::Empty) => None,
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => Some(Err(ServeError::Closed)),
+        }
+    }
+}
+
+/// Cloneable, typed client handle for one registered model. All
+/// submissions go through the gateway's shared admission queue but are
+/// validated against — and routed to — this model only.
+#[derive(Clone)]
+pub struct ModelHandle {
+    shared: Arc<Shared>,
+    model: ModelId,
+    name: Arc<str>,
+    in_dim: usize,
+    out_dim: usize,
+}
+
+impl ModelHandle {
+    pub fn model_id(&self) -> ModelId {
+        self.model
+    }
+
+    /// The name the model was registered under.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.in_dim
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+
+    /// Requests currently waiting for a worker (all models — the
+    /// admission queue is shared).
+    pub fn queue_depth(&self) -> usize {
+        self.shared.state.lock().unwrap().items.len()
+    }
+
+    /// Submit a built [`Request`]; returns a [`Ticket`] without waiting
+    /// for the result. Admission control applies: a full queue sheds per
+    /// the gateway's [`ShedPolicy`], with [`Priority`] ordering
+    /// `DropOldest` eviction.
+    pub fn submit(&self, req: Request) -> Result<Ticket, ServeError> {
+        let Request { x_q, deadline, priority } = req;
+        if x_q.len() != self.in_dim {
+            return Err(ServeError::InvalidInput(format!(
+                "input dim {} != model '{}' dim {}",
+                x_q.len(),
+                self.name,
+                self.in_dim
+            )));
+        }
+        let submitted = Instant::now();
+        let deadline = deadline.map(|d| submitted + d);
+        let m = self.model.0;
+        let mut st = self.shared.state.lock().unwrap();
+        if !st.open {
+            return Err(ServeError::Closed);
+        }
+        while st.items.len() >= self.shared.cap {
+            match self.shared.shed_policy {
+                ShedPolicy::RejectNew => {
+                    st.submitted[m] += 1;
+                    st.shed[m] += 1;
+                    return Err(ServeError::QueueFull);
+                }
+                ShedPolicy::DropOldest => {
+                    // victim: oldest request of the lowest priority class
+                    // queued — but never a class above the newcomer's.
+                    // One pass under the shared lock: track the first
+                    // (oldest) occurrence of the lowest class, stopping
+                    // early once `Low` (the global minimum) is seen.
+                    let mut victim: Option<(usize, Priority)> = None;
+                    for (i, r) in st.items.iter().enumerate() {
+                        let lower = match victim {
+                            None => true,
+                            Some((_, p)) => r.priority < p,
+                        };
+                        if lower {
+                            victim = Some((i, r.priority));
+                            if r.priority == Priority::Low {
+                                break;
+                            }
+                        }
+                    }
+                    let (idx, min_pri) = victim.expect("full queue nonempty");
+                    if min_pri > priority {
+                        st.submitted[m] += 1;
+                        st.shed[m] += 1;
+                        return Err(ServeError::QueueFull);
+                    }
+                    let old = st.items.remove(idx).expect("index in bounds");
+                    st.shed[old.model.0] += 1;
+                    // recycle the victim's pooled buffer: the shed path
+                    // must not drain the free-list under overload
+                    self.shared.buffers[old.model.0].release(old.out);
+                    let _ = old.resp.send(Err(ServeError::QueueFull));
+                }
+                ShedPolicy::Block => {
+                    st = self.shared.space.wait(st).unwrap();
+                    if !st.open {
+                        return Err(ServeError::Closed);
+                    }
+                }
+            }
+        }
+        // admitted: only now pay for the response channel; the output
+        // buffer comes from the model's free-list, so steady-state
+        // submission allocates no buffer (shed requests allocate nothing)
+        let (tx, rx) = channel();
+        let out = self.shared.buffers[m].acquire();
+        st.submitted[m] += 1;
+        st.items.push_back(GwRequest {
+            model: self.model,
+            x_q,
+            out,
+            submitted,
+            deadline,
+            priority,
+            resp: tx,
+        });
+        st.peak_depth = st.peak_depth.max(st.items.len());
+        drop(st);
+        self.shared.nonempty.notify_one();
+        Ok(Ticket { rx, submitted })
+    }
+
+    /// Submit one quantized row with default options; returns a
+    /// [`Ticket`] without waiting (the open-loop load generator's entry
+    /// point).
+    pub fn submit_q(&self, x_q: Vec<u8>) -> Result<Ticket, ServeError> {
+        self.submit(Request::from_q(x_q))
+    }
+
+    /// Submit one quantized row and block for its logits.
+    pub fn infer_q(&self, x_q: Vec<u8>) -> Result<Response, ServeError> {
+        self.submit_q(x_q)?.wait()
+    }
+
+    /// Submit a float (spline-domain) row and block for its logits.
+    pub fn infer(&self, x: &[f32]) -> Result<Response, ServeError> {
+        self.submit(Request::from_f32(x))?.wait()
+    }
+}
+
+/// Per-model accounting: admission + service counters, the model's own
+/// merged [`Metrics`] (rows, batches, latency percentiles, simulated
+/// cycles), and buffer-pool health.
+#[derive(Clone, Debug, Default)]
+pub struct ModelStats {
+    pub name: String,
+    /// Valid submissions counted by admission control.
+    pub submitted: u64,
+    /// Requests answered with logits.
+    pub completed: u64,
+    /// Requests answered without inference: `QueueFull` (at submit or by
+    /// eviction) plus `DeadlineExceeded` (see `expired`).
+    pub shed: u64,
+    /// Deadline-lapsed requests — a subset of `shed`, broken out so shed
+    /// policy and deadline pressure can be read separately.
+    pub expired: u64,
+    /// Requests answered with an inference error. Conservation per
+    /// model: `submitted == completed + shed + failed` once drained.
+    pub failed: u64,
+    /// This model's rows/batches/latency/sim counters, merged across
+    /// every replica that served it.
+    pub metrics: Metrics,
+    /// Fresh response-buffer allocations (free-list misses).
+    pub buffers_created: u64,
+    /// Response buffers served from the free-list.
+    pub buffers_recycled: u64,
+}
+
+impl ModelStats {
+    /// `submitted == completed + shed + failed` — every counted
+    /// submission answered exactly once.
+    pub fn conserved(&self) -> bool {
+        self.submitted == self.completed + self.shed + self.failed
+    }
+
+    /// Fraction of counted submissions shed by admission control or
+    /// deadline expiry.
+    pub fn shed_rate(&self) -> f64 {
+        if self.submitted == 0 {
+            return 0.0;
+        }
+        self.shed as f64 / self.submitted as f64
+    }
+}
+
+/// Gateway-level statistics: per-model and per-replica breakdowns plus
+/// the shared-queue counters.
+#[derive(Clone, Debug, Default)]
+pub struct GatewayStats {
+    /// Everything, merged (all models, all replicas).
+    pub merged: Metrics,
+    /// Per-replica metrics (all models served by that worker) — the
+    /// load-balance view.
+    pub per_replica: Vec<Metrics>,
+    /// Per-model accounting, indexed by [`ModelId::index`].
+    pub per_model: Vec<ModelStats>,
+    /// High-water mark of the shared admission queue.
+    pub peak_depth: usize,
+    /// Queue depth at snapshot time.
+    pub queue_depth: usize,
+    pub replicas: usize,
+}
+
+impl GatewayStats {
+    pub fn submitted(&self) -> u64 {
+        self.per_model.iter().map(|m| m.submitted).sum()
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.per_model.iter().map(|m| m.completed).sum()
+    }
+
+    pub fn shed(&self) -> u64 {
+        self.per_model.iter().map(|m| m.shed).sum()
+    }
+
+    pub fn failed(&self) -> u64 {
+        self.per_model.iter().map(|m| m.failed).sum()
+    }
+
+    /// True when every model's counters balance.
+    pub fn conserved(&self) -> bool {
+        self.per_model.iter().all(ModelStats::conserved)
+    }
+}
+
+/// Registers models, then [`GatewayBuilder::start`]s the fleet.
+pub struct GatewayBuilder {
+    cfg: GatewayConfig,
+    models: Vec<(String, Engine)>,
+}
+
+impl Default for GatewayBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl GatewayBuilder {
+    pub fn new() -> Self {
+        Self { cfg: GatewayConfig::default(), models: Vec::new() }
+    }
+
+    pub fn with_config(cfg: GatewayConfig) -> Self {
+        Self { cfg, models: Vec::new() }
+    }
+
+    /// Register a model under `name`. The returned [`ModelId`] indexes
+    /// [`GatewayStats::per_model`] and resolves to a [`ModelHandle`]
+    /// once the gateway starts. Names must be unique.
+    pub fn register(&mut self, name: &str, engine: Engine) -> ModelId {
+        assert!(
+            self.models.iter().all(|(n, _)| n != name),
+            "model '{name}' registered twice"
+        );
+        self.models.push((name.to_string(), engine));
+        ModelId(self.models.len() - 1)
+    }
+
+    /// Spawn the worker fleet and return the running [`Gateway`].
+    pub fn start(self) -> Gateway {
+        Gateway::start(self.cfg, self.models)
+    }
+}
+
+/// One worker's mutable metrics slot for one model.
+type MetricsCell = Arc<Mutex<Metrics>>;
+
+/// A running multi-model serving gateway; [`Gateway::shutdown`] drains
+/// and joins.
+pub struct Gateway {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    /// `[replica][model]` metrics cells.
+    per_worker: Vec<Vec<MetricsCell>>,
+    handles: Vec<ModelHandle>,
+}
+
+impl Gateway {
+    pub fn builder() -> GatewayBuilder {
+        GatewayBuilder::new()
+    }
+
+    fn start(cfg: GatewayConfig, models: Vec<(String, Engine)>) -> Self {
+        assert!(cfg.replicas >= 1, "gateway needs at least one replica");
+        assert!(cfg.queue_cap >= 1, "admission queue needs capacity");
+        assert!(!models.is_empty(), "gateway needs at least one registered model");
+        let n_models = models.len();
+        let buffers: Vec<Arc<BufferPool>> = models
+            .iter()
+            .map(|(_, e)| {
+                // retain enough for a full queue of this model plus every
+                // replica's in-flight batch
+                let retain = cfg.queue_cap + cfg.replicas * cfg.policy.max_batch;
+                Arc::new(BufferPool::new(e.out_dim(), retain))
+            })
+            .collect();
+        let shared = Arc::new(Shared {
+            state: Mutex::new(GwState {
+                items: VecDeque::new(),
+                open: true,
+                submitted: vec![0; n_models],
+                shed: vec![0; n_models],
+                peak_depth: 0,
+            }),
+            nonempty: Condvar::new(),
+            space: Condvar::new(),
+            cap: cfg.queue_cap,
+            shed_policy: cfg.shed,
+            counters: (0..n_models).map(|_| ModelCounters::default()).collect(),
+            buffers,
+        });
+        let mut workers = Vec::with_capacity(cfg.replicas);
+        let mut per_worker = Vec::with_capacity(cfg.replicas);
+        for i in 0..cfg.replicas {
+            let cells: Vec<MetricsCell> =
+                (0..n_models).map(|_| Arc::new(Mutex::new(Metrics::default()))).collect();
+            per_worker.push(cells.clone());
+            // replica set: clones alias weights + compiled plans, ~1x memory
+            let engines: Vec<Engine> = models.iter().map(|(_, e)| e.clone()).collect();
+            let shared_w = Arc::clone(&shared);
+            let policy = cfg.policy;
+            let sim_array = cfg.sim_array;
+            let w = std::thread::Builder::new()
+                .name(format!("kansas-gw-{i}"))
+                .spawn(move || worker_loop(engines, policy, sim_array, shared_w, cells))
+                .expect("spawn gateway worker");
+            workers.push(w);
+        }
+        let handles = models
+            .iter()
+            .enumerate()
+            .map(|(m, (name, e))| ModelHandle {
+                shared: Arc::clone(&shared),
+                model: ModelId(m),
+                name: Arc::from(name.as_str()),
+                in_dim: e.in_dim(),
+                out_dim: e.out_dim(),
+            })
+            .collect();
+        Self { shared, workers, per_worker, handles }
+    }
+
+    /// Number of registered models.
+    pub fn n_models(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// The typed handle for a registered model.
+    pub fn handle(&self, id: ModelId) -> ModelHandle {
+        self.handles[id.0].clone()
+    }
+
+    /// Resolve a handle by registered name.
+    pub fn handle_by_name(&self, name: &str) -> Result<ModelHandle, ServeError> {
+        self.handles
+            .iter()
+            .find(|h| &*h.name == name)
+            .cloned()
+            .ok_or_else(|| ServeError::UnknownModel(name.to_string()))
+    }
+
+    /// All handles, in registration order.
+    pub fn handles(&self) -> Vec<ModelHandle> {
+        self.handles.clone()
+    }
+
+    /// Live snapshot (the gateway keeps serving).
+    pub fn stats(&self) -> GatewayStats {
+        self.snapshot()
+    }
+
+    /// Stop admitting, serve everything already queued, join all
+    /// workers, and return the final stats.
+    pub fn shutdown(mut self) -> GatewayStats {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.open = false;
+        }
+        self.shared.nonempty.notify_all();
+        self.shared.space.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.snapshot()
+    }
+
+    fn snapshot(&self) -> GatewayStats {
+        let n_models = self.handles.len();
+        let mut merged = Metrics::default();
+        let mut per_replica = Vec::with_capacity(self.per_worker.len());
+        let mut model_metrics = vec![Metrics::default(); n_models];
+        for cells in &self.per_worker {
+            let mut replica = Metrics::default();
+            for (m, cell) in cells.iter().enumerate() {
+                let mm = cell.lock().unwrap().clone();
+                merged.merge(&mm);
+                replica.merge(&mm);
+                model_metrics[m].merge(&mm);
+            }
+            per_replica.push(replica);
+        }
+        let st = self.shared.state.lock().unwrap();
+        let per_model = (0..n_models)
+            .map(|m| {
+                let c = &self.shared.counters[m];
+                let expired = c.expired.load(Ordering::Relaxed);
+                let (created, recycled, _) = self.shared.buffers[m].counts();
+                ModelStats {
+                    name: self.handles[m].name.to_string(),
+                    submitted: st.submitted[m],
+                    completed: c.completed.load(Ordering::Relaxed),
+                    // expired requests are shed too: they were answered
+                    // without inference
+                    shed: st.shed[m] + expired,
+                    expired,
+                    failed: c.failed.load(Ordering::Relaxed),
+                    metrics: std::mem::take(&mut model_metrics[m]),
+                    buffers_created: created,
+                    buffers_recycled: recycled,
+                }
+            })
+            .collect();
+        GatewayStats {
+            merged,
+            per_replica,
+            per_model,
+            peak_depth: st.peak_depth,
+            queue_depth: st.items.len(),
+            replicas: self.per_worker.len(),
+        }
+    }
+}
+
+/// One fleet worker: replicas of every model, per-model batchers, one
+/// scratch arena sized to the widest model, two reusable batch Vecs.
+fn worker_loop(
+    engines: Vec<Engine>,
+    policy: BatchPolicy,
+    sim_array: ArrayConfig,
+    shared: Arc<Shared>,
+    metrics: Vec<MetricsCell>,
+) {
+    let n_models = engines.len();
+    let mut batchers: Vec<Batcher<GwRequest>> =
+        (0..n_models).map(|_| Batcher::new(policy)).collect();
+    // Worker-owned execution state, allocated once per replica: one
+    // scratch arena grown to fit every registered model's plan at the
+    // peak batch size, plus the two batch Vecs every dispatch reuses
+    // (drained batch, then deadline-surviving subset).
+    let mut scratch = Scratch::new();
+    for e in &engines {
+        scratch.fit(e.plan(), policy.max_batch);
+    }
+    let mut batch: Vec<GwRequest> = Vec::with_capacity(policy.max_batch);
+    let mut live: Vec<GwRequest> = Vec::with_capacity(policy.max_batch);
+    loop {
+        // Phase 1: block until at least one request is admitted (or the
+        // gateway is closed and drained — the only exit).
+        {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                let admitted = pull_into(&mut st, &mut batchers, policy.max_batch);
+                if batchers.iter().any(|b| !b.is_empty()) {
+                    drop(st);
+                    if admitted {
+                        shared.space.notify_all();
+                    }
+                    break;
+                }
+                if !st.open {
+                    return;
+                }
+                st = shared.nonempty.wait(st).unwrap();
+            }
+        }
+        // Phase 2: wait out the batching window for stragglers.
+        // Deadlines are anchored at admission time (push_arrived), so a
+        // request's shared-queue wait counts against max_wait. The wait
+        // is bounded by the *soonest* deadline across this worker's
+        // nonempty batchers.
+        while !batchers.iter().any(Batcher::ready) {
+            let mut st = shared.state.lock().unwrap();
+            if !st.open {
+                break; // flush immediately on shutdown
+            }
+            if st.items.is_empty() {
+                let wait = batchers
+                    .iter()
+                    .filter(|b| !b.is_empty())
+                    .map(Batcher::time_left)
+                    .min()
+                    .unwrap_or(Duration::ZERO);
+                if wait.is_zero() {
+                    break;
+                }
+                let (guard, _) = shared.nonempty.wait_timeout(st, wait).unwrap();
+                st = guard;
+            }
+            let admitted = pull_into(&mut st, &mut batchers, policy.max_batch);
+            drop(st);
+            if admitted {
+                shared.space.notify_all();
+            }
+        }
+        // Phase 3: serve every model whose batcher came due (on
+        // shutdown-flush, everything nonempty). Batches never mix
+        // models: each drain comes from one model's batcher and runs on
+        // that model's replica.
+        let closed = !shared.state.lock().unwrap().open;
+        for (m, batcher) in batchers.iter_mut().enumerate() {
+            if batcher.is_empty() || !(batcher.ready() || closed) {
+                continue;
+            }
+            batcher.drain_into(&mut batch);
+            serve_batch(
+                &engines[m],
+                &sim_array,
+                &mut batch,
+                &mut live,
+                &mut scratch,
+                &shared,
+                &shared.counters[m],
+                &metrics[m],
+            );
+        }
+    }
+}
+
+/// Move queued requests into this worker's per-model batchers. Stops at
+/// the first request whose batcher is already full (that batcher is
+/// `ready()`, so it will be served before the queue head can starve).
+fn pull_into(
+    st: &mut GwState,
+    batchers: &mut [Batcher<GwRequest>],
+    max_batch: usize,
+) -> bool {
+    let mut admitted = false;
+    while let Some(front) = st.items.front() {
+        let b = &mut batchers[front.model.0];
+        if b.len() >= max_batch {
+            break;
+        }
+        let r = st.items.pop_front().expect("front just observed");
+        b.push_arrived(r.submitted, r);
+        admitted = true;
+    }
+    admitted
+}
+
+/// Serve one single-model batch on this worker's replica of that model.
+/// Deadline-lapsed requests are answered `DeadlineExceeded` before any
+/// compute; survivors' rows are gathered straight into the scratch's
+/// staging buffer and outputs scattered as slices into each request's
+/// pooled, pre-sized response buffer — the gather/forward/scatter core
+/// allocates nothing per request (the mpsc response send and latency
+/// recording still do).
+#[allow(clippy::too_many_arguments)]
+fn serve_batch(
+    engine: &Engine,
+    sim_array: &ArrayConfig,
+    batch: &mut Vec<GwRequest>,
+    live: &mut Vec<GwRequest>,
+    scratch: &mut Scratch,
+    shared: &Shared,
+    counters: &ModelCounters,
+    metrics: &Mutex<Metrics>,
+) {
+    let in_dim = engine.in_dim();
+    let out_dim = engine.out_dim();
+    let serve_start = Instant::now();
+    live.clear();
+    {
+        let staging = scratch.stage_input(batch.len() * in_dim);
+        for req in batch.drain(..) {
+            match req.deadline {
+                Some(d) if d <= serve_start => {
+                    counters.expired.fetch_add(1, Ordering::Relaxed);
+                    shared.buffers[req.model.0].release(req.out);
+                    let _ = req.resp.send(Err(ServeError::DeadlineExceeded));
+                }
+                _ => {
+                    staging.extend_from_slice(&req.x_q);
+                    live.push(req);
+                }
+            }
+        }
+    }
+    let bs = live.len();
+    if bs == 0 {
+        return;
+    }
+    let result = engine.forward_staged(bs, scratch);
+    let sim = engine.simulate_batch(sim_array, bs);
+    let mut m = metrics.lock().unwrap();
+    m.record_batch_sim(bs, &sim);
+    match result {
+        Ok(t) => {
+            for (i, mut req) in live.drain(..).enumerate() {
+                let queue = serve_start.duration_since(req.submitted);
+                let service = serve_start.elapsed();
+                m.record_request_split(queue, service);
+                counters.completed.fetch_add(1, Ordering::Relaxed);
+                req.out.extend_from_slice(&t[i * out_dim..(i + 1) * out_dim]);
+                let _ = req.resp.send(Ok(Response {
+                    t: req.out,
+                    queue_us: queue.as_micros() as u64,
+                    service_us: service.as_micros() as u64,
+                    pool: Some(Arc::clone(&shared.buffers[req.model.0])),
+                }));
+            }
+        }
+        Err(e) => {
+            let msg = format!("inference failed: {e}");
+            for req in live.drain(..) {
+                counters.failed.fetch_add(1, Ordering::Relaxed);
+                shared.buffers[req.model.0].release(req.out);
+                let _ = req.resp.send(Err(ServeError::Inference(msg.clone())));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kan::QuantizedModel;
+
+    fn two_model_gateway(replicas: usize, queue_cap: usize, shed: ShedPolicy) -> Gateway {
+        let mut b = GatewayBuilder::with_config(GatewayConfig {
+            replicas,
+            queue_cap,
+            shed,
+            policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+            sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
+        });
+        let ea = Engine::new(QuantizedModel::synthetic("a", &[4, 6, 3], 5, 3, 5));
+        let eb = Engine::new(QuantizedModel::synthetic("b", &[6, 8, 5], 5, 3, 9));
+        let a = b.register("alpha", ea);
+        let c = b.register("beta", eb);
+        assert_eq!(a, ModelId(0));
+        assert_eq!(c, ModelId(1));
+        b.start()
+    }
+
+    /// A handle fleet over a worker-less shared queue: admission control
+    /// in isolation, fully deterministic (no racing consumers).
+    fn bare_handles(n_models: usize, cap: usize, shed: ShedPolicy) -> Vec<ModelHandle> {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(GwState {
+                items: VecDeque::new(),
+                open: true,
+                submitted: vec![0; n_models],
+                shed: vec![0; n_models],
+                peak_depth: 0,
+            }),
+            nonempty: Condvar::new(),
+            space: Condvar::new(),
+            cap,
+            shed_policy: shed,
+            counters: (0..n_models).map(|_| ModelCounters::default()).collect(),
+            buffers: (0..n_models).map(|_| Arc::new(BufferPool::new(3, 16))).collect(),
+        });
+        (0..n_models)
+            .map(|m| ModelHandle {
+                shared: Arc::clone(&shared),
+                model: ModelId(m),
+                name: Arc::from(format!("m{m}").as_str()),
+                in_dim: 4,
+                out_dim: 3,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn routes_and_counts_per_model() {
+        let gw = two_model_gateway(2, 64, ShedPolicy::RejectNew);
+        let ha = gw.handle(ModelId(0));
+        let hb = gw.handle_by_name("beta").unwrap();
+        assert_eq!(ha.name(), "alpha");
+        assert_eq!(hb.in_dim(), 6);
+        assert!(gw.handle_by_name("nope").is_err());
+        for _ in 0..12 {
+            let r = ha.infer_q(vec![1, 2, 3, 4]).unwrap();
+            assert_eq!(r.t.len(), 3);
+        }
+        for _ in 0..7 {
+            let r = hb.infer_q(vec![9, 8, 7, 6, 5, 4]).unwrap();
+            assert_eq!(r.t.len(), 5);
+            let _ = r.prediction();
+        }
+        let stats = gw.shutdown();
+        assert_eq!(stats.per_model.len(), 2);
+        let (a, b) = (&stats.per_model[0], &stats.per_model[1]);
+        assert_eq!((a.submitted, a.completed, a.shed, a.failed), (12, 12, 0, 0));
+        assert_eq!((b.submitted, b.completed, b.shed, b.failed), (7, 7, 0, 0));
+        assert!(a.conserved() && b.conserved());
+        assert_eq!(a.metrics.batch_rows, 12);
+        assert_eq!(b.metrics.batch_rows, 7);
+        assert_eq!(stats.merged.batch_rows, 19);
+        assert_eq!(stats.per_replica.len(), 2);
+        let per_replica_rows: u64 = stats.per_replica.iter().map(|m| m.batch_rows).sum();
+        assert_eq!(per_replica_rows, 19);
+        assert!(stats.conserved());
+        assert_eq!(stats.submitted(), 19);
+    }
+
+    #[test]
+    fn wrong_model_dim_rejected_before_admission() {
+        let gw = two_model_gateway(1, 8, ShedPolicy::RejectNew);
+        // a row sized for beta must not pass alpha's validation
+        let err = gw.handle(ModelId(0)).infer_q(vec![1, 2, 3, 4, 5, 6]).unwrap_err();
+        assert!(matches!(err, ServeError::InvalidInput(_)));
+        let stats = gw.shutdown();
+        assert_eq!(stats.submitted(), 0);
+    }
+
+    #[test]
+    fn closed_gateway_rejects_submissions() {
+        let gw = two_model_gateway(1, 8, ShedPolicy::RejectNew);
+        let h = gw.handle(ModelId(0));
+        let stats = gw.shutdown();
+        assert_eq!(stats.submitted(), 0);
+        assert_eq!(h.infer_q(vec![1, 2, 3, 4]).unwrap_err(), ServeError::Closed);
+    }
+
+    #[test]
+    fn reject_new_sheds_at_capacity() {
+        let hs = bare_handles(2, 2, ShedPolicy::RejectNew);
+        let _t1 = hs[0].submit_q(vec![1, 1, 1, 1]).unwrap();
+        let _t2 = hs[1].submit_q(vec![2, 2, 2, 2]).unwrap();
+        assert_eq!(hs[0].queue_depth(), 2);
+        assert_eq!(hs[0].submit_q(vec![3, 3, 3, 3]).unwrap_err(), ServeError::QueueFull);
+        assert_eq!(hs[0].queue_depth(), 2, "rejected arrival never enters the queue");
+        let st = hs[0].shared.state.lock().unwrap();
+        assert_eq!(st.submitted, vec![2, 1]);
+        assert_eq!(st.shed, vec![1, 0]);
+        assert_eq!(st.peak_depth, 2);
+    }
+
+    #[test]
+    fn drop_oldest_evicts_stalest_and_admits() {
+        let hs = bare_handles(2, 2, ShedPolicy::DropOldest);
+        let t1 = hs[0].submit_q(vec![1, 1, 1, 1]).unwrap();
+        let t2 = hs[1].submit_q(vec![2, 2, 2, 2]).unwrap();
+        // queue full: #3 evicts #1, #4 evicts #2 — the newcomer always
+        // wins among equals, and the shed is charged to the VICTIM's model
+        let t3 = hs[0].submit_q(vec![3, 3, 3, 3]).unwrap();
+        assert_eq!(t1.wait(), Err(ServeError::QueueFull), "oldest answered on eviction");
+        let t4 = hs[0].submit_q(vec![4, 4, 4, 4]).unwrap();
+        assert_eq!(t2.wait(), Err(ServeError::QueueFull));
+        assert_eq!(hs[0].queue_depth(), 2);
+        assert!(t3.try_wait().is_none(), "survivors stay in flight");
+        assert!(t4.try_wait().is_none());
+        let st = hs[0].shared.state.lock().unwrap();
+        assert_eq!(st.submitted, vec![3, 1]);
+        assert_eq!(st.shed, vec![1, 1], "each model shed its own evicted request");
+        drop(st);
+        // eviction must recycle the victim's buffer, not drop it: #3's
+        // acquire reuses #1's released buffer (model 0); #2's buffer sits
+        // on model 1's free-list
+        let (c0, r0, f0) = hs[0].shared.buffers[0].counts();
+        assert_eq!((c0, r0, f0), (2, 1, 0), "evicted model-0 buffer was reacquired");
+        let (c1, _r1, f1) = hs[0].shared.buffers[1].counts();
+        assert_eq!((c1, f1), (1, 1), "evicted model-1 buffer returned to its free-list");
+    }
+
+    #[test]
+    fn drop_oldest_evicts_lowest_priority_first() {
+        let hs = bare_handles(1, 2, ShedPolicy::DropOldest);
+        let h = &hs[0];
+        let t_high = h.submit(Request::from_q(vec![1; 4]).with_priority(Priority::High)).unwrap();
+        let t_low = h.submit(Request::from_q(vec![2; 4]).with_priority(Priority::Low)).unwrap();
+        // normal newcomer: the LOW request is the victim even though the
+        // high one is older
+        let t_norm = h.submit(Request::from_q(vec![3; 4])).unwrap();
+        assert_eq!(t_low.wait(), Err(ServeError::QueueFull));
+        assert!(t_high.try_wait().is_none(), "higher class survives eviction");
+        assert!(t_norm.try_wait().is_none());
+        // a LOW newcomer against a {High, Normal} queue sheds itself
+        let err =
+            h.submit(Request::from_q(vec![4; 4]).with_priority(Priority::Low)).unwrap_err();
+        assert_eq!(err, ServeError::QueueFull);
+        assert_eq!(h.queue_depth(), 2, "queue untouched by the self-shed newcomer");
+        assert!(t_high.try_wait().is_none());
+    }
+
+    #[test]
+    fn priority_orders() {
+        assert!(Priority::Low < Priority::Normal && Priority::Normal < Priority::High);
+        assert_eq!(Priority::default(), Priority::Normal);
+    }
+
+    #[test]
+    fn expired_deadline_resolves_and_counts_as_shed() {
+        let gw = two_model_gateway(1, 64, ShedPolicy::RejectNew);
+        let h = gw.handle(ModelId(0));
+        // an already-lapsed deadline: the worker must answer (not hang)
+        // with DeadlineExceeded before spending compute
+        let t = h.submit(Request::from_q(vec![1, 2, 3, 4]).with_deadline(Duration::ZERO)).unwrap();
+        assert_eq!(t.wait(), Err(ServeError::DeadlineExceeded));
+        // generous deadline: served normally
+        let r = h
+            .submit(Request::from_q(vec![1, 2, 3, 4]).with_deadline(Duration::from_secs(60)))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(r.t.len(), 3);
+        let stats = gw.shutdown();
+        let a = &stats.per_model[0];
+        assert_eq!(a.submitted, 2);
+        assert_eq!(a.completed, 1);
+        assert_eq!(a.expired, 1);
+        assert_eq!(a.shed, 1, "expired requests count inside shed");
+        assert!(a.conserved());
+    }
+
+    #[test]
+    fn responses_carry_split_latency() {
+        let gw = two_model_gateway(1, 16, ShedPolicy::Block);
+        let h = gw.handle(ModelId(1));
+        let r = h.infer_q(vec![0, 50, 100, 150, 200, 250]).unwrap();
+        assert_eq!(r.latency_us(), r.queue_us + r.service_us);
+        let clone = r.clone();
+        assert_eq!(clone.t, r.t);
+        drop(r);
+        drop(clone);
+        gw.shutdown();
+    }
+
+    #[test]
+    fn buffer_pool_recycles() {
+        let pool = BufferPool::new(4, 8);
+        let a = pool.acquire();
+        assert!(a.capacity() >= 4);
+        pool.release(a);
+        let b = pool.acquire();
+        let (created, recycled, free) = pool.counts();
+        assert_eq!((created, recycled, free), (1, 1, 0));
+        pool.release(b);
+        // oversized strays are dropped, not retained
+        pool.release(Vec::with_capacity(1024));
+        let (_, _, free) = pool.counts();
+        assert_eq!(free, 1);
+        // undersized strays too
+        pool.release(Vec::new());
+        let (_, _, free) = pool.counts();
+        assert_eq!(free, 1);
+    }
+
+    #[test]
+    fn response_drop_returns_buffer_to_pool() {
+        let gw = two_model_gateway(1, 16, ShedPolicy::Block);
+        let h = gw.handle(ModelId(0));
+        for _ in 0..20 {
+            let r = h.infer_q(vec![5, 6, 7, 8]).unwrap();
+            drop(r); // recycle before the next submit
+        }
+        let stats = gw.shutdown();
+        let a = &stats.per_model[0];
+        assert_eq!(a.completed, 20);
+        assert!(
+            a.buffers_created <= 2,
+            "serial traffic needs at most a couple of live buffers, created {}",
+            a.buffers_created
+        );
+        assert!(a.buffers_recycled >= 18, "recycled only {}", a.buffers_recycled);
+    }
+
+    #[test]
+    fn batches_never_mix_models() {
+        // one replica, both models loaded concurrently: every batch must
+        // be single-model (otherwise dims would mismatch and inference
+        // would fail — completed counts prove correctness)
+        let gw = two_model_gateway(1, 256, ShedPolicy::Block);
+        let ha = gw.handle(ModelId(0));
+        let hb = gw.handle(ModelId(1));
+        let mut tickets = Vec::new();
+        for i in 0..40u8 {
+            tickets.push((3usize, ha.submit_q(vec![i, i, i, i]).unwrap()));
+            tickets.push((5usize, hb.submit_q(vec![i, i, i, i, i, i]).unwrap()));
+        }
+        for (want_dim, t) in tickets {
+            assert_eq!(t.wait().unwrap().t.len(), want_dim);
+        }
+        let stats = gw.shutdown();
+        assert_eq!(stats.per_model[0].completed, 40);
+        assert_eq!(stats.per_model[1].completed, 40);
+        assert_eq!(stats.per_model[0].failed + stats.per_model[1].failed, 0);
+    }
+}

@@ -11,6 +11,14 @@ use crate::sim::SimStats;
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
     latencies_us: Vec<u64>,
+    /// Sum of per-request *queueing* microseconds (admission → batch
+    /// serve start); with `service_us_sum` this splits the end-to-end
+    /// latency so shed-policy experiments can separate waiting from
+    /// compute.
+    pub queue_us_sum: u64,
+    /// Sum of per-request *service* microseconds (batch serve start →
+    /// response sent).
+    pub service_us_sum: u64,
     pub batches: u64,
     pub batch_rows: u64,
     pub sim_cycles: u64,
@@ -35,6 +43,33 @@ impl Metrics {
         self.latencies_us.push(latency.as_micros() as u64);
     }
 
+    /// Record one answered request with its latency split into queueing
+    /// (admission → serve start) and service (serve start → response).
+    /// The percentile distribution tracks the end-to-end sum.
+    pub fn record_request_split(&mut self, queue: Duration, service: Duration) {
+        let q = queue.as_micros() as u64;
+        let s = service.as_micros() as u64;
+        self.queue_us_sum += q;
+        self.service_us_sum += s;
+        self.latencies_us.push(q + s);
+    }
+
+    /// Mean queueing delay per recorded request, in microseconds.
+    pub fn mean_queue_us(&self) -> f64 {
+        if self.latencies_us.is_empty() {
+            return 0.0;
+        }
+        self.queue_us_sum as f64 / self.latencies_us.len() as f64
+    }
+
+    /// Mean service time per recorded request, in microseconds.
+    pub fn mean_service_us(&self) -> f64 {
+        if self.latencies_us.is_empty() {
+            return 0.0;
+        }
+        self.service_us_sum as f64 / self.latencies_us.len() as f64
+    }
+
     pub fn record_batch(&mut self, rows: usize, sim_cycles: u64) {
         self.batches += 1;
         self.batch_rows += rows as u64;
@@ -50,6 +85,8 @@ impl Metrics {
 
     pub fn merge(&mut self, other: &Metrics) {
         self.latencies_us.extend_from_slice(&other.latencies_us);
+        self.queue_us_sum += other.queue_us_sum;
+        self.service_us_sum += other.service_us_sum;
         self.batches += other.batches;
         self.batch_rows += other.batch_rows;
         self.sim_cycles += other.sim_cycles;
@@ -111,6 +148,26 @@ mod tests {
     #[test]
     fn empty_latency_none() {
         assert!(Metrics::default().latency().is_none());
+    }
+
+    #[test]
+    fn split_sums_and_total_distribution() {
+        let mut m = Metrics::default();
+        m.record_request_split(Duration::from_micros(30), Duration::from_micros(10));
+        m.record_request_split(Duration::from_micros(50), Duration::from_micros(30));
+        assert_eq!(m.queue_us_sum, 80);
+        assert_eq!(m.service_us_sum, 40);
+        assert!((m.mean_queue_us() - 40.0).abs() < 1e-9);
+        assert!((m.mean_service_us() - 20.0).abs() < 1e-9);
+        // percentile stream sees the end-to-end sum
+        assert_eq!(m.latency().unwrap().max_us, 80);
+        let mut other = Metrics::default();
+        other.record_request_split(Duration::from_micros(1), Duration::from_micros(2));
+        m.merge(&other);
+        assert_eq!(m.queue_us_sum, 81);
+        assert_eq!(m.service_us_sum, 42);
+        assert_eq!(m.latency().unwrap().count, 3);
+        assert_eq!(Metrics::default().mean_queue_us(), 0.0);
     }
 
     #[test]

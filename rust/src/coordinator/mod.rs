@@ -1,36 +1,55 @@
-//! Serving coordinator: the L3 request path.
+//! Serving coordinator: the L3 request path, now multi-tenant.
 //!
-//! A thread-per-worker design over std sync primitives (tokio is not
-//! available offline, and the workload — CPU-bound batched inference —
-//! doesn't want an async reactor anyway):
+//! The front door is the [`gateway`]: one [`Gateway`] serves **many
+//! registered models over one replica fleet**, mirroring the paper's
+//! Fig. 8, where a single KAN-SAs array time-shares a mix of
+//! applications (MNIST, CIFAR, HAR, …). A thread-per-worker design over
+//! std sync primitives (tokio is not available offline, and the
+//! workload — CPU-bound batched inference — doesn't want an async
+//! reactor anyway):
 //!
-//! * clients submit requests to a **bounded admission queue** shared by
-//!   the whole pool, and receive their logits on a per-request
-//!   oneshot-style channel (blocking [`PoolHandle::infer`] or open-loop
-//!   [`PoolHandle::submit_q`] + [`Ticket`]);
-//! * overload is explicit: a full queue sheds per [`ShedPolicy`]
-//!   (`QueueFull` rejection, oldest-eviction, or blocking backpressure);
-//! * [`pool`] runs N worker threads, each owning an `Engine` replica
-//!   (weights `Arc`-shared: N replicas ≈ 1x model memory) and its own
-//!   dynamic [`batcher`] (the classic tradeoff: larger batches amortize
-//!   fill/drain, older requests must not starve — deadlines anchored at
-//!   admission time);
-//! * workers attach simulated accelerator stats to every batch; per-
-//!   replica [`metrics`] merge into [`PoolStats`] (latency percentiles,
-//!   throughput, shed counts, queue high-water mark, per-replica
-//!   simulated utilization);
-//! * [`server`] keeps the original single-replica `Server` API as the
-//!   1-replica special case of the pool.
+//! * models are registered on a [`GatewayBuilder`]
+//!   ([`GatewayBuilder::register`] → [`ModelId`]); clients hold a typed
+//!   [`ModelHandle`] and submit a [`Request`] (quantized or f32 row,
+//!   optional deadline, [`Priority`] class), receiving their logits
+//!   through a [`Ticket`] or the blocking `infer` conveniences;
+//! * admission is **one bounded queue shared by every model**, with
+//!   overload explicit: a full queue sheds per [`ShedPolicy`]
+//!   (`QueueFull` rejection, priority-ordered oldest-eviction, or
+//!   blocking backpressure), and lapsed deadlines resolve
+//!   [`ServeError::DeadlineExceeded`] — every terminal outcome is one
+//!   [`ServeError`];
+//! * the worker fleet is shared too: each worker owns an `Arc`-aliased
+//!   replica of *every* registered model (~1x total model memory), one
+//!   [`Scratch`](crate::kan::Scratch) arena sized to the widest model,
+//!   and **per-model dynamic [`batcher`]s** — batches are never
+//!   mixed-model, and deadlines anchor at admission time so queue wait
+//!   counts against the batching window;
+//! * response buffers are pooled per model ([`BufferPool`]): dropping a
+//!   [`Response`] recycles its pre-sized output `Vec`, so steady-state
+//!   submission pays no buffer allocation;
+//! * accounting is per model *and* per replica: [`GatewayStats`] holds a
+//!   [`ModelStats`] row per tenant (conservation per model:
+//!   `submitted == completed + shed + failed`) and merged [`Metrics`]
+//!   per worker, with request latency split into queueing vs service
+//!   time (`Response::queue_us` / `Response::service_us`);
+//! * [`pool`] keeps `Pool` as the 1-model special case (`PoolHandle` =
+//!   [`ModelHandle`], `PoolError` = [`ServeError`]) and [`server`] keeps
+//!   `Server` as the 1-model, 1-replica special case.
 
 pub mod batcher;
+pub mod gateway;
 pub mod metrics;
 pub mod pool;
 pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
+pub use gateway::{
+    BufferPool, Gateway, GatewayBuilder, GatewayConfig, GatewayStats, ModelHandle, ModelId,
+    ModelStats, Priority, Request, Response, ServeError, ShedPolicy, Ticket,
+};
 pub use metrics::{LatencyStats, Metrics};
 pub use pool::{
-    default_replicas, Pool, PoolConfig, PoolError, PoolHandle, PoolStats, Response, ShedPolicy,
-    Ticket,
+    default_replicas, default_replicas_capped, Pool, PoolConfig, PoolError, PoolHandle, PoolStats,
 };
 pub use server::{Handle, Server, ServerConfig};

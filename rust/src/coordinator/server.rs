@@ -1,24 +1,27 @@
-//! The single-replica serving facade: `Server` is the 1-replica special
-//! case of [`pool::Pool`](super::pool::Pool).
+//! The single-replica serving facade: `Server` is the 1-model,
+//! 1-replica special case of the [`Gateway`](super::gateway::Gateway)
+//! (by way of [`pool::Pool`](super::pool::Pool)).
 //!
-//! It keeps the original API (blocking `Handle::infer`, `anyhow` errors,
-//! never-reject semantics) by running a pool with one worker, a deep
-//! admission queue, and [`ShedPolicy::Block`] backpressure — so the
-//! dispatcher loop, batching, metrics, and shutdown-drain behaviour are
-//! the pool's, tested once. That single worker owns the server's
-//! [`Scratch`](crate::kan::Scratch) arena, so `Server` inherits the
-//! pool's zero-allocation steady-state dispatch path too.
-
-use anyhow::{anyhow, Result};
+//! It keeps the original never-reject semantics by running one worker
+//! over a deep admission queue with [`ShedPolicy::Block`] backpressure —
+//! so the dispatcher loop, batching, metrics, and shutdown-drain
+//! behaviour are the gateway's, tested once. That single worker owns the
+//! server's [`Scratch`](crate::kan::Scratch) arena, so `Server` inherits
+//! the zero-allocation steady-state dispatch path too.
+//!
+//! Errors are the unified [`ServeError`] — the old `anyhow::Result`
+//! facade is gone, so `Server`, `Pool`, and `Gateway` clients all match
+//! on one enum.
 
 use crate::arch::ArrayConfig;
 use crate::kan::Engine;
 
 use super::batcher::BatchPolicy;
+use super::gateway::ServeError;
 use super::metrics::Metrics;
 use super::pool::{Pool, PoolConfig, PoolHandle, ShedPolicy};
 
-pub use super::pool::Response;
+pub use super::gateway::Response;
 
 /// Server configuration.
 #[derive(Clone, Debug)]
@@ -44,13 +47,13 @@ pub struct Handle {
 
 impl Handle {
     /// Submit one quantized row and wait for its logits.
-    pub fn infer_q(&self, x_q: Vec<u8>) -> Result<Response> {
-        self.inner.infer_q(x_q).map_err(|e| anyhow!(e))
+    pub fn infer_q(&self, x_q: Vec<u8>) -> Result<Response, ServeError> {
+        self.inner.infer_q(x_q)
     }
 
     /// Submit a float (spline-domain) row.
-    pub fn infer(&self, x: &[f32]) -> Result<Response> {
-        self.infer_q(crate::quant::quantize_activations(x))
+    pub fn infer(&self, x: &[f32]) -> Result<Response, ServeError> {
+        self.inner.infer(x)
     }
 }
 

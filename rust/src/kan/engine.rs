@@ -104,6 +104,17 @@ impl Engine {
         &self.plan
     }
 
+    /// Input feature count (`model.in_dim()`, hoisted for callers that
+    /// hold many engines — e.g. a multi-model gateway sizing buffers).
+    pub fn in_dim(&self) -> usize {
+        self.model.in_dim()
+    }
+
+    /// Output row width (`model.out_dim()`).
+    pub fn out_dim(&self) -> usize {
+        self.model.out_dim()
+    }
+
     /// True when `self` and `other` alias the same parameter storage —
     /// i.e. they are replicas of one model, not independent copies.
     pub fn shares_weights_with(&self, other: &Engine) -> bool {

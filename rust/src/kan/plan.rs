@@ -275,9 +275,21 @@ impl Scratch {
     /// even the first forward is allocation-free.
     pub fn for_plan(plan: &ExecutionPlan, max_bs: usize) -> Self {
         let mut s = Self::new();
-        s.ensure(plan, max_bs);
-        s.staging.reserve(max_bs * plan.in_dim);
+        s.fit(plan, max_bs);
         s
+    }
+
+    /// Grow the arena to fit `plan` at batch sizes up to `max_bs`
+    /// (staging included). Callable repeatedly with *different* plans —
+    /// a multi-tenant gateway worker serves every registered model out
+    /// of one scratch by fitting it to each model's plan once, ending up
+    /// sized to the widest.
+    pub fn fit(&mut self, plan: &ExecutionPlan, max_bs: usize) {
+        self.ensure(plan, max_bs);
+        let staged = max_bs * plan.in_dim;
+        if self.staging.capacity() < staged {
+            self.staging.reserve(staged - self.staging.len());
+        }
     }
 
     /// Grow (never shrink) to fit one forward of `plan` at `bs` rows.
@@ -368,6 +380,25 @@ mod tests {
         // staged path too
         sized.stage_input(x_q.len()).extend_from_slice(&x_q);
         assert_eq!(plan.execute_staged(2, &mut sized), &want[..]);
+    }
+
+    #[test]
+    fn fit_covers_multiple_plans() {
+        // a gateway worker's scratch: fitted to two differently-shaped
+        // plans, it must execute both without growing
+        let wide = ExecutionPlan::compile(&QuantizedModel::synthetic("w", &[12, 20, 6], 5, 3, 1));
+        let tall = ExecutionPlan::compile(&QuantizedModel::synthetic("t", &[3, 40, 2], 5, 3, 2));
+        let mut s = Scratch::new();
+        s.fit(&wide, 8);
+        s.fit(&tall, 8);
+        let cap = s.capacity_bytes();
+        let xw: Vec<u8> = (0..8 * 12).map(|i| (i % 256) as u8).collect();
+        let xt: Vec<u8> = (0..8 * 3).map(|i| (i % 256) as u8).collect();
+        s.stage_input(xw.len()).extend_from_slice(&xw);
+        assert_eq!(wide.execute_staged(8, &mut s).len(), 8 * 6);
+        s.stage_input(xt.len()).extend_from_slice(&xt);
+        assert_eq!(tall.execute_staged(8, &mut s).len(), 8 * 2);
+        assert_eq!(s.capacity_bytes(), cap, "fitted scratch must not grow in service");
     }
 
     #[test]

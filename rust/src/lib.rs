@@ -19,33 +19,47 @@
 //!
 //! ## Serving architecture
 //!
-//! The paper's utilization argument — a conventional SA idles on B-splines,
-//! KAN-SAs keeps every PE lane busy — repeats one level up at the serving
-//! tier, so the request path is a **sharded multi-replica pool**
-//! ([`coordinator::pool`]):
+//! The paper's Fig. 8 runs a *mix* of applications (MNIST, CIFAR, HAR, …)
+//! on one accelerator; the request path mirrors that as a **multi-tenant
+//! gateway** ([`coordinator::gateway`]): one bounded admission queue and
+//! one worker fleet serving every registered model.
 //!
-//! * N worker threads each own an [`kan::Engine`] replica; replicas share
-//!   the model's weights, LUTs, and widened MAC tables through `Arc`, so N
-//!   replicas cost ~1x model memory (`Engine::shares_weights_with`).
-//! * Clients submit through a **bounded admission queue** with an explicit
-//!   shed policy ([`coordinator::ShedPolicy`]): reject new arrivals with
-//!   `QueueFull`, drop the oldest queued request, or block for backpressure.
-//! * Each worker runs its own dynamic [`coordinator::Batcher`] (size +
-//!   deadline policy, deadlines anchored at true arrival times) and attaches
-//!   simulated accelerator cycles to every served batch.
+//! * Models are registered on a [`coordinator::GatewayBuilder`] and
+//!   addressed through typed [`coordinator::ModelHandle`]s; a
+//!   [`coordinator::Request`] carries the row (quantized or f32), an
+//!   optional deadline, and a [`coordinator::Priority`] class. Every
+//!   terminal outcome is one [`coordinator::ServeError`].
+//! * Each fleet worker owns an [`kan::Engine`] replica of *every* model;
+//!   replicas share weights, LUTs, and widened MAC tables through `Arc`,
+//!   so the fleet costs ~1x total model memory
+//!   (`Engine::shares_weights_with`).
+//! * Admission is a **shared bounded queue** with an explicit shed policy
+//!   ([`coordinator::ShedPolicy`]): reject new arrivals with `QueueFull`,
+//!   evict the oldest lowest-priority request, or block for backpressure;
+//!   lapsed deadlines answer `DeadlineExceeded`.
+//! * Workers run **per-model dynamic [`coordinator::Batcher`]s** (size +
+//!   deadline policy, deadlines anchored at true arrival times) — batches
+//!   are never mixed-model — and attach simulated accelerator cycles to
+//!   every served batch.
 //! * Inference follows a **compile/execute split** ([`kan::plan`]): the
 //!   engine compiles an [`kan::ExecutionPlan`] once (resolved B-spline
 //!   units, i16-widened MAC tables, buffer sizing — what the accelerator
-//!   wires at configuration time), and each worker owns a [`kan::Scratch`]
-//!   arena so steady-state forwards perform zero heap allocations
+//!   wires at configuration time), and each worker owns one
+//!   [`kan::Scratch`] arena fitted to the widest registered model, so
+//!   steady-state forwards perform zero heap allocations
 //!   (`tests/zero_alloc.rs` enforces this with a counting allocator).
-//! * Per-replica [`coordinator::Metrics`] merge into a pool-level
-//!   [`coordinator::PoolStats`] (queue depth, shed count, per-replica rows
-//!   and simulated utilization).
+//!   Response buffers are pooled per model
+//!   ([`coordinator::BufferPool`], `tests/gateway_alloc.rs`).
+//! * Accounting is per model *and* per replica
+//!   ([`coordinator::GatewayStats`] / [`coordinator::ModelStats`]), with
+//!   conservation per model (`submitted == completed + shed + failed`)
+//!   and latency split into queueing vs service time.
 //!
-//! The single-`Server` API survives as the 1-replica special case of the
-//! pool. Offered load comes from [`loadgen`]: an open-loop Poisson
-//! generator with named scenario mixes (`steady`, `diurnal`, `flash-crowd`)
+//! `Pool` survives as the 1-model special case and `Server` as the
+//! 1-model/1-replica one. Offered load comes from [`loadgen`]: an
+//! open-loop Poisson generator with named scenario mixes (`steady`,
+//! `diurnal`, `flash-crowd`) and weighted multi-model mixes
+//! (`loadgen::run_mix` — Fig. 8's application mixes at the serving tier),
 //! so throughput/latency/shed-rate curves are measured, not anecdotal —
 //! see the `serving_scale` bench.
 //!

@@ -17,8 +17,11 @@
 //! * `flash-crowd` — flat baseline with a sudden multi-x spike in the
 //!   middle, the admission-control stress test.
 //!
-//! [`run`] drives a [`PoolHandle`] and returns a [`LoadReport`]
+//! [`run`] drives a [`ModelHandle`] and returns a [`LoadReport`]
 //! (offered vs achieved rate, shed counts, latency percentiles).
+//! [`run_mix`] is the multi-tenant variant: a weighted model mix over
+//! one gateway — the serving-tier version of the paper's Fig. 8
+//! application mixes — reporting per-model *and* aggregate outcomes.
 //! [`closed_loop`] is the saturation counterpart used by the
 //! `serving_scale` bench to measure peak rows/sec per replica count.
 
@@ -26,7 +29,7 @@ use std::sync::mpsc::channel;
 use std::thread;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::{LatencyStats, Metrics, PoolError, PoolHandle, Ticket};
+use crate::coordinator::{LatencyStats, Metrics, ModelHandle, ServeError, Ticket};
 use crate::util::rng::Rng;
 
 /// One constant-rate segment of a scenario.
@@ -116,7 +119,8 @@ pub struct LoadReport {
     pub submitted: u64,
     /// Requests answered with logits.
     pub ok: u64,
-    /// Requests answered `QueueFull` (at submit or by eviction).
+    /// Requests answered without inference: `QueueFull` (at submit or by
+    /// eviction) or `DeadlineExceeded` — the gateway's `shed` bucket.
     pub shed: u64,
     /// Other terminal errors (pool closed mid-run, inference failures).
     pub failed: u64,
@@ -175,33 +179,71 @@ fn sleep_until(t: Instant) {
 /// until every in-flight ticket resolves. Deterministic per `seed` in
 /// which inputs are generated (arrival *times* are wall-clock, so counts
 /// are statistical).
-pub fn run(handle: &PoolHandle, scenario: &Scenario, seed: u64) -> LoadReport {
-    let in_dim = handle.in_dim();
-    let (tick_tx, tick_rx) = channel::<Ticket>();
+pub fn run(handle: &ModelHandle, scenario: &Scenario, seed: u64) -> LoadReport {
+    let mix = run_mix(&[MixEntry { handle: handle.clone(), weight: 1.0 }], scenario, seed);
+    LoadReport { scenario: scenario.name.clone(), ..mix.total }
+}
+
+/// One tenant of a weighted multi-model mix.
+#[derive(Clone)]
+pub struct MixEntry {
+    pub handle: ModelHandle,
+    /// Relative arrival weight (normalized over the mix).
+    pub weight: f64,
+}
+
+/// Outcome of a [`run_mix`] drive: aggregate plus one report per tenant.
+#[derive(Clone, Debug)]
+pub struct MixReport {
+    /// Whole-mix totals (`scenario` = `"<name>+mix"` for >1 model).
+    pub total: LoadReport,
+    /// Per-model reports, in `entries` order (`scenario` = model name;
+    /// `offered_rps` is the model's weighted share of the schedule).
+    pub per_model: Vec<LoadReport>,
+}
+
+/// Drive a weighted mix of models — the paper's Fig. 8 application mixes
+/// at the serving tier — with one open-loop Poisson arrival process.
+/// Each arrival is assigned to a model by weighted draw, so every tenant
+/// sees Poisson traffic at its share of the offered rate; all models
+/// contend for the same gateway admission queue and worker fleet.
+/// Blocks until every in-flight ticket resolves.
+pub fn run_mix(entries: &[MixEntry], scenario: &Scenario, seed: u64) -> MixReport {
+    assert!(!entries.is_empty(), "mix needs at least one model");
+    let total_weight: f64 = entries.iter().map(|e| e.weight).sum();
+    assert!(total_weight > 0.0, "mix needs positive total weight");
+    let n = entries.len();
+    let (tick_tx, tick_rx) = channel::<(usize, Ticket)>();
     // collector: resolves tickets concurrently so the generator never
-    // waits on responses (open loop)
+    // waits on responses (open loop); tallies per model
     let collector = thread::spawn(move || {
-        let mut m = Metrics::default();
-        let (mut ok, mut shed, mut failed) = (0u64, 0u64, 0u64);
-        while let Ok(t) = tick_rx.recv() {
+        let mut per: Vec<(Metrics, u64, u64, u64)> =
+            (0..n).map(|_| (Metrics::default(), 0, 0, 0)).collect();
+        while let Ok((m, t)) = tick_rx.recv() {
+            let slot = &mut per[m];
             match t.wait() {
                 Ok(resp) => {
-                    ok += 1;
-                    m.record_request(Duration::from_micros(resp.latency_us));
+                    slot.1 += 1;
+                    slot.0.record_request_split(
+                        Duration::from_micros(resp.queue_us),
+                        Duration::from_micros(resp.service_us),
+                    );
                 }
-                Err(PoolError::QueueFull) => shed += 1,
-                Err(_) => failed += 1,
+                // the gateway counts deadline expiry inside `shed` (it
+                // answered without inference); mirror that here
+                Err(ServeError::QueueFull) | Err(ServeError::DeadlineExceeded) => slot.2 += 1,
+                Err(_) => slot.3 += 1,
             }
         }
-        (m, ok, shed, failed)
+        per
     });
 
     let mut rng = Rng::new(seed);
     let t0 = Instant::now();
     let mut phase_start = t0;
-    let mut submitted = 0u64;
-    let mut shed_at_submit = 0u64;
-    let mut failed_at_submit = 0u64;
+    let mut submitted = vec![0u64; n];
+    let mut shed_at_submit = vec![0u64; n];
+    let mut failed_at_submit = vec![0u64; n];
     'phases: for ph in &scenario.phases {
         let phase_end = phase_start + ph.duration;
         if ph.rate_rps > 0.0 {
@@ -213,18 +255,30 @@ pub fn run(handle: &PoolHandle, scenario: &Scenario, seed: u64) -> LoadReport {
                     break;
                 }
                 sleep_until(cursor);
-                let x_q: Vec<u8> = (0..in_dim).map(|_| rng.below(256) as u8).collect();
-                submitted += 1;
+                // weighted model draw, then that model's input shape
+                let mut pick = rng.next_f64() * total_weight;
+                let mut idx = n - 1;
+                for (i, e) in entries.iter().enumerate() {
+                    if pick < e.weight {
+                        idx = i;
+                        break;
+                    }
+                    pick -= e.weight;
+                }
+                let handle = &entries[idx].handle;
+                let x_q: Vec<u8> =
+                    (0..handle.in_dim()).map(|_| rng.below(256) as u8).collect();
+                submitted[idx] += 1;
                 match handle.submit_q(x_q) {
                     Ok(t) => {
-                        let _ = tick_tx.send(t);
+                        let _ = tick_tx.send((idx, t));
                     }
-                    Err(PoolError::QueueFull) => shed_at_submit += 1,
-                    Err(PoolError::Closed) => {
-                        failed_at_submit += 1;
+                    Err(ServeError::QueueFull) => shed_at_submit[idx] += 1,
+                    Err(ServeError::Closed) => {
+                        failed_at_submit[idx] += 1;
                         break 'phases;
                     }
-                    Err(_) => failed_at_submit += 1,
+                    Err(_) => failed_at_submit[idx] += 1,
                 }
             }
         }
@@ -232,19 +286,47 @@ pub fn run(handle: &PoolHandle, scenario: &Scenario, seed: u64) -> LoadReport {
         phase_start = phase_end;
     }
     drop(tick_tx);
-    let (m, ok, shed_in_flight, failed_in_flight) = collector.join().expect("collector");
+    let per = collector.join().expect("collector");
     let wall = t0.elapsed();
-    LoadReport {
-        scenario: scenario.name.clone(),
-        submitted,
-        ok,
-        shed: shed_at_submit + shed_in_flight,
-        failed: failed_at_submit + failed_in_flight,
+    let mut merged = Metrics::default();
+    let mut per_model = Vec::with_capacity(n);
+    let (mut t_sub, mut t_ok, mut t_shed, mut t_failed) = (0u64, 0u64, 0u64, 0u64);
+    for (i, (m, ok, shed_in_flight, failed_in_flight)) in per.into_iter().enumerate() {
+        let shed = shed_at_submit[i] + shed_in_flight;
+        let failed = failed_at_submit[i] + failed_in_flight;
+        t_sub += submitted[i];
+        t_ok += ok;
+        t_shed += shed;
+        t_failed += failed;
+        per_model.push(LoadReport {
+            scenario: entries[i].handle.name().to_string(),
+            submitted: submitted[i],
+            ok,
+            shed,
+            failed,
+            wall,
+            offered_rps: scenario.offered_rps() * entries[i].weight / total_weight,
+            achieved_rps: ok as f64 / wall.as_secs_f64(),
+            latency: m.latency(),
+        });
+        merged.merge(&m);
+    }
+    let total = LoadReport {
+        scenario: if n == 1 {
+            scenario.name.clone()
+        } else {
+            format!("{}+mix", scenario.name)
+        },
+        submitted: t_sub,
+        ok: t_ok,
+        shed: t_shed,
+        failed: t_failed,
         wall,
         offered_rps: scenario.offered_rps(),
-        achieved_rps: ok as f64 / wall.as_secs_f64(),
-        latency: m.latency(),
-    }
+        achieved_rps: t_ok as f64 / wall.as_secs_f64(),
+        latency: merged.latency(),
+    };
+    MixReport { total, per_model }
 }
 
 /// Closed-loop saturation: `clients` threads hammer the pool (submit,
@@ -254,7 +336,7 @@ pub fn run(handle: &PoolHandle, scenario: &Scenario, seed: u64) -> LoadReport {
 /// is the attempt rate (including shed), `achieved_rps` the completion
 /// rate.
 pub fn closed_loop(
-    handle: &PoolHandle,
+    handle: &ModelHandle,
     clients: usize,
     duration: Duration,
     per_client: Option<usize>,
@@ -278,10 +360,13 @@ pub fn closed_loop(
                 match h.infer_q(x_q) {
                     Ok(r) => {
                         ok += 1;
-                        m.record_request(Duration::from_micros(r.latency_us));
+                        m.record_request_split(
+                            Duration::from_micros(r.queue_us),
+                            Duration::from_micros(r.service_us),
+                        );
                     }
-                    Err(PoolError::QueueFull) => shed += 1,
-                    Err(PoolError::Closed) => {
+                    Err(ServeError::QueueFull) | Err(ServeError::DeadlineExceeded) => shed += 1,
+                    Err(ServeError::Closed) => {
                         failed += 1;
                         break;
                     }
@@ -376,6 +461,49 @@ mod tests {
         assert_eq!(stats.submitted, rep.submitted);
         assert_eq!(rep.latency.unwrap().count as u64, rep.ok);
         assert_eq!(rep.scenario, "steady");
+    }
+
+    #[test]
+    fn mix_conserves_per_model_and_weights_traffic() {
+        use crate::coordinator::{GatewayBuilder, GatewayConfig};
+        let mut b = GatewayBuilder::with_config(GatewayConfig {
+            replicas: 2,
+            queue_cap: 64,
+            shed: ShedPolicy::RejectNew,
+            policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+            sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
+        });
+        let eb = Engine::new(QuantizedModel::synthetic("big", &[4, 8, 3], 5, 3, 1));
+        let es = Engine::new(QuantizedModel::synthetic("small", &[6, 4, 2], 5, 3, 2));
+        let big = b.register("big", eb);
+        let small = b.register("small", es);
+        let gw = b.start();
+        let entries = [
+            MixEntry { handle: gw.handle(big), weight: 3.0 },
+            MixEntry { handle: gw.handle(small), weight: 1.0 },
+        ];
+        let sc = Scenario::steady(2000.0, Duration::from_millis(200));
+        let mix = run_mix(&entries, &sc, 17);
+        let stats = gw.shutdown();
+        assert_eq!(mix.per_model.len(), 2);
+        assert_eq!(mix.per_model[0].scenario, "big");
+        assert_eq!(mix.total.scenario, "steady+mix");
+        let mut total_ok = 0;
+        for (rep, ms) in mix.per_model.iter().zip(&stats.per_model) {
+            assert_eq!(rep.submitted, rep.ok + rep.shed + rep.failed, "per-model conservation");
+            assert_eq!(ms.submitted, rep.submitted, "generator and gateway agree");
+            assert_eq!(ms.completed, rep.ok);
+            assert!(ms.conserved());
+            total_ok += rep.ok;
+        }
+        assert_eq!(mix.total.ok, total_ok);
+        assert!(
+            mix.per_model[0].submitted > mix.per_model[1].submitted,
+            "3:1 weighting skews traffic"
+        );
+        assert!((mix.per_model[0].offered_rps - 1500.0).abs() < 1e-6);
+        assert!((mix.per_model[1].offered_rps - 500.0).abs() < 1e-6);
+        assert!(mix.total.ok > 0);
     }
 
     #[test]

@@ -11,9 +11,15 @@
 //! kansas arkane                    # Sec. V-B — B-spline vs ArKANe
 //! kansas accuracy [--model NAME]   # int8 vs fp32 accuracy (golden batch)
 //! kansas simulate [--rows R --cols C --pe N:M --bs B]   # one config
-//! kansas serve [--model NAME --replicas R --scenario MIX] # replica pool
+//! kansas serve [--models a.kanq,b.kanq --mix 3,1 --replicas R] # gateway
 //! kansas quickstart                # minimal end-to-end smoke
 //! ```
+//!
+//! `serve` runs the multi-tenant Gateway: every `--models` entry is
+//! registered on one shared worker fleet and admission queue, traffic is
+//! a weighted `--mix`, and the report breaks counters down per model and
+//! per replica (conservation: submitted == ok + shed + failed, per
+//! model).
 
 use std::path::PathBuf;
 use std::time::Duration;
@@ -22,11 +28,11 @@ use anyhow::{bail, Context, Result};
 
 use kan_sas::arch::{ArrayConfig, WeightLoad};
 use kan_sas::config::{parse_pe, parse_shed, RunConfig};
-use kan_sas::coordinator::{BatchPolicy, Pool};
+use kan_sas::coordinator::{BatchPolicy, GatewayBuilder};
 use kan_sas::cost::array_area_mm2;
 use kan_sas::experiments;
 use kan_sas::kan::{Engine, QuantizedModel};
-use kan_sas::loadgen::{self, Scenario};
+use kan_sas::loadgen::{self, MixEntry, Scenario};
 use kan_sas::report::Table;
 use kan_sas::sim::analytic;
 use kan_sas::util::container::Container;
@@ -105,14 +111,23 @@ fn print_help() {
          experiments:   table1 | table2 | fig7 [--csv DIR] | fig8 | arkane\n\
          validation:    accuracy [--model mnist_kan]\n\
          simulation:    simulate [--rows R --cols C --pe N:M|scalar --bs B --counted-loads]\n\
-         serving:       serve [--model NAME --synthetic --replicas R --queue-cap Q\n\
+         serving:       serve [--model NAME | --models SPEC,SPEC,...] [--mix W1,W2,...]\n\
+                              [--synthetic --replicas R --max-replicas CAP --queue-cap Q\n\
                                --shed reject|drop-oldest|block --max-batch B\n\
                                --requests N --clients C\n\
                                --scenario steady|diurnal|flash-crowd --rate RPS --duration-ms MS]\n\
          smoke:         quickstart\n\
          \n\
-         serve runs the N-replica pool: closed-loop clients by default, or an\n\
-         open-loop load-generator scenario with --scenario.\n\
+         serve runs the multi-tenant Gateway: one worker fleet + one bounded\n\
+         admission queue serving every registered model, per-model batchers\n\
+         (batches never mix models), per-model + per-replica accounting.\n\
+         Each --models SPEC is a .kanq path (model name = file stem) or a\n\
+         synthetic spec name:DIMxDIMx..DIM (e.g. mnist:64x32x10); --mix\n\
+         weights the open-loop arrival split (default equal). One model\n\
+         defaults to closed-loop clients; several models (or --scenario)\n\
+         drive the open-loop Poisson generator. Replica autosizing clamps\n\
+         cores to 8; raise with --max-replicas or KANSAS_MAX_REPLICAS\n\
+         (explicit --replicas wins).\n\
          --config FILE (json) applies to simulate/serve; artifacts are read\n\
          from ./artifacts (override with KANSAS_ARTIFACTS)."
     );
@@ -224,57 +239,134 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// One `--models` entry: `path/to/model.kanq` (name = file stem) or a
+/// synthetic spec `name:IN x HIDDEN x .. x OUT` (dims separated by `x`).
+fn load_model_spec(spec: &str, seed: u64) -> Result<(String, Engine)> {
+    if let Some((name, dims)) = spec.split_once(':') {
+        let dims: Vec<usize> = dims
+            .split('x')
+            .map(|d| d.trim().parse().with_context(|| format!("bad dim '{d}' in '{spec}'")))
+            .collect::<Result<_>>()?;
+        if dims.len() < 2 {
+            bail!("synthetic spec '{spec}' needs at least IN x OUT dims");
+        }
+        let engine = Engine::new(QuantizedModel::synthetic(name, &dims, 5, 3, seed));
+        return Ok((name.to_string(), engine));
+    }
+    let mut path = PathBuf::from(spec);
+    if !path.exists() {
+        path = artifacts_dir().join(spec);
+    }
+    let name = path
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .with_context(|| format!("model spec '{spec}' has no file stem"))?
+        .to_string();
+    let qm = QuantizedModel::load(&path).with_context(|| {
+        format!("loading '{spec}' (run `make artifacts`, or use name:DIMxDIM syntax)")
+    })?;
+    Ok((name, Engine::new(qm)))
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let base = load_run_config(args)?;
-    let model = args.get("--model").unwrap_or("mnist_kan");
     let requests: usize = args.parsed("--requests", 256)?;
     let clients: usize = args.parsed("--clients", 4)?;
     let max_batch: usize = args.parsed("--max-batch", base.policy.max_batch)?;
-    let mut pool_cfg = base.to_pool_config();
-    pool_cfg.policy = BatchPolicy { max_batch, ..base.policy };
-    pool_cfg.replicas = args.parsed("--replicas", pool_cfg.replicas)?;
-    pool_cfg.queue_cap = args.parsed("--queue-cap", pool_cfg.queue_cap)?;
-    if let Some(s) = args.get("--shed") {
-        pool_cfg.shed = parse_shed(s)?;
+    let mut cfg = base.to_pool_config();
+    cfg.policy = BatchPolicy { max_batch, ..base.policy };
+    // --replicas pins the fleet size; otherwise autosize to the host,
+    // with --max-replicas (or KANSAS_MAX_REPLICAS) lifting the clamp
+    if let Some(cap) = args.get("--max-replicas") {
+        let cap: usize = cap.parse().map_err(|_| anyhow::anyhow!("bad --max-replicas '{cap}'"))?;
+        cfg.replicas = kan_sas::coordinator::default_replicas_capped(cap);
     }
-    let engine = if args.flag("--synthetic") {
-        Engine::new(QuantizedModel::synthetic("synthetic_kan", &[64, 64, 10], 5, 3, 17))
+    cfg.replicas = args.parsed("--replicas", cfg.replicas)?;
+    cfg.queue_cap = args.parsed("--queue-cap", cfg.queue_cap)?;
+    if let Some(s) = args.get("--shed") {
+        cfg.shed = parse_shed(s)?;
+    }
+
+    // registered models: --models SPEC,SPEC,... or the single-model flags
+    let specs: Vec<(String, Engine)> = if let Some(list) = args.get("--models") {
+        list.split(',')
+            .enumerate()
+            .map(|(i, s)| load_model_spec(s.trim(), 17 + i as u64))
+            .collect::<Result<_>>()?
+    } else if args.flag("--synthetic") {
+        vec![(
+            "synthetic_kan".to_string(),
+            Engine::new(QuantizedModel::synthetic("synthetic_kan", &[64, 64, 10], 5, 3, 17)),
+        )]
     } else {
+        let model = args.get("--model").unwrap_or("mnist_kan");
         let dir = artifacts_dir();
         let qm = QuantizedModel::load(&dir.join(format!("{model}.kanq")))
-            .context("run `make artifacts` first (or pass --synthetic)")?;
-        Engine::new(qm)
+            .context("run `make artifacts` first (or pass --synthetic / --models)")?;
+        vec![(model.to_string(), Engine::new(qm))]
     };
-    println!(
-        "serve — {} replicas x {} (queue {} / {:?}), weights shared: {} KiB total",
-        pool_cfg.replicas,
-        engine.model.name,
-        pool_cfg.queue_cap,
-        pool_cfg.shed,
-        engine.param_bytes() / 1024
-    );
-    let replicas = pool_cfg.replicas;
-    let pool = Pool::start(engine, pool_cfg);
+    for (i, (name, _)) in specs.iter().enumerate() {
+        if specs[..i].iter().any(|(earlier, _)| earlier == name) {
+            bail!("duplicate model name '{name}' in --models (names must be unique)");
+        }
+    }
+    let weights: Vec<f64> = match args.get("--mix") {
+        Some(w) => {
+            let ws: Vec<f64> = w
+                .split(',')
+                .map(|s| s.trim().parse().with_context(|| format!("bad --mix weight '{s}'")))
+                .collect::<Result<_>>()?;
+            if ws.len() != specs.len() {
+                bail!("--mix has {} weights for {} models", ws.len(), specs.len());
+            }
+            ws
+        }
+        None => vec![1.0; specs.len()],
+    };
 
-    let report = if let Some(name) = args.get("--scenario") {
+    let total_kib: usize = specs.iter().map(|(_, e)| e.param_bytes()).sum::<usize>() / 1024;
+    let names: Vec<&str> = specs.iter().map(|(n, _)| n.as_str()).collect();
+    println!(
+        "serve — {} replicas x [{}] (queue {} / {:?}), weights shared: {} KiB total",
+        cfg.replicas,
+        names.join(", "),
+        cfg.queue_cap,
+        cfg.shed,
+        total_kib
+    );
+    let replicas = cfg.replicas;
+    let mut builder = GatewayBuilder::with_config(cfg);
+    for (name, engine) in specs {
+        builder.register(&name, engine);
+    }
+    let gateway = builder.start();
+    let handles = gateway.handles();
+
+    let multi = handles.len() > 1;
+    let report = if multi || args.get("--scenario").is_some() {
+        let name = args.get("--scenario").unwrap_or("steady");
         let rate: f64 = args.parsed("--rate", 2000.0)?;
         let dur_ms: u64 = args.parsed("--duration-ms", 2000)?;
         let sc = Scenario::by_name(name, rate, Duration::from_millis(dur_ms))
             .with_context(|| format!("unknown scenario '{name}' (steady|diurnal|flash-crowd)"))?;
-        loadgen::run(&pool.handle(), &sc, 12345)
+        let entries: Vec<MixEntry> = handles
+            .iter()
+            .zip(&weights)
+            .map(|(h, &w)| MixEntry { handle: h.clone(), weight: w })
+            .collect();
+        let mix = loadgen::run_mix(&entries, &sc, 12345);
+        for rep in &mix.per_model {
+            println!("  {}", rep.summary());
+        }
+        mix.total
     } else {
         // legacy closed-loop mode, sized by --requests/--clients
         let per_client = requests / clients.max(1);
-        loadgen::closed_loop(
-            &pool.handle(),
-            clients,
-            Duration::from_secs(3600),
-            Some(per_client),
-            12345,
-        )
+        let budget = Some(per_client);
+        loadgen::closed_loop(&handles[0], clients, Duration::from_secs(3600), budget, 12345)
     };
 
-    let stats = pool.shutdown();
+    let stats = gateway.shutdown();
     println!("{}", report.summary());
     println!(
         "throughput: {:.0} rows/s over {:.2}s   mean batch {:.1}   batches {}   peak queue {}",
@@ -286,8 +378,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     if let Some(lat) = stats.merged.latency() {
         println!(
-            "latency us: mean {:.0}  p50 {}  p95 {}  p99 {}  max {}",
-            lat.mean_us, lat.p50_us, lat.p95_us, lat.p99_us, lat.max_us
+            "latency us: mean {:.0} (queue {:.0} + service {:.0})  p50 {}  p95 {}  p99 {}  max {}",
+            lat.mean_us,
+            stats.merged.mean_queue_us(),
+            stats.merged.mean_service_us(),
+            lat.p50_us,
+            lat.p95_us,
+            lat.p99_us,
+            lat.max_us
         );
     }
     println!(
@@ -297,6 +395,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
         array_area_mm2(&base.array),
         100.0 * stats.merged.sim_utilization()
     );
+    let mut t = Table::new(&[
+        "model", "submitted", "ok", "shed", "failed", "rows", "p50 us", "p99 us", "conserved",
+    ])
+    .with_title(format!("per-model accounting ({} tenants)", stats.per_model.len()).as_str());
+    for m in &stats.per_model {
+        let (p50, p99) = m.metrics.latency().map(|l| (l.p50_us, l.p99_us)).unwrap_or((0, 0));
+        t.row(vec![
+            m.name.clone(),
+            m.submitted.to_string(),
+            m.completed.to_string(),
+            m.shed.to_string(),
+            m.failed.to_string(),
+            m.metrics.batch_rows.to_string(),
+            p50.to_string(),
+            p99.to_string(),
+            if m.conserved() { "yes".into() } else { "NO".into() },
+        ]);
+    }
+    print!("{}", t.render());
     let mut t = Table::new(&["replica", "rows", "batches", "sim cycles", "sim util %"])
         .with_title(format!("per-replica load balance ({replicas} replicas)").as_str());
     for (i, m) in stats.per_replica.iter().enumerate() {

@@ -1,8 +1,10 @@
 //! Coordinator integration: conservation (every request answered exactly
 //! once — including under load-shedding and shutdown races), batching
-//! behaviour under concurrency, replica weight-sharing, metrics sanity.
-//! Uses the quickstart artifact when present, otherwise a hand-built tiny
-//! model.
+//! behaviour under concurrency, replica weight-sharing, metrics sanity,
+//! and the multi-tenant gateway (two models over one fleet: correctness
+//! through typed handles, per-model conservation under overload races,
+//! DropOldest eviction semantics). Uses the quickstart artifact when
+//! present, otherwise a hand-built tiny model.
 
 use std::path::PathBuf;
 use std::time::Duration;
@@ -10,7 +12,8 @@ use std::time::Duration;
 use kan_sas::arch::ArrayConfig;
 use kan_sas::bspline::Lut;
 use kan_sas::coordinator::{
-    BatchPolicy, Pool, PoolConfig, PoolError, Server, ServerConfig, ShedPolicy,
+    BatchPolicy, GatewayBuilder, GatewayConfig, Pool, PoolConfig, PoolError, Priority, Request,
+    Server, ServerConfig, ServeError, ShedPolicy,
 };
 use kan_sas::kan::{Engine, LayerParams, QuantizedModel};
 use kan_sas::tensor::Tensor;
@@ -320,4 +323,199 @@ fn pool_deterministic_same_input_same_logits() {
         assert_eq!(h.infer(&x).unwrap().t, a.t);
     }
     pool.shutdown();
+}
+
+// ---------------- gateway (multi-tenant, one fleet) ----------------
+
+fn gateway_config(replicas: usize, queue_cap: usize, shed: ShedPolicy) -> GatewayConfig {
+    GatewayConfig {
+        replicas,
+        queue_cap,
+        shed,
+        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+        sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
+    }
+}
+
+fn second_engine() -> Engine {
+    Engine::new(QuantizedModel::synthetic("wide", &[6, 9, 5], 5, 3, 77))
+}
+
+/// The acceptance-criteria test: two models through one gateway, both
+/// answering *correct* predictions (bit-exact against direct engine
+/// forwards), with per-model rows/latency in the stats.
+#[test]
+fn gateway_two_models_answer_correct_predictions() {
+    let engine_a = tiny_engine();
+    let engine_b = second_engine();
+    // reference replicas alias the registered engines' weights
+    let (ref_a, ref_b) = (engine_a.clone(), engine_b.clone());
+    let mut builder = GatewayBuilder::with_config(gateway_config(3, 256, ShedPolicy::Block));
+    let id_a = builder.register("tiny", engine_a);
+    let id_b = builder.register("wide", engine_b);
+    let gateway = builder.start();
+    let (ha, hb) = (gateway.handle(id_a), gateway.handle(id_b));
+    assert_eq!((ha.in_dim(), ha.out_dim()), (4, 3));
+    assert_eq!((hb.in_dim(), hb.out_dim()), (6, 5));
+    let mut rng = Rng::new(321);
+    for i in 0..60 {
+        let (h, reference, k) =
+            if i % 2 == 0 { (&ha, &ref_a, 4) } else { (&hb, &ref_b, 6) };
+        let x_q: Vec<u8> = (0..k).map(|_| rng.below(256) as u8).collect();
+        let want = reference.forward_from_q(&x_q, 1).unwrap();
+        let got = h.infer_q(x_q).unwrap();
+        assert_eq!(got.t, want.t, "gateway answer diverged from direct engine forward");
+        assert_eq!(got.prediction(), want.predictions()[0]);
+        assert_eq!(got.latency_us(), got.queue_us + got.service_us);
+    }
+    let stats = gateway.shutdown();
+    assert_eq!(stats.per_model.len(), 2);
+    for (ms, want_rows) in stats.per_model.iter().zip([30u64, 30]) {
+        assert_eq!(ms.completed, want_rows);
+        assert_eq!(ms.metrics.batch_rows, want_rows, "per-model rows tracked");
+        let lat = ms.metrics.latency().expect("per-model latency recorded");
+        assert_eq!(lat.count as u64, want_rows);
+        assert!(ms.conserved(), "{}: {ms:?}", ms.name);
+    }
+    assert_eq!(stats.merged.batch_rows, 60);
+    assert!(stats.conserved());
+}
+
+/// Per-model conservation under a concurrent two-model overload race:
+/// a deliberately tiny shared queue, bursty ticket traffic on both
+/// tenants, client-side tallies reconciled exactly against the
+/// gateway's per-model counters.
+#[test]
+fn gateway_conserves_per_model_under_overload_race() {
+    for shed in [ShedPolicy::RejectNew, ShedPolicy::DropOldest] {
+        let mut builder = GatewayBuilder::with_config(gateway_config(2, 4, shed));
+        let id_a = builder.register("tiny", tiny_engine());
+        let id_b = builder.register("wide", second_engine());
+        let gateway = builder.start();
+        let n_clients = 3; // per model
+        let per_client = 80;
+        let mut threads = Vec::new();
+        for model in 0..2usize {
+            for c in 0..n_clients {
+                let h = gateway.handle(if model == 0 { id_a } else { id_b });
+                threads.push(std::thread::spawn(move || {
+                    let mut rng = Rng::new((model * 100 + c) as u64);
+                    let in_dim = h.in_dim();
+                    let (mut ok, mut shed) = (0u64, 0u64);
+                    let mut tickets = Vec::new();
+                    for i in 0..per_client {
+                        let x_q: Vec<u8> = (0..in_dim).map(|_| rng.below(256) as u8).collect();
+                        match h.submit_q(x_q) {
+                            Ok(t) => tickets.push(t),
+                            Err(ServeError::QueueFull) => shed += 1,
+                            Err(e) => panic!("unexpected submit error: {e}"),
+                        }
+                        if i % 16 == 15 {
+                            for t in tickets.drain(..) {
+                                match t.wait() {
+                                    Ok(r) => {
+                                        ok += 1;
+                                        assert_eq!(r.t.len(), h.out_dim());
+                                    }
+                                    Err(ServeError::QueueFull) => shed += 1,
+                                    Err(e) => panic!("unexpected terminal: {e}"),
+                                }
+                            }
+                        }
+                    }
+                    for t in tickets {
+                        // every ticket resolves — DropOldest evictions
+                        // answer QueueFull, they never hang
+                        match t.wait() {
+                            Ok(_) => ok += 1,
+                            Err(ServeError::QueueFull) => shed += 1,
+                            Err(e) => panic!("unexpected terminal: {e}"),
+                        }
+                    }
+                    (model, ok, shed)
+                }));
+            }
+        }
+        let mut ok_by = [0u64; 2];
+        let mut shed_by = [0u64; 2];
+        for t in threads {
+            let (model, o, s) = t.join().unwrap();
+            ok_by[model] += o;
+            shed_by[model] += s;
+        }
+        let stats = gateway.shutdown();
+        let total = (n_clients * per_client) as u64;
+        for m in 0..2 {
+            assert_eq!(ok_by[m] + shed_by[m], total, "every submission answered once ({shed:?})");
+            let ms = &stats.per_model[m];
+            assert_eq!(ms.submitted, total);
+            assert_eq!(ms.completed, ok_by[m], "{}: completed", ms.name);
+            assert_eq!(ms.shed, shed_by[m], "{}: shed", ms.name);
+            assert_eq!(ms.failed, 0);
+            assert!(ms.conserved(), "{}: {ms:?}", ms.name);
+            assert_eq!(ms.metrics.batch_rows, ok_by[m], "served rows == completions");
+        }
+        assert!(stats.peak_depth <= 4, "bounded queue respected");
+    }
+}
+
+/// DropOldest + priority classes, end to end: a High-priority burst
+/// evicts queued Low traffic (answered `QueueFull`, never hung) while
+/// High requests survive to completion.
+#[test]
+fn gateway_drop_oldest_prefers_low_priority_victims() {
+    // one slow-ish worker and a small queue so evictions actually happen
+    let mut builder = GatewayBuilder::with_config(GatewayConfig {
+        replicas: 1,
+        queue_cap: 8,
+        shed: ShedPolicy::DropOldest,
+        policy: BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) },
+        sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
+    });
+    // heavy enough that service can't keep pace with the submit burst,
+    // so the queue genuinely overflows and evicts
+    let heavy = Engine::new(QuantizedModel::synthetic("heavy", &[64, 128, 10], 5, 3, 50));
+    let id = builder.register("heavy", heavy);
+    let gateway = builder.start();
+    let h = gateway.handle(id);
+    // only 4 High requests total — fewer than the queue capacity, so a
+    // full queue ALWAYS holds a Low victim and no High can ever be
+    // evicted (eviction would need an all-High queue)
+    let mut low = Vec::new();
+    let mut high = Vec::new();
+    let mut low_shed = 0u64;
+    for i in 0..200u64 {
+        let x_q = vec![(i % 256) as u8; 64];
+        let req = Request::from_q(x_q);
+        if i % 50 == 0 {
+            match h.submit(req.with_priority(Priority::High)) {
+                Ok(t) => high.push(t),
+                Err(e) => panic!("High submit must always admit here: {e}"),
+            }
+        } else {
+            match h.submit(req.with_priority(Priority::Low)) {
+                Ok(t) => low.push(t),
+                Err(ServeError::QueueFull) => low_shed += 1,
+                Err(e) => panic!("unexpected: {e}"),
+            }
+        }
+    }
+    let mut low_ok = 0u64;
+    for t in low {
+        // evicted tickets resolve QueueFull — they never hang
+        match t.wait() {
+            Ok(_) => low_ok += 1,
+            Err(ServeError::QueueFull) => low_shed += 1,
+            Err(e) => panic!("unexpected terminal: {e}"),
+        }
+    }
+    for t in high {
+        t.wait().expect("High priority must never be evicted ahead of queued Low traffic");
+    }
+    let stats = gateway.shutdown();
+    let ms = &stats.per_model[0];
+    assert!(ms.conserved(), "{ms:?}");
+    assert_eq!(ms.shed, low_shed, "every shed was a Low request");
+    assert_eq!(ms.completed, low_ok + 4);
+    assert!(low_shed > 0, "the burst must actually overflow the tiny queue");
 }

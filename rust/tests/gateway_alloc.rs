@@ -1,0 +1,85 @@
+//! Hard acceptance gate for response-buffer pooling: after warmup, the
+//! gateway's per-model [`BufferPool`] must serve acquire→release cycles
+//! with ZERO heap allocations (counting global allocator, same
+//! technique as `tests/zero_alloc.rs`), and an end-to-end serial-client
+//! run must recycle nearly every response buffer instead of allocating
+//! per request.
+//!
+//! Kept to a single `#[test]` on purpose — the counters are
+//! process-wide and the default harness runs tests of one binary
+//! concurrently, so a second test here could allocate inside the
+//! measured window.
+
+use std::time::Duration;
+
+use kan_sas::arch::ArrayConfig;
+use kan_sas::coordinator::{
+    BatchPolicy, BufferPool, GatewayBuilder, GatewayConfig, ShedPolicy,
+};
+use kan_sas::kan::{Engine, QuantizedModel};
+use kan_sas::util::alloc_count::{self, CountingAllocator};
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+#[test]
+fn response_buffer_pooling_is_allocation_free_after_warmup() {
+    // ---- the pool primitive, measured directly ----
+    let out_dim = 10usize;
+    let pool = BufferPool::new(out_dim, 8);
+    // warmup: materialize one buffer (the steady-state working set of a
+    // serial client) and park it on the free-list
+    let warm = pool.acquire();
+    pool.release(warm);
+    let row = [7i64; 10];
+    let before = alloc_count::events();
+    for _ in 0..64 {
+        let mut buf = pool.acquire(); // free-list hit: no allocation
+        buf.extend_from_slice(&row); // within pre-sized capacity
+        assert_eq!(buf.len(), out_dim);
+        pool.release(buf); // back to the list: no allocation
+    }
+    let events = alloc_count::events() - before;
+    assert_eq!(
+        events, 0,
+        "steady-state acquire/extend/release must not touch the heap ({events} allocator events)"
+    );
+    let (created, recycled, free) = pool.counts();
+    assert_eq!(created, 1, "one warmup buffer serves the whole loop");
+    assert_eq!(recycled, 64);
+    assert_eq!(free, 1);
+
+    // ---- end to end: submit-side buffer cost is amortized ----
+    let mut builder = GatewayBuilder::with_config(GatewayConfig {
+        replicas: 1,
+        queue_cap: 64,
+        shed: ShedPolicy::Block,
+        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+        sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
+    });
+    let id = builder.register(
+        "alloc",
+        Engine::new(QuantizedModel::synthetic("alloc", &[8, 12, 10], 5, 3, 31)),
+    );
+    let gateway = builder.start();
+    let handle = gateway.handle(id);
+    for i in 0..100u64 {
+        // drop each response before the next submit: the recycled buffer
+        // must cover every subsequent acquire
+        let r = handle.infer_q(vec![(i % 256) as u8; 8]).unwrap();
+        assert_eq!(r.t.len(), 10);
+    }
+    let stats = gateway.shutdown();
+    let ms = &stats.per_model[0];
+    assert_eq!(ms.completed, 100);
+    assert!(
+        ms.buffers_created <= 2,
+        "serial traffic holds at most ~2 buffers live, created {}",
+        ms.buffers_created
+    );
+    assert!(
+        ms.buffers_recycled >= 98,
+        "steady-state submissions must reuse pooled buffers, recycled only {}",
+        ms.buffers_recycled
+    );
+}
