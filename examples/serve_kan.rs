@@ -18,7 +18,7 @@ use std::time::Duration;
 use anyhow::Result;
 use kan_sas::arch::ArrayConfig;
 use kan_sas::coordinator::{
-    BatchPolicy, GatewayBuilder, GatewayConfig, Pool, PoolConfig, ShedPolicy,
+    BatchPolicy, Dispatch, GatewayBuilder, GatewayConfig, Pool, PoolConfig, ShedPolicy,
 };
 use kan_sas::kan::{Engine, QuantizedModel};
 use kan_sas::loadgen::{self, MixEntry, Scenario};
@@ -30,6 +30,7 @@ fn pool_config(replicas: usize, shed: ShedPolicy) -> PoolConfig {
         shed,
         policy: BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(1) },
         sim_array: ArrayConfig::kan_sas(16, 16, 4, 13),
+        dispatch: Dispatch::FairSteal,
     }
 }
 
@@ -78,18 +79,22 @@ fn main() -> Result<()> {
 
     // 3. multi-tenant gateway: the MNIST model and a HAR-shaped tenant
     //    share ONE fleet and admission queue; batches never mix models,
-    //    and accounting is per model
+    //    accounting is per model, and dispatch is weighted-fair with
+    //    work stealing (the HAR tenant is service-weighted 4x, so the
+    //    3:1 MNIST arrival majority cannot starve it)
     let mut builder = GatewayBuilder::with_config(GatewayConfig {
         replicas: 2,
         queue_cap: 512,
         shed: ShedPolicy::RejectNew,
         policy: BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(1) },
         sim_array: ArrayConfig::kan_sas(16, 16, 4, 13),
+        dispatch: Dispatch::FairSteal,
     });
     let mnist = builder.register("mnist", engine.clone());
-    let har = builder.register(
+    let har = builder.register_weighted(
         "har",
         Engine::new(QuantizedModel::synthetic("har_synth", &[16, 32, 6], 5, 3, 3)),
+        4,
     );
     let gateway = builder.start();
     let entries = [
@@ -104,8 +109,9 @@ fn main() -> Result<()> {
     }
     for m in &gstats.per_model {
         println!(
-            "  {}: conserved={} ({} == {} ok + {} shed + {} failed)  queue {:.0} us + service {:.0} us",
+            "  {} (w{}): conserved={} ({} == {} ok + {} shed + {} failed)  queue {:.0} us + service {:.0} us",
             m.name,
+            m.weight,
             m.conserved(),
             m.submitted,
             m.completed,
@@ -115,6 +121,11 @@ fn main() -> Result<()> {
             m.metrics.mean_service_us(),
         );
     }
+    println!(
+        "  fairness index {:.3} (Jain, weight-normalized rows), stolen batches {}",
+        gstats.fairness_index(),
+        gstats.stolen_batches()
+    );
     println!(
         "serve_kan OK — replicas scale throughput; admission control bounds overload; \
          one fleet serves the whole model mix"

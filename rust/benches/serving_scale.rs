@@ -1,6 +1,7 @@
-//! Serving scale sweep: replica count x offered load x model mix.
+//! Serving scale sweep: replica count x offered load x model mix x
+//! dispatch policy.
 //!
-//! Three measurements, all on synthetic models (offline, no artifacts):
+//! Four measurements, all on synthetic models (offline, no artifacts):
 //!
 //! 1. **Closed-loop saturation** per replica count — peak rows/sec with
 //!    16 hammering clients. The acceptance bar is >= 2x rows/sec at 4
@@ -15,6 +16,14 @@
 //!    Fig. 8's application mix) share one fleet; the sweep crosses mix
 //!    weights x replica counts and records per-model achieved rate,
 //!    shed, p99, and the per-model conservation check.
+//! 4. **Fairness under a skewed burst** — a 10:1 arrival skew toward a
+//!    majority tenant, run under the pre-fair `Fixed` dispatch and
+//!    under `FairSteal` (minority tenant service-weighted 4x). Recorded
+//!    per dispatch: the minority tenant's p95 *queueing* delay (the
+//!    starvation metric), stolen-batch counts, and the Jain fairness
+//!    index over weight-normalized rows. The acceptance shape: fair
+//!    dispatch improves the minority p95 queue delay vs fixed and
+//!    steals > 0 batches under skew.
 //!
 //! ```bash
 //! cargo bench --bench serving_scale
@@ -22,17 +31,17 @@
 //!
 //! Besides the printed tables, the run writes `BENCH_serving.json`
 //! (throughput per replica count, scenario shed rates, p50/p99 latency,
-//! multi-model mix rows) so the serving perf trajectory is tracked
-//! across PRs instead of anecdotal.
+//! multi-model mix rows, fairness rows) so the serving perf trajectory
+//! is tracked across PRs instead of anecdotal.
 
 use std::time::Duration;
 
 use kan_sas::arch::ArrayConfig;
 use kan_sas::coordinator::{
-    BatchPolicy, GatewayBuilder, GatewayConfig, Pool, PoolConfig, ShedPolicy,
+    BatchPolicy, Dispatch, GatewayBuilder, GatewayConfig, Pool, PoolConfig, ShedPolicy,
 };
 use kan_sas::kan::{Engine, QuantizedModel};
-use kan_sas::loadgen::{self, MixEntry, Scenario};
+use kan_sas::loadgen::{self, Focus, MixEntry, Scenario};
 use kan_sas::report::Table;
 use kan_sas::util::json::Value;
 
@@ -48,6 +57,7 @@ fn pool_config(replicas: usize, queue_cap: usize, shed: ShedPolicy) -> PoolConfi
         shed,
         policy: BatchPolicy { max_batch: 32, max_wait: Duration::from_micros(500) },
         sim_array: ArrayConfig::kan_sas(16, 16, 4, 8),
+        dispatch: Dispatch::FairSteal,
     }
 }
 
@@ -160,6 +170,7 @@ fn main() {
                 shed: ShedPolicy::RejectNew,
                 policy: BatchPolicy { max_batch: 32, max_wait: Duration::from_micros(500) },
                 sim_array: ArrayConfig::kan_sas(16, 16, 4, 8),
+                dispatch: Dispatch::FairSteal,
             });
             let a = b.register("mnist_mix", mnist_like.clone());
             let h = b.register("har_mix", har_like.clone());
@@ -210,6 +221,107 @@ fn main() {
     }
     print!("{}", t.render());
 
+    // 4. fairness under a 10:1 skewed burst: pre-fair fixed dispatch vs
+    // weighted DRR + work stealing. Both tenants share a shape, so the
+    // minority tenant's p95 queue delay isolates *dispatch* fairness
+    // (not service-cost asymmetry); the burst runs well past saturation
+    // so head-of-line blocking actually bites under fixed dispatch.
+    let majority = Engine::new(QuantizedModel::synthetic("majority", &[64, 128, 64, 10], 5, 3, 42));
+    let minority = Engine::new(QuantizedModel::synthetic("minority", &[64, 128, 64, 10], 5, 3, 44));
+    let fair_replicas = cores.clamp(2, 4);
+    let sat = rows_at.get(&fair_replicas).copied().unwrap_or(4000.0);
+    let skew_sc = Scenario::skewed_burst(
+        sat * 0.7,
+        4.0, // burst at ~2.8x saturation
+        Duration::from_millis(900),
+        Focus { entry: 0, share: 10.0 / 11.0 },
+    );
+    println!(
+        "\nfairness under skewed burst ({fair_replicas} replicas, base {:.0} rps, 4x burst, 10:1 on majority):",
+        sat * 0.7
+    );
+    let mut t = Table::new(&[
+        "dispatch", "model", "wt", "offered", "achieved", "shed %", "q p95 us", "stolen",
+        "fairness", "conserved",
+    ])
+    .with_title("fixed vs fair-steal dispatch (minority tenant weighted 4x under fair)");
+    let mut fairness_json = Vec::new();
+    for (label, dispatch, w_major, w_minor) in
+        [("fixed", Dispatch::Fixed, 1u32, 1u32), ("fair-steal", Dispatch::FairSteal, 1, 4)]
+    {
+        let mut b = GatewayBuilder::with_config(GatewayConfig {
+            replicas: fair_replicas,
+            queue_cap: 512,
+            shed: ShedPolicy::RejectNew,
+            policy: BatchPolicy { max_batch: 16, max_wait: Duration::from_micros(500) },
+            sim_array: ArrayConfig::kan_sas(16, 16, 4, 8),
+            dispatch,
+        });
+        let maj = b.register_weighted("majority", majority.clone(), w_major);
+        let min = b.register_weighted("minority", minority.clone(), w_minor);
+        let gw = b.start();
+        let entries = [
+            MixEntry { handle: gw.handle(maj), weight: 10.0 },
+            MixEntry { handle: gw.handle(min), weight: 1.0 },
+        ];
+        let mix = loadgen::run_mix(&entries, &skew_sc, 23);
+        let stats = gw.shutdown();
+        let fairness = stats.fairness_index();
+        let stolen = stats.stolen_batches();
+        let mut per_model_json = Vec::new();
+        for (rep, ms) in mix.per_model.iter().zip(&stats.per_model) {
+            let q95 = ms.metrics.queue_latency().map(|l| l.p95_us).unwrap_or(0);
+            t.row(vec![
+                label.to_string(),
+                rep.scenario.clone(),
+                ms.weight.to_string(),
+                format!("{:.0}", rep.offered_rps),
+                format!("{:.0}", rep.achieved_rps),
+                format!("{:.1}", 100.0 * rep.shed_rate()),
+                q95.to_string(),
+                ms.metrics.stolen_batches.to_string(),
+                format!("{fairness:.3}"),
+                if ms.conserved() { "yes".into() } else { "NO".into() },
+            ]);
+            per_model_json.push(Value::obj([
+                ("model", Value::str(rep.scenario.clone())),
+                ("weight", Value::num(ms.weight as f64)),
+                ("offered_rps", Value::num(rep.offered_rps)),
+                ("achieved_rps", Value::num(rep.achieved_rps)),
+                ("ok", Value::num(rep.ok as f64)),
+                ("shed", Value::num(rep.shed as f64)),
+                ("shed_rate", Value::num(rep.shed_rate())),
+                ("p95_queue_us", Value::num(q95 as f64)),
+                ("mean_queue_us", Value::num(ms.metrics.mean_queue_us())),
+                ("stolen_batches", Value::num(ms.metrics.stolen_batches as f64)),
+                ("conserved", Value::num(if ms.conserved() { 1.0 } else { 0.0 })),
+            ]));
+        }
+        let minority_q95 = stats.per_model[1]
+            .metrics
+            .queue_latency()
+            .map(|l| l.p95_us)
+            .unwrap_or(0);
+        println!(
+            "  {label:<10} fairness {fairness:.3}  stolen {stolen:>4}  minority p95 queue {minority_q95} us"
+        );
+        fairness_json.push(Value::obj([
+            ("dispatch", Value::str(label)),
+            ("replicas", Value::num(fair_replicas as f64)),
+            ("scenario", Value::str(skew_sc.name.clone())),
+            ("offered_rps", Value::num(mix.total.offered_rps)),
+            ("achieved_rps", Value::num(mix.total.achieved_rps)),
+            ("fairness_index", Value::num(fairness)),
+            ("stolen_batches", Value::num(stolen as f64)),
+            ("minority_p95_queue_us", Value::num(minority_q95 as f64)),
+            ("per_model", Value::arr(per_model_json)),
+        ]));
+    }
+    print!("{}", t.render());
+    println!(
+        "acceptance shape: fair-steal minority p95 queue < fixed, stolen_batches > 0 under skew"
+    );
+
     let doc = Value::obj([
         ("bench", Value::str("serving_scale")),
         ("model", Value::str(engine.model.name.clone())),
@@ -218,6 +330,7 @@ fn main() {
         ("closed_loop", Value::arr(closed_json)),
         ("open_loop", Value::arr(scenario_json)),
         ("multi_model", Value::arr(mix_json)),
+        ("fairness", Value::arr(fairness_json)),
     ]);
     let out = "BENCH_serving.json";
     std::fs::write(out, doc.render() + "\n").expect("write bench artifact");

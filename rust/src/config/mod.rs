@@ -17,7 +17,7 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use crate::arch::{ArrayConfig, PeKind, WeightLoad};
-use crate::coordinator::{BatchPolicy, PoolConfig, ShedPolicy};
+use crate::coordinator::{BatchPolicy, Dispatch, PoolConfig, ShedPolicy};
 use crate::util::json::Value;
 
 #[derive(Clone, Debug)]
@@ -32,6 +32,9 @@ pub struct RunConfig {
     pub queue_cap: usize,
     /// Load-shedding policy when the admission queue is full.
     pub shed: ShedPolicy,
+    /// Worker dispatch policy (weighted fair + stealing, or the fixed
+    /// baseline).
+    pub dispatch: Dispatch,
 }
 
 impl Default for RunConfig {
@@ -44,6 +47,7 @@ impl Default for RunConfig {
             replicas: pool.replicas,
             queue_cap: pool.queue_cap,
             shed: pool.shed,
+            dispatch: pool.dispatch,
         }
     }
 }
@@ -55,6 +59,16 @@ pub fn parse_shed(s: &str) -> Result<ShedPolicy> {
         "drop-oldest" | "drop_oldest" => Ok(ShedPolicy::DropOldest),
         "block" => Ok(ShedPolicy::Block),
         other => bail!("shed policy '{other}' (want reject|drop-oldest|block)"),
+    }
+}
+
+/// Parse a dispatch policy: "fair" (weighted DRR + stealing, default)
+/// or "fixed" (the pre-fair baseline).
+pub fn parse_dispatch(s: &str) -> Result<Dispatch> {
+    match s {
+        "fair" | "fair-steal" | "fair_steal" => Ok(Dispatch::FairSteal),
+        "fixed" => Ok(Dispatch::Fixed),
+        other => bail!("dispatch policy '{other}' (want fair|fixed)"),
     }
 }
 
@@ -123,6 +137,9 @@ impl RunConfig {
             if let Some(s) = p.get("shed").and_then(Value::as_str) {
                 cfg.shed = parse_shed(s)?;
             }
+            if let Some(s) = p.get("dispatch").and_then(Value::as_str) {
+                cfg.dispatch = parse_dispatch(s)?;
+            }
         }
         if let Some(b) = v.get("batch_size").and_then(Value::as_usize) {
             cfg.batch_size = b;
@@ -138,6 +155,7 @@ impl RunConfig {
             shed: self.shed,
             policy: self.policy,
             sim_array: self.array,
+            dispatch: self.dispatch,
         }
     }
 }
@@ -199,19 +217,30 @@ mod tests {
         let mut f = tempfile("cfg5.json");
         write!(
             f,
-            r#"{{"pool": {{"replicas": 3, "queue_cap": 77, "shed": "drop-oldest"}}}}"#
+            r#"{{"pool": {{"replicas": 3, "queue_cap": 77, "shed": "drop-oldest", "dispatch": "fixed"}}}}"#
         )
         .unwrap();
         let cfg = RunConfig::load(&path("cfg5.json")).unwrap();
         assert_eq!(cfg.replicas, 3);
         assert_eq!(cfg.queue_cap, 77);
         assert_eq!(cfg.shed, ShedPolicy::DropOldest);
+        assert_eq!(cfg.dispatch, Dispatch::Fixed);
         let pc = cfg.to_pool_config();
         assert_eq!(pc.replicas, 3);
         assert_eq!(pc.queue_cap, 77);
+        assert_eq!(pc.dispatch, Dispatch::Fixed);
         let mut f = tempfile("cfg6.json");
         write!(f, r#"{{"pool": {{"replicas": 0}}}}"#).unwrap();
         assert!(RunConfig::load(&path("cfg6.json")).is_err());
+    }
+
+    #[test]
+    fn parse_dispatch_policies() {
+        assert_eq!(parse_dispatch("fair").unwrap(), Dispatch::FairSteal);
+        assert_eq!(parse_dispatch("fair-steal").unwrap(), Dispatch::FairSteal);
+        assert_eq!(parse_dispatch("fixed").unwrap(), Dispatch::Fixed);
+        assert!(parse_dispatch("random").is_err());
+        assert_eq!(RunConfig::default().dispatch, Dispatch::FairSteal);
     }
 
     #[test]

@@ -1,4 +1,13 @@
 //! Dynamic batching policy and queue draining.
+//!
+//! A [`Batcher`] accumulates same-model requests until the batch is
+//! *due* (size or deadline, see [`Batcher::ready`]). In the gateway the
+//! batchers live in per-worker **shards** that the whole fleet can
+//! reach: the owning worker drains them by weighted deficit-round-robin,
+//! and an idle peer may steal a due batch through the same
+//! [`Batcher::drain_upto`] path (the drain is splittable — a thief can
+//! take fewer items than are queued, leaving the rest with their
+//! original arrival times).
 
 use std::time::{Duration, Instant};
 
@@ -36,11 +45,13 @@ pub struct Batcher<T> {
 }
 
 impl<T> Batcher<T> {
+    /// An empty batcher governed by `policy`.
     pub fn new(policy: BatchPolicy) -> Self {
         assert!(policy.max_batch >= 1);
         Self { policy, items: Vec::new(), oldest: None }
     }
 
+    /// Push an item that arrives now.
     pub fn push(&mut self, item: T) {
         self.push_arrived(Instant::now(), item);
     }
@@ -56,10 +67,12 @@ impl<T> Batcher<T> {
         self.items.push((at, item));
     }
 
+    /// Items currently queued.
     pub fn len(&self) -> usize {
         self.items.len()
     }
 
+    /// True when nothing is queued.
     pub fn is_empty(&self) -> bool {
         self.items.is_empty()
     }
@@ -75,8 +88,13 @@ impl<T> Batcher<T> {
         }
     }
 
-    /// Time until the deadline would force a dispatch (for recv timeouts).
+    /// Time until this batch becomes due (for recv/steal wait timeouts):
+    /// zero when already dispatchable — full to `max_batch` or past the
+    /// deadline — else the deadline remainder.
     pub fn time_left(&self) -> Duration {
+        if self.items.len() >= self.policy.max_batch {
+            return Duration::ZERO;
+        }
         match self.oldest {
             Some(t0) => self.policy.max_wait.saturating_sub(t0.elapsed()),
             None => self.policy.max_wait,
@@ -96,7 +114,17 @@ impl<T> Batcher<T> {
     /// every dispatch instead of allocating per drain. Returns the number
     /// of items drained.
     pub fn drain_into(&mut self, out: &mut Vec<T>) -> usize {
-        let take = self.items.len().min(self.policy.max_batch);
+        self.drain_upto(out, self.policy.max_batch)
+    }
+
+    /// Splittable drain: take up to `limit` of the oldest items (still
+    /// capped at `max_batch`) into a caller-owned `Vec` (cleared first),
+    /// leaving the remainder queued with their original arrival times.
+    /// This is the steal protocol's entry point — a thief draining a
+    /// peer's batcher takes one batch worth and the leftover items keep
+    /// their deadline clocks. Returns the number of items drained.
+    pub fn drain_upto(&mut self, out: &mut Vec<T>, limit: usize) -> usize {
+        let take = self.items.len().min(self.policy.max_batch).min(limit);
         out.clear();
         out.extend(self.items.drain(..take).map(|(_, item)| item));
         self.oldest = self.items.iter().map(|&(at, _)| at).min();
@@ -114,8 +142,10 @@ mod tests {
         b.push(1);
         b.push(2);
         assert!(!b.ready());
+        assert!(b.time_left() > Duration::ZERO);
         b.push(3);
         assert!(b.ready());
+        assert_eq!(b.time_left(), Duration::ZERO, "size-due batch waits for nothing");
         assert_eq!(b.drain(), vec![1, 2, 3]);
         assert!(b.is_empty());
     }
@@ -181,6 +211,25 @@ mod tests {
         assert_eq!(batch, vec![4]);
         assert_eq!(b.drain_into(&mut batch), 0);
         assert!(batch.is_empty());
+    }
+
+    #[test]
+    fn drain_upto_splits_and_preserves_leftover_arrivals() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(40) });
+        let t0 = Instant::now() - Duration::from_millis(200);
+        for i in 0..6 {
+            b.push_arrived(t0 + Duration::from_millis(i), i);
+        }
+        let mut out = Vec::new();
+        // a thief takes a split batch; the leftover keeps its clock
+        assert_eq!(b.drain_upto(&mut out, 4), 4);
+        assert_eq!(out, vec![0, 1, 2, 3], "oldest items stolen first (FIFO)");
+        assert_eq!(b.len(), 2);
+        assert!(b.ready(), "leftover arrivals still past their deadline");
+        assert_eq!(b.time_left(), Duration::ZERO);
+        // limit above max_batch still caps at max_batch
+        assert_eq!(b.drain_upto(&mut out, 99), 2);
+        assert!(b.is_empty());
     }
 
     #[test]

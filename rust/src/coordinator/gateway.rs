@@ -20,6 +20,36 @@
 //!   [`ShedPolicy`], with [`Priority`] classes ordering
 //!   [`ShedPolicy::DropOldest`] eviction (low-priority victims first).
 //!
+//! Dispatch is **weighted and work-conserving** ([`Dispatch`], default
+//! [`Dispatch::FairSteal`]). Each model registers with a service weight
+//! ([`GatewayBuilder::register_weighted`]); per-model batchers live in
+//! per-worker *shards* that the whole fleet can reach:
+//!
+//! * a worker picks its next batch by **deficit round-robin** over its
+//!   shard's due batchers — every round a tenant earns credit in
+//!   proportion to its weight and pays in rows served, so a starved
+//!   high-weight tenant is served before a saturated low-weight one, and
+//!   a lone tenant still gets the whole machine (work conservation);
+//! * pulls from the shared admission queue **skip past** head-of-line
+//!   requests whose batcher is already full, so a saturated tenant's
+//!   burst cannot wall off the *dispatch* of other tenants' already
+//!   admitted requests (per-model FIFO order is preserved — only
+//!   *other* models' requests are overtaken). Admission capacity
+//!   itself stays shared: a burst that fills the bounded queue still
+//!   sheds everyone's new arrivals per [`ShedPolicy`] — per-tenant
+//!   admission quotas are future work (see ROADMAP);
+//! * a worker with nothing due **steals** a ready batch from the most
+//!   backlogged peer's shard instead of sleeping (the per-shard backlog
+//!   index is atomic, so victim selection takes no locks). Every worker
+//!   holds replicas of every model, which is what makes a stolen batch
+//!   servable anywhere; steals are counted per model and per replica
+//!   ([`Metrics::stolen_batches`]).
+//!
+//! [`Dispatch::Fixed`] keeps the pre-fair behaviour (strict FIFO pulls
+//! that stop at a full batcher, model-index serve order, idle workers
+//! sleep) as the measured baseline for the fairness sweep in the
+//! `serving_scale` bench.
+//!
 //! The client surface is typed end to end: [`ModelHandle`] submits a
 //! [`Request`] (quantized or f32 row, optional deadline, priority) and
 //! gets a [`Ticket`]; every terminal outcome is a [`ServeError`] — one
@@ -29,7 +59,9 @@
 //! held **per model**: `submitted == completed + shed + failed`
 //! (deadline-lapsed requests are answered
 //! [`ServeError::DeadlineExceeded`] and counted inside `shed`, reported
-//! separately as `expired`).
+//! separately as `expired`). The invariant is indifferent to *which*
+//! worker served a batch, so it holds across steals — including batches
+//! stolen during the shutdown flush (integration-tested).
 //!
 //! Response buffers are pooled: each answered request's pre-sized
 //! `Vec<i64>` returns to a per-model free-list ([`BufferPool`]) when the
@@ -42,7 +74,7 @@
 
 use std::collections::VecDeque;
 use std::fmt;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -52,7 +84,7 @@ use crate::arch::ArrayConfig;
 use crate::kan::{Engine, Scratch};
 
 use super::batcher::{BatchPolicy, Batcher};
-use super::metrics::Metrics;
+use super::metrics::{jain_fairness, Metrics};
 
 /// What to do with a new submission when the admission queue is full.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -82,6 +114,26 @@ pub enum Priority {
     High,
 }
 
+/// How fleet workers pick the next batch to serve.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Dispatch {
+    /// Weighted deficit-round-robin over per-model batchers plus work
+    /// stealing from backlogged peers: registration weights
+    /// ([`GatewayBuilder::register_weighted`]) set each tenant's service
+    /// share under contention, queue pulls skip past head-of-line
+    /// requests of saturated tenants, and idle workers steal ready
+    /// batches instead of sleeping. The default.
+    #[default]
+    FairSteal,
+    /// The pre-fair baseline: strictly FIFO pulls that stop at the first
+    /// request whose batcher is full (so one tenant's burst head-of-line
+    /// blocks the others), model-index serve order that ignores weights,
+    /// and idle workers that sleep rather than steal. Kept so the
+    /// `serving_scale` fairness sweep can measure the improvement
+    /// against it.
+    Fixed,
+}
+
 /// Gateway sizing and policy, shared by every registered model.
 #[derive(Clone, Debug)]
 pub struct GatewayConfig {
@@ -91,12 +143,17 @@ pub struct GatewayConfig {
     /// Admission queue capacity (requests, not batches; shared across
     /// models).
     pub queue_cap: usize,
+    /// What to do with a new submission when the admission queue is
+    /// full.
     pub shed: ShedPolicy,
     /// Per-worker, per-model dynamic batching policy.
     pub policy: BatchPolicy,
     /// Accelerator config used to attach simulated cycle counts to each
     /// served batch.
     pub sim_array: ArrayConfig,
+    /// How workers pick the next batch (weighted fair dispatch with
+    /// stealing, or the fixed pre-fair baseline).
+    pub dispatch: Dispatch,
 }
 
 impl Default for GatewayConfig {
@@ -107,6 +164,7 @@ impl Default for GatewayConfig {
             shed: ShedPolicy::RejectNew,
             policy: BatchPolicy::default(),
             sim_array: ArrayConfig::kan_sas(16, 16, 4, 8),
+            dispatch: Dispatch::FairSteal,
         }
     }
 }
@@ -185,6 +243,8 @@ pub struct BufferPool {
 }
 
 impl BufferPool {
+    /// An empty pool of `out_dim`-capacity buffers retaining at most
+    /// `retain` on its free-list.
     pub fn new(out_dim: usize, retain: usize) -> Self {
         Self {
             free: Mutex::new(Vec::new()),
@@ -253,6 +313,7 @@ impl Response {
         self.queue_us + self.service_us
     }
 
+    /// The predicted class (argmax over the accumulators).
     pub fn prediction(&self) -> usize {
         crate::util::argmax(&self.t)
     }
@@ -279,14 +340,38 @@ impl Drop for Response {
     }
 }
 
-/// One inference request, built with options before submission:
+/// One inference request, built with options before submission.
 ///
-/// ```ignore
+/// # Examples
+///
+/// Submit a float row with a deadline and a priority class through a
+/// [`ModelHandle`], then block on the [`Ticket`] for the logits:
+///
+/// ```
+/// use std::time::Duration;
+/// use kan_sas::coordinator::{GatewayBuilder, GatewayConfig, Priority, Request};
+/// use kan_sas::kan::{Engine, QuantizedModel};
+///
+/// let mut builder = GatewayBuilder::with_config(GatewayConfig {
+///     replicas: 1,
+///     ..Default::default()
+/// });
+/// let id = builder.register(
+///     "tiny",
+///     Engine::new(QuantizedModel::synthetic("tiny", &[4, 6, 3], 5, 3, 7)),
+/// );
+/// let gateway = builder.start();
+/// let handle = gateway.handle(id);
+///
 /// let ticket = handle.submit(
-///     Request::from_f32(&x)
-///         .with_deadline(Duration::from_millis(20))
+///     Request::from_f32(&[0.25, -0.5, 0.75, 0.1])
+///         .with_deadline(Duration::from_secs(5))
 ///         .with_priority(Priority::High),
 /// )?;
+/// let response = ticket.wait()?;
+/// assert_eq!(response.t.len(), 3, "one accumulator per output class");
+/// assert!(gateway.shutdown().conserved());
+/// # Ok::<(), kan_sas::coordinator::ServeError>(())
 /// ```
 #[derive(Clone, Debug)]
 pub struct Request {
@@ -372,14 +457,118 @@ struct Shared {
     space: Condvar,
     cap: usize,
     shed_policy: ShedPolicy,
+    dispatch: Dispatch,
+    /// Per-model service weights (deficit-round-robin quanta).
+    weights: Vec<u32>,
     counters: Vec<ModelCounters>,
     buffers: Vec<Arc<BufferPool>>,
+    /// One batcher shard per worker. A shard is *owned* by its worker
+    /// (only the owner pulls admissions into it) but *shared* with the
+    /// fleet: idle peers steal due batches out of it.
+    shards: Vec<Shard>,
+}
+
+/// One worker's per-model batchers, reachable by the whole fleet.
+struct Shard {
+    queues: Mutex<ShardQueues>,
+    /// Requests queued across this shard's batchers — the backlog index
+    /// peers consult lock-free when picking a steal victim. Incremented
+    /// under the admission-queue lock on pull (so a drained admission
+    /// queue plus all-zero backlog indexes really means "nothing left to
+    /// serve"), decremented under the shard lock on drain.
+    backlog: AtomicUsize,
+}
+
+/// The lockable interior of a [`Shard`]: per-model batchers plus the
+/// deficit-round-robin state of the owning worker.
+struct ShardQueues {
+    batchers: Vec<Batcher<GwRequest>>,
+    /// Per-model DRR credit, in rows. Earned `weight` per round while
+    /// the model has a due batch; spent on dispatch (cost = rows
+    /// served); reset when the model's batcher empties.
+    deficit: Vec<u64>,
+    /// Round-robin scan start (one past the last dispatched model).
+    cursor: usize,
+}
+
+impl ShardQueues {
+    fn new(n_models: usize, policy: BatchPolicy) -> Self {
+        Self {
+            batchers: (0..n_models).map(|_| Batcher::new(policy)).collect(),
+            deficit: vec![0; n_models],
+            cursor: 0,
+        }
+    }
+
+    /// Is model `i`'s batcher due for dispatch? (`flush` = shutdown
+    /// drain: everything nonempty is due.)
+    fn due(&self, i: usize, flush: bool) -> bool {
+        let b = &self.batchers[i];
+        !b.is_empty() && (b.ready() || flush)
+    }
+
+    /// Weighted deficit-round-robin pick: scan due batchers from the
+    /// cursor, crediting each `weight` rows per round, and dispatch the
+    /// first whose accumulated deficit covers its batch cost (rows).
+    /// A tenant passed over keeps its credit, so a starved high-weight
+    /// tenant overtakes a saturated low-weight one within a few rounds;
+    /// a lone due tenant is always dispatched (work conservation).
+    /// Returns the picked model with its deficit already charged.
+    fn next_drr(&mut self, weights: &[u32], max_batch: usize, flush: bool) -> Option<usize> {
+        let n = self.batchers.len();
+        // Each round adds >= 1 row of credit to every due batcher and a
+        // batch costs at most max_batch rows, so max_batch rounds always
+        // suffice to dispatch *something* when anything is due.
+        for _round in 0..=max_batch {
+            let mut any_due = false;
+            for k in 0..n {
+                let i = (self.cursor + k) % n;
+                if self.batchers[i].is_empty() {
+                    // classic DRR: an emptied queue forfeits its credit
+                    self.deficit[i] = 0;
+                    continue;
+                }
+                if !self.due(i, flush) {
+                    continue; // still coalescing; keeps its credit
+                }
+                any_due = true;
+                self.deficit[i] += weights[i] as u64;
+                let cost = self.batchers[i].len().min(max_batch) as u64;
+                if self.deficit[i] >= cost {
+                    self.deficit[i] -= cost;
+                    self.cursor = (i + 1) % n;
+                    return Some(i);
+                }
+            }
+            if !any_due {
+                return None;
+            }
+        }
+        None
+    }
+
+    /// The fixed-dispatch pick: lowest model index that is due,
+    /// weight-blind (the pre-fair baseline).
+    fn next_fixed(&self, flush: bool) -> Option<usize> {
+        (0..self.batchers.len()).find(|&i| self.due(i, flush))
+    }
+
+    /// Smallest time-to-due across nonempty batchers (`None` when the
+    /// shard is empty) — the owning worker's wait bound.
+    fn soonest_due(&self) -> Option<Duration> {
+        self.batchers
+            .iter()
+            .filter(|b| !b.is_empty())
+            .map(Batcher::time_left)
+            .min()
+    }
 }
 
 /// A pending response. Dropping it abandons the answer (the gateway
 /// still serves and counts the request).
 pub struct Ticket {
     rx: Receiver<Result<Response, ServeError>>,
+    /// When the request was submitted (admission-queue entry time).
     pub submitted: Instant,
 }
 
@@ -405,6 +594,33 @@ impl Ticket {
 /// Cloneable, typed client handle for one registered model. All
 /// submissions go through the gateway's shared admission queue but are
 /// validated against — and routed to — this model only.
+///
+/// # Examples
+///
+/// ```
+/// use kan_sas::coordinator::{GatewayBuilder, GatewayConfig};
+/// use kan_sas::kan::{Engine, QuantizedModel};
+///
+/// let mut builder = GatewayBuilder::with_config(GatewayConfig {
+///     replicas: 1,
+///     ..Default::default()
+/// });
+/// let id = builder.register(
+///     "demo",
+///     Engine::new(QuantizedModel::synthetic("demo", &[4, 6, 3], 5, 3, 9)),
+/// );
+/// let gateway = builder.start();
+///
+/// let handle = gateway.handle(id);
+/// assert_eq!((handle.name(), handle.in_dim(), handle.out_dim()), ("demo", 4, 3));
+/// // blocking convenience over submit + Ticket::wait
+/// let response = handle.infer_q(vec![10, 20, 30, 40])?;
+/// assert_eq!(response.t.len(), 3);
+/// // a wrong-width row is rejected before admission
+/// assert!(handle.infer_q(vec![1, 2]).is_err());
+/// gateway.shutdown();
+/// # Ok::<(), kan_sas::coordinator::ServeError>(())
+/// ```
 #[derive(Clone)]
 pub struct ModelHandle {
     shared: Arc<Shared>,
@@ -415,6 +631,7 @@ pub struct ModelHandle {
 }
 
 impl ModelHandle {
+    /// The id this model was registered as.
     pub fn model_id(&self) -> ModelId {
         self.model
     }
@@ -424,16 +641,19 @@ impl ModelHandle {
         &self.name
     }
 
+    /// Input row width (quantized activations).
     pub fn in_dim(&self) -> usize {
         self.in_dim
     }
 
+    /// Output row width (final-layer accumulators).
     pub fn out_dim(&self) -> usize {
         self.out_dim
     }
 
-    /// Requests currently waiting for a worker (all models — the
-    /// admission queue is shared).
+    /// Requests currently waiting in the shared admission queue (all
+    /// models; requests already pulled into a worker's batcher shard are
+    /// not counted).
     pub fn queue_depth(&self) -> usize {
         self.shared.state.lock().unwrap().items.len()
     }
@@ -550,7 +770,12 @@ impl ModelHandle {
 /// cycles), and buffer-pool health.
 #[derive(Clone, Debug, Default)]
 pub struct ModelStats {
+    /// The name the model was registered under.
     pub name: String,
+    /// The model's service weight (deficit-round-robin quantum; 1 for
+    /// [`GatewayBuilder::register`], explicit for
+    /// [`GatewayBuilder::register_weighted`]).
+    pub weight: u32,
     /// Valid submissions counted by admission control.
     pub submitted: u64,
     /// Requests answered with logits.
@@ -605,24 +830,59 @@ pub struct GatewayStats {
     pub peak_depth: usize,
     /// Queue depth at snapshot time.
     pub queue_depth: usize,
+    /// Worker fleet size.
     pub replicas: usize,
 }
 
 impl GatewayStats {
+    /// Total valid submissions across all models.
     pub fn submitted(&self) -> u64 {
         self.per_model.iter().map(|m| m.submitted).sum()
     }
 
+    /// Total requests answered with logits.
     pub fn completed(&self) -> u64 {
         self.per_model.iter().map(|m| m.completed).sum()
     }
 
+    /// Total requests shed (admission rejection, eviction, or deadline
+    /// expiry).
     pub fn shed(&self) -> u64 {
         self.per_model.iter().map(|m| m.shed).sum()
     }
 
+    /// Total requests answered with an inference error.
     pub fn failed(&self) -> u64 {
         self.per_model.iter().map(|m| m.failed).sum()
+    }
+
+    /// Batches served via work stealing, across all models and
+    /// replicas (0 under [`Dispatch::Fixed`]).
+    pub fn stolen_batches(&self) -> u64 {
+        self.per_model.iter().map(|m| m.metrics.stolen_batches).sum()
+    }
+
+    /// Jain's fairness index over weight-normalized served rows
+    /// (`rows / weight` per model with any submissions): 1.0 means every
+    /// tenant got service in proportion to its weight, `1/n` means one
+    /// tenant monopolized the fleet.
+    ///
+    /// This is a *service-share* index: it is meaningful when tenants
+    /// are contending (backlogged), where shares are the scheduler's
+    /// doing. Below saturation — or when a tenant's offered load is
+    /// under its weighted share — served rows simply mirror the arrival
+    /// mix, so a skewed mix reads as a low index without any tenant
+    /// being starved. The dispatch experiments therefore report it
+    /// alongside the per-tenant p95 *queueing* delay
+    /// ([`Metrics::queue_latency`]), which is the direct starvation
+    /// metric and the one the acceptance criteria gate on.
+    pub fn fairness_index(&self) -> f64 {
+        jain_fairness(
+            self.per_model
+                .iter()
+                .filter(|m| m.submitted > 0)
+                .map(|m| m.metrics.batch_rows as f64 / m.weight.max(1) as f64),
+        )
     }
 
     /// True when every model's counters balance.
@@ -631,10 +891,45 @@ impl GatewayStats {
     }
 }
 
-/// Registers models, then [`GatewayBuilder::start`]s the fleet.
+/// Registers models (each with a service weight), then
+/// [`GatewayBuilder::start`]s the fleet.
+///
+/// # Examples
+///
+/// Two tenants over one fleet, the minority tenant weighted 4x so a
+/// majority-tenant burst cannot starve it:
+///
+/// ```
+/// use kan_sas::coordinator::{GatewayBuilder, GatewayConfig};
+/// use kan_sas::kan::{Engine, QuantizedModel};
+///
+/// let mut builder = GatewayBuilder::with_config(GatewayConfig {
+///     replicas: 1,
+///     ..Default::default()
+/// });
+/// let mnist = builder.register(
+///     "mnist",
+///     Engine::new(QuantizedModel::synthetic("mnist", &[8, 12, 10], 5, 3, 1)),
+/// );
+/// let har = builder.register_weighted(
+///     "har",
+///     Engine::new(QuantizedModel::synthetic("har", &[6, 8, 4], 5, 3, 2)),
+///     4,
+/// );
+/// let gateway = builder.start();
+///
+/// let response = gateway.handle(har).infer_q(vec![0, 50, 100, 150, 200, 250])?;
+/// assert_eq!(response.t.len(), 4);
+/// let _ = gateway.handle(mnist).infer_q(vec![7; 8])?;
+///
+/// let stats = gateway.shutdown();
+/// assert!(stats.conserved());
+/// assert_eq!(stats.per_model[har.index()].weight, 4);
+/// # Ok::<(), kan_sas::coordinator::ServeError>(())
+/// ```
 pub struct GatewayBuilder {
     cfg: GatewayConfig,
-    models: Vec<(String, Engine)>,
+    models: Vec<(String, Engine, u32)>,
 }
 
 impl Default for GatewayBuilder {
@@ -644,23 +939,37 @@ impl Default for GatewayBuilder {
 }
 
 impl GatewayBuilder {
+    /// A builder over the default [`GatewayConfig`].
     pub fn new() -> Self {
         Self { cfg: GatewayConfig::default(), models: Vec::new() }
     }
 
+    /// A builder over an explicit [`GatewayConfig`].
     pub fn with_config(cfg: GatewayConfig) -> Self {
         Self { cfg, models: Vec::new() }
     }
 
-    /// Register a model under `name`. The returned [`ModelId`] indexes
-    /// [`GatewayStats::per_model`] and resolves to a [`ModelHandle`]
-    /// once the gateway starts. Names must be unique.
+    /// Register a model under `name` with service weight 1. The returned
+    /// [`ModelId`] indexes [`GatewayStats::per_model`] and resolves to a
+    /// [`ModelHandle`] once the gateway starts. Names must be unique.
     pub fn register(&mut self, name: &str, engine: Engine) -> ModelId {
+        self.register_weighted(name, engine, 1)
+    }
+
+    /// Register a model under `name` with an explicit service `weight`
+    /// (>= 1). Under [`Dispatch::FairSteal`] contention, tenants are
+    /// served rows in proportion to their weights: a weight-4 tenant
+    /// saturating the fleet alongside a weight-1 tenant gets ~4x the
+    /// rows, and a *starved* high-weight tenant's backlog is dispatched
+    /// before a saturated low-weight one's. Weights are ignored by
+    /// [`Dispatch::Fixed`].
+    pub fn register_weighted(&mut self, name: &str, engine: Engine, weight: u32) -> ModelId {
+        assert!(weight >= 1, "model '{name}' needs weight >= 1 (got {weight})");
         assert!(
-            self.models.iter().all(|(n, _)| n != name),
+            self.models.iter().all(|(n, _, _)| n != name),
             "model '{name}' registered twice"
         );
-        self.models.push((name.to_string(), engine));
+        self.models.push((name.to_string(), engine, weight));
         ModelId(self.models.len() - 1)
     }
 
@@ -684,22 +993,29 @@ pub struct Gateway {
 }
 
 impl Gateway {
+    /// A [`GatewayBuilder`] over the default config.
     pub fn builder() -> GatewayBuilder {
         GatewayBuilder::new()
     }
 
-    fn start(cfg: GatewayConfig, models: Vec<(String, Engine)>) -> Self {
+    fn start(cfg: GatewayConfig, models: Vec<(String, Engine, u32)>) -> Self {
         assert!(cfg.replicas >= 1, "gateway needs at least one replica");
         assert!(cfg.queue_cap >= 1, "admission queue needs capacity");
         assert!(!models.is_empty(), "gateway needs at least one registered model");
         let n_models = models.len();
         let buffers: Vec<Arc<BufferPool>> = models
             .iter()
-            .map(|(_, e)| {
+            .map(|(_, e, _)| {
                 // retain enough for a full queue of this model plus every
                 // replica's in-flight batch
                 let retain = cfg.queue_cap + cfg.replicas * cfg.policy.max_batch;
                 Arc::new(BufferPool::new(e.out_dim(), retain))
+            })
+            .collect();
+        let shards = (0..cfg.replicas)
+            .map(|_| Shard {
+                queues: Mutex::new(ShardQueues::new(n_models, cfg.policy)),
+                backlog: AtomicUsize::new(0),
             })
             .collect();
         let shared = Arc::new(Shared {
@@ -714,8 +1030,11 @@ impl Gateway {
             space: Condvar::new(),
             cap: cfg.queue_cap,
             shed_policy: cfg.shed,
+            dispatch: cfg.dispatch,
+            weights: models.iter().map(|(_, _, w)| *w).collect(),
             counters: (0..n_models).map(|_| ModelCounters::default()).collect(),
             buffers,
+            shards,
         });
         let mut workers = Vec::with_capacity(cfg.replicas);
         let mut per_worker = Vec::with_capacity(cfg.replicas);
@@ -724,20 +1043,20 @@ impl Gateway {
                 (0..n_models).map(|_| Arc::new(Mutex::new(Metrics::default()))).collect();
             per_worker.push(cells.clone());
             // replica set: clones alias weights + compiled plans, ~1x memory
-            let engines: Vec<Engine> = models.iter().map(|(_, e)| e.clone()).collect();
+            let engines: Vec<Engine> = models.iter().map(|(_, e, _)| e.clone()).collect();
             let shared_w = Arc::clone(&shared);
             let policy = cfg.policy;
             let sim_array = cfg.sim_array;
             let w = std::thread::Builder::new()
                 .name(format!("kansas-gw-{i}"))
-                .spawn(move || worker_loop(engines, policy, sim_array, shared_w, cells))
+                .spawn(move || worker_loop(i, engines, policy, sim_array, shared_w, cells))
                 .expect("spawn gateway worker");
             workers.push(w);
         }
         let handles = models
             .iter()
             .enumerate()
-            .map(|(m, (name, e))| ModelHandle {
+            .map(|(m, (name, e, _))| ModelHandle {
                 shared: Arc::clone(&shared),
                 model: ModelId(m),
                 name: Arc::from(name.as_str()),
@@ -815,6 +1134,7 @@ impl Gateway {
                 let (created, recycled, _) = self.shared.buffers[m].counts();
                 ModelStats {
                     name: self.handles[m].name.to_string(),
+                    weight: self.shared.weights[m],
                     submitted: st.submitted[m],
                     completed: c.completed.load(Ordering::Relaxed),
                     // expired requests are shed too: they were answered
@@ -839,22 +1159,27 @@ impl Gateway {
     }
 }
 
-/// One fleet worker: replicas of every model, per-model batchers, one
-/// scratch arena sized to the widest model, two reusable batch Vecs.
+/// One fleet worker: replicas of every model, a fleet-visible shard of
+/// per-model batchers, one scratch arena sized to the widest model, two
+/// reusable batch Vecs. Each turn of the loop: pull admissions into the
+/// own shard, dispatch ONE batch (own shard by the configured
+/// [`Dispatch`] policy, else steal a due batch from the most backlogged
+/// peer), serve it, repeat. The worker sleeps only when nothing is due
+/// anywhere it can reach, and exits only when the gateway is closed and
+/// fully drained.
 fn worker_loop(
+    me: usize,
     engines: Vec<Engine>,
     policy: BatchPolicy,
     sim_array: ArrayConfig,
     shared: Arc<Shared>,
     metrics: Vec<MetricsCell>,
 ) {
-    let n_models = engines.len();
-    let mut batchers: Vec<Batcher<GwRequest>> =
-        (0..n_models).map(|_| Batcher::new(policy)).collect();
     // Worker-owned execution state, allocated once per replica: one
     // scratch arena grown to fit every registered model's plan at the
     // peak batch size, plus the two batch Vecs every dispatch reuses
-    // (drained batch, then deadline-surviving subset).
+    // (drained batch, then deadline-surviving subset). Batchers live in
+    // the fleet-shared shard, not here — peers steal out of them.
     let mut scratch = Scratch::new();
     for e in &engines {
         scratch.fit(e.plan(), policy.max_batch);
@@ -862,64 +1187,46 @@ fn worker_loop(
     let mut batch: Vec<GwRequest> = Vec::with_capacity(policy.max_batch);
     let mut live: Vec<GwRequest> = Vec::with_capacity(policy.max_batch);
     loop {
-        // Phase 1: block until at least one request is admitted (or the
-        // gateway is closed and drained — the only exit).
+        // Phase 1: move admitted requests into this worker's shard.
+        let closed;
         {
             let mut st = shared.state.lock().unwrap();
-            loop {
-                let admitted = pull_into(&mut st, &mut batchers, policy.max_batch);
-                if batchers.iter().any(|b| !b.is_empty()) {
-                    drop(st);
-                    if admitted {
-                        shared.space.notify_all();
-                    }
-                    break;
-                }
-                if !st.open {
-                    return;
-                }
-                st = shared.nonempty.wait(st).unwrap();
-            }
-        }
-        // Phase 2: wait out the batching window for stragglers.
-        // Deadlines are anchored at admission time (push_arrived), so a
-        // request's shared-queue wait counts against max_wait. The wait
-        // is bounded by the *soonest* deadline across this worker's
-        // nonempty batchers.
-        while !batchers.iter().any(Batcher::ready) {
-            let mut st = shared.state.lock().unwrap();
-            if !st.open {
-                break; // flush immediately on shutdown
-            }
-            if st.items.is_empty() {
-                let wait = batchers
-                    .iter()
-                    .filter(|b| !b.is_empty())
-                    .map(Batcher::time_left)
-                    .min()
-                    .unwrap_or(Duration::ZERO);
-                if wait.is_zero() {
-                    break;
-                }
-                let (guard, _) = shared.nonempty.wait_timeout(st, wait).unwrap();
-                st = guard;
-            }
-            let admitted = pull_into(&mut st, &mut batchers, policy.max_batch);
+            closed = !st.open;
+            let admitted = pull_into(&mut st, &shared, me, policy.max_batch);
+            let more_queued = !st.items.is_empty();
             drop(st);
             if admitted {
                 shared.space.notify_all();
+                if more_queued {
+                    // this shard can't hold the remainder (those models'
+                    // batchers are full); wake a peer to pull it
+                    shared.nonempty.notify_one();
+                }
             }
         }
-        // Phase 3: serve every model whose batcher came due (on
-        // shutdown-flush, everything nonempty). Batches never mix
-        // models: each drain comes from one model's batcher and runs on
-        // that model's replica.
-        let closed = !shared.state.lock().unwrap().open;
-        for (m, batcher) in batchers.iter_mut().enumerate() {
-            if batcher.is_empty() || !(batcher.ready() || closed) {
-                continue;
+        // Phase 2: dispatch one batch — own shard first, then steal.
+        // Batches never mix models: each drain comes from one model's
+        // batcher and runs on that model's replica (every worker holds
+        // replicas of every model, so stolen batches serve anywhere).
+        let mut picked: Option<(usize, bool)> = None;
+        {
+            let shard = &shared.shards[me];
+            let mut q = shard.queues.lock().unwrap();
+            let pick = match shared.dispatch {
+                Dispatch::FairSteal => q.next_drr(&shared.weights, policy.max_batch, closed),
+                Dispatch::Fixed => q.next_fixed(closed),
+            };
+            if let Some(m) = pick {
+                let took = q.batchers[m].drain_into(&mut batch);
+                shard.backlog.fetch_sub(took, Ordering::Relaxed);
+                picked = Some((m, false));
             }
-            batcher.drain_into(&mut batch);
+        }
+        if picked.is_none() && shared.dispatch == Dispatch::FairSteal {
+            picked =
+                steal_batch(&shared, me, policy.max_batch, closed, &mut batch).map(|m| (m, true));
+        }
+        if let Some((m, stolen)) = picked {
             serve_batch(
                 &engines[m],
                 &sim_array,
@@ -929,30 +1236,193 @@ fn worker_loop(
                 &shared,
                 &shared.counters[m],
                 &metrics[m],
+                stolen,
             );
+            continue;
+        }
+        // Phase 3: nothing due anywhere. Exit when closed and fully
+        // drained; otherwise sleep, bounded by the soonest moment a
+        // batch this worker could serve comes due (its own shard's
+        // always, a backlogged peer's too when stealing is on) so
+        // straggler windows and steal opportunities are never overslept.
+        let st = shared.state.lock().unwrap();
+        if !st.items.is_empty() {
+            continue; // arrivals raced in between phases
+        }
+        if !st.open {
+            let drained = match shared.dispatch {
+                Dispatch::Fixed => shared.shards[me].backlog.load(Ordering::Relaxed) == 0,
+                Dispatch::FairSteal => {
+                    shared.shards.iter().all(|s| s.backlog.load(Ordering::Relaxed) == 0)
+                }
+            };
+            if drained {
+                return;
+            }
+            // a peer's shard still holds work this worker can steal on
+            // the next spin (its owner may be mid-serve); don't sleep on
+            // a condvar nobody will signal again
+            drop(st);
+            std::thread::yield_now();
+            continue;
+        }
+        match wait_hint(&shared, me) {
+            Some(d) if d.is_zero() => { /* something just came due; spin again */ }
+            Some(d) => {
+                let _ = shared.nonempty.wait_timeout(st, d).unwrap();
+            }
+            None => {
+                let _ = shared.nonempty.wait(st).unwrap();
+            }
         }
     }
 }
 
-/// Move queued requests into this worker's per-model batchers. Stops at
-/// the first request whose batcher is already full (that batcher is
-/// `ready()`, so it will be served before the queue head can starve).
-fn pull_into(
-    st: &mut GwState,
-    batchers: &mut [Batcher<GwRequest>],
-    max_batch: usize,
-) -> bool {
-    let mut admitted = false;
-    while let Some(front) = st.items.front() {
-        let b = &mut batchers[front.model.0];
-        if b.len() >= max_batch {
-            break;
+/// Move queued requests into worker `me`'s shard. [`Dispatch::Fixed`]
+/// preserves the pre-fair behaviour: strict FIFO that stops at the
+/// first request whose batcher is full, so a one-tenant burst
+/// head-of-line blocks every other tenant. [`Dispatch::FairSteal`]
+/// scans past such requests — a saturated tenant's overflow stays
+/// queued while other tenants' arrivals keep flowing (per-model FIFO
+/// order is preserved; only *other* models' requests are overtaken).
+/// Returns whether anything entered the shard. Runs under the
+/// admission-queue lock, and updates the shard's backlog index there
+/// too, so "queue empty + all backlogs zero" is an exact drained check.
+fn pull_into(st: &mut GwState, shared: &Shared, me: usize, max_batch: usize) -> bool {
+    let shard = &shared.shards[me];
+    let mut q = shard.queues.lock().unwrap();
+    let mut admitted = 0usize;
+    match shared.dispatch {
+        Dispatch::Fixed => {
+            while let Some(front) = st.items.front() {
+                let b = &mut q.batchers[front.model.0];
+                if b.len() >= max_batch {
+                    break;
+                }
+                let r = st.items.pop_front().expect("front just observed");
+                b.push_arrived(r.submitted, r);
+                admitted += 1;
+            }
         }
-        let r = st.items.pop_front().expect("front just observed");
-        b.push_arrived(r.submitted, r);
-        admitted = true;
+        Dispatch::FairSteal => {
+            // Read-only pre-scan: under a saturated burst the queue is
+            // mostly one tenant's overflow with no batcher room, and
+            // this runs under the hottest lock in the system — don't
+            // pay the rotation's writes unless something will admit.
+            let admissible = q.batchers.iter().any(|b| b.len() < max_batch)
+                && st.items.iter().any(|r| q.batchers[r.model.0].len() < max_batch);
+            if admissible {
+                // One O(n) rotation: route each request into its
+                // batcher if there's room, else re-queue it at the back
+                // — processing in order and appending in order
+                // preserves the queue's relative (per-model FIFO) order
+                // for the skipped remainder. The pass must run to
+                // completion: stopping mid-cycle would leave the queue
+                // rotated and break per-model FIFO.
+                let scan = st.items.len();
+                for _ in 0..scan {
+                    let r = st.items.pop_front().expect("count just observed");
+                    let b = &mut q.batchers[r.model.0];
+                    if b.len() >= max_batch {
+                        st.items.push_back(r);
+                    } else {
+                        b.push_arrived(r.submitted, r);
+                        admitted += 1;
+                    }
+                }
+            }
+        }
     }
-    admitted
+    if admitted > 0 {
+        shard.backlog.fetch_add(admitted, Ordering::Relaxed);
+    }
+    admitted > 0
+}
+
+/// Steal one due batch from a backlogged peer's shard, trying peers in
+/// descending-backlog order (the index reads are lock-free atomics;
+/// only probed shards are locked). A heavily backlogged peer whose
+/// batches are all still coalescing must not mask a lighter peer with a
+/// batch due *now* — the thief keeps probing until it finds due work or
+/// runs out of backlogged peers. Within the victim shard the longest
+/// due batcher is drained (up to one batch — the drain is splittable,
+/// so leftover items keep their arrival clocks). Returns the model
+/// stolen, or `None` when no peer has a due batch.
+fn steal_batch(
+    shared: &Shared,
+    me: usize,
+    max_batch: usize,
+    flush: bool,
+    batch: &mut Vec<GwRequest>,
+) -> Option<usize> {
+    // Victim preference order, allocation-free: the most backlogged
+    // peer first (atomic reads only), then every other backlogged peer
+    // in index order — a heavy peer whose batches are all still
+    // coalescing must not mask a lighter peer with a batch due now.
+    let heaviest = shared
+        .shards
+        .iter()
+        .enumerate()
+        .filter(|&(i, _)| i != me)
+        .map(|(i, s)| (i, s.backlog.load(Ordering::Relaxed)))
+        .filter(|&(_, backlog)| backlog > 0)
+        .max_by_key(|&(_, backlog)| backlog)
+        .map(|(i, _)| i)?;
+    if let Some(m) = try_steal_from(shared, heaviest, max_batch, flush, batch) {
+        return Some(m);
+    }
+    for (i, shard) in shared.shards.iter().enumerate() {
+        if i == me || i == heaviest || shard.backlog.load(Ordering::Relaxed) == 0 {
+            continue;
+        }
+        if let Some(m) = try_steal_from(shared, i, max_batch, flush, batch) {
+            return Some(m);
+        }
+    }
+    None
+}
+
+/// Probe one victim shard: drain its longest due batcher (up to one
+/// batch) into `batch`, or `None` when nothing in it is due.
+fn try_steal_from(
+    shared: &Shared,
+    victim: usize,
+    max_batch: usize,
+    flush: bool,
+    batch: &mut Vec<GwRequest>,
+) -> Option<usize> {
+    let shard = &shared.shards[victim];
+    let mut q = shard.queues.lock().unwrap();
+    let m = (0..q.batchers.len())
+        .filter(|&i| q.due(i, flush))
+        .max_by_key(|&i| q.batchers[i].len())?;
+    let took = q.batchers[m].drain_upto(batch, max_batch);
+    shard.backlog.fetch_sub(took, Ordering::Relaxed);
+    Some(m)
+}
+
+/// Upper bound on how long an idle worker may sleep: the soonest
+/// time-to-due across every batch it could serve — its own shard's
+/// batchers always, plus any backlogged peer's under
+/// [`Dispatch::FairSteal`] (it would steal those). `None` means nothing
+/// is queued anywhere reachable; sleep until an admission signal.
+fn wait_hint(shared: &Shared, me: usize) -> Option<Duration> {
+    let mut hint: Option<Duration> = None;
+    for (i, shard) in shared.shards.iter().enumerate() {
+        if i != me
+            && (shared.dispatch != Dispatch::FairSteal
+                || shard.backlog.load(Ordering::Relaxed) == 0)
+        {
+            continue;
+        }
+        if let Some(d) = shard.queues.lock().unwrap().soonest_due() {
+            hint = Some(match hint {
+                Some(h) => h.min(d),
+                None => d,
+            });
+        }
+    }
+    hint
 }
 
 /// Serve one single-model batch on this worker's replica of that model.
@@ -961,7 +1431,9 @@ fn pull_into(
 /// staging buffer and outputs scattered as slices into each request's
 /// pooled, pre-sized response buffer — the gather/forward/scatter core
 /// allocates nothing per request (the mpsc response send and latency
-/// recording still do).
+/// recording still do). `stolen` marks a batch taken from a peer's
+/// shard; it is recorded in the serving worker's metrics cell for the
+/// model, so steal traffic shows up per replica and per model.
 #[allow(clippy::too_many_arguments)]
 fn serve_batch(
     engine: &Engine,
@@ -972,6 +1444,7 @@ fn serve_batch(
     shared: &Shared,
     counters: &ModelCounters,
     metrics: &Mutex<Metrics>,
+    stolen: bool,
 ) {
     let in_dim = engine.in_dim();
     let out_dim = engine.out_dim();
@@ -1001,6 +1474,9 @@ fn serve_batch(
     let sim = engine.simulate_batch(sim_array, bs);
     let mut m = metrics.lock().unwrap();
     m.record_batch_sim(bs, &sim);
+    if stolen {
+        m.record_steal();
+    }
     match result {
         Ok(t) => {
             for (i, mut req) in live.drain(..).enumerate() {
@@ -1040,6 +1516,7 @@ mod tests {
             shed,
             policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
             sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
+            dispatch: Dispatch::FairSteal,
         });
         let ea = Engine::new(QuantizedModel::synthetic("a", &[4, 6, 3], 5, 3, 5));
         let eb = Engine::new(QuantizedModel::synthetic("b", &[6, 8, 5], 5, 3, 9));
@@ -1065,8 +1542,11 @@ mod tests {
             space: Condvar::new(),
             cap,
             shed_policy: shed,
+            dispatch: Dispatch::FairSteal,
+            weights: vec![1; n_models],
             counters: (0..n_models).map(|_| ModelCounters::default()).collect(),
             buffers: (0..n_models).map(|_| Arc::new(BufferPool::new(3, 16))).collect(),
+            shards: Vec::new(),
         });
         (0..n_models)
             .map(|m| ModelHandle {
@@ -1196,6 +1676,133 @@ mod tests {
     fn priority_orders() {
         assert!(Priority::Low < Priority::Normal && Priority::Normal < Priority::High);
         assert_eq!(Priority::default(), Priority::Normal);
+    }
+
+    /// A request shell for exercising the dispatch machinery without a
+    /// running fleet (the response channel's receiver is dropped, so
+    /// sends are harmless no-ops).
+    fn dummy_req(m: usize) -> GwRequest {
+        let (tx, _rx) = channel();
+        GwRequest {
+            model: ModelId(m),
+            x_q: Vec::new(),
+            out: Vec::new(),
+            submitted: Instant::now(),
+            deadline: None,
+            priority: Priority::Normal,
+            resp: tx,
+        }
+    }
+
+    #[test]
+    fn drr_dispatch_tracks_weights_under_saturation() {
+        // two tenants kept saturated (batchers refilled after every
+        // dispatch): rows served must track the 4:1 weights
+        let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10) };
+        let mut q = ShardQueues::new(2, policy);
+        let weights = [4u32, 1];
+        let backdated = Instant::now() - Duration::from_secs(60);
+        let mut rows = [0usize; 2];
+        let mut out = Vec::new();
+        for _ in 0..100 {
+            for m in 0..2 {
+                while q.batchers[m].len() < policy.max_batch {
+                    q.batchers[m].push_arrived(backdated, dummy_req(m));
+                }
+            }
+            let pick = q.next_drr(&weights, policy.max_batch, false).expect("both tenants due");
+            rows[pick] += q.batchers[pick].drain_into(&mut out);
+        }
+        assert_eq!(rows[0] + rows[1], 400, "every dispatch drains a full batch");
+        let ratio = rows[0] as f64 / rows[1] as f64;
+        assert!((3.0..=5.0).contains(&ratio), "rows {rows:?} — want ~4:1, got {ratio:.2}");
+    }
+
+    #[test]
+    fn drr_starved_high_weight_tenant_overtakes() {
+        // cursor parked past tenant 1; a lone due item of the
+        // high-weight tenant must still be dispatched before the
+        // saturated low-weight tenant
+        let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10) };
+        let mut q = ShardQueues::new(2, policy);
+        let weights = [1u32, 8];
+        let backdated = Instant::now() - Duration::from_secs(60);
+        for _ in 0..4 {
+            q.batchers[0].push_arrived(backdated, dummy_req(0));
+        }
+        q.batchers[1].push_arrived(backdated, dummy_req(1));
+        let pick = q.next_drr(&weights, policy.max_batch, false);
+        assert_eq!(pick, Some(1), "starved weight-8 tenant beats the saturated weight-1 one");
+    }
+
+    #[test]
+    fn drr_single_tenant_is_work_conserving() {
+        // a weight-1 tenant alone must be dispatched even though its
+        // batch cost exceeds one round's quantum (credit accrues over
+        // rounds within the pick)
+        let policy = BatchPolicy { max_batch: 32, max_wait: Duration::from_secs(10) };
+        let mut q = ShardQueues::new(3, policy);
+        let weights = [1u32, 1, 1];
+        let backdated = Instant::now() - Duration::from_secs(60);
+        for _ in 0..32 {
+            q.batchers[2].push_arrived(backdated, dummy_req(2));
+        }
+        assert_eq!(q.next_drr(&weights, policy.max_batch, false), Some(2));
+        let mut out = Vec::new();
+        q.batchers[2].drain_into(&mut out);
+        assert_eq!(q.next_drr(&weights, policy.max_batch, false), None, "nothing due");
+        // not-yet-due items are not dispatched without flush, but are on flush
+        q.batchers[0].push(dummy_req(0));
+        assert_eq!(q.next_drr(&weights, policy.max_batch, false), None);
+        assert_eq!(q.next_drr(&weights, policy.max_batch, true), Some(0));
+    }
+
+    #[test]
+    fn fixed_dispatch_still_serves_and_conserves() {
+        let mut b = GatewayBuilder::with_config(GatewayConfig {
+            replicas: 2,
+            queue_cap: 64,
+            shed: ShedPolicy::Block,
+            policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+            sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
+            dispatch: Dispatch::Fixed,
+        });
+        let ea = Engine::new(QuantizedModel::synthetic("a", &[4, 6, 3], 5, 3, 5));
+        let eb = Engine::new(QuantizedModel::synthetic("b", &[6, 8, 5], 5, 3, 9));
+        let a = b.register("alpha", ea);
+        let c = b.register("beta", eb);
+        let gw = b.start();
+        for i in 0..20u8 {
+            assert_eq!(gw.handle(a).infer_q(vec![i; 4]).unwrap().t.len(), 3);
+            assert_eq!(gw.handle(c).infer_q(vec![i; 6]).unwrap().t.len(), 5);
+        }
+        let stats = gw.shutdown();
+        assert!(stats.conserved());
+        assert_eq!(stats.completed(), 40);
+        assert_eq!(stats.stolen_batches(), 0, "fixed dispatch never steals");
+    }
+
+    #[test]
+    fn weights_surface_in_stats_and_fairness_index() {
+        let mut b = GatewayBuilder::with_config(GatewayConfig {
+            replicas: 1,
+            queue_cap: 16,
+            shed: ShedPolicy::Block,
+            policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+            sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
+            dispatch: Dispatch::FairSteal,
+        });
+        let ea = Engine::new(QuantizedModel::synthetic("a", &[4, 6, 3], 5, 3, 5));
+        let eb = Engine::new(QuantizedModel::synthetic("b", &[6, 8, 5], 5, 3, 9));
+        let a = b.register("alpha", ea);
+        let _ = b.register_weighted("beta", eb, 5);
+        let gw = b.start();
+        gw.handle(a).infer_q(vec![1, 2, 3, 4]).unwrap();
+        let stats = gw.shutdown();
+        assert_eq!(stats.per_model[0].weight, 1);
+        assert_eq!(stats.per_model[1].weight, 5);
+        // only alpha submitted, so the index covers alpha alone: fair
+        assert!((stats.fairness_index() - 1.0).abs() < 1e-9);
     }
 
     #[test]

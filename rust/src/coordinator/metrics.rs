@@ -1,6 +1,9 @@
-//! Request-level metrics: latency percentiles, throughput, and attached
-//! accelerator-simulation counters (one `Metrics` per pool replica;
-//! replicas merge into pool-level stats).
+//! Request-level metrics: latency percentiles (end-to-end and
+//! queueing-only), throughput, steal accounting, and attached
+//! accelerator-simulation counters. One `Metrics` cell exists per
+//! (replica, model); cells merge into per-model, per-replica, and
+//! gateway-level stats, and [`jain_fairness`] condenses per-model
+//! service into the fairness index the dispatch experiments track.
 
 use std::time::Duration;
 
@@ -11,6 +14,11 @@ use crate::sim::SimStats;
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
     latencies_us: Vec<u64>,
+    /// Per-request queueing samples (admission → batch serve start),
+    /// parallel to `latencies_us`; the fairness experiments read their
+    /// percentiles through [`Metrics::queue_latency`] because starvation
+    /// shows up in queue time, not service time.
+    queue_samples_us: Vec<u64>,
     /// Sum of per-request *queueing* microseconds (admission → batch
     /// serve start); with `service_us_sum` this splits the end-to-end
     /// latency so shed-policy experiments can separate waiting from
@@ -19,8 +27,15 @@ pub struct Metrics {
     /// Sum of per-request *service* microseconds (batch serve start →
     /// response sent).
     pub service_us_sum: u64,
+    /// Batches served.
     pub batches: u64,
+    /// Rows served across all batches.
     pub batch_rows: u64,
+    /// Of `batches`, how many this worker *stole* from a backlogged
+    /// peer's batcher shard instead of draining its own (always 0 under
+    /// fixed dispatch).
+    pub stolen_batches: u64,
+    /// Simulated accelerator cycles attached to the served batches.
     pub sim_cycles: u64,
     /// Lane-slot denominator of the simulated utilization (Figs. 7a/8).
     pub sim_active_slots: u64,
@@ -28,29 +43,80 @@ pub struct Metrics {
     pub sim_useful_macs: u64,
 }
 
+/// Summary of one latency distribution (exact percentiles over all
+/// recorded samples).
 #[derive(Clone, Copy, Debug)]
 pub struct LatencyStats {
+    /// Number of samples.
     pub count: usize,
+    /// Arithmetic mean, microseconds.
     pub mean_us: f64,
+    /// Median, microseconds.
     pub p50_us: u64,
+    /// 95th percentile, microseconds.
     pub p95_us: u64,
+    /// 99th percentile, microseconds.
     pub p99_us: u64,
+    /// Largest sample, microseconds.
     pub max_us: u64,
 }
 
+/// Exact percentile summary of a sample set; `None` when empty.
+fn stats_of(samples: &[u64]) -> Option<LatencyStats> {
+    if samples.is_empty() {
+        return None;
+    }
+    let mut v = samples.to_vec();
+    v.sort_unstable();
+    let pct = |p: f64| v[((v.len() as f64 * p) as usize).min(v.len() - 1)];
+    Some(LatencyStats {
+        count: v.len(),
+        mean_us: v.iter().sum::<u64>() as f64 / v.len() as f64,
+        p50_us: pct(0.50),
+        p95_us: pct(0.95),
+        p99_us: pct(0.99),
+        max_us: *v.last().unwrap(),
+    })
+}
+
+/// Jain's fairness index over per-tenant service shares:
+/// `(Σx)² / (n · Σx²)`. 1.0 means perfectly even shares; `1/n` means one
+/// tenant got everything. The gateway feeds it weight-normalized served
+/// rows, so a high-weight tenant consuming its larger share still scores
+/// 1.0. Degenerate inputs (empty, or all-zero shares) score 1.0 — an
+/// idle system starves nobody.
+pub fn jain_fairness<I: IntoIterator<Item = f64>>(xs: I) -> f64 {
+    let (mut n, mut sum, mut sum_sq) = (0usize, 0.0f64, 0.0f64);
+    for x in xs {
+        n += 1;
+        sum += x;
+        sum_sq += x * x;
+    }
+    if n == 0 || sum_sq == 0.0 {
+        return 1.0;
+    }
+    (sum * sum) / (n as f64 * sum_sq)
+}
+
 impl Metrics {
+    /// Record one answered request by its end-to-end latency (no
+    /// queue/service split — the split-aware path is
+    /// [`Metrics::record_request_split`]).
     pub fn record_request(&mut self, latency: Duration) {
         self.latencies_us.push(latency.as_micros() as u64);
     }
 
     /// Record one answered request with its latency split into queueing
     /// (admission → serve start) and service (serve start → response).
-    /// The percentile distribution tracks the end-to-end sum.
+    /// The end-to-end percentile distribution tracks the sum; the
+    /// queueing-only distribution is kept alongside for
+    /// [`Metrics::queue_latency`].
     pub fn record_request_split(&mut self, queue: Duration, service: Duration) {
         let q = queue.as_micros() as u64;
         let s = service.as_micros() as u64;
         self.queue_us_sum += q;
         self.service_us_sum += s;
+        self.queue_samples_us.push(q);
         self.latencies_us.push(q + s);
     }
 
@@ -70,6 +136,7 @@ impl Metrics {
         self.service_us_sum as f64 / self.latencies_us.len() as f64
     }
 
+    /// Record a served batch and its simulated cycle count.
     pub fn record_batch(&mut self, rows: usize, sim_cycles: u64) {
         self.batches += 1;
         self.batch_rows += rows as u64;
@@ -83,17 +150,29 @@ impl Metrics {
         self.sim_useful_macs += sim.useful_macs;
     }
 
+    /// Mark the most recently recorded batch as stolen from a peer's
+    /// shard (the thief records the batch in its *own* cell, so
+    /// per-replica stats show who did the stealing and per-model stats
+    /// show how much of a tenant's service arrived via steals).
+    pub fn record_steal(&mut self) {
+        self.stolen_batches += 1;
+    }
+
+    /// Fold another cell's counters and samples into this one.
     pub fn merge(&mut self, other: &Metrics) {
         self.latencies_us.extend_from_slice(&other.latencies_us);
+        self.queue_samples_us.extend_from_slice(&other.queue_samples_us);
         self.queue_us_sum += other.queue_us_sum;
         self.service_us_sum += other.service_us_sum;
         self.batches += other.batches;
         self.batch_rows += other.batch_rows;
+        self.stolen_batches += other.stolen_batches;
         self.sim_cycles += other.sim_cycles;
         self.sim_active_slots += other.sim_active_slots;
         self.sim_useful_macs += other.sim_useful_macs;
     }
 
+    /// Rows per served batch, averaged.
     pub fn mean_batch_size(&self) -> f64 {
         if self.batches == 0 {
             return 0.0;
@@ -110,21 +189,17 @@ impl Metrics {
         self.sim_useful_macs as f64 / self.sim_active_slots as f64
     }
 
+    /// End-to-end latency percentiles (`None` before any request).
     pub fn latency(&self) -> Option<LatencyStats> {
-        if self.latencies_us.is_empty() {
-            return None;
-        }
-        let mut v = self.latencies_us.clone();
-        v.sort_unstable();
-        let pct = |p: f64| v[((v.len() as f64 * p) as usize).min(v.len() - 1)];
-        Some(LatencyStats {
-            count: v.len(),
-            mean_us: v.iter().sum::<u64>() as f64 / v.len() as f64,
-            p50_us: pct(0.50),
-            p95_us: pct(0.95),
-            p99_us: pct(0.99),
-            max_us: *v.last().unwrap(),
-        })
+        stats_of(&self.latencies_us)
+    }
+
+    /// Queueing-delay percentiles (admission → batch serve start) over
+    /// split-recorded requests; `None` before any. This is the
+    /// starvation metric: a tenant stuck behind another tenant's burst
+    /// shows it here even when its service time is tiny.
+    pub fn queue_latency(&self) -> Option<LatencyStats> {
+        stats_of(&self.queue_samples_us)
     }
 }
 
@@ -148,6 +223,7 @@ mod tests {
     #[test]
     fn empty_latency_none() {
         assert!(Metrics::default().latency().is_none());
+        assert!(Metrics::default().queue_latency().is_none());
     }
 
     #[test]
@@ -159,14 +235,18 @@ mod tests {
         assert_eq!(m.service_us_sum, 40);
         assert!((m.mean_queue_us() - 40.0).abs() < 1e-9);
         assert!((m.mean_service_us() - 20.0).abs() < 1e-9);
-        // percentile stream sees the end-to-end sum
+        // percentile stream sees the end-to-end sum; the queue-only
+        // stream sees just the waiting component
         assert_eq!(m.latency().unwrap().max_us, 80);
+        assert_eq!(m.queue_latency().unwrap().max_us, 50);
+        assert_eq!(m.queue_latency().unwrap().p50_us, 50);
         let mut other = Metrics::default();
         other.record_request_split(Duration::from_micros(1), Duration::from_micros(2));
         m.merge(&other);
         assert_eq!(m.queue_us_sum, 81);
         assert_eq!(m.service_us_sum, 42);
         assert_eq!(m.latency().unwrap().count, 3);
+        assert_eq!(m.queue_latency().unwrap().count, 3);
         assert_eq!(Metrics::default().mean_queue_us(), 0.0);
     }
 
@@ -176,10 +256,12 @@ mod tests {
         a.record_batch(4, 100);
         let mut b = Metrics::default();
         b.record_batch(8, 200);
+        b.record_steal();
         b.record_request(Duration::from_micros(5));
         a.merge(&b);
         assert_eq!(a.batches, 2);
         assert_eq!(a.batch_rows, 12);
+        assert_eq!(a.stolen_batches, 1, "steal counts merge");
         assert_eq!(a.sim_cycles, 300);
         assert!((a.mean_batch_size() - 6.0).abs() < 1e-9);
         assert_eq!(a.latency().unwrap().count, 1);
@@ -197,5 +279,21 @@ mod tests {
         assert_eq!(a.sim_active_slots, 200);
         assert!((a.sim_utilization() - 0.5).abs() < 1e-12);
         assert_eq!(Metrics::default().sim_utilization(), 0.0);
+    }
+
+    #[test]
+    fn jain_index_shapes() {
+        // perfectly even shares
+        assert!((jain_fairness([3.0, 3.0, 3.0]) - 1.0).abs() < 1e-12);
+        // one tenant starved to zero among two -> 0.5
+        assert!((jain_fairness([10.0, 0.0]) - 0.5).abs() < 1e-12);
+        // one of n gets everything -> 1/n
+        assert!((jain_fairness([7.0, 0.0, 0.0, 0.0]) - 0.25).abs() < 1e-12);
+        // degenerate inputs read as fair
+        assert_eq!(jain_fairness([]), 1.0);
+        assert_eq!(jain_fairness([0.0, 0.0]), 1.0);
+        // mild skew lands strictly between 1/n and 1
+        let j = jain_fairness([4.0, 2.0]);
+        assert!(j > 0.5 && j < 1.0, "got {j}");
     }
 }

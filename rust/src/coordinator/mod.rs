@@ -1,4 +1,5 @@
-//! Serving coordinator: the L3 request path, now multi-tenant.
+//! Serving coordinator: the L3 request path — multi-tenant, weighted,
+//! and work-stealing.
 //!
 //! The front door is the [`gateway`]: one [`Gateway`] serves **many
 //! registered models over one replica fleet**, mirroring the paper's
@@ -8,11 +9,13 @@
 //! workload — CPU-bound batched inference — doesn't want an async
 //! reactor anyway):
 //!
-//! * models are registered on a [`GatewayBuilder`]
-//!   ([`GatewayBuilder::register`] → [`ModelId`]); clients hold a typed
-//!   [`ModelHandle`] and submit a [`Request`] (quantized or f32 row,
-//!   optional deadline, [`Priority`] class), receiving their logits
-//!   through a [`Ticket`] or the blocking `infer` conveniences;
+//! * models are registered on a [`GatewayBuilder`] with a **service
+//!   weight** ([`GatewayBuilder::register`] = weight 1,
+//!   [`GatewayBuilder::register_weighted`] for an explicit share);
+//!   clients hold a typed [`ModelHandle`] and submit a [`Request`]
+//!   (quantized or f32 row, optional deadline, [`Priority`] class),
+//!   receiving their logits through a [`Ticket`] or the blocking
+//!   `infer` conveniences;
 //! * admission is **one bounded queue shared by every model**, with
 //!   overload explicit: a full queue sheds per [`ShedPolicy`]
 //!   (`QueueFull` rejection, priority-ordered oldest-eviction, or
@@ -22,20 +25,35 @@
 //! * the worker fleet is shared too: each worker owns an `Arc`-aliased
 //!   replica of *every* registered model (~1x total model memory), one
 //!   [`Scratch`](crate::kan::Scratch) arena sized to the widest model,
-//!   and **per-model dynamic [`batcher`]s** — batches are never
-//!   mixed-model, and deadlines anchor at admission time so queue wait
-//!   counts against the batching window;
+//!   and a fleet-visible **shard of per-model dynamic [`batcher`]s** —
+//!   batches are never mixed-model, and deadlines anchor at admission
+//!   time so queue wait counts against the batching window;
+//! * dispatch is **weighted-fair with work stealing**
+//!   ([`Dispatch::FairSteal`], the default): workers pick the next batch
+//!   by deficit-round-robin over their shard (tenants earn credit by
+//!   weight, pay in rows served, so a starved high-weight tenant
+//!   overtakes a saturated low-weight one), queue pulls skip past
+//!   head-of-line requests whose batcher is full, and an idle worker
+//!   steals a due batch from the most-backlogged peer's shard instead
+//!   of sleeping ([`Dispatch::Fixed`] keeps the pre-fair baseline for
+//!   comparison);
 //! * response buffers are pooled per model ([`BufferPool`]): dropping a
 //!   [`Response`] recycles its pre-sized output `Vec`, so steady-state
 //!   submission pays no buffer allocation;
 //! * accounting is per model *and* per replica: [`GatewayStats`] holds a
 //!   [`ModelStats`] row per tenant (conservation per model:
-//!   `submitted == completed + shed + failed`) and merged [`Metrics`]
-//!   per worker, with request latency split into queueing vs service
-//!   time (`Response::queue_us` / `Response::service_us`);
+//!   `submitted == completed + shed + failed`, steal-proof — the
+//!   invariant never cares which worker served a batch) and merged
+//!   [`Metrics`] per worker, with request latency split into queueing vs
+//!   service time (`Response::queue_us` / `Response::service_us`),
+//!   per-model steal counts ([`Metrics::stolen_batches`]), and a Jain
+//!   fairness index over weight-normalized service
+//!   ([`GatewayStats::fairness_index`]);
 //! * [`pool`] keeps `Pool` as the 1-model special case (`PoolHandle` =
 //!   [`ModelHandle`], `PoolError` = [`ServeError`]) and [`server`] keeps
 //!   `Server` as the 1-model, 1-replica special case.
+
+#![warn(missing_docs)]
 
 pub mod batcher;
 pub mod gateway;
@@ -45,10 +63,10 @@ pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use gateway::{
-    BufferPool, Gateway, GatewayBuilder, GatewayConfig, GatewayStats, ModelHandle, ModelId,
-    ModelStats, Priority, Request, Response, ServeError, ShedPolicy, Ticket,
+    BufferPool, Dispatch, Gateway, GatewayBuilder, GatewayConfig, GatewayStats, ModelHandle,
+    ModelId, ModelStats, Priority, Request, Response, ServeError, ShedPolicy, Ticket,
 };
-pub use metrics::{LatencyStats, Metrics};
+pub use metrics::{jain_fairness, LatencyStats, Metrics};
 pub use pool::{
     default_replicas, default_replicas_capped, Pool, PoolConfig, PoolError, PoolHandle, PoolStats,
 };

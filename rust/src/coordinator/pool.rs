@@ -24,7 +24,7 @@ use crate::kan::Engine;
 use super::gateway::{Gateway, GatewayBuilder, GatewayStats, ModelHandle, ServeError};
 use super::metrics::Metrics;
 
-pub use super::gateway::{GatewayConfig as PoolConfig, Response, ShedPolicy, Ticket};
+pub use super::gateway::{Dispatch, GatewayConfig as PoolConfig, Response, ShedPolicy, Ticket};
 
 /// The unified serving error. Kept under its historical name for
 /// single-model callers; both spellings are the same type.
@@ -62,8 +62,12 @@ pub struct PoolStats {
     /// Per-replica metrics (rows served, batches, latency samples,
     /// simulated cycles/utilization) — the load-balance view.
     pub per_replica: Vec<Metrics>,
+    /// Valid submissions counted by admission control.
     pub submitted: u64,
+    /// Requests answered without inference (`QueueFull` or deadline
+    /// expiry).
     pub shed: u64,
+    /// Requests answered with logits.
     pub completed: u64,
     /// Requests answered with an inference error. Conservation:
     /// `submitted == completed + shed + failed` once drained.
@@ -72,6 +76,7 @@ pub struct PoolStats {
     pub peak_depth: usize,
     /// Queue depth at snapshot time.
     pub queue_depth: usize,
+    /// Worker fleet size.
     pub replicas: usize,
 }
 
@@ -102,12 +107,32 @@ impl PoolStats {
 
 /// A running single-model replica pool; [`Pool::shutdown`] drains and
 /// joins. Internally a one-tenant [`Gateway`].
+///
+/// # Examples
+///
+/// ```
+/// use kan_sas::coordinator::{Pool, PoolConfig};
+/// use kan_sas::kan::{Engine, QuantizedModel};
+///
+/// let engine = Engine::new(QuantizedModel::synthetic("demo", &[4, 6, 3], 5, 3, 11));
+/// let pool = Pool::start(engine, PoolConfig { replicas: 1, ..Default::default() });
+/// let handle = pool.handle();
+///
+/// let response = handle.infer(&[0.25, -0.5, 0.75, 0.1])?;
+/// let _class = response.prediction();
+///
+/// let stats = pool.shutdown();
+/// assert_eq!(stats.submitted, stats.completed + stats.shed + stats.failed);
+/// # Ok::<(), kan_sas::coordinator::PoolError>(())
+/// ```
 pub struct Pool {
     gateway: Gateway,
     handle: PoolHandle,
 }
 
 impl Pool {
+    /// Spawn a replica fleet serving `engine` (registered on an internal
+    /// one-tenant gateway under the model's own name).
     pub fn start(engine: Engine, cfg: PoolConfig) -> Self {
         let name = engine.model.name.clone();
         let mut builder = GatewayBuilder::with_config(cfg);
@@ -117,6 +142,7 @@ impl Pool {
         Self { gateway, handle }
     }
 
+    /// A cloneable client handle for the pool's single model.
     pub fn handle(&self) -> PoolHandle {
         self.handle.clone()
     }
@@ -151,6 +177,7 @@ mod tests {
                 shed,
                 policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
                 sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
+                dispatch: crate::coordinator::Dispatch::FairSteal,
             },
         )
     }

@@ -17,7 +17,7 @@ use crate::arch::ArrayConfig;
 use crate::kan::Engine;
 
 use super::batcher::BatchPolicy;
-use super::gateway::ServeError;
+use super::gateway::{Dispatch, ServeError};
 use super::metrics::Metrics;
 use super::pool::{Pool, PoolConfig, PoolHandle, ShedPolicy};
 
@@ -26,6 +26,7 @@ pub use super::gateway::Response;
 /// Server configuration.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
+    /// Dynamic batching policy for the single worker.
     pub policy: BatchPolicy,
     /// Accelerator config used to attach simulated cycle counts to each
     /// served batch (a scalar config is always compatible; vector configs
@@ -65,6 +66,7 @@ pub struct Server {
 }
 
 impl Server {
+    /// Spawn the single worker serving `engine`.
     pub fn start(engine: Engine, cfg: ServerConfig) -> Self {
         Self {
             pool: Pool::start(
@@ -78,15 +80,20 @@ impl Server {
                     shed: ShedPolicy::Block,
                     policy: cfg.policy,
                     sim_array: cfg.sim_array,
+                    // one worker has no peers to steal from; fair
+                    // dispatch degenerates to the plain batcher loop
+                    dispatch: Dispatch::FairSteal,
                 },
             ),
         }
     }
 
+    /// A cloneable client handle.
     pub fn handle(&self) -> Handle {
         Handle { inner: self.pool.handle() }
     }
 
+    /// Live snapshot of the worker's merged metrics.
     pub fn metrics(&self) -> Metrics {
         self.pool.stats().merged
     }

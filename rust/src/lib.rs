@@ -24,8 +24,9 @@
 //! gateway** ([`coordinator::gateway`]): one bounded admission queue and
 //! one worker fleet serving every registered model.
 //!
-//! * Models are registered on a [`coordinator::GatewayBuilder`] and
-//!   addressed through typed [`coordinator::ModelHandle`]s; a
+//! * Models are registered on a [`coordinator::GatewayBuilder`] — each
+//!   with a **service weight** (`register_weighted`) — and addressed
+//!   through typed [`coordinator::ModelHandle`]s; a
 //!   [`coordinator::Request`] carries the row (quantized or f32), an
 //!   optional deadline, and a [`coordinator::Priority`] class. Every
 //!   terminal outcome is one [`coordinator::ServeError`].
@@ -37,10 +38,19 @@
 //!   ([`coordinator::ShedPolicy`]): reject new arrivals with `QueueFull`,
 //!   evict the oldest lowest-priority request, or block for backpressure;
 //!   lapsed deadlines answer `DeadlineExceeded`.
-//! * Workers run **per-model dynamic [`coordinator::Batcher`]s** (size +
-//!   deadline policy, deadlines anchored at true arrival times) — batches
-//!   are never mixed-model — and attach simulated accelerator cycles to
-//!   every served batch.
+//! * Dispatch is **weighted-fair with work stealing**
+//!   ([`coordinator::Dispatch`]): per-model dynamic
+//!   [`coordinator::Batcher`]s (size + deadline policy, deadlines
+//!   anchored at true arrival times; batches never mix models) live in
+//!   fleet-visible per-worker shards. Workers pick the next batch by
+//!   deficit-round-robin — tenants earn credit in proportion to their
+//!   weight and pay in rows served, so one tenant's burst can't starve
+//!   another — queue pulls skip past head-of-line requests whose
+//!   batcher is full, and an idle worker *steals* a due batch from the
+//!   most backlogged peer instead of sleeping. Steal counts and a Jain
+//!   fairness index over weight-normalized service surface in
+//!   [`coordinator::GatewayStats`]; every served batch carries simulated
+//!   accelerator cycles.
 //! * Inference follows a **compile/execute split** ([`kan::plan`]): the
 //!   engine compiles an [`kan::ExecutionPlan`] once (resolved B-spline
 //!   units, i16-widened MAC tables, buffer sizing — what the accelerator
@@ -58,10 +68,14 @@
 //! `Pool` survives as the 1-model special case and `Server` as the
 //! 1-model/1-replica one. Offered load comes from [`loadgen`]: an
 //! open-loop Poisson generator with named scenario mixes (`steady`,
-//! `diurnal`, `flash-crowd`) and weighted multi-model mixes
-//! (`loadgen::run_mix` — Fig. 8's application mixes at the serving tier),
-//! so throughput/latency/shed-rate curves are measured, not anecdotal —
-//! see the `serving_scale` bench.
+//! `diurnal`, `flash-crowd`, and the fair-dispatch stress
+//! `skewed-burst`, which concentrates a burst on one tenant) and
+//! weighted multi-model mixes (`loadgen::run_mix` — Fig. 8's
+//! application mixes at the serving tier), so
+//! throughput/latency/shed-rate/fairness curves are measured, not
+//! anecdotal — see the `serving_scale` bench. A top-level
+//! `ARCHITECTURE.md` walks the whole crate map and the invariants each
+//! test file enforces.
 //!
 //! Python never runs on the request path: after `make artifacts` the `kansas`
 //! binary and all examples are self-contained. Without artifacts, synthetic

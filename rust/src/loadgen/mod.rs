@@ -15,7 +15,11 @@
 //! * `diurnal` — a sinusoid-shaped ramp between base and peak rate, the
 //!   slow capacity sweep;
 //! * `flash-crowd` — flat baseline with a sudden multi-x spike in the
-//!   middle, the admission-control stress test.
+//!   middle, the admission-control stress test;
+//! * `skewed-burst` — like flash-crowd, but the spike *concentrates on
+//!   one tenant* of a [`run_mix`] model mix (a [`Focus`] on the phase):
+//!   the fair-dispatch stress test, where one model's burst must not
+//!   starve the others.
 //!
 //! [`run`] drives a [`ModelHandle`] and returns a [`LoadReport`]
 //! (offered vs achieved rate, shed counts, latency percentiles).
@@ -32,11 +36,28 @@ use std::time::{Duration, Instant};
 use crate::coordinator::{LatencyStats, Metrics, ModelHandle, ServeError, Ticket};
 use crate::util::rng::Rng;
 
+/// Concentrate a fraction of a phase's arrivals on one tenant of a
+/// [`run_mix`] model mix (the rest draw from the other tenants by their
+/// mix weights). Ignored by single-model runs.
+#[derive(Clone, Copy, Debug)]
+pub struct Focus {
+    /// Index into the [`run_mix`] entries (clamped to the mix size).
+    pub entry: usize,
+    /// Fraction of arrivals routed to `entry`. Values outside
+    /// `0.0..=1.0` are clamped at use, so the drawn arrival stream and
+    /// the reported per-model `offered_rps` always agree.
+    pub share: f64,
+}
+
 /// One constant-rate segment of a scenario.
 #[derive(Clone, Debug)]
 pub struct Phase {
+    /// Offered Poisson arrival rate during this phase.
     pub rate_rps: f64,
+    /// Phase length.
     pub duration: Duration,
+    /// Optional one-tenant arrival concentration (skewed bursts).
+    pub focus: Option<Focus>,
 }
 
 /// A named piecewise-constant offered-load schedule.
@@ -47,8 +68,9 @@ pub struct Scenario {
 }
 
 impl Scenario {
+    /// One flat phase at `rate_rps` — the throughput/latency baseline.
     pub fn steady(rate_rps: f64, duration: Duration) -> Self {
-        Self { name: "steady".into(), phases: vec![Phase { rate_rps, duration }] }
+        Self { name: "steady".into(), phases: vec![Phase { rate_rps, duration, focus: None }] }
     }
 
     /// Diurnal ramp: a half-sine day between `base_rps` and `peak_rps`,
@@ -60,7 +82,11 @@ impl Scenario {
             .map(|i| {
                 let frac = (i as f64 + 0.5) / STEPS as f64;
                 let level = (std::f64::consts::PI * frac).sin();
-                Phase { rate_rps: base_rps + (peak_rps - base_rps) * level, duration: step }
+                Phase {
+                    rate_rps: base_rps + (peak_rps - base_rps) * level,
+                    duration: step,
+                    focus: None,
+                }
             })
             .collect();
         Self { name: "diurnal".into(), phases }
@@ -73,21 +99,55 @@ impl Scenario {
         Self {
             name: "flash-crowd".into(),
             phases: vec![
-                Phase { rate_rps: base_rps, duration: fifth * 2 },
-                Phase { rate_rps: base_rps * spike_mult, duration: fifth },
-                Phase { rate_rps: base_rps, duration: fifth * 2 },
+                Phase { rate_rps: base_rps, duration: fifth * 2, focus: None },
+                Phase { rate_rps: base_rps * spike_mult, duration: fifth, focus: None },
+                Phase { rate_rps: base_rps, duration: fifth * 2, focus: None },
+            ],
+        }
+    }
+
+    /// Skewed burst: a flash crowd whose spike *concentrates on one
+    /// tenant* — during the middle-fifth burst, `focus.share` of
+    /// arrivals go to mix entry `focus.entry` and only the remainder is
+    /// split over the other tenants. Baseline and recovery phases draw
+    /// by the mix weights as usual. This is the fair-dispatch stress
+    /// scenario: under fixed dispatch the focused tenant's burst
+    /// head-of-line blocks the minority tenants' queue entries, while
+    /// weighted DRR + stealing keeps serving them.
+    pub fn skewed_burst(
+        base_rps: f64,
+        spike_mult: f64,
+        duration: Duration,
+        focus: Focus,
+    ) -> Self {
+        let fifth = duration / 5;
+        Self {
+            name: "skewed-burst".into(),
+            phases: vec![
+                Phase { rate_rps: base_rps, duration: fifth * 2, focus: None },
+                Phase { rate_rps: base_rps * spike_mult, duration: fifth, focus: Some(focus) },
+                Phase { rate_rps: base_rps, duration: fifth * 2, focus: None },
             ],
         }
     }
 
     /// Named mixes for CLIs and benches. `rate_rps` is the headline rate:
-    /// steady runs flat at it, diurnal peaks at it (base = rate/4), and
-    /// flash-crowd spikes to 2x it (base = rate/2, 4x spike).
+    /// steady runs flat at it, diurnal peaks at it (base = rate/4),
+    /// flash-crowd spikes to 2x it (base = rate/2, 4x spike), and
+    /// skewed-burst does the same with ~10:1 of the burst concentrated
+    /// on the first mix entry.
     pub fn by_name(name: &str, rate_rps: f64, duration: Duration) -> Option<Self> {
         match name {
             "steady" => Some(Self::steady(rate_rps, duration)),
             "diurnal" => Some(Self::diurnal(rate_rps * 0.25, rate_rps, duration)),
             "flash-crowd" | "flash_crowd" => Some(Self::flash_crowd(rate_rps * 0.5, 4.0, duration)),
+            "skewed-burst" | "skewed_burst" => Some(Self::skewed_burst(
+                rate_rps * 0.5,
+                4.0,
+                duration,
+                // ~10:1 concentration on the first tenant during the burst
+                Focus { entry: 0, share: 10.0 / 11.0 },
+            )),
             _ => None,
         }
     }
@@ -202,12 +262,87 @@ pub struct MixReport {
     pub per_model: Vec<LoadReport>,
 }
 
+/// Probability that one arrival goes to mix entry `i`: the mix-weight
+/// split, skewed by an optional [`Focus`]. The single source of truth
+/// for the arrival distribution — [`draw_model`] samples it and
+/// [`expected_arrivals_per_entry`] integrates it, so the generated
+/// stream and the reported per-model `offered_rps` cannot diverge.
+fn entry_share(entries: &[MixEntry], total_weight: f64, focus: Option<&Focus>, i: usize) -> f64 {
+    let n = entries.len();
+    if let Some(f) = focus {
+        if n == 1 {
+            return 1.0;
+        }
+        let target = f.entry.min(n - 1);
+        let fshare = f.share.clamp(0.0, 1.0);
+        let rest = total_weight - entries[target].weight;
+        return if i == target {
+            // with no other weighted entries, the non-focused
+            // remainder falls back to the target too
+            if rest > 0.0 {
+                fshare
+            } else {
+                1.0
+            }
+        } else if rest > 0.0 {
+            (1.0 - fshare) * entries[i].weight / rest
+        } else {
+            0.0
+        };
+    }
+    entries[i].weight / total_weight
+}
+
+/// Weighted tenant draw for one arrival: samples the [`entry_share`]
+/// distribution (with probability `focus.share` the focused entry,
+/// otherwise the other tenants at their relative weights — a skewed
+/// burst still trickles background traffic to the minority models).
+fn draw_model(
+    rng: &mut Rng,
+    entries: &[MixEntry],
+    total_weight: f64,
+    focus: Option<&Focus>,
+) -> usize {
+    let n = entries.len();
+    let mut u = rng.next_f64();
+    for i in 0..n - 1 {
+        let s = entry_share(entries, total_weight, focus, i);
+        if u < s {
+            return i;
+        }
+        u -= s;
+    }
+    n - 1
+}
+
+/// Expected arrival count for each mix entry over the whole schedule:
+/// the per-phase [`entry_share`] integrated against the rate schedule
+/// (drives the per-model `offered_rps` in [`MixReport`]).
+fn expected_arrivals_per_entry(entries: &[MixEntry], scenario: &Scenario) -> Vec<f64> {
+    let n = entries.len();
+    let total_weight: f64 = entries.iter().map(|e| e.weight).sum();
+    (0..n)
+        .map(|i| {
+            scenario
+                .phases
+                .iter()
+                .map(|ph| {
+                    ph.rate_rps
+                        * ph.duration.as_secs_f64()
+                        * entry_share(entries, total_weight, ph.focus.as_ref(), i)
+                })
+                .sum()
+        })
+        .collect()
+}
+
 /// Drive a weighted mix of models — the paper's Fig. 8 application mixes
 /// at the serving tier — with one open-loop Poisson arrival process.
-/// Each arrival is assigned to a model by weighted draw, so every tenant
-/// sees Poisson traffic at its share of the offered rate; all models
-/// contend for the same gateway admission queue and worker fleet.
-/// Blocks until every in-flight ticket resolves.
+/// Each arrival is assigned to a model by weighted draw (optionally
+/// skewed toward one tenant during a [`Focus`]ed burst phase), so every
+/// tenant sees Poisson traffic at its share of the offered rate; all
+/// models contend for the same gateway admission queue and worker
+/// fleet. Blocks until every in-flight ticket resolves.
 pub fn run_mix(entries: &[MixEntry], scenario: &Scenario, seed: u64) -> MixReport {
     assert!(!entries.is_empty(), "mix needs at least one model");
     let total_weight: f64 = entries.iter().map(|e| e.weight).sum();
@@ -255,16 +390,9 @@ pub fn run_mix(entries: &[MixEntry], scenario: &Scenario, seed: u64) -> MixRepor
                     break;
                 }
                 sleep_until(cursor);
-                // weighted model draw, then that model's input shape
-                let mut pick = rng.next_f64() * total_weight;
-                let mut idx = n - 1;
-                for (i, e) in entries.iter().enumerate() {
-                    if pick < e.weight {
-                        idx = i;
-                        break;
-                    }
-                    pick -= e.weight;
-                }
+                // weighted (or focus-skewed) model draw, then that
+                // model's input shape
+                let idx = draw_model(&mut rng, entries, total_weight, ph.focus.as_ref());
                 let handle = &entries[idx].handle;
                 let x_q: Vec<u8> =
                     (0..handle.in_dim()).map(|_| rng.below(256) as u8).collect();
@@ -291,6 +419,8 @@ pub fn run_mix(entries: &[MixEntry], scenario: &Scenario, seed: u64) -> MixRepor
     let mut merged = Metrics::default();
     let mut per_model = Vec::with_capacity(n);
     let (mut t_sub, mut t_ok, mut t_shed, mut t_failed) = (0u64, 0u64, 0u64, 0u64);
+    let expected = expected_arrivals_per_entry(entries, scenario);
+    let sched_secs = scenario.total_duration().as_secs_f64();
     for (i, (m, ok, shed_in_flight, failed_in_flight)) in per.into_iter().enumerate() {
         let shed = shed_at_submit[i] + shed_in_flight;
         let failed = failed_at_submit[i] + failed_in_flight;
@@ -305,7 +435,7 @@ pub fn run_mix(entries: &[MixEntry], scenario: &Scenario, seed: u64) -> MixRepor
             shed,
             failed,
             wall,
-            offered_rps: scenario.offered_rps() * entries[i].weight / total_weight,
+            offered_rps: if sched_secs > 0.0 { expected[i] / sched_secs } else { 0.0 },
             achieved_rps: ok as f64 / wall.as_secs_f64(),
             latency: m.latency(),
         });
@@ -416,8 +546,52 @@ mod tests {
                 shed,
                 policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
                 sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
+                dispatch: crate::coordinator::Dispatch::FairSteal,
             },
         )
+    }
+
+    #[test]
+    fn skewed_burst_shape_and_draw() {
+        let total = Duration::from_millis(1000);
+        let s = Scenario::skewed_burst(50.0, 4.0, total, Focus { entry: 1, share: 0.9 });
+        assert_eq!(s.phases.len(), 3);
+        assert_eq!(s.total_duration(), total);
+        assert!(s.phases[0].focus.is_none() && s.phases[2].focus.is_none());
+        let f = s.phases[1].focus.expect("burst phase carries the focus");
+        assert_eq!(f.entry, 1);
+        assert!((s.phases[1].rate_rps - 200.0).abs() < 1e-9);
+        assert!(Scenario::by_name("skewed-burst", 10.0, total).is_some());
+
+        // the draw statistics follow the focus: ~90% on entry 1 during
+        // the burst, weight-proportional otherwise
+        let pool = tiny_pool(1, 8, ShedPolicy::RejectNew);
+        let entries = [
+            MixEntry { handle: pool.handle(), weight: 3.0 },
+            MixEntry { handle: pool.handle(), weight: 1.0 },
+        ];
+        let mut rng = Rng::new(7);
+        let mut hits = [0usize; 2];
+        for _ in 0..4000 {
+            hits[draw_model(&mut rng, &entries, 4.0, Some(&f))] += 1;
+        }
+        let share1 = hits[1] as f64 / 4000.0;
+        assert!((0.85..=0.95).contains(&share1), "focused share {share1}");
+        let mut hits = [0usize; 2];
+        for _ in 0..4000 {
+            hits[draw_model(&mut rng, &entries, 4.0, None)] += 1;
+        }
+        let share0 = hits[0] as f64 / 4000.0;
+        assert!((0.70..=0.80).contains(&share0), "weighted share {share0}");
+        pool.shutdown();
+
+        // expected per-entry arrivals integrate the focus over phases:
+        // baseline 50 rps x 0.8s split 3:1 by weight, burst 200 rps x
+        // 0.2s split 10%/90% by the focus
+        let exp = expected_arrivals_per_entry(&entries, &s);
+        assert!((exp[0] - (40.0 * 0.75 + 40.0 * 0.1)).abs() < 1e-9, "got {}", exp[0]);
+        assert!((exp[1] - (40.0 * 0.25 + 40.0 * 0.9)).abs() < 1e-9, "got {}", exp[1]);
+        assert!((exp[0] + exp[1] - s.expected_arrivals()).abs() < 1e-9);
     }
 
     #[test]
@@ -465,13 +639,14 @@ mod tests {
 
     #[test]
     fn mix_conserves_per_model_and_weights_traffic() {
-        use crate::coordinator::{GatewayBuilder, GatewayConfig};
+        use crate::coordinator::{Dispatch, GatewayBuilder, GatewayConfig};
         let mut b = GatewayBuilder::with_config(GatewayConfig {
             replicas: 2,
             queue_cap: 64,
             shed: ShedPolicy::RejectNew,
             policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
             sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
+            dispatch: Dispatch::FairSteal,
         });
         let eb = Engine::new(QuantizedModel::synthetic("big", &[4, 8, 3], 5, 3, 1));
         let es = Engine::new(QuantizedModel::synthetic("small", &[6, 4, 2], 5, 3, 2));

@@ -16,10 +16,12 @@
 //! ```
 //!
 //! `serve` runs the multi-tenant Gateway: every `--models` entry is
-//! registered on one shared worker fleet and admission queue, traffic is
-//! a weighted `--mix`, and the report breaks counters down per model and
-//! per replica (conservation: submitted == ok + shed + failed, per
-//! model).
+//! registered on one shared worker fleet and admission queue (with a
+//! per-model service `--weights` share), traffic is a weighted `--mix`,
+//! dispatch is weighted-fair with work stealing (`--dispatch fixed`
+//! keeps the pre-fair baseline), and the report breaks counters down
+//! per model and per replica (conservation: submitted == ok + shed +
+//! failed, per model) including steal counts and the fairness index.
 
 use std::path::PathBuf;
 use std::time::Duration;
@@ -27,7 +29,7 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use kan_sas::arch::{ArrayConfig, WeightLoad};
-use kan_sas::config::{parse_pe, parse_shed, RunConfig};
+use kan_sas::config::{parse_dispatch, parse_pe, parse_shed, RunConfig};
 use kan_sas::coordinator::{BatchPolicy, GatewayBuilder};
 use kan_sas::cost::array_area_mm2;
 use kan_sas::experiments;
@@ -111,25 +113,43 @@ fn print_help() {
          experiments:   table1 | table2 | fig7 [--csv DIR] | fig8 | arkane\n\
          validation:    accuracy [--model mnist_kan]\n\
          simulation:    simulate [--rows R --cols C --pe N:M|scalar --bs B --counted-loads]\n\
-         serving:       serve [--model NAME | --models SPEC,SPEC,...] [--mix W1,W2,...]\n\
+         serving:       serve [--model NAME | --models SPEC,SPEC,...]\n\
+                              [--mix W1,W2,...] [--weights W1,W2,...]\n\
+                              [--dispatch fair|fixed]\n\
                               [--synthetic --replicas R --max-replicas CAP --queue-cap Q\n\
                                --shed reject|drop-oldest|block --max-batch B\n\
                                --requests N --clients C\n\
-                               --scenario steady|diurnal|flash-crowd --rate RPS --duration-ms MS]\n\
+                               --scenario steady|diurnal|flash-crowd|skewed-burst\n\
+                               --rate RPS --duration-ms MS]\n\
          smoke:         quickstart\n\
          \n\
          serve runs the multi-tenant Gateway: one worker fleet + one bounded\n\
          admission queue serving every registered model, per-model batchers\n\
          (batches never mix models), per-model + per-replica accounting.\n\
          Each --models SPEC is a .kanq path (model name = file stem) or a\n\
-         synthetic spec name:DIMxDIMx..DIM (e.g. mnist:64x32x10); --mix\n\
-         weights the open-loop arrival split (default equal). One model\n\
-         defaults to closed-loop clients; several models (or --scenario)\n\
-         drive the open-loop Poisson generator. Replica autosizing clamps\n\
-         cores to 8; raise with --max-replicas or KANSAS_MAX_REPLICAS\n\
-         (explicit --replicas wins).\n\
+         synthetic spec name:DIMxDIMx..DIM (e.g. mnist:64x32x10).\n\
+         --mix weights the open-loop ARRIVAL split (default equal);\n\
+         --weights sets each model's SERVICE share (integers >= 1, default\n\
+         1) for the weighted fair scheduler: under contention, tenants are\n\
+         served rows in proportion to their weights, and an idle worker\n\
+         steals a ready batch from the most backlogged peer instead of\n\
+         sleeping. --dispatch fixed restores the pre-fair baseline (FIFO\n\
+         pulls, no weights, no stealing) for A/B comparison; the scenario\n\
+         skewed-burst concentrates a 4x burst on the FIRST model (~10:1)\n\
+         to stress exactly that difference.\n\
+         One model defaults to closed-loop clients; several models (or\n\
+         --scenario) drive the open-loop Poisson generator. Replica\n\
+         autosizing clamps cores to 8; raise with --max-replicas or\n\
+         KANSAS_MAX_REPLICAS (explicit --replicas wins).\n\
          --config FILE (json) applies to simulate/serve; artifacts are read\n\
-         from ./artifacts (override with KANSAS_ARTIFACTS)."
+         from ./artifacts (override with KANSAS_ARTIFACTS).\n\
+         \n\
+         example — two tenants, minority weighted 4x against a 10:1 skewed\n\
+         burst (fair dispatch keeps its p95 queue time flat; rerun with\n\
+         --dispatch fixed to watch it starve):\n\
+           kansas serve --models mnist:64x32x10,har:16x32x6 \\\n\
+                        --mix 10,1 --weights 1,4 \\\n\
+                        --scenario skewed-burst --rate 4000 --duration-ms 2000"
     );
 }
 
@@ -286,6 +306,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(s) = args.get("--shed") {
         cfg.shed = parse_shed(s)?;
     }
+    if let Some(s) = args.get("--dispatch") {
+        cfg.dispatch = parse_dispatch(s)?;
+    }
 
     // registered models: --models SPEC,SPEC,... or the single-model flags
     let specs: Vec<(String, Engine)> = if let Some(list) = args.get("--models") {
@@ -319,25 +342,54 @@ fn cmd_serve(args: &Args) -> Result<()> {
             if ws.len() != specs.len() {
                 bail!("--mix has {} weights for {} models", ws.len(), specs.len());
             }
+            if ws.iter().any(|w| !w.is_finite() || *w < 0.0) {
+                bail!("--mix weights must be finite and >= 0");
+            }
+            if ws.iter().sum::<f64>() <= 0.0 {
+                bail!("--mix needs a positive total weight");
+            }
             ws
         }
         None => vec![1.0; specs.len()],
     };
+    // --weights: per-model SERVICE shares for the fair scheduler
+    // (distinct from --mix, which splits the offered ARRIVALS)
+    let service_weights: Vec<u32> = match args.get("--weights") {
+        Some(w) => {
+            let ws: Vec<u32> = w
+                .split(',')
+                .map(|s| s.trim().parse().with_context(|| format!("bad --weights value '{s}'")))
+                .collect::<Result<_>>()?;
+            if ws.len() != specs.len() {
+                bail!("--weights has {} values for {} models", ws.len(), specs.len());
+            }
+            if ws.iter().any(|&w| w == 0) {
+                bail!("--weights values must be >= 1");
+            }
+            ws
+        }
+        None => vec![1; specs.len()],
+    };
 
     let total_kib: usize = specs.iter().map(|(_, e)| e.param_bytes()).sum::<usize>() / 1024;
-    let names: Vec<&str> = specs.iter().map(|(n, _)| n.as_str()).collect();
+    let names: Vec<String> = specs
+        .iter()
+        .zip(&service_weights)
+        .map(|((n, _), w)| format!("{n}(w{w})"))
+        .collect();
     println!(
-        "serve — {} replicas x [{}] (queue {} / {:?}), weights shared: {} KiB total",
+        "serve — {} replicas x [{}] (queue {} / {:?} / {:?}), weights shared: {} KiB total",
         cfg.replicas,
         names.join(", "),
         cfg.queue_cap,
         cfg.shed,
+        cfg.dispatch,
         total_kib
     );
     let replicas = cfg.replicas;
     let mut builder = GatewayBuilder::with_config(cfg);
-    for (name, engine) in specs {
-        builder.register(&name, engine);
+    for ((name, engine), &w) in specs.into_iter().zip(&service_weights) {
+        builder.register_weighted(&name, engine, w);
     }
     let gateway = builder.start();
     let handles = gateway.handles();
@@ -347,8 +399,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let name = args.get("--scenario").unwrap_or("steady");
         let rate: f64 = args.parsed("--rate", 2000.0)?;
         let dur_ms: u64 = args.parsed("--duration-ms", 2000)?;
-        let sc = Scenario::by_name(name, rate, Duration::from_millis(dur_ms))
-            .with_context(|| format!("unknown scenario '{name}' (steady|diurnal|flash-crowd)"))?;
+        let sc = Scenario::by_name(name, rate, Duration::from_millis(dur_ms)).with_context(|| {
+            format!("unknown scenario '{name}' (steady|diurnal|flash-crowd|skewed-burst)")
+        })?;
         let entries: Vec<MixEntry> = handles
             .iter()
             .zip(&weights)
@@ -396,31 +449,42 @@ fn cmd_serve(args: &Args) -> Result<()> {
         100.0 * stats.merged.sim_utilization()
     );
     let mut t = Table::new(&[
-        "model", "submitted", "ok", "shed", "failed", "rows", "p50 us", "p99 us", "conserved",
+        "model", "wt", "submitted", "ok", "shed", "failed", "rows", "stolen", "p50 us", "p99 us",
+        "q p95 us", "conserved",
     ])
     .with_title(format!("per-model accounting ({} tenants)", stats.per_model.len()).as_str());
     for m in &stats.per_model {
         let (p50, p99) = m.metrics.latency().map(|l| (l.p50_us, l.p99_us)).unwrap_or((0, 0));
+        let q95 = m.metrics.queue_latency().map(|l| l.p95_us).unwrap_or(0);
         t.row(vec![
             m.name.clone(),
+            m.weight.to_string(),
             m.submitted.to_string(),
             m.completed.to_string(),
             m.shed.to_string(),
             m.failed.to_string(),
             m.metrics.batch_rows.to_string(),
+            m.metrics.stolen_batches.to_string(),
             p50.to_string(),
             p99.to_string(),
+            q95.to_string(),
             if m.conserved() { "yes".into() } else { "NO".into() },
         ]);
     }
     print!("{}", t.render());
-    let mut t = Table::new(&["replica", "rows", "batches", "sim cycles", "sim util %"])
+    println!(
+        "fairness index (Jain, weight-normalized rows): {:.3}   stolen batches: {}",
+        stats.fairness_index(),
+        stats.stolen_batches()
+    );
+    let mut t = Table::new(&["replica", "rows", "batches", "stolen", "sim cycles", "sim util %"])
         .with_title(format!("per-replica load balance ({replicas} replicas)").as_str());
     for (i, m) in stats.per_replica.iter().enumerate() {
         t.row(vec![
             i.to_string(),
             m.batch_rows.to_string(),
             m.batches.to_string(),
+            m.stolen_batches.to_string(),
             m.sim_cycles.to_string(),
             format!("{:.1}", 100.0 * m.sim_utilization()),
         ]);

@@ -12,8 +12,8 @@ use std::time::Duration;
 use kan_sas::arch::ArrayConfig;
 use kan_sas::bspline::Lut;
 use kan_sas::coordinator::{
-    BatchPolicy, GatewayBuilder, GatewayConfig, Pool, PoolConfig, PoolError, Priority, Request,
-    Server, ServerConfig, ServeError, ShedPolicy,
+    BatchPolicy, Dispatch, GatewayBuilder, GatewayConfig, Pool, PoolConfig, PoolError, Priority,
+    Request, Server, ServerConfig, ServeError, ShedPolicy,
 };
 use kan_sas::kan::{Engine, LayerParams, QuantizedModel};
 use kan_sas::tensor::Tensor;
@@ -156,6 +156,7 @@ fn pool_config(replicas: usize, queue_cap: usize, shed: ShedPolicy) -> PoolConfi
         shed,
         policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
         sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
+        dispatch: Dispatch::FairSteal,
     }
 }
 
@@ -334,6 +335,7 @@ fn gateway_config(replicas: usize, queue_cap: usize, shed: ShedPolicy) -> Gatewa
         shed,
         policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
         sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
+        dispatch: Dispatch::FairSteal,
     }
 }
 
@@ -471,6 +473,7 @@ fn gateway_drop_oldest_prefers_low_priority_victims() {
         shed: ShedPolicy::DropOldest,
         policy: BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) },
         sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
+        dispatch: Dispatch::FairSteal,
     });
     // heavy enough that service can't keep pace with the submit burst,
     // so the queue genuinely overflows and evicts

@@ -14,7 +14,7 @@ use std::time::Duration;
 
 use kan_sas::arch::ArrayConfig;
 use kan_sas::coordinator::{
-    BatchPolicy, BufferPool, GatewayBuilder, GatewayConfig, ShedPolicy,
+    BatchPolicy, BufferPool, Dispatch, GatewayBuilder, GatewayConfig, ShedPolicy,
 };
 use kan_sas::kan::{Engine, QuantizedModel};
 use kan_sas::util::alloc_count::{self, CountingAllocator};
@@ -56,6 +56,7 @@ fn response_buffer_pooling_is_allocation_free_after_warmup() {
         shed: ShedPolicy::Block,
         policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
         sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
+        dispatch: Dispatch::FairSteal,
     });
     let id = builder.register(
         "alloc",
