@@ -18,7 +18,8 @@ use std::time::Duration;
 use anyhow::Result;
 use kan_sas::arch::ArrayConfig;
 use kan_sas::coordinator::{
-    BatchPolicy, Dispatch, GatewayBuilder, GatewayConfig, Pool, PoolConfig, ShedPolicy,
+    BatchPolicy, Dispatch, GatewayBuilder, GatewayConfig, Pool, PoolConfig, QuotaPolicy,
+    ShedPolicy,
 };
 use kan_sas::kan::{Engine, QuantizedModel};
 use kan_sas::loadgen::{self, MixEntry, Scenario};
@@ -31,6 +32,7 @@ fn pool_config(replicas: usize, shed: ShedPolicy) -> PoolConfig {
         policy: BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(1) },
         sim_array: ArrayConfig::kan_sas(16, 16, 4, 13),
         dispatch: Dispatch::FairSteal,
+        quota: QuotaPolicy::None,
     }
 }
 
@@ -89,6 +91,7 @@ fn main() -> Result<()> {
         policy: BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(1) },
         sim_array: ArrayConfig::kan_sas(16, 16, 4, 13),
         dispatch: Dispatch::FairSteal,
+        quota: QuotaPolicy::None,
     });
     let mnist = builder.register("mnist", engine.clone());
     let har = builder.register_weighted(

@@ -21,9 +21,16 @@
 //!    under `FairSteal` (minority tenant service-weighted 4x). Recorded
 //!    per dispatch: the minority tenant's p95 *queueing* delay (the
 //!    starvation metric), stolen-batch counts, and the Jain fairness
-//!    index over weight-normalized rows. The acceptance shape: fair
-//!    dispatch improves the minority p95 queue delay vs fixed and
-//!    steals > 0 batches under skew.
+//!    index over weight-normalized rows (raw + demand-normalized). The
+//!    acceptance shape: fair dispatch improves the minority p95 queue
+//!    delay vs fixed and steals > 0 batches under skew.
+//! 5. **Admission quotas under the same burst** — quota-off vs quota-on
+//!    (`QuotaPolicy::Weighted`, half the queue reserved by weight) on a
+//!    small RejectNew queue, so admission is the bottleneck. Recorded
+//!    per run: per-tenant shed rates, reserved slots, and the
+//!    demand-normalized fairness index. The acceptance shape: the
+//!    minority tenant's shed rate is lower with quotas on — reserved
+//!    slots keep its arrivals admissible through the majority burst.
 //!
 //! ```bash
 //! cargo bench --bench serving_scale
@@ -31,14 +38,17 @@
 //!
 //! Besides the printed tables, the run writes `BENCH_serving.json`
 //! (throughput per replica count, scenario shed rates, p50/p99 latency,
-//! multi-model mix rows, fairness rows) so the serving perf trajectory
-//! is tracked across PRs instead of anecdotal.
+//! multi-model mix rows, fairness rows, quota rows) so the serving perf
+//! trajectory is tracked across PRs instead of anecdotal. The file is
+//! rendered by the deterministic `util::json` writer and its validity
+//! is smoke-tested by `tests/bench_artifacts.rs`.
 
 use std::time::Duration;
 
 use kan_sas::arch::ArrayConfig;
 use kan_sas::coordinator::{
-    BatchPolicy, Dispatch, GatewayBuilder, GatewayConfig, Pool, PoolConfig, ShedPolicy,
+    BatchPolicy, Dispatch, GatewayBuilder, GatewayConfig, Pool, PoolConfig, QuotaPolicy,
+    ShedPolicy,
 };
 use kan_sas::kan::{Engine, QuantizedModel};
 use kan_sas::loadgen::{self, Focus, MixEntry, Scenario};
@@ -58,6 +68,7 @@ fn pool_config(replicas: usize, queue_cap: usize, shed: ShedPolicy) -> PoolConfi
         policy: BatchPolicy { max_batch: 32, max_wait: Duration::from_micros(500) },
         sim_array: ArrayConfig::kan_sas(16, 16, 4, 8),
         dispatch: Dispatch::FairSteal,
+        quota: QuotaPolicy::None,
     }
 }
 
@@ -171,6 +182,7 @@ fn main() {
                 policy: BatchPolicy { max_batch: 32, max_wait: Duration::from_micros(500) },
                 sim_array: ArrayConfig::kan_sas(16, 16, 4, 8),
                 dispatch: Dispatch::FairSteal,
+                quota: QuotaPolicy::None,
             });
             let a = b.register("mnist_mix", mnist_like.clone());
             let h = b.register("har_mix", har_like.clone());
@@ -256,6 +268,7 @@ fn main() {
             policy: BatchPolicy { max_batch: 16, max_wait: Duration::from_micros(500) },
             sim_array: ArrayConfig::kan_sas(16, 16, 4, 8),
             dispatch,
+            quota: QuotaPolicy::None,
         });
         let maj = b.register_weighted("majority", majority.clone(), w_major);
         let min = b.register_weighted("minority", minority.clone(), w_minor);
@@ -267,6 +280,7 @@ fn main() {
         let mix = loadgen::run_mix(&entries, &skew_sc, 23);
         let stats = gw.shutdown();
         let fairness = stats.fairness_index();
+        let fairness_norm = stats.fairness_index_normalized();
         let stolen = stats.stolen_batches();
         let mut per_model_json = Vec::new();
         for (rep, ms) in mix.per_model.iter().zip(&stats.per_model) {
@@ -303,7 +317,7 @@ fn main() {
             .map(|l| l.p95_us)
             .unwrap_or(0);
         println!(
-            "  {label:<10} fairness {fairness:.3}  stolen {stolen:>4}  minority p95 queue {minority_q95} us"
+            "  {label:<10} fairness {fairness:.3} (norm {fairness_norm:.3})  stolen {stolen:>4}  minority p95 queue {minority_q95} us"
         );
         fairness_json.push(Value::obj([
             ("dispatch", Value::str(label)),
@@ -312,6 +326,7 @@ fn main() {
             ("offered_rps", Value::num(mix.total.offered_rps)),
             ("achieved_rps", Value::num(mix.total.achieved_rps)),
             ("fairness_index", Value::num(fairness)),
+            ("fairness_normalized", Value::num(fairness_norm)),
             ("stolen_batches", Value::num(stolen as f64)),
             ("minority_p95_queue_us", Value::num(minority_q95 as f64)),
             ("per_model", Value::arr(per_model_json)),
@@ -320,6 +335,106 @@ fn main() {
     print!("{}", t.render());
     println!(
         "acceptance shape: fair-steal minority p95 queue < fixed, stolen_batches > 0 under skew"
+    );
+
+    // 5. per-tenant admission quotas under the same 10:1 skewed burst:
+    // quota-off vs quota-on SHED fairness. A small RejectNew queue makes
+    // admission (not dispatch) the bottleneck, so the majority burst
+    // fills the whole queue and sheds the minority's arrivals too —
+    // unless weighted reservations hold slots open for it. Acceptance
+    // shape: with quotas on, the minority tenant's shed rate drops.
+    let quota_replicas = cores.clamp(2, 4);
+    let qsat = rows_at.get(&quota_replicas).copied().unwrap_or(4000.0);
+    let quota_sc = Scenario::skewed_burst(
+        qsat * 0.7,
+        4.0,
+        Duration::from_millis(900),
+        Focus { entry: 0, share: 10.0 / 11.0 },
+    );
+    println!(
+        "\nadmission quotas under skewed burst ({quota_replicas} replicas, queue 128, RejectNew, minority weighted 4x):"
+    );
+    let mut t = Table::new(&[
+        "quota", "model", "wt", "rsvd", "offered", "shed %", "q p95 us", "norm fair", "conserved",
+    ])
+    .with_title("quota-off vs quota-on shed fairness (10:1 burst on the majority)");
+    let mut quota_json = Vec::new();
+    let mut minority_shed = [0.0f64; 2];
+    for (qi, (label, quota)) in
+        [("off", QuotaPolicy::None), ("on", QuotaPolicy::Weighted { reserve: 0.5 })]
+            .into_iter()
+            .enumerate()
+    {
+        let mut b = GatewayBuilder::with_config(GatewayConfig {
+            replicas: quota_replicas,
+            queue_cap: 128,
+            shed: ShedPolicy::RejectNew,
+            policy: BatchPolicy { max_batch: 16, max_wait: Duration::from_micros(500) },
+            sim_array: ArrayConfig::kan_sas(16, 16, 4, 8),
+            dispatch: Dispatch::FairSteal,
+            quota,
+        });
+        let maj = b.register_weighted("majority", majority.clone(), 1);
+        let min = b.register_weighted("minority", minority.clone(), 4);
+        let gw = b.start();
+        let entries = [
+            MixEntry { handle: gw.handle(maj), weight: 10.0 },
+            MixEntry { handle: gw.handle(min), weight: 1.0 },
+        ];
+        let mix = loadgen::run_mix(&entries, &quota_sc, 37);
+        let stats = gw.shutdown();
+        let norm = stats.fairness_index_normalized();
+        let mut per_model_json = Vec::new();
+        for (rep, ms) in mix.per_model.iter().zip(&stats.per_model) {
+            let q95 = ms.metrics.queue_latency().map(|l| l.p95_us).unwrap_or(0);
+            t.row(vec![
+                label.to_string(),
+                rep.scenario.clone(),
+                ms.weight.to_string(),
+                ms.reserved.to_string(),
+                format!("{:.0}", rep.offered_rps),
+                format!("{:.1}", 100.0 * rep.shed_rate()),
+                q95.to_string(),
+                format!("{norm:.3}"),
+                if ms.conserved() { "yes".into() } else { "NO".into() },
+            ]);
+            per_model_json.push(Value::obj([
+                ("model", Value::str(rep.scenario.clone())),
+                ("weight", Value::num(ms.weight as f64)),
+                ("reserved_slots", Value::num(ms.reserved as f64)),
+                ("offered_rps", Value::num(rep.offered_rps)),
+                ("ok", Value::num(rep.ok as f64)),
+                ("shed", Value::num(rep.shed as f64)),
+                ("shed_rate", Value::num(rep.shed_rate())),
+                ("p95_queue_us", Value::num(q95 as f64)),
+                ("conserved", Value::num(if ms.conserved() { 1.0 } else { 0.0 })),
+            ]));
+        }
+        minority_shed[qi] = mix.per_model[1].shed_rate();
+        println!(
+            "  quota {label:<4} minority shed {:.1}%  majority shed {:.1}%  norm fairness {norm:.3}",
+            100.0 * mix.per_model[1].shed_rate(),
+            100.0 * mix.per_model[0].shed_rate(),
+        );
+        quota_json.push(Value::obj([
+            ("quota", Value::str(label)),
+            ("replicas", Value::num(quota_replicas as f64)),
+            ("queue_cap", Value::num(128.0)),
+            ("scenario", Value::str(quota_sc.name.clone())),
+            ("offered_rps", Value::num(mix.total.offered_rps)),
+            ("achieved_rps", Value::num(mix.total.achieved_rps)),
+            ("fairness_normalized", Value::num(norm)),
+            ("minority_shed_rate", Value::num(mix.per_model[1].shed_rate())),
+            ("majority_shed_rate", Value::num(mix.per_model[0].shed_rate())),
+            ("registry_epoch", Value::num(stats.epoch as f64)),
+            ("per_model", Value::arr(per_model_json)),
+        ]));
+    }
+    print!("{}", t.render());
+    println!(
+        "acceptance shape: minority shed rate with quotas on ({:.1}%) < off ({:.1}%)",
+        100.0 * minority_shed[1],
+        100.0 * minority_shed[0]
     );
 
     let doc = Value::obj([
@@ -331,6 +446,7 @@ fn main() {
         ("open_loop", Value::arr(scenario_json)),
         ("multi_model", Value::arr(mix_json)),
         ("fairness", Value::arr(fairness_json)),
+        ("quota", Value::arr(quota_json)),
     ]);
     let out = "BENCH_serving.json";
     std::fs::write(out, doc.render() + "\n").expect("write bench artifact");

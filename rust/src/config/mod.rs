@@ -6,10 +6,21 @@
 //! {
 //!   "array": {"rows": 16, "cols": 16, "pe": "4:8", "weight_load": "amortized"},
 //!   "serve": {"max_batch": 32, "max_wait_ms": 2},
-//!   "pool": {"replicas": 4, "queue_cap": 1024, "shed": "reject"},
+//!   "pool": {"replicas": 4, "queue_cap": 1024, "shed": "reject", "quota": 0.5},
+//!   "admin": {"events": [
+//!     {"at_ms": 500, "add": "hot:16x32x6", "weight": 2},
+//!     {"at_ms": 1000, "set_weight": "hot", "weight": 6},
+//!     {"at_ms": 1500, "remove": "hot", "mode": "serve"}
+//!   ]},
 //!   "batch_size": 32
 //! }
 //! ```
+//!
+//! `pool.quota` enables weighted per-tenant admission quotas (`true` =
+//! reserve half the queue, or a fraction in `[0, 1]`). The `admin`
+//! stanza scripts registry churn for `kansas serve --scenario churn`:
+//! each event hot-adds (`add` takes a synthetic `name:DIMxDIM..` spec),
+//! re-weights, or removes a tenant on the live gateway at `at_ms`.
 
 use std::path::Path;
 use std::time::Duration;
@@ -17,7 +28,8 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use crate::arch::{ArrayConfig, PeKind, WeightLoad};
-use crate::coordinator::{BatchPolicy, Dispatch, PoolConfig, ShedPolicy};
+use crate::coordinator::{BatchPolicy, Dispatch, DrainMode, PoolConfig, QuotaPolicy, ShedPolicy};
+use crate::loadgen::{ChurnAction, ChurnEvent};
 use crate::util::json::Value;
 
 #[derive(Clone, Debug)]
@@ -35,6 +47,11 @@ pub struct RunConfig {
     /// Worker dispatch policy (weighted fair + stealing, or the fixed
     /// baseline).
     pub dispatch: Dispatch,
+    /// Per-tenant admission quotas over the shared queue.
+    pub quota: QuotaPolicy,
+    /// Scripted registry churn (the `admin` stanza), applied by
+    /// `kansas serve --scenario churn`.
+    pub admin_events: Vec<ChurnEvent>,
 }
 
 impl Default for RunConfig {
@@ -48,6 +65,8 @@ impl Default for RunConfig {
             queue_cap: pool.queue_cap,
             shed: pool.shed,
             dispatch: pool.dispatch,
+            quota: pool.quota,
+            admin_events: Vec::new(),
         }
     }
 }
@@ -70,6 +89,79 @@ pub fn parse_dispatch(s: &str) -> Result<Dispatch> {
         "fixed" => Ok(Dispatch::Fixed),
         other => bail!("dispatch policy '{other}' (want fair|fixed)"),
     }
+}
+
+/// Parse a quota setting: `true`/`false`, or a reserve fraction in
+/// `[0, 1]` (0 disables).
+pub fn parse_quota(v: &Value) -> Result<QuotaPolicy> {
+    if let Some(b) = v.as_bool() {
+        return Ok(if b { QuotaPolicy::weighted() } else { QuotaPolicy::None });
+    }
+    match v.as_f64() {
+        Some(f) if f == 0.0 => Ok(QuotaPolicy::None),
+        Some(f) if (0.0..=1.0).contains(&f) => Ok(QuotaPolicy::Weighted { reserve: f }),
+        _ => bail!("pool.quota must be true/false or a reserve fraction in [0, 1]"),
+    }
+}
+
+/// Parse a synthetic model spec `name:IN x HIDDEN x .. x OUT` (dims
+/// separated by `x`), as used by `--models` and the admin stanza's
+/// `add` events.
+pub fn parse_synth_spec(spec: &str) -> Result<(String, Vec<usize>)> {
+    let (name, dims) = spec
+        .split_once(':')
+        .with_context(|| format!("synthetic spec '{spec}' needs name:DIMxDIM form"))?;
+    let dims: Vec<usize> = dims
+        .split('x')
+        .map(|d| d.trim().parse().with_context(|| format!("bad dim '{d}' in '{spec}'")))
+        .collect::<Result<_>>()?;
+    if dims.len() < 2 {
+        bail!("synthetic spec '{spec}' needs at least IN x OUT dims");
+    }
+    Ok((name.to_string(), dims))
+}
+
+/// Parse one `admin.events` entry into a [`ChurnEvent`].
+fn parse_admin_event(e: &Value) -> Result<ChurnEvent> {
+    let at_ms = e
+        .get("at_ms")
+        .and_then(Value::as_f64)
+        .context("admin event needs an at_ms offset")?;
+    if !at_ms.is_finite() || at_ms < 0.0 {
+        bail!("admin event at_ms must be >= 0");
+    }
+    let at = Duration::from_micros((at_ms * 1000.0) as u64);
+    let action = if let Some(spec) = e.get("add").and_then(Value::as_str) {
+        let (name, dims) = parse_synth_spec(spec)?;
+        let weight = e.get("weight").and_then(Value::as_usize).unwrap_or(1) as u32;
+        if weight == 0 {
+            bail!("admin add '{name}' needs weight >= 1");
+        }
+        let mix_weight = e.get("mix").and_then(Value::as_f64).unwrap_or(1.0);
+        if !mix_weight.is_finite() || mix_weight <= 0.0 {
+            bail!("admin add '{name}' needs a positive mix weight");
+        }
+        ChurnAction::Add { name, dims, weight, mix_weight }
+    } else if let Some(name) = e.get("set_weight").and_then(Value::as_str) {
+        let weight = e
+            .get("weight")
+            .and_then(Value::as_usize)
+            .context("admin set_weight needs a weight")? as u32;
+        if weight == 0 {
+            bail!("admin set_weight '{name}' needs weight >= 1");
+        }
+        ChurnAction::SetWeight { name: name.to_string(), weight }
+    } else if let Some(name) = e.get("remove").and_then(Value::as_str) {
+        let mode = match e.get("mode").and_then(Value::as_str) {
+            Some("serve") | None => DrainMode::Serve,
+            Some("shed") => DrainMode::Shed,
+            Some(other) => bail!("admin remove mode '{other}' (want serve|shed)"),
+        };
+        ChurnAction::Remove { name: name.to_string(), mode }
+    } else {
+        bail!("admin event needs one of add/set_weight/remove");
+    };
+    Ok(ChurnEvent { at, action })
 }
 
 /// Parse a PE spec: "scalar", "1:1", or "N:M".
@@ -140,6 +232,16 @@ impl RunConfig {
             if let Some(s) = p.get("dispatch").and_then(Value::as_str) {
                 cfg.dispatch = parse_dispatch(s)?;
             }
+            if let Some(q) = p.get("quota") {
+                cfg.quota = parse_quota(q)?;
+            }
+        }
+        if let Some(a) = v.get("admin") {
+            let events = a
+                .get("events")
+                .and_then(Value::as_arr)
+                .context("admin stanza needs an events array")?;
+            cfg.admin_events = events.iter().map(parse_admin_event).collect::<Result<_>>()?;
         }
         if let Some(b) = v.get("batch_size").and_then(Value::as_usize) {
             cfg.batch_size = b;
@@ -156,6 +258,7 @@ impl RunConfig {
             policy: self.policy,
             sim_array: self.array,
             dispatch: self.dispatch,
+            quota: self.quota,
         }
     }
 }
@@ -241,6 +344,71 @@ mod tests {
         assert_eq!(parse_dispatch("fixed").unwrap(), Dispatch::Fixed);
         assert!(parse_dispatch("random").is_err());
         assert_eq!(RunConfig::default().dispatch, Dispatch::FairSteal);
+    }
+
+    #[test]
+    fn load_quota_and_admin_stanzas() {
+        let mut f = tempfile("cfg7.json");
+        write!(
+            f,
+            r#"{{"pool": {{"quota": 0.4}},
+                "admin": {{"events": [
+                  {{"at_ms": 250, "add": "hot:16x32x6", "weight": 2, "mix": 0.5}},
+                  {{"at_ms": 500, "set_weight": "hot", "weight": 6}},
+                  {{"at_ms": 750, "remove": "hot", "mode": "shed"}}
+                ]}}}}"#
+        )
+        .unwrap();
+        let cfg = RunConfig::load(&path("cfg7.json")).unwrap();
+        assert_eq!(cfg.quota, QuotaPolicy::Weighted { reserve: 0.4 });
+        assert_eq!(cfg.to_pool_config().quota, cfg.quota);
+        assert_eq!(cfg.admin_events.len(), 3);
+        assert_eq!(cfg.admin_events[0].at, Duration::from_millis(250));
+        match &cfg.admin_events[0].action {
+            ChurnAction::Add { name, dims, weight, mix_weight } => {
+                assert_eq!(name, "hot");
+                assert_eq!(dims, &[16, 32, 6]);
+                assert_eq!(*weight, 2);
+                assert!((mix_weight - 0.5).abs() < 1e-12);
+            }
+            other => panic!("expected Add, got {other:?}"),
+        }
+        match &cfg.admin_events[1].action {
+            ChurnAction::SetWeight { name, weight } => {
+                assert_eq!((name.as_str(), *weight), ("hot", 6));
+            }
+            other => panic!("expected SetWeight, got {other:?}"),
+        }
+        match &cfg.admin_events[2].action {
+            ChurnAction::Remove { name, mode } => {
+                assert_eq!((name.as_str(), *mode), ("hot", DrainMode::Shed));
+            }
+            other => panic!("expected Remove, got {other:?}"),
+        }
+        // booleans toggle the default reserve
+        let mut f = tempfile("cfg8.json");
+        write!(f, r#"{{"pool": {{"quota": true}}}}"#).unwrap();
+        let cfg = RunConfig::load(&path("cfg8.json")).unwrap();
+        assert_eq!(cfg.quota, QuotaPolicy::weighted());
+        // defaults: quota off, no admin script
+        assert_eq!(RunConfig::default().quota, QuotaPolicy::None);
+        assert!(RunConfig::default().admin_events.is_empty());
+        // bad values rejected
+        let mut f = tempfile("cfg9.json");
+        write!(f, r#"{{"pool": {{"quota": 1.5}}}}"#).unwrap();
+        assert!(RunConfig::load(&path("cfg9.json")).is_err());
+        let mut f = tempfile("cfg10.json");
+        write!(f, r#"{{"admin": {{"events": [{{"at_ms": 10}}]}}}}"#).unwrap();
+        assert!(RunConfig::load(&path("cfg10.json")).is_err());
+    }
+
+    #[test]
+    fn parse_synth_specs() {
+        let (name, dims) = parse_synth_spec("mnist:64x32x10").unwrap();
+        assert_eq!((name.as_str(), dims.as_slice()), ("mnist", &[64usize, 32, 10][..]));
+        assert!(parse_synth_spec("noname").is_err());
+        assert!(parse_synth_spec("m:64").is_err());
+        assert!(parse_synth_spec("m:64xbogus").is_err());
     }
 
     #[test]

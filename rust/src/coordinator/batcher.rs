@@ -4,10 +4,10 @@
 //! *due* (size or deadline, see [`Batcher::ready`]). In the gateway the
 //! batchers live in per-worker **shards** that the whole fleet can
 //! reach: the owning worker drains them by weighted deficit-round-robin,
-//! and an idle peer may steal a due batch through the same
-//! [`Batcher::drain_upto`] path (the drain is splittable — a thief can
-//! take fewer items than are queued, leaving the rest with their
-//! original arrival times).
+//! and an idle peer may steal through the same [`Batcher::drain_upto`]
+//! path (the drain is splittable — a thief takes roughly half of an
+//! over-full backlog, leaving the rest with their original arrival
+//! times, so owner and thief serve the remainder concurrently).
 
 use std::time::{Duration, Instant};
 
@@ -70,6 +70,14 @@ impl<T> Batcher<T> {
     /// Items currently queued.
     pub fn len(&self) -> usize {
         self.items.len()
+    }
+
+    /// The batch-size cap this batcher dispatches at (its policy's
+    /// `max_batch`). Batchers carry per-tenant policies in the gateway,
+    /// so callers must ask the batcher rather than assume a fleet-wide
+    /// constant.
+    pub fn max_batch(&self) -> usize {
+        self.policy.max_batch
     }
 
     /// True when nothing is queued.

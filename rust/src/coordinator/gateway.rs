@@ -1,5 +1,5 @@
 //! Multi-tenant serving gateway: one typed front door for many models
-//! over one replica fleet.
+//! over one replica fleet, with a **live tenant registry**.
 //!
 //! The paper evaluates KAN-SAs across a *mix* of applications (Fig. 8:
 //! MNIST, CIFAR, HAR, …) time-sharing one accelerator; the [`Gateway`]
@@ -9,21 +9,51 @@
 //! across all of them, routing each admitted request to its model's
 //! compiled [`ExecutionPlan`](crate::kan::ExecutionPlan):
 //!
-//! * every worker owns engine replicas for *all* registered models
-//!   (clones alias the originals' weights through `Arc`, so the fleet
-//!   costs ~1x total model memory) and **one**
+//! * every worker serves *all* registered models through the registry's
+//!   `Arc`-shared engines (~1x total model memory) and **one**
 //!   [`Scratch`](crate::kan::Scratch) arena sized to the widest model;
 //! * each worker runs **per-model batchers**, so a served batch is never
 //!   mixed-model — exactly like the accelerator, which must reconfigure
-//!   LUT ROMs and N:M windows between applications;
+//!   LUT ROMs and N:M windows between applications. Each tenant may
+//!   carry its own [`BatchPolicy`] (max rows / max wait), defaulting to
+//!   the fleet policy;
 //! * admission control is shared: one queue capacity, one
 //!   [`ShedPolicy`], with [`Priority`] classes ordering
 //!   [`ShedPolicy::DropOldest`] eviction (low-priority victims first).
+//!   Under [`QuotaPolicy::Weighted`] each tenant also gets
+//!   **weight-proportional reserved queue slots** plus a shared
+//!   overflow region, so one tenant's burst can no longer shed every
+//!   tenant's new arrivals (and `DropOldest` evicts from the most
+//!   *oversubscribed* tenant first).
+//!
+//! # The dynamic registry
+//!
+//! The tenant set is **not** frozen at start. All per-tenant tables
+//! (engine, weight, batch policy, buffer pool, counters, metrics cells,
+//! reserved quota slots) live in an immutable, epoch-versioned
+//! registry snapshot behind an `Arc`. Control-plane mutations —
+//! [`Gateway::add_model`], [`Gateway::remove_model`],
+//! [`Gateway::set_weight`] — build a new snapshot and swap the `Arc`
+//! atomically under the admission lock; workers notice the epoch bump
+//! at their next batch boundary and reload. The steady-state hot path
+//! therefore pays one integer compare per dispatch loop and zero extra
+//! allocations (`tests/gateway_alloc.rs` still gates this with a
+//! counting allocator).
+//!
+//! Removal honours a **drain contract**: the tenant stops accepting
+//! first (snapshot swap), its backlog is then either served to
+//! completion or answered `QueueFull` per [`DrainMode`], and its
+//! [`BufferPool`] is retired only once every in-flight response has
+//! been sent — per-model conservation
+//! (`submitted == completed + shed + failed`) holds across the whole
+//! transition, and the removed tenant's counters stay visible in
+//! [`GatewayStats`] (`live == false`).
 //!
 //! Dispatch is **weighted and work-conserving** ([`Dispatch`], default
 //! [`Dispatch::FairSteal`]). Each model registers with a service weight
-//! ([`GatewayBuilder::register_weighted`]); per-model batchers live in
-//! per-worker *shards* that the whole fleet can reach:
+//! ([`GatewayBuilder::register_weighted`], re-weightable live via
+//! [`Gateway::set_weight`]); per-model batchers live in per-worker
+//! *shards* that the whole fleet can reach:
 //!
 //! * a worker picks its next batch by **deficit round-robin** over its
 //!   shard's due batchers — every round a tenant earns credit in
@@ -34,16 +64,14 @@
 //!   requests whose batcher is already full, so a saturated tenant's
 //!   burst cannot wall off the *dispatch* of other tenants' already
 //!   admitted requests (per-model FIFO order is preserved — only
-//!   *other* models' requests are overtaken). Admission capacity
-//!   itself stays shared: a burst that fills the bounded queue still
-//!   sheds everyone's new arrivals per [`ShedPolicy`] — per-tenant
-//!   admission quotas are future work (see ROADMAP);
-//! * a worker with nothing due **steals** a ready batch from the most
-//!   backlogged peer's shard instead of sleeping (the per-shard backlog
-//!   index is atomic, so victim selection takes no locks). Every worker
-//!   holds replicas of every model, which is what makes a stolen batch
-//!   servable anywhere; steals are counted per model and per replica
-//!   ([`Metrics::stolen_batches`]).
+//!   *other* models' requests are overtaken);
+//! * a worker with nothing due **steals** from the most backlogged
+//!   peer's shard instead of sleeping (the per-shard backlog index is
+//!   atomic, so victim selection takes no locks). An over-full backlog
+//!   is *split*: the thief takes roughly half so owner and thief serve
+//!   the remainder concurrently, and the leftover items keep their
+//!   original arrival clocks ([`Batcher::drain_upto`]). Steals are
+//!   counted per model and per replica ([`Metrics::stolen_batches`]).
 //!
 //! [`Dispatch::Fixed`] keeps the pre-fair behaviour (strict FIFO pulls
 //! that stop at a full batcher, model-index serve order, idle workers
@@ -53,15 +81,15 @@
 //! The client surface is typed end to end: [`ModelHandle`] submits a
 //! [`Request`] (quantized or f32 row, optional deadline, priority) and
 //! gets a [`Ticket`]; every terminal outcome is a [`ServeError`] — one
-//! enum for the whole serving stack, replacing the old
-//! `PoolError`-vs-`anyhow` split. [`GatewayStats`] breaks the counters
-//! down per model *and* per replica, with the conservation invariant
-//! held **per model**: `submitted == completed + shed + failed`
-//! (deadline-lapsed requests are answered
+//! enum for the whole serving stack. [`GatewayStats`] breaks the
+//! counters down per model *and* per replica, with the conservation
+//! invariant held **per model**: `submitted == completed + shed +
+//! failed` (deadline-lapsed requests are answered
 //! [`ServeError::DeadlineExceeded`] and counted inside `shed`, reported
 //! separately as `expired`). The invariant is indifferent to *which*
 //! worker served a batch, so it holds across steals — including batches
-//! stolen during the shutdown flush (integration-tested).
+//! stolen during the shutdown flush — and across registry churn
+//! (integration-tested in `tests/registry_churn.rs`).
 //!
 //! Response buffers are pooled: each answered request's pre-sized
 //! `Vec<i64>` returns to a per-model free-list ([`BufferPool`]) when the
@@ -74,7 +102,7 @@
 
 use std::collections::VecDeque;
 use std::fmt;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -84,7 +112,7 @@ use crate::arch::ArrayConfig;
 use crate::kan::{Engine, Scratch};
 
 use super::batcher::{BatchPolicy, Batcher};
-use super::metrics::{jain_fairness, Metrics};
+use super::metrics::{jain_fairness, jain_fairness_normalized, Metrics};
 
 /// What to do with a new submission when the admission queue is full.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -94,7 +122,10 @@ pub enum ShedPolicy {
     /// Evict a queued request — the oldest among the *lowest*
     /// [`Priority`] class present — answer it `QueueFull`, and admit the
     /// newcomer. A newcomer whose priority is below everything queued is
-    /// itself rejected (eviction never sacrifices a higher class).
+    /// itself rejected (eviction never sacrifices a higher class). Under
+    /// [`QuotaPolicy::Weighted`] the victim scan is restricted to the
+    /// most *oversubscribed* tenant (largest overflow usage), so a
+    /// bursting tenant pays for its own burst first.
     DropOldest,
     /// Block the submitting thread until a worker frees space.
     Block,
@@ -119,10 +150,11 @@ pub enum Priority {
 pub enum Dispatch {
     /// Weighted deficit-round-robin over per-model batchers plus work
     /// stealing from backlogged peers: registration weights
-    /// ([`GatewayBuilder::register_weighted`]) set each tenant's service
-    /// share under contention, queue pulls skip past head-of-line
-    /// requests of saturated tenants, and idle workers steal ready
-    /// batches instead of sleeping. The default.
+    /// ([`GatewayBuilder::register_weighted`], live-tunable via
+    /// [`Gateway::set_weight`]) set each tenant's service share under
+    /// contention, queue pulls skip past head-of-line requests of
+    /// saturated tenants, and idle workers steal ready batches instead
+    /// of sleeping. The default.
     #[default]
     FairSteal,
     /// The pre-fair baseline: strictly FIFO pulls that stop at the first
@@ -134,19 +166,64 @@ pub enum Dispatch {
     Fixed,
 }
 
+/// Per-tenant admission quotas over the shared bounded queue.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub enum QuotaPolicy {
+    /// No reservations: the queue is one shared region and a full queue
+    /// sheds *every* tenant's new arrivals (the pre-quota behaviour).
+    #[default]
+    None,
+    /// Reserve `reserve` (a fraction in `[0, 1]`) of the queue capacity,
+    /// split across live tenants in proportion to their service weights;
+    /// the remainder is a shared overflow region. A tenant's submission
+    /// is admissible while it is under its own reservation *or* the
+    /// overflow region has room — so a majority tenant's burst fills its
+    /// reservation plus the overflow, but can never consume the slots
+    /// reserved for the others. Reservations are recomputed on every
+    /// registry change (add/remove/re-weight).
+    Weighted {
+        /// Fraction of the queue capacity set aside for per-tenant
+        /// reservations (clamped to `[0, 1]`; the `--quota` CLI default
+        /// is 0.5).
+        reserve: f64,
+    },
+}
+
+impl QuotaPolicy {
+    /// The standard weighted quota: half the queue reserved by weight,
+    /// half shared overflow.
+    pub fn weighted() -> Self {
+        QuotaPolicy::Weighted { reserve: 0.5 }
+    }
+}
+
+/// How [`Gateway::remove_model`] disposes of the tenant's backlog.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DrainMode {
+    /// Serve everything already admitted before retiring the tenant
+    /// (graceful). Non-due batches are expedited so the drain does not
+    /// wait out their batching windows.
+    Serve,
+    /// Answer everything still queued or batched `QueueFull` (counted as
+    /// shed); only batches already being served complete. The fast path
+    /// for pulling a misbehaving tenant.
+    Shed,
+}
+
 /// Gateway sizing and policy, shared by every registered model.
 #[derive(Clone, Debug)]
 pub struct GatewayConfig {
-    /// Worker threads; each owns one replica of *every* registered model
-    /// (replicas alias the registered engines' weights via `Arc`).
+    /// Worker threads; each serves every registered model (engines are
+    /// `Arc`-shared, so the fleet costs ~1x total model memory).
     pub replicas: usize,
     /// Admission queue capacity (requests, not batches; shared across
-    /// models).
+    /// models, optionally partitioned by `quota`).
     pub queue_cap: usize,
     /// What to do with a new submission when the admission queue is
     /// full.
     pub shed: ShedPolicy,
-    /// Per-worker, per-model dynamic batching policy.
+    /// Default per-model dynamic batching policy (tenants may override
+    /// it at registration).
     pub policy: BatchPolicy,
     /// Accelerator config used to attach simulated cycle counts to each
     /// served batch.
@@ -154,6 +231,8 @@ pub struct GatewayConfig {
     /// How workers pick the next batch (weighted fair dispatch with
     /// stealing, or the fixed pre-fair baseline).
     pub dispatch: Dispatch,
+    /// Per-tenant admission quotas over the shared queue.
+    pub quota: QuotaPolicy,
 }
 
 impl Default for GatewayConfig {
@@ -165,12 +244,15 @@ impl Default for GatewayConfig {
             policy: BatchPolicy::default(),
             sim_array: ArrayConfig::kan_sas(16, 16, 4, 8),
             dispatch: Dispatch::FairSteal,
+            quota: QuotaPolicy::None,
         }
     }
 }
 
 /// Identifies a registered model within its [`Gateway`] (returned by
 /// [`GatewayBuilder::register`], embedded in every [`ModelHandle`]).
+/// Slots are never reused: a removed model's id stays valid for stats
+/// lookups forever and a hot-added model always gets a fresh slot.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct ModelId(pub(crate) usize);
 
@@ -192,17 +274,19 @@ impl fmt::Display for ModelId {
 /// `anyhow` there).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum ServeError {
-    /// Shed by admission control: rejected at submit, or evicted under
-    /// [`ShedPolicy::DropOldest`].
+    /// Shed by admission control: rejected at submit, evicted under
+    /// [`ShedPolicy::DropOldest`], or flushed by a
+    /// [`DrainMode::Shed`] removal.
     QueueFull,
     /// The request's deadline lapsed before a worker could serve it.
     DeadlineExceeded,
     /// The gateway shut down before the request could be admitted.
     Closed,
-    /// Input validation failed (wrong dimension).
+    /// Input validation failed (wrong dimension), or an invalid
+    /// control-plane argument (zero weight, duplicate name).
     InvalidInput(String),
-    /// No model registered under that name ([`Gateway::handle_by_name`]
-    /// and the CLI's `--models` routing).
+    /// No model registered under that name or id — including models
+    /// already removed from a live gateway.
     UnknownModel(String),
     /// The engine rejected the whole batch.
     Inference(String),
@@ -230,7 +314,10 @@ impl std::error::Error for ServeError {}
 /// worker's scatter into the [`Response`], and returns to the list when
 /// the response drops. After warmup, acquire/release cycles perform zero
 /// heap allocations (`tests/gateway_alloc.rs`); the list is capped so an
-/// overload burst cannot pin unbounded memory.
+/// overload burst cannot pin unbounded memory. Removing a model
+/// [`BufferPool::retire`]s its pool: the free-list is emptied and late
+/// releases (responses the client still holds) free normally instead of
+/// re-pinning memory.
 #[derive(Debug)]
 pub struct BufferPool {
     free: Mutex<Vec<Vec<i64>>>,
@@ -238,6 +325,8 @@ pub struct BufferPool {
     out_dim: usize,
     /// Maximum buffers retained on the free-list.
     retain: usize,
+    /// Set once the owning model is removed; releases stop recycling.
+    retired: AtomicBool,
     created: AtomicU64,
     recycled: AtomicU64,
 }
@@ -250,6 +339,7 @@ impl BufferPool {
             free: Mutex::new(Vec::new()),
             out_dim,
             retain,
+            retired: AtomicBool::new(false),
             created: AtomicU64::new(0),
             recycled: AtomicU64::new(0),
         }
@@ -266,9 +356,13 @@ impl BufferPool {
         Vec::with_capacity(self.out_dim)
     }
 
-    /// Return a buffer to the free-list (dropped if the list is full or
-    /// the buffer was grown past the model's row width).
+    /// Return a buffer to the free-list (dropped if the list is full,
+    /// the pool is retired, or the buffer was grown past the model's row
+    /// width).
     pub fn release(&self, mut buf: Vec<i64>) {
+        if self.retired.load(Ordering::Relaxed) {
+            return; // model removed; let late buffers free normally
+        }
         if buf.capacity() < self.out_dim || buf.capacity() > 4 * self.out_dim.max(1) {
             return; // wrong-sized stray; let it free normally
         }
@@ -277,6 +371,16 @@ impl BufferPool {
         if free.len() < self.retain {
             free.push(buf);
         }
+    }
+
+    /// Empty the free-list and stop recycling: called when the owning
+    /// model is removed, after its last in-flight response was sent.
+    /// In-flight [`Response`]s the client still holds keep the pool
+    /// alive through their own `Arc`s; their eventual drops free their
+    /// buffers instead of growing a dead free-list.
+    pub fn retire(&self) {
+        self.retired.store(true, Ordering::Relaxed);
+        self.free.lock().unwrap().clear();
     }
 
     /// `(fresh allocations, recycled acquires, buffers currently free)`.
@@ -422,22 +526,14 @@ struct GwRequest {
     resp: Sender<Result<Response, ServeError>>,
 }
 
-/// Mutex-guarded queue state + the submit-side per-model counters.
-struct GwState {
-    items: VecDeque<GwRequest>,
-    open: bool,
-    /// Per-model: valid submissions counted by admission control
-    /// (admitted or rejected-new; Block submissions that observe
-    /// `Closed` are not counted).
-    submitted: Vec<u64>,
-    /// Per-model: requests answered `QueueFull` at admission (submit
-    /// rejection or eviction).
-    shed: Vec<u64>,
-    peak_depth: usize,
-}
+/// One worker's mutable metrics slot for one model (shared across
+/// registry snapshots through the tenant's `cells` Arc).
+type MetricsCell = Mutex<Metrics>;
 
 /// Worker-side per-model counters (atomics: workers never take the queue
-/// lock to account a served batch).
+/// lock to account a served batch). Shared across registry snapshots
+/// through an `Arc`, so a tenant's history survives re-weighting and
+/// removal.
 #[derive(Default)]
 struct ModelCounters {
     /// Requests answered with logits.
@@ -447,6 +543,188 @@ struct ModelCounters {
     /// Requests answered `DeadlineExceeded` (a subset of the model's
     /// `shed` total).
     expired: AtomicU64,
+    /// Requests admitted but not yet answered (queued, batched, or
+    /// mid-serve). [`Gateway::remove_model`] drains until this hits 0
+    /// before retiring the tenant.
+    inflight: AtomicU64,
+}
+
+/// One tenant's slot in a [`RegistrySnapshot`]: the immutable view the
+/// data plane reads. Mutable history (counters, metrics, buffer pool)
+/// is `Arc`-shared across snapshots so epoch swaps never lose counts.
+#[derive(Clone)]
+struct Tenant {
+    name: Arc<str>,
+    /// Service weight (deficit-round-robin quantum; also the quota
+    /// reservation share).
+    weight: u32,
+    /// Present while the tenant can still be served (live or draining);
+    /// `None` once retired — the weights-freeing point of removal.
+    engine: Option<Engine>,
+    /// Cleared first on removal: no new admissions, backlog still
+    /// served.
+    accepting: bool,
+    /// This tenant's batching policy (the fleet default unless
+    /// registered with an explicit one).
+    policy: BatchPolicy,
+    in_dim: usize,
+    out_dim: usize,
+    /// Queue slots reserved for this tenant under
+    /// [`QuotaPolicy::Weighted`] (0 otherwise; recomputed per snapshot).
+    reserved: usize,
+    buffers: Arc<BufferPool>,
+    counters: Arc<ModelCounters>,
+    /// `[replica]` metrics cells.
+    cells: Arc<Vec<MetricsCell>>,
+}
+
+impl Tenant {
+    fn new(
+        name: &str,
+        engine: Engine,
+        weight: u32,
+        policy: BatchPolicy,
+        queue_cap: usize,
+        replicas: usize,
+    ) -> Self {
+        // retain enough for a full queue of this model plus every
+        // replica's in-flight batch
+        let retain = queue_cap + replicas * policy.max_batch;
+        let (in_dim, out_dim) = (engine.in_dim(), engine.out_dim());
+        Self {
+            name: Arc::from(name),
+            weight,
+            engine: Some(engine),
+            accepting: true,
+            policy,
+            in_dim,
+            out_dim,
+            reserved: 0,
+            buffers: Arc::new(BufferPool::new(out_dim, retain)),
+            counters: Arc::new(ModelCounters::default()),
+            cells: Arc::new((0..replicas).map(|_| Mutex::new(Metrics::default())).collect()),
+        }
+    }
+
+    /// Live = accepting new submissions and still able to serve.
+    fn is_live(&self) -> bool {
+        self.accepting && self.engine.is_some()
+    }
+}
+
+/// The epoch-versioned tenant table. Immutable once built; every
+/// control-plane mutation swaps in a new snapshot with `epoch + 1`.
+/// Slots are append-only (a removed tenant keeps its slot as a
+/// non-accepting, engine-less entry), so `ModelId` indexing stays valid
+/// across churn.
+struct RegistrySnapshot {
+    epoch: u64,
+    tenants: Vec<Tenant>,
+    /// Queue slots not reserved by any tenant — the shared overflow
+    /// region under [`QuotaPolicy::Weighted`]; the whole capacity
+    /// otherwise.
+    overflow_cap: usize,
+}
+
+impl RegistrySnapshot {
+    /// The tenant at `m` if it is live (accepting and serving).
+    fn live(&self, m: ModelId) -> Option<&Tenant> {
+        self.tenants.get(m.0).filter(|t| t.is_live())
+    }
+}
+
+/// Recompute per-tenant reserved queue slots for a (new) snapshot;
+/// returns the shared overflow capacity. With weighted quotas, a
+/// `reserve` fraction of the queue is split over live tenants in
+/// proportion to weight (floor division, so the overflow absorbs the
+/// rounding remainder); dead or draining tenants reserve nothing.
+fn apply_quota(tenants: &mut [Tenant], queue_cap: usize, quota: QuotaPolicy) -> usize {
+    let QuotaPolicy::Weighted { reserve } = quota else {
+        for t in tenants.iter_mut() {
+            t.reserved = 0;
+        }
+        return queue_cap;
+    };
+    let total_w: u64 = tenants.iter().filter(|t| t.is_live()).map(|t| u64::from(t.weight)).sum();
+    let budget = (queue_cap as f64 * reserve.clamp(0.0, 1.0)) as usize;
+    let mut reserved_total = 0usize;
+    for t in tenants.iter_mut() {
+        t.reserved = if total_w > 0 && t.is_live() {
+            (budget as u64 * u64::from(t.weight) / total_w) as usize
+        } else {
+            0
+        };
+        reserved_total += t.reserved;
+    }
+    queue_cap - reserved_total
+}
+
+/// Build the next registry snapshot (quota reservations recomputed).
+fn build_snapshot(
+    epoch: u64,
+    mut tenants: Vec<Tenant>,
+    queue_cap: usize,
+    quota: QuotaPolicy,
+) -> Arc<RegistrySnapshot> {
+    let overflow_cap = apply_quota(&mut tenants, queue_cap, quota);
+    Arc::new(RegistrySnapshot { epoch, tenants, overflow_cap })
+}
+
+/// Mutex-guarded queue state + the submit-side per-model counters.
+/// `registry` lives here so admission reads the snapshot under the lock
+/// it already holds, and workers refresh their cached `Arc` during the
+/// pull phase (one `u64` epoch compare per loop in steady state).
+struct GwState {
+    /// The current registry snapshot (swapped whole on every mutation).
+    registry: Arc<RegistrySnapshot>,
+    items: VecDeque<GwRequest>,
+    open: bool,
+    /// Per-slot: valid submissions counted by admission control
+    /// (admitted or rejected-new; Block submissions that observe
+    /// `Closed` are not counted). Grows with the registry.
+    submitted: Vec<u64>,
+    /// Per-slot: requests answered `QueueFull` at admission (submit
+    /// rejection, eviction, or removal flush).
+    shed: Vec<u64>,
+    /// Per-slot: requests currently waiting in the shared queue (the
+    /// quota accountant; items pulled into shards are not counted).
+    depth: Vec<usize>,
+    /// Queue slots used beyond their owners' reservations — the cached
+    /// occupancy of the shared overflow region. Maintained incrementally
+    /// by [`depth_inc`]/[`depth_dec`] (reservations are constant between
+    /// snapshots) and recomputed from scratch at every registry swap, so
+    /// the weighted-quota admission check stays O(1) per submit.
+    overflow: usize,
+    peak_depth: usize,
+}
+
+/// Full recount of the overflow occupancy (slots used beyond their
+/// owners' reservations) — the registry-swap resync for
+/// [`GwState::overflow`].
+fn overflow_scan(st: &GwState) -> usize {
+    st.depth
+        .iter()
+        .zip(st.registry.tenants.iter())
+        .map(|(&d, t)| d.saturating_sub(t.reserved))
+        .sum()
+}
+
+/// Count one request entering slot `m`'s queue depth, tracking the
+/// cached overflow occupancy.
+fn depth_inc(st: &mut GwState, m: usize) {
+    st.depth[m] += 1;
+    if st.depth[m] > st.registry.tenants[m].reserved {
+        st.overflow += 1;
+    }
+}
+
+/// Count one request leaving slot `m`'s queue depth (pulled, evicted, or
+/// flushed), tracking the cached overflow occupancy.
+fn depth_dec(st: &mut GwState, m: usize) {
+    if st.depth[m] > st.registry.tenants[m].reserved {
+        st.overflow -= 1;
+    }
+    st.depth[m] -= 1;
 }
 
 struct Shared {
@@ -455,13 +733,24 @@ struct Shared {
     nonempty: Condvar,
     /// Signalled when a worker frees queue space (Block submitters wait).
     space: Condvar,
+    /// Signalled (with `state`) by workers whenever they answer requests
+    /// while a removal is draining; `remove_model` waits here for the
+    /// tenant's in-flight count to reach zero.
+    drained: Condvar,
+    /// Serializes control-plane mutations (add/remove/set_weight).
+    admin: Mutex<()>,
+    /// True while a removal is waiting on its drain — tells workers to
+    /// ping `drained` after serving (one relaxed load per batch
+    /// otherwise).
+    draining: AtomicBool,
     cap: usize,
     shed_policy: ShedPolicy,
     dispatch: Dispatch,
-    /// Per-model service weights (deficit-round-robin quanta).
-    weights: Vec<u32>,
-    counters: Vec<ModelCounters>,
-    buffers: Vec<Arc<BufferPool>>,
+    quota: QuotaPolicy,
+    /// Fleet size (fixed at start; each tenant's metrics cells match).
+    replicas: usize,
+    /// Fleet-default batch policy for tenants registered without one.
+    default_policy: BatchPolicy,
     /// One batcher shard per worker. A shard is *owned* by its worker
     /// (only the owner pulls admissions into it) but *shared* with the
     /// fleet: idle peers steal due batches out of it.
@@ -480,31 +769,79 @@ struct Shard {
 }
 
 /// The lockable interior of a [`Shard`]: per-model batchers plus the
-/// deficit-round-robin state of the owning worker.
+/// deficit-round-robin state of the owning worker. Grows (never shrinks)
+/// to match the registry snapshot — a removed tenant's batcher simply
+/// stays empty.
 struct ShardQueues {
     batchers: Vec<Batcher<GwRequest>>,
     /// Per-model DRR credit, in rows. Earned `weight` per round while
     /// the model has a due batch; spent on dispatch (cost = rows
     /// served); reset when the model's batcher empties.
     deficit: Vec<u64>,
+    /// Per-model "serve now" override: set while the tenant is draining
+    /// for removal, so non-due batches don't wait out their windows.
+    expedite: Vec<bool>,
+    /// Registry epoch this shard last synced to — [`ShardQueues::grow`]
+    /// early-returns on a match, so pulls pay one compare in steady
+    /// state (epochs start at 1; 0 means never synced).
+    synced_epoch: u64,
     /// Round-robin scan start (one past the last dispatched model).
     cursor: usize,
 }
 
 impl ShardQueues {
-    fn new(n_models: usize, policy: BatchPolicy) -> Self {
+    /// An empty shard; [`ShardQueues::grow`] populates it from the
+    /// registry at the owner's first pull.
+    fn empty() -> Self {
         Self {
-            batchers: (0..n_models).map(|_| Batcher::new(policy)).collect(),
-            deficit: vec![0; n_models],
+            batchers: Vec::new(),
+            deficit: Vec::new(),
+            expedite: Vec::new(),
+            synced_epoch: 0,
             cursor: 0,
         }
     }
 
+    /// A shard with `n_models` batchers sharing one policy (tests only —
+    /// production shards grow from the registry, which carries
+    /// per-tenant policies).
+    #[cfg(test)]
+    fn new(n_models: usize, policy: BatchPolicy) -> Self {
+        Self {
+            batchers: (0..n_models).map(|_| Batcher::new(policy)).collect(),
+            deficit: vec![0; n_models],
+            expedite: vec![false; n_models],
+            synced_epoch: 0,
+            cursor: 0,
+        }
+    }
+
+    /// Match the registry snapshot: append batchers for new slots (each
+    /// with its tenant's policy) and refresh the per-slot expedite flags
+    /// (draining tenants serve immediately). Called under the shard lock
+    /// on every pull; one `u64` compare except across an epoch change.
+    fn grow(&mut self, reg: &RegistrySnapshot) {
+        if self.synced_epoch == reg.epoch {
+            return;
+        }
+        while self.batchers.len() < reg.tenants.len() {
+            let t = &reg.tenants[self.batchers.len()];
+            self.batchers.push(Batcher::new(t.policy));
+            self.deficit.push(0);
+            self.expedite.push(false);
+        }
+        for (i, t) in reg.tenants.iter().enumerate() {
+            self.expedite[i] = t.engine.is_some() && !t.accepting;
+        }
+        self.synced_epoch = reg.epoch;
+    }
+
     /// Is model `i`'s batcher due for dispatch? (`flush` = shutdown
-    /// drain: everything nonempty is due.)
+    /// drain: everything nonempty is due. A draining tenant's batches
+    /// are always due.)
     fn due(&self, i: usize, flush: bool) -> bool {
         let b = &self.batchers[i];
-        !b.is_empty() && (b.ready() || flush)
+        !b.is_empty() && (flush || self.expedite[i] || b.ready())
     }
 
     /// Weighted deficit-round-robin pick: scan due batchers from the
@@ -514,12 +851,17 @@ impl ShardQueues {
     /// tenant overtakes a saturated low-weight one within a few rounds;
     /// a lone due tenant is always dispatched (work conservation).
     /// Returns the picked model with its deficit already charged.
-    fn next_drr(&mut self, weights: &[u32], max_batch: usize, flush: bool) -> Option<usize> {
+    fn next_drr(&mut self, weights: &[u32], flush: bool) -> Option<usize> {
         let n = self.batchers.len();
+        if n == 0 {
+            return None;
+        }
         // Each round adds >= 1 row of credit to every due batcher and a
-        // batch costs at most max_batch rows, so max_batch rounds always
-        // suffice to dispatch *something* when anything is due.
-        for _round in 0..=max_batch {
+        // batch costs at most its batcher's max_batch rows, so
+        // max(max_batch) rounds always suffice to dispatch *something*
+        // when anything is due.
+        let max_round = self.batchers.iter().map(Batcher::max_batch).max().unwrap_or(1);
+        for _round in 0..=max_round {
             let mut any_due = false;
             for k in 0..n {
                 let i = (self.cursor + k) % n;
@@ -532,8 +874,9 @@ impl ShardQueues {
                     continue; // still coalescing; keeps its credit
                 }
                 any_due = true;
-                self.deficit[i] += weights[i] as u64;
-                let cost = self.batchers[i].len().min(max_batch) as u64;
+                self.deficit[i] += u64::from(*weights.get(i).unwrap_or(&1));
+                let b = &self.batchers[i];
+                let cost = b.len().min(b.max_batch()) as u64;
                 if self.deficit[i] >= cost {
                     self.deficit[i] -= cost;
                     self.cursor = (i + 1) % n;
@@ -554,13 +897,29 @@ impl ShardQueues {
     }
 
     /// Smallest time-to-due across nonempty batchers (`None` when the
-    /// shard is empty) — the owning worker's wait bound.
+    /// shard is empty) — the owning worker's wait bound. An expedited
+    /// (draining) batcher is due now.
     fn soonest_due(&self) -> Option<Duration> {
         self.batchers
             .iter()
-            .filter(|b| !b.is_empty())
-            .map(Batcher::time_left)
+            .enumerate()
+            .filter(|(_, b)| !b.is_empty())
+            .map(|(i, b)| if self.expedite[i] { Duration::ZERO } else { b.time_left() })
             .min()
+    }
+}
+
+/// How many items a thief takes from a victim batcher holding `len`
+/// items with batch cap `max_batch`. A backlog that fits one batch is
+/// taken whole (it is due as a unit); an over-full backlog is *split* —
+/// the thief takes roughly half (still capped at one batch) so owner
+/// and thief serve the remainder concurrently instead of the thief
+/// walking off with a full batch while the owner's next batch re-coalesces.
+fn steal_limit(len: usize, max_batch: usize) -> usize {
+    if len > max_batch {
+        len.div_ceil(2).min(max_batch)
+    } else {
+        len
     }
 }
 
@@ -593,7 +952,9 @@ impl Ticket {
 
 /// Cloneable, typed client handle for one registered model. All
 /// submissions go through the gateway's shared admission queue but are
-/// validated against — and routed to — this model only.
+/// validated against — and routed to — this model only. A handle may
+/// outlive its model: submissions after [`Gateway::remove_model`]
+/// resolve [`ServeError::UnknownModel`].
 ///
 /// # Examples
 ///
@@ -659,9 +1020,10 @@ impl ModelHandle {
     }
 
     /// Submit a built [`Request`]; returns a [`Ticket`] without waiting
-    /// for the result. Admission control applies: a full queue sheds per
-    /// the gateway's [`ShedPolicy`], with [`Priority`] ordering
-    /// `DropOldest` eviction.
+    /// for the result. Admission control applies: a full queue — or,
+    /// under [`QuotaPolicy::Weighted`], an exhausted reservation plus a
+    /// full overflow region — sheds per the gateway's [`ShedPolicy`],
+    /// with [`Priority`] ordering `DropOldest` eviction.
     pub fn submit(&self, req: Request) -> Result<Ticket, ServeError> {
         let Request { x_q, deadline, priority } = req;
         if x_q.len() != self.in_dim {
@@ -676,10 +1038,54 @@ impl ModelHandle {
         let deadline = deadline.map(|d| submitted + d);
         let m = self.model.0;
         let mut st = self.shared.state.lock().unwrap();
-        if !st.open {
-            return Err(ServeError::Closed);
-        }
-        while st.items.len() >= self.shared.cap {
+        loop {
+            if !st.open {
+                return Err(ServeError::Closed);
+            }
+            // Clone the snapshot Arc so tenant reads don't borrow `st`
+            // (refcount bump, no allocation). Re-read every lap: a Block
+            // wake or eviction may span a registry swap.
+            let reg = Arc::clone(&st.registry);
+            let Some(tenant) = reg.live(self.model) else {
+                return Err(ServeError::UnknownModel(self.name.to_string()));
+            };
+            // Full = the whole queue is at capacity, or (weighted
+            // quotas) this tenant's reservation is exhausted AND the
+            // shared overflow region is full. The first clause is also
+            // the safety belt that keeps total depth bounded across
+            // reservation changes mid-flight (re-weights redistribute
+            // slots under live traffic).
+            let full = st.items.len() >= self.shared.cap
+                || match self.shared.quota {
+                    QuotaPolicy::None => false,
+                    QuotaPolicy::Weighted { .. } => {
+                        st.depth[m] >= tenant.reserved && st.overflow >= reg.overflow_cap
+                    }
+                };
+            if !full {
+                // admitted: only now pay for the response channel; the
+                // output buffer comes from the model's free-list, so
+                // steady-state submission allocates no buffer (shed
+                // requests allocate nothing)
+                let (tx, rx) = channel();
+                let out = tenant.buffers.acquire();
+                tenant.counters.inflight.fetch_add(1, Ordering::SeqCst);
+                st.submitted[m] += 1;
+                depth_inc(&mut st, m);
+                st.items.push_back(GwRequest {
+                    model: self.model,
+                    x_q,
+                    out,
+                    submitted,
+                    deadline,
+                    priority,
+                    resp: tx,
+                });
+                st.peak_depth = st.peak_depth.max(st.items.len());
+                drop(st);
+                self.shared.nonempty.notify_one();
+                return Ok(Ticket { rx, submitted });
+            }
             match self.shared.shed_policy {
                 ShedPolicy::RejectNew => {
                     st.submitted[m] += 1;
@@ -687,13 +1093,28 @@ impl ModelHandle {
                     return Err(ServeError::QueueFull);
                 }
                 ShedPolicy::DropOldest => {
-                    // victim: oldest request of the lowest priority class
-                    // queued — but never a class above the newcomer's.
-                    // One pass under the shared lock: track the first
-                    // (oldest) occurrence of the lowest class, stopping
-                    // early once `Low` (the global minimum) is seen.
+                    // Victim pool: under weighted quotas, the requests of
+                    // the most OVERSUBSCRIBED tenant (largest overflow
+                    // usage) — the burster pays first; otherwise (or when
+                    // nobody is over reserve, e.g. right after a
+                    // re-weight shrank the overflow) the whole queue.
+                    let sat: Option<ModelId> = match self.shared.quota {
+                        QuotaPolicy::None => None,
+                        QuotaPolicy::Weighted { .. } => (0..st.depth.len())
+                            .filter(|&i| st.depth[i] > reg.tenants[i].reserved)
+                            .max_by_key(|&i| st.depth[i] - reg.tenants[i].reserved)
+                            .map(ModelId),
+                    };
+                    // Within the pool: the first (oldest) occurrence of
+                    // the lowest priority class, stopping early once
+                    // `Low` (the global minimum) is seen.
                     let mut victim: Option<(usize, Priority)> = None;
                     for (i, r) in st.items.iter().enumerate() {
+                        if let Some(s) = sat {
+                            if r.model != s {
+                                continue;
+                            }
+                        }
                         let lower = match victim {
                             None => true,
                             Some((_, p)) => r.priority < p,
@@ -705,46 +1126,37 @@ impl ModelHandle {
                             }
                         }
                     }
-                    let (idx, min_pri) = victim.expect("full queue nonempty");
+                    let Some((idx, min_pri)) = victim else {
+                        // full with an empty candidate pool (transient
+                        // post-re-weight states): shed the newcomer
+                        st.submitted[m] += 1;
+                        st.shed[m] += 1;
+                        return Err(ServeError::QueueFull);
+                    };
                     if min_pri > priority {
+                        // eviction never sacrifices a higher class
                         st.submitted[m] += 1;
                         st.shed[m] += 1;
                         return Err(ServeError::QueueFull);
                     }
                     let old = st.items.remove(idx).expect("index in bounds");
-                    st.shed[old.model.0] += 1;
+                    let om = old.model.0;
+                    st.shed[om] += 1;
+                    depth_dec(&mut st, om);
+                    let ot = &reg.tenants[om];
+                    ot.counters.inflight.fetch_sub(1, Ordering::SeqCst);
                     // recycle the victim's pooled buffer: the shed path
                     // must not drain the free-list under overload
-                    self.shared.buffers[old.model.0].release(old.out);
+                    ot.buffers.release(old.out);
                     let _ = old.resp.send(Err(ServeError::QueueFull));
+                    // loop: re-evaluate fullness and admit
                 }
                 ShedPolicy::Block => {
                     st = self.shared.space.wait(st).unwrap();
-                    if !st.open {
-                        return Err(ServeError::Closed);
-                    }
+                    // loop: re-check open, liveness, and fullness
                 }
             }
         }
-        // admitted: only now pay for the response channel; the output
-        // buffer comes from the model's free-list, so steady-state
-        // submission allocates no buffer (shed requests allocate nothing)
-        let (tx, rx) = channel();
-        let out = self.shared.buffers[m].acquire();
-        st.submitted[m] += 1;
-        st.items.push_back(GwRequest {
-            model: self.model,
-            x_q,
-            out,
-            submitted,
-            deadline,
-            priority,
-            resp: tx,
-        });
-        st.peak_depth = st.peak_depth.max(st.items.len());
-        drop(st);
-        self.shared.nonempty.notify_one();
-        Ok(Ticket { rx, submitted })
     }
 
     /// Submit one quantized row with default options; returns a
@@ -767,21 +1179,29 @@ impl ModelHandle {
 
 /// Per-model accounting: admission + service counters, the model's own
 /// merged [`Metrics`] (rows, batches, latency percentiles, simulated
-/// cycles), and buffer-pool health.
+/// cycles), and buffer-pool health. Removed tenants keep their row
+/// (`live == false`) so conservation stays checkable across churn.
 #[derive(Clone, Debug, Default)]
 pub struct ModelStats {
     /// The name the model was registered under.
     pub name: String,
     /// The model's service weight (deficit-round-robin quantum; 1 for
     /// [`GatewayBuilder::register`], explicit for
-    /// [`GatewayBuilder::register_weighted`]).
+    /// [`GatewayBuilder::register_weighted`], mutable live via
+    /// [`Gateway::set_weight`]).
     pub weight: u32,
+    /// False once the model was removed (its counters remain final).
+    pub live: bool,
+    /// Queue slots currently reserved for this tenant under
+    /// [`QuotaPolicy::Weighted`] (0 otherwise).
+    pub reserved: usize,
     /// Valid submissions counted by admission control.
     pub submitted: u64,
     /// Requests answered with logits.
     pub completed: u64,
-    /// Requests answered without inference: `QueueFull` (at submit or by
-    /// eviction) plus `DeadlineExceeded` (see `expired`).
+    /// Requests answered without inference: `QueueFull` (at submit, by
+    /// eviction, or by a removal flush) plus `DeadlineExceeded` (see
+    /// `expired`).
     pub shed: u64,
     /// Deadline-lapsed requests — a subset of `shed`, broken out so shed
     /// policy and deadline pressure can be read separately.
@@ -815,8 +1235,35 @@ impl ModelStats {
     }
 }
 
+/// Assemble one tenant's [`ModelStats`] row from its snapshot entry plus
+/// the submit-side counters.
+fn make_model_stats(t: &Tenant, submitted: u64, shed_admission: u64) -> ModelStats {
+    let mut metrics = Metrics::default();
+    for cell in t.cells.iter() {
+        metrics.merge(&cell.lock().unwrap());
+    }
+    let expired = t.counters.expired.load(Ordering::Relaxed);
+    let (created, recycled, _) = t.buffers.counts();
+    ModelStats {
+        name: t.name.to_string(),
+        weight: t.weight,
+        live: t.is_live(),
+        reserved: t.reserved,
+        submitted,
+        completed: t.counters.completed.load(Ordering::Relaxed),
+        // expired requests are shed too: they were answered without
+        // inference
+        shed: shed_admission + expired,
+        expired,
+        failed: t.counters.failed.load(Ordering::Relaxed),
+        metrics,
+        buffers_created: created,
+        buffers_recycled: recycled,
+    }
+}
+
 /// Gateway-level statistics: per-model and per-replica breakdowns plus
-/// the shared-queue counters.
+/// the shared-queue counters and the registry epoch.
 #[derive(Clone, Debug, Default)]
 pub struct GatewayStats {
     /// Everything, merged (all models, all replicas).
@@ -824,7 +1271,8 @@ pub struct GatewayStats {
     /// Per-replica metrics (all models served by that worker) — the
     /// load-balance view.
     pub per_replica: Vec<Metrics>,
-    /// Per-model accounting, indexed by [`ModelId::index`].
+    /// Per-model accounting, indexed by [`ModelId::index`]. Includes
+    /// removed tenants (`live == false`) — slots are never reused.
     pub per_model: Vec<ModelStats>,
     /// High-water mark of the shared admission queue.
     pub peak_depth: usize,
@@ -832,6 +1280,10 @@ pub struct GatewayStats {
     pub queue_depth: usize,
     /// Worker fleet size.
     pub replicas: usize,
+    /// Registry epoch at snapshot time: bumps once per add_model /
+    /// set_weight and twice per remove_model (stop-accepting, then
+    /// retire).
+    pub epoch: u64,
 }
 
 impl GatewayStats {
@@ -845,8 +1297,8 @@ impl GatewayStats {
         self.per_model.iter().map(|m| m.completed).sum()
     }
 
-    /// Total requests shed (admission rejection, eviction, or deadline
-    /// expiry).
+    /// Total requests shed (admission rejection, eviction, removal
+    /// flush, or deadline expiry).
     pub fn shed(&self) -> u64 {
         self.per_model.iter().map(|m| m.shed).sum()
     }
@@ -862,6 +1314,11 @@ impl GatewayStats {
         self.per_model.iter().map(|m| m.metrics.stolen_batches).sum()
     }
 
+    /// Number of live (registered, not removed) models.
+    pub fn live_models(&self) -> usize {
+        self.per_model.iter().filter(|m| m.live).count()
+    }
+
     /// Jain's fairness index over weight-normalized served rows
     /// (`rows / weight` per model with any submissions): 1.0 means every
     /// tenant got service in proportion to its weight, `1/n` means one
@@ -872,10 +1329,11 @@ impl GatewayStats {
     /// doing. Below saturation — or when a tenant's offered load is
     /// under its weighted share — served rows simply mirror the arrival
     /// mix, so a skewed mix reads as a low index without any tenant
-    /// being starved. The dispatch experiments therefore report it
+    /// being starved. [`GatewayStats::fairness_index_normalized`]
+    /// corrects for exactly that; the dispatch experiments report both,
     /// alongside the per-tenant p95 *queueing* delay
     /// ([`Metrics::queue_latency`]), which is the direct starvation
-    /// metric and the one the acceptance criteria gate on.
+    /// metric the acceptance criteria gate on.
     pub fn fairness_index(&self) -> f64 {
         jain_fairness(
             self.per_model
@@ -885,14 +1343,42 @@ impl GatewayStats {
         )
     }
 
+    /// Demand-normalized Jain fairness: each tenant is scored by served
+    /// rows over `min(its demand, its weighted share of total service)`,
+    /// so a tenant that offered less than its entitlement and got all of
+    /// it reads as perfectly served instead of dragging the index down.
+    /// This isolates *scheduler* fairness from the arrival mix — the
+    /// raw [`GatewayStats::fairness_index`] is the right lens only at
+    /// saturation. See
+    /// [`jain_fairness_normalized`](crate::coordinator::metrics::jain_fairness_normalized).
+    pub fn fairness_index_normalized(&self) -> f64 {
+        let rows: Vec<(f64, f64, f64)> = self
+            .per_model
+            .iter()
+            .filter(|m| m.submitted > 0)
+            .map(|m| (m.metrics.batch_rows as f64, m.submitted as f64, f64::from(m.weight.max(1))))
+            .collect();
+        jain_fairness_normalized(&rows)
+    }
+
     /// True when every model's counters balance.
     pub fn conserved(&self) -> bool {
         self.per_model.iter().all(ModelStats::conserved)
     }
 }
 
-/// Registers models (each with a service weight), then
-/// [`GatewayBuilder::start`]s the fleet.
+/// One tenant registration queued on a [`GatewayBuilder`].
+struct TenantSpec {
+    name: String,
+    engine: Engine,
+    weight: u32,
+    /// `None` inherits the fleet policy.
+    policy: Option<BatchPolicy>,
+}
+
+/// Registers models (each with a service weight and optional per-tenant
+/// batch policy), then [`GatewayBuilder::start`]s the fleet. More models
+/// can be added to the running gateway with [`Gateway::add_model`].
 ///
 /// # Examples
 ///
@@ -929,7 +1415,7 @@ impl GatewayStats {
 /// ```
 pub struct GatewayBuilder {
     cfg: GatewayConfig,
-    models: Vec<(String, Engine, u32)>,
+    models: Vec<TenantSpec>,
 }
 
 impl Default for GatewayBuilder {
@@ -964,12 +1450,36 @@ impl GatewayBuilder {
     /// before a saturated low-weight one's. Weights are ignored by
     /// [`Dispatch::Fixed`].
     pub fn register_weighted(&mut self, name: &str, engine: Engine, weight: u32) -> ModelId {
+        self.push(name, engine, weight, None)
+    }
+
+    /// Register a model with an explicit per-tenant [`BatchPolicy`]
+    /// (max batch rows / max wait) instead of the fleet default — a
+    /// latency-sensitive tenant can run small fast batches while a
+    /// throughput tenant coalesces large ones, on the same fleet.
+    pub fn register_with_policy(
+        &mut self,
+        name: &str,
+        engine: Engine,
+        weight: u32,
+        policy: BatchPolicy,
+    ) -> ModelId {
+        self.push(name, engine, weight, Some(policy))
+    }
+
+    fn push(
+        &mut self,
+        name: &str,
+        engine: Engine,
+        weight: u32,
+        policy: Option<BatchPolicy>,
+    ) -> ModelId {
         assert!(weight >= 1, "model '{name}' needs weight >= 1 (got {weight})");
         assert!(
-            self.models.iter().all(|(n, _, _)| n != name),
+            self.models.iter().all(|s| s.name != name),
             "model '{name}' registered twice"
         );
-        self.models.push((name.to_string(), engine, weight));
+        self.models.push(TenantSpec { name: name.to_string(), engine, weight, policy });
         ModelId(self.models.len() - 1)
     }
 
@@ -979,17 +1489,46 @@ impl GatewayBuilder {
     }
 }
 
-/// One worker's mutable metrics slot for one model.
-type MetricsCell = Arc<Mutex<Metrics>>;
-
 /// A running multi-model serving gateway; [`Gateway::shutdown`] drains
-/// and joins.
+/// and joins. The tenant set is live: [`Gateway::add_model`],
+/// [`Gateway::remove_model`], and [`Gateway::set_weight`] mutate the
+/// registry while traffic flows.
+///
+/// # Examples
+///
+/// Hot-add a tenant to a running gateway, serve it, re-weight it, then
+/// remove it gracefully — conservation holds across the whole cycle:
+///
+/// ```
+/// use kan_sas::coordinator::{DrainMode, GatewayBuilder, GatewayConfig};
+/// use kan_sas::kan::{Engine, QuantizedModel};
+///
+/// let mut builder = GatewayBuilder::with_config(GatewayConfig {
+///     replicas: 1,
+///     ..Default::default()
+/// });
+/// builder.register(
+///     "base",
+///     Engine::new(QuantizedModel::synthetic("base", &[4, 6, 3], 5, 3, 1)),
+/// );
+/// let gateway = builder.start();
+///
+/// let late = gateway.add_model(
+///     "late",
+///     Engine::new(QuantizedModel::synthetic("late", &[6, 8, 5], 5, 3, 2)),
+/// )?;
+/// assert_eq!(late.infer_q(vec![1, 2, 3, 4, 5, 6])?.t.len(), 5);
+/// gateway.set_weight(late.model_id(), 4)?;
+/// let removed = gateway.remove_model(late.model_id(), DrainMode::Serve)?;
+/// assert!(removed.conserved() && !removed.live);
+/// assert!(late.infer_q(vec![1, 2, 3, 4, 5, 6]).is_err(), "removed tenants reject");
+/// assert!(gateway.shutdown().conserved());
+/// # Ok::<(), kan_sas::coordinator::ServeError>(())
+/// ```
 pub struct Gateway {
     shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
-    /// `[replica][model]` metrics cells.
-    per_worker: Vec<Vec<MetricsCell>>,
-    handles: Vec<ModelHandle>,
+    replicas: usize,
 }
 
 impl Gateway {
@@ -998,97 +1537,344 @@ impl Gateway {
         GatewayBuilder::new()
     }
 
-    fn start(cfg: GatewayConfig, models: Vec<(String, Engine, u32)>) -> Self {
+    fn start(cfg: GatewayConfig, models: Vec<TenantSpec>) -> Self {
         assert!(cfg.replicas >= 1, "gateway needs at least one replica");
         assert!(cfg.queue_cap >= 1, "admission queue needs capacity");
         assert!(!models.is_empty(), "gateway needs at least one registered model");
-        let n_models = models.len();
-        let buffers: Vec<Arc<BufferPool>> = models
-            .iter()
-            .map(|(_, e, _)| {
-                // retain enough for a full queue of this model plus every
-                // replica's in-flight batch
-                let retain = cfg.queue_cap + cfg.replicas * cfg.policy.max_batch;
-                Arc::new(BufferPool::new(e.out_dim(), retain))
+        let tenants: Vec<Tenant> = models
+            .into_iter()
+            .map(|s| {
+                Tenant::new(
+                    &s.name,
+                    s.engine,
+                    s.weight,
+                    s.policy.unwrap_or(cfg.policy),
+                    cfg.queue_cap,
+                    cfg.replicas,
+                )
             })
             .collect();
+        let n_models = tenants.len();
+        let registry = build_snapshot(1, tenants, cfg.queue_cap, cfg.quota);
         let shards = (0..cfg.replicas)
             .map(|_| Shard {
-                queues: Mutex::new(ShardQueues::new(n_models, cfg.policy)),
+                queues: Mutex::new(ShardQueues::empty()),
                 backlog: AtomicUsize::new(0),
             })
             .collect();
         let shared = Arc::new(Shared {
             state: Mutex::new(GwState {
+                registry,
                 items: VecDeque::new(),
                 open: true,
                 submitted: vec![0; n_models],
                 shed: vec![0; n_models],
+                depth: vec![0; n_models],
+                overflow: 0,
                 peak_depth: 0,
             }),
             nonempty: Condvar::new(),
             space: Condvar::new(),
+            drained: Condvar::new(),
+            admin: Mutex::new(()),
+            draining: AtomicBool::new(false),
             cap: cfg.queue_cap,
             shed_policy: cfg.shed,
             dispatch: cfg.dispatch,
-            weights: models.iter().map(|(_, _, w)| *w).collect(),
-            counters: (0..n_models).map(|_| ModelCounters::default()).collect(),
-            buffers,
+            quota: cfg.quota,
+            replicas: cfg.replicas,
+            default_policy: cfg.policy,
             shards,
         });
         let mut workers = Vec::with_capacity(cfg.replicas);
-        let mut per_worker = Vec::with_capacity(cfg.replicas);
         for i in 0..cfg.replicas {
-            let cells: Vec<MetricsCell> =
-                (0..n_models).map(|_| Arc::new(Mutex::new(Metrics::default()))).collect();
-            per_worker.push(cells.clone());
-            // replica set: clones alias weights + compiled plans, ~1x memory
-            let engines: Vec<Engine> = models.iter().map(|(_, e, _)| e.clone()).collect();
             let shared_w = Arc::clone(&shared);
-            let policy = cfg.policy;
             let sim_array = cfg.sim_array;
             let w = std::thread::Builder::new()
                 .name(format!("kansas-gw-{i}"))
-                .spawn(move || worker_loop(i, engines, policy, sim_array, shared_w, cells))
+                .spawn(move || worker_loop(i, sim_array, shared_w))
                 .expect("spawn gateway worker");
             workers.push(w);
         }
-        let handles = models
-            .iter()
-            .enumerate()
-            .map(|(m, (name, e, _))| ModelHandle {
-                shared: Arc::clone(&shared),
-                model: ModelId(m),
-                name: Arc::from(name.as_str()),
-                in_dim: e.in_dim(),
-                out_dim: e.out_dim(),
-            })
-            .collect();
-        Self { shared, workers, per_worker, handles }
+        Self { shared, workers, replicas: cfg.replicas }
     }
 
-    /// Number of registered models.
+    /// Number of live (registered, not removed) models.
     pub fn n_models(&self) -> usize {
-        self.handles.len()
+        let st = self.shared.state.lock().unwrap();
+        st.registry.tenants.iter().filter(|t| t.is_live()).count()
+    }
+
+    /// The registry epoch: bumps on every add_model / set_weight and
+    /// twice per remove_model. Workers adopt a new epoch at their next
+    /// batch boundary.
+    pub fn registry_epoch(&self) -> u64 {
+        self.shared.state.lock().unwrap().registry.epoch
+    }
+
+    fn handle_of(&self, t: &Tenant, slot: usize) -> ModelHandle {
+        ModelHandle {
+            shared: Arc::clone(&self.shared),
+            model: ModelId(slot),
+            name: Arc::clone(&t.name),
+            in_dim: t.in_dim,
+            out_dim: t.out_dim,
+        }
     }
 
     /// The typed handle for a registered model.
+    ///
+    /// # Panics
+    ///
+    /// Panics if `id` was never registered on this gateway. A *removed*
+    /// model still resolves (its submissions then answer
+    /// [`ServeError::UnknownModel`]).
     pub fn handle(&self, id: ModelId) -> ModelHandle {
-        self.handles[id.0].clone()
+        let st = self.shared.state.lock().unwrap();
+        let reg = Arc::clone(&st.registry);
+        drop(st);
+        let t = reg.tenants.get(id.0).expect("ModelId registered on this gateway");
+        self.handle_of(t, id.0)
     }
 
-    /// Resolve a handle by registered name.
+    /// Resolve a handle by registered name (live tenants only).
     pub fn handle_by_name(&self, name: &str) -> Result<ModelHandle, ServeError> {
-        self.handles
+        let st = self.shared.state.lock().unwrap();
+        let reg = Arc::clone(&st.registry);
+        drop(st);
+        reg.tenants
             .iter()
-            .find(|h| &*h.name == name)
-            .cloned()
+            .enumerate()
+            .find(|(_, t)| t.is_live() && &*t.name == name)
+            .map(|(slot, t)| self.handle_of(t, slot))
             .ok_or_else(|| ServeError::UnknownModel(name.to_string()))
     }
 
-    /// All handles, in registration order.
+    /// All live handles, in registration (slot) order.
     pub fn handles(&self) -> Vec<ModelHandle> {
-        self.handles.clone()
+        let st = self.shared.state.lock().unwrap();
+        let reg = Arc::clone(&st.registry);
+        drop(st);
+        reg.tenants
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.is_live())
+            .map(|(slot, t)| self.handle_of(t, slot))
+            .collect()
+    }
+
+    /// Hot-add a model (service weight 1, fleet batch policy) to the
+    /// running gateway. The new tenant is admissible immediately;
+    /// workers pick it up at their next batch boundary. Quota
+    /// reservations are recomputed over the new tenant set.
+    pub fn add_model(&self, name: &str, engine: Engine) -> Result<ModelHandle, ServeError> {
+        self.add_model_with(name, engine, 1, None)
+    }
+
+    /// Hot-add a model with an explicit service weight.
+    pub fn add_model_weighted(
+        &self,
+        name: &str,
+        engine: Engine,
+        weight: u32,
+    ) -> Result<ModelHandle, ServeError> {
+        self.add_model_with(name, engine, weight, None)
+    }
+
+    /// Hot-add a model with an explicit weight and (optionally) its own
+    /// [`BatchPolicy`]. Errors: [`ServeError::InvalidInput`] for a zero
+    /// weight or a name already live, [`ServeError::Closed`] after
+    /// shutdown began.
+    pub fn add_model_with(
+        &self,
+        name: &str,
+        engine: Engine,
+        weight: u32,
+        policy: Option<BatchPolicy>,
+    ) -> Result<ModelHandle, ServeError> {
+        if weight == 0 {
+            return Err(ServeError::InvalidInput(format!(
+                "model '{name}' needs weight >= 1"
+            )));
+        }
+        let _admin = self.shared.admin.lock().unwrap();
+        let mut st = self.shared.state.lock().unwrap();
+        if !st.open {
+            return Err(ServeError::Closed);
+        }
+        if st.registry.tenants.iter().any(|t| t.is_live() && &*t.name == name) {
+            return Err(ServeError::InvalidInput(format!(
+                "model '{name}' already registered"
+            )));
+        }
+        let tenant = Tenant::new(
+            name,
+            engine,
+            weight,
+            policy.unwrap_or(self.shared.default_policy),
+            self.shared.cap,
+            self.shared.replicas,
+        );
+        let slot = st.registry.tenants.len();
+        let handle = self.handle_of(&tenant, slot);
+        let mut tenants = st.registry.tenants.clone();
+        tenants.push(tenant);
+        st.registry =
+            build_snapshot(st.registry.epoch + 1, tenants, self.shared.cap, self.shared.quota);
+        st.submitted.push(0);
+        st.shed.push(0);
+        st.depth.push(0);
+        st.overflow = overflow_scan(&st);
+        Ok(handle)
+    }
+
+    /// Re-weight a live tenant. Takes effect at every worker's next
+    /// batch boundary (DRR quanta) and immediately for quota
+    /// reservations, which are recomputed over the new weights.
+    pub fn set_weight(&self, id: ModelId, weight: u32) -> Result<(), ServeError> {
+        if weight == 0 {
+            return Err(ServeError::InvalidInput("service weight must be >= 1".to_string()));
+        }
+        let _admin = self.shared.admin.lock().unwrap();
+        let mut st = self.shared.state.lock().unwrap();
+        match st.registry.tenants.get(id.0) {
+            None => return Err(ServeError::UnknownModel(id.to_string())),
+            Some(t) if !t.is_live() => {
+                return Err(ServeError::UnknownModel(t.name.to_string()))
+            }
+            Some(t) if t.weight == weight => return Ok(()),
+            Some(_) => {}
+        }
+        let mut tenants = st.registry.tenants.clone();
+        tenants[id.0].weight = weight;
+        st.registry =
+            build_snapshot(st.registry.epoch + 1, tenants, self.shared.cap, self.shared.quota);
+        st.overflow = overflow_scan(&st);
+        Ok(())
+    }
+
+    /// Remove a live tenant from the running gateway.
+    ///
+    /// The drain contract, in order: (1) the tenant stops accepting —
+    /// a registry swap makes new submissions resolve
+    /// [`ServeError::UnknownModel`]; (2) its backlog is disposed of per
+    /// [`DrainMode`] — served to completion (non-due batches are
+    /// expedited) or answered `QueueFull`; (3) once the tenant's
+    /// in-flight count reaches zero its engine is dropped (freeing the
+    /// model memory) and its [`BufferPool`] retired. Blocks until the
+    /// drain completes and returns the tenant's final [`ModelStats`]
+    /// (which also stay visible in [`GatewayStats`] with
+    /// `live == false`). Per-model conservation holds across the whole
+    /// transition.
+    pub fn remove_model(&self, id: ModelId, mode: DrainMode) -> Result<ModelStats, ServeError> {
+        let _admin = self.shared.admin.lock().unwrap();
+        let counters;
+        let buffers;
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            if !st.open {
+                return Err(ServeError::Closed);
+            }
+            match st.registry.tenants.get(id.0) {
+                None => return Err(ServeError::UnknownModel(id.to_string())),
+                Some(t) if !t.is_live() => {
+                    return Err(ServeError::UnknownModel(t.name.to_string()))
+                }
+                Some(t) => {
+                    counters = Arc::clone(&t.counters);
+                    buffers = Arc::clone(&t.buffers);
+                }
+            }
+            // (1) stop accepting; reservations redistribute to the
+            // survivors; workers see the epoch bump and expedite this
+            // tenant's batches
+            let mut tenants = st.registry.tenants.clone();
+            tenants[id.0].accepting = false;
+            st.registry =
+                build_snapshot(st.registry.epoch + 1, tenants, self.shared.cap, self.shared.quota);
+            st.overflow = overflow_scan(&st);
+            // (2, Shed) flush the backlog: everything still in the
+            // shared queue or a shard batcher is answered QueueFull.
+            // Batches already being served complete normally — both
+            // outcomes keep `submitted == completed + shed + failed`.
+            if mode == DrainMode::Shed {
+                let mut answered = 0u64;
+                let mut kept = VecDeque::with_capacity(st.items.len());
+                while let Some(r) = st.items.pop_front() {
+                    if r.model == id {
+                        answered += 1;
+                        buffers.release(r.out);
+                        let _ = r.resp.send(Err(ServeError::QueueFull));
+                    } else {
+                        kept.push_back(r);
+                    }
+                }
+                st.items = kept;
+                for _ in 0..st.depth[id.0] {
+                    depth_dec(&mut st, id.0);
+                }
+                // state → shard lock order, same as the pull path
+                let mut swept: Vec<GwRequest> = Vec::new();
+                for shard in &self.shared.shards {
+                    let mut q = shard.queues.lock().unwrap();
+                    if id.0 >= q.batchers.len() {
+                        continue;
+                    }
+                    loop {
+                        let took = q.batchers[id.0].drain_upto(&mut swept, usize::MAX);
+                        if took == 0 {
+                            break;
+                        }
+                        shard.backlog.fetch_sub(took, Ordering::Relaxed);
+                        answered += took as u64;
+                        for r in swept.drain(..) {
+                            buffers.release(r.out);
+                            let _ = r.resp.send(Err(ServeError::QueueFull));
+                        }
+                    }
+                }
+                st.shed[id.0] += answered;
+                counters.inflight.fetch_sub(answered, Ordering::SeqCst);
+            }
+        }
+        self.shared.space.notify_all();
+        // (2, Serve) / tail of Shed: wait until everything admitted for
+        // the tenant has been answered. Workers are nudged each lap so
+        // sleeping ones reload the registry and see the expedite flags;
+        // progress is theirs, the 500us timeout only bounds a missed
+        // wakeup.
+        self.shared.draining.store(true, Ordering::SeqCst);
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            while counters.inflight.load(Ordering::SeqCst) > 0 {
+                self.shared.nonempty.notify_all();
+                let (g, _) = self
+                    .shared
+                    .drained
+                    .wait_timeout(st, Duration::from_micros(500))
+                    .unwrap();
+                st = g;
+            }
+        }
+        self.shared.draining.store(false, Ordering::SeqCst);
+        // (3) retire: drop the engine (frees the model's share of the
+        // Arc'd weights once stale worker snapshots refresh) and empty
+        // the buffer free-list. In-flight Responses still hold pool Arcs
+        // and free their buffers on drop.
+        let stats;
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            let mut tenants = st.registry.tenants.clone();
+            tenants[id.0].engine = None;
+            tenants[id.0].accepting = false;
+            st.registry =
+                build_snapshot(st.registry.epoch + 1, tenants, self.shared.cap, self.shared.quota);
+            st.overflow = overflow_scan(&st);
+            let reg = Arc::clone(&st.registry);
+            stats = make_model_stats(&reg.tenants[id.0], st.submitted[id.0], st.shed[id.0]);
+        }
+        buffers.retire();
+        Ok(stats)
     }
 
     /// Live snapshot (the gateway keeps serving).
@@ -1112,87 +1898,87 @@ impl Gateway {
     }
 
     fn snapshot(&self) -> GatewayStats {
-        let n_models = self.handles.len();
+        let st = self.shared.state.lock().unwrap();
+        let reg = Arc::clone(&st.registry);
+        let queue_depth = st.items.len();
+        let peak_depth = st.peak_depth;
+        let submitted = st.submitted.clone();
+        let shed = st.shed.clone();
+        drop(st);
         let mut merged = Metrics::default();
-        let mut per_replica = Vec::with_capacity(self.per_worker.len());
-        let mut model_metrics = vec![Metrics::default(); n_models];
-        for cells in &self.per_worker {
-            let mut replica = Metrics::default();
-            for (m, cell) in cells.iter().enumerate() {
+        let mut per_replica = vec![Metrics::default(); self.replicas];
+        let mut per_model = Vec::with_capacity(reg.tenants.len());
+        for (m, t) in reg.tenants.iter().enumerate() {
+            for (r, cell) in t.cells.iter().enumerate() {
                 let mm = cell.lock().unwrap().clone();
                 merged.merge(&mm);
-                replica.merge(&mm);
-                model_metrics[m].merge(&mm);
+                per_replica[r].merge(&mm);
             }
-            per_replica.push(replica);
+            per_model.push(make_model_stats(t, submitted[m], shed[m]));
         }
-        let st = self.shared.state.lock().unwrap();
-        let per_model = (0..n_models)
-            .map(|m| {
-                let c = &self.shared.counters[m];
-                let expired = c.expired.load(Ordering::Relaxed);
-                let (created, recycled, _) = self.shared.buffers[m].counts();
-                ModelStats {
-                    name: self.handles[m].name.to_string(),
-                    weight: self.shared.weights[m],
-                    submitted: st.submitted[m],
-                    completed: c.completed.load(Ordering::Relaxed),
-                    // expired requests are shed too: they were answered
-                    // without inference
-                    shed: st.shed[m] + expired,
-                    expired,
-                    failed: c.failed.load(Ordering::Relaxed),
-                    metrics: std::mem::take(&mut model_metrics[m]),
-                    buffers_created: created,
-                    buffers_recycled: recycled,
-                }
-            })
-            .collect();
         GatewayStats {
             merged,
             per_replica,
             per_model,
-            peak_depth: st.peak_depth,
-            queue_depth: st.items.len(),
-            replicas: self.per_worker.len(),
+            peak_depth,
+            queue_depth,
+            replicas: self.replicas,
+            epoch: reg.epoch,
         }
     }
 }
 
-/// One fleet worker: replicas of every model, a fleet-visible shard of
-/// per-model batchers, one scratch arena sized to the widest model, two
-/// reusable batch Vecs. Each turn of the loop: pull admissions into the
-/// own shard, dispatch ONE batch (own shard by the configured
-/// [`Dispatch`] policy, else steal a due batch from the most backlogged
-/// peer), serve it, repeat. The worker sleeps only when nothing is due
-/// anywhere it can reach, and exits only when the gateway is closed and
-/// fully drained.
-fn worker_loop(
-    me: usize,
-    engines: Vec<Engine>,
-    policy: BatchPolicy,
-    sim_array: ArrayConfig,
-    shared: Arc<Shared>,
-    metrics: Vec<MetricsCell>,
+/// Re-sync worker-local caches with a (new) registry snapshot: the DRR
+/// weight table, and scratch-arena fitting for tenants this worker has
+/// not seen yet (slots are append-only, so `fitted` is a watermark).
+/// Runs outside every lock; only on an epoch change in steady state.
+fn refresh_tenants(
+    snap: &RegistrySnapshot,
+    weights: &mut Vec<u32>,
+    scratch: &mut Scratch,
+    fitted: &mut usize,
 ) {
-    // Worker-owned execution state, allocated once per replica: one
-    // scratch arena grown to fit every registered model's plan at the
-    // peak batch size, plus the two batch Vecs every dispatch reuses
-    // (drained batch, then deadline-surviving subset). Batchers live in
-    // the fleet-shared shard, not here — peers steal out of them.
-    let mut scratch = Scratch::new();
-    for e in &engines {
-        scratch.fit(e.plan(), policy.max_batch);
+    weights.clear();
+    weights.extend(snap.tenants.iter().map(|t| t.weight));
+    for t in &snap.tenants[*fitted..] {
+        if let Some(e) = &t.engine {
+            scratch.fit(e.plan(), t.policy.max_batch);
+        }
     }
-    let mut batch: Vec<GwRequest> = Vec::with_capacity(policy.max_batch);
-    let mut live: Vec<GwRequest> = Vec::with_capacity(policy.max_batch);
+    *fitted = snap.tenants.len();
+}
+
+/// One fleet worker: serves every registered model through the registry
+/// snapshot, owns a fleet-visible shard of per-model batchers, one
+/// scratch arena sized to the widest model, two reusable batch Vecs.
+/// Each turn of the loop: refresh the registry cache if the epoch moved
+/// (one u64 compare otherwise), pull admissions into the own shard,
+/// dispatch ONE batch (own shard by the configured [`Dispatch`] policy,
+/// else steal a due batch from the most backlogged peer), serve it,
+/// repeat. The worker sleeps only when nothing is due anywhere it can
+/// reach, and exits only when the gateway is closed and fully drained.
+fn worker_loop(me: usize, sim_array: ArrayConfig, shared: Arc<Shared>) {
+    let mut scratch = Scratch::new();
+    let mut batch: Vec<GwRequest> = Vec::new();
+    let mut live: Vec<GwRequest> = Vec::new();
+    let mut snap = Arc::clone(&shared.state.lock().unwrap().registry);
+    let mut weights: Vec<u32> = Vec::new();
+    let mut fitted = 0usize;
+    refresh_tenants(&snap, &mut weights, &mut scratch, &mut fitted);
     loop {
-        // Phase 1: move admitted requests into this worker's shard.
+        // Phase 1: adopt any registry change, then move admitted
+        // requests into this worker's shard (the pull also grows the
+        // shard to the current snapshot under the same locks).
         let closed;
+        let mut reloaded = false;
         {
             let mut st = shared.state.lock().unwrap();
+            if st.registry.epoch != snap.epoch {
+                snap = Arc::clone(&st.registry);
+                reloaded = true;
+            }
             closed = !st.open;
-            let admitted = pull_into(&mut st, &shared, me, policy.max_batch);
+            let admitted = pull_into(&mut st, &shared, me);
             let more_queued = !st.items.is_empty();
             drop(st);
             if admitted {
@@ -1204,16 +1990,21 @@ fn worker_loop(
                 }
             }
         }
+        if reloaded {
+            // outside the locks: fit the scratch for unseen tenants and
+            // rebuild the DRR weight table before dispatching them
+            refresh_tenants(&snap, &mut weights, &mut scratch, &mut fitted);
+        }
         // Phase 2: dispatch one batch — own shard first, then steal.
         // Batches never mix models: each drain comes from one model's
-        // batcher and runs on that model's replica (every worker holds
-        // replicas of every model, so stolen batches serve anywhere).
+        // batcher and runs on that model's registry engine (shared by
+        // the whole fleet, so stolen batches serve anywhere).
         let mut picked: Option<(usize, bool)> = None;
         {
             let shard = &shared.shards[me];
             let mut q = shard.queues.lock().unwrap();
             let pick = match shared.dispatch {
-                Dispatch::FairSteal => q.next_drr(&shared.weights, policy.max_batch, closed),
+                Dispatch::FairSteal => q.next_drr(&weights, closed),
                 Dispatch::Fixed => q.next_fixed(closed),
             };
             if let Some(m) = pick {
@@ -1223,19 +2014,17 @@ fn worker_loop(
             }
         }
         if picked.is_none() && shared.dispatch == Dispatch::FairSteal {
-            picked =
-                steal_batch(&shared, me, policy.max_batch, closed, &mut batch).map(|m| (m, true));
+            picked = steal_batch(&shared, &snap, me, closed, &mut batch).map(|m| (m, true));
         }
         if let Some((m, stolen)) = picked {
             serve_batch(
-                &engines[m],
+                &snap.tenants[m],
+                me,
                 &sim_array,
                 &mut batch,
                 &mut live,
                 &mut scratch,
                 &shared,
-                &shared.counters[m],
-                &metrics[m],
                 stolen,
             );
             continue;
@@ -1278,28 +2067,33 @@ fn worker_loop(
     }
 }
 
-/// Move queued requests into worker `me`'s shard. [`Dispatch::Fixed`]
-/// preserves the pre-fair behaviour: strict FIFO that stops at the
-/// first request whose batcher is full, so a one-tenant burst
-/// head-of-line blocks every other tenant. [`Dispatch::FairSteal`]
-/// scans past such requests — a saturated tenant's overflow stays
-/// queued while other tenants' arrivals keep flowing (per-model FIFO
-/// order is preserved; only *other* models' requests are overtaken).
-/// Returns whether anything entered the shard. Runs under the
-/// admission-queue lock, and updates the shard's backlog index there
-/// too, so "queue empty + all backlogs zero" is an exact drained check.
-fn pull_into(st: &mut GwState, shared: &Shared, me: usize, max_batch: usize) -> bool {
+/// Move queued requests into worker `me`'s shard (growing it to the
+/// current registry first). [`Dispatch::Fixed`] preserves the pre-fair
+/// behaviour: strict FIFO that stops at the first request whose batcher
+/// is full, so a one-tenant burst head-of-line blocks every other
+/// tenant. [`Dispatch::FairSteal`] scans past such requests — a
+/// saturated tenant's overflow stays queued while other tenants'
+/// arrivals keep flowing (per-model FIFO order is preserved; only
+/// *other* models' requests are overtaken). Returns whether anything
+/// entered the shard. Runs under the admission-queue lock, and updates
+/// the shard's backlog index and per-tenant queue depths there too, so
+/// "queue empty + all backlogs zero" is an exact drained check and the
+/// quota accountant never double-counts.
+fn pull_into(st: &mut GwState, shared: &Shared, me: usize) -> bool {
+    let reg = Arc::clone(&st.registry);
     let shard = &shared.shards[me];
     let mut q = shard.queues.lock().unwrap();
+    q.grow(&reg);
     let mut admitted = 0usize;
     match shared.dispatch {
         Dispatch::Fixed => {
             while let Some(front) = st.items.front() {
                 let b = &mut q.batchers[front.model.0];
-                if b.len() >= max_batch {
+                if b.len() >= b.max_batch() {
                     break;
                 }
                 let r = st.items.pop_front().expect("front just observed");
+                depth_dec(st, r.model.0);
                 b.push_arrived(r.submitted, r);
                 admitted += 1;
             }
@@ -1309,8 +2103,11 @@ fn pull_into(st: &mut GwState, shared: &Shared, me: usize, max_batch: usize) -> 
             // mostly one tenant's overflow with no batcher room, and
             // this runs under the hottest lock in the system — don't
             // pay the rotation's writes unless something will admit.
-            let admissible = q.batchers.iter().any(|b| b.len() < max_batch)
-                && st.items.iter().any(|r| q.batchers[r.model.0].len() < max_batch);
+            let admissible = q.batchers.iter().any(|b| b.len() < b.max_batch())
+                && st.items.iter().any(|r| {
+                    let b = &q.batchers[r.model.0];
+                    b.len() < b.max_batch()
+                });
             if admissible {
                 // One O(n) rotation: route each request into its
                 // batcher if there's room, else re-queue it at the back
@@ -1323,9 +2120,10 @@ fn pull_into(st: &mut GwState, shared: &Shared, me: usize, max_batch: usize) -> 
                 for _ in 0..scan {
                     let r = st.items.pop_front().expect("count just observed");
                     let b = &mut q.batchers[r.model.0];
-                    if b.len() >= max_batch {
+                    if b.len() >= b.max_batch() {
                         st.items.push_back(r);
                     } else {
+                        depth_dec(st, r.model.0);
                         b.push_arrived(r.submitted, r);
                         admitted += 1;
                     }
@@ -1339,26 +2137,29 @@ fn pull_into(st: &mut GwState, shared: &Shared, me: usize, max_batch: usize) -> 
     admitted > 0
 }
 
-/// Steal one due batch from a backlogged peer's shard, trying peers in
+/// Steal a due batch from a backlogged peer's shard, trying peers in
 /// descending-backlog order (the index reads are lock-free atomics;
 /// only probed shards are locked). A heavily backlogged peer whose
 /// batches are all still coalescing must not mask a lighter peer with a
 /// batch due *now* — the thief keeps probing until it finds due work or
 /// runs out of backlogged peers. Within the victim shard the longest
-/// due batcher is drained (up to one batch — the drain is splittable,
-/// so leftover items keep their arrival clocks). Returns the model
-/// stolen, or `None` when no peer has a due batch.
+/// due batcher is drained; an over-full backlog is *split* (the thief
+/// takes ~half, [`steal_limit`]) and the leftover items keep their
+/// arrival clocks. Slots the thief's registry snapshot doesn't know yet
+/// (or whose engine is already retired) are skipped — the owner, whose
+/// snapshot is necessarily current for anything it pulled, serves
+/// those. Returns the model stolen, or `None` when no peer has a due
+/// batch.
 fn steal_batch(
     shared: &Shared,
+    snap: &RegistrySnapshot,
     me: usize,
-    max_batch: usize,
     flush: bool,
     batch: &mut Vec<GwRequest>,
 ) -> Option<usize> {
     // Victim preference order, allocation-free: the most backlogged
     // peer first (atomic reads only), then every other backlogged peer
-    // in index order — a heavy peer whose batches are all still
-    // coalescing must not mask a lighter peer with a batch due now.
+    // in index order.
     let heaviest = shared
         .shards
         .iter()
@@ -1368,35 +2169,39 @@ fn steal_batch(
         .filter(|&(_, backlog)| backlog > 0)
         .max_by_key(|&(_, backlog)| backlog)
         .map(|(i, _)| i)?;
-    if let Some(m) = try_steal_from(shared, heaviest, max_batch, flush, batch) {
+    if let Some(m) = try_steal_from(shared, snap, heaviest, flush, batch) {
         return Some(m);
     }
     for (i, shard) in shared.shards.iter().enumerate() {
         if i == me || i == heaviest || shard.backlog.load(Ordering::Relaxed) == 0 {
             continue;
         }
-        if let Some(m) = try_steal_from(shared, i, max_batch, flush, batch) {
+        if let Some(m) = try_steal_from(shared, snap, i, flush, batch) {
             return Some(m);
         }
     }
     None
 }
 
-/// Probe one victim shard: drain its longest due batcher (up to one
-/// batch) into `batch`, or `None` when nothing in it is due.
+/// Probe one victim shard: split-drain its longest due batcher (among
+/// the slots this thief can serve) into `batch`, or `None` when nothing
+/// in it is due.
 fn try_steal_from(
     shared: &Shared,
+    snap: &RegistrySnapshot,
     victim: usize,
-    max_batch: usize,
     flush: bool,
     batch: &mut Vec<GwRequest>,
 ) -> Option<usize> {
     let shard = &shared.shards[victim];
     let mut q = shard.queues.lock().unwrap();
     let m = (0..q.batchers.len())
-        .filter(|&i| q.due(i, flush))
+        .filter(|&i| {
+            snap.tenants.get(i).map(|t| t.engine.is_some()).unwrap_or(false) && q.due(i, flush)
+        })
         .max_by_key(|&i| q.batchers[i].len())?;
-    let took = q.batchers[m].drain_upto(batch, max_batch);
+    let limit = steal_limit(q.batchers[m].len(), q.batchers[m].max_batch());
+    let took = q.batchers[m].drain_upto(batch, limit);
     shard.backlog.fetch_sub(took, Ordering::Relaxed);
     Some(m)
 }
@@ -1425,7 +2230,19 @@ fn wait_hint(shared: &Shared, me: usize) -> Option<Duration> {
     hint
 }
 
-/// Serve one single-model batch on this worker's replica of that model.
+/// Account `answered` responses against the tenant's in-flight count
+/// and, when a removal is draining, ping the waiting remover.
+fn finish_answered(shared: &Shared, counters: &ModelCounters, answered: u64) {
+    if answered == 0 {
+        return;
+    }
+    counters.inflight.fetch_sub(answered, Ordering::SeqCst);
+    if shared.draining.load(Ordering::SeqCst) {
+        shared.drained.notify_all();
+    }
+}
+
+/// Serve one single-model batch on the tenant's registry engine.
 /// Deadline-lapsed requests are answered `DeadlineExceeded` before any
 /// compute; survivors' rows are gathered straight into the scratch's
 /// staging buffer and outputs scattered as slices into each request's
@@ -1436,19 +2253,23 @@ fn wait_hint(shared: &Shared, me: usize) -> Option<Duration> {
 /// model, so steal traffic shows up per replica and per model.
 #[allow(clippy::too_many_arguments)]
 fn serve_batch(
-    engine: &Engine,
+    tenant: &Tenant,
+    me: usize,
     sim_array: &ArrayConfig,
     batch: &mut Vec<GwRequest>,
     live: &mut Vec<GwRequest>,
     scratch: &mut Scratch,
     shared: &Shared,
-    counters: &ModelCounters,
-    metrics: &Mutex<Metrics>,
     stolen: bool,
 ) {
+    let engine =
+        tenant.engine.as_ref().expect("drain contract: a tenant with queued work keeps its engine");
+    let counters = &*tenant.counters;
+    let metrics = &tenant.cells[me];
     let in_dim = engine.in_dim();
     let out_dim = engine.out_dim();
     let serve_start = Instant::now();
+    let mut answered = 0u64;
     live.clear();
     {
         let staging = scratch.stage_input(batch.len() * in_dim);
@@ -1456,8 +2277,9 @@ fn serve_batch(
             match req.deadline {
                 Some(d) if d <= serve_start => {
                     counters.expired.fetch_add(1, Ordering::Relaxed);
-                    shared.buffers[req.model.0].release(req.out);
+                    tenant.buffers.release(req.out);
                     let _ = req.resp.send(Err(ServeError::DeadlineExceeded));
+                    answered += 1;
                 }
                 _ => {
                     staging.extend_from_slice(&req.x_q);
@@ -1468,6 +2290,7 @@ fn serve_batch(
     }
     let bs = live.len();
     if bs == 0 {
+        finish_answered(shared, counters, answered);
         return;
     }
     let result = engine.forward_staged(bs, scratch);
@@ -1489,19 +2312,23 @@ fn serve_batch(
                     t: req.out,
                     queue_us: queue.as_micros() as u64,
                     service_us: service.as_micros() as u64,
-                    pool: Some(Arc::clone(&shared.buffers[req.model.0])),
+                    pool: Some(Arc::clone(&tenant.buffers)),
                 }));
+                answered += 1;
             }
         }
         Err(e) => {
             let msg = format!("inference failed: {e}");
             for req in live.drain(..) {
                 counters.failed.fetch_add(1, Ordering::Relaxed);
-                shared.buffers[req.model.0].release(req.out);
+                tenant.buffers.release(req.out);
                 let _ = req.resp.send(Err(ServeError::Inference(msg.clone())));
+                answered += 1;
             }
         }
     }
+    drop(m);
+    finish_answered(shared, counters, answered);
 }
 
 #[cfg(test)]
@@ -1517,6 +2344,7 @@ mod tests {
             policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
             sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
             dispatch: Dispatch::FairSteal,
+            quota: QuotaPolicy::None,
         });
         let ea = Engine::new(QuantizedModel::synthetic("a", &[4, 6, 3], 5, 3, 5));
         let eb = Engine::new(QuantizedModel::synthetic("b", &[6, 8, 5], 5, 3, 9));
@@ -1527,36 +2355,81 @@ mod tests {
         b.start()
     }
 
-    /// A handle fleet over a worker-less shared queue: admission control
-    /// in isolation, fully deterministic (no racing consumers).
-    fn bare_handles(n_models: usize, cap: usize, shed: ShedPolicy) -> Vec<ModelHandle> {
-        let shared = Arc::new(Shared {
+    /// A worker-less `Shared` over a real registry snapshot: admission
+    /// control in isolation, fully deterministic (no racing consumers).
+    fn bare_shared(
+        weights: &[u32],
+        cap: usize,
+        shed: ShedPolicy,
+        quota: QuotaPolicy,
+    ) -> Arc<Shared> {
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) };
+        let tenants: Vec<Tenant> = weights
+            .iter()
+            .enumerate()
+            .map(|(m, &w)| {
+                let name = format!("m{m}");
+                let e = Engine::new(QuantizedModel::synthetic(
+                    &name,
+                    &[4, 6, 3],
+                    5,
+                    3,
+                    m as u64 + 1,
+                ));
+                Tenant::new(&name, e, w, policy, cap, 0)
+            })
+            .collect();
+        let n = tenants.len();
+        Arc::new(Shared {
             state: Mutex::new(GwState {
+                registry: build_snapshot(1, tenants, cap, quota),
                 items: VecDeque::new(),
                 open: true,
-                submitted: vec![0; n_models],
-                shed: vec![0; n_models],
+                submitted: vec![0; n],
+                shed: vec![0; n],
+                depth: vec![0; n],
+                overflow: 0,
                 peak_depth: 0,
             }),
             nonempty: Condvar::new(),
             space: Condvar::new(),
+            drained: Condvar::new(),
+            admin: Mutex::new(()),
+            draining: AtomicBool::new(false),
             cap,
             shed_policy: shed,
             dispatch: Dispatch::FairSteal,
-            weights: vec![1; n_models],
-            counters: (0..n_models).map(|_| ModelCounters::default()).collect(),
-            buffers: (0..n_models).map(|_| Arc::new(BufferPool::new(3, 16))).collect(),
+            quota,
+            replicas: 0,
+            default_policy: policy,
             shards: Vec::new(),
-        });
-        (0..n_models)
-            .map(|m| ModelHandle {
-                shared: Arc::clone(&shared),
+        })
+    }
+
+    fn handles_of(shared: &Arc<Shared>) -> Vec<ModelHandle> {
+        let reg = Arc::clone(&shared.state.lock().unwrap().registry);
+        reg.tenants
+            .iter()
+            .enumerate()
+            .map(|(m, t)| ModelHandle {
+                shared: Arc::clone(shared),
                 model: ModelId(m),
-                name: Arc::from(format!("m{m}").as_str()),
-                in_dim: 4,
-                out_dim: 3,
+                name: Arc::clone(&t.name),
+                in_dim: t.in_dim,
+                out_dim: t.out_dim,
             })
             .collect()
+    }
+
+    fn bare_handles(n_models: usize, cap: usize, shed: ShedPolicy) -> Vec<ModelHandle> {
+        let shared = bare_shared(&vec![1; n_models], cap, shed, QuotaPolicy::None);
+        handles_of(&shared)
+    }
+
+    /// `(created, recycled, free)` of slot `m`'s buffer pool.
+    fn tenant_buffers(h: &ModelHandle, m: usize) -> (u64, u64, usize) {
+        let st = h.shared.state.lock().unwrap();
+        st.registry.tenants[m].buffers.counts()
     }
 
     #[test]
@@ -1582,6 +2455,7 @@ mod tests {
         assert_eq!((a.submitted, a.completed, a.shed, a.failed), (12, 12, 0, 0));
         assert_eq!((b.submitted, b.completed, b.shed, b.failed), (7, 7, 0, 0));
         assert!(a.conserved() && b.conserved());
+        assert!(a.live && b.live);
         assert_eq!(a.metrics.batch_rows, 12);
         assert_eq!(b.metrics.batch_rows, 7);
         assert_eq!(stats.merged.batch_rows, 19);
@@ -1590,6 +2464,7 @@ mod tests {
         assert_eq!(per_replica_rows, 19);
         assert!(stats.conserved());
         assert_eq!(stats.submitted(), 19);
+        assert_eq!(stats.epoch, 1, "no churn: the start snapshot");
     }
 
     #[test]
@@ -1622,6 +2497,7 @@ mod tests {
         let st = hs[0].shared.state.lock().unwrap();
         assert_eq!(st.submitted, vec![2, 1]);
         assert_eq!(st.shed, vec![1, 0]);
+        assert_eq!(st.depth, vec![1, 1], "rejected arrivals don't count toward depth");
         assert_eq!(st.peak_depth, 2);
     }
 
@@ -1642,13 +2518,14 @@ mod tests {
         let st = hs[0].shared.state.lock().unwrap();
         assert_eq!(st.submitted, vec![3, 1]);
         assert_eq!(st.shed, vec![1, 1], "each model shed its own evicted request");
+        assert_eq!(st.depth, vec![2, 0]);
         drop(st);
         // eviction must recycle the victim's buffer, not drop it: #3's
         // acquire reuses #1's released buffer (model 0); #2's buffer sits
         // on model 1's free-list
-        let (c0, r0, f0) = hs[0].shared.buffers[0].counts();
+        let (c0, r0, f0) = tenant_buffers(&hs[0], 0);
         assert_eq!((c0, r0, f0), (2, 1, 0), "evicted model-0 buffer was reacquired");
-        let (c1, _r1, f1) = hs[0].shared.buffers[1].counts();
+        let (c1, _r1, f1) = tenant_buffers(&hs[0], 1);
         assert_eq!((c1, f1), (1, 1), "evicted model-1 buffer returned to its free-list");
     }
 
@@ -1676,6 +2553,75 @@ mod tests {
     fn priority_orders() {
         assert!(Priority::Low < Priority::Normal && Priority::Normal < Priority::High);
         assert_eq!(Priority::default(), Priority::Normal);
+    }
+
+    #[test]
+    fn quota_reserves_slots_for_idle_tenant() {
+        // cap 8, reserve 0.5, equal weights: 2 slots each + 4 overflow
+        let shared = bare_shared(&[1, 1], 8, ShedPolicy::RejectNew, QuotaPolicy::weighted());
+        let hs = handles_of(&shared);
+        {
+            let st = shared.state.lock().unwrap();
+            let reserved: Vec<usize> = st.registry.tenants.iter().map(|t| t.reserved).collect();
+            assert_eq!(reserved, vec![2, 2]);
+            assert_eq!(st.registry.overflow_cap, 4);
+        }
+        // tenant 0's burst takes its reserve plus the whole overflow…
+        let _burst: Vec<Ticket> =
+            (0..6u8).map(|i| hs[0].submit_q(vec![i; 4]).unwrap()).collect();
+        assert_eq!(hs[0].submit_q(vec![9; 4]).unwrap_err(), ServeError::QueueFull);
+        // …but cannot touch tenant 1's reserved slots
+        let _k1 = hs[1].submit_q(vec![1; 4]).unwrap();
+        let _k2 = hs[1].submit_q(vec![2; 4]).unwrap();
+        // now the queue really is at capacity for everyone
+        assert_eq!(hs[1].submit_q(vec![3; 4]).unwrap_err(), ServeError::QueueFull);
+        let st = shared.state.lock().unwrap();
+        assert_eq!(st.depth, vec![6, 2]);
+        assert_eq!(st.shed, vec![1, 1]);
+        assert_eq!(st.overflow, 4, "t0's 4 overflow slots");
+        assert_eq!(overflow_scan(&st), st.overflow, "cache matches a full recount");
+    }
+
+    #[test]
+    fn quota_drop_oldest_evicts_saturated_tenant_first() {
+        let shared = bare_shared(&[1, 1], 8, ShedPolicy::DropOldest, QuotaPolicy::weighted());
+        let hs = handles_of(&shared);
+        // t0 floods its reserve + the overflow; t1 fills its own reserve
+        let burst: Vec<Ticket> =
+            (0..6u8).map(|i| hs[0].submit_q(vec![i; 4]).unwrap()).collect();
+        let k1 = hs[1].submit_q(vec![10; 4]).unwrap();
+        let _k2 = hs[1].submit_q(vec![11; 4]).unwrap();
+        // full queue: t1's newcomer evicts the OVERSUBSCRIBED tenant's
+        // oldest request — the burster pays, not the victim of the burst
+        let _k3 = hs[1].submit_q(vec![12; 4]).unwrap();
+        assert!(matches!(burst[0].try_wait(), Some(Err(ServeError::QueueFull))));
+        assert!(k1.try_wait().is_none(), "t1's own queue entries survive");
+        let st = shared.state.lock().unwrap();
+        assert_eq!(st.shed, vec![1, 0], "the shed is charged to the saturated tenant");
+        assert_eq!(st.depth, vec![5, 3]);
+    }
+
+    #[test]
+    fn quota_reservation_math_tracks_weights_and_liveness() {
+        let policy = BatchPolicy::default();
+        let mk = |name: &str, w: u32, seed: u64| {
+            let e = Engine::new(QuantizedModel::synthetic(name, &[4, 6, 3], 5, 3, seed));
+            Tenant::new(name, e, w, policy, 16, 0)
+        };
+        let mut tenants = vec![mk("a", 3, 1), mk("b", 1, 2)];
+        let overflow = apply_quota(&mut tenants, 16, QuotaPolicy::Weighted { reserve: 0.5 });
+        assert_eq!(
+            (tenants[0].reserved, tenants[1].reserved, overflow),
+            (6, 2, 8),
+            "budget 8 split 3:1"
+        );
+        // a draining tenant's reservation redistributes to the survivors
+        tenants[0].accepting = false;
+        let overflow = apply_quota(&mut tenants, 16, QuotaPolicy::Weighted { reserve: 0.5 });
+        assert_eq!((tenants[0].reserved, tenants[1].reserved, overflow), (0, 8, 8));
+        // quota off: everything is overflow
+        let overflow = apply_quota(&mut tenants, 16, QuotaPolicy::None);
+        assert_eq!((tenants[0].reserved, tenants[1].reserved, overflow), (0, 0, 16));
     }
 
     /// A request shell for exercising the dispatch machinery without a
@@ -1710,7 +2656,7 @@ mod tests {
                     q.batchers[m].push_arrived(backdated, dummy_req(m));
                 }
             }
-            let pick = q.next_drr(&weights, policy.max_batch, false).expect("both tenants due");
+            let pick = q.next_drr(&weights, false).expect("both tenants due");
             rows[pick] += q.batchers[pick].drain_into(&mut out);
         }
         assert_eq!(rows[0] + rows[1], 400, "every dispatch drains a full batch");
@@ -1731,7 +2677,7 @@ mod tests {
             q.batchers[0].push_arrived(backdated, dummy_req(0));
         }
         q.batchers[1].push_arrived(backdated, dummy_req(1));
-        let pick = q.next_drr(&weights, policy.max_batch, false);
+        let pick = q.next_drr(&weights, false);
         assert_eq!(pick, Some(1), "starved weight-8 tenant beats the saturated weight-1 one");
     }
 
@@ -1747,14 +2693,94 @@ mod tests {
         for _ in 0..32 {
             q.batchers[2].push_arrived(backdated, dummy_req(2));
         }
-        assert_eq!(q.next_drr(&weights, policy.max_batch, false), Some(2));
+        assert_eq!(q.next_drr(&weights, false), Some(2));
         let mut out = Vec::new();
         q.batchers[2].drain_into(&mut out);
-        assert_eq!(q.next_drr(&weights, policy.max_batch, false), None, "nothing due");
+        assert_eq!(q.next_drr(&weights, false), None, "nothing due");
         // not-yet-due items are not dispatched without flush, but are on flush
         q.batchers[0].push(dummy_req(0));
-        assert_eq!(q.next_drr(&weights, policy.max_batch, false), None);
-        assert_eq!(q.next_drr(&weights, policy.max_batch, true), Some(0));
+        assert_eq!(q.next_drr(&weights, false), None);
+        assert_eq!(q.next_drr(&weights, true), Some(0));
+    }
+
+    #[test]
+    fn steal_limit_splits_overfull_backlogs() {
+        assert_eq!(steal_limit(5, 8), 5, "a one-batch backlog is taken whole");
+        assert_eq!(steal_limit(8, 8), 8);
+        assert_eq!(steal_limit(12, 8), 6, "over-full: the thief takes half");
+        assert_eq!(steal_limit(13, 8), 7, "odd halves round up");
+        assert_eq!(steal_limit(40, 8), 8, "half is still capped at one batch");
+        assert_eq!(steal_limit(0, 8), 0);
+    }
+
+    #[test]
+    fn split_steal_leaves_arrival_clocks_intact() {
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(40) };
+        let mut b: Batcher<GwRequest> = Batcher::new(policy);
+        let t0 = Instant::now() - Duration::from_millis(200);
+        for i in 0..12u64 {
+            b.push_arrived(t0 + Duration::from_millis(i), dummy_req(0));
+        }
+        let mut out = Vec::new();
+        let took = b.drain_upto(&mut out, steal_limit(b.len(), b.max_batch()));
+        assert_eq!(took, 6, "12 queued, cap 8: the thief takes half");
+        assert_eq!(b.len(), 6);
+        assert!(b.ready(), "leftover items keep their (long past) arrival clocks");
+        assert_eq!(b.time_left(), Duration::ZERO);
+    }
+
+    #[test]
+    fn draining_tenants_are_expedited() {
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_secs(60) };
+        let e = Engine::new(QuantizedModel::synthetic("d", &[4, 6, 3], 5, 3, 5));
+        let mut t = Tenant::new("d", e, 1, policy, 8, 0);
+        t.accepting = false;
+        let reg = build_snapshot(2, vec![t], 8, QuotaPolicy::None);
+        let mut q = ShardQueues::empty();
+        q.grow(&reg);
+        q.batchers[0].push(dummy_req(0));
+        assert!(!q.batchers[0].ready(), "a 60s window is not due on its own");
+        assert!(q.due(0, false), "draining tenant batches are expedited");
+        assert_eq!(q.soonest_due(), Some(Duration::ZERO));
+        assert_eq!(q.next_drr(&[1], false), Some(0));
+    }
+
+    #[test]
+    fn registry_control_plane_validates() {
+        let gw = two_model_gateway(1, 16, ShedPolicy::RejectNew);
+        assert_eq!(gw.registry_epoch(), 1);
+        assert_eq!(gw.n_models(), 2);
+        // duplicate live name rejected
+        let e = Engine::new(QuantizedModel::synthetic("alpha", &[4, 6, 3], 5, 3, 3));
+        assert!(matches!(gw.add_model("alpha", e), Err(ServeError::InvalidInput(_))));
+        // zero weight rejected
+        let e = Engine::new(QuantizedModel::synthetic("z", &[4, 6, 3], 5, 3, 3));
+        assert!(matches!(gw.add_model_weighted("z", e, 0), Err(ServeError::InvalidInput(_))));
+        // set_weight validation
+        assert!(matches!(gw.set_weight(ModelId(9), 2), Err(ServeError::UnknownModel(_))));
+        assert!(matches!(gw.set_weight(ModelId(0), 0), Err(ServeError::InvalidInput(_))));
+        // live re-weight bumps the epoch and surfaces in stats
+        gw.set_weight(ModelId(0), 7).unwrap();
+        assert_eq!(gw.stats().per_model[0].weight, 7);
+        assert_eq!(gw.registry_epoch(), 2);
+        // remove, then double-remove errors
+        let removed = gw.remove_model(ModelId(0), DrainMode::Serve).unwrap();
+        assert!(removed.conserved() && !removed.live);
+        assert!(matches!(
+            gw.remove_model(ModelId(0), DrainMode::Serve),
+            Err(ServeError::UnknownModel(_))
+        ));
+        assert_eq!(gw.n_models(), 1);
+        assert!(gw.handle_by_name("alpha").is_err());
+        // the name is reusable after removal; the slot is not
+        let e = Engine::new(QuantizedModel::synthetic("alpha", &[4, 6, 3], 5, 3, 4));
+        let h = gw.add_model("alpha", e).unwrap();
+        assert_eq!(h.model_id().index(), 2, "slots are never reused");
+        assert_eq!(h.infer_q(vec![1, 2, 3, 4]).unwrap().t.len(), 3);
+        let stats = gw.shutdown();
+        assert!(stats.conserved());
+        assert_eq!(stats.per_model.len(), 3, "removed tenants keep their stats row");
+        assert!(!stats.per_model[0].live && stats.per_model[2].live);
     }
 
     #[test]
@@ -1766,6 +2792,7 @@ mod tests {
             policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
             sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
             dispatch: Dispatch::Fixed,
+            quota: QuotaPolicy::None,
         });
         let ea = Engine::new(QuantizedModel::synthetic("a", &[4, 6, 3], 5, 3, 5));
         let eb = Engine::new(QuantizedModel::synthetic("b", &[6, 8, 5], 5, 3, 9));
@@ -1791,6 +2818,7 @@ mod tests {
             policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
             sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
             dispatch: Dispatch::FairSteal,
+            quota: QuotaPolicy::None,
         });
         let ea = Engine::new(QuantizedModel::synthetic("a", &[4, 6, 3], 5, 3, 5));
         let eb = Engine::new(QuantizedModel::synthetic("b", &[6, 8, 5], 5, 3, 9));
@@ -1803,6 +2831,42 @@ mod tests {
         assert_eq!(stats.per_model[1].weight, 5);
         // only alpha submitted, so the index covers alpha alone: fair
         assert!((stats.fairness_index() - 1.0).abs() < 1e-9);
+        // alpha's demand was fully served: the normalized index agrees
+        assert!((stats.fairness_index_normalized() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_tenant_batch_policy_is_honored() {
+        // beta registers a 1-row policy: every beta batch is a single
+        // row even while alpha coalesces, and both conserve
+        let mut b = GatewayBuilder::with_config(GatewayConfig {
+            replicas: 1,
+            queue_cap: 64,
+            shed: ShedPolicy::Block,
+            policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+            sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
+            dispatch: Dispatch::FairSteal,
+            quota: QuotaPolicy::None,
+        });
+        let ea = Engine::new(QuantizedModel::synthetic("a", &[4, 6, 3], 5, 3, 5));
+        let eb = Engine::new(QuantizedModel::synthetic("b", &[6, 8, 5], 5, 3, 9));
+        let a = b.register("alpha", ea);
+        let c = b.register_with_policy(
+            "beta",
+            eb,
+            1,
+            BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) },
+        );
+        let gw = b.start();
+        for i in 0..10u8 {
+            assert_eq!(gw.handle(a).infer_q(vec![i; 4]).unwrap().t.len(), 3);
+            assert_eq!(gw.handle(c).infer_q(vec![i; 6]).unwrap().t.len(), 5);
+        }
+        let stats = gw.shutdown();
+        assert!(stats.conserved());
+        let beta = &stats.per_model[c.index()];
+        assert_eq!(beta.metrics.batch_rows, 10);
+        assert_eq!(beta.metrics.batches, 10, "1-row policy: one batch per request");
     }
 
     #[test]
@@ -1860,6 +2924,13 @@ mod tests {
         pool.release(Vec::new());
         let (_, _, free) = pool.counts();
         assert_eq!(free, 1);
+        // retirement empties the list and stops recycling late releases
+        pool.retire();
+        let (_, _, free) = pool.counts();
+        assert_eq!(free, 0, "retire clears the free-list");
+        pool.release(Vec::with_capacity(4));
+        let (_, _, free) = pool.counts();
+        assert_eq!(free, 0, "a retired pool never re-pins buffers");
     }
 
     #[test]

@@ -2,8 +2,11 @@
 //! queueing-only), throughput, steal accounting, and attached
 //! accelerator-simulation counters. One `Metrics` cell exists per
 //! (replica, model); cells merge into per-model, per-replica, and
-//! gateway-level stats, and [`jain_fairness`] condenses per-model
-//! service into the fairness index the dispatch experiments track.
+//! gateway-level stats. [`jain_fairness`] condenses per-model service
+//! into the raw fairness index the dispatch experiments track, and
+//! [`jain_fairness_normalized`] is its demand-normalized companion:
+//! Jain over `served / min(demand, weighted share)`, which isolates
+//! *scheduler* fairness from the arrival mix below saturation.
 
 use std::time::Duration;
 
@@ -96,6 +99,34 @@ pub fn jain_fairness<I: IntoIterator<Item = f64>>(xs: I) -> f64 {
         return 1.0;
     }
     (sum * sum) / (n as f64 * sum_sq)
+}
+
+/// Demand-normalized Jain fairness over `(served, demand, weight)`
+/// tenant rows.
+///
+/// The raw index over `served / weight` reads the *arrival mix* as
+/// unfairness below saturation: a tenant that offered little traffic
+/// and had all of it served drags the index down exactly like a starved
+/// one. Here each tenant is scored against its *entitlement*
+/// `min(demand, weighted share of total service)` — a tenant that got
+/// everything it asked for scores 1 regardless of how small its share
+/// of the mix was, while a tenant held below both its demand and its
+/// weighted share (true scheduler unfairness) scores < 1. Scores are
+/// capped at 1: serving *beyond* entitlement — work conservation when
+/// another tenant under-demands — is not unfairness either. Targets are
+/// floored at one row so the ratio stays finite. Degenerate inputs
+/// (no rows, zero service, zero weights) score 1.0 — an idle system
+/// starves nobody.
+pub fn jain_fairness_normalized(rows: &[(f64, f64, f64)]) -> f64 {
+    let total_served: f64 = rows.iter().map(|r| r.0).sum();
+    let total_w: f64 = rows.iter().map(|r| r.2).sum();
+    if rows.is_empty() || total_served <= 0.0 || total_w <= 0.0 {
+        return 1.0;
+    }
+    jain_fairness(rows.iter().map(|&(served, demand, w)| {
+        let share = total_served * w / total_w;
+        (served / demand.min(share).max(1.0)).min(1.0)
+    }))
 }
 
 impl Metrics {
@@ -295,5 +326,32 @@ mod tests {
         // mild skew lands strictly between 1/n and 1
         let j = jain_fairness([4.0, 2.0]);
         assert!(j > 0.5 && j < 1.0, "got {j}");
+    }
+
+    #[test]
+    fn normalized_jain_discounts_the_arrival_mix() {
+        // a 9:1 arrival mix, both tenants fully served: the RAW index
+        // reads the skew as unfairness, the normalized one does not
+        let rows = [(900.0, 900.0, 1.0), (100.0, 100.0, 1.0)];
+        let raw = jain_fairness(rows.iter().map(|r| r.0 / r.2));
+        assert!(raw < 0.7, "raw index penalizes the mix: {raw}");
+        assert!(
+            (jain_fairness_normalized(&rows) - 1.0).abs() < 1e-12,
+            "every tenant got min(demand, share): perfectly fair"
+        );
+        // a genuinely starved tenant still reads as unfair: it demanded
+        // far more than it was served and its weighted share would have
+        // allowed more
+        let rows = [(990.0, 1000.0, 1.0), (10.0, 1000.0, 1.0)];
+        let norm = jain_fairness_normalized(&rows);
+        assert!(norm < 0.7, "starvation must survive normalization: {norm}");
+        // a high-weight tenant consuming its larger share is fair under
+        // both lenses
+        let rows = [(800.0, 2000.0, 4.0), (200.0, 2000.0, 1.0)];
+        let norm = jain_fairness_normalized(&rows);
+        assert!((norm - 1.0).abs() < 1e-12, "4:1 weights, 4:1 service: {norm}");
+        // degenerate inputs read as fair
+        assert_eq!(jain_fairness_normalized(&[]), 1.0);
+        assert_eq!(jain_fairness_normalized(&[(0.0, 5.0, 1.0)]), 1.0);
     }
 }

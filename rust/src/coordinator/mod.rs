@@ -1,5 +1,5 @@
 //! Serving coordinator: the L3 request path — multi-tenant, weighted,
-//! and work-stealing.
+//! work-stealing, and **live-reconfigurable**.
 //!
 //! The front door is the [`gateway`]: one [`Gateway`] serves **many
 //! registered models over one replica fleet**, mirroring the paper's
@@ -9,10 +9,21 @@
 //! workload — CPU-bound batched inference — doesn't want an async
 //! reactor anyway):
 //!
-//! * models are registered on a [`GatewayBuilder`] with a **service
-//!   weight** ([`GatewayBuilder::register`] = weight 1,
-//!   [`GatewayBuilder::register_weighted`] for an explicit share);
-//!   clients hold a typed [`ModelHandle`] and submit a [`Request`]
+//! * the tenant set lives in an epoch-versioned **registry snapshot**
+//!   (`Arc`-swapped atomically): models are registered on a
+//!   [`GatewayBuilder`] with a **service weight** and optionally their
+//!   own [`BatchPolicy`] ([`GatewayBuilder::register`],
+//!   [`GatewayBuilder::register_weighted`],
+//!   [`GatewayBuilder::register_with_policy`]), and the *running*
+//!   gateway can hot-add ([`Gateway::add_model`]), re-weight
+//!   ([`Gateway::set_weight`]), and remove ([`Gateway::remove_model`])
+//!   tenants under live traffic — removal drains the tenant's backlog
+//!   per [`DrainMode`] (serve or shed) and retires its [`BufferPool`]
+//!   only after the last in-flight response returns, with per-model
+//!   conservation holding across the transition. Workers adopt a new
+//!   epoch at their next batch boundary, so the hot path pays one
+//!   integer compare per loop;
+//! * clients hold a typed [`ModelHandle`] and submit a [`Request`]
 //!   (quantized or f32 row, optional deadline, [`Priority`] class),
 //!   receiving their logits through a [`Ticket`] or the blocking
 //!   `infer` conveniences;
@@ -21,34 +32,43 @@
 //!   (`QueueFull` rejection, priority-ordered oldest-eviction, or
 //!   blocking backpressure), and lapsed deadlines resolve
 //!   [`ServeError::DeadlineExceeded`] — every terminal outcome is one
-//!   [`ServeError`];
-//! * the worker fleet is shared too: each worker owns an `Arc`-aliased
-//!   replica of *every* registered model (~1x total model memory), one
-//!   [`Scratch`](crate::kan::Scratch) arena sized to the widest model,
-//!   and a fleet-visible **shard of per-model dynamic [`batcher`]s** —
-//!   batches are never mixed-model, and deadlines anchor at admission
-//!   time so queue wait counts against the batching window;
+//!   [`ServeError`]. Under [`QuotaPolicy::Weighted`] each tenant gets
+//!   **weight-proportional reserved queue slots** plus a shared
+//!   overflow region, so one tenant's burst can no longer shed every
+//!   tenant's new arrivals, and `DropOldest` evicts from the most
+//!   oversubscribed tenant first;
+//! * the worker fleet is shared too: each worker serves every
+//!   registered model through the registry's `Arc`-shared engines (~1x
+//!   total model memory), one [`Scratch`](crate::kan::Scratch) arena
+//!   sized to the widest model, and a fleet-visible **shard of
+//!   per-model dynamic [`batcher`]s** — batches are never mixed-model,
+//!   each tenant's batcher runs that tenant's policy, and deadlines
+//!   anchor at admission time so queue wait counts against the batching
+//!   window;
 //! * dispatch is **weighted-fair with work stealing**
 //!   ([`Dispatch::FairSteal`], the default): workers pick the next batch
 //!   by deficit-round-robin over their shard (tenants earn credit by
 //!   weight, pay in rows served, so a starved high-weight tenant
 //!   overtakes a saturated low-weight one), queue pulls skip past
 //!   head-of-line requests whose batcher is full, and an idle worker
-//!   steals a due batch from the most-backlogged peer's shard instead
-//!   of sleeping ([`Dispatch::Fixed`] keeps the pre-fair baseline for
-//!   comparison);
+//!   steals from the most-backlogged peer's shard instead of sleeping —
+//!   *splitting* an over-full backlog roughly in half so owner and
+//!   thief serve it concurrently ([`Dispatch::Fixed`] keeps the
+//!   pre-fair baseline for comparison);
 //! * response buffers are pooled per model ([`BufferPool`]): dropping a
 //!   [`Response`] recycles its pre-sized output `Vec`, so steady-state
 //!   submission pays no buffer allocation;
 //! * accounting is per model *and* per replica: [`GatewayStats`] holds a
-//!   [`ModelStats`] row per tenant (conservation per model:
-//!   `submitted == completed + shed + failed`, steal-proof — the
-//!   invariant never cares which worker served a batch) and merged
-//!   [`Metrics`] per worker, with request latency split into queueing vs
-//!   service time (`Response::queue_us` / `Response::service_us`),
-//!   per-model steal counts ([`Metrics::stolen_batches`]), and a Jain
-//!   fairness index over weight-normalized service
-//!   ([`GatewayStats::fairness_index`]);
+//!   [`ModelStats`] row per tenant — including removed ones
+//!   (`live == false`; slots are never reused) — with conservation per
+//!   model (`submitted == completed + shed + failed`, steal-proof and
+//!   churn-proof), merged [`Metrics`] per worker, request latency split
+//!   into queueing vs service time, per-model steal counts, the
+//!   registry epoch, and two fairness lenses: the raw Jain index over
+//!   weight-normalized service ([`GatewayStats::fairness_index`]) and
+//!   the demand-normalized one
+//!   ([`GatewayStats::fairness_index_normalized`]) that isolates
+//!   scheduler fairness from the arrival mix;
 //! * [`pool`] keeps `Pool` as the 1-model special case (`PoolHandle` =
 //!   [`ModelHandle`], `PoolError` = [`ServeError`]) and [`server`] keeps
 //!   `Server` as the 1-model, 1-replica special case.
@@ -63,10 +83,11 @@ pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use gateway::{
-    BufferPool, Dispatch, Gateway, GatewayBuilder, GatewayConfig, GatewayStats, ModelHandle,
-    ModelId, ModelStats, Priority, Request, Response, ServeError, ShedPolicy, Ticket,
+    BufferPool, Dispatch, DrainMode, Gateway, GatewayBuilder, GatewayConfig, GatewayStats,
+    ModelHandle, ModelId, ModelStats, Priority, QuotaPolicy, Request, Response, ServeError,
+    ShedPolicy, Ticket,
 };
-pub use metrics::{jain_fairness, LatencyStats, Metrics};
+pub use metrics::{jain_fairness, jain_fairness_normalized, LatencyStats, Metrics};
 pub use pool::{
     default_replicas, default_replicas_capped, Pool, PoolConfig, PoolError, PoolHandle, PoolStats,
 };

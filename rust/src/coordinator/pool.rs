@@ -178,6 +178,7 @@ mod tests {
                 policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
                 sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
                 dispatch: crate::coordinator::Dispatch::FairSteal,
+                quota: crate::coordinator::QuotaPolicy::None,
             },
         )
     }

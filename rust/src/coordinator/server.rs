@@ -17,7 +17,7 @@ use crate::arch::ArrayConfig;
 use crate::kan::Engine;
 
 use super::batcher::BatchPolicy;
-use super::gateway::{Dispatch, ServeError};
+use super::gateway::{Dispatch, QuotaPolicy, ServeError};
 use super::metrics::Metrics;
 use super::pool::{Pool, PoolConfig, PoolHandle, ShedPolicy};
 
@@ -83,6 +83,8 @@ impl Server {
                     // one worker has no peers to steal from; fair
                     // dispatch degenerates to the plain batcher loop
                     dispatch: Dispatch::FairSteal,
+                    // a single tenant needs no admission reservations
+                    quota: QuotaPolicy::None,
                 },
             ),
         }

@@ -25,11 +25,16 @@
 //! one worker fleet serving every registered model.
 //!
 //! * Models are registered on a [`coordinator::GatewayBuilder`] — each
-//!   with a **service weight** (`register_weighted`) — and addressed
-//!   through typed [`coordinator::ModelHandle`]s; a
-//!   [`coordinator::Request`] carries the row (quantized or f32), an
-//!   optional deadline, and a [`coordinator::Priority`] class. Every
-//!   terminal outcome is one [`coordinator::ServeError`].
+//!   with a **service weight** (`register_weighted`) and optionally its
+//!   own batch policy — and addressed through typed
+//!   [`coordinator::ModelHandle`]s; a [`coordinator::Request`] carries
+//!   the row (quantized or f32), an optional deadline, and a
+//!   [`coordinator::Priority`] class. Every terminal outcome is one
+//!   [`coordinator::ServeError`]. The tenant set is **live**: the
+//!   per-tenant tables sit in an epoch-versioned registry snapshot, so
+//!   a running gateway can hot-add (`Gateway::add_model`), re-weight
+//!   (`Gateway::set_weight`), and remove (`Gateway::remove_model`,
+//!   draining per [`coordinator::DrainMode`]) models under traffic.
 //! * Each fleet worker owns an [`kan::Engine`] replica of *every* model;
 //!   replicas share weights, LUTs, and widened MAC tables through `Arc`,
 //!   so the fleet costs ~1x total model memory
@@ -37,7 +42,10 @@
 //! * Admission is a **shared bounded queue** with an explicit shed policy
 //!   ([`coordinator::ShedPolicy`]): reject new arrivals with `QueueFull`,
 //!   evict the oldest lowest-priority request, or block for backpressure;
-//!   lapsed deadlines answer `DeadlineExceeded`.
+//!   lapsed deadlines answer `DeadlineExceeded`. Weighted **per-tenant
+//!   quotas** ([`coordinator::QuotaPolicy`]) reserve queue slots per
+//!   service weight with a shared overflow region, so one tenant's
+//!   burst can't shed every tenant's new arrivals.
 //! * Dispatch is **weighted-fair with work stealing**
 //!   ([`coordinator::Dispatch`]): per-model dynamic
 //!   [`coordinator::Batcher`]s (size + deadline policy, deadlines
@@ -47,10 +55,12 @@
 //!   weight and pay in rows served, so one tenant's burst can't starve
 //!   another — queue pulls skip past head-of-line requests whose
 //!   batcher is full, and an idle worker *steals* a due batch from the
-//!   most backlogged peer instead of sleeping. Steal counts and a Jain
-//!   fairness index over weight-normalized service surface in
-//!   [`coordinator::GatewayStats`]; every served batch carries simulated
-//!   accelerator cycles.
+//!   most backlogged peer instead of sleeping — splitting an over-full
+//!   backlog roughly in half so owner and thief serve it concurrently.
+//!   Steal counts and two Jain fairness lenses (raw weight-normalized
+//!   service, plus a demand-normalized index that discounts the arrival
+//!   mix) surface in [`coordinator::GatewayStats`]; every served batch
+//!   carries simulated accelerator cycles.
 //! * Inference follows a **compile/execute split** ([`kan::plan`]): the
 //!   engine compiles an [`kan::ExecutionPlan`] once (resolved B-spline
 //!   units, i16-widened MAC tables, buffer sizing — what the accelerator
@@ -69,11 +79,12 @@
 //! 1-model/1-replica one. Offered load comes from [`loadgen`]: an
 //! open-loop Poisson generator with named scenario mixes (`steady`,
 //! `diurnal`, `flash-crowd`, and the fair-dispatch stress
-//! `skewed-burst`, which concentrates a burst on one tenant) and
-//! weighted multi-model mixes (`loadgen::run_mix` — Fig. 8's
-//! application mixes at the serving tier), so
-//! throughput/latency/shed-rate/fairness curves are measured, not
-//! anecdotal — see the `serving_scale` bench. A top-level
+//! `skewed-burst`, which concentrates a burst on one tenant), weighted
+//! multi-model mixes (`loadgen::run_mix` — Fig. 8's application mixes
+//! at the serving tier), and scripted registry churn
+//! (`loadgen::run_churn`: hot-add / re-weight / remove while traffic
+//! flows), so throughput/latency/shed-rate/fairness curves are
+//! measured, not anecdotal — see the `serving_scale` bench. A top-level
 //! `ARCHITECTURE.md` walks the whole crate map and the invariants each
 //! test file enforces.
 //!

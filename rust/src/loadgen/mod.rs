@@ -26,14 +26,21 @@
 //! [`run_mix`] is the multi-tenant variant: a weighted model mix over
 //! one gateway — the serving-tier version of the paper's Fig. 8
 //! application mixes — reporting per-model *and* aggregate outcomes.
-//! [`closed_loop`] is the saturation counterpart used by the
-//! `serving_scale` bench to measure peak rows/sec per replica count.
+//! [`run_churn`] drives a **registry-churn** scenario: the same
+//! open-loop arrival process while a scripted [`ChurnEvent`] timeline
+//! hot-adds, re-weights, and removes tenants on the live gateway —
+//! the stress test for the dynamic registry. [`closed_loop`] is the
+//! saturation counterpart used by the `serving_scale` bench to measure
+//! peak rows/sec per replica count.
 
 use std::sync::mpsc::channel;
 use std::thread;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::{LatencyStats, Metrics, ModelHandle, ServeError, Ticket};
+use crate::coordinator::{
+    DrainMode, Gateway, LatencyStats, Metrics, ModelHandle, ServeError, Ticket,
+};
+use crate::kan::{Engine, QuantizedModel};
 use crate::util::rng::Rng;
 
 /// Concentrate a fraction of a phase's arrivals on one tenant of a
@@ -459,6 +466,314 @@ pub fn run_mix(entries: &[MixEntry], scenario: &Scenario, seed: u64) -> MixRepor
     MixReport { total, per_model }
 }
 
+/// One timed control-plane mutation applied during [`run_churn`].
+#[derive(Clone, Debug)]
+pub enum ChurnAction {
+    /// Hot-add a synthetic tenant ([`Gateway::add_model_weighted`]) and
+    /// start routing arrivals to it.
+    Add {
+        /// Model name to register (and report under).
+        name: String,
+        /// Synthetic model dims (`IN x .. x OUT`).
+        dims: Vec<usize>,
+        /// Service weight for the weighted fair scheduler.
+        weight: u32,
+        /// Relative arrival weight within the mix once added.
+        mix_weight: f64,
+    },
+    /// Re-weight a live tenant (by registered name) via
+    /// [`Gateway::set_weight`].
+    SetWeight {
+        /// Target tenant name.
+        name: String,
+        /// New service weight (>= 1).
+        weight: u32,
+    },
+    /// Stop sending to a tenant, then remove it from the gateway.
+    /// [`Gateway::remove_model`] blocks until the tenant's backlog
+    /// drains, pausing the arrival loop — real churn stalls the
+    /// operator, not the fleet.
+    Remove {
+        /// Target tenant name.
+        name: String,
+        /// Serve or shed the backlog.
+        mode: DrainMode,
+    },
+}
+
+/// A [`ChurnAction`] scheduled at an offset from the run's start.
+/// [`run_churn`] applies events in list order once their offset
+/// elapses, so scripts should be sorted by `at`.
+#[derive(Clone, Debug)]
+pub struct ChurnEvent {
+    /// When to apply the action, relative to the first arrival.
+    pub at: Duration,
+    /// What to do.
+    pub action: ChurnAction,
+}
+
+/// The default churn script used by `kansas serve --scenario churn` and
+/// the registry-churn tests: hot-add a HAR-shaped tenant a quarter into
+/// the run, quadruple its service weight at the midpoint, and remove it
+/// (serving its backlog) at three quarters.
+pub fn default_churn_events(total: Duration) -> Vec<ChurnEvent> {
+    vec![
+        ChurnEvent {
+            at: total.mul_f64(0.25),
+            action: ChurnAction::Add {
+                name: "hotswap".to_string(),
+                dims: vec![16, 32, 6],
+                weight: 1,
+                mix_weight: 1.0,
+            },
+        },
+        ChurnEvent {
+            at: total.mul_f64(0.50),
+            action: ChurnAction::SetWeight { name: "hotswap".to_string(), weight: 4 },
+        },
+        ChurnEvent {
+            at: total.mul_f64(0.75),
+            action: ChurnAction::Remove { name: "hotswap".to_string(), mode: DrainMode::Serve },
+        },
+    ]
+}
+
+/// Weighted draw over a possibly-sparse weight vector (removed tenants
+/// carry weight 0); `None` when no weight is positive.
+fn draw_weighted(rng: &mut Rng, weights: &[f64]) -> Option<usize> {
+    let total: f64 = weights.iter().sum();
+    if total <= 0.0 {
+        return None;
+    }
+    let mut u = rng.next_f64() * total;
+    for (i, &w) in weights.iter().enumerate() {
+        if w <= 0.0 {
+            continue;
+        }
+        if u < w {
+            return Some(i);
+        }
+        u -= w;
+    }
+    weights.iter().rposition(|&w| w > 0.0)
+}
+
+/// The generator's mutable view of a churning mix: the entry list only
+/// grows (removed tenants keep their report slot with arrival weight 0,
+/// mirroring how gateway slots are never reused).
+struct ChurnMix {
+    entries: Vec<MixEntry>,
+    /// Arrival weight per entry; 0 once the tenant is removed.
+    arr_weights: Vec<f64>,
+    submitted: Vec<u64>,
+    shed_at_submit: Vec<u64>,
+    failed_at_submit: Vec<u64>,
+}
+
+impl ChurnMix {
+    fn new(entries: Vec<MixEntry>) -> Self {
+        let n = entries.len();
+        let arr_weights = entries.iter().map(|e| e.weight).collect();
+        Self {
+            entries,
+            arr_weights,
+            submitted: vec![0; n],
+            shed_at_submit: vec![0; n],
+            failed_at_submit: vec![0; n],
+        }
+    }
+
+    /// Latest *active* entry registered under `name`. Removed entries
+    /// keep their slots (arrival weight 0), and the gateway allows
+    /// re-adding a removed tenant's name — a plain first-match would
+    /// silently target the dead entry after a remove→add cycle.
+    fn find(&self, name: &str) -> Option<usize> {
+        (0..self.entries.len())
+            .rev()
+            .find(|&i| self.arr_weights[i] > 0.0 && self.entries[i].handle.name() == name)
+    }
+
+    /// Apply one churn event against the live gateway. Control-plane
+    /// rejections (duplicate name, already-removed tenant) are
+    /// deliberately non-fatal: the traffic run continues and the
+    /// gateway's own stats show what happened.
+    fn apply(&mut self, gateway: &Gateway, action: &ChurnAction, seed: u64) {
+        match action {
+            ChurnAction::Add { name, dims, weight, mix_weight } => {
+                let engine = Engine::new(QuantizedModel::synthetic(
+                    name,
+                    dims,
+                    5,
+                    3,
+                    seed.wrapping_add(self.entries.len() as u64),
+                ));
+                if let Ok(handle) = gateway.add_model_weighted(name, engine, *weight) {
+                    self.entries.push(MixEntry { handle, weight: *mix_weight });
+                    self.arr_weights.push(*mix_weight);
+                    self.submitted.push(0);
+                    self.shed_at_submit.push(0);
+                    self.failed_at_submit.push(0);
+                }
+            }
+            ChurnAction::SetWeight { name, weight } => {
+                if let Some(i) = self.find(name) {
+                    let _ = gateway.set_weight(self.entries[i].handle.model_id(), *weight);
+                }
+            }
+            ChurnAction::Remove { name, mode } => {
+                if let Some(i) = self.find(name) {
+                    if self.arr_weights[i] > 0.0 {
+                        // stop sending first, then drain: no arrival can
+                        // race the removal into an UnknownModel failure
+                        self.arr_weights[i] = 0.0;
+                        let _ =
+                            gateway.remove_model(self.entries[i].handle.model_id(), *mode);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Drive a weighted mix through a scripted **registry churn**: open-loop
+/// Poisson arrivals (like [`run_mix`], without [`Focus`] skew) while
+/// the [`ChurnEvent`] timeline hot-adds, re-weights, and removes
+/// tenants on the live `gateway`. Events fire between arrivals once
+/// their offset elapses; events scheduled past the last arrival are
+/// applied before the report is assembled. Blocks until every in-flight
+/// ticket resolves.
+///
+/// Per-model reports come back in entry order (hot-added tenants
+/// append); `offered_rps` is the *observed* submission rate — with the
+/// tenant set changing mid-run, the static schedule split of
+/// [`run_mix`] has no meaning here.
+pub fn run_churn(
+    gateway: &Gateway,
+    entries: Vec<MixEntry>,
+    scenario: &Scenario,
+    events: &[ChurnEvent],
+    seed: u64,
+) -> MixReport {
+    assert!(!entries.is_empty(), "churn mix needs at least one initial model");
+    let (tick_tx, tick_rx) = channel::<(usize, Ticket)>();
+    // collector: resolves tickets concurrently so the generator never
+    // waits on responses (open loop); grows with hot-added tenants
+    let collector = thread::spawn(move || {
+        let mut per: Vec<(Metrics, u64, u64, u64)> = Vec::new();
+        while let Ok((m, t)) = tick_rx.recv() {
+            if per.len() <= m {
+                per.resize_with(m + 1, Default::default);
+            }
+            let slot = &mut per[m];
+            match t.wait() {
+                Ok(resp) => {
+                    slot.1 += 1;
+                    slot.0.record_request_split(
+                        Duration::from_micros(resp.queue_us),
+                        Duration::from_micros(resp.service_us),
+                    );
+                }
+                Err(ServeError::QueueFull) | Err(ServeError::DeadlineExceeded) => slot.2 += 1,
+                Err(_) => slot.3 += 1,
+            }
+        }
+        per
+    });
+
+    let mut mix = ChurnMix::new(entries);
+    let mut next_event = 0usize;
+    let mut rng = Rng::new(seed);
+    let t0 = Instant::now();
+    let mut phase_start = t0;
+    'phases: for ph in &scenario.phases {
+        let phase_end = phase_start + ph.duration;
+        if ph.rate_rps > 0.0 {
+            let mut cursor = phase_start;
+            loop {
+                let dt = -(1.0 - rng.next_f64()).ln() / ph.rate_rps;
+                cursor += Duration::from_secs_f64(dt);
+                if cursor >= phase_end {
+                    break;
+                }
+                sleep_until(cursor);
+                while next_event < events.len() && t0.elapsed() >= events[next_event].at {
+                    mix.apply(gateway, &events[next_event].action, seed);
+                    next_event += 1;
+                }
+                let Some(idx) = draw_weighted(&mut rng, &mix.arr_weights) else {
+                    continue;
+                };
+                let handle = &mix.entries[idx].handle;
+                let x_q: Vec<u8> =
+                    (0..handle.in_dim()).map(|_| rng.below(256) as u8).collect();
+                mix.submitted[idx] += 1;
+                match handle.submit_q(x_q) {
+                    Ok(t) => {
+                        let _ = tick_tx.send((idx, t));
+                    }
+                    Err(ServeError::QueueFull) => mix.shed_at_submit[idx] += 1,
+                    Err(ServeError::Closed) => {
+                        mix.failed_at_submit[idx] += 1;
+                        break 'phases;
+                    }
+                    Err(_) => mix.failed_at_submit[idx] += 1,
+                }
+            }
+        }
+        sleep_until(phase_end);
+        phase_start = phase_end;
+    }
+    // trailing events (e.g. a remove scheduled at 100%) still apply, so
+    // the script's end state is the report's end state
+    while next_event < events.len() {
+        mix.apply(gateway, &events[next_event].action, seed);
+        next_event += 1;
+    }
+    drop(tick_tx);
+    let mut per = collector.join().expect("collector");
+    let n = mix.entries.len();
+    per.resize_with(n, Default::default);
+    let wall = t0.elapsed();
+    let mut merged = Metrics::default();
+    let mut per_model = Vec::with_capacity(n);
+    let (mut t_sub, mut t_ok, mut t_shed, mut t_failed) = (0u64, 0u64, 0u64, 0u64);
+    for (i, (m, ok, shed_in_flight, failed_in_flight)) in per.into_iter().enumerate() {
+        let shed = mix.shed_at_submit[i] + shed_in_flight;
+        let failed = mix.failed_at_submit[i] + failed_in_flight;
+        t_sub += mix.submitted[i];
+        t_ok += ok;
+        t_shed += shed;
+        t_failed += failed;
+        per_model.push(LoadReport {
+            scenario: mix.entries[i].handle.name().to_string(),
+            submitted: mix.submitted[i],
+            ok,
+            shed,
+            failed,
+            wall,
+            // observed, not scheduled: the tenant set changed mid-run
+            offered_rps: mix.submitted[i] as f64 / wall.as_secs_f64(),
+            achieved_rps: ok as f64 / wall.as_secs_f64(),
+            latency: m.latency(),
+        });
+        merged.merge(&m);
+    }
+    let total = LoadReport {
+        scenario: format!("{}+churn", scenario.name),
+        submitted: t_sub,
+        ok: t_ok,
+        shed: t_shed,
+        failed: t_failed,
+        wall,
+        // observed like the per-model rows — drain pauses and early
+        // exits make the scheduled rate a fiction here
+        offered_rps: t_sub as f64 / wall.as_secs_f64(),
+        achieved_rps: t_ok as f64 / wall.as_secs_f64(),
+        latency: merged.latency(),
+    };
+    MixReport { total, per_model }
+}
+
 /// Closed-loop saturation: `clients` threads hammer the pool (submit,
 /// wait, repeat) until `duration` elapses — or until a thread has issued
 /// `per_client` requests, when a budget is given. Measures peak service
@@ -547,6 +862,7 @@ mod tests {
                 policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
                 sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
                 dispatch: crate::coordinator::Dispatch::FairSteal,
+                quota: crate::coordinator::QuotaPolicy::None,
             },
         )
     }
@@ -639,7 +955,7 @@ mod tests {
 
     #[test]
     fn mix_conserves_per_model_and_weights_traffic() {
-        use crate::coordinator::{Dispatch, GatewayBuilder, GatewayConfig};
+        use crate::coordinator::{Dispatch, GatewayBuilder, GatewayConfig, QuotaPolicy};
         let mut b = GatewayBuilder::with_config(GatewayConfig {
             replicas: 2,
             queue_cap: 64,
@@ -647,6 +963,7 @@ mod tests {
             policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
             sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
             dispatch: Dispatch::FairSteal,
+            quota: QuotaPolicy::None,
         });
         let eb = Engine::new(QuantizedModel::synthetic("big", &[4, 8, 3], 5, 3, 1));
         let es = Engine::new(QuantizedModel::synthetic("small", &[6, 4, 2], 5, 3, 2));
@@ -690,6 +1007,71 @@ mod tests {
         assert_eq!(rep.shed, 0, "Block policy never sheds");
         assert_eq!(stats.completed, rep.ok);
         assert!(rep.achieved_rps > 0.0);
+    }
+
+    #[test]
+    fn churn_run_applies_events_and_conserves() {
+        use crate::coordinator::{Dispatch, GatewayBuilder, GatewayConfig, QuotaPolicy};
+        let mut b = GatewayBuilder::with_config(GatewayConfig {
+            replicas: 2,
+            queue_cap: 256,
+            shed: ShedPolicy::RejectNew,
+            policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+            sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
+            dispatch: Dispatch::FairSteal,
+            quota: QuotaPolicy::weighted(),
+        });
+        let e0 = Engine::new(QuantizedModel::synthetic("base0", &[4, 8, 3], 5, 3, 1));
+        let e1 = Engine::new(QuantizedModel::synthetic("base1", &[6, 4, 2], 5, 3, 2));
+        let a = b.register("base0", e0);
+        let c = b.register("base1", e1);
+        let gw = b.start();
+        let entries = vec![
+            MixEntry { handle: gw.handle(a), weight: 1.0 },
+            MixEntry { handle: gw.handle(c), weight: 1.0 },
+        ];
+        let sc = Scenario::steady(1500.0, Duration::from_millis(400));
+        let events = default_churn_events(sc.total_duration());
+        let mix = run_churn(&gw, entries, &sc, &events, 29);
+        let stats = gw.shutdown();
+        assert_eq!(mix.per_model.len(), 3, "the hot-added tenant reports too");
+        assert_eq!(mix.per_model[2].scenario, "hotswap");
+        for (rep, ms) in mix.per_model.iter().zip(&stats.per_model) {
+            assert_eq!(
+                rep.submitted,
+                rep.ok + rep.shed + rep.failed,
+                "{}: generator conservation",
+                rep.scenario
+            );
+            assert_eq!(ms.submitted, rep.submitted, "{}: gateway agrees", ms.name);
+            assert!(ms.conserved(), "{}: {ms:?}", ms.name);
+        }
+        assert!(stats.conserved());
+        // add (+1), set_weight (+1), remove (+2) on the start epoch of 1
+        assert!(stats.epoch >= 5, "churn must move the registry epoch, got {}", stats.epoch);
+        let hot = &mix.per_model[2];
+        assert!(hot.ok > 0, "hot-added tenant was served: {hot:?}");
+        assert_eq!(hot.failed, 0, "no responses lost across add/reweight/remove");
+        assert!(!stats.per_model[2].live, "hotswap removed again by the script");
+        assert!(stats.per_model[0].live && stats.per_model[1].live);
+        assert_eq!(mix.total.scenario, "steady+churn");
+    }
+
+    #[test]
+    fn draw_weighted_skips_zeroed_entries() {
+        let mut rng = Rng::new(3);
+        assert_eq!(draw_weighted(&mut rng, &[]), None);
+        assert_eq!(draw_weighted(&mut rng, &[0.0, 0.0]), None);
+        for _ in 0..200 {
+            assert_eq!(draw_weighted(&mut rng, &[0.0, 5.0, 0.0]), Some(1));
+        }
+        let mut hits = [0usize; 3];
+        for _ in 0..3000 {
+            hits[draw_weighted(&mut rng, &[3.0, 0.0, 1.0]).unwrap()] += 1;
+        }
+        assert_eq!(hits[1], 0, "zero-weight entries never drawn");
+        let share0 = hits[0] as f64 / 3000.0;
+        assert!((0.68..=0.82).contains(&share0), "3:1 split, got {share0}");
     }
 
     #[test]

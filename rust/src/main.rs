@@ -19,9 +19,13 @@
 //! registered on one shared worker fleet and admission queue (with a
 //! per-model service `--weights` share), traffic is a weighted `--mix`,
 //! dispatch is weighted-fair with work stealing (`--dispatch fixed`
-//! keeps the pre-fair baseline), and the report breaks counters down
-//! per model and per replica (conservation: submitted == ok + shed +
-//! failed, per model) including steal counts and the fairness index.
+//! keeps the pre-fair baseline), `--quota` reserves weight-proportional
+//! admission slots per tenant, `--scenario churn` hot-adds/re-weights/
+//! removes a tenant on the live gateway mid-run (scriptable via the
+//! config `admin` stanza), and the report breaks counters down per
+//! model and per replica (conservation: submitted == ok + shed +
+//! failed, per model — including removed tenants) with steal counts,
+//! both fairness indices, and the registry epoch.
 
 use std::path::PathBuf;
 use std::time::Duration;
@@ -29,8 +33,8 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use kan_sas::arch::{ArrayConfig, WeightLoad};
-use kan_sas::config::{parse_dispatch, parse_pe, parse_shed, RunConfig};
-use kan_sas::coordinator::{BatchPolicy, GatewayBuilder};
+use kan_sas::config::{parse_dispatch, parse_pe, parse_shed, parse_synth_spec, RunConfig};
+use kan_sas::coordinator::{BatchPolicy, GatewayBuilder, QuotaPolicy};
 use kan_sas::cost::array_area_mm2;
 use kan_sas::experiments;
 use kan_sas::kan::{Engine, QuantizedModel};
@@ -115,11 +119,11 @@ fn print_help() {
          simulation:    simulate [--rows R --cols C --pe N:M|scalar --bs B --counted-loads]\n\
          serving:       serve [--model NAME | --models SPEC,SPEC,...]\n\
                               [--mix W1,W2,...] [--weights W1,W2,...]\n\
-                              [--dispatch fair|fixed]\n\
+                              [--dispatch fair|fixed] [--quota [FRAC]]\n\
                               [--synthetic --replicas R --max-replicas CAP --queue-cap Q\n\
                                --shed reject|drop-oldest|block --max-batch B\n\
                                --requests N --clients C\n\
-                               --scenario steady|diurnal|flash-crowd|skewed-burst\n\
+                               --scenario steady|diurnal|flash-crowd|skewed-burst|churn\n\
                                --rate RPS --duration-ms MS]\n\
          smoke:         quickstart\n\
          \n\
@@ -136,7 +140,12 @@ fn print_help() {
          sleeping. --dispatch fixed restores the pre-fair baseline (FIFO\n\
          pulls, no weights, no stealing) for A/B comparison; the scenario\n\
          skewed-burst concentrates a 4x burst on the FIRST model (~10:1)\n\
-         to stress exactly that difference.\n\
+         to stress exactly that difference. --quota [FRAC] reserves\n\
+         FRAC (default 0.5) of the queue per tenant in proportion to\n\
+         --weights, so one tenant's burst can't shed everyone's new\n\
+         arrivals; --scenario churn drives live registry churn (hot-add\n\
+         at 25%, re-weight at 50%, remove at 75% — or the config file's\n\
+         \"admin\" event script) while traffic flows.\n\
          One model defaults to closed-loop clients; several models (or\n\
          --scenario) drive the open-loop Poisson generator. Replica\n\
          autosizing clamps cores to 8; raise with --max-replicas or\n\
@@ -262,16 +271,10 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 /// One `--models` entry: `path/to/model.kanq` (name = file stem) or a
 /// synthetic spec `name:IN x HIDDEN x .. x OUT` (dims separated by `x`).
 fn load_model_spec(spec: &str, seed: u64) -> Result<(String, Engine)> {
-    if let Some((name, dims)) = spec.split_once(':') {
-        let dims: Vec<usize> = dims
-            .split('x')
-            .map(|d| d.trim().parse().with_context(|| format!("bad dim '{d}' in '{spec}'")))
-            .collect::<Result<_>>()?;
-        if dims.len() < 2 {
-            bail!("synthetic spec '{spec}' needs at least IN x OUT dims");
-        }
-        let engine = Engine::new(QuantizedModel::synthetic(name, &dims, 5, 3, seed));
-        return Ok((name.to_string(), engine));
+    if spec.contains(':') {
+        let (name, dims) = parse_synth_spec(spec)?;
+        let engine = Engine::new(QuantizedModel::synthetic(&name, &dims, 5, 3, seed));
+        return Ok((name, engine));
     }
     let mut path = PathBuf::from(spec);
     if !path.exists() {
@@ -308,6 +311,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     if let Some(s) = args.get("--dispatch") {
         cfg.dispatch = parse_dispatch(s)?;
+    }
+    // --quota [FRAC]: weighted per-tenant admission quotas. Bare flag
+    // reserves half the queue; an explicit fraction tunes the split
+    // (0 disables, matching the config file's pool.quota).
+    if args.flag("--quota") {
+        cfg.quota = match args.get("--quota") {
+            Some(v) if !v.starts_with("--") => {
+                let f: f64 = v
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad --quota '{v}' (want a fraction in [0,1])"))?;
+                if !(0.0..=1.0).contains(&f) {
+                    bail!("--quota must be in [0, 1], got {f}");
+                }
+                if f == 0.0 {
+                    QuotaPolicy::None
+                } else {
+                    QuotaPolicy::Weighted { reserve: f }
+                }
+            }
+            _ => QuotaPolicy::weighted(),
+        };
     }
 
     // registered models: --models SPEC,SPEC,... or the single-model flags
@@ -378,12 +402,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .map(|((n, _), w)| format!("{n}(w{w})"))
         .collect();
     println!(
-        "serve — {} replicas x [{}] (queue {} / {:?} / {:?}), weights shared: {} KiB total",
+        "serve — {} replicas x [{}] (queue {} / {:?} / {:?} / quota {:?}), weights shared: {} KiB total",
         cfg.replicas,
         names.join(", "),
         cfg.queue_cap,
         cfg.shed,
         cfg.dispatch,
+        cfg.quota,
         total_kib
     );
     let replicas = cfg.replicas;
@@ -395,12 +420,36 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let handles = gateway.handles();
 
     let multi = handles.len() > 1;
-    let report = if multi || args.get("--scenario").is_some() {
+    let report = if args.get("--scenario") == Some("churn") {
+        // registry churn demo: open-loop traffic while a scripted event
+        // timeline (config `admin` stanza, or the default add → reweight
+        // → remove cycle) mutates the live gateway
+        let rate: f64 = args.parsed("--rate", 2000.0)?;
+        let dur_ms: u64 = args.parsed("--duration-ms", 2000)?;
+        let duration = Duration::from_millis(dur_ms);
+        let sc = Scenario::steady(rate, duration);
+        let events = if base.admin_events.is_empty() {
+            loadgen::default_churn_events(duration)
+        } else {
+            base.admin_events.clone()
+        };
+        println!("churn script: {} events over {dur_ms} ms", events.len());
+        let entries: Vec<MixEntry> = handles
+            .iter()
+            .zip(&weights)
+            .map(|(h, &w)| MixEntry { handle: h.clone(), weight: w })
+            .collect();
+        let mix = loadgen::run_churn(&gateway, entries, &sc, &events, 12345);
+        for rep in &mix.per_model {
+            println!("  {}", rep.summary());
+        }
+        mix.total
+    } else if multi || args.get("--scenario").is_some() {
         let name = args.get("--scenario").unwrap_or("steady");
         let rate: f64 = args.parsed("--rate", 2000.0)?;
         let dur_ms: u64 = args.parsed("--duration-ms", 2000)?;
         let sc = Scenario::by_name(name, rate, Duration::from_millis(dur_ms)).with_context(|| {
-            format!("unknown scenario '{name}' (steady|diurnal|flash-crowd|skewed-burst)")
+            format!("unknown scenario '{name}' (steady|diurnal|flash-crowd|skewed-burst|churn)")
         })?;
         let entries: Vec<MixEntry> = handles
             .iter()
@@ -449,16 +498,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
         100.0 * stats.merged.sim_utilization()
     );
     let mut t = Table::new(&[
-        "model", "wt", "submitted", "ok", "shed", "failed", "rows", "stolen", "p50 us", "p99 us",
-        "q p95 us", "conserved",
+        "model", "wt", "rsvd", "submitted", "ok", "shed", "failed", "rows", "stolen", "p50 us",
+        "p99 us", "q p95 us", "conserved",
     ])
-    .with_title(format!("per-model accounting ({} tenants)", stats.per_model.len()).as_str());
+    .with_title(
+        format!(
+            "per-model accounting ({} live / {} registered)",
+            stats.live_models(),
+            stats.per_model.len()
+        )
+        .as_str(),
+    );
     for m in &stats.per_model {
         let (p50, p99) = m.metrics.latency().map(|l| (l.p50_us, l.p99_us)).unwrap_or((0, 0));
         let q95 = m.metrics.queue_latency().map(|l| l.p95_us).unwrap_or(0);
+        let name = if m.live { m.name.clone() } else { format!("{} (removed)", m.name) };
         t.row(vec![
-            m.name.clone(),
+            name,
             m.weight.to_string(),
+            m.reserved.to_string(),
             m.submitted.to_string(),
             m.completed.to_string(),
             m.shed.to_string(),
@@ -473,9 +531,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     print!("{}", t.render());
     println!(
-        "fairness index (Jain, weight-normalized rows): {:.3}   stolen batches: {}",
+        "fairness (Jain): raw {:.3}   demand-normalized {:.3}   stolen batches: {}",
         stats.fairness_index(),
+        stats.fairness_index_normalized(),
         stats.stolen_batches()
+    );
+    println!(
+        "registry: epoch {}   {} live / {} registered tenants",
+        stats.epoch,
+        stats.live_models(),
+        stats.per_model.len()
     );
     let mut t = Table::new(&["replica", "rows", "batches", "stolen", "sim cycles", "sim util %"])
         .with_title(format!("per-replica load balance ({replicas} replicas)").as_str());

@@ -1,0 +1,83 @@
+//! Bench-artifact hygiene: `BENCH_engine.json` / `BENCH_serving.json`
+//! are the machine-readable perf trail tracked across PRs, written by
+//! the deterministic `util::json` renderer. This smoke test pins two
+//! things: (1) a document with the serving bench's schema survives a
+//! render → parse → render round trip unchanged (the renderer is a
+//! fixpoint, so diffs between PRs are semantic, not formatting noise),
+//! and (2) any artifact already sitting in the working tree actually
+//! parses — a bench that starts emitting invalid JSON fails here, not
+//! in whatever downstream tooling reads the trail.
+
+use kan_sas::util::json::Value;
+
+/// A miniature of the `serving_scale` output: one row per section,
+/// including the PR-5 `quota` rows and the demand-normalized fairness
+/// field.
+fn serving_schema_doc() -> Value {
+    Value::obj([
+        ("bench", Value::str("serving_scale")),
+        ("model", Value::str("bench_kan")),
+        ("cores", Value::num(4.0)),
+        (
+            "closed_loop",
+            Value::arr([Value::obj([
+                ("replicas", Value::num(2.0)),
+                ("rows_per_s", Value::num(12345.6)),
+                ("p99_us", Value::num(890.0)),
+            ])]),
+        ),
+        (
+            "fairness",
+            Value::arr([Value::obj([
+                ("dispatch", Value::str("fair-steal")),
+                ("fairness_index", Value::num(0.93)),
+                ("fairness_normalized", Value::num(0.99)),
+                ("minority_p95_queue_us", Value::num(410.0)),
+            ])]),
+        ),
+        (
+            "quota",
+            Value::arr([Value::obj([
+                ("quota", Value::str("on")),
+                ("minority_shed_rate", Value::num(0.02)),
+                ("majority_shed_rate", Value::num(0.31)),
+                ("registry_epoch", Value::num(1.0)),
+                (
+                    "per_model",
+                    Value::arr([Value::obj([
+                        ("model", Value::str("minority")),
+                        ("reserved_slots", Value::num(51.0)),
+                        ("conserved", Value::num(1.0)),
+                    ])]),
+                ),
+            ])]),
+        ),
+    ])
+}
+
+#[test]
+fn serving_bench_schema_roundtrips_deterministically() {
+    let doc = serving_schema_doc();
+    let text = doc.render();
+    let parsed = Value::parse(&text).expect("the renderer must emit valid JSON");
+    assert_eq!(parsed.render(), text, "render → parse → render is a fixpoint");
+    // spot-check a nested path survives
+    let shed = parsed
+        .path("quota/0/minority_shed_rate")
+        .and_then(Value::as_f64)
+        .expect("nested quota row readable");
+    assert!((shed - 0.02).abs() < 1e-12);
+}
+
+#[test]
+fn bench_artifacts_on_disk_stay_valid_json() {
+    for name in ["BENCH_serving.json", "BENCH_engine.json"] {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(name);
+        let Ok(text) = std::fs::read_to_string(&path) else {
+            continue; // benches not run in this tree; nothing to check
+        };
+        let v = Value::parse(&text)
+            .unwrap_or_else(|e| panic!("{name} is not valid JSON: {e}"));
+        assert!(v.get("bench").is_some(), "{name} is missing its 'bench' tag");
+    }
+}

@@ -13,7 +13,7 @@ use kan_sas::arch::ArrayConfig;
 use kan_sas::bspline::Lut;
 use kan_sas::coordinator::{
     BatchPolicy, Dispatch, GatewayBuilder, GatewayConfig, Pool, PoolConfig, PoolError, Priority,
-    Request, Server, ServerConfig, ServeError, ShedPolicy,
+    QuotaPolicy, Request, Server, ServerConfig, ServeError, ShedPolicy,
 };
 use kan_sas::kan::{Engine, LayerParams, QuantizedModel};
 use kan_sas::tensor::Tensor;
@@ -157,6 +157,7 @@ fn pool_config(replicas: usize, queue_cap: usize, shed: ShedPolicy) -> PoolConfi
         policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
         sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
         dispatch: Dispatch::FairSteal,
+        quota: QuotaPolicy::None,
     }
 }
 
@@ -336,6 +337,7 @@ fn gateway_config(replicas: usize, queue_cap: usize, shed: ShedPolicy) -> Gatewa
         policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
         sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
         dispatch: Dispatch::FairSteal,
+        quota: QuotaPolicy::None,
     }
 }
 
@@ -474,6 +476,7 @@ fn gateway_drop_oldest_prefers_low_priority_victims() {
         policy: BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) },
         sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
         dispatch: Dispatch::FairSteal,
+        quota: QuotaPolicy::None,
     });
     // heavy enough that service can't keep pace with the submit burst,
     // so the queue genuinely overflows and evicts

@@ -14,7 +14,7 @@ use std::time::Duration;
 
 use kan_sas::arch::ArrayConfig;
 use kan_sas::coordinator::{
-    BatchPolicy, BufferPool, Dispatch, GatewayBuilder, GatewayConfig, ShedPolicy,
+    BatchPolicy, BufferPool, Dispatch, GatewayBuilder, GatewayConfig, QuotaPolicy, ShedPolicy,
 };
 use kan_sas::kan::{Engine, QuantizedModel};
 use kan_sas::util::alloc_count::{self, CountingAllocator};
@@ -57,6 +57,9 @@ fn response_buffer_pooling_is_allocation_free_after_warmup() {
         policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
         sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
         dispatch: Dispatch::FairSteal,
+        // quotas partition admission, not buffering: the steady-state
+        // path must stay allocation-free with them on
+        quota: QuotaPolicy::weighted(),
     });
     let id = builder.register(
         "alloc",

@@ -1,0 +1,289 @@
+//! Registry-churn integration: a live gateway survives hot-add,
+//! re-weight, and remove under load. The invariants under test are the
+//! drain-on-remove contract (per-model conservation across the
+//! transition, zero lost responses — every ticket resolves) and the
+//! epoch-swap machinery (workers adopt new snapshots at batch
+//! boundaries; a removed tenant's slot and counters stay visible).
+
+use std::time::{Duration, Instant};
+
+use kan_sas::arch::ArrayConfig;
+use kan_sas::coordinator::{
+    BatchPolicy, Dispatch, DrainMode, GatewayBuilder, GatewayConfig, QuotaPolicy, ServeError,
+    ShedPolicy,
+};
+use kan_sas::kan::{Engine, QuantizedModel};
+use kan_sas::loadgen::{self, MixEntry, Scenario};
+
+fn config(
+    replicas: usize,
+    queue_cap: usize,
+    shed: ShedPolicy,
+    policy: BatchPolicy,
+    quota: QuotaPolicy,
+) -> GatewayConfig {
+    GatewayConfig {
+        replicas,
+        queue_cap,
+        shed,
+        policy,
+        sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
+        dispatch: Dispatch::FairSteal,
+        quota,
+    }
+}
+
+fn light(name: &str, seed: u64) -> Engine {
+    Engine::new(QuantizedModel::synthetic(name, &[4, 6, 3], 5, 3, seed))
+}
+
+/// Heavy enough that a batch takes real milliseconds — removals race
+/// actual in-flight service, not an already-drained fleet.
+fn heavy(name: &str, seed: u64) -> Engine {
+    Engine::new(QuantizedModel::synthetic(name, &[128, 256, 10], 5, 3, seed))
+}
+
+#[test]
+fn add_then_immediately_serve() {
+    let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) };
+    let mut b = GatewayBuilder::with_config(config(
+        2,
+        64,
+        ShedPolicy::RejectNew,
+        policy,
+        QuotaPolicy::weighted(),
+    ));
+    let base = b.register("base", light("base", 1));
+    let gw = b.start();
+    let epoch0 = gw.registry_epoch();
+    // serve the original tenant first so workers are mid-steady-state
+    assert_eq!(gw.handle(base).infer_q(vec![1, 2, 3, 4]).unwrap().t.len(), 3);
+    // hot-add and submit with no grace period: the worker must adopt
+    // the new snapshot on its next pull and serve the fresh tenant
+    let late = gw.add_model("late", light("late", 2)).unwrap();
+    assert_eq!(late.infer_q(vec![4, 3, 2, 1]).unwrap().t.len(), 3);
+    assert!(gw.registry_epoch() > epoch0);
+    // the new tenant is addressable by name and holds a quota reserve
+    assert_eq!(gw.handle_by_name("late").unwrap().model_id(), late.model_id());
+    let stats = gw.shutdown();
+    assert!(stats.conserved());
+    assert_eq!(stats.per_model.len(), 2);
+    assert_eq!(stats.per_model[1].completed, 1);
+    assert!(stats.per_model[1].reserved > 0, "hot-added tenant gets reserved slots");
+}
+
+#[test]
+fn set_weight_mid_burst_keeps_serving() {
+    let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) };
+    let mut b = GatewayBuilder::with_config(config(
+        2,
+        512,
+        ShedPolicy::Block,
+        policy,
+        QuotaPolicy::None,
+    ));
+    let a = b.register("steady", heavy("steady", 11));
+    let c = b.register("boosted", heavy("boosted", 12));
+    let gw = b.start();
+    let (ha, hc) = (gw.handle(a), gw.handle(c));
+    let mut threads = Vec::new();
+    for (h, seed) in [(ha, 0u8), (hc, 7u8)] {
+        threads.push(std::thread::spawn(move || {
+            for i in 0..60u8 {
+                h.infer_q(vec![i.wrapping_add(seed); 128]).expect("healthy gateway serves");
+            }
+        }));
+    }
+    // re-weight while both tenants are mid-burst; the change must not
+    // drop, duplicate, or stall any in-flight request
+    std::thread::sleep(Duration::from_millis(20));
+    gw.set_weight(c, 8).unwrap();
+    for t in threads {
+        t.join().unwrap();
+    }
+    let stats = gw.shutdown();
+    assert!(stats.conserved());
+    assert_eq!(stats.completed(), 120);
+    assert_eq!(stats.per_model[c.index()].weight, 8, "re-weight visible in final stats");
+    assert!(stats.epoch >= 2);
+}
+
+#[test]
+fn remove_serve_drains_a_coalescing_backlog() {
+    // a 10s batching window: the backlog is NOT due on its own, so the
+    // drain must come from the removal expediting it — not from luck
+    let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_secs(10) };
+    let mut b = GatewayBuilder::with_config(config(
+        1,
+        64,
+        ShedPolicy::RejectNew,
+        policy,
+        QuotaPolicy::None,
+    ));
+    let keep = b.register("keep", light("keep", 21));
+    let gone = b.register("gone", light("gone", 22));
+    let gw = b.start();
+    let h = gw.handle(gone);
+    let start = Instant::now();
+    let tickets: Vec<_> = (0..3u8).map(|i| h.submit_q(vec![i; 4]).unwrap()).collect();
+    // 3 < max_batch and far under max_wait: still coalescing
+    let removed = gw.remove_model(gone, DrainMode::Serve).unwrap();
+    assert!(
+        start.elapsed() < Duration::from_secs(5),
+        "drain must expedite the batch, not wait out the 10s window"
+    );
+    for t in tickets {
+        t.wait().expect("Serve drain completes the backlog");
+    }
+    assert_eq!(removed.completed, 3);
+    assert!(removed.conserved() && !removed.live);
+    // the removed handle rejects; the surviving tenant still serves
+    assert!(matches!(h.infer_q(vec![9; 4]).unwrap_err(), ServeError::UnknownModel(_)));
+    assert_eq!(gw.handle(keep).infer_q(vec![1, 2, 3, 4]).unwrap().t.len(), 3);
+    let stats = gw.shutdown();
+    assert!(stats.conserved());
+    assert!(!stats.per_model[gone.index()].live);
+}
+
+#[test]
+fn remove_shed_flushes_backlog_under_overload() {
+    // slow service (heavy model, 1 replica) + a deep backlog: the Shed
+    // removal must answer everything still waiting, quickly
+    let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10) };
+    let mut b = GatewayBuilder::with_config(config(
+        1,
+        128,
+        ShedPolicy::RejectNew,
+        policy,
+        QuotaPolicy::None,
+    ));
+    let keep = b.register("keep", heavy("keep", 31));
+    let gone = b.register("gone", heavy("gone", 32));
+    let gw = b.start();
+    let h = gw.handle(gone);
+    let tickets: Vec<_> = (0..96u8).map(|i| h.submit_q(vec![i; 128]).unwrap()).collect();
+    // let the worker pull some of the backlog into its shard so the
+    // flush exercises both locations (shared queue + shard batchers)
+    std::thread::sleep(Duration::from_millis(5));
+    let removed = gw.remove_model(gone, DrainMode::Shed).unwrap();
+    let mut ok = 0u64;
+    let mut shed = 0u64;
+    for t in tickets {
+        match t.wait() {
+            Ok(_) => ok += 1,
+            Err(ServeError::QueueFull) => shed += 1,
+            Err(e) => panic!("unexpected outcome {e}"),
+        }
+    }
+    assert_eq!(ok + shed, 96, "every admitted request resolves exactly once");
+    assert!(shed > 0, "a 10s window + slow service: the flush must shed something");
+    assert_eq!(removed.submitted, 96);
+    assert_eq!(removed.completed, ok);
+    assert_eq!(removed.shed, shed);
+    assert!(removed.conserved(), "{removed:?}");
+    // the survivor is untouched
+    assert_eq!(gw.handle(keep).infer_q(vec![5; 128]).unwrap().t.len(), 10);
+    assert!(gw.shutdown().conserved());
+}
+
+#[test]
+fn remove_races_drop_oldest_overload() {
+    // DropOldest + a tiny queue + competing floods: eviction, service,
+    // and a Shed removal all race; conservation must hold regardless
+    let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) };
+    let mut b = GatewayBuilder::with_config(config(
+        2,
+        16,
+        ShedPolicy::DropOldest,
+        policy,
+        QuotaPolicy::weighted(),
+    ));
+    let keep = b.register("keep", heavy("keep", 41));
+    let gone = b.register("gone", heavy("gone", 42));
+    let gw = b.start();
+    let mut floods = Vec::new();
+    for (id, seed) in [(keep, 0u8), (gone, 9u8)] {
+        let h = gw.handle(id);
+        floods.push(std::thread::spawn(move || {
+            let mut outcomes = (0u64, 0u64, 0u64); // ok, shed, unknown
+            let mut tickets = Vec::new();
+            for i in 0..120u8 {
+                match h.submit_q(vec![i.wrapping_add(seed); 128]) {
+                    Ok(t) => tickets.push(t),
+                    Err(ServeError::QueueFull) => outcomes.1 += 1,
+                    Err(ServeError::UnknownModel(_)) => {
+                        outcomes.2 += 1; // removal landed; stop flooding
+                        break;
+                    }
+                    Err(e) => panic!("unexpected submit error {e}"),
+                }
+            }
+            for t in tickets {
+                match t.wait() {
+                    Ok(_) => outcomes.0 += 1,
+                    Err(ServeError::QueueFull) => outcomes.1 += 1,
+                    Err(e) => panic!("unexpected ticket outcome {e}"),
+                }
+            }
+            outcomes
+        }));
+    }
+    std::thread::sleep(Duration::from_millis(30));
+    let removed = gw.remove_model(gone, DrainMode::Shed).unwrap();
+    assert!(removed.conserved(), "{removed:?}");
+    let mut total_ok = 0;
+    for f in floods {
+        let (ok, _shed, _unknown) = f.join().unwrap();
+        total_ok += ok;
+    }
+    let stats = gw.shutdown();
+    assert!(stats.conserved(), "{stats:?}");
+    assert_eq!(stats.completed(), total_ok, "gateway and clients agree on completions");
+    assert!(!stats.per_model[gone.index()].live);
+    assert!(stats.per_model[keep.index()].live);
+}
+
+/// The acceptance-criteria cycle: a live gateway runs `add_model`,
+/// serve, `set_weight`, `remove_model` under open-loop load with quotas
+/// on, and per-model conservation holds end to end with zero lost
+/// responses.
+#[test]
+fn full_churn_cycle_under_load() {
+    let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) };
+    let mut b = GatewayBuilder::with_config(config(
+        2,
+        256,
+        ShedPolicy::RejectNew,
+        policy,
+        QuotaPolicy::weighted(),
+    ));
+    let a = b.register("app0", light("app0", 51));
+    let c = b.register_weighted("app1", light("app1", 52), 2);
+    let gw = b.start();
+    let entries = vec![
+        MixEntry { handle: gw.handle(a), weight: 1.0 },
+        MixEntry { handle: gw.handle(c), weight: 1.0 },
+    ];
+    let sc = Scenario::steady(1200.0, Duration::from_millis(500));
+    let events = loadgen::default_churn_events(sc.total_duration());
+    let mix = loadgen::run_churn(&gw, entries, &sc, &events, 61);
+    let stats = gw.shutdown();
+    assert_eq!(mix.per_model.len(), 3);
+    for (rep, ms) in mix.per_model.iter().zip(&stats.per_model) {
+        assert_eq!(
+            rep.submitted,
+            rep.ok + rep.shed + rep.failed,
+            "{}: generator-side conservation",
+            rep.scenario
+        );
+        assert_eq!(ms.submitted, rep.submitted, "{}: gateway agrees", ms.name);
+        assert!(ms.conserved(), "{}: {ms:?}", ms.name);
+        assert_eq!(rep.failed, 0, "{}: zero lost responses across churn", rep.scenario);
+    }
+    assert!(stats.conserved());
+    let hot = &mix.per_model[2];
+    assert!(hot.ok > 0, "the hot-added tenant was actually served: {hot:?}");
+    assert!(!stats.per_model[2].live, "the script removes its tenant again");
+    // start(1) + add(1) + set_weight(1) + remove(2)
+    assert!(stats.epoch >= 5, "the full cycle moves the epoch, got {}", stats.epoch);
+}
