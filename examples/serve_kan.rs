@@ -19,7 +19,7 @@ use anyhow::Result;
 use kan_sas::arch::ArrayConfig;
 use kan_sas::coordinator::{
     BatchPolicy, Dispatch, GatewayBuilder, GatewayConfig, Pool, PoolConfig, QuotaPolicy,
-    ShedPolicy,
+    ShedPolicy, TelemetryConfig,
 };
 use kan_sas::kan::{Engine, QuantizedModel};
 use kan_sas::loadgen::{self, MixEntry, Scenario};
@@ -33,6 +33,7 @@ fn pool_config(replicas: usize, shed: ShedPolicy) -> PoolConfig {
         sim_array: ArrayConfig::kan_sas(16, 16, 4, 13),
         dispatch: Dispatch::FairSteal,
         quota: QuotaPolicy::None,
+        telemetry: TelemetryConfig::default(),
     }
 }
 
@@ -92,6 +93,7 @@ fn main() -> Result<()> {
         sim_array: ArrayConfig::kan_sas(16, 16, 4, 13),
         dispatch: Dispatch::FairSteal,
         quota: QuotaPolicy::None,
+        telemetry: TelemetryConfig::default(),
     });
     let mnist = builder.register("mnist", engine.clone());
     let har = builder.register_weighted(

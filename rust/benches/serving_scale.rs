@@ -31,6 +31,11 @@
 //!    demand-normalized fairness index. The acceptance shape: the
 //!    minority tenant's shed rate is lower with quotas on — reserved
 //!    slots keep its arrivals admissible through the majority burst.
+//! 6. **Telemetry spine overhead** — the closed-loop hammering rerun
+//!    with the spine fully off vs on (collector thread + windowed stats
+//!    + flight recorder + 1-in-64 span tracing). Recorded per mode:
+//!    rows/sec, p50/p95/p99, and ring-overflow drops. The acceptance
+//!    shape: spine-on throughput and p95 stay within 2% of off.
 //!
 //! ```bash
 //! cargo bench --bench serving_scale
@@ -38,7 +43,8 @@
 //!
 //! Besides the printed tables, the run writes `BENCH_serving.json`
 //! (throughput per replica count, scenario shed rates, p50/p99 latency,
-//! multi-model mix rows, fairness rows, quota rows) so the serving perf
+//! multi-model mix rows, fairness rows, quota rows, telemetry
+//! overhead rows) so the serving perf
 //! trajectory is tracked across PRs instead of anecdotal. The file is
 //! rendered by the deterministic `util::json` writer and its validity
 //! is smoke-tested by `tests/bench_artifacts.rs`.
@@ -48,7 +54,7 @@ use std::time::Duration;
 use kan_sas::arch::ArrayConfig;
 use kan_sas::coordinator::{
     BatchPolicy, Dispatch, GatewayBuilder, GatewayConfig, Pool, PoolConfig, QuotaPolicy,
-    ShedPolicy,
+    ShedPolicy, TelemetryConfig,
 };
 use kan_sas::kan::{Engine, QuantizedModel};
 use kan_sas::loadgen::{self, Focus, MixEntry, Scenario};
@@ -60,6 +66,13 @@ fn bench_engine() -> Engine {
     Engine::new(QuantizedModel::synthetic("bench_kan", &[64, 128, 64, 10], 5, 3, 42))
 }
 
+/// Bench-grade telemetry: the serving-default spine stays on, but the
+/// `Metrics` cells keep exact latency samples so reported percentiles
+/// carry no histogram bucketing error.
+fn bench_telemetry() -> TelemetryConfig {
+    TelemetryConfig { exact_samples: true, ..TelemetryConfig::default() }
+}
+
 fn pool_config(replicas: usize, queue_cap: usize, shed: ShedPolicy) -> PoolConfig {
     PoolConfig {
         replicas,
@@ -69,6 +82,7 @@ fn pool_config(replicas: usize, queue_cap: usize, shed: ShedPolicy) -> PoolConfi
         sim_array: ArrayConfig::kan_sas(16, 16, 4, 8),
         dispatch: Dispatch::FairSteal,
         quota: QuotaPolicy::None,
+        telemetry: bench_telemetry(),
     }
 }
 
@@ -183,6 +197,7 @@ fn main() {
                 sim_array: ArrayConfig::kan_sas(16, 16, 4, 8),
                 dispatch: Dispatch::FairSteal,
                 quota: QuotaPolicy::None,
+                telemetry: bench_telemetry(),
             });
             let a = b.register("mnist_mix", mnist_like.clone());
             let h = b.register("har_mix", har_like.clone());
@@ -269,6 +284,7 @@ fn main() {
             sim_array: ArrayConfig::kan_sas(16, 16, 4, 8),
             dispatch,
             quota: QuotaPolicy::None,
+            telemetry: bench_telemetry(),
         });
         let maj = b.register_weighted("majority", majority.clone(), w_major);
         let min = b.register_weighted("minority", minority.clone(), w_minor);
@@ -373,6 +389,7 @@ fn main() {
             sim_array: ArrayConfig::kan_sas(16, 16, 4, 8),
             dispatch: Dispatch::FairSteal,
             quota,
+            telemetry: bench_telemetry(),
         });
         let maj = b.register_weighted("majority", majority.clone(), 1);
         let min = b.register_weighted("minority", minority.clone(), 4);
@@ -437,6 +454,68 @@ fn main() {
         100.0 * minority_shed[0]
     );
 
+    // 6. telemetry spine overhead: the same closed-loop hammering with
+    // the spine fully off vs on (windowed collector + flight recorder +
+    // 1-in-64 span tracing — a harsher setting than the serving
+    // default). Acceptance shape: rows/s and p95 within 2% of off.
+    let tel_replicas = cores.clamp(2, 4);
+    println!("\ntelemetry overhead ({tel_replicas} replicas, 16 clients, 700ms, spine off vs on):");
+    let mut t = Table::new(&[
+        "telemetry", "rows/s", "req/s", "p50 us", "p95 us", "p99 us", "dropped",
+    ])
+    .with_title("spine off vs on (windowed stats + flight recorder + 1-in-64 spans)");
+    let mut telemetry_json = Vec::new();
+    let mut tel_rows = [0.0f64; 2];
+    let mut tel_p95 = [0u64; 2];
+    for (ti, (label, tcfg)) in [
+        ("off", TelemetryConfig::off()),
+        ("on", TelemetryConfig { trace_sample: 64, ..TelemetryConfig::default() }),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let mut cfg = pool_config(tel_replicas, 4096, ShedPolicy::Block);
+        cfg.telemetry = TelemetryConfig { exact_samples: true, ..tcfg };
+        let pool = Pool::start(engine.clone(), cfg);
+        let tel = pool.telemetry();
+        let rep = loadgen::closed_loop(&pool.handle(), 16, Duration::from_millis(700), None, 7);
+        let stats = pool.shutdown();
+        let dropped = tel.dropped_events();
+        let rows_s = stats.merged.batch_rows as f64 / rep.wall.as_secs_f64();
+        let (p50, p95, p99) =
+            rep.latency.map(|l| (l.p50_us, l.p95_us, l.p99_us)).unwrap_or((0, 0, 0));
+        tel_rows[ti] = rows_s;
+        tel_p95[ti] = p95;
+        t.row(vec![
+            label.to_string(),
+            format!("{rows_s:.0}"),
+            format!("{:.0}", rep.achieved_rps),
+            p50.to_string(),
+            p95.to_string(),
+            p99.to_string(),
+            dropped.to_string(),
+        ]);
+        telemetry_json.push(Value::obj([
+            ("mode", Value::str(label)),
+            ("replicas", Value::num(tel_replicas as f64)),
+            ("rows_per_s", Value::num(rows_s)),
+            ("achieved_rps", Value::num(rep.achieved_rps)),
+            ("p50_us", Value::num(p50 as f64)),
+            ("p95_us", Value::num(p95 as f64)),
+            ("p99_us", Value::num(p99 as f64)),
+            ("dropped_events", Value::num(dropped as f64)),
+        ]));
+    }
+    print!("{}", t.render());
+    let rows_delta = (tel_rows[0] - tel_rows[1]) / tel_rows[0].max(1.0);
+    let p95_delta =
+        (tel_p95[1] as f64 - tel_p95[0] as f64) / (tel_p95[0] as f64).max(1.0);
+    println!(
+        "acceptance shape: spine-on within 2% of off (throughput delta {:.2}%, p95 delta {:.2}%)",
+        100.0 * rows_delta,
+        100.0 * p95_delta
+    );
+
     let doc = Value::obj([
         ("bench", Value::str("serving_scale")),
         ("model", Value::str(engine.model.name.clone())),
@@ -447,6 +526,7 @@ fn main() {
         ("multi_model", Value::arr(mix_json)),
         ("fairness", Value::arr(fairness_json)),
         ("quota", Value::arr(quota_json)),
+        ("telemetry", Value::arr(telemetry_json)),
     ]);
     let out = "BENCH_serving.json";
     std::fs::write(out, doc.render() + "\n").expect("write bench artifact");

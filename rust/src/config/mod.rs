@@ -21,6 +21,15 @@
 //! stanza scripts registry churn for `kansas serve --scenario churn`:
 //! each event hot-adds (`add` takes a synthetic `name:DIMxDIM..` spec),
 //! re-weights, or removes a tenant on the live gateway at `at_ms`.
+//!
+//! A `telemetry` stanza tunes the observability spine:
+//! ```json
+//! {
+//!   "telemetry": {"enabled": true, "ring_capacity": 8192,
+//!                 "window_ms": 1000, "flight_capacity": 64,
+//!                 "trace_sample": 0, "exact_samples": false}
+//! }
+//! ```
 
 use std::path::Path;
 use std::time::Duration;
@@ -28,7 +37,9 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use crate::arch::{ArrayConfig, PeKind, WeightLoad};
-use crate::coordinator::{BatchPolicy, Dispatch, DrainMode, PoolConfig, QuotaPolicy, ShedPolicy};
+use crate::coordinator::{
+    BatchPolicy, Dispatch, DrainMode, PoolConfig, QuotaPolicy, ShedPolicy, TelemetryConfig,
+};
 use crate::loadgen::{ChurnAction, ChurnEvent};
 use crate::util::json::Value;
 
@@ -52,6 +63,10 @@ pub struct RunConfig {
     /// Scripted registry churn (the `admin` stanza), applied by
     /// `kansas serve --scenario churn`.
     pub admin_events: Vec<ChurnEvent>,
+    /// Telemetry spine settings (the `telemetry` stanza; CLI
+    /// `--telemetry`/`--stats-every`/`--trace-sample` flags layer on
+    /// top).
+    pub telemetry: TelemetryConfig,
 }
 
 impl Default for RunConfig {
@@ -67,6 +82,7 @@ impl Default for RunConfig {
             dispatch: pool.dispatch,
             quota: pool.quota,
             admin_events: Vec::new(),
+            telemetry: pool.telemetry,
         }
     }
 }
@@ -236,6 +252,35 @@ impl RunConfig {
                 cfg.quota = parse_quota(q)?;
             }
         }
+        if let Some(t) = v.get("telemetry") {
+            if let Some(b) = t.get("enabled").and_then(Value::as_bool) {
+                cfg.telemetry.enabled = b;
+            }
+            if let Some(c) = t.get("ring_capacity").and_then(Value::as_usize) {
+                if c < 2 {
+                    bail!("telemetry.ring_capacity must be >= 2");
+                }
+                cfg.telemetry.ring_capacity = c;
+            }
+            if let Some(ms) = t.get("window_ms").and_then(Value::as_f64) {
+                if !ms.is_finite() || ms <= 0.0 {
+                    bail!("telemetry.window_ms must be positive");
+                }
+                cfg.telemetry.window = Duration::from_micros((ms * 1000.0) as u64);
+            }
+            if let Some(c) = t.get("flight_capacity").and_then(Value::as_usize) {
+                if c == 0 {
+                    bail!("telemetry.flight_capacity must be positive");
+                }
+                cfg.telemetry.flight_capacity = c;
+            }
+            if let Some(n) = t.get("trace_sample").and_then(Value::as_usize) {
+                cfg.telemetry.trace_sample = n as u64;
+            }
+            if let Some(b) = t.get("exact_samples").and_then(Value::as_bool) {
+                cfg.telemetry.exact_samples = b;
+            }
+        }
         if let Some(a) = v.get("admin") {
             let events = a
                 .get("events")
@@ -259,6 +304,7 @@ impl RunConfig {
             sim_array: self.array,
             dispatch: self.dispatch,
             quota: self.quota,
+            telemetry: self.telemetry,
         }
     }
 }

@@ -109,6 +109,13 @@ impl<T> Batcher<T> {
         }
     }
 
+    /// Age of the oldest queued item (`None` when empty) — how long the
+    /// head of this batch has been coalescing. The telemetry spine
+    /// stamps this on every batch-formed event.
+    pub fn oldest_age(&self) -> Option<Duration> {
+        self.oldest.map(|t0| t0.elapsed())
+    }
+
     /// Take up to `max_batch` items (FIFO), leaving the rest queued with
     /// their original arrival times.
     pub fn drain(&mut self) -> Vec<T> {

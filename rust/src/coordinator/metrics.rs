@@ -7,21 +7,195 @@
 //! [`jain_fairness_normalized`] is its demand-normalized companion:
 //! Jain over `served / min(demand, weighted share)`, which isolates
 //! *scheduler* fairness from the arrival mix below saturation.
+//!
+//! Latency distributions default to a bounded [`LogHistogram`] (fixed
+//! 7.8 KiB per stream, ≤ ~3.2% relative quantile error), so a serving
+//! cell's memory no longer grows with the request count. Benches that
+//! want exact percentiles opt back into sample retention with
+//! [`Metrics::exact`].
 
 use std::time::Duration;
 
 use crate::sim::SimStats;
 
-/// Online latency collector (stores all samples; serving runs here are
-/// bounded, so memory is a non-issue and exact percentiles beat sketches).
+/// Values below this record into exact unit-width buckets.
+const LINEAR_CUTOFF: u64 = 32;
+/// Log-spaced sub-buckets per power of two above the cutoff.
+const SUBBUCKETS: usize = 16;
+/// Octaves covered above the cutoff (exponents 5..=63 inclusive).
+const OCTAVES: usize = 59;
+/// Total bucket count of a [`LogHistogram`].
+pub const HIST_BUCKETS: usize = LINEAR_CUTOFF as usize + OCTAVES * SUBBUCKETS;
+
+/// Bucket index for a value: identity below [`LINEAR_CUTOFF`], then the
+/// top five significant bits select one of [`SUBBUCKETS`] sub-buckets
+/// inside the value's octave. Width of a bucket is `2^(l-4)` for a value
+/// with leading bit `l`, so the representative midpoint is at most
+/// `~1/32` (3.2%) away from any member in relative terms.
+fn bucket_index(v: u64) -> usize {
+    if v < LINEAR_CUTOFF {
+        return v as usize;
+    }
+    let l = 63 - v.leading_zeros() as usize; // 5..=63
+    let sub = ((v >> (l - 4)) as usize) & (SUBBUCKETS - 1);
+    LINEAR_CUTOFF as usize + (l - 5) * SUBBUCKETS + sub
+}
+
+/// Midpoint of a bucket's value range (inverse of [`bucket_index`]).
+fn representative(idx: usize) -> u64 {
+    if idx < LINEAR_CUTOFF as usize {
+        return idx as u64;
+    }
+    let r = idx - LINEAR_CUTOFF as usize;
+    let l = 5 + r / SUBBUCKETS;
+    let sub = (r % SUBBUCKETS) as u64;
+    let lo = (SUBBUCKETS as u64 + sub) << (l - 4);
+    let width = 1u64 << (l - 4);
+    lo + (width - 1) / 2
+}
+
+/// Bounded log-bucketed histogram over `u64` samples (microseconds in
+/// every current use). Fixed memory ([`HIST_BUCKETS`] counters),
+/// O(1) record with no allocation, quantiles within ~3.2% relative
+/// error (exact below [`LINEAR_CUTOFF`]). The min/max extremes are
+/// tracked exactly, and quantiles clamp to them, so tiny sample sets
+/// behave like the exact path. Shared by serving [`Metrics`] cells and
+/// the telemetry collector's per-window latency series.
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    counts: Box<[u64]>,
+    count: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    /// An empty histogram (allocates its fixed bucket array once).
+    pub fn new() -> Self {
+        Self {
+            counts: vec![0u64; HIST_BUCKETS].into_boxed_slice(),
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    /// Record one sample. Never allocates.
+    pub fn record(&mut self, v: u64) {
+        self.counts[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact largest recorded sample (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Arithmetic mean of recorded samples (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum as f64 / self.count as f64
+    }
+
+    /// Reset to empty without releasing the bucket array (the telemetry
+    /// collector rolls windows allocation-free through this).
+    pub fn clear(&mut self) {
+        self.counts.fill(0);
+        self.count = 0;
+        self.sum = 0;
+        self.min = u64::MAX;
+        self.max = 0;
+    }
+
+    /// Fold another histogram into this one.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (c, o) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *c += o;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// The `p`-quantile (p in [0, 1]) with the same rank convention as
+    /// the exact path: the sample at index `min(floor(count*p), count-1)`
+    /// of the sorted stream, reported as its bucket's midpoint.
+    pub fn quantile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((self.count as f64 * p) as u64).min(self.count - 1);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum > rank {
+                return representative(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Percentile summary in [`LatencyStats`] form; `None` when empty.
+    pub fn stats(&self) -> Option<LatencyStats> {
+        if self.count == 0 {
+            return None;
+        }
+        Some(LatencyStats {
+            count: self.count as usize,
+            mean_us: self.mean(),
+            p50_us: self.quantile(0.50),
+            p95_us: self.quantile(0.95),
+            p99_us: self.quantile(0.99),
+            max_us: self.max,
+        })
+    }
+}
+
+/// Request-latency collector. The default mode records into bounded
+/// [`LogHistogram`]s (fixed memory per cell no matter how long the
+/// gateway serves); [`Metrics::exact`] cells additionally retain every
+/// sample for exact percentiles (benches and short analysis runs).
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
+    /// Retain raw samples for exact percentiles (bench mode).
+    exact: bool,
+    /// Raw end-to-end samples (exact mode only).
     latencies_us: Vec<u64>,
-    /// Per-request queueing samples (admission → batch serve start),
-    /// parallel to `latencies_us`; the fairness experiments read their
-    /// percentiles through [`Metrics::queue_latency`] because starvation
-    /// shows up in queue time, not service time.
+    /// Raw queueing samples, parallel to `latencies_us` (exact mode only).
     queue_samples_us: Vec<u64>,
+    /// Bounded end-to-end latency distribution (always maintained).
+    latency_hist: LogHistogram,
+    /// Bounded queueing-delay distribution (always maintained); the
+    /// fairness experiments read its percentiles through
+    /// [`Metrics::queue_latency`] because starvation shows up in queue
+    /// time, not service time.
+    queue_hist: LogHistogram,
+    /// Requests recorded (the divisor for the mean splits).
+    requests: u64,
     /// Sum of per-request *queueing* microseconds (admission → batch
     /// serve start); with `service_us_sum` this splits the end-to-end
     /// latency so shed-policy experiments can separate waiting from
@@ -46,8 +220,9 @@ pub struct Metrics {
     pub sim_useful_macs: u64,
 }
 
-/// Summary of one latency distribution (exact percentiles over all
-/// recorded samples).
+/// Summary of one latency distribution. Percentiles are exact in
+/// [`Metrics::exact`] mode and bucket midpoints (≤ ~3.2% relative
+/// error) in the default histogram mode; `max_us` is exact in both.
 #[derive(Clone, Copy, Debug)]
 pub struct LatencyStats {
     /// Number of samples.
@@ -130,11 +305,29 @@ pub fn jain_fairness_normalized(rows: &[(f64, f64, f64)]) -> f64 {
 }
 
 impl Metrics {
+    /// A cell that retains every raw sample for exact percentiles, at
+    /// the cost of memory growing with the request count. Benches and
+    /// bounded analysis runs use this; serving defaults to the bounded
+    /// histogram cell.
+    pub fn exact() -> Self {
+        Self { exact: true, ..Self::default() }
+    }
+
+    /// True when this cell retains raw samples (exact percentiles).
+    pub fn is_exact(&self) -> bool {
+        self.exact
+    }
+
     /// Record one answered request by its end-to-end latency (no
     /// queue/service split — the split-aware path is
     /// [`Metrics::record_request_split`]).
     pub fn record_request(&mut self, latency: Duration) {
-        self.latencies_us.push(latency.as_micros() as u64);
+        let us = latency.as_micros() as u64;
+        self.requests += 1;
+        self.latency_hist.record(us);
+        if self.exact {
+            self.latencies_us.push(us);
+        }
     }
 
     /// Record one answered request with its latency split into queueing
@@ -147,24 +340,29 @@ impl Metrics {
         let s = service.as_micros() as u64;
         self.queue_us_sum += q;
         self.service_us_sum += s;
-        self.queue_samples_us.push(q);
-        self.latencies_us.push(q + s);
+        self.requests += 1;
+        self.queue_hist.record(q);
+        self.latency_hist.record(q + s);
+        if self.exact {
+            self.queue_samples_us.push(q);
+            self.latencies_us.push(q + s);
+        }
     }
 
     /// Mean queueing delay per recorded request, in microseconds.
     pub fn mean_queue_us(&self) -> f64 {
-        if self.latencies_us.is_empty() {
+        if self.requests == 0 {
             return 0.0;
         }
-        self.queue_us_sum as f64 / self.latencies_us.len() as f64
+        self.queue_us_sum as f64 / self.requests as f64
     }
 
     /// Mean service time per recorded request, in microseconds.
     pub fn mean_service_us(&self) -> f64 {
-        if self.latencies_us.is_empty() {
+        if self.requests == 0 {
             return 0.0;
         }
-        self.service_us_sum as f64 / self.latencies_us.len() as f64
+        self.service_us_sum as f64 / self.requests as f64
     }
 
     /// Record a served batch and its simulated cycle count.
@@ -189,10 +387,21 @@ impl Metrics {
         self.stolen_batches += 1;
     }
 
-    /// Fold another cell's counters and samples into this one.
+    /// Fold another cell's counters and samples into this one. An empty
+    /// cell adopts the other's exactness (so a freshly defaulted merge
+    /// base inherits the mode of the cells folded into it); otherwise
+    /// the merge is exact only if both sides are.
     pub fn merge(&mut self, other: &Metrics) {
+        if self.requests == 0 {
+            self.exact = other.exact;
+        } else if other.requests > 0 {
+            self.exact = self.exact && other.exact;
+        }
         self.latencies_us.extend_from_slice(&other.latencies_us);
         self.queue_samples_us.extend_from_slice(&other.queue_samples_us);
+        self.latency_hist.merge(&other.latency_hist);
+        self.queue_hist.merge(&other.queue_hist);
+        self.requests += other.requests;
         self.queue_us_sum += other.queue_us_sum;
         self.service_us_sum += other.service_us_sum;
         self.batches += other.batches;
@@ -220,9 +429,14 @@ impl Metrics {
         self.sim_useful_macs as f64 / self.sim_active_slots as f64
     }
 
-    /// End-to-end latency percentiles (`None` before any request).
+    /// End-to-end latency percentiles (`None` before any request):
+    /// exact in [`Metrics::exact`] mode, histogram-derived otherwise.
     pub fn latency(&self) -> Option<LatencyStats> {
-        stats_of(&self.latencies_us)
+        if self.exact {
+            stats_of(&self.latencies_us)
+        } else {
+            self.latency_hist.stats()
+        }
     }
 
     /// Queueing-delay percentiles (admission → batch serve start) over
@@ -230,7 +444,11 @@ impl Metrics {
     /// starvation metric: a tenant stuck behind another tenant's burst
     /// shows it here even when its service time is tiny.
     pub fn queue_latency(&self) -> Option<LatencyStats> {
-        stats_of(&self.queue_samples_us)
+        if self.exact {
+            stats_of(&self.queue_samples_us)
+        } else {
+            self.queue_hist.stats()
+        }
     }
 }
 
@@ -255,6 +473,7 @@ mod tests {
     fn empty_latency_none() {
         assert!(Metrics::default().latency().is_none());
         assert!(Metrics::default().queue_latency().is_none());
+        assert!(Metrics::exact().latency().is_none());
     }
 
     #[test]
@@ -310,6 +529,124 @@ mod tests {
         assert_eq!(a.sim_active_slots, 200);
         assert!((a.sim_utilization() - 0.5).abs() < 1e-12);
         assert_eq!(Metrics::default().sim_utilization(), 0.0);
+    }
+
+    #[test]
+    fn exact_mode_keeps_samples_and_merge_adopts_mode() {
+        let mut e = Metrics::exact();
+        assert!(e.is_exact() && !Metrics::default().is_exact());
+        for us in [10u64, 20, 30] {
+            e.record_request(Duration::from_micros(us));
+        }
+        assert_eq!(e.latency().unwrap().p50_us, 20);
+        // an empty default-mode merge base adopts exactness from its
+        // first non-empty contribution (the loadgen merge pattern)
+        let mut base = Metrics::default();
+        base.merge(&e);
+        assert!(base.is_exact());
+        assert_eq!(base.latency().unwrap().count, 3);
+        // merging a histogram-mode cell into an exact one demotes it
+        let mut h = Metrics::default();
+        h.record_request(Duration::from_micros(40));
+        base.merge(&h);
+        assert!(!base.is_exact());
+        assert_eq!(base.latency().unwrap().count, 4);
+    }
+
+    #[test]
+    fn histogram_bucket_roundtrip() {
+        // every value maps to a bucket whose representative is within
+        // 3.2% (exact below the linear cutoff)
+        let mut v = 1u64;
+        while v < u64::MAX / 3 {
+            for x in [v, v + v / 3, v.saturating_mul(2) - 1] {
+                let idx = bucket_index(x);
+                let rep = representative(idx);
+                assert_eq!(bucket_index(rep), idx, "representative stays in its bucket");
+                if x < LINEAR_CUTOFF {
+                    assert_eq!(rep, x);
+                } else {
+                    let err = (rep as f64 - x as f64).abs() / x as f64;
+                    assert!(err <= 1.0 / 32.0, "value {x}: rep {rep}, err {err}");
+                }
+            }
+            v = v.saturating_mul(2);
+        }
+        assert_eq!(bucket_index(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    /// Satellite acceptance: histogram quantiles track exact quantiles
+    /// within 5% relative error across random distributions.
+    #[test]
+    fn histogram_quantile_error_bounded() {
+        // deterministic xorshift64* — no rand dependency
+        let mut state = 0x9E37_79B9_7F4A_7C15u64;
+        let mut next = move || {
+            state ^= state >> 12;
+            state ^= state << 25;
+            state ^= state >> 27;
+            state.wrapping_mul(0x2545_F491_4F6C_DD1D)
+        };
+        let mut check = |samples: &[u64], label: &str| {
+            let mut h = LogHistogram::new();
+            for &s in samples {
+                h.record(s);
+            }
+            let exact = stats_of(samples).unwrap();
+            let approx = h.stats().unwrap();
+            assert_eq!(approx.count, exact.count);
+            assert_eq!(approx.max_us, exact.max_us, "{label}: max is exact");
+            for (a, e, q) in [
+                (approx.p50_us, exact.p50_us, "p50"),
+                (approx.p95_us, exact.p95_us, "p95"),
+                (approx.p99_us, exact.p99_us, "p99"),
+            ] {
+                let err = (a as f64 - e as f64).abs() / (e as f64).max(1.0);
+                assert!(err <= 0.05, "{label} {q}: approx {a} vs exact {e} (err {err:.4})");
+            }
+            let mean_err = (approx.mean_us - exact.mean_us).abs() / exact.mean_us.max(1.0);
+            assert!(mean_err <= 0.05, "{label} mean: {} vs {}", approx.mean_us, exact.mean_us);
+        };
+        // uniform [1, 1e6)
+        let uniform: Vec<u64> = (0..4096).map(|_| 1 + next() % 1_000_000).collect();
+        check(&uniform, "uniform");
+        // exponential-ish tail: u ~ U(0,1), -ln(u) * 10_000
+        let expo: Vec<u64> = (0..4096)
+            .map(|_| {
+                let u = (next() >> 11) as f64 / (1u64 << 53) as f64;
+                (-(u.max(1e-12)).ln() * 10_000.0) as u64
+            })
+            .collect();
+        check(&expo, "exponential");
+        // bimodal: tight service mode + rare slow mode
+        let bimodal: Vec<u64> = (0..4096)
+            .map(|_| if next() % 10 == 0 { 500_000 + next() % 50_000 } else { 800 + next() % 100 })
+            .collect();
+        check(&bimodal, "bimodal");
+        // tiny sets stay exact-equivalent via min/max clamping
+        check(&[7, 9], "pair");
+        check(&[1_000_000], "singleton");
+    }
+
+    #[test]
+    fn histogram_clear_and_merge() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        for v in [100u64, 200, 300] {
+            a.record(v);
+        }
+        for v in [400u64, 500] {
+            b.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 5);
+        assert_eq!(a.max(), 500);
+        a.clear();
+        assert!(a.is_empty());
+        assert_eq!(a.quantile(0.5), 0);
+        assert!(a.stats().is_none());
+        a.record(42);
+        assert_eq!(a.stats().unwrap().p50_us, 42);
     }
 
     #[test]

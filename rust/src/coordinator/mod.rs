@@ -69,6 +69,16 @@
 //!   the demand-normalized one
 //!   ([`GatewayStats::fairness_index_normalized`]) that isolates
 //!   scheduler fairness from the arrival mix;
+//! * the whole request path is observable while it runs through the
+//!   [`telemetry`] spine: per-worker lock-free SPSC event rings (two
+//!   atomic ops per hot-path event, drop-and-count on overflow, never
+//!   blocking a worker) drained by a collector thread into per-tenant
+//!   **windowed** stats — log-bucketed latency histograms, queue depth,
+//!   throughput, shed/steal rates, and the paper-faithful
+//!   `sim_utilization` gauge — plus a bounded **flight recorder** (last
+//!   N lifecycle events per tenant and every registry churn event) and
+//!   sampled full-request **span traces**
+//!   (admission→batch→serve→respond timelines);
 //! * [`pool`] keeps `Pool` as the 1-model special case (`PoolHandle` =
 //!   [`ModelHandle`], `PoolError` = [`ServeError`]) and [`server`] keeps
 //!   `Server` as the 1-model, 1-replica special case.
@@ -80,14 +90,19 @@ pub mod gateway;
 pub mod metrics;
 pub mod pool;
 pub mod server;
+pub mod telemetry;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use gateway::{
     BufferPool, Dispatch, DrainMode, Gateway, GatewayBuilder, GatewayConfig, GatewayStats,
     ModelHandle, ModelId, ModelStats, Priority, QuotaPolicy, Request, Response, ServeError,
-    ShedPolicy, Ticket,
+    ShedPolicy, TenantDefaults, Ticket,
 };
-pub use metrics::{jain_fairness, jain_fairness_normalized, LatencyStats, Metrics};
+pub use metrics::{jain_fairness, jain_fairness_normalized, LatencyStats, LogHistogram, Metrics};
+pub use telemetry::{
+    ChurnKind, ChurnRecord, Event, EventKind, EventRing, FlightDump, Span, Telemetry,
+    TelemetryConfig, TelemetrySnapshot, TenantSnapshot, TenantTotals, WindowStats, NO_TENANT,
+};
 pub use pool::{
     default_replicas, default_replicas_capped, Pool, PoolConfig, PoolError, PoolHandle, PoolStats,
 };

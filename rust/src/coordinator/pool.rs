@@ -19,10 +19,13 @@
 //! `submitted == completed + shed + failed` over the [`PoolStats`]
 //! counters.
 
+use std::sync::Arc;
+
 use crate::kan::Engine;
 
 use super::gateway::{Gateway, GatewayBuilder, GatewayStats, ModelHandle, ServeError};
 use super::metrics::Metrics;
+use super::telemetry::Telemetry;
 
 pub use super::gateway::{Dispatch, GatewayConfig as PoolConfig, Response, ShedPolicy, Ticket};
 
@@ -152,6 +155,12 @@ impl Pool {
         PoolStats::from_gateway(self.gateway.stats())
     }
 
+    /// The pool's telemetry spine (shared with the underlying gateway;
+    /// stays valid for snapshots after [`Pool::shutdown`]).
+    pub fn telemetry(&self) -> Arc<Telemetry> {
+        self.gateway.telemetry()
+    }
+
     /// Stop admitting, serve everything already queued, join all
     /// workers, and return the final stats.
     pub fn shutdown(self) -> PoolStats {
@@ -179,6 +188,7 @@ mod tests {
                 sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
                 dispatch: crate::coordinator::Dispatch::FairSteal,
                 quota: crate::coordinator::QuotaPolicy::None,
+                telemetry: crate::coordinator::TelemetryConfig::default(),
             },
         )
     }

@@ -20,6 +20,7 @@ use super::batcher::BatchPolicy;
 use super::gateway::{Dispatch, QuotaPolicy, ServeError};
 use super::metrics::Metrics;
 use super::pool::{Pool, PoolConfig, PoolHandle, ShedPolicy};
+use super::telemetry::TelemetryConfig;
 
 pub use super::gateway::Response;
 
@@ -85,6 +86,7 @@ impl Server {
                     dispatch: Dispatch::FairSteal,
                     // a single tenant needs no admission reservations
                     quota: QuotaPolicy::None,
+                    telemetry: TelemetryConfig::default(),
                 },
             ),
         }

@@ -1,0 +1,1399 @@
+//! The telemetry spine: lock-free request tracing, windowed per-tenant
+//! stats, and a bounded flight recorder for the serving gateway.
+//!
+//! Three layers, matching the zero-allocation discipline of the hot
+//! path it observes:
+//!
+//! 1. **Event layer** — one fixed-capacity SPSC [`EventRing`] per
+//!    worker, plus one *admission ring* whose single producer is
+//!    "whoever holds the gateway state lock" (submitters and
+//!    control-plane flushes are serialized by that lock, so the SPSC
+//!    contract holds). Hot-path emission builds a compact POD
+//!    [`Event`] and publishes it with one `Acquire` load and one
+//!    `Release` store; a full ring **drops and counts**
+//!    ([`Telemetry::dropped_events`]) — a slow collector can never
+//!    block a worker or a submitter.
+//! 2. **Aggregation layer** — a collector thread drains the rings into
+//!    per-tenant *windowed* series: bounded
+//!    [`LogHistogram`](super::metrics::LogHistogram)s for queue/service
+//!    latency plus rolling throughput, shed-rate, steal-rate,
+//!    queue-depth, and `sim_utilization` gauges over a configurable
+//!    window — and into a bounded **flight recorder**: the last N
+//!    lifecycle events per tenant and every registry churn record
+//!    (add / re-weight / remove transitions), dumpable on demand.
+//!    Steady-state collection is allocation-free: histograms clear in
+//!    place, flight rings pop before they push, and window summaries
+//!    are plain `Copy` structs.
+//! 3. **Export layer** — [`Telemetry::snapshot`] summarizes the last
+//!    completed window per tenant; [`TelemetrySnapshot::to_value`] /
+//!    [`FlightDump::to_value`] / [`Span::to_value`] render deterministic
+//!    [`util::json`](crate::util::json) lines for `TELEMETRY.jsonl`,
+//!    the live `--stats-every` console table, and `--trace-sample`
+//!    request span timelines (admission → enqueue → batch/steal →
+//!    serve → respond).
+
+use std::cell::UnsafeCell;
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::json::Value;
+
+use super::metrics::{LatencyStats, LogHistogram};
+
+/// Telemetry spine configuration, carried inside
+/// [`GatewayConfig`](super::gateway::GatewayConfig).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TelemetryConfig {
+    /// Master switch. Off = no rings, no collector thread, every emit
+    /// is a single branch.
+    pub enabled: bool,
+    /// Slots per event ring (rounded up to a power of two). One ring
+    /// per worker plus the admission ring.
+    pub ring_capacity: usize,
+    /// Width of the rolling stats window.
+    pub window: Duration,
+    /// Lifecycle events retained per tenant in the flight recorder.
+    pub flight_capacity: usize,
+    /// Trace 1-in-N admitted requests end to end (0 = tracing off).
+    pub trace_sample: u64,
+    /// Retain exact latency samples in the serving `Metrics` cells
+    /// (bench mode) instead of the bounded histograms.
+    pub exact_samples: bool,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        Self {
+            enabled: true,
+            ring_capacity: 8192,
+            window: Duration::from_secs(1),
+            flight_capacity: 64,
+            trace_sample: 0,
+            exact_samples: false,
+        }
+    }
+}
+
+impl TelemetryConfig {
+    /// Telemetry fully disabled (the A-side of the overhead experiment).
+    pub fn off() -> Self {
+        Self { enabled: false, ..Self::default() }
+    }
+}
+
+/// Lifecycle stage of an [`Event`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum EventKind {
+    /// Request admitted to the shared queue (`a` = queue depth after).
+    Admitted = 0,
+    /// Request pulled from the shared queue into a shard batcher.
+    Enqueued = 1,
+    /// Batch drained from its owner's batcher (`rows` > 0; `a` = age of
+    /// the oldest request in µs). `rows == 0` marks a per-request trace
+    /// echo.
+    BatchFormed = 2,
+    /// Batch stolen from a peer's shard (`rows` > 0; `a` = victim
+    /// worker). `rows == 0` marks a per-request trace echo.
+    Stolen = 3,
+    /// Batch entered service (`rows` = live batch size).
+    ServeStart = 4,
+    /// Batch finished service (`a` = useful MACs, `b` = active lane
+    /// slots from the attached accelerator simulation).
+    ServeEnd = 5,
+    /// One request answered (`a` = queue µs, `b` = service µs).
+    Responded = 6,
+    /// One request shed (rejected, evicted, or flushed by a removal).
+    Shed = 7,
+    /// One request expired past its deadline before service.
+    Expired = 8,
+    /// A worker adopted a new registry snapshot (`a` = epoch).
+    EpochAdopted = 9,
+}
+
+impl EventKind {
+    /// Stable lowercase name (the JSONL / flight-recorder vocabulary).
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Admitted => "admitted",
+            EventKind::Enqueued => "enqueued",
+            EventKind::BatchFormed => "batch_formed",
+            EventKind::Stolen => "stolen",
+            EventKind::ServeStart => "serve_start",
+            EventKind::ServeEnd => "serve_end",
+            EventKind::Responded => "responded",
+            EventKind::Shed => "shed",
+            EventKind::Expired => "expired",
+            EventKind::EpochAdopted => "epoch_adopted",
+        }
+    }
+}
+
+/// Compact POD event record (48 bytes, `Copy`): what a ring slot holds.
+/// Field meaning varies by [`EventKind`]; `trace` is the nonzero span id
+/// for sampled requests (0 = untraced).
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// Microseconds since the telemetry origin (monotonic).
+    pub t_us: u64,
+    /// Kind-specific argument (queue depth, queue µs, useful MACs, …).
+    pub a: u64,
+    /// Kind-specific argument (service µs, active slots, …).
+    pub b: u64,
+    /// Span id for sampled requests; 0 when untraced.
+    pub trace: u64,
+    /// Tenant slot index ([`u32::MAX`] for fleet-wide events).
+    pub tenant: u32,
+    /// Rows involved (1 for per-request events, batch size for batch
+    /// events, 0 for per-request trace echoes of batch events).
+    pub rows: u32,
+    /// Worker index (the admission ring reports the worker count).
+    pub worker: u16,
+    /// Lifecycle stage.
+    pub kind: EventKind,
+}
+
+impl Event {
+    const ZERO: Event = Event {
+        t_us: 0,
+        a: 0,
+        b: 0,
+        trace: 0,
+        tenant: 0,
+        rows: 0,
+        worker: 0,
+        kind: EventKind::Admitted,
+    };
+}
+
+/// Tenant id used for events not attributable to one tenant
+/// (epoch adoptions).
+pub const NO_TENANT: u32 = u32::MAX;
+
+/// Fixed-capacity single-producer single-consumer ring of [`Event`]s.
+///
+/// The producer publishes with a `Relaxed` tail read (producer-owned),
+/// an `Acquire` head read, a plain slot write, and a `Release` tail
+/// store; the consumer mirrors it. A full ring drops the event and
+/// bumps `dropped` — emission never blocks and never allocates.
+pub struct EventRing {
+    slots: Box<[UnsafeCell<Event>]>,
+    mask: usize,
+    head: AtomicUsize,
+    tail: AtomicUsize,
+    dropped: AtomicU64,
+}
+
+// SAFETY: slot i is written only by the single producer while
+// `head <= i < head + capacity` excludes it from the consumer's range,
+// and read only by the single consumer after the producer's Release
+// store of `tail` made the write visible.
+unsafe impl Sync for EventRing {}
+unsafe impl Send for EventRing {}
+
+impl EventRing {
+    /// A ring with at least `capacity` slots (rounded up to a power of
+    /// two, minimum 2).
+    pub fn new(capacity: usize) -> Self {
+        let cap = capacity.max(2).next_power_of_two();
+        Self {
+            slots: (0..cap).map(|_| UnsafeCell::new(Event::ZERO)).collect(),
+            mask: cap - 1,
+            head: AtomicUsize::new(0),
+            tail: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Slot count.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Producer side: publish one event, or drop-and-count when full.
+    /// Returns whether the event was stored. Never blocks or allocates.
+    pub fn push(&self, ev: Event) -> bool {
+        let tail = self.tail.load(Ordering::Relaxed);
+        let head = self.head.load(Ordering::Acquire);
+        if tail.wrapping_sub(head) >= self.slots.len() {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        // SAFETY: single producer; this slot is outside the consumer's
+        // published range until the Release store below.
+        unsafe { *self.slots[tail & self.mask].get() = ev };
+        self.tail.store(tail.wrapping_add(1), Ordering::Release);
+        true
+    }
+
+    /// Consumer side: drain every published event through `f` (oldest
+    /// first). Returns the number consumed.
+    pub fn drain(&self, mut f: impl FnMut(Event)) -> usize {
+        let head = self.head.load(Ordering::Relaxed);
+        let tail = self.tail.load(Ordering::Acquire);
+        let n = tail.wrapping_sub(head);
+        for i in 0..n {
+            // SAFETY: single consumer; the producer's Release store of
+            // `tail` ordered these slot writes before our Acquire load.
+            let ev = unsafe { *self.slots[head.wrapping_add(i) & self.mask].get() };
+            f(ev);
+        }
+        self.head.store(tail, Ordering::Release);
+        n
+    }
+
+    /// Events dropped on overflow since creation.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+/// What a registry churn record describes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChurnKind {
+    /// Tenant registered at gateway start.
+    Registered,
+    /// Tenant hot-added on the live gateway.
+    Added,
+    /// Tenant re-weighted.
+    Reweighted,
+    /// Tenant removal began (stopped accepting; backlog draining).
+    RemoveBegin,
+    /// Tenant removal completed (engine and buffers retired).
+    Removed,
+}
+
+impl ChurnKind {
+    /// Stable lowercase name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ChurnKind::Registered => "registered",
+            ChurnKind::Added => "added",
+            ChurnKind::Reweighted => "reweighted",
+            ChurnKind::RemoveBegin => "remove_begin",
+            ChurnKind::Removed => "removed",
+        }
+    }
+}
+
+/// One registry transition, kept in arrival order by the flight
+/// recorder (control-plane calls are serialized by the gateway's admin
+/// lock, so arrival order is transition order).
+#[derive(Clone, Debug)]
+pub struct ChurnRecord {
+    /// Microseconds since the telemetry origin.
+    pub t_us: u64,
+    /// Transition.
+    pub kind: ChurnKind,
+    /// Tenant slot index.
+    pub tenant: u32,
+    /// Tenant name.
+    pub name: String,
+    /// Service weight after the transition.
+    pub weight: u32,
+    /// Registry epoch after the transition.
+    pub epoch: u64,
+}
+
+/// Rolling accumulators for the current window of one tenant.
+struct WindowAccum {
+    admitted: u64,
+    completed: u64,
+    rows: u64,
+    shed: u64,
+    expired: u64,
+    batches: u64,
+    stolen: u64,
+    useful_macs: u64,
+    active_slots: u64,
+    depth_last: u64,
+    depth_max: u64,
+    queue: LogHistogram,
+    service: LogHistogram,
+}
+
+impl WindowAccum {
+    fn new() -> Self {
+        Self {
+            admitted: 0,
+            completed: 0,
+            rows: 0,
+            shed: 0,
+            expired: 0,
+            batches: 0,
+            stolen: 0,
+            useful_macs: 0,
+            active_slots: 0,
+            depth_last: 0,
+            depth_max: 0,
+            queue: LogHistogram::new(),
+            service: LogHistogram::new(),
+        }
+    }
+
+    /// Reset for the next window in place (no allocation: the
+    /// histograms clear their existing storage). The `depth_last` gauge
+    /// carries over — depth is a level, not a rate.
+    fn clear(&mut self) {
+        self.admitted = 0;
+        self.completed = 0;
+        self.rows = 0;
+        self.shed = 0;
+        self.expired = 0;
+        self.batches = 0;
+        self.stolen = 0;
+        self.useful_macs = 0;
+        self.active_slots = 0;
+        self.depth_max = self.depth_last;
+        self.queue.clear();
+        self.service.clear();
+    }
+
+    fn summarize(&self, start_us: u64, end_us: u64) -> WindowStats {
+        let secs = ((end_us - start_us) as f64 / 1e6).max(1e-9);
+        let denom = (self.admitted + self.shed) as f64;
+        WindowStats {
+            start_us,
+            end_us,
+            admitted: self.admitted,
+            completed: self.completed,
+            rows: self.rows,
+            shed: self.shed,
+            expired: self.expired,
+            batches: self.batches,
+            stolen: self.stolen,
+            throughput_rps: self.completed as f64 / secs,
+            shed_rate: if denom > 0.0 { self.shed as f64 / denom } else { 0.0 },
+            steal_rate: if self.batches > 0 {
+                self.stolen as f64 / self.batches as f64
+            } else {
+                0.0
+            },
+            sim_utilization: if self.active_slots > 0 {
+                self.useful_macs as f64 / self.active_slots as f64
+            } else {
+                0.0
+            },
+            depth_last: self.depth_last,
+            depth_max: self.depth_max,
+            queue: self.queue.stats(),
+            service: self.service.stats(),
+        }
+    }
+}
+
+/// Summary of one completed stats window for one tenant.
+#[derive(Clone, Copy, Debug)]
+pub struct WindowStats {
+    /// Window start, µs since the telemetry origin.
+    pub start_us: u64,
+    /// Window end, µs since the telemetry origin.
+    pub end_us: u64,
+    /// Requests admitted in the window.
+    pub admitted: u64,
+    /// Requests answered in the window.
+    pub completed: u64,
+    /// Rows served in the window.
+    pub rows: u64,
+    /// Requests shed in the window.
+    pub shed: u64,
+    /// Requests expired past their deadline in the window.
+    pub expired: u64,
+    /// Batches served in the window.
+    pub batches: u64,
+    /// Of `batches`, how many arrived by work stealing.
+    pub stolen: u64,
+    /// Completed requests per second.
+    pub throughput_rps: f64,
+    /// `shed / (admitted + shed)` over the window.
+    pub shed_rate: f64,
+    /// `stolen / batches` over the window.
+    pub steal_rate: f64,
+    /// Simulated accelerator utilization over the window's batches.
+    pub sim_utilization: f64,
+    /// Queue depth after the window's last admission.
+    pub depth_last: u64,
+    /// Peak observed queue depth in the window.
+    pub depth_max: u64,
+    /// Queueing-delay distribution (admission → serve start).
+    pub queue: Option<LatencyStats>,
+    /// Service-time distribution (serve start → response).
+    pub service: Option<LatencyStats>,
+}
+
+/// Cumulative per-tenant counters since gateway start (collector's
+/// view; the authoritative conservation counters live in
+/// [`GatewayStats`](super::gateway::GatewayStats)).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TenantTotals {
+    /// Requests admitted.
+    pub admitted: u64,
+    /// Requests answered.
+    pub completed: u64,
+    /// Requests shed.
+    pub shed: u64,
+    /// Requests expired.
+    pub expired: u64,
+    /// Batches served.
+    pub batches: u64,
+    /// Stolen batches.
+    pub stolen: u64,
+}
+
+/// Collector-side state for one tenant slot.
+struct TenantAgg {
+    name: String,
+    live: bool,
+    cur: WindowAccum,
+    last: Option<WindowStats>,
+    totals: TenantTotals,
+    flight: VecDeque<Event>,
+}
+
+impl TenantAgg {
+    fn new(name: String, flight_cap: usize) -> Self {
+        Self {
+            name,
+            live: true,
+            cur: WindowAccum::new(),
+            last: None,
+            totals: TenantTotals::default(),
+            flight: VecDeque::with_capacity(flight_cap.max(1)),
+        }
+    }
+
+    fn remember(&mut self, ev: Event, cap: usize) {
+        if self.flight.len() >= cap.max(1) {
+            self.flight.pop_front();
+        }
+        self.flight.push_back(ev);
+    }
+}
+
+/// In-flight span assembly for one traced request.
+#[derive(Clone, Copy, Debug, Default)]
+struct SpanBuild {
+    tenant: u32,
+    admitted_us: Option<u64>,
+    enqueued_us: Option<u64>,
+    batch_us: Option<u64>,
+    stolen: bool,
+    serve_us: Option<u64>,
+    responded_us: Option<u64>,
+    queue_us: u64,
+    service_us: u64,
+    worker: u16,
+    dead: bool,
+}
+
+/// A completed request timeline from `--trace-sample` sampling:
+/// admission → enqueue → batch (possibly stolen) → serve → respond.
+#[derive(Clone, Debug)]
+pub struct Span {
+    /// Span id (the admission sequence number + 1).
+    pub trace: u64,
+    /// Tenant name.
+    pub tenant: String,
+    /// Admission time, µs since the telemetry origin.
+    pub admitted_us: u64,
+    /// Pull into a shard batcher, µs since origin.
+    pub enqueued_us: Option<u64>,
+    /// Batch formation, µs since origin.
+    pub batch_us: Option<u64>,
+    /// Whether the batch was work-stolen to another worker.
+    pub stolen: bool,
+    /// Service start, µs since origin.
+    pub serve_us: Option<u64>,
+    /// Response, µs since origin.
+    pub responded_us: u64,
+    /// Queueing delay, µs.
+    pub queue_us: u64,
+    /// Service time, µs.
+    pub service_us: u64,
+    /// Worker that served the request.
+    pub worker: u16,
+}
+
+impl Span {
+    /// Deterministic JSON line (`kind: "span"`).
+    pub fn to_value(&self) -> Value {
+        let opt = |v: Option<u64>| match v {
+            Some(x) => Value::num(x as f64),
+            None => Value::Null,
+        };
+        Value::obj([
+            ("kind", Value::str("span")),
+            ("trace", Value::num(self.trace as f64)),
+            ("tenant", Value::str(self.tenant.clone())),
+            ("admitted_us", Value::num(self.admitted_us as f64)),
+            ("enqueued_us", opt(self.enqueued_us)),
+            ("batch_us", opt(self.batch_us)),
+            ("stolen", Value::Bool(self.stolen)),
+            ("serve_us", opt(self.serve_us)),
+            ("responded_us", Value::num(self.responded_us as f64)),
+            ("queue_us", Value::num(self.queue_us as f64)),
+            ("service_us", Value::num(self.service_us as f64)),
+            ("worker", Value::num(self.worker as f64)),
+        ])
+    }
+
+    /// One-line console rendering of the stage timeline.
+    pub fn timeline(&self) -> String {
+        let mut s =
+            format!("trace {} [{}] t={}us admitted", self.trace, self.tenant, self.admitted_us);
+        if let Some(t) = self.enqueued_us {
+            s += &format!(" → +{}us enqueued", t.saturating_sub(self.admitted_us));
+        }
+        if let Some(t) = self.batch_us {
+            let stage = if self.stolen { "batched(stolen)" } else { "batched" };
+            s += &format!(" → +{}us {stage}", t.saturating_sub(self.admitted_us));
+        }
+        if let Some(t) = self.serve_us {
+            s += &format!(" → +{}us serve[w{}]", t.saturating_sub(self.admitted_us), self.worker);
+        }
+        s += &format!(
+            " → +{}us responded (queue {}us + service {}us)",
+            self.responded_us.saturating_sub(self.admitted_us),
+            self.queue_us,
+            self.service_us
+        );
+        s
+    }
+}
+
+const CHURN_CAP: usize = 1024;
+const SPAN_BUFFER: usize = 256;
+const GLOBAL_FLIGHT_CAP: usize = 64;
+
+/// Collector-owned aggregation state (behind one mutex, touched only by
+/// the collector thread, control-plane calls, and snapshot readers).
+struct Aggregator {
+    tenants: Vec<TenantAgg>,
+    churn: VecDeque<ChurnRecord>,
+    churn_dropped: u64,
+    /// Fleet-wide events (epoch adoptions) — the global flight ring.
+    global_flight: VecDeque<Event>,
+    spans: HashMap<u64, SpanBuild>,
+    done_spans: VecDeque<Span>,
+    window_us: u64,
+    window_start_us: u64,
+    flight_cap: usize,
+}
+
+impl Aggregator {
+    fn ensure_tenant(&mut self, tenant: u32) {
+        let idx = tenant as usize;
+        while self.tenants.len() <= idx {
+            let name = format!("tenant{}", self.tenants.len());
+            self.tenants.push(TenantAgg::new(name, self.flight_cap));
+        }
+    }
+
+    fn apply(&mut self, ev: Event) {
+        if ev.trace != 0 {
+            self.apply_trace(ev);
+        }
+        if ev.tenant == NO_TENANT {
+            if self.global_flight.len() >= GLOBAL_FLIGHT_CAP {
+                self.global_flight.pop_front();
+            }
+            self.global_flight.push_back(ev);
+            return;
+        }
+        self.ensure_tenant(ev.tenant);
+        let cap = self.flight_cap;
+        let t = &mut self.tenants[ev.tenant as usize];
+        match ev.kind {
+            EventKind::Admitted => {
+                t.cur.admitted += 1;
+                t.totals.admitted += 1;
+                t.cur.depth_last = ev.a;
+                t.cur.depth_max = t.cur.depth_max.max(ev.a);
+            }
+            EventKind::Enqueued => {}
+            EventKind::BatchFormed => {
+                if ev.rows == 0 {
+                    return; // per-request trace echo: span-only
+                }
+            }
+            EventKind::Stolen => {
+                if ev.rows == 0 {
+                    return; // per-request trace echo: span-only
+                }
+                t.cur.stolen += 1;
+                t.totals.stolen += 1;
+            }
+            EventKind::ServeStart => {
+                if ev.rows == 0 {
+                    return; // per-request trace echo: span-only
+                }
+            }
+            EventKind::ServeEnd => {
+                t.cur.batches += 1;
+                t.totals.batches += 1;
+                t.cur.rows += ev.rows as u64;
+                t.cur.useful_macs += ev.a;
+                t.cur.active_slots += ev.b;
+            }
+            EventKind::Responded => {
+                t.cur.completed += 1;
+                t.totals.completed += 1;
+                t.cur.queue.record(ev.a);
+                t.cur.service.record(ev.b);
+            }
+            EventKind::Shed => {
+                t.cur.shed += 1;
+                t.totals.shed += 1;
+            }
+            EventKind::Expired => {
+                t.cur.expired += 1;
+                t.totals.expired += 1;
+            }
+            EventKind::EpochAdopted => {}
+        }
+        t.remember(ev, cap);
+    }
+
+    fn apply_trace(&mut self, ev: Event) {
+        let s = self.spans.entry(ev.trace).or_default();
+        s.tenant = ev.tenant;
+        match ev.kind {
+            EventKind::Admitted => s.admitted_us = Some(ev.t_us),
+            EventKind::Enqueued => s.enqueued_us = Some(ev.t_us),
+            EventKind::BatchFormed => s.batch_us = Some(ev.t_us),
+            EventKind::Stolen => {
+                s.batch_us = s.batch_us.or(Some(ev.t_us));
+                s.stolen = true;
+            }
+            EventKind::ServeStart => {
+                s.serve_us = Some(ev.t_us);
+                s.worker = ev.worker;
+            }
+            EventKind::Responded => {
+                s.responded_us = Some(ev.t_us);
+                s.queue_us = ev.a;
+                s.service_us = ev.b;
+                s.worker = ev.worker;
+            }
+            EventKind::Shed | EventKind::Expired => s.dead = true,
+            _ => {}
+        }
+    }
+
+    /// Move finished span builds to the bounded output buffer and drop
+    /// dead or stale ones.
+    fn reap_spans(&mut self, now_us: u64) {
+        if self.spans.is_empty() {
+            return;
+        }
+        let mut done: Vec<(u64, SpanBuild)> = Vec::new();
+        self.spans.retain(|&trace, s| {
+            if s.dead {
+                return false;
+            }
+            if s.responded_us.is_some() && s.admitted_us.is_some() {
+                done.push((trace, *s));
+                return false;
+            }
+            // stale guard: an incomplete span whose newest stage is
+            // over 30s old will never finish (its terminal event was
+            // dropped on ring overflow)
+            let newest = s
+                .responded_us
+                .or(s.serve_us)
+                .or(s.batch_us)
+                .or(s.enqueued_us)
+                .or(s.admitted_us)
+                .unwrap_or(now_us);
+            now_us.saturating_sub(newest) < 30_000_000
+        });
+        done.sort_by_key(|(trace, _)| *trace);
+        for (trace, s) in done {
+            let tenant = self
+                .tenants
+                .get(s.tenant as usize)
+                .map(|t| t.name.clone())
+                .unwrap_or_else(|| format!("tenant{}", s.tenant));
+            if self.done_spans.len() >= SPAN_BUFFER {
+                self.done_spans.pop_front();
+            }
+            self.done_spans.push_back(Span {
+                trace,
+                tenant,
+                admitted_us: s.admitted_us.unwrap_or(0),
+                enqueued_us: s.enqueued_us,
+                batch_us: s.batch_us,
+                stolen: s.stolen,
+                serve_us: s.serve_us,
+                responded_us: s.responded_us.unwrap_or(0),
+                queue_us: s.queue_us,
+                service_us: s.service_us,
+                worker: s.worker,
+            });
+        }
+    }
+
+    fn maybe_roll(&mut self, now_us: u64) {
+        if now_us.saturating_sub(self.window_start_us) < self.window_us {
+            return;
+        }
+        for t in &mut self.tenants {
+            t.last = Some(t.cur.summarize(self.window_start_us, now_us));
+            t.cur.clear();
+        }
+        self.window_start_us = now_us;
+    }
+
+    fn record_churn(&mut self, rec: ChurnRecord) {
+        self.ensure_tenant(rec.tenant);
+        let t = &mut self.tenants[rec.tenant as usize];
+        t.name = rec.name.clone();
+        match rec.kind {
+            ChurnKind::Registered | ChurnKind::Added => t.live = true,
+            ChurnKind::Removed | ChurnKind::RemoveBegin => t.live = false,
+            ChurnKind::Reweighted => {}
+        }
+        if self.churn.len() >= CHURN_CAP {
+            self.churn.pop_front();
+            self.churn_dropped += 1;
+        }
+        self.churn.push_back(rec);
+    }
+}
+
+/// Point-in-time view of one tenant's telemetry.
+#[derive(Clone, Debug)]
+pub struct TenantSnapshot {
+    /// Tenant name.
+    pub name: String,
+    /// Whether the tenant is still registered and accepting.
+    pub live: bool,
+    /// Last completed window (or the partial current window before the
+    /// first roll).
+    pub window: Option<WindowStats>,
+    /// Cumulative collector-side totals.
+    pub totals: TenantTotals,
+}
+
+/// Point-in-time view of the whole telemetry spine
+/// ([`Telemetry::snapshot`]). Completed trace spans are *moved* into
+/// the snapshot that observes them, so streamed JSONL lines never
+/// repeat a span.
+#[derive(Clone, Debug)]
+pub struct TelemetrySnapshot {
+    /// Snapshot time, µs since the telemetry origin.
+    pub at_us: u64,
+    /// Events dropped on ring overflow since start (all rings).
+    pub dropped_events: u64,
+    /// Per-tenant windowed stats.
+    pub tenants: Vec<TenantSnapshot>,
+    /// Trace spans completed since the previous snapshot.
+    pub spans: Vec<Span>,
+}
+
+impl TelemetrySnapshot {
+    /// Deterministic JSON object (`kind: "window"`) for
+    /// `TELEMETRY.jsonl` streaming.
+    pub fn to_value(&self) -> Value {
+        let lat = |l: &Option<LatencyStats>| match l {
+            None => Value::Null,
+            Some(s) => Value::obj([
+                ("count", Value::num(s.count as f64)),
+                ("mean_us", Value::num(s.mean_us)),
+                ("p50_us", Value::num(s.p50_us as f64)),
+                ("p95_us", Value::num(s.p95_us as f64)),
+                ("p99_us", Value::num(s.p99_us as f64)),
+                ("max_us", Value::num(s.max_us as f64)),
+            ]),
+        };
+        let tenants = self.tenants.iter().map(|t| {
+            let window = match &t.window {
+                None => Value::Null,
+                Some(w) => Value::obj([
+                    ("start_us", Value::num(w.start_us as f64)),
+                    ("end_us", Value::num(w.end_us as f64)),
+                    ("admitted", Value::num(w.admitted as f64)),
+                    ("completed", Value::num(w.completed as f64)),
+                    ("rows", Value::num(w.rows as f64)),
+                    ("shed", Value::num(w.shed as f64)),
+                    ("expired", Value::num(w.expired as f64)),
+                    ("batches", Value::num(w.batches as f64)),
+                    ("stolen", Value::num(w.stolen as f64)),
+                    ("throughput_rps", Value::num(w.throughput_rps)),
+                    ("shed_rate", Value::num(w.shed_rate)),
+                    ("steal_rate", Value::num(w.steal_rate)),
+                    ("sim_utilization", Value::num(w.sim_utilization)),
+                    ("depth_last", Value::num(w.depth_last as f64)),
+                    ("depth_max", Value::num(w.depth_max as f64)),
+                    ("queue", lat(&w.queue)),
+                    ("service", lat(&w.service)),
+                ]),
+            };
+            Value::obj([
+                ("name", Value::str(t.name.clone())),
+                ("live", Value::Bool(t.live)),
+                ("window", window),
+                (
+                    "totals",
+                    Value::obj([
+                        ("admitted", Value::num(t.totals.admitted as f64)),
+                        ("completed", Value::num(t.totals.completed as f64)),
+                        ("shed", Value::num(t.totals.shed as f64)),
+                        ("expired", Value::num(t.totals.expired as f64)),
+                        ("batches", Value::num(t.totals.batches as f64)),
+                        ("stolen", Value::num(t.totals.stolen as f64)),
+                    ]),
+                ),
+            ])
+        });
+        Value::obj([
+            ("kind", Value::str("window")),
+            ("at_us", Value::num(self.at_us as f64)),
+            ("dropped_events", Value::num(self.dropped_events as f64)),
+            ("tenants", Value::arr(tenants)),
+        ])
+    }
+}
+
+/// On-demand dump of the flight recorder: every retained churn record
+/// (in transition order) plus the last N lifecycle events per tenant.
+#[derive(Clone, Debug)]
+pub struct FlightDump {
+    /// Dump time, µs since the telemetry origin.
+    pub at_us: u64,
+    /// Registry transitions, oldest first.
+    pub churn: Vec<ChurnRecord>,
+    /// Older churn records evicted from the bounded recorder.
+    pub churn_dropped: u64,
+    /// `(tenant name, last N lifecycle events)` per tenant slot.
+    pub tenants: Vec<(String, Vec<Event>)>,
+    /// Fleet-wide events (epoch adoptions), oldest first.
+    pub global: Vec<Event>,
+}
+
+impl FlightDump {
+    /// Deterministic JSON object (`kind: "flight"`).
+    pub fn to_value(&self) -> Value {
+        let ev = |e: &Event| {
+            Value::obj([
+                ("t_us", Value::num(e.t_us as f64)),
+                ("event", Value::str(e.kind.name())),
+                ("rows", Value::num(e.rows as f64)),
+                ("worker", Value::num(e.worker as f64)),
+                ("a", Value::num(e.a as f64)),
+                ("b", Value::num(e.b as f64)),
+            ])
+        };
+        Value::obj([
+            ("kind", Value::str("flight")),
+            ("at_us", Value::num(self.at_us as f64)),
+            ("churn_dropped", Value::num(self.churn_dropped as f64)),
+            (
+                "churn",
+                Value::arr(self.churn.iter().map(|c| {
+                    Value::obj([
+                        ("t_us", Value::num(c.t_us as f64)),
+                        ("action", Value::str(c.kind.name())),
+                        ("tenant", Value::str(c.name.clone())),
+                        ("weight", Value::num(c.weight as f64)),
+                        ("epoch", Value::num(c.epoch as f64)),
+                    ])
+                })),
+            ),
+            (
+                "tenants",
+                Value::arr(self.tenants.iter().map(|(name, evs)| {
+                    Value::obj([
+                        ("name", Value::str(name.clone())),
+                        ("events", Value::arr(evs.iter().map(ev))),
+                    ])
+                })),
+            ),
+            ("global", Value::arr(self.global.iter().map(ev))),
+        ])
+    }
+}
+
+/// The telemetry spine owned by a gateway: rings, aggregator, trace
+/// sampler, and the collector's control surface.
+pub struct Telemetry {
+    cfg: TelemetryConfig,
+    origin: Instant,
+    /// One ring per worker, plus the admission ring at index
+    /// `workers` (its producer is the state-lock holder).
+    rings: Vec<EventRing>,
+    workers: usize,
+    seq: AtomicU64,
+    agg: Mutex<Aggregator>,
+    stop: AtomicBool,
+}
+
+impl Telemetry {
+    /// Build the spine for `workers` worker threads and the given
+    /// initial tenants. When `cfg.enabled` is false no rings are
+    /// allocated and every emit reduces to one branch.
+    pub fn new(cfg: TelemetryConfig, workers: usize, tenants: &[&str]) -> Self {
+        let rings = if cfg.enabled {
+            (0..workers + 1).map(|_| EventRing::new(cfg.ring_capacity)).collect()
+        } else {
+            Vec::new()
+        };
+        let window_us = cfg.window.as_micros().max(1) as u64;
+        let agg = Aggregator {
+            tenants: tenants
+                .iter()
+                .map(|n| TenantAgg::new((*n).to_string(), cfg.flight_capacity))
+                .collect(),
+            churn: VecDeque::with_capacity(64),
+            churn_dropped: 0,
+            global_flight: VecDeque::with_capacity(GLOBAL_FLIGHT_CAP),
+            spans: HashMap::new(),
+            done_spans: VecDeque::new(),
+            window_us,
+            window_start_us: 0,
+            flight_cap: cfg.flight_capacity,
+        };
+        Self {
+            cfg,
+            origin: Instant::now(),
+            rings,
+            workers,
+            seq: AtomicU64::new(0),
+            agg: Mutex::new(agg),
+            stop: AtomicBool::new(false),
+        }
+    }
+
+    /// Whether the spine is recording.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    /// The configuration this spine was built with.
+    pub fn config(&self) -> &TelemetryConfig {
+        &self.cfg
+    }
+
+    /// Microseconds since the spine was created (monotonic).
+    #[inline]
+    pub fn clock_us(&self) -> u64 {
+        self.origin.elapsed().as_micros() as u64
+    }
+
+    /// Emit from worker `worker`'s ring (single producer: that worker's
+    /// thread, whether or not it holds the state lock).
+    #[inline]
+    pub(crate) fn emit_worker(
+        &self,
+        worker: usize,
+        kind: EventKind,
+        tenant: u32,
+        rows: u32,
+        a: u64,
+        b: u64,
+        trace: u64,
+    ) {
+        if !self.cfg.enabled {
+            return;
+        }
+        self.rings[worker].push(Event {
+            t_us: self.clock_us(),
+            a,
+            b,
+            trace,
+            tenant,
+            rows,
+            worker: worker as u16,
+            kind,
+        });
+    }
+
+    /// Emit from the admission ring. The caller MUST hold the gateway
+    /// state lock — that lock is what makes this ring single-producer.
+    #[inline]
+    pub(crate) fn emit_admission(
+        &self,
+        kind: EventKind,
+        tenant: u32,
+        rows: u32,
+        a: u64,
+        b: u64,
+        trace: u64,
+    ) {
+        if !self.cfg.enabled {
+            return;
+        }
+        self.rings[self.workers].push(Event {
+            t_us: self.clock_us(),
+            a,
+            b,
+            trace,
+            tenant,
+            rows,
+            worker: self.workers as u16,
+            kind,
+        });
+    }
+
+    /// Allocate a span id for a newly admitted request: nonzero for
+    /// 1-in-N sampled requests, 0 (untraced) otherwise.
+    #[inline]
+    pub(crate) fn next_trace(&self) -> u64 {
+        let n = self.cfg.trace_sample;
+        if !self.cfg.enabled || n == 0 {
+            return 0;
+        }
+        let s = self.seq.fetch_add(1, Ordering::Relaxed);
+        if s % n == 0 {
+            s + 1
+        } else {
+            0
+        }
+    }
+
+    /// Events dropped on ring overflow since start.
+    pub fn dropped_events(&self) -> u64 {
+        self.rings.iter().map(EventRing::dropped).sum()
+    }
+
+    /// Record a registry transition in the flight recorder. Called from
+    /// the gateway's admin-serialized control plane, so arrival order is
+    /// transition order.
+    pub(crate) fn record_churn(
+        &self,
+        kind: ChurnKind,
+        tenant: u32,
+        name: &str,
+        weight: u32,
+        epoch: u64,
+    ) {
+        if !self.cfg.enabled {
+            return;
+        }
+        let rec = ChurnRecord {
+            t_us: self.clock_us(),
+            kind,
+            tenant,
+            name: name.to_string(),
+            weight,
+            epoch,
+        };
+        self.agg.lock().unwrap().record_churn(rec);
+    }
+
+    /// One drain-and-aggregate pass over every ring. The collector
+    /// thread calls this in a loop; tests and snapshotting call it
+    /// directly. Steady-state passes allocate nothing (histograms and
+    /// flight rings are pre-sized; spans only exist under
+    /// `trace_sample`).
+    pub fn collect(&self) {
+        if !self.cfg.enabled {
+            return;
+        }
+        let mut agg = self.agg.lock().unwrap();
+        for ring in &self.rings {
+            ring.drain(|ev| agg.apply(ev));
+        }
+        let now = self.clock_us();
+        agg.reap_spans(now);
+        agg.maybe_roll(now);
+    }
+
+    /// Drain the rings and summarize: per-tenant windowed stats (last
+    /// completed window, or the partial current one before the first
+    /// roll), cumulative totals, and any trace spans completed since
+    /// the previous snapshot (moved out, not copied).
+    pub fn snapshot(&self) -> TelemetrySnapshot {
+        self.collect();
+        let now = self.clock_us();
+        let mut agg = self.agg.lock().unwrap();
+        let window_start = agg.window_start_us;
+        let tenants = agg
+            .tenants
+            .iter()
+            .map(|t| TenantSnapshot {
+                name: t.name.clone(),
+                live: t.live,
+                window: t.last.or_else(|| {
+                    if t.cur.admitted + t.cur.completed + t.cur.shed > 0 {
+                        Some(t.cur.summarize(window_start, now))
+                    } else {
+                        None
+                    }
+                }),
+                totals: t.totals,
+            })
+            .collect();
+        let spans = agg.done_spans.drain(..).collect();
+        TelemetrySnapshot {
+            at_us: now,
+            dropped_events: self.dropped_events(),
+            tenants,
+            spans,
+        }
+    }
+
+    /// Dump the flight recorder: all retained churn records in order
+    /// plus the last N lifecycle events per tenant.
+    pub fn flight_dump(&self) -> FlightDump {
+        self.collect();
+        let agg = self.agg.lock().unwrap();
+        FlightDump {
+            at_us: self.clock_us(),
+            churn: agg.churn.iter().cloned().collect(),
+            churn_dropped: agg.churn_dropped,
+            tenants: agg
+                .tenants
+                .iter()
+                .map(|t| (t.name.clone(), t.flight.iter().copied().collect()))
+                .collect(),
+            global: agg.global_flight.iter().copied().collect(),
+        }
+    }
+
+    /// Ask the collector loop to exit after a final drain.
+    pub(crate) fn stop(&self) {
+        self.stop.store(true, Ordering::Release);
+    }
+
+    /// The collector thread body: drain the rings at roughly a quarter
+    /// of the window period (clamped to [1ms, 100ms]) until stopped,
+    /// then run one final pass so shutdown snapshots see every event.
+    pub(crate) fn run_collector(&self) {
+        let tick =
+            (self.cfg.window / 4).clamp(Duration::from_millis(1), Duration::from_millis(100));
+        while !self.stop.load(Ordering::Acquire) {
+            self.collect();
+            std::thread::sleep(tick);
+        }
+        self.collect();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: EventKind, tenant: u32, rows: u32, a: u64, b: u64) -> Event {
+        Event { t_us: 1, a, b, trace: 0, tenant, rows, worker: 0, kind }
+    }
+
+    #[test]
+    fn ring_push_drain_fifo() {
+        let r = EventRing::new(8);
+        assert_eq!(r.capacity(), 8);
+        for i in 0..5u64 {
+            assert!(r.push(ev(EventKind::Admitted, 0, 1, i, 0)));
+        }
+        let mut seen = Vec::new();
+        assert_eq!(r.drain(|e| seen.push(e.a)), 5);
+        assert_eq!(seen, vec![0, 1, 2, 3, 4]);
+        assert_eq!(r.drain(|_| panic!("empty")), 0);
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn ring_overflow_drops_and_counts() {
+        let r = EventRing::new(4);
+        for i in 0..10u64 {
+            r.push(ev(EventKind::Admitted, 0, 1, i, 0));
+        }
+        assert_eq!(r.dropped(), 6, "capacity 4, 10 pushes: 6 dropped");
+        let mut seen = Vec::new();
+        r.drain(|e| seen.push(e.a));
+        assert_eq!(seen, vec![0, 1, 2, 3], "oldest events survive, newest drop");
+        // after a drain the ring accepts events again
+        assert!(r.push(ev(EventKind::Admitted, 0, 1, 99, 0)));
+        assert_eq!(r.dropped(), 6);
+    }
+
+    #[test]
+    fn ring_capacity_rounds_up() {
+        assert_eq!(EventRing::new(0).capacity(), 2);
+        assert_eq!(EventRing::new(5).capacity(), 8);
+        assert_eq!(EventRing::new(8).capacity(), 8);
+    }
+
+    #[test]
+    fn ring_spsc_stress() {
+        let r = std::sync::Arc::new(EventRing::new(64));
+        let p = std::sync::Arc::clone(&r);
+        let producer = std::thread::spawn(move || {
+            for i in 0..10_000u64 {
+                p.push(ev(EventKind::Responded, 0, 1, i, 0));
+            }
+        });
+        let mut last = None::<u64>;
+        let mut consumed = 0u64;
+        loop {
+            let done = producer.is_finished();
+            let n = r.drain(|e| {
+                if let Some(l) = last {
+                    assert!(e.a > l, "monotone sequence per producer");
+                }
+                last = Some(e.a);
+            });
+            consumed += n as u64;
+            // check `done` from BEFORE the drain so the producer can't
+            // finish between our last drain and the exit test
+            if done && n == 0 {
+                break;
+            }
+            std::hint::spin_loop();
+        }
+        producer.join().unwrap();
+        assert_eq!(consumed + r.dropped(), 10_000, "every event consumed or counted");
+        assert!(consumed > 0);
+    }
+
+    fn spine(cfg: TelemetryConfig) -> Telemetry {
+        Telemetry::new(cfg, 2, &["alpha", "beta"])
+    }
+
+    #[test]
+    fn windowed_aggregation_and_snapshot() {
+        let tel = spine(TelemetryConfig {
+            window: Duration::from_micros(1), // every collect rolls
+            ..TelemetryConfig::default()
+        });
+        tel.emit_admission(EventKind::Admitted, 0, 1, 3, 0, 0);
+        tel.emit_worker(0, EventKind::Enqueued, 0, 1, 0, 0, 0);
+        tel.emit_worker(0, EventKind::BatchFormed, 0, 4, 120, 0, 0);
+        tel.emit_worker(0, EventKind::ServeStart, 0, 4, 0, 0, 0);
+        tel.emit_worker(0, EventKind::ServeEnd, 0, 4, 300, 1000, 0);
+        tel.emit_worker(0, EventKind::Responded, 0, 1, 250, 90, 0);
+        tel.emit_worker(1, EventKind::Stolen, 1, 2, 0, 0, 0);
+        tel.emit_worker(1, EventKind::ServeEnd, 1, 2, 50, 100, 0);
+        tel.emit_admission(EventKind::Shed, 1, 1, 0, 0, 0);
+        std::thread::sleep(Duration::from_millis(1));
+        let snap = tel.snapshot();
+        assert_eq!(snap.dropped_events, 0);
+        assert_eq!(snap.tenants.len(), 2);
+        let a = &snap.tenants[0];
+        assert_eq!(a.name, "alpha");
+        assert_eq!(a.totals.admitted, 1);
+        assert_eq!(a.totals.completed, 1);
+        assert_eq!(a.totals.batches, 1);
+        let w = a.window.expect("window summarized");
+        assert_eq!(w.completed, 1);
+        assert_eq!(w.rows, 4);
+        assert!((w.sim_utilization - 0.3).abs() < 1e-12);
+        assert_eq!(w.queue.unwrap().p50_us, 250);
+        assert_eq!(w.service.unwrap().max_us, 90);
+        assert_eq!(w.depth_last, 3);
+        let b = &snap.tenants[1];
+        assert_eq!(b.totals.stolen, 1);
+        assert_eq!(b.totals.shed, 1);
+        let wb = b.window.unwrap();
+        assert!((wb.steal_rate - 1.0).abs() < 1e-12);
+        assert!((wb.shed_rate - 1.0).abs() < 1e-12, "1 shed, 0 admitted");
+    }
+
+    #[test]
+    fn flight_recorder_bounds_and_churn_order() {
+        let tel = Telemetry::new(
+            TelemetryConfig { flight_capacity: 4, ..TelemetryConfig::default() },
+            1,
+            &["only"],
+        );
+        for i in 0..10u64 {
+            tel.emit_worker(0, EventKind::Responded, 0, 1, i, 1, 0);
+        }
+        tel.record_churn(ChurnKind::Registered, 0, "only", 1, 1);
+        tel.record_churn(ChurnKind::Added, 1, "hot", 2, 2);
+        tel.record_churn(ChurnKind::Reweighted, 1, "hot", 6, 3);
+        tel.record_churn(ChurnKind::RemoveBegin, 1, "hot", 6, 3);
+        tel.record_churn(ChurnKind::Removed, 1, "hot", 6, 5);
+        let dump = tel.flight_dump();
+        assert_eq!(dump.tenants[0].1.len(), 4, "flight ring bounded");
+        assert_eq!(dump.tenants[0].1.last().unwrap().a, 9, "newest retained");
+        let kinds: Vec<ChurnKind> = dump.churn.iter().map(|c| c.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                ChurnKind::Registered,
+                ChurnKind::Added,
+                ChurnKind::Reweighted,
+                ChurnKind::RemoveBegin,
+                ChurnKind::Removed
+            ],
+            "churn records keep transition order"
+        );
+        assert_eq!(dump.tenants[1].0, "hot", "churn labels the hot-added tenant slot");
+        let snap = tel.snapshot();
+        assert!(!snap.tenants[1].live, "removed tenant reads dead");
+    }
+
+    #[test]
+    fn trace_sampling_assembles_spans() {
+        let tel = Telemetry::new(
+            TelemetryConfig { trace_sample: 1, ..TelemetryConfig::default() },
+            1,
+            &["t"],
+        );
+        let trace = tel.next_trace();
+        assert_ne!(trace, 0, "1-in-1 sampling traces everything");
+        tel.emit_admission(EventKind::Admitted, 0, 1, 1, 0, trace);
+        tel.emit_worker(0, EventKind::Enqueued, 0, 1, 0, 0, trace);
+        tel.emit_worker(0, EventKind::Stolen, 0, 0, 0, 0, trace);
+        tel.emit_worker(0, EventKind::ServeStart, 0, 0, 0, 0, trace);
+        tel.emit_worker(0, EventKind::Responded, 0, 1, 120, 40, trace);
+        let snap = tel.snapshot();
+        assert_eq!(snap.spans.len(), 1);
+        let s = &snap.spans[0];
+        assert_eq!(s.trace, trace);
+        assert_eq!(s.tenant, "t");
+        assert!(s.stolen);
+        assert_eq!((s.queue_us, s.service_us), (120, 40));
+        assert!(s.timeline().contains("stolen"));
+        // spans are moved out: a second snapshot repeats nothing
+        assert!(tel.snapshot().spans.is_empty());
+        // 1-in-4 sampling traces every 4th admission
+        let tel = Telemetry::new(
+            TelemetryConfig { trace_sample: 4, ..TelemetryConfig::default() },
+            1,
+            &["t"],
+        );
+        let traced = (0..16).filter(|_| tel.next_trace() != 0).count();
+        assert_eq!(traced, 4);
+    }
+
+    #[test]
+    fn disabled_spine_is_inert() {
+        let tel = Telemetry::new(TelemetryConfig::off(), 4, &["x"]);
+        assert!(!tel.enabled());
+        tel.emit_worker(0, EventKind::Responded, 0, 1, 1, 1, 0);
+        tel.emit_admission(EventKind::Admitted, 0, 1, 1, 0, 0);
+        assert_eq!(tel.next_trace(), 0);
+        assert_eq!(tel.dropped_events(), 0);
+        let snap = tel.snapshot();
+        assert!(snap.tenants[0].window.is_none());
+    }
+
+    #[test]
+    fn jsonl_rendering_fixpoint() {
+        let tel = spine(TelemetryConfig {
+            window: Duration::from_micros(1),
+            trace_sample: 1,
+            ..TelemetryConfig::default()
+        });
+        let trace = tel.next_trace();
+        tel.emit_admission(EventKind::Admitted, 0, 1, 1, 0, trace);
+        tel.emit_worker(0, EventKind::Responded, 0, 1, 100, 20, trace);
+        tel.record_churn(ChurnKind::Registered, 0, "alpha", 1, 1);
+        std::thread::sleep(Duration::from_millis(1));
+        let snap = tel.snapshot();
+        for v in [snap.to_value(), tel.flight_dump().to_value()]
+            .into_iter()
+            .chain(snap.spans.iter().map(Span::to_value))
+        {
+            let line = v.render();
+            let reparsed = Value::parse(&line).expect("snapshot json parses");
+            assert_eq!(reparsed.render(), line, "render→parse→render fixpoint");
+        }
+    }
+}

@@ -360,7 +360,7 @@ pub fn run_mix(entries: &[MixEntry], scenario: &Scenario, seed: u64) -> MixRepor
     // waits on responses (open loop); tallies per model
     let collector = thread::spawn(move || {
         let mut per: Vec<(Metrics, u64, u64, u64)> =
-            (0..n).map(|_| (Metrics::default(), 0, 0, 0)).collect();
+            (0..n).map(|_| (Metrics::exact(), 0, 0, 0)).collect();
         while let Ok((m, t)) = tick_rx.recv() {
             let slot = &mut per[m];
             match t.wait() {
@@ -423,7 +423,7 @@ pub fn run_mix(entries: &[MixEntry], scenario: &Scenario, seed: u64) -> MixRepor
     drop(tick_tx);
     let per = collector.join().expect("collector");
     let wall = t0.elapsed();
-    let mut merged = Metrics::default();
+    let mut merged = Metrics::exact();
     let mut per_model = Vec::with_capacity(n);
     let (mut t_sub, mut t_ok, mut t_shed, mut t_failed) = (0u64, 0u64, 0u64, 0u64);
     let expected = expected_arrivals_per_entry(entries, scenario);
@@ -662,7 +662,7 @@ pub fn run_churn(
         let mut per: Vec<(Metrics, u64, u64, u64)> = Vec::new();
         while let Ok((m, t)) = tick_rx.recv() {
             if per.len() <= m {
-                per.resize_with(m + 1, Default::default);
+                per.resize_with(m + 1, || (Metrics::exact(), 0, 0, 0));
             }
             let slot = &mut per[m];
             match t.wait() {
@@ -732,9 +732,9 @@ pub fn run_churn(
     drop(tick_tx);
     let mut per = collector.join().expect("collector");
     let n = mix.entries.len();
-    per.resize_with(n, Default::default);
+    per.resize_with(n, || (Metrics::exact(), 0, 0, 0));
     let wall = t0.elapsed();
-    let mut merged = Metrics::default();
+    let mut merged = Metrics::exact();
     let mut per_model = Vec::with_capacity(n);
     let (mut t_sub, mut t_ok, mut t_shed, mut t_failed) = (0u64, 0u64, 0u64, 0u64);
     for (i, (m, ok, shed_in_flight, failed_in_flight)) in per.into_iter().enumerate() {
@@ -796,7 +796,7 @@ pub fn closed_loop(
         let h = handle.clone();
         threads.push(thread::spawn(move || {
             let mut rng = Rng::new(seed.wrapping_add((c as u64).wrapping_mul(0x9E37_79B9)));
-            let mut m = Metrics::default();
+            let mut m = Metrics::exact();
             let (mut ok, mut shed, mut failed) = (0u64, 0u64, 0u64);
             let mut sent = 0usize;
             while sent < budget && Instant::now() < deadline {
@@ -821,7 +821,7 @@ pub fn closed_loop(
             (m, ok, shed, failed)
         }));
     }
-    let mut merged = Metrics::default();
+    let mut merged = Metrics::exact();
     let (mut ok, mut shed, mut failed) = (0u64, 0u64, 0u64);
     for t in threads {
         let (m, o, s, f) = t.join().expect("client thread");
@@ -863,6 +863,7 @@ mod tests {
                 sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
                 dispatch: crate::coordinator::Dispatch::FairSteal,
                 quota: crate::coordinator::QuotaPolicy::None,
+                telemetry: crate::coordinator::TelemetryConfig::default(),
             },
         )
     }
@@ -964,6 +965,7 @@ mod tests {
             sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
             dispatch: Dispatch::FairSteal,
             quota: QuotaPolicy::None,
+            telemetry: crate::coordinator::TelemetryConfig::default(),
         });
         let eb = Engine::new(QuantizedModel::synthetic("big", &[4, 8, 3], 5, 3, 1));
         let es = Engine::new(QuantizedModel::synthetic("small", &[6, 4, 2], 5, 3, 2));
@@ -1020,6 +1022,7 @@ mod tests {
             sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
             dispatch: Dispatch::FairSteal,
             quota: QuotaPolicy::weighted(),
+            telemetry: crate::coordinator::TelemetryConfig::default(),
         });
         let e0 = Engine::new(QuantizedModel::synthetic("base0", &[4, 8, 3], 5, 3, 1));
         let e1 = Engine::new(QuantizedModel::synthetic("base1", &[6, 4, 2], 5, 3, 2));

@@ -25,16 +25,27 @@
 //! config `admin` stanza), and the report breaks counters down per
 //! model and per replica (conservation: submitted == ok + shed +
 //! failed, per model — including removed tenants) with steal counts,
-//! both fairness indices, and the registry epoch.
+//! both fairness indices, and the registry epoch. The telemetry spine
+//! surfaces through `--stats-every S` (live windowed per-tenant stats
+//! table), `--telemetry FILE` (streamed TELEMETRY.jsonl: window
+//! snapshots, trace spans, final flight-recorder dump),
+//! `--trace-sample N` (1-in-N full request timelines), and
+//! `--no-telemetry` (the overhead experiment's A-side).
 
+use std::fs::File;
+use std::io::Write;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
 use kan_sas::arch::{ArrayConfig, WeightLoad};
 use kan_sas::config::{parse_dispatch, parse_pe, parse_shed, parse_synth_spec, RunConfig};
-use kan_sas::coordinator::{BatchPolicy, GatewayBuilder, QuotaPolicy};
+use kan_sas::coordinator::{
+    BatchPolicy, GatewayBuilder, QuotaPolicy, Span, Telemetry, TelemetrySnapshot,
+};
 use kan_sas::cost::array_area_mm2;
 use kan_sas::experiments;
 use kan_sas::kan::{Engine, QuantizedModel};
@@ -125,6 +136,8 @@ fn print_help() {
                                --requests N --clients C\n\
                                --scenario steady|diurnal|flash-crowd|skewed-burst|churn\n\
                                --rate RPS --duration-ms MS]\n\
+                              [--stats-every S] [--telemetry FILE]\n\
+                              [--trace-sample N] [--no-telemetry]\n\
          smoke:         quickstart\n\
          \n\
          serve runs the multi-tenant Gateway: one worker fleet + one bounded\n\
@@ -146,6 +159,14 @@ fn print_help() {
          arrivals; --scenario churn drives live registry churn (hot-add\n\
          at 25%, re-weight at 50%, remove at 75% — or the config file's\n\
          \"admin\" event script) while traffic flows.\n\
+         The telemetry spine is on by default (lock-free event rings +\n\
+         a collector thread): --stats-every S prints a live windowed\n\
+         per-tenant stats table every S seconds, --telemetry FILE\n\
+         streams TELEMETRY.jsonl (window snapshots, sampled spans, and\n\
+         a final flight-recorder dump), --trace-sample N records a full\n\
+         admission→batch→serve→respond timeline for 1-in-N requests,\n\
+         and --no-telemetry turns the spine off (the A-side of the\n\
+         overhead experiment in EXPERIMENTS.md).\n\
          One model defaults to closed-loop clients; several models (or\n\
          --scenario) drive the open-loop Poisson generator. Replica\n\
          autosizing clamps cores to 8; raise with --max-replicas or\n\
@@ -333,6 +354,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
             _ => QuotaPolicy::weighted(),
         };
     }
+    // telemetry spine controls: --no-telemetry is the overhead
+    // experiment's A-side; any observability flag implies the spine on
+    let stats_every: f64 = args.parsed("--stats-every", 0.0)?;
+    if !stats_every.is_finite() || stats_every < 0.0 {
+        bail!("--stats-every must be a non-negative number of seconds");
+    }
+    let telemetry_path = args.get("--telemetry").map(PathBuf::from);
+    cfg.telemetry.trace_sample = args.parsed("--trace-sample", cfg.telemetry.trace_sample)?;
+    if args.flag("--no-telemetry") {
+        cfg.telemetry.enabled = false;
+    } else if stats_every > 0.0 || telemetry_path.is_some() || cfg.telemetry.trace_sample > 0 {
+        cfg.telemetry.enabled = true;
+    }
 
     // registered models: --models SPEC,SPEC,... or the single-model flags
     let specs: Vec<(String, Engine)> = if let Some(list) = args.get("--models") {
@@ -418,6 +452,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let gateway = builder.start();
     let handles = gateway.handles();
+    let tel = gateway.telemetry();
+    let jsonl_out = match &telemetry_path {
+        Some(p) if tel.enabled() => {
+            let f = File::create(p)
+                .with_context(|| format!("creating telemetry stream {}", p.display()))?;
+            Some(f)
+        }
+        Some(p) => {
+            println!("--telemetry {} ignored: spine disabled by --no-telemetry", p.display());
+            None
+        }
+        None => None,
+    };
+    let monitor = (tel.enabled() && (stats_every > 0.0 || jsonl_out.is_some())).then(|| {
+        let every = if stats_every > 0.0 {
+            Duration::from_secs_f64(stats_every)
+        } else {
+            Duration::from_secs(1)
+        };
+        spawn_monitor(Arc::clone(&tel), every, stats_every > 0.0, jsonl_out)
+    });
 
     let multi = handles.len() > 1;
     let report = if args.get("--scenario") == Some("churn") {
@@ -468,7 +523,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
         loadgen::closed_loop(&handles[0], clients, Duration::from_secs(3600), budget, 12345)
     };
 
+    // stop the live monitor before the final report so its table stops
+    // interleaving; the post-shutdown snapshot below catches the tail
+    let (mut spans, mut jsonl_out) = match monitor {
+        Some(m) => {
+            m.stop.store(true, Ordering::Release);
+            m.handle.join().expect("join telemetry monitor")
+        }
+        None => (Vec::new(), None),
+    };
     let stats = gateway.shutdown();
+    if tel.enabled() {
+        let final_snap = tel.snapshot();
+        if let Some(f) = jsonl_out.as_mut() {
+            let _ = writeln!(f, "{}", final_snap.to_value().render());
+            for s in &final_snap.spans {
+                let _ = writeln!(f, "{}", s.to_value().render());
+            }
+            let _ = writeln!(f, "{}", tel.flight_dump().to_value().render());
+        }
+        spans.extend(final_snap.spans);
+    }
     println!("{}", report.summary());
     println!(
         "throughput: {:.0} rows/s over {:.2}s   mean batch {:.1}   batches {}   peak queue {}",
@@ -555,7 +630,122 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ]);
     }
     print!("{}", t.render());
+    if tel.enabled() {
+        if tel.config().trace_sample > 0 && !spans.is_empty() {
+            println!("trace spans: {} sampled (showing up to 10)", spans.len());
+            for s in spans.iter().take(10) {
+                println!("  {}", s.timeline());
+            }
+        }
+        let dump = tel.flight_dump();
+        if !dump.churn.is_empty() {
+            println!("flight recorder — {} registry transitions (in order):", dump.churn.len());
+            for c in &dump.churn {
+                println!(
+                    "  t={}us {} '{}' (weight {}, epoch {})",
+                    c.t_us,
+                    c.kind.name(),
+                    c.name,
+                    c.weight,
+                    c.epoch
+                );
+            }
+        }
+        let dropped = tel.dropped_events();
+        if dropped > 0 {
+            println!("telemetry: {dropped} events dropped on ring overflow (raise ring_capacity)");
+        }
+        if let Some(p) = &telemetry_path {
+            println!("telemetry stream written to {}", p.display());
+        }
+    }
     Ok(())
+}
+
+/// Background telemetry monitor spawned by `kansas serve`: snapshots the
+/// spine every `tick`, optionally printing the live per-tenant table and
+/// streaming JSONL lines; returns the accumulated trace spans and the
+/// stream file on join.
+struct Monitor {
+    stop: Arc<AtomicBool>,
+    handle: std::thread::JoinHandle<(Vec<Span>, Option<File>)>,
+}
+
+fn spawn_monitor(
+    tel: Arc<Telemetry>,
+    tick: Duration,
+    print: bool,
+    mut out: Option<File>,
+) -> Monitor {
+    let stop = Arc::new(AtomicBool::new(false));
+    let flag = Arc::clone(&stop);
+    let handle = std::thread::Builder::new()
+        .name("kansas-monitor".into())
+        .spawn(move || {
+            let mut spans = Vec::new();
+            loop {
+                // sleep in short slices so shutdown is responsive even
+                // with multi-second --stats-every intervals
+                let mut slept = Duration::ZERO;
+                while slept < tick && !flag.load(Ordering::Acquire) {
+                    let slice = (tick - slept).min(Duration::from_millis(50));
+                    std::thread::sleep(slice);
+                    slept += slice;
+                }
+                if flag.load(Ordering::Acquire) {
+                    break;
+                }
+                let snap = tel.snapshot();
+                if let Some(f) = out.as_mut() {
+                    let _ = writeln!(f, "{}", snap.to_value().render());
+                    for s in &snap.spans {
+                        let _ = writeln!(f, "{}", s.to_value().render());
+                    }
+                }
+                if print {
+                    print!("{}", live_table(&snap).render());
+                }
+                spans.extend(snap.spans);
+            }
+            (spans, out)
+        })
+        .expect("spawn telemetry monitor");
+    Monitor { stop, handle }
+}
+
+/// The `--stats-every` console table: one row per tenant over the last
+/// completed stats window.
+fn live_table(snap: &TelemetrySnapshot) -> Table {
+    let mut t = Table::new(&[
+        "tenant", "rps", "shed %", "steal %", "depth", "q p95 us", "svc p95 us", "util %",
+    ])
+    .with_title(
+        format!(
+            "telemetry @ {:.1}s (dropped events: {})",
+            snap.at_us as f64 / 1e6,
+            snap.dropped_events
+        )
+        .as_str(),
+    );
+    for ten in &snap.tenants {
+        let name = if ten.live { ten.name.clone() } else { format!("{} (removed)", ten.name) };
+        let Some(w) = &ten.window else {
+            let dash = || "-".to_string();
+            t.row(vec![name, dash(), dash(), dash(), dash(), dash(), dash(), dash()]);
+            continue;
+        };
+        t.row(vec![
+            name,
+            format!("{:.0}", w.throughput_rps),
+            format!("{:.1}", 100.0 * w.shed_rate),
+            format!("{:.1}", 100.0 * w.steal_rate),
+            w.depth_last.to_string(),
+            w.queue.map(|l| l.p95_us.to_string()).unwrap_or_else(|| "-".into()),
+            w.service.map(|l| l.p95_us.to_string()).unwrap_or_else(|| "-".into()),
+            format!("{:.1}", 100.0 * w.sim_utilization),
+        ]);
+    }
+    t
 }
 
 fn cmd_quickstart() -> Result<()> {

@@ -1,12 +1,16 @@
 //! Bench-artifact hygiene: `BENCH_engine.json` / `BENCH_serving.json`
-//! are the machine-readable perf trail tracked across PRs, written by
-//! the deterministic `util::json` renderer. This smoke test pins two
-//! things: (1) a document with the serving bench's schema survives a
-//! render → parse → render round trip unchanged (the renderer is a
-//! fixpoint, so diffs between PRs are semantic, not formatting noise),
-//! and (2) any artifact already sitting in the working tree actually
-//! parses — a bench that starts emitting invalid JSON fails here, not
-//! in whatever downstream tooling reads the trail.
+//! are the machine-readable perf trail tracked across PRs, and
+//! `TELEMETRY.jsonl` is the serving observability stream — all written
+//! by the deterministic `util::json` renderer. This smoke test pins
+//! three things: (1) documents with the serving bench's and telemetry
+//! stream's schemas survive a render → parse → render round trip
+//! unchanged (the renderer is a fixpoint, so diffs between PRs are
+//! semantic, not formatting noise), (2) any artifact already sitting in
+//! the working tree actually parses — a bench that starts emitting
+//! invalid JSON fails here, not in whatever downstream tooling reads
+//! the trail — and (3) a live `kansas serve --telemetry` stream (e.g.
+//! the CI smoke step's) holds one valid object per line, each tagged
+//! with a known `kind`.
 
 use kan_sas::util::json::Value;
 
@@ -80,4 +84,127 @@ fn bench_artifacts_on_disk_stay_valid_json() {
             .unwrap_or_else(|e| panic!("{name} is not valid JSON: {e}"));
         assert!(v.get("bench").is_some(), "{name} is missing its 'bench' tag");
     }
+}
+
+/// A miniature of the `kansas serve --telemetry` stream: one line of
+/// each kind the spine emits (window snapshot, trace span, flight dump).
+fn telemetry_schema_lines() -> Vec<Value> {
+    vec![
+        Value::obj([
+            ("kind", Value::str("window")),
+            ("at_us", Value::num(1_000_000.0)),
+            ("dropped_events", Value::num(0.0)),
+            (
+                "tenants",
+                Value::arr([Value::obj([
+                    ("name", Value::str("mnist")),
+                    ("live", Value::Bool(true)),
+                    (
+                        "window",
+                        Value::obj([
+                            ("throughput_rps", Value::num(1234.5)),
+                            ("shed_rate", Value::num(0.01)),
+                            ("sim_utilization", Value::num(0.62)),
+                            (
+                                "queue",
+                                Value::obj([
+                                    ("p50_us", Value::num(80.0)),
+                                    ("p95_us", Value::num(410.0)),
+                                ]),
+                            ),
+                            ("service", Value::Null),
+                        ]),
+                    ),
+                    (
+                        "totals",
+                        Value::obj([
+                            ("admitted", Value::num(640.0)),
+                            ("completed", Value::num(612.0)),
+                            ("shed", Value::num(28.0)),
+                        ]),
+                    ),
+                ])]),
+            ),
+        ]),
+        Value::obj([
+            ("kind", Value::str("span")),
+            ("trace", Value::num(65.0)),
+            ("tenant", Value::str("mnist")),
+            ("admitted_us", Value::num(5000.0)),
+            ("enqueued_us", Value::num(5100.0)),
+            ("batch_us", Value::Null),
+            ("stolen", Value::Bool(false)),
+            ("responded_us", Value::num(6400.0)),
+            ("queue_us", Value::num(900.0)),
+            ("service_us", Value::num(500.0)),
+            ("worker", Value::num(1.0)),
+        ]),
+        Value::obj([
+            ("kind", Value::str("flight")),
+            ("at_us", Value::num(2_000_000.0)),
+            ("churn_dropped", Value::num(0.0)),
+            (
+                "churn",
+                Value::arr([Value::obj([
+                    ("t_us", Value::num(12.0)),
+                    ("action", Value::str("registered")),
+                    ("tenant", Value::str("mnist")),
+                    ("weight", Value::num(1.0)),
+                    ("epoch", Value::num(1.0)),
+                ])]),
+            ),
+            (
+                "tenants",
+                Value::arr([Value::obj([
+                    ("name", Value::str("mnist")),
+                    (
+                        "events",
+                        Value::arr([Value::obj([
+                            ("t_us", Value::num(5000.0)),
+                            ("event", Value::str("admitted")),
+                            ("rows", Value::num(1.0)),
+                            ("worker", Value::num(2.0)),
+                        ])]),
+                    ),
+                ])]),
+            ),
+        ]),
+    ]
+}
+
+#[test]
+fn telemetry_jsonl_schema_roundtrips_deterministically() {
+    for line in telemetry_schema_lines() {
+        let text = line.render();
+        assert!(!text.contains('\n'), "JSONL lines must be single-line");
+        let parsed = Value::parse(&text).expect("the renderer must emit valid JSON");
+        assert_eq!(parsed.render(), text, "render → parse → render is a fixpoint");
+    }
+}
+
+#[test]
+fn telemetry_stream_on_disk_stays_valid_jsonl() {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("TELEMETRY.jsonl");
+    let Ok(text) = std::fs::read_to_string(&path) else {
+        return; // no serve --telemetry run in this tree; nothing to check
+    };
+    let mut lines = 0usize;
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Value::parse(line)
+            .unwrap_or_else(|e| panic!("TELEMETRY.jsonl line {}: invalid JSON: {e}", i + 1));
+        assert_eq!(v.render(), line, "TELEMETRY.jsonl line {} is not renderer-canonical", i + 1);
+        let kind = v.get("kind").and_then(Value::as_str).unwrap_or_else(|| {
+            panic!("TELEMETRY.jsonl line {} has no string 'kind' tag", i + 1)
+        });
+        assert!(
+            matches!(kind, "window" | "span" | "flight"),
+            "TELEMETRY.jsonl line {}: unknown kind '{kind}'",
+            i + 1
+        );
+        lines += 1;
+    }
+    assert!(lines > 0, "a present TELEMETRY.jsonl must hold at least one record");
 }

@@ -13,7 +13,7 @@ use kan_sas::arch::ArrayConfig;
 use kan_sas::bspline::Lut;
 use kan_sas::coordinator::{
     BatchPolicy, Dispatch, GatewayBuilder, GatewayConfig, Pool, PoolConfig, PoolError, Priority,
-    QuotaPolicy, Request, Server, ServerConfig, ServeError, ShedPolicy,
+    QuotaPolicy, Request, Server, ServerConfig, ServeError, ShedPolicy, TelemetryConfig,
 };
 use kan_sas::kan::{Engine, LayerParams, QuantizedModel};
 use kan_sas::tensor::Tensor;
@@ -158,6 +158,7 @@ fn pool_config(replicas: usize, queue_cap: usize, shed: ShedPolicy) -> PoolConfi
         sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
         dispatch: Dispatch::FairSteal,
         quota: QuotaPolicy::None,
+        telemetry: TelemetryConfig::default(),
     }
 }
 
@@ -338,6 +339,7 @@ fn gateway_config(replicas: usize, queue_cap: usize, shed: ShedPolicy) -> Gatewa
         sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
         dispatch: Dispatch::FairSteal,
         quota: QuotaPolicy::None,
+        telemetry: TelemetryConfig::default(),
     }
 }
 
@@ -477,6 +479,7 @@ fn gateway_drop_oldest_prefers_low_priority_victims() {
         sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
         dispatch: Dispatch::FairSteal,
         quota: QuotaPolicy::None,
+        telemetry: TelemetryConfig::default(),
     });
     // heavy enough that service can't keep pace with the submit burst,
     // so the queue genuinely overflows and evicts

@@ -8,7 +8,7 @@ use std::time::Duration;
 
 use kan_sas::arch::ArrayConfig;
 use kan_sas::coordinator::{
-    BatchPolicy, Dispatch, GatewayBuilder, GatewayConfig, QuotaPolicy, ShedPolicy,
+    BatchPolicy, Dispatch, GatewayBuilder, GatewayConfig, QuotaPolicy, ShedPolicy, TelemetryConfig,
 };
 use kan_sas::kan::{Engine, QuantizedModel};
 use kan_sas::loadgen::{self, Focus, MixEntry, Scenario};
@@ -27,6 +27,7 @@ fn gateway_config(
         sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
         dispatch,
         quota: QuotaPolicy::None,
+        telemetry: TelemetryConfig::default(),
     }
 }
 

@@ -1,9 +1,11 @@
-//! Hard acceptance gate for response-buffer pooling: after warmup, the
-//! gateway's per-model [`BufferPool`] must serve acquire→release cycles
-//! with ZERO heap allocations (counting global allocator, same
-//! technique as `tests/zero_alloc.rs`), and an end-to-end serial-client
-//! run must recycle nearly every response buffer instead of allocating
-//! per request.
+//! Hard acceptance gate for response-buffer pooling and the telemetry
+//! hot path: after warmup, the gateway's per-model [`BufferPool`] must
+//! serve acquire→release cycles with ZERO heap allocations (counting
+//! global allocator, same technique as `tests/zero_alloc.rs`), the
+//! telemetry [`EventRing`]/[`LogHistogram`] primitives must record —
+//! and overflow — without touching the heap, and an end-to-end
+//! serial-client run with the spine ENABLED must recycle nearly every
+//! response buffer instead of allocating per request.
 //!
 //! Kept to a single `#[test]` on purpose — the counters are
 //! process-wide and the default harness runs tests of one binary
@@ -14,7 +16,8 @@ use std::time::Duration;
 
 use kan_sas::arch::ArrayConfig;
 use kan_sas::coordinator::{
-    BatchPolicy, BufferPool, Dispatch, GatewayBuilder, GatewayConfig, QuotaPolicy, ShedPolicy,
+    BatchPolicy, BufferPool, Dispatch, Event, EventKind, EventRing, GatewayBuilder, GatewayConfig,
+    LogHistogram, QuotaPolicy, ShedPolicy, TelemetryConfig,
 };
 use kan_sas::kan::{Engine, QuantizedModel};
 use kan_sas::util::alloc_count::{self, CountingAllocator};
@@ -49,6 +52,40 @@ fn response_buffer_pooling_is_allocation_free_after_warmup() {
     assert_eq!(recycled, 64);
     assert_eq!(free, 1);
 
+    // ---- the telemetry primitives, measured directly ----
+    // ring push/drain and log-bucket histogram record sit on the serving
+    // hot path; once constructed they must never touch the heap (the
+    // ring even drops-and-counts on overflow instead of growing)
+    let ring = EventRing::new(64);
+    let mut hist = LogHistogram::new();
+    let ev = |i: u64| Event {
+        t_us: i,
+        a: i * 3 + 1,
+        b: 0,
+        trace: 0,
+        tenant: 0,
+        rows: 1,
+        worker: 0,
+        kind: EventKind::Admitted,
+    };
+    let before = alloc_count::events();
+    for i in 0..1024u64 {
+        ring.push(ev(i)); // past capacity this drops-and-counts
+        if i % 100 == 99 {
+            ring.drain(|e| hist.record(e.a));
+        }
+    }
+    ring.drain(|e| hist.record(e.a));
+    let overflowed = ring.dropped();
+    let events = alloc_count::events() - before;
+    assert_eq!(
+        events, 0,
+        "telemetry ring push/drain + histogram record must not touch the heap \
+         ({events} allocator events)"
+    );
+    assert!(overflowed > 0, "a 64-slot ring under 100-push bursts must overflow");
+    assert_eq!(hist.count() + overflowed, 1024, "pushed == recorded + dropped");
+
     // ---- end to end: submit-side buffer cost is amortized ----
     let mut builder = GatewayBuilder::with_config(GatewayConfig {
         replicas: 1,
@@ -60,6 +97,9 @@ fn response_buffer_pooling_is_allocation_free_after_warmup() {
         // quotas partition admission, not buffering: the steady-state
         // path must stay allocation-free with them on
         quota: QuotaPolicy::weighted(),
+        // the spine stays ON here: emits are two atomic ops into a
+        // pre-sized ring, so serving with telemetry adds no allocations
+        telemetry: TelemetryConfig::default(),
     });
     let id = builder.register(
         "alloc",

@@ -9,8 +9,8 @@ use std::time::{Duration, Instant};
 
 use kan_sas::arch::ArrayConfig;
 use kan_sas::coordinator::{
-    BatchPolicy, Dispatch, DrainMode, GatewayBuilder, GatewayConfig, QuotaPolicy, ServeError,
-    ShedPolicy,
+    BatchPolicy, ChurnKind, Dispatch, DrainMode, GatewayBuilder, GatewayConfig, QuotaPolicy,
+    ServeError, ShedPolicy, TelemetryConfig,
 };
 use kan_sas::kan::{Engine, QuantizedModel};
 use kan_sas::loadgen::{self, MixEntry, Scenario};
@@ -30,6 +30,7 @@ fn config(
         sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
         dispatch: Dispatch::FairSteal,
         quota,
+        telemetry: TelemetryConfig::default(),
     }
 }
 
@@ -266,6 +267,7 @@ fn full_churn_cycle_under_load() {
     ];
     let sc = Scenario::steady(1200.0, Duration::from_millis(500));
     let events = loadgen::default_churn_events(sc.total_duration());
+    let tel = gw.telemetry();
     let mix = loadgen::run_churn(&gw, entries, &sc, &events, 61);
     let stats = gw.shutdown();
     assert_eq!(mix.per_model.len(), 3);
@@ -286,4 +288,33 @@ fn full_churn_cycle_under_load() {
     assert!(!stats.per_model[2].live, "the script removes its tenant again");
     // start(1) + add(1) + set_weight(1) + remove(2)
     assert!(stats.epoch >= 5, "the full cycle moves the epoch, got {}", stats.epoch);
+
+    // the flight recorder saw the whole cycle, in transition order:
+    // two registrations, then the scripted add → reweight → remove
+    let dump = tel.flight_dump();
+    let kinds: Vec<ChurnKind> = dump.churn.iter().map(|c| c.kind).collect();
+    assert_eq!(
+        kinds,
+        vec![
+            ChurnKind::Registered,
+            ChurnKind::Registered,
+            ChurnKind::Added,
+            ChurnKind::Reweighted,
+            ChurnKind::RemoveBegin,
+            ChurnKind::Removed,
+        ],
+        "churn records in order, got {:?}",
+        dump.churn
+    );
+    assert_eq!(dump.churn[2].name, "hotswap");
+    assert_eq!(dump.churn[3].weight, 4, "the reweight records the new weight");
+    assert_eq!(dump.churn[5].name, "hotswap");
+    let mut last = 0u64;
+    for c in &dump.churn {
+        assert!(c.t_us >= last, "flight recorder timestamps are monotonic: {:?}", dump.churn);
+        last = c.t_us;
+    }
+    // the hot-added tenant's slot retains lifecycle events
+    assert_eq!(dump.tenants[2].0, "hotswap");
+    assert!(!dump.tenants[2].1.is_empty(), "served tenant leaves flight events");
 }

@@ -1,0 +1,159 @@
+//! Integration tests for the telemetry spine driven through the public
+//! gateway API: ring overflow degrades to drop-and-count (never
+//! corrupting serving conservation), collector totals reconcile with the
+//! authoritative gateway counters when nothing is dropped, and
+//! `trace_sample` produces complete admission→respond spans plus a
+//! flight recorder that remembers registration.
+
+use std::time::Duration;
+
+use kan_sas::arch::ArrayConfig;
+use kan_sas::coordinator::{
+    BatchPolicy, ChurnKind, Dispatch, GatewayBuilder, GatewayConfig, QuotaPolicy, ShedPolicy,
+    TelemetryConfig,
+};
+use kan_sas::kan::{Engine, QuantizedModel};
+
+fn engine(name: &str) -> Engine {
+    Engine::new(QuantizedModel::synthetic(name, &[8, 12, 10], 5, 3, 31))
+}
+
+fn config(telemetry: TelemetryConfig) -> GatewayConfig {
+    GatewayConfig {
+        replicas: 1,
+        queue_cap: 64,
+        shed: ShedPolicy::Block,
+        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+        sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
+        dispatch: Dispatch::FairSteal,
+        quota: QuotaPolicy::None,
+        telemetry,
+    }
+}
+
+/// A 2-slot ring under serial hammering must overflow; overflow shows up
+/// in `dropped_events` and the collector's view undercounts — but the
+/// gateway's own conservation counters stay exact, because emission
+/// never blocks and drops never touch the serving path.
+#[test]
+fn ring_overflow_drops_and_counts_without_breaking_serving() {
+    let tcfg = TelemetryConfig {
+        ring_capacity: 2,
+        window: Duration::from_millis(100),
+        ..TelemetryConfig::default()
+    };
+    let mut b = GatewayBuilder::with_config(config(tcfg));
+    let id = b.register("tiny_ring", engine("tiny_ring"));
+    let gw = b.start();
+    let tel = gw.telemetry();
+    let h = gw.handle(id);
+    for i in 0..500u64 {
+        let r = h.infer_q(vec![(i % 251) as u8; 8]).unwrap();
+        assert_eq!(r.t.len(), 10);
+    }
+    let stats = gw.shutdown();
+    let dropped = tel.dropped_events();
+    assert!(dropped > 0, "2-slot rings under 500 serial requests must overflow");
+    let ms = &stats.per_model[0];
+    assert_eq!(ms.submitted, 500);
+    assert_eq!(ms.completed, 500);
+    assert_eq!(ms.submitted, ms.completed + ms.shed + ms.failed);
+    let snap = tel.snapshot();
+    assert_eq!(snap.dropped_events, dropped);
+    let t0 = &snap.tenants[0];
+    assert!(
+        t0.totals.completed <= ms.completed,
+        "a lossy collector may undercount but never overcount"
+    );
+}
+
+/// With the default 8192-slot rings nothing drops, so the collector's
+/// cumulative totals reconcile exactly with the gateway counters, and
+/// window summaries carry well-formed gauges.
+#[test]
+fn collector_totals_reconcile_with_gateway_counters() {
+    let tcfg =
+        TelemetryConfig { window: Duration::from_millis(20), ..TelemetryConfig::default() };
+    let mut b = GatewayBuilder::with_config(config(tcfg));
+    let id = b.register("windowed", engine("windowed"));
+    let gw = b.start();
+    let tel = gw.telemetry();
+    let h = gw.handle(id);
+    for burst in 0..4u64 {
+        for i in 0..40u64 {
+            let r = h.infer_q(vec![((burst * 40 + i) % 251) as u8; 8]).unwrap();
+            assert_eq!(r.t.len(), 10);
+        }
+        // idle past a window boundary so at least one roll happens
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    let stats = gw.shutdown();
+    assert_eq!(tel.dropped_events(), 0, "default rings must absorb this load");
+    let snap = tel.snapshot();
+    let t0 = &snap.tenants[0];
+    assert_eq!(t0.name, "windowed");
+    assert!(t0.live);
+    assert_eq!(t0.totals.admitted, 160);
+    assert_eq!(t0.totals.completed, 160);
+    assert_eq!(t0.totals.shed, 0);
+    assert_eq!(stats.per_model[0].completed, 160);
+    assert!(t0.totals.batches >= 1);
+    let w = t0.window.expect("served traffic must leave a window summary");
+    assert!(w.end_us > w.start_us);
+    assert!(w.throughput_rps >= 0.0);
+    assert!(w.shed_rate == 0.0);
+    if let Some(q) = w.queue {
+        assert!(q.p50_us <= q.p95_us && q.p95_us <= q.max_us);
+    }
+    if let Some(s) = w.service {
+        assert!(s.p50_us <= s.p99_us && s.p99_us <= s.max_us);
+    }
+}
+
+/// `trace_sample: 1` spans every request end to end: each span's stage
+/// timestamps are monotonic, and the flight recorder retains both the
+/// registration churn record and per-tenant lifecycle events.
+#[test]
+fn trace_sampling_builds_full_spans() {
+    let tcfg = TelemetryConfig {
+        trace_sample: 1,
+        window: Duration::from_millis(50),
+        ..TelemetryConfig::default()
+    };
+    let mut b = GatewayBuilder::with_config(config(tcfg));
+    let id = b.register("spans", engine("spans"));
+    let gw = b.start();
+    let tel = gw.telemetry();
+    let h = gw.handle(id);
+    for i in 0..32u64 {
+        let r = h.infer_q(vec![(i % 251) as u8; 8]).unwrap();
+        assert_eq!(r.t.len(), 10);
+    }
+    let stats = gw.shutdown();
+    assert_eq!(stats.per_model[0].completed, 32);
+    assert_eq!(tel.dropped_events(), 0);
+    let snap = tel.snapshot();
+    assert_eq!(snap.spans.len(), 32, "sampling 1-in-1 must span every request");
+    for s in &snap.spans {
+        assert_eq!(s.tenant, "spans");
+        assert!(s.responded_us >= s.admitted_us);
+        if let Some(t) = s.enqueued_us {
+            assert!(t >= s.admitted_us);
+        }
+        if let Some(t) = s.serve_us {
+            assert!(t <= s.responded_us);
+        }
+        assert!(!s.timeline().is_empty());
+    }
+    // spans are moved out by the snapshot that observes them, so a
+    // second snapshot never repeats a span (JSONL streams stay unique)
+    assert!(tel.snapshot().spans.is_empty());
+
+    let dump = tel.flight_dump();
+    assert_eq!(dump.churn.len(), 1, "one registration, no churn");
+    assert_eq!(dump.churn[0].kind, ChurnKind::Registered);
+    assert_eq!(dump.churn[0].name, "spans");
+    let (name, evs) = &dump.tenants[0];
+    assert_eq!(name, "spans");
+    assert!(!evs.is_empty(), "flight recorder must retain lifecycle events");
+}
