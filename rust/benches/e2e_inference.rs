@@ -1,16 +1,21 @@
 //! Bench: end-to-end integer inference (the serving hot path) across
 //! batch sizes, plus the simulated accelerator cycles per batch.
 //!
-//! Measures both execution paths so the perf trajectory of the planned
+//! Measures three execution paths so the perf trajectory of the planned
 //! refactor stays machine-checkable:
 //!
 //! * `forward_into` — the compiled-plan, scratch-arena path (zero
-//!   steady-state allocations; see `tests/zero_alloc.rs`);
+//!   steady-state allocations; see `tests/zero_alloc.rs`), running the
+//!   runtime-dispatched SIMD kernel;
+//! * `scalar` — the identical planned path pinned to the scalar
+//!   reference kernel (the PR-6 baseline), so every row of SIMD uplift
+//!   is attributable and comparable across machines;
 //! * `forward_from_q` — the allocating compatibility wrapper, whose
 //!   per-call allocation profile matches the pre-plan engine.
 //!
-//! Results (throughput, p50/p95/p99 latency, allocs-per-forward for both
-//! paths) are written to `BENCH_engine.json` in the working directory.
+//! Results (throughput, p50/p95/p99 latency, allocs-per-forward for all
+//! paths, the dispatched kernel name, and the autotuned per-layer batch
+//! blocks) are written to `BENCH_engine.json` in the working directory.
 //! Falls back to a synthetic MNIST-shaped model when artifacts are not
 //! built, so the bench always runs offline.
 
@@ -18,7 +23,7 @@ use std::path::PathBuf;
 
 use kan_sas::arch::ArrayConfig;
 use kan_sas::bench::{bench, BenchStats};
-use kan_sas::kan::{Engine, QuantizedModel, Scratch};
+use kan_sas::kan::{Engine, Kernel, QuantizedModel, Scratch};
 use kan_sas::util::alloc_count::{self, CountingAllocator};
 use kan_sas::util::json::Value;
 use kan_sas::util::rng::Rng;
@@ -54,7 +59,17 @@ fn main() {
         eprintln!("artifacts not built — benching a synthetic MNIST-shaped model");
         (QuantizedModel::synthetic("mnist_kan_synth", &[784, 64, 10], 5, 3, 3), true)
     };
+    // the dispatched engine (best kernel for this CPU, or
+    // KANSAS_FORCE_KERNEL) and the pinned-scalar baseline over the SAME
+    // model, so the uplift column is same-weights same-machine
+    let scalar_engine = Engine::with_kernel(model.clone(), Kernel::scalar());
     let engine = Engine::new(model);
+    let kernel = engine.plan().kernel_kind();
+    let blocks = engine.plan().batch_blocks();
+    println!(
+        "kernel: {kernel} (available: {}); batch blocks: {blocks:?}",
+        Kernel::available().iter().map(|k| k.name()).collect::<Vec<_>>().join(",")
+    );
     let in_dim = engine.model.in_dim();
     let mut rng = Rng::new(3);
     let mut batches = Vec::new();
@@ -62,9 +77,14 @@ fn main() {
     for bs in [1usize, 8, 32, 128] {
         let x_q: Vec<u8> = (0..bs * in_dim).map(|_| rng.below(256) as u8).collect();
         let mut scratch = Scratch::for_plan(engine.plan(), bs);
+        let mut scratch_s = Scratch::for_plan(scalar_engine.plan(), bs);
 
         let planned = bench(&format!("{} planned forward_into, bs={bs}", engine.model.name), || {
             let t = engine.forward_into(&x_q, bs, &mut scratch).unwrap();
+            std::hint::black_box(t[t.len() - 1]);
+        });
+        let scalar = bench(&format!("{} scalar baseline, bs={bs}", engine.model.name), || {
+            let t = scalar_engine.forward_into(&x_q, bs, &mut scratch_s).unwrap();
             std::hint::black_box(t[t.len() - 1]);
         });
         let wrapper = bench(&format!("{} wrapper forward_from_q, bs={bs}", engine.model.name), || {
@@ -77,18 +97,22 @@ fn main() {
         let allocs_planned = allocs_per_call(64, || {
             std::hint::black_box(engine.forward_into(&x_q, bs, &mut scratch).unwrap().len());
         });
+        let allocs_scalar = allocs_per_call(64, || {
+            let t = scalar_engine.forward_into(&x_q, bs, &mut scratch_s).unwrap();
+            std::hint::black_box(t.len());
+        });
         let allocs_wrapper = allocs_per_call(64, || {
             std::hint::black_box(engine.forward_from_q(&x_q, bs).unwrap().t.len());
         });
 
         let sim = engine.simulate_batch(&ArrayConfig::kan_sas(16, 16, 4, 8), bs);
         println!(
-            "    -> {:.0} rows/s planned ({:.0} via wrapper); allocs/forward {:.1} vs {:.1}; \
-             simulated KAN-SAs 16x16: {} cycles ({:.1} us @500MHz)",
+            "    -> {:.0} rows/s planned [{kernel}] ({:.0} scalar, {:.0} wrapper); \
+             allocs/forward {:.1}; simulated KAN-SAs 16x16: {} cycles ({:.1} us @500MHz)",
             planned.per_second(bs as u64),
+            scalar.per_second(bs as u64),
             wrapper.per_second(bs as u64),
             allocs_planned,
-            allocs_wrapper,
             sim.cycles,
             sim.cycles as f64 * 2e-3
         );
@@ -96,6 +120,7 @@ fn main() {
         batches.push(Value::obj([
             ("bs", Value::num(bs as f64)),
             ("planned", path_json(&planned, bs, allocs_planned)),
+            ("scalar", path_json(&scalar, bs, allocs_scalar)),
             ("wrapper", path_json(&wrapper, bs, allocs_wrapper)),
             ("sim_cycles", Value::num(sim.cycles as f64)),
         ]));
@@ -106,6 +131,11 @@ fn main() {
         ("model", Value::str(engine.model.name.clone())),
         ("synthetic", Value::Bool(synthetic)),
         ("param_bytes", Value::num(engine.param_bytes() as f64)),
+        ("kernel", Value::str(kernel.name())),
+        (
+            "batch_blocks",
+            Value::arr(blocks.iter().map(|&bb| Value::num(bb as f64)).collect::<Vec<_>>()),
+        ),
         ("batches", Value::arr(batches)),
     ]);
     let out = "BENCH_engine.json";

@@ -27,7 +27,8 @@
 //! {
 //!   "telemetry": {"enabled": true, "ring_capacity": 8192,
 //!                 "window_ms": 1000, "flight_capacity": 64,
-//!                 "trace_sample": 0, "exact_samples": false}
+//!                 "trace_sample": 0, "exact_samples": false,
+//!                 "flight_every_s": 5}
 //! }
 //! ```
 
@@ -280,6 +281,12 @@ impl RunConfig {
             if let Some(b) = t.get("exact_samples").and_then(Value::as_bool) {
                 cfg.telemetry.exact_samples = b;
             }
+            if let Some(s) = t.get("flight_every_s").and_then(Value::as_f64) {
+                if !s.is_finite() || s < 0.0 {
+                    bail!("telemetry.flight_every_s must be >= 0 (0 disables periodic dumps)");
+                }
+                cfg.telemetry.flight_every = Duration::from_micros((s * 1e6) as u64);
+            }
         }
         if let Some(a) = v.get("admin") {
             let events = a
@@ -446,6 +453,25 @@ mod tests {
         let mut f = tempfile("cfg10.json");
         write!(f, r#"{{"admin": {{"events": [{{"at_ms": 10}}]}}}}"#).unwrap();
         assert!(RunConfig::load(&path("cfg10.json")).is_err());
+    }
+
+    #[test]
+    fn load_telemetry_flight_interval() {
+        let mut f = tempfile("cfg11.json");
+        write!(f, r#"{{"telemetry": {{"flight_every_s": 2.5, "trace_sample": 8}}}}"#).unwrap();
+        let cfg = RunConfig::load(&path("cfg11.json")).unwrap();
+        assert_eq!(cfg.telemetry.flight_every, Duration::from_micros(2_500_000));
+        assert_eq!(cfg.telemetry.trace_sample, 8);
+        // 0 disables periodic dumps; negatives are rejected
+        let mut f = tempfile("cfg12.json");
+        write!(f, r#"{{"telemetry": {{"flight_every_s": 0}}}}"#).unwrap();
+        let cfg = RunConfig::load(&path("cfg12.json")).unwrap();
+        assert_eq!(cfg.telemetry.flight_every, Duration::ZERO);
+        let mut f = tempfile("cfg13.json");
+        write!(f, r#"{{"telemetry": {{"flight_every_s": -1}}}}"#).unwrap();
+        assert!(RunConfig::load(&path("cfg13.json")).is_err());
+        // default: periodic dumps every 5s
+        assert_eq!(RunConfig::default().telemetry.flight_every, Duration::from_secs(5));
     }
 
     #[test]

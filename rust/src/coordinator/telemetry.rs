@@ -62,6 +62,12 @@ pub struct TelemetryConfig {
     /// Retain exact latency samples in the serving `Metrics` cells
     /// (bench mode) instead of the bounded histograms.
     pub exact_samples: bool,
+    /// Interval between periodic flight-recorder dumps on the
+    /// TELEMETRY.jsonl stream (`kansas serve --telemetry`), so the
+    /// registry-churn record survives a crash instead of existing only
+    /// in the single shutdown dump. `Duration::ZERO` disables the
+    /// periodic dumps (the shutdown dump is always written).
+    pub flight_every: Duration,
 }
 
 impl Default for TelemetryConfig {
@@ -73,6 +79,7 @@ impl Default for TelemetryConfig {
             flight_capacity: 64,
             trace_sample: 0,
             exact_samples: false,
+            flight_every: Duration::from_secs(5),
         }
     }
 }

@@ -9,7 +9,13 @@
 //!    exactly what one column of vector PEs accumulates (Sec. IV-B);
 //! 3. **base path**: integer ReLU then a dense i32 GEMM;
 //! 4. **requantize**: `t = acc1*m1 + acc2*m2` (i64) -> next uint8
-//!    activations, or raw `t` logits at the last layer.
+//!    activations, or raw `t` logits at the last layer. On the serving
+//!    path this step is *fused* for non-final layers: combine and
+//!    requantize happen in one pass over the i32 accumulators without
+//!    ever materializing `t` (see `plan::LayerPlan::forward_requant_into`).
+//!
+//! The MAC inner loops of steps 2-3 run through the SIMD kernel layer
+//! ([`super::kernel`]), resolved once per plan compile.
 //!
 //! The engine follows a compile/execute split (see [`super::plan`]): all
 //! per-layer state is resolved once into an [`ExecutionPlan`] when the
@@ -28,6 +34,7 @@ use crate::sim::analytic;
 use crate::sim::workload::Workload;
 use crate::arch::ArrayConfig;
 
+use super::kernel::Kernel;
 use super::model::QuantizedModel;
 use super::plan::{ExecutionPlan, Scratch};
 
@@ -96,6 +103,16 @@ impl Engine {
     /// an existing engine, which also shares the compiled plan).
     pub fn from_shared(model: Arc<QuantizedModel>) -> Self {
         let plan = Arc::new(ExecutionPlan::compile(&model));
+        Self { model, plan, scratch: Mutex::new(Scratch::new()) }
+    }
+
+    /// Build an engine whose plan is pinned to a specific MAC kernel
+    /// instead of runtime dispatch — how the benches produce the
+    /// forced-scalar baseline rows and the kernel tests compare paths
+    /// without mutating the process environment.
+    pub fn with_kernel(model: QuantizedModel, kernel: Kernel) -> Self {
+        let model = Arc::new(model);
+        let plan = Arc::new(ExecutionPlan::compile_with(&model, kernel));
         Self { model, plan, scratch: Mutex::new(Scratch::new()) }
     }
 
@@ -505,6 +522,23 @@ mod tests {
         // replicas stay bit-identical
         let x_q = vec![3u8, 200, 90, 17];
         assert_eq!(a.forward_from_q(&x_q, 2).unwrap().t, b.forward_from_q(&x_q, 2).unwrap().t);
+    }
+
+    #[test]
+    fn pinned_kernel_engines_match_dispatch() {
+        use crate::kan::kernel::Kernel;
+        let model = QuantizedModel::synthetic("pin", &[5, 8, 3], 5, 3, 41);
+        let x_q: Vec<u8> = (0..3 * 5).map(|i| (i * 67 % 256) as u8).collect();
+        let scalar = Engine::with_kernel(model.clone(), Kernel::scalar());
+        let want = scalar.forward_from_q(&x_q, 3).unwrap().t;
+        let dispatched = Engine::new(model.clone());
+        assert!(Kernel::available().contains(&dispatched.plan().kernel_kind()));
+        assert_eq!(dispatched.forward_from_q(&x_q, 3).unwrap().t, want);
+        for kind in Kernel::available() {
+            let e = Engine::with_kernel(model.clone(), Kernel::forced(kind).unwrap());
+            assert_eq!(e.plan().kernel_kind(), kind);
+            assert_eq!(e.forward_from_q(&x_q, 3).unwrap().t, want, "kernel {kind}");
+        }
     }
 
     #[test]

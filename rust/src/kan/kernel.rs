@@ -1,0 +1,541 @@
+//! Explicit SIMD MAC kernels with runtime CPU-feature dispatch — the
+//! software analogue of the paper's dense PE array (Sec. IV): where the
+//! accelerator maps the non-recursive B-spline evaluation onto MAC lanes
+//! wired at configuration time, we map the i16 -> i32 widening MAC inner
+//! loops onto the host's vector lanes, resolved **once** at
+//! [`ExecutionPlan`](super::plan::ExecutionPlan) compile into cached
+//! function pointers.
+//!
+//! Two primitives cover every hot loop in `LayerPlan::forward_into`:
+//!
+//! * [`Kernel::mac4`] — the fused 4-row spline MAC for degree-3 windows
+//!   (`acc[i] += v0*w0[i] + v1*w1[i] + v2*w2[i] + v3*w3[i]`), the
+//!   dominant path for every P=3 model;
+//! * [`Kernel::axpy`] — the single-row MAC (`acc[i] += v * w[i]`) used by
+//!   generic-degree spline windows and the ReLU·weight base path.
+//!
+//! Implementations:
+//!
+//! | kind     | gate                                   | vector body |
+//! |----------|----------------------------------------|-------------|
+//! | `scalar` | always compiled                        | LLVM autovectorized (the PR-6 baseline) |
+//! | `avx2`   | `simd` feature + runtime `avx2`        | `_mm256_madd_epi16` pair-MACs (mac4), `_mm256_mullo_epi32` widening (axpy) |
+//! | `avx512` | `avx512` feature + runtime `avx512f`   | 512-bit widening MACs (requires rustc >= 1.89 for stable AVX-512 intrinsics) |
+//! | `neon`   | `simd` feature on aarch64              | `vmlal_s16` widening MACs |
+//!
+//! **Bit-exactness contract:** every kernel performs the identical i32
+//! wrapping arithmetic as the scalar reference — products are exact
+//! (|v| <= 255, |w| <= 127 after i8 -> i16 widening, so every partial
+//! product fits in 24 bits) and i32 addition is associative under
+//! wrapping, so lane order cannot change results. The golden replay
+//! vectors are byte-identical on every dispatch path
+//! (`tests/golden_replay.rs`), and `tests/kernels.rs` differentially
+//! tests each compiled path against the scalar reference over random
+//! shapes including remainder lanes.
+//!
+//! **Dispatch order:** `avx512` > `avx2` > `neon` > `scalar`, best
+//! supported wins; the `KANSAS_FORCE_KERNEL` environment variable
+//! (`scalar|avx2|avx512|neon`) pins a path for testing. Forcing an
+//! unavailable path warns on stderr once and falls back to the best
+//! available, so a forced run degrades rather than aborts.
+
+use std::fmt;
+
+/// Identifies one compiled kernel implementation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    /// Portable reference path (always compiled; the dispatch fallback).
+    Scalar,
+    /// 256-bit AVX2 path (x86_64, `simd` feature, runtime-detected).
+    Avx2,
+    /// 512-bit AVX-512F path (x86_64, `avx512` feature, runtime-detected).
+    Avx512,
+    /// 128-bit NEON path (aarch64, `simd` feature; baseline on aarch64).
+    Neon,
+}
+
+impl KernelKind {
+    /// Stable lowercase name — the `KANSAS_FORCE_KERNEL` vocabulary and
+    /// the string reported in `BENCH_engine.json` / `kansas serve`.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Avx2 => "avx2",
+            KernelKind::Avx512 => "avx512",
+            KernelKind::Neon => "neon",
+        }
+    }
+
+    /// Parse a `KANSAS_FORCE_KERNEL` value.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(KernelKind::Scalar),
+            "avx2" => Some(KernelKind::Avx2),
+            "avx512" => Some(KernelKind::Avx512),
+            "neon" => Some(KernelKind::Neon),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for KernelKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Fused 4-row MAC: `acc[i] += v[0]*w[i] + v[1]*w[n+i] + v[2]*w[2n+i] +
+/// v[3]*w[3n+i]` for `i in 0..n`, with `w.len() == 4 * n`.
+type Mac4Fn = unsafe fn(acc: &mut [i32], w: &[i16], v: [i16; 4]);
+/// Single-row MAC: `acc[i] += v * w[i]` with `w.len() == acc.len()`.
+type AxpyFn = unsafe fn(acc: &mut [i32], w: &[i16], v: i16);
+
+/// A resolved kernel: the dispatch `kind` plus cached function pointers
+/// for the two MAC primitives. `Copy`, so every [`LayerPlan`]
+/// (`super::plan::LayerPlan`) embeds its own resolved copy and the hot
+/// path never re-detects CPU features.
+///
+/// The only constructors are [`Kernel::dispatch`], [`Kernel::forced`],
+/// and [`Kernel::scalar`]; all three guarantee the invariant that the
+/// stored pointers target implementations the running CPU supports,
+/// which is what makes the (module-private) unsafe calls sound.
+#[derive(Clone, Copy)]
+pub struct Kernel {
+    kind: KernelKind,
+    mac4: Mac4Fn,
+    axpy: AxpyFn,
+}
+
+impl fmt::Debug for Kernel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Kernel").field("kind", &self.kind).finish()
+    }
+}
+
+impl Kernel {
+    /// The portable reference kernel (always available).
+    pub fn scalar() -> Self {
+        Self { kind: KernelKind::Scalar, mac4: scalar::mac4, axpy: scalar::axpy }
+    }
+
+    /// Every kernel kind compiled into this binary AND supported by the
+    /// running CPU, in dispatch-preference order (best first, scalar
+    /// last). Test suites iterate this to differentially exercise each
+    /// path that can actually run here.
+    pub fn available() -> Vec<KernelKind> {
+        let mut kinds = Vec::new();
+        #[cfg(all(feature = "avx512", target_arch = "x86_64"))]
+        if std::arch::is_x86_feature_detected!("avx512f") {
+            kinds.push(KernelKind::Avx512);
+        }
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        if std::arch::is_x86_feature_detected!("avx2") {
+            kinds.push(KernelKind::Avx2);
+        }
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        kinds.push(KernelKind::Neon);
+        kinds.push(KernelKind::Scalar);
+        kinds
+    }
+
+    /// The kernel for `kind`, or `None` when that path is not compiled
+    /// in (feature/arch gate) or the CPU lacks the features. This is the
+    /// race-free way for tests to pin a path — no env mutation needed.
+    pub fn forced(kind: KernelKind) -> Option<Self> {
+        match kind {
+            KernelKind::Scalar => Some(Self::scalar()),
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            KernelKind::Avx2 => std::arch::is_x86_feature_detected!("avx2")
+                .then(|| Self { kind, mac4: x86::mac4_avx2, axpy: x86::axpy_avx2 }),
+            #[cfg(all(feature = "avx512", target_arch = "x86_64"))]
+            KernelKind::Avx512 => std::arch::is_x86_feature_detected!("avx512f")
+                .then(|| Self { kind, mac4: x86::mac4_avx512, axpy: x86::axpy_avx512 }),
+            #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+            KernelKind::Neon => Some(Self { kind, mac4: neon::mac4_neon, axpy: neon::axpy_neon }),
+            #[allow(unreachable_patterns)]
+            _ => None,
+        }
+    }
+
+    /// Resolve the kernel to execute with: the best compiled-and-
+    /// supported path, unless `KANSAS_FORCE_KERNEL` pins one. Called
+    /// once per `ExecutionPlan` compile; the result is cached in the
+    /// plan's layers as plain function pointers.
+    pub fn dispatch() -> Self {
+        if let Ok(want) = std::env::var("KANSAS_FORCE_KERNEL") {
+            match KernelKind::parse(&want) {
+                Some(kind) => match Self::forced(kind) {
+                    Some(k) => return k,
+                    None => eprintln!(
+                        "KANSAS_FORCE_KERNEL={want}: kernel not compiled in or unsupported \
+                         on this CPU; falling back to best available"
+                    ),
+                },
+                None => eprintln!(
+                    "KANSAS_FORCE_KERNEL={want}: unknown kernel (want scalar|avx2|avx512|neon); \
+                     falling back to best available"
+                ),
+            }
+        }
+        let best = *Self::available().first().expect("scalar kernel is always available");
+        Self::forced(best).expect("available() kinds are constructible")
+    }
+
+    /// The dispatch path this kernel resolves to.
+    pub fn kind(&self) -> KernelKind {
+        self.kind
+    }
+
+    /// Fused 4-row widening MAC over one output row: for `i in 0..n`
+    /// (`n = acc.len()`), `acc[i] += v[0]*w[i] + v[1]*w[n+i] +
+    /// v[2]*w[2n+i] + v[3]*w[3n+i]`. `w` must hold exactly the four
+    /// consecutive coefficient rows (`w.len() == 4 * acc.len()`).
+    #[inline(always)]
+    pub fn mac4(&self, acc: &mut [i32], w: &[i16], v: [i16; 4]) {
+        debug_assert_eq!(w.len(), 4 * acc.len());
+        // SAFETY: the constructors only hand out pointers to paths whose
+        // CPU features were runtime-verified; slice lengths are checked
+        // by the caller contract above.
+        unsafe { (self.mac4)(acc, w, v) }
+    }
+
+    /// Single-row widening MAC: `acc[i] += v * w[i]`.
+    #[inline(always)]
+    pub fn axpy(&self, acc: &mut [i32], w: &[i16], v: i16) {
+        debug_assert_eq!(w.len(), acc.len());
+        // SAFETY: as in `mac4`.
+        unsafe { (self.axpy)(acc, w, v) }
+    }
+}
+
+impl Default for Kernel {
+    fn default() -> Self {
+        Self::dispatch()
+    }
+}
+
+/// Portable reference implementations — the bit-exactness oracle for
+/// every vector path and the dispatch fallback. Written exactly like the
+/// pre-kernel inner loops in `plan.rs` so LLVM's autovectorization keeps
+/// the PR-6 baseline performance on machines with no compiled SIMD path.
+mod scalar {
+    /// See [`Kernel::mac4`](super::Kernel::mac4).
+    pub(super) unsafe fn mac4(acc: &mut [i32], w: &[i16], v: [i16; 4]) {
+        let n = acc.len();
+        let (v0, v1, v2, v3) = (v[0] as i32, v[1] as i32, v[2] as i32, v[3] as i32);
+        let (w0, rest) = w.split_at(n);
+        let (w1, rest) = rest.split_at(n);
+        let (w2, w3) = rest.split_at(n);
+        for ((((a, &x0), &x1), &x2), &x3) in acc.iter_mut().zip(w0).zip(w1).zip(w2).zip(w3) {
+            *a += v0 * x0 as i32 + v1 * x1 as i32 + v2 * x2 as i32 + v3 * x3 as i32;
+        }
+    }
+
+    /// See [`Kernel::axpy`](super::Kernel::axpy).
+    pub(super) unsafe fn axpy(acc: &mut [i32], w: &[i16], v: i16) {
+        let v = v as i32;
+        for (a, &x) in acc.iter_mut().zip(w) {
+            *a += v * x as i32;
+        }
+    }
+}
+
+/// x86_64 vector paths. AVX2 uses `_mm256_madd_epi16` pair-MACs for the
+/// fused 4-row kernel (two coefficient rows interleave into one madd)
+/// and `_mm256_cvtepi16_epi32` + `_mm256_mullo_epi32` widening for axpy;
+/// AVX-512 (behind the `avx512` feature — stable intrinsics need
+/// rustc >= 1.89) is the same widening scheme at 512-bit width.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod x86 {
+    #[cfg(target_arch = "x86_64")]
+    use std::arch::x86_64::*;
+
+    /// AVX2 fused 4-row MAC. Vector body covers 16 outputs per
+    /// iteration; the tail falls back to the scalar reference (remainder
+    /// lanes are covered by `tests/kernels.rs`).
+    ///
+    /// The madd trick: `unpacklo/hi_epi16(w0, w1)` interleaves two
+    /// coefficient rows into `(w0[i], w1[i])` i16 pairs;
+    /// `_mm256_madd_epi16` with the broadcast pair `(v0, v1)` then
+    /// yields exact i32 `v0*w0[i] + v1*w1[i]` per lane (saturation is
+    /// impossible: |v| <= 255, |w| <= 127). Unpack works per 128-bit
+    /// lane, so the two madd results come out in lane-crossed order
+    /// ([0-3 | 8-11] and [4-7 | 12-15]); `permute2x128` restores
+    /// canonical order before accumulating.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn mac4_avx2(acc: &mut [i32], w: &[i16], v: [i16; 4]) {
+        let n = acc.len();
+        let vv01 = _mm256_set1_epi32(((v[1] as i32) << 16) | (v[0] as u16 as i32));
+        let vv23 = _mm256_set1_epi32(((v[3] as i32) << 16) | (v[2] as u16 as i32));
+        let wp = w.as_ptr();
+        let ap = acc.as_mut_ptr();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let w0 = _mm256_loadu_si256(wp.add(i) as *const __m256i);
+            let w1 = _mm256_loadu_si256(wp.add(n + i) as *const __m256i);
+            let w2 = _mm256_loadu_si256(wp.add(2 * n + i) as *const __m256i);
+            let w3 = _mm256_loadu_si256(wp.add(3 * n + i) as *const __m256i);
+            let s_lo = _mm256_madd_epi16(_mm256_unpacklo_epi16(w0, w1), vv01);
+            let s_hi = _mm256_madd_epi16(_mm256_unpackhi_epi16(w0, w1), vv01);
+            let t_lo = _mm256_madd_epi16(_mm256_unpacklo_epi16(w2, w3), vv23);
+            let t_hi = _mm256_madd_epi16(_mm256_unpackhi_epi16(w2, w3), vv23);
+            let sum_lo = _mm256_add_epi32(s_lo, t_lo); // [0-3 | 8-11]
+            let sum_hi = _mm256_add_epi32(s_hi, t_hi); // [4-7 | 12-15]
+            let first = _mm256_permute2x128_si256(sum_lo, sum_hi, 0x20); // [0-7]
+            let second = _mm256_permute2x128_si256(sum_lo, sum_hi, 0x31); // [8-15]
+            let a0 = _mm256_loadu_si256(ap.add(i) as *const __m256i);
+            let a1 = _mm256_loadu_si256(ap.add(i + 8) as *const __m256i);
+            _mm256_storeu_si256(ap.add(i) as *mut __m256i, _mm256_add_epi32(a0, first));
+            _mm256_storeu_si256(ap.add(i + 8) as *mut __m256i, _mm256_add_epi32(a1, second));
+            i += 16;
+        }
+        if i < n {
+            tail_mac4(&mut acc[i..], w, n, i, v);
+        }
+    }
+
+    /// AVX2 single-row MAC: widen 8 i16 weights to i32
+    /// (`cvtepi16_epi32`), multiply by the broadcast value
+    /// (`mullo_epi32` — exact, products fit in 24 bits), accumulate.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn axpy_avx2(acc: &mut [i32], w: &[i16], v: i16) {
+        let n = acc.len();
+        let vv = _mm256_set1_epi32(v as i32);
+        let wp = w.as_ptr();
+        let ap = acc.as_mut_ptr();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let w32 = _mm256_cvtepi16_epi32(_mm_loadu_si128(wp.add(i) as *const __m128i));
+            let prod = _mm256_mullo_epi32(w32, vv);
+            let a = _mm256_loadu_si256(ap.add(i) as *const __m256i);
+            _mm256_storeu_si256(ap.add(i) as *mut __m256i, _mm256_add_epi32(a, prod));
+            i += 8;
+        }
+        while i < n {
+            acc[i] += v as i32 * w[i] as i32;
+            i += 1;
+        }
+    }
+
+    /// Scalar tail for the fused 4-row kernels: finishes outputs
+    /// `[done..n)` given the full 4-row `w` (row stride `n`).
+    #[inline]
+    fn tail_mac4(acc_tail: &mut [i32], w: &[i16], n: usize, done: usize, v: [i16; 4]) {
+        let (v0, v1, v2, v3) = (v[0] as i32, v[1] as i32, v[2] as i32, v[3] as i32);
+        for (off, a) in acc_tail.iter_mut().enumerate() {
+            let i = done + off;
+            *a += v0 * w[i] as i32
+                + v1 * w[n + i] as i32
+                + v2 * w[2 * n + i] as i32
+                + v3 * w[3 * n + i] as i32;
+        }
+    }
+
+    /// AVX-512F fused 4-row MAC: four widening multiply-accumulates over
+    /// 16 i32 lanes per iteration (`cvtepi16_epi32` from 256-bit i16
+    /// loads, `mullo_epi32` at 512-bit).
+    #[cfg(feature = "avx512")]
+    #[target_feature(enable = "avx512f")]
+    pub(super) unsafe fn mac4_avx512(acc: &mut [i32], w: &[i16], v: [i16; 4]) {
+        let n = acc.len();
+        let vv: [__m512i; 4] = [
+            _mm512_set1_epi32(v[0] as i32),
+            _mm512_set1_epi32(v[1] as i32),
+            _mm512_set1_epi32(v[2] as i32),
+            _mm512_set1_epi32(v[3] as i32),
+        ];
+        let wp = w.as_ptr();
+        let ap = acc.as_mut_ptr();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let mut a = _mm512_loadu_si512(ap.add(i).cast());
+            for (row, vr) in vv.iter().enumerate() {
+                let w32 = _mm512_cvtepi16_epi32(_mm256_loadu_si256(
+                    wp.add(row * n + i) as *const __m256i
+                ));
+                a = _mm512_add_epi32(a, _mm512_mullo_epi32(w32, *vr));
+            }
+            _mm512_storeu_si512(ap.add(i).cast(), a);
+            i += 16;
+        }
+        if i < n {
+            tail_mac4(&mut acc[i..], w, n, i, v);
+        }
+    }
+
+    /// AVX-512F single-row MAC (512-bit version of [`axpy_avx2`]).
+    #[cfg(feature = "avx512")]
+    #[target_feature(enable = "avx512f")]
+    pub(super) unsafe fn axpy_avx512(acc: &mut [i32], w: &[i16], v: i16) {
+        let n = acc.len();
+        let vv = _mm512_set1_epi32(v as i32);
+        let wp = w.as_ptr();
+        let ap = acc.as_mut_ptr();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let w32 = _mm512_cvtepi16_epi32(_mm256_loadu_si256(wp.add(i) as *const __m256i));
+            let a = _mm512_loadu_si512(ap.add(i).cast());
+            _mm512_storeu_si512(ap.add(i).cast(), _mm512_add_epi32(a, _mm512_mullo_epi32(w32, vv)));
+            i += 16;
+        }
+        while i < n {
+            acc[i] += v as i32 * w[i] as i32;
+            i += 1;
+        }
+    }
+}
+
+/// aarch64 NEON paths: `vmlal_s16` widening multiply-accumulate (the
+/// literal hardware analogue of the paper's i16 MAC lanes), 8 outputs
+/// per iteration across two 128-bit accumulator registers.
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+mod neon {
+    use std::arch::aarch64::*;
+
+    /// NEON fused 4-row MAC.
+    pub(super) unsafe fn mac4_neon(acc: &mut [i32], w: &[i16], v: [i16; 4]) {
+        let n = acc.len();
+        let vd: [int16x4_t; 4] = [
+            vdup_n_s16(v[0]),
+            vdup_n_s16(v[1]),
+            vdup_n_s16(v[2]),
+            vdup_n_s16(v[3]),
+        ];
+        let wp = w.as_ptr();
+        let ap = acc.as_mut_ptr();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let mut lo = vld1q_s32(ap.add(i));
+            let mut hi = vld1q_s32(ap.add(i + 4));
+            for (row, vr) in vd.iter().enumerate() {
+                let wr = vld1q_s16(wp.add(row * n + i));
+                lo = vmlal_s16(lo, vget_low_s16(wr), *vr);
+                hi = vmlal_s16(hi, vget_high_s16(wr), *vr);
+            }
+            vst1q_s32(ap.add(i), lo);
+            vst1q_s32(ap.add(i + 4), hi);
+            i += 8;
+        }
+        while i < n {
+            acc[i] += v[0] as i32 * w[i] as i32
+                + v[1] as i32 * w[n + i] as i32
+                + v[2] as i32 * w[2 * n + i] as i32
+                + v[3] as i32 * w[3 * n + i] as i32;
+            i += 1;
+        }
+    }
+
+    /// NEON single-row MAC.
+    pub(super) unsafe fn axpy_neon(acc: &mut [i32], w: &[i16], v: i16) {
+        let n = acc.len();
+        let vd = vdup_n_s16(v);
+        let wp = w.as_ptr();
+        let ap = acc.as_mut_ptr();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let wr = vld1q_s16(wp.add(i));
+            let lo = vmlal_s16(vld1q_s32(ap.add(i)), vget_low_s16(wr), vd);
+            let hi = vmlal_s16(vld1q_s32(ap.add(i + 4)), vget_high_s16(wr), vd);
+            vst1q_s32(ap.add(i), lo);
+            vst1q_s32(ap.add(i + 4), hi);
+            i += 8;
+        }
+        while i < n {
+            acc[i] += v as i32 * w[i] as i32;
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{check, Rng};
+
+    /// Scalar oracles computed independently of the kernel plumbing.
+    fn want_mac4(acc: &[i32], w: &[i16], v: [i16; 4]) -> Vec<i32> {
+        let n = acc.len();
+        (0..n)
+            .map(|i| {
+                acc[i]
+                    + v[0] as i32 * w[i] as i32
+                    + v[1] as i32 * w[n + i] as i32
+                    + v[2] as i32 * w[2 * n + i] as i32
+                    + v[3] as i32 * w[3 * n + i] as i32
+            })
+            .collect()
+    }
+
+    fn want_axpy(acc: &[i32], w: &[i16], v: i16) -> Vec<i32> {
+        acc.iter().zip(w).map(|(&a, &x)| a + v as i32 * x as i32).collect()
+    }
+
+    #[test]
+    fn dispatch_always_resolves() {
+        let k = Kernel::dispatch();
+        assert!(Kernel::available().contains(&k.kind()));
+        // scalar is always the last resort
+        assert_eq!(*Kernel::available().last().unwrap(), KernelKind::Scalar);
+    }
+
+    #[test]
+    fn kind_names_round_trip() {
+        for kind in
+            [KernelKind::Scalar, KernelKind::Avx2, KernelKind::Avx512, KernelKind::Neon]
+        {
+            assert_eq!(KernelKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(KernelKind::parse("AVX2"), Some(KernelKind::Avx2));
+        assert_eq!(KernelKind::parse("sse9"), None);
+    }
+
+    #[test]
+    fn forced_scalar_always_available() {
+        assert_eq!(Kernel::forced(KernelKind::Scalar).unwrap().kind(), KernelKind::Scalar);
+    }
+
+    #[test]
+    fn every_available_kernel_matches_oracle() {
+        // random row widths crossing every vector width and remainder
+        // (1..50 covers 8/16-lane bodies plus 1..15-lane tails)
+        check(60, 4242, |rng: &mut Rng| {
+            let n = 1 + rng.below(50);
+            let acc0: Vec<i32> = (0..n).map(|_| rng.range_i64(-1 << 20, 1 << 20) as i32).collect();
+            let w4: Vec<i16> = (0..4 * n).map(|_| rng.range_i64(-127, 128) as i16).collect();
+            let v4 = [
+                rng.below(256) as i16,
+                rng.below(256) as i16,
+                rng.below(256) as i16,
+                rng.below(256) as i16,
+            ];
+            let v1 = rng.below(256) as i16;
+            let m_want = want_mac4(&acc0, &w4, v4);
+            let a_want = want_axpy(&acc0, &w4[..n], v1);
+            for kind in Kernel::available() {
+                let k = Kernel::forced(kind).unwrap();
+                let mut acc = acc0.clone();
+                k.mac4(&mut acc, &w4, v4);
+                assert_eq!(acc, m_want, "mac4 {kind} n={n}");
+                let mut acc = acc0.clone();
+                k.axpy(&mut acc, &w4[..n], v1);
+                assert_eq!(acc, a_want, "axpy {kind} n={n}");
+            }
+        });
+    }
+
+    #[test]
+    fn accumulation_is_additive_across_calls() {
+        // kernels accumulate (never overwrite): two calls == sum of both
+        let n = 19usize;
+        let w: Vec<i16> = (0..4 * n).map(|i| (i as i16 % 251) - 125).collect();
+        for kind in Kernel::available() {
+            let k = Kernel::forced(kind).unwrap();
+            let mut acc = vec![0i32; n];
+            k.mac4(&mut acc, &w, [1, 2, 3, 4]);
+            k.axpy(&mut acc, &w[..n], 7);
+            let mut want = want_mac4(&vec![0; n], &w, [1, 2, 3, 4]);
+            want = want_axpy(&want, &w[..n], 7);
+            assert_eq!(acc, want, "{kind}");
+        }
+    }
+}

@@ -8,9 +8,11 @@
 //! vectors must replay *exactly* (integration tests in `rust/tests/`).
 
 pub mod engine;
+pub mod kernel;
 pub mod model;
 pub mod plan;
 
 pub use engine::Engine;
+pub use kernel::{Kernel, KernelKind};
 pub use model::{LayerParams, QuantizedModel};
 pub use plan::{ExecutionPlan, LayerPlan, Scratch};

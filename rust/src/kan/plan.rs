@@ -1,24 +1,43 @@
 //! Compile/execute split for the integer engine: everything the PE
 //! datapath resolves at configuration time — LUT ROMs, N:M window widths,
-//! widened MAC tables, requant multipliers, buffer sizes — is compiled
-//! *once* into an [`ExecutionPlan`]; steady-state inference then runs the
-//! plan against a worker-owned [`Scratch`] arena with **zero heap
-//! allocations** (asserted by `tests/zero_alloc.rs`), the software mirror
-//! of systolic execution where no state is re-derived per activation
-//! stream (paper Sec. IV).
+//! widened MAC tables, requant multipliers, buffer sizes, the SIMD
+//! kernel, the batch blocking — is compiled *once* into an
+//! [`ExecutionPlan`]; steady-state inference then runs the plan against a
+//! worker-owned [`Scratch`] arena with **zero heap allocations**
+//! (asserted by `tests/zero_alloc.rs`), the software mirror of systolic
+//! execution where no state is re-derived per activation stream (paper
+//! Sec. IV).
+//!
+//! Three compile-time resolutions feed the hot path (see
+//! EXPERIMENTS.md §Perf):
+//!
+//! * **Kernel dispatch** ([`super::kernel`]): the i16 -> i32 MAC inner
+//!   loops run through per-arch SIMD implementations selected once by
+//!   runtime CPU-feature detection (`KANSAS_FORCE_KERNEL` pins a path);
+//! * **Fused requantize**: non-final layers combine the two accumulators
+//!   with the fixed-point multipliers and requantize to uint8 in ONE
+//!   pass ([`LayerPlan::forward_requant_into`]) — the i64 `t` buffer is
+//!   materialized only for the final layer's logits;
+//! * **Batch-block autotuning**: the batch blocking `bb` is measured per
+//!   layer at plan compile (candidates timed on synthetic rows) and the
+//!   winner cached process-wide per `(in_dim, out_dim, G, P, kernel)`
+//!   shape, so compiling a replica of an already-seen shape is free.
 //!
 //! The split is bit-exact: a plan executes the same integer arithmetic as
-//! the pre-plan engine, so the golden replay vectors are byte-identical.
+//! the pre-plan engine on every kernel path and blocking, so the golden
+//! replay vectors are byte-identical.
 
 use crate::bspline::BsplineUnit;
 use crate::quant;
 
+use super::kernel::{Kernel, KernelKind};
 use super::model::{LayerParams, QuantizedModel};
 
 /// One layer, fully resolved for execution: the prebuilt B-spline unit,
 /// i16-widened coefficient/base tables (sign-extended int8 — the widening
-/// lets LLVM vectorize the i16 -> i32 MAC loops ~1.7x better, see
-/// EXPERIMENTS.md §Perf), dims, degree window, and requant multipliers.
+/// feeds the SIMD kernels' 16-bit multiplier lanes, see EXPERIMENTS.md
+/// §Perf), dims, degree window, requant multipliers, the resolved MAC
+/// kernel, and the autotuned batch block.
 #[derive(Clone, Debug)]
 pub struct LayerPlan {
     pub in_dim: usize,
@@ -39,11 +58,31 @@ pub struct LayerPlan {
     pub base16: Vec<i16>,
     pub m1: i64,
     pub m2: i64,
+    /// Resolved MAC kernel (cached function pointers; see
+    /// [`super::kernel`]). Shared by all layers of one plan.
+    pub kernel: Kernel,
+    /// Batch block: rows per blocking step of the feature-major loop
+    /// (autotuned at compile; `KANSAS_BB` overrides, `KANSAS_AUTOTUNE=0`
+    /// pins the default).
+    pub bb: usize,
 }
 
+/// The blocking used before autotuning existed (PR 2-6), and the value
+/// autotune falls back to for shapes too small to time meaningfully.
+pub const DEFAULT_BB: usize = 16;
+
 impl LayerPlan {
+    /// Compile with the runtime-dispatched kernel (see
+    /// [`Kernel::dispatch`]).
     pub fn compile(l: &LayerParams) -> Self {
-        Self {
+        Self::compile_with(l, Kernel::dispatch())
+    }
+
+    /// Compile for a specific kernel — the entry point benches and the
+    /// differential kernel tests use to pin a path without touching the
+    /// process environment.
+    pub fn compile_with(l: &LayerParams, kernel: Kernel) -> Self {
+        let mut lp = Self {
             in_dim: l.in_dim,
             out_dim: l.out_dim,
             grid: l.grid,
@@ -54,7 +93,11 @@ impl LayerPlan {
             base16: l.base.data().iter().map(|&w| w as i16).collect(),
             m1: l.m1,
             m2: l.m2,
-        }
+            kernel,
+            bb: DEFAULT_BB,
+        };
+        lp.bb = autotune::best_bb(&lp);
+        lp
     }
 
     /// Bytes of derived (widened) tables this plan layer adds on top of
@@ -63,37 +106,39 @@ impl LayerPlan {
         (self.coeff16.len() + self.base16.len()) * 2
     }
 
-    /// Forward one layer into caller-provided buffers: uint8 activations
-    /// `(BS, K)` -> i64 accumulators `t (BS, N)`. Allocation-free.
+    /// Steps 1-3 of the layer forward (B-spline unit, N:M spline MACs,
+    /// base path) at an explicit batch block, leaving the two i32
+    /// accumulators filled. Shared by both combine variants below and by
+    /// the autotuner (which times candidate blockings through it).
     ///
     /// Hot-path layout (see EXPERIMENTS.md §Perf): *feature-major* — the
     /// outer loop walks input features so each feature's `M x N` int8
     /// coefficient block (832 B for MNIST-KAN layer 1) stays in L1 while
     /// every batch row consumes it, instead of streaming the full 650 KB
     /// coefficient tensor once per row. This mirrors the accelerator's
-    /// weight-stationary reuse, which is why it wins.
-    pub fn forward_into(
+    /// weight-stationary reuse, which is why it wins. Batch blocking
+    /// keeps the active accumulator slice L1-resident while a feature's
+    /// coefficient block streams through.
+    fn accumulate_with_bb(
         &self,
+        bb: usize,
         x_q: &[u8],
         bs: usize,
         acc: &mut [i32],
         acc_base: &mut [i32],
-        t: &mut [i64],
     ) {
-        let (kdim, n, p, m) = (self.in_dim, self.out_dim, self.degree, self.num_bases);
+        let (kdim, n, p) = (self.in_dim, self.out_dim, self.degree);
+        let m = self.num_bases;
         debug_assert_eq!(x_q.len(), bs * kdim);
         debug_assert_eq!(acc.len(), bs * n);
         debug_assert_eq!(acc_base.len(), bs * n);
-        debug_assert_eq!(t.len(), bs * n);
+        debug_assert!(bb >= 1);
         acc.fill(0);
         acc_base.fill(0);
         let (coeff, base) = (self.coeff16.as_slice(), self.base16.as_slice());
-        // batch blocking: keep the active accumulator slice L1-resident
-        // while a feature's coefficient block streams through (measured
-        // ~17% over unblocked feature-major; EXPERIMENTS.md §Perf)
-        const BB: usize = 16;
-        for b0 in (0..bs).step_by(BB) {
-            let bl = BB.min(bs - b0);
+        let kernel = self.kernel;
+        for b0 in (0..bs).step_by(bb) {
+            let bl = bb.min(bs - b0);
             for feat in 0..kdim {
                 let crow = &coeff[feat * m * n..(feat + 1) * m * n];
                 let brow = &base[feat * n..(feat + 1) * n];
@@ -106,49 +151,159 @@ impl LayerPlan {
                     let arow = &mut acc[b * n..(b + 1) * n];
                     let wbase = (k - p) * n;
                     if p == 3 {
-                        // fused 4-row vector MAC (one accumulator pass instead
-                        // of four): the software mirror of the 4-lane PE
-                        let (v0, v1, v2, v3) =
-                            (vals[0] as i32, vals[1] as i32, vals[2] as i32, vals[3] as i32);
-                        let w = &crow[wbase..wbase + 4 * n];
-                        let (w0, rest) = w.split_at(n);
-                        let (w1, rest) = rest.split_at(n);
-                        let (w2, w3) = rest.split_at(n);
-                        for ((((a, &x0), &x1), &x2), &x3) in
-                            arow.iter_mut().zip(w0).zip(w1).zip(w2).zip(w3)
-                        {
-                            *a += v0 * x0 as i32
-                                + v1 * x1 as i32
-                                + v2 * x2 as i32
-                                + v3 * x3 as i32;
-                        }
+                        // fused 4-row vector MAC (one accumulator pass
+                        // instead of four): the software mirror of the
+                        // 4-lane PE, dispatched to the SIMD kernel
+                        let v = [vals[0] as i16, vals[1] as i16, vals[2] as i16, vals[3] as i16];
+                        kernel.mac4(arow, &crow[wbase..wbase + 4 * n], v);
                     } else {
                         for (j, &v) in vals.iter().enumerate() {
                             if v == 0 {
                                 continue;
                             }
-                            let v = v as i32;
                             let wrow = &crow[wbase + j * n..wbase + (j + 1) * n];
-                            for (a, &w) in arow.iter_mut().zip(wrow) {
-                                *a += v * w as i32;
-                            }
+                            kernel.axpy(arow, wrow, v as i16);
                         }
                     }
                     // 3. base path (integer ReLU)
-                    let r = quant::relu_q(xq) as i32;
+                    let r = quant::relu_q(xq);
                     if r != 0 {
-                        let arow = &mut acc_base[b * n..(b + 1) * n];
-                        for (a, &w) in arow.iter_mut().zip(brow) {
-                            *a += r * w as i32;
-                        }
+                        kernel.axpy(&mut acc_base[b * n..(b + 1) * n], brow, r as i16);
                     }
                 }
             }
         }
+    }
+
+    /// Forward one layer into caller-provided buffers: uint8 activations
+    /// `(BS, K)` -> i64 accumulators `t (BS, N)`. Allocation-free. This
+    /// is the *final-layer* (and debug/per-layer) entry point — the
+    /// inter-layer path uses [`LayerPlan::forward_requant_into`], which
+    /// never materializes `t`.
+    pub fn forward_into(
+        &self,
+        x_q: &[u8],
+        bs: usize,
+        acc: &mut [i32],
+        acc_base: &mut [i32],
+        t: &mut [i64],
+    ) {
+        debug_assert_eq!(t.len(), bs * self.out_dim);
+        self.accumulate_with_bb(self.bb, x_q, bs, acc, acc_base);
         // 4. combine with the fixed-point multipliers
         for ((tt, &a1), &a2) in t.iter_mut().zip(acc.iter()).zip(acc_base.iter()) {
-            *tt = a1 as i64 * self.m1 + a2 as i64 * self.m2;
+            *tt = quant::combine(a1, a2, self.m1, self.m2);
         }
+    }
+
+    /// Forward one layer with the requantize FUSED into the combine
+    /// loop: uint8 activations `(BS, K)` -> next-layer uint8 activations
+    /// `(BS, N)`, in one pass over the accumulators. The separate i64
+    /// `t` buffer (and its second memory pass) exists only for the final
+    /// layer's logits. Bit-exact with `forward_into` + `requantize` by
+    /// construction — the fused loop evaluates the identical expression
+    /// per element (see `quant::requantize_combined`).
+    pub fn forward_requant_into(
+        &self,
+        x_q: &[u8],
+        bs: usize,
+        acc: &mut [i32],
+        acc_base: &mut [i32],
+        out: &mut [u8],
+    ) {
+        debug_assert_eq!(out.len(), bs * self.out_dim);
+        self.accumulate_with_bb(self.bb, x_q, bs, acc, acc_base);
+        // 4+5. combine and requantize, fused
+        for ((o, &a1), &a2) in out.iter_mut().zip(acc.iter()).zip(acc_base.iter()) {
+            *o = quant::requantize_combined(a1, a2, self.m1, self.m2);
+        }
+    }
+}
+
+/// Per-layer batch-block autotuning: time 2-3 candidate blockings at
+/// plan compile on synthetic rows, cache the winner process-wide per
+/// `(in_dim, out_dim, G, P, kernel)` shape. Replicas (`Engine::clone`)
+/// share the compiled plan outright; this cache additionally makes
+/// *recompiles* of an already-seen shape (`Engine::from_shared` on
+/// another model of the same architecture, test suites, churn re-adds)
+/// skip the measurement entirely. The choice only affects speed — every
+/// blocking is bit-exact — so timing noise can never corrupt results.
+mod autotune {
+    use std::collections::HashMap;
+    use std::sync::{Mutex, OnceLock};
+    use std::time::Instant;
+
+    use super::{KernelKind, LayerPlan, DEFAULT_BB};
+
+    /// Candidate blockings. 16 is the measured pre-autotune default;
+    /// 8 wins for wide accumulator rows (less L1 pressure per block),
+    /// 32 for narrow ones (more coefficient reuse per feature pass).
+    const CANDIDATES: [usize; 3] = [8, 16, 32];
+    /// Rows used for the timing runs — two blocks of the largest
+    /// candidate, so every candidate executes its steady-state shape.
+    const TUNE_BS: usize = 2 * 32;
+    /// Shapes whose per-forward MAC count is below this aren't worth
+    /// timing (noise exceeds the win); they take the default. Also keeps
+    /// plan compiles in shape-heavy test suites effectively free.
+    const MIN_TUNE_MACS: usize = 1 << 14;
+
+    type ShapeKey = (usize, usize, usize, usize, KernelKind);
+
+    fn cache() -> &'static Mutex<HashMap<ShapeKey, usize>> {
+        static CACHE: OnceLock<Mutex<HashMap<ShapeKey, usize>>> = OnceLock::new();
+        CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+    }
+
+    /// Resolve the batch block for `lp`: env override, then cache, then
+    /// measurement.
+    pub(super) fn best_bb(lp: &LayerPlan) -> usize {
+        if let Ok(v) = std::env::var("KANSAS_BB") {
+            if let Ok(bb) = v.trim().parse::<usize>() {
+                return bb.max(1);
+            }
+            eprintln!("KANSAS_BB={v}: not a positive integer, ignoring");
+        }
+        if matches!(std::env::var("KANSAS_AUTOTUNE").as_deref(), Ok("0") | Ok("off")) {
+            return DEFAULT_BB;
+        }
+        let work = lp.in_dim * lp.out_dim * (lp.degree + 1);
+        if work < MIN_TUNE_MACS {
+            return DEFAULT_BB;
+        }
+        let key: ShapeKey = (lp.in_dim, lp.out_dim, lp.grid, lp.degree, lp.kernel.kind());
+        if let Some(&bb) = cache().lock().unwrap().get(&key) {
+            return bb;
+        }
+        let bb = measure(lp);
+        cache().lock().unwrap().insert(key, bb);
+        bb
+    }
+
+    /// Time each candidate (one warmup + best-of-2 timed reps of a
+    /// `TUNE_BS`-row accumulate) and return the fastest. Compile-time
+    /// only — the buffers allocated here never touch the serving path.
+    fn measure(lp: &LayerPlan) -> usize {
+        let n = lp.out_dim;
+        let x_q: Vec<u8> = (0..TUNE_BS * lp.in_dim)
+            .map(|i| (i.wrapping_mul(131) % 256) as u8)
+            .collect();
+        let mut acc = vec![0i32; TUNE_BS * n];
+        let mut acc_base = vec![0i32; TUNE_BS * n];
+        let mut best = (DEFAULT_BB, std::time::Duration::MAX);
+        for &bb in &CANDIDATES {
+            lp.accumulate_with_bb(bb, &x_q, TUNE_BS, &mut acc, &mut acc_base); // warmup
+            let mut fastest = std::time::Duration::MAX;
+            for _ in 0..2 {
+                let t0 = Instant::now();
+                lp.accumulate_with_bb(bb, &x_q, TUNE_BS, &mut acc, &mut acc_base);
+                fastest = fastest.min(t0.elapsed());
+            }
+            std::hint::black_box(&acc);
+            if fastest < best.1 {
+                best = (bb, fastest);
+            }
+        }
+        best.0
     }
 }
 
@@ -162,7 +317,7 @@ pub struct ExecutionPlan {
     in_dim: usize,
     out_dim: usize,
     /// Widest accumulator row (max out_dim over layers) — sizes
-    /// `Scratch::{acc, acc_base, t}` per batch row.
+    /// `Scratch::{acc, acc_base}` per batch row.
     max_out: usize,
     /// Widest requantized activation row (max out_dim over *non-last*
     /// layers) — sizes the ping-pong activation buffers per batch row.
@@ -170,9 +325,18 @@ pub struct ExecutionPlan {
 }
 
 impl ExecutionPlan {
+    /// Compile with the runtime-dispatched MAC kernel (honors
+    /// `KANSAS_FORCE_KERNEL`; see [`Kernel::dispatch`]).
     pub fn compile(model: &QuantizedModel) -> Self {
+        Self::compile_with(model, Kernel::dispatch())
+    }
+
+    /// Compile against an explicit kernel — used by benches (scalar
+    /// baseline rows) and the differential kernel tests.
+    pub fn compile_with(model: &QuantizedModel, kernel: Kernel) -> Self {
         assert!(!model.layers.is_empty(), "plan needs at least one layer");
-        let layers: Vec<LayerPlan> = model.layers.iter().map(LayerPlan::compile).collect();
+        let layers: Vec<LayerPlan> =
+            model.layers.iter().map(|l| LayerPlan::compile_with(l, kernel)).collect();
         let max_out = layers.iter().map(|l| l.out_dim).max().unwrap_or(0);
         let n = layers.len();
         let max_act = layers[..n - 1].iter().map(|l| l.out_dim).max().unwrap_or(0);
@@ -185,6 +349,19 @@ impl ExecutionPlan {
 
     pub fn out_dim(&self) -> usize {
         self.out_dim
+    }
+
+    /// The MAC kernel this plan executes with (resolved once at
+    /// compile; every layer shares it).
+    pub fn kernel_kind(&self) -> KernelKind {
+        self.layers[0].kernel.kind()
+    }
+
+    /// The autotuned batch block of each layer, in layer order — the
+    /// perf-report companion of [`ExecutionPlan::kernel_kind`]
+    /// (`BENCH_engine.json` rows, `kansas serve` startup).
+    pub fn batch_blocks(&self) -> Vec<usize> {
+        self.layers.iter().map(|l| l.bb).collect()
     }
 
     /// Bytes of derived per-layer tables (the plan's storage on top of
@@ -205,8 +382,8 @@ impl ExecutionPlan {
 
     /// Execute on inputs previously gathered into the scratch's staging
     /// buffer (see [`Scratch::stage_input`]) — the serving-pool path,
-    /// where workers gather request rows straight into staging instead of
-    /// building a batch `Vec` per dispatch.
+    /// where workers gather request rows straight into scratch staging
+    /// instead of building a batch `Vec` per dispatch.
     pub fn execute_staged<'s>(&self, bs: usize, scratch: &'s mut Scratch) -> &'s [i64] {
         debug_assert_eq!(scratch.staging.len(), bs * self.in_dim);
         scratch.ensure(self, bs);
@@ -230,12 +407,26 @@ impl ExecutionPlan {
             } else {
                 &prev[..bs * k]
             };
-            lp.forward_into(x, bs, &mut acc[..bs * n], &mut acc_base[..bs * n], &mut t[..bs * n]);
             if i + 1 < n_layers {
-                for (d, &v) in cur[..bs * n].iter_mut().zip(t[..bs * n].iter()) {
-                    *d = quant::requantize(v);
-                }
+                // inter-layer: fused combine + requantize straight into
+                // the next activation buffer — no i64 `t` materialized
+                lp.forward_requant_into(
+                    x,
+                    bs,
+                    &mut acc[..bs * n],
+                    &mut acc_base[..bs * n],
+                    &mut cur[..bs * n],
+                );
                 std::mem::swap(&mut prev, &mut cur);
+            } else {
+                // final layer: the i64 accumulators ARE the output
+                lp.forward_into(
+                    x,
+                    bs,
+                    &mut acc[..bs * n],
+                    &mut acc_base[..bs * n],
+                    &mut t[..bs * n],
+                );
             }
         }
         &t[..bs * self.out_dim]
@@ -257,7 +448,9 @@ pub struct Scratch {
     acc: Vec<i32>,
     /// Base-path i32 accumulators, `bs * max_out`.
     acc_base: Vec<i32>,
-    /// Final-layer i64 accumulators (the forward's output), `bs * max_out`.
+    /// Final-layer i64 accumulators (the forward's output),
+    /// `bs * out_dim`. Since the requantize fusion, only the LAST
+    /// layer's logits land here — inter-layer values never exist as i64.
     t: Vec<i64>,
     /// Ping-pong buffers for requantized inter-layer activations.
     act: [Vec<u8>; 2],
@@ -301,8 +494,12 @@ impl Scratch {
         if self.acc_base.len() < n {
             self.acc_base.resize(n, 0);
         }
-        if self.t.len() < n {
-            self.t.resize(n, 0);
+        // `t` only ever holds the final layer's logits (the fused
+        // requantize keeps inter-layer i64 values out of memory), so it
+        // is sized by out_dim, not max_out
+        let tn = bs * plan.out_dim;
+        if self.t.len() < tn {
+            self.t.resize(tn, 0);
         }
         let a = bs * plan.max_act;
         for buf in &mut self.act {
@@ -354,6 +551,9 @@ mod tests {
         assert_eq!(plan.out_dim(), 3);
         assert_eq!(plan.max_out, 9);
         assert_eq!(plan.max_act, 9, "last layer's width never hits the act buffers");
+        assert!(Kernel::available().contains(&plan.kernel_kind()));
+        assert_eq!(plan.batch_blocks().len(), 3);
+        assert!(plan.batch_blocks().iter().all(|&bb| bb >= 1));
         for (lp, l) in plan.layers.iter().zip(&m.layers) {
             assert_eq!(lp.num_bases, l.num_bases());
             assert_eq!(lp.coeff16.len(), l.coeff.len());
@@ -380,6 +580,79 @@ mod tests {
         // staged path too
         sized.stage_input(x_q.len()).extend_from_slice(&x_q);
         assert_eq!(plan.execute_staged(2, &mut sized), &want[..]);
+    }
+
+    #[test]
+    fn fused_requant_matches_per_layer_chain() {
+        // the fused inter-layer path must byte-match the unfused chain
+        // (forward_into + separate requantize pass) on every layer
+        let m = model();
+        let plan = ExecutionPlan::compile(&m);
+        let bs = 5usize;
+        let x_q: Vec<u8> = (0..bs * 6).map(|i| (i * 53 % 256) as u8).collect();
+        // unfused reference chain over plain buffers
+        let mut cur = x_q.clone();
+        let mut want_t = Vec::new();
+        for lp in &plan.layers {
+            let n = lp.out_dim;
+            let mut acc = vec![0i32; bs * n];
+            let mut acc_base = vec![0i32; bs * n];
+            let mut t = vec![0i64; bs * n];
+            lp.forward_into(&cur, bs, &mut acc, &mut acc_base, &mut t);
+            // and the fused variant must agree at this very layer
+            let mut fused = vec![0u8; bs * n];
+            let mut acc2 = vec![0i32; bs * n];
+            let mut acc_base2 = vec![0i32; bs * n];
+            lp.forward_requant_into(&cur, bs, &mut acc2, &mut acc_base2, &mut fused);
+            let unfused: Vec<u8> = t.iter().map(|&v| quant::requantize(v)).collect();
+            assert_eq!(fused, unfused, "fused requantize diverged");
+            cur = unfused;
+            want_t = t;
+        }
+        let mut s = Scratch::new();
+        assert_eq!(plan.execute(&x_q, bs, &mut s), &want_t[..]);
+    }
+
+    #[test]
+    fn bb_candidates_are_bit_exact() {
+        // blocking is a pure scheduling choice: every bb yields the
+        // identical accumulators (so autotune noise can't change results)
+        let m = model();
+        let plan = ExecutionPlan::compile(&m);
+        let lp = &plan.layers[0];
+        let bs = 37usize; // deliberately not a multiple of any candidate
+        let x_q: Vec<u8> = (0..bs * lp.in_dim).map(|i| (i * 91 % 256) as u8).collect();
+        let n = lp.out_dim;
+        let mut want: Option<(Vec<i32>, Vec<i32>)> = None;
+        for bb in [1usize, 3, 8, 16, 32, 64] {
+            let mut acc = vec![0i32; bs * n];
+            let mut acc_base = vec![0i32; bs * n];
+            lp.accumulate_with_bb(bb, &x_q, bs, &mut acc, &mut acc_base);
+            match &want {
+                None => want = Some((acc, acc_base)),
+                Some((wa, wb)) => {
+                    assert_eq!(&acc, wa, "bb={bb} spline accumulators diverge");
+                    assert_eq!(&acc_base, wb, "bb={bb} base accumulators diverge");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compile_with_pins_the_kernel() {
+        let m = model();
+        let scalar = ExecutionPlan::compile_with(&m, Kernel::scalar());
+        assert_eq!(scalar.kernel_kind(), KernelKind::Scalar);
+        let x_q: Vec<u8> = (0..4 * 6).map(|i| (i * 29 % 256) as u8).collect();
+        let mut s1 = Scratch::new();
+        let want = scalar.execute(&x_q, 4, &mut s1).to_vec();
+        // every available kernel reproduces the scalar plan bit for bit
+        for kind in Kernel::available() {
+            let plan = ExecutionPlan::compile_with(&m, Kernel::forced(kind).unwrap());
+            assert_eq!(plan.kernel_kind(), kind);
+            let mut s = Scratch::new();
+            assert_eq!(plan.execute(&x_q, 4, &mut s), &want[..], "kernel {kind}");
+        }
     }
 
     #[test]
@@ -422,5 +695,19 @@ mod tests {
         let t = plan.execute(&[0, 128, 60, 255], 1, &mut s);
         assert_eq!(t.len(), 3);
         assert!(s.act.iter().all(|b| b.is_empty()));
+    }
+
+    #[test]
+    fn kansas_bb_env_is_clamped() {
+        // KANSAS_BB is read per compile; serialize around the env write.
+        // All kernels/blockings are bit-exact, so concurrent tests that
+        // merely compile plans can't be corrupted by this value.
+        std::env::set_var("KANSAS_BB", "0");
+        let plan = ExecutionPlan::compile(&model());
+        assert!(plan.batch_blocks().iter().all(|&bb| bb == 1), "bb=0 must clamp to 1");
+        std::env::set_var("KANSAS_BB", "24");
+        let plan = ExecutionPlan::compile(&model());
+        assert!(plan.batch_blocks().iter().all(|&bb| bb == 24));
+        std::env::remove_var("KANSAS_BB");
     }
 }

@@ -28,16 +28,19 @@
 //! both fairness indices, and the registry epoch. The telemetry spine
 //! surfaces through `--stats-every S` (live windowed per-tenant stats
 //! table), `--telemetry FILE` (streamed TELEMETRY.jsonl: window
-//! snapshots, trace spans, final flight-recorder dump),
-//! `--trace-sample N` (1-in-N full request timelines), and
-//! `--no-telemetry` (the overhead experiment's A-side).
+//! snapshots, trace spans, periodic + final flight-recorder dumps —
+//! `--flight-every S` tunes the dump interval), `--trace-sample N`
+//! (1-in-N full request timelines), and `--no-telemetry` (the overhead
+//! experiment's A-side). Startup also reports the dispatched SIMD MAC
+//! kernel and each model's autotuned batch blocks (see `kan::kernel`),
+//! so serving numbers are attributable to a dispatch path.
 
 use std::fs::File;
 use std::io::Write;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
@@ -48,7 +51,7 @@ use kan_sas::coordinator::{
 };
 use kan_sas::cost::array_area_mm2;
 use kan_sas::experiments;
-use kan_sas::kan::{Engine, QuantizedModel};
+use kan_sas::kan::{Engine, Kernel, QuantizedModel};
 use kan_sas::loadgen::{self, MixEntry, Scenario};
 use kan_sas::report::Table;
 use kan_sas::sim::analytic;
@@ -137,7 +140,7 @@ fn print_help() {
                                --scenario steady|diurnal|flash-crowd|skewed-burst|churn\n\
                                --rate RPS --duration-ms MS]\n\
                               [--stats-every S] [--telemetry FILE]\n\
-                              [--trace-sample N] [--no-telemetry]\n\
+                              [--flight-every S] [--trace-sample N] [--no-telemetry]\n\
          smoke:         quickstart\n\
          \n\
          serve runs the multi-tenant Gateway: one worker fleet + one bounded\n\
@@ -163,10 +166,15 @@ fn print_help() {
          a collector thread): --stats-every S prints a live windowed\n\
          per-tenant stats table every S seconds, --telemetry FILE\n\
          streams TELEMETRY.jsonl (window snapshots, sampled spans, and\n\
-         a final flight-recorder dump), --trace-sample N records a full\n\
-         admission→batch→serve→respond timeline for 1-in-N requests,\n\
-         and --no-telemetry turns the spine off (the A-side of the\n\
-         overhead experiment in EXPERIMENTS.md).\n\
+         flight-recorder dumps — periodic every --flight-every S,\n\
+         default 5, 0 keeps only the shutdown dump), --trace-sample N\n\
+         records a full admission→batch→serve→respond timeline for\n\
+         1-in-N requests, and --no-telemetry turns the spine off (the\n\
+         A-side of the overhead experiment in EXPERIMENTS.md).\n\
+         The MAC hot path dispatches to SIMD kernels at startup (the\n\
+         chosen path and autotuned batch blocks are printed); pin with\n\
+         KANSAS_FORCE_KERNEL=scalar|avx2|avx512|neon, KANSAS_BB=N, or\n\
+         KANSAS_AUTOTUNE=0.\n\
          One model defaults to closed-loop clients; several models (or\n\
          --scenario) drive the open-loop Poisson generator. Replica\n\
          autosizing clamps cores to 8; raise with --max-replicas or\n\
@@ -362,6 +370,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let telemetry_path = args.get("--telemetry").map(PathBuf::from);
     cfg.telemetry.trace_sample = args.parsed("--trace-sample", cfg.telemetry.trace_sample)?;
+    // --flight-every S: interval between flight-recorder dumps on the
+    // JSONL stream (0 disables the periodic dumps; the shutdown dump is
+    // always written). Layered over the config file's flight_every_s.
+    let flight_every: f64 =
+        args.parsed("--flight-every", cfg.telemetry.flight_every.as_secs_f64())?;
+    if !flight_every.is_finite() || flight_every < 0.0 {
+        bail!("--flight-every must be a non-negative number of seconds");
+    }
+    cfg.telemetry.flight_every = Duration::from_micros((flight_every * 1e6) as u64);
     if args.flag("--no-telemetry") {
         cfg.telemetry.enabled = false;
     } else if stats_every > 0.0 || telemetry_path.is_some() || cfg.telemetry.trace_sample > 0 {
@@ -445,6 +462,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.quota,
         total_kib
     );
+    // attribute every serving number to a MAC dispatch path: the
+    // resolved kernel (all plans in one process dispatch identically)
+    // and each model's autotuned per-layer batch blocks
+    let blocks: Vec<String> = specs
+        .iter()
+        .map(|(n, e)| {
+            let bb: Vec<String> =
+                e.plan().batch_blocks().iter().map(|b| b.to_string()).collect();
+            format!("{n}=[{}]", bb.join(","))
+        })
+        .collect();
+    println!(
+        "mac kernel: {} (available: {}); autotuned batch blocks: {}",
+        specs[0].1.plan().kernel_kind(),
+        Kernel::available().iter().map(|k| k.name()).collect::<Vec<_>>().join("|"),
+        blocks.join("  ")
+    );
     let replicas = cfg.replicas;
     let mut builder = GatewayBuilder::with_config(cfg);
     for ((name, engine), &w) in specs.into_iter().zip(&service_weights) {
@@ -471,7 +505,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         } else {
             Duration::from_secs(1)
         };
-        spawn_monitor(Arc::clone(&tel), every, stats_every > 0.0, jsonl_out)
+        let flight_every = tel.config().flight_every;
+        spawn_monitor(Arc::clone(&tel), every, stats_every > 0.0, jsonl_out, flight_every)
     });
 
     let multi = handles.len() > 1;
@@ -664,8 +699,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 /// Background telemetry monitor spawned by `kansas serve`: snapshots the
 /// spine every `tick`, optionally printing the live per-tenant table and
-/// streaming JSONL lines; returns the accumulated trace spans and the
-/// stream file on join.
+/// streaming JSONL lines (with a flight-recorder dump every
+/// `flight_every` so the churn record survives a crash); returns the
+/// accumulated trace spans and the stream file on join.
 struct Monitor {
     stop: Arc<AtomicBool>,
     handle: std::thread::JoinHandle<(Vec<Span>, Option<File>)>,
@@ -676,6 +712,7 @@ fn spawn_monitor(
     tick: Duration,
     print: bool,
     mut out: Option<File>,
+    flight_every: Duration,
 ) -> Monitor {
     let stop = Arc::new(AtomicBool::new(false));
     let flag = Arc::clone(&stop);
@@ -683,6 +720,7 @@ fn spawn_monitor(
         .name("kansas-monitor".into())
         .spawn(move || {
             let mut spans = Vec::new();
+            let mut last_flight = Instant::now();
             loop {
                 // sleep in short slices so shutdown is responsive even
                 // with multi-second --stats-every intervals
@@ -700,6 +738,13 @@ fn spawn_monitor(
                     let _ = writeln!(f, "{}", snap.to_value().render());
                     for s in &snap.spans {
                         let _ = writeln!(f, "{}", s.to_value().render());
+                    }
+                    // periodic flight dump (kind="flight"): the registry
+                    // churn record streams on an interval instead of
+                    // existing only in the single shutdown dump
+                    if !flight_every.is_zero() && last_flight.elapsed() >= flight_every {
+                        let _ = writeln!(f, "{}", tel.flight_dump().to_value().render());
+                        last_flight = Instant::now();
                     }
                 }
                 if print {

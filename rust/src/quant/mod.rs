@@ -64,6 +64,26 @@ pub fn requantize(t: i64) -> u8 {
     (y + ZP).clamp(0, 255) as u8
 }
 
+/// Combine the spline/base i32 accumulators with the per-layer
+/// fixed-point multipliers into the i64 pre-requantization value `t`.
+/// The canonical step-4 expression — `kan::plan` routes both the final
+/// layer's logits and the fused inter-layer path through this so the
+/// two can never drift apart.
+#[inline(always)]
+pub fn combine(acc: i32, acc_base: i32, m1: i64, m2: i64) -> i64 {
+    acc as i64 * m1 + acc_base as i64 * m2
+}
+
+/// Fused combine + requantize: i32 accumulators -> next-layer uint8
+/// activation without materializing the intermediate i64 buffer. By
+/// construction bit-exact with `requantize(combine(..))` — that IS the
+/// body — which is what lets the engine's inter-layer path skip the
+/// separate i64 pass (see `kan::plan::LayerPlan::forward_requant_into`).
+#[inline(always)]
+pub fn requantize_combined(acc: i32, acc_base: i32, m1: i64, m2: i64) -> u8 {
+    requantize(combine(acc, acc_base, m1, m2))
+}
+
 /// Build the per-layer requant multiplier: `round(scale * 128 * 2^SHIFT)`.
 /// (`scale` is the float factor that dequantizes the i32 accumulator.)
 pub fn requant_multiplier(scale: f64) -> i64 {
@@ -128,6 +148,21 @@ mod tests {
         // saturation
         assert_eq!(requantize(1i64 << 62), 255);
         assert_eq!(requantize(-(1i64 << 62)), 0);
+    }
+
+    #[test]
+    fn combine_and_fused_requantize_match_unfused() {
+        // i32 accumulator extremes x multiplier extremes: the fused
+        // helper must equal the two-step chain everywhere
+        check(500, 7, |rng: &mut Rng| {
+            let a1 = rng.range_i64(i32::MIN as i64, i32::MAX as i64) as i32;
+            let a2 = rng.range_i64(i32::MIN as i64, i32::MAX as i64) as i32;
+            let m1 = rng.range_i64(-(1 << 32), 1 << 32);
+            let m2 = rng.range_i64(-(1 << 32), 1 << 32);
+            let t = combine(a1, a2, m1, m2);
+            assert_eq!(t, a1 as i64 * m1 + a2 as i64 * m2);
+            assert_eq!(requantize_combined(a1, a2, m1, m2), requantize(t));
+        });
     }
 
     #[test]

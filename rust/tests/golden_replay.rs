@@ -9,7 +9,7 @@
 use std::path::PathBuf;
 
 use kan_sas::bspline::BsplineUnit;
-use kan_sas::kan::{Engine, QuantizedModel};
+use kan_sas::kan::{Engine, Kernel, QuantizedModel, Scratch};
 use kan_sas::quant;
 use kan_sas::util::container::Container;
 
@@ -93,6 +93,41 @@ fn mnist_golden_replays_exactly() {
 #[test]
 fn catch22_golden_replays_exactly() {
     replay("catch22_kan");
+}
+
+/// Every dispatchable kernel path must replay the golden final
+/// accumulators byte for byte — first pinned race-free through
+/// `Kernel::forced`, then end to end through the `KANSAS_FORCE_KERNEL`
+/// environment override exactly as a user would force it. The env
+/// mutation is confined to this one test; concurrent replays in this
+/// binary are unaffected because every kernel path is bit-exact.
+#[test]
+fn golden_replays_exactly_on_every_kernel_path() {
+    let Some((model, golden)) = open_pair("mnist_kan") else { return };
+    let (x_q, xs) = golden.u8("x_q").unwrap();
+    let (want_t, _) = golden.i64("t_final").unwrap();
+    for kind in Kernel::available() {
+        let engine = Engine::with_kernel(model.clone(), Kernel::forced(kind).unwrap());
+        assert_eq!(engine.plan().kernel_kind(), kind);
+        let mut scratch = Scratch::new();
+        assert_eq!(
+            engine.forward_into(&x_q, xs[0], &mut scratch).unwrap(),
+            &want_t[..],
+            "kernel {kind}: golden final accumulators diverge"
+        );
+    }
+    for kind in Kernel::available() {
+        std::env::set_var("KANSAS_FORCE_KERNEL", kind.name());
+        let engine = Engine::new(model.clone());
+        assert_eq!(engine.plan().kernel_kind(), kind);
+        let mut scratch = Scratch::new();
+        assert_eq!(
+            engine.forward_into(&x_q, xs[0], &mut scratch).unwrap(),
+            &want_t[..],
+            "KANSAS_FORCE_KERNEL={kind}: golden final accumulators diverge"
+        );
+    }
+    std::env::remove_var("KANSAS_FORCE_KERNEL");
 }
 
 #[test]

@@ -1,0 +1,137 @@
+//! Differential tests for the SIMD MAC kernel layer (`kan::kernel`):
+//! every kernel path compiled into this binary and supported by the
+//! running CPU must reproduce the scalar reference **bit for bit** over
+//! random `(G, P, dims, bs)` — remainder lanes included — and the fused
+//! requantize path must equal the unfused combine + requantize chain on
+//! every path. Complements the unit tests in `kan/kernel.rs` (raw
+//! mac4/axpy vs independent oracles) by exercising whole plans, and
+//! `tests/golden_replay.rs` (each path vs the python golden vectors).
+
+use kan_sas::kan::{Engine, ExecutionPlan, Kernel, KernelKind, QuantizedModel, Scratch};
+use kan_sas::quant;
+use kan_sas::util::rng::{check, Rng};
+
+/// Full-plan differential: random multi-layer models, awkward widths.
+#[test]
+fn every_kernel_path_matches_scalar_over_random_shapes() {
+    check(30, 2024, |rng: &mut Rng| {
+        let g = 1 + rng.below(8);
+        let p = 1 + rng.below(3);
+        let n_layers = 1 + rng.below(3);
+        // deliberately awkward widths: 1..=34 crosses the 8- and 16-lane
+        // vector bodies plus every possible remainder
+        let dims: Vec<usize> = (0..=n_layers).map(|_| 1 + rng.below(34)).collect();
+        let bs = 1 + rng.below(40); // routinely NOT a multiple of the batch block
+        let model = QuantizedModel::synthetic("kdiff", &dims, g, p, rng.below(1 << 30) as u64);
+        let x_q: Vec<u8> = (0..bs * dims[0]).map(|_| rng.below(256) as u8).collect();
+        let scalar = Engine::with_kernel(model.clone(), Kernel::scalar());
+        let mut s = Scratch::new();
+        let want = scalar.forward_into(&x_q, bs, &mut s).unwrap().to_vec();
+        for kind in Kernel::available() {
+            if kind == KernelKind::Scalar {
+                continue;
+            }
+            let e = Engine::with_kernel(model.clone(), Kernel::forced(kind).unwrap());
+            let mut s = Scratch::new();
+            assert_eq!(
+                e.forward_into(&x_q, bs, &mut s).unwrap(),
+                &want[..],
+                "kernel {kind}: g={g} p={p} dims={dims:?} bs={bs}"
+            );
+        }
+    });
+}
+
+/// Deterministic worst-case remainders: out_dims 17/23/33 leave 1-, 7-
+/// and 1-lane tails on the 16-wide mac4 bodies; bs=37 is coprime to
+/// every batch-block candidate.
+#[test]
+fn remainder_lane_shapes_bit_exact() {
+    let model = QuantizedModel::synthetic("rem", &[23, 33, 17, 10], 5, 3, 9);
+    let bs = 37usize;
+    let x_q: Vec<u8> = (0..bs * 23).map(|i| (i * 101 % 256) as u8).collect();
+    let scalar = Engine::with_kernel(model.clone(), Kernel::scalar());
+    let mut s = Scratch::new();
+    let want = scalar.forward_into(&x_q, bs, &mut s).unwrap().to_vec();
+    for kind in Kernel::available() {
+        let e = Engine::with_kernel(model.clone(), Kernel::forced(kind).unwrap());
+        assert_eq!(e.plan().kernel_kind(), kind);
+        let mut s = Scratch::new();
+        assert_eq!(e.forward_into(&x_q, bs, &mut s).unwrap(), &want[..], "kernel {kind}");
+    }
+}
+
+/// The fused inter-layer path (combine + requantize in one pass, no i64
+/// buffer) must equal the unfused chain on every kernel path.
+#[test]
+fn fused_requantize_matches_unfused_on_every_kernel() {
+    check(20, 777, |rng: &mut Rng| {
+        let g = 1 + rng.below(6);
+        let p = 1 + rng.below(3);
+        let k = 1 + rng.below(20);
+        let n = 1 + rng.below(33);
+        let bs = 1 + rng.below(20);
+        let model = QuantizedModel::synthetic("fused", &[k, n], g, p, rng.below(1 << 30) as u64);
+        let x_q: Vec<u8> = (0..bs * k).map(|_| rng.below(256) as u8).collect();
+        for kind in Kernel::available() {
+            let plan = ExecutionPlan::compile_with(&model, Kernel::forced(kind).unwrap());
+            let lp = &plan.layers[0];
+            let mut acc = vec![0i32; bs * n];
+            let mut acc_base = vec![0i32; bs * n];
+            let mut t = vec![0i64; bs * n];
+            lp.forward_into(&x_q, bs, &mut acc, &mut acc_base, &mut t);
+            let unfused: Vec<u8> = t.iter().map(|&v| quant::requantize(v)).collect();
+            let mut fused = vec![0u8; bs * n];
+            lp.forward_requant_into(&x_q, bs, &mut acc, &mut acc_base, &mut fused);
+            assert_eq!(fused, unfused, "kernel {kind}: g={g} p={p} k={k} n={n} bs={bs}");
+        }
+    });
+}
+
+/// `KANSAS_FORCE_KERNEL` end to end: pins every available path, warns
+/// and falls back on unknown or unavailable names, and clears cleanly.
+/// Env mutation lives in this single test; every other test in this
+/// binary pins kernels through `Kernel::forced`, so there is no race.
+#[test]
+fn force_kernel_env_pins_and_falls_back() {
+    let best = Kernel::available()[0];
+    for kind in Kernel::available() {
+        std::env::set_var("KANSAS_FORCE_KERNEL", kind.name());
+        assert_eq!(Kernel::dispatch().kind(), kind, "forcing {kind}");
+    }
+    // unknown kernel name: warn + fall back to the best available
+    std::env::set_var("KANSAS_FORCE_KERNEL", "quantum9");
+    assert_eq!(Kernel::dispatch().kind(), best);
+    // compiled-out-or-unsupported (neon on x86, avx2 on aarch64):
+    // warn + fall back rather than abort
+    let foreign = if cfg!(target_arch = "x86_64") {
+        KernelKind::Neon
+    } else {
+        KernelKind::Avx2
+    };
+    if !Kernel::available().contains(&foreign) {
+        std::env::set_var("KANSAS_FORCE_KERNEL", foreign.name());
+        assert_eq!(Kernel::dispatch().kind(), best);
+    }
+    std::env::remove_var("KANSAS_FORCE_KERNEL");
+    assert_eq!(Kernel::dispatch().kind(), best);
+}
+
+/// An engine compiled under a forced path serves the same bytes through
+/// the full stack (staged path included) as the dispatched engine.
+#[test]
+fn forced_engines_agree_on_staged_path() {
+    let model = QuantizedModel::synthetic("staged_k", &[12, 24, 5], 5, 3, 31);
+    let x_q: Vec<u8> = (0..6 * 12).map(|i| (i * 41 % 256) as u8).collect();
+    let mut want: Option<Vec<i64>> = None;
+    for kind in Kernel::available() {
+        let e = Engine::with_kernel(model.clone(), Kernel::forced(kind).unwrap());
+        let mut s = Scratch::new();
+        s.stage_input(x_q.len()).extend_from_slice(&x_q);
+        let got = e.forward_staged(6, &mut s).unwrap().to_vec();
+        match &want {
+            None => want = Some(got),
+            Some(w) => assert_eq!(&got, w, "kernel {kind} diverges on the staged path"),
+        }
+    }
+}
