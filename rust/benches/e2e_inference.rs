@@ -22,7 +22,7 @@
 use std::path::PathBuf;
 
 use kan_sas::arch::ArrayConfig;
-use kan_sas::bench::{bench, BenchStats};
+use kan_sas::bench::{bench, write_artifact, BenchStats};
 use kan_sas::kan::{Engine, Kernel, QuantizedModel, Scratch};
 use kan_sas::util::alloc_count::{self, CountingAllocator};
 use kan_sas::util::json::Value;
@@ -139,6 +139,6 @@ fn main() {
         ("batches", Value::arr(batches)),
     ]);
     let out = "BENCH_engine.json";
-    std::fs::write(out, doc.render() + "\n").expect("write bench artifact");
-    println!("wrote {out}");
+    write_artifact(out, doc).expect("write bench artifact");
+    println!("wrote {out} (sections merge-appended)");
 }

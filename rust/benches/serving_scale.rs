@@ -1,7 +1,7 @@
 //! Serving scale sweep: replica count x offered load x model mix x
 //! dispatch policy.
 //!
-//! Four measurements, all on synthetic models (offline, no artifacts):
+//! Seven measurements, all on synthetic models (offline, no artifacts):
 //!
 //! 1. **Closed-loop saturation** per replica count — peak rows/sec with
 //!    16 hammering clients. The acceptance bar is >= 2x rows/sec at 4
@@ -36,25 +36,40 @@
 //!    + flight recorder + 1-in-64 span tracing). Recorded per mode:
 //!    rows/sec, p50/p95/p99, and ring-overflow drops. The acceptance
 //!    shape: spine-on throughput and p95 stay within 2% of off.
+//! 7. **Network front door overhead** — the same closed-loop hammering
+//!    driven in-process (`ModelHandle`) vs through the framed wire
+//!    protocol (`NetServer` + `NetClient` on loopback TCP), per replica
+//!    count. The p50 delta between the two paths is the per-request
+//!    protocol cost: framing, two socket hops, and the client's
+//!    correlation-id bookkeeping.
 //!
 //! ```bash
 //! cargo bench --bench serving_scale
+//! # or a subset, e.g. just the wire-protocol section:
+//! KANSAS_BENCH_SECTIONS=net cargo bench --bench serving_scale
 //! ```
+//!
+//! `KANSAS_BENCH_SECTIONS` takes a comma-separated list of section
+//! names (`closed_loop`, `open_loop`, `multi_model`, `fairness`,
+//! `quota`, `telemetry`, `net`); unset or empty runs everything.
 //!
 //! Besides the printed tables, the run writes `BENCH_serving.json`
 //! (throughput per replica count, scenario shed rates, p50/p99 latency,
-//! multi-model mix rows, fairness rows, quota rows, telemetry
-//! overhead rows) so the serving perf
-//! trajectory is tracked across PRs instead of anecdotal. The file is
-//! rendered by the deterministic `util::json` writer and its validity
-//! is smoke-tested by `tests/bench_artifacts.rs`.
+//! multi-model mix rows, fairness rows, quota rows, telemetry overhead
+//! rows, wire-protocol overhead rows) so the serving perf trajectory is
+//! tracked across PRs instead of anecdotal. Sections are merge-appended
+//! through `bench::write_artifact` — a partial rerun refreshes only its
+//! own sections. The file is rendered by the deterministic `util::json`
+//! writer and its validity is smoke-tested by `tests/bench_artifacts.rs`.
 
+use std::collections::BTreeMap;
 use std::time::Duration;
 
 use kan_sas::arch::ArrayConfig;
+use kan_sas::bench;
 use kan_sas::coordinator::{
-    BatchPolicy, Dispatch, GatewayBuilder, GatewayConfig, Pool, PoolConfig, QuotaPolicy,
-    ShedPolicy, TelemetryConfig,
+    BatchPolicy, Dispatch, GatewayBuilder, GatewayConfig, NetClient, NetConfig, NetServer, Pool,
+    PoolConfig, QuotaPolicy, ShedPolicy, TelemetryConfig,
 };
 use kan_sas::kan::{Engine, QuantizedModel};
 use kan_sas::loadgen::{self, Focus, MixEntry, Scenario};
@@ -86,21 +101,21 @@ fn pool_config(replicas: usize, queue_cap: usize, shed: ShedPolicy) -> PoolConfi
     }
 }
 
-fn main() {
-    let engine = bench_engine();
-    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    println!(
-        "serving_scale — model {} ({} KiB weights, Arc-shared: pool memory ~flat in replicas), {} cores\n",
-        engine.model.name,
-        engine.param_bytes() / 1024,
-        cores
-    );
+/// `KANSAS_BENCH_SECTIONS="net,closed_loop"` runs just those sections;
+/// unset (or blank) runs the full sweep.
+fn section_enabled(name: &str) -> bool {
+    match std::env::var("KANSAS_BENCH_SECTIONS") {
+        Ok(list) if !list.trim().is_empty() => list.split(',').any(|s| s.trim() == name),
+        _ => true,
+    }
+}
 
-    // 1. closed-loop saturation sweep
+/// 1. closed-loop saturation sweep; fills `rows_at` (rows/s per replica
+/// count) for the later sections' rate targets.
+fn section_closed_loop(engine: &Engine, cores: usize, rows_at: &mut BTreeMap<usize, f64>) -> Value {
     let mut t = Table::new(&["replicas", "rows/s", "speedup", "req/s", "mean batch", "p50 us", "p99 us"])
         .with_title("closed-loop saturation (16 clients, 700ms, steady hammering)");
     let mut baseline_rows = 0.0f64;
-    let mut rows_at = std::collections::BTreeMap::new();
     let mut closed_json = Vec::new();
     for &replicas in &[1usize, 2, 4, 8] {
         let pool = Pool::start(engine.clone(), pool_config(replicas, 4096, ShedPolicy::Block));
@@ -137,8 +152,11 @@ fn main() {
         "4-replica scaling: {x4:.2}x rows/s vs 1 replica (target >= 2x; ideal bounded by {} cores)\n",
         cores
     );
+    Value::arr(closed_json)
+}
 
-    // 2. open-loop scenario mixes on a fixed pool size
+/// 2. open-loop scenario mixes on a fixed pool size.
+fn section_open_loop(engine: &Engine, cores: usize, rows_at: &BTreeMap<usize, f64>) -> Value {
     let replicas = cores.clamp(2, 4);
     let rate = rows_at.get(&replicas).copied().unwrap_or(4000.0) * 0.6; // below saturation
     println!("open-loop scenarios ({replicas} replicas, headline rate {rate:.0} rps, RejectNew, queue 256):");
@@ -173,8 +191,11 @@ fn main() {
             ("peak_queue", Value::num(stats.peak_depth as f64)),
         ]));
     }
+    Value::arr(scenario_json)
+}
 
-    // 3. multi-model gateway: mix weights x replica counts on one fleet
+/// 3. multi-model gateway: mix weights x replica counts on one fleet.
+fn section_multi_model(rows_at: &BTreeMap<usize, f64>) -> Value {
     let mnist_like =
         Engine::new(QuantizedModel::synthetic("mnist_mix", &[64, 128, 64, 10], 5, 3, 42));
     let har_like = Engine::new(QuantizedModel::synthetic("har_mix", &[16, 32, 6], 5, 3, 43));
@@ -247,12 +268,15 @@ fn main() {
         }
     }
     print!("{}", t.render());
+    Value::arr(mix_json)
+}
 
-    // 4. fairness under a 10:1 skewed burst: pre-fair fixed dispatch vs
-    // weighted DRR + work stealing. Both tenants share a shape, so the
-    // minority tenant's p95 queue delay isolates *dispatch* fairness
-    // (not service-cost asymmetry); the burst runs well past saturation
-    // so head-of-line blocking actually bites under fixed dispatch.
+/// 4. fairness under a 10:1 skewed burst: pre-fair fixed dispatch vs
+/// weighted DRR + work stealing. Both tenants share a shape, so the
+/// minority tenant's p95 queue delay isolates *dispatch* fairness
+/// (not service-cost asymmetry); the burst runs well past saturation
+/// so head-of-line blocking actually bites under fixed dispatch.
+fn section_fairness(cores: usize, rows_at: &BTreeMap<usize, f64>) -> Value {
     let majority = Engine::new(QuantizedModel::synthetic("majority", &[64, 128, 64, 10], 5, 3, 42));
     let minority = Engine::new(QuantizedModel::synthetic("minority", &[64, 128, 64, 10], 5, 3, 44));
     let fair_replicas = cores.clamp(2, 4);
@@ -352,13 +376,18 @@ fn main() {
     println!(
         "acceptance shape: fair-steal minority p95 queue < fixed, stolen_batches > 0 under skew"
     );
+    Value::arr(fairness_json)
+}
 
-    // 5. per-tenant admission quotas under the same 10:1 skewed burst:
-    // quota-off vs quota-on SHED fairness. A small RejectNew queue makes
-    // admission (not dispatch) the bottleneck, so the majority burst
-    // fills the whole queue and sheds the minority's arrivals too —
-    // unless weighted reservations hold slots open for it. Acceptance
-    // shape: with quotas on, the minority tenant's shed rate drops.
+/// 5. per-tenant admission quotas under the same 10:1 skewed burst:
+/// quota-off vs quota-on SHED fairness. A small RejectNew queue makes
+/// admission (not dispatch) the bottleneck, so the majority burst
+/// fills the whole queue and sheds the minority's arrivals too —
+/// unless weighted reservations hold slots open for it. Acceptance
+/// shape: with quotas on, the minority tenant's shed rate drops.
+fn section_quota(cores: usize, rows_at: &BTreeMap<usize, f64>) -> Value {
+    let majority = Engine::new(QuantizedModel::synthetic("majority", &[64, 128, 64, 10], 5, 3, 42));
+    let minority = Engine::new(QuantizedModel::synthetic("minority", &[64, 128, 64, 10], 5, 3, 44));
     let quota_replicas = cores.clamp(2, 4);
     let qsat = rows_at.get(&quota_replicas).copied().unwrap_or(4000.0);
     let quota_sc = Scenario::skewed_burst(
@@ -453,11 +482,14 @@ fn main() {
         100.0 * minority_shed[1],
         100.0 * minority_shed[0]
     );
+    Value::arr(quota_json)
+}
 
-    // 6. telemetry spine overhead: the same closed-loop hammering with
-    // the spine fully off vs on (windowed collector + flight recorder +
-    // 1-in-64 span tracing — a harsher setting than the serving
-    // default). Acceptance shape: rows/s and p95 within 2% of off.
+/// 6. telemetry spine overhead: the same closed-loop hammering with
+/// the spine fully off vs on (windowed collector + flight recorder +
+/// 1-in-64 span tracing — a harsher setting than the serving
+/// default). Acceptance shape: rows/s and p95 within 2% of off.
+fn section_telemetry(engine: &Engine, cores: usize) -> Value {
     let tel_replicas = cores.clamp(2, 4);
     println!("\ntelemetry overhead ({tel_replicas} replicas, 16 clients, 700ms, spine off vs on):");
     let mut t = Table::new(&[
@@ -515,20 +547,133 @@ fn main() {
         100.0 * rows_delta,
         100.0 * p95_delta
     );
+    Value::arr(telemetry_json)
+}
 
-    let doc = Value::obj([
+/// 7. network front door: the closed-loop hammering driven in-process
+/// (`ModelHandle`) vs through the framed wire protocol (`NetServer` +
+/// `NetClient` over loopback TCP) against an identically configured
+/// gateway. The p50 delta at equal replicas is the per-request protocol
+/// cost: header+payload framing, two socket hops, and the client's
+/// correlation-id multiplexing.
+fn section_net(engine: &Engine, cores: usize) -> Value {
+    let net_replicas = cores.clamp(2, 4);
+    println!(
+        "\nnetwork front door overhead ({net_replicas} replicas, 8 clients, 500ms, loopback TCP):"
+    );
+    let mut t = Table::new(&[
+        "path", "replicas", "rows/s", "req/s", "p50 us", "p99 us", "p50 + us",
+    ])
+    .with_title("in-process ModelHandle vs NetClient over 127.0.0.1 (same gateway config)");
+    let mut net_json = Vec::new();
+    for &replicas in &[1usize, net_replicas] {
+        let mut p50_direct = 0u64;
+        for path in ["in-process", "net"] {
+            let mut b = GatewayBuilder::with_config(GatewayConfig {
+                replicas,
+                queue_cap: 4096,
+                shed: ShedPolicy::Block,
+                policy: BatchPolicy { max_batch: 32, max_wait: Duration::from_micros(500) },
+                sim_array: ArrayConfig::kan_sas(16, 16, 4, 8),
+                dispatch: Dispatch::FairSteal,
+                quota: QuotaPolicy::None,
+                telemetry: bench_telemetry(),
+            });
+            let id = b.register("bench_kan", engine.clone());
+            let gw = b.start();
+            let rep = if path == "net" {
+                let server = NetServer::start("127.0.0.1:0", &gw, NetConfig::default())
+                    .expect("loopback listener");
+                let client = NetClient::connect(&server.local_addr().to_string())
+                    .expect("loopback client");
+                let handle = client.handle("bench_kan").expect("registered model");
+                let rep = loadgen::closed_loop(&handle, 8, Duration::from_millis(500), None, 7);
+                client.close();
+                server.shutdown();
+                rep
+            } else {
+                loadgen::closed_loop(&gw.handle(id), 8, Duration::from_millis(500), None, 7)
+            };
+            let stats = gw.shutdown();
+            let rows_s = stats.merged.batch_rows as f64 / rep.wall.as_secs_f64();
+            let (p50, p99) = rep.latency.map(|l| (l.p50_us, l.p99_us)).unwrap_or((0, 0));
+            let overhead_us = if path == "net" {
+                p50.saturating_sub(p50_direct)
+            } else {
+                p50_direct = p50;
+                0
+            };
+            t.row(vec![
+                path.to_string(),
+                replicas.to_string(),
+                format!("{rows_s:.0}"),
+                format!("{:.0}", rep.achieved_rps),
+                p50.to_string(),
+                p99.to_string(),
+                if path == "net" { format!("+{overhead_us}") } else { "-".to_string() },
+            ]);
+            net_json.push(Value::obj([
+                ("path", Value::str(path)),
+                ("replicas", Value::num(replicas as f64)),
+                ("rows_per_s", Value::num(rows_s)),
+                ("achieved_rps", Value::num(rep.achieved_rps)),
+                ("ok", Value::num(rep.ok as f64)),
+                ("p50_us", Value::num(p50 as f64)),
+                ("p99_us", Value::num(p99 as f64)),
+                ("p50_overhead_us", Value::num(overhead_us as f64)),
+            ]));
+        }
+    }
+    print!("{}", t.render());
+    println!(
+        "protocol cost = net p50 - in-process p50 at equal replicas (loopback, one connection)"
+    );
+    Value::arr(net_json)
+}
+
+fn main() {
+    let engine = bench_engine();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!(
+        "serving_scale — model {} ({} KiB weights, Arc-shared: pool memory ~flat in replicas), {} cores\n",
+        engine.model.name,
+        engine.param_bytes() / 1024,
+        cores
+    );
+
+    // top-level artifact sections, gathered as sections run so a
+    // partial (KANSAS_BENCH_SECTIONS-gated) sweep merge-appends only
+    // what it measured into BENCH_serving.json
+    let mut sections: Vec<(&'static str, Value)> = vec![
         ("bench", Value::str("serving_scale")),
         ("model", Value::str(engine.model.name.clone())),
         ("param_bytes", Value::num(engine.param_bytes() as f64)),
         ("cores", Value::num(cores as f64)),
-        ("closed_loop", Value::arr(closed_json)),
-        ("open_loop", Value::arr(scenario_json)),
-        ("multi_model", Value::arr(mix_json)),
-        ("fairness", Value::arr(fairness_json)),
-        ("quota", Value::arr(quota_json)),
-        ("telemetry", Value::arr(telemetry_json)),
-    ]);
+    ];
+    let mut rows_at = BTreeMap::new();
+    if section_enabled("closed_loop") {
+        sections.push(("closed_loop", section_closed_loop(&engine, cores, &mut rows_at)));
+    }
+    if section_enabled("open_loop") {
+        sections.push(("open_loop", section_open_loop(&engine, cores, &rows_at)));
+    }
+    if section_enabled("multi_model") {
+        sections.push(("multi_model", section_multi_model(&rows_at)));
+    }
+    if section_enabled("fairness") {
+        sections.push(("fairness", section_fairness(cores, &rows_at)));
+    }
+    if section_enabled("quota") {
+        sections.push(("quota", section_quota(cores, &rows_at)));
+    }
+    if section_enabled("telemetry") {
+        sections.push(("telemetry", section_telemetry(&engine, cores)));
+    }
+    if section_enabled("net") {
+        sections.push(("net", section_net(&engine, cores)));
+    }
+
     let out = "BENCH_serving.json";
-    std::fs::write(out, doc.render() + "\n").expect("write bench artifact");
-    println!("wrote {out}");
+    bench::write_artifact(out, Value::obj(sections)).expect("write bench artifact");
+    println!("wrote {out} (sections merge-appended)");
 }

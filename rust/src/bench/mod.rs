@@ -4,9 +4,19 @@
 //! [`bench`] / [`bench_with_result`]: warm up, run timed samples, report
 //! median/mean/p95 and derived throughput. Deterministic sample counts
 //! keep runs comparable across the perf-iteration log in EXPERIMENTS.md.
+//!
+//! Bench binaries that track a machine-readable artifact
+//! (`BENCH_serving.json`, `BENCH_engine.json`) write it through
+//! [`write_artifact`], which merge-appends top-level sections into the
+//! existing file instead of clobbering it — so a partial rerun (e.g.
+//! `KANSAS_BENCH_SECTIONS=net cargo bench --bench serving_scale`)
+//! refreshes just its own sections and the rest of the perf trail
+//! survives.
 
 use std::hint::black_box;
 use std::time::{Duration, Instant};
+
+use crate::util::json::Value;
 
 #[derive(Clone, Copy, Debug)]
 pub struct BenchStats {
@@ -66,6 +76,34 @@ fn bench_with<F: FnMut()>(name: &str, target: Duration, max_samples: usize, f: &
     stats
 }
 
+/// Merge `doc`'s top-level sections over `existing`: sections present
+/// in `doc` replace same-named ones, sections only in `existing`
+/// survive. A non-object (or absent / unparseable) `existing` is
+/// discarded; a non-object `doc` wins outright.
+pub fn merge_artifact(existing: Option<Value>, doc: Value) -> Value {
+    let fresh = match doc {
+        Value::Obj(m) => m,
+        other => return other,
+    };
+    let mut merged = match existing {
+        Some(Value::Obj(m)) => m,
+        _ => std::collections::BTreeMap::new(),
+    };
+    for (k, v) in fresh {
+        merged.insert(k, v);
+    }
+    Value::Obj(merged)
+}
+
+/// Write a bench artifact, merge-appending `doc`'s top-level sections
+/// into whatever valid JSON object is already at `path` (see
+/// [`merge_artifact`]). A missing or corrupt file degrades to a plain
+/// write of `doc`.
+pub fn write_artifact(path: &str, doc: Value) -> std::io::Result<()> {
+    let existing = std::fs::read_to_string(path).ok().and_then(|t| Value::parse(&t).ok());
+    std::fs::write(path, merge_artifact(existing, doc).render() + "\n")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -85,5 +123,55 @@ mod tests {
     fn per_second_positive() {
         let s = bench_val("spin", || std::hint::black_box((0..100).sum::<u64>()));
         assert!(s.per_second(100) > 0.0);
+    }
+
+    #[test]
+    fn merge_artifact_unions_sections_new_wins() {
+        let existing = Value::obj([
+            ("bench", Value::str("serving_scale")),
+            ("closed_loop", Value::arr([Value::num(1.0)])),
+            ("fairness", Value::arr([Value::num(2.0)])),
+        ]);
+        let doc = Value::obj([
+            ("bench", Value::str("serving_scale")),
+            ("closed_loop", Value::arr([Value::num(9.0)])),
+            ("net", Value::arr([Value::num(3.0)])),
+        ]);
+        let merged = merge_artifact(Some(existing), doc);
+        // refreshed section replaced, untouched section survived, new
+        // section appended
+        assert_eq!(merged.path("closed_loop/0").and_then(Value::as_f64), Some(9.0));
+        assert_eq!(merged.path("fairness/0").and_then(Value::as_f64), Some(2.0));
+        assert_eq!(merged.path("net/0").and_then(Value::as_f64), Some(3.0));
+        assert_eq!(merged.get("bench").and_then(Value::as_str), Some("serving_scale"));
+    }
+
+    #[test]
+    fn merge_artifact_discards_non_object_existing() {
+        let doc = Value::obj([("bench", Value::str("b"))]);
+        let merged = merge_artifact(Some(Value::str("corrupt")), doc.clone());
+        assert_eq!(merged, doc);
+        assert_eq!(merge_artifact(None, doc.clone()), doc);
+    }
+
+    #[test]
+    fn write_artifact_merges_on_disk() {
+        let path = std::env::temp_dir()
+            .join(format!("kan_sas_bench_artifact_{}.json", std::process::id()));
+        let path = path.to_str().expect("utf-8 temp path").to_string();
+        let _ = std::fs::remove_file(&path);
+
+        write_artifact(&path, Value::obj([("a", Value::num(1.0)), ("b", Value::num(2.0))]))
+            .expect("first write");
+        write_artifact(&path, Value::obj([("b", Value::num(7.0)), ("c", Value::num(3.0))]))
+            .expect("merge write");
+        let text = std::fs::read_to_string(&path).expect("artifact readable");
+        std::fs::remove_file(&path).ok();
+
+        let v = Value::parse(&text).expect("artifact is valid JSON");
+        assert_eq!(v.get("a").and_then(Value::as_f64), Some(1.0), "untouched section kept");
+        assert_eq!(v.get("b").and_then(Value::as_f64), Some(7.0), "rerun section refreshed");
+        assert_eq!(v.get("c").and_then(Value::as_f64), Some(3.0), "new section appended");
+        assert!(text.ends_with('\n'));
     }
 }

@@ -31,6 +31,15 @@
 //!                 "flight_every_s": 5}
 //! }
 //! ```
+//!
+//! A `net` stanza tunes the network front door (`kansas serve
+//! --listen` / `kansas load --connect`):
+//! ```json
+//! {
+//!   "net": {"listen": "127.0.0.1:7171", "max_frame": 1048576,
+//!           "max_conns": 1024, "nodelay": true}
+//! }
+//! ```
 
 use std::path::Path;
 use std::time::Duration;
@@ -39,7 +48,8 @@ use anyhow::{bail, Context, Result};
 
 use crate::arch::{ArrayConfig, PeKind, WeightLoad};
 use crate::coordinator::{
-    BatchPolicy, Dispatch, DrainMode, PoolConfig, QuotaPolicy, ShedPolicy, TelemetryConfig,
+    BatchPolicy, Dispatch, DrainMode, NetConfig, PoolConfig, QuotaPolicy, ShedPolicy,
+    TelemetryConfig,
 };
 use crate::loadgen::{ChurnAction, ChurnEvent};
 use crate::util::json::Value;
@@ -68,6 +78,9 @@ pub struct RunConfig {
     /// `--telemetry`/`--stats-every`/`--trace-sample` flags layer on
     /// top).
     pub telemetry: TelemetryConfig,
+    /// Network front door settings (the `net` stanza; `kansas serve
+    /// --listen` / `kansas load --connect` use them on their ends).
+    pub net: NetConfig,
 }
 
 impl Default for RunConfig {
@@ -84,6 +97,7 @@ impl Default for RunConfig {
             quota: pool.quota,
             admin_events: Vec::new(),
             telemetry: pool.telemetry,
+            net: NetConfig::default(),
         }
     }
 }
@@ -288,6 +302,26 @@ impl RunConfig {
                 cfg.telemetry.flight_every = Duration::from_micros((s * 1e6) as u64);
             }
         }
+        if let Some(n) = v.get("net") {
+            if let Some(l) = n.get("listen").and_then(Value::as_str) {
+                cfg.net.listen = Some(l.to_string());
+            }
+            if let Some(m) = n.get("max_frame").and_then(Value::as_usize) {
+                if m < crate::coordinator::net::HEADER_LEN {
+                    bail!("net.max_frame must be at least one frame header");
+                }
+                cfg.net.max_frame = m;
+            }
+            if let Some(c) = n.get("max_conns").and_then(Value::as_usize) {
+                if c == 0 {
+                    bail!("net.max_conns must be positive");
+                }
+                cfg.net.max_conns = c;
+            }
+            if let Some(b) = n.get("nodelay").and_then(Value::as_bool) {
+                cfg.net.nodelay = b;
+            }
+        }
         if let Some(a) = v.get("admin") {
             let events = a
                 .get("events")
@@ -472,6 +506,34 @@ mod tests {
         assert!(RunConfig::load(&path("cfg13.json")).is_err());
         // default: periodic dumps every 5s
         assert_eq!(RunConfig::default().telemetry.flight_every, Duration::from_secs(5));
+    }
+
+    #[test]
+    fn load_net_section() {
+        let mut f = tempfile("cfg14.json");
+        write!(
+            f,
+            r#"{{"net": {{"listen": "127.0.0.1:7171", "max_frame": 65536,
+                          "max_conns": 8, "nodelay": false}}}}"#
+        )
+        .unwrap();
+        let cfg = RunConfig::load(&path("cfg14.json")).unwrap();
+        assert_eq!(cfg.net.listen.as_deref(), Some("127.0.0.1:7171"));
+        assert_eq!(cfg.net.max_frame, 65536);
+        assert_eq!(cfg.net.max_conns, 8);
+        assert!(!cfg.net.nodelay);
+        // defaults: no listen address, 1 MiB frames, nodelay on
+        let d = RunConfig::default();
+        assert!(d.net.listen.is_none());
+        assert_eq!(d.net.max_frame, 1 << 20);
+        assert!(d.net.nodelay);
+        // bad values rejected
+        let mut f = tempfile("cfg15.json");
+        write!(f, r#"{{"net": {{"max_frame": 4}}}}"#).unwrap();
+        assert!(RunConfig::load(&path("cfg15.json")).is_err());
+        let mut f = tempfile("cfg16.json");
+        write!(f, r#"{{"net": {{"max_conns": 0}}}}"#).unwrap();
+        assert!(RunConfig::load(&path("cfg16.json")).is_err());
     }
 
     #[test]

@@ -399,6 +399,87 @@ impl BufferPool {
     }
 }
 
+/// A free-list of pre-sized quantized *input-row* buffers, one per
+/// registered model — the admission-side twin of [`BufferPool`].
+///
+/// Submitters that care about steady-state allocation (the network
+/// front door's frame decoder, the load generators) acquire a row via
+/// [`ModelHandle::acquire_row`], fill it, and submit; the serving
+/// worker returns the buffer here right after gathering it into the
+/// batch staging area. Plain `submit` calls with caller-allocated rows
+/// still work — their buffers simply join the free-list after service,
+/// seeding it. Same lifecycle rules as [`BufferPool`]: capped
+/// retention, retire-on-removal, strays free normally.
+#[derive(Debug)]
+pub struct RowPool {
+    free: Mutex<Vec<Vec<u8>>>,
+    /// Row width every buffer is pre-sized to.
+    in_dim: usize,
+    /// Maximum buffers retained on the free-list.
+    retain: usize,
+    /// Set once the owning model is removed; releases stop recycling.
+    retired: AtomicBool,
+    created: AtomicU64,
+    recycled: AtomicU64,
+}
+
+impl RowPool {
+    /// An empty pool of `in_dim`-capacity row buffers retaining at most
+    /// `retain` on its free-list.
+    pub fn new(in_dim: usize, retain: usize) -> Self {
+        Self {
+            free: Mutex::new(Vec::new()),
+            in_dim,
+            retain,
+            retired: AtomicBool::new(false),
+            created: AtomicU64::new(0),
+            recycled: AtomicU64::new(0),
+        }
+    }
+
+    /// An empty row buffer with capacity `in_dim` — recycled when the
+    /// free-list has one, freshly allocated otherwise.
+    pub fn acquire(&self) -> Vec<u8> {
+        if let Some(buf) = self.free.lock().unwrap().pop() {
+            self.recycled.fetch_add(1, Ordering::Relaxed);
+            return buf;
+        }
+        self.created.fetch_add(1, Ordering::Relaxed);
+        Vec::with_capacity(self.in_dim)
+    }
+
+    /// Return a row buffer to the free-list (dropped if the list is
+    /// full, the pool is retired, or the buffer is the wrong size).
+    pub fn release(&self, mut buf: Vec<u8>) {
+        if self.retired.load(Ordering::Relaxed) {
+            return;
+        }
+        if buf.capacity() < self.in_dim || buf.capacity() > 4 * self.in_dim.max(1) {
+            return;
+        }
+        buf.clear();
+        let mut free = self.free.lock().unwrap();
+        if free.len() < self.retain {
+            free.push(buf);
+        }
+    }
+
+    /// Empty the free-list and stop recycling (model removal).
+    pub fn retire(&self) {
+        self.retired.store(true, Ordering::Relaxed);
+        self.free.lock().unwrap().clear();
+    }
+
+    /// `(fresh allocations, recycled acquires, buffers currently free)`.
+    pub fn counts(&self) -> (u64, u64, usize) {
+        (
+            self.created.load(Ordering::Relaxed),
+            self.recycled.load(Ordering::Relaxed),
+            self.free.lock().unwrap().len(),
+        )
+    }
+}
+
 /// Response: i64 accumulators for the row (argmax = class) + split
 /// timing. The accumulator buffer is pooled — dropping the response
 /// recycles it through the model's [`BufferPool`].
@@ -612,6 +693,9 @@ struct Tenant {
     /// Request options applied when a submission sets none.
     defaults: TenantDefaults,
     buffers: Arc<BufferPool>,
+    /// Pooled quantized input-row buffers (admission-side twin of
+    /// `buffers`; fed back by the serving worker's gather).
+    rows: Arc<RowPool>,
     counters: Arc<ModelCounters>,
     /// `[replica]` metrics cells.
     cells: Arc<Vec<MetricsCell>>,
@@ -654,6 +738,7 @@ impl Tenant {
             reserved: 0,
             defaults,
             buffers: Arc::new(BufferPool::new(out_dim, retain)),
+            rows: Arc::new(RowPool::new(in_dim, retain)),
             counters: Arc::new(ModelCounters::default()),
             cells: Arc::new((0..replicas).map(|_| cell()).collect()),
             space: Arc::new(Condvar::new()),
@@ -1077,6 +1162,7 @@ pub struct ModelHandle {
     name: Arc<str>,
     in_dim: usize,
     out_dim: usize,
+    rows: Arc<RowPool>,
 }
 
 impl ModelHandle {
@@ -1098,6 +1184,22 @@ impl ModelHandle {
     /// Output row width (final-layer accumulators).
     pub fn out_dim(&self) -> usize {
         self.out_dim
+    }
+
+    /// An empty, `in_dim`-capacity row buffer from this model's
+    /// [`RowPool`]. Fill it and [`submit`](ModelHandle::submit) — the
+    /// serving worker recycles it after gathering the batch, so a
+    /// steady-state submitter reuses the same buffers instead of
+    /// allocating one per request (the network front door's decode path
+    /// and the load generators both lean on this).
+    pub fn acquire_row(&self) -> Vec<u8> {
+        self.rows.acquire()
+    }
+
+    /// `(fresh allocations, recycled acquires, free)` counters of this
+    /// model's input-row pool.
+    pub fn row_pool_counts(&self) -> (u64, u64, usize) {
+        self.rows.counts()
     }
 
     /// Requests currently waiting in the shared admission queue (all
@@ -1259,9 +1361,10 @@ impl ModelHandle {
                     );
                     let ot = &reg.tenants[om];
                     ot.counters.inflight.fetch_sub(1, Ordering::SeqCst);
-                    // recycle the victim's pooled buffer: the shed path
-                    // must not drain the free-list under overload
+                    // recycle the victim's pooled buffers: the shed
+                    // path must not drain the free-lists under overload
                     ot.buffers.release(old.out);
+                    ot.rows.release(old.x_q);
                     let _ = old.resp.send(Err(ServeError::QueueFull));
                     // loop: re-evaluate fullness and admit
                 }
@@ -1782,6 +1885,7 @@ impl Gateway {
             name: Arc::clone(&t.name),
             in_dim: t.in_dim,
             out_dim: t.out_dim,
+            rows: Arc::clone(&t.rows),
         }
     }
 
@@ -1974,6 +2078,7 @@ impl Gateway {
         let _admin = self.shared.admin.lock().unwrap();
         let counters;
         let buffers;
+        let rows;
         {
             let mut st = self.shared.state.lock().unwrap();
             if !st.open {
@@ -1987,6 +2092,7 @@ impl Gateway {
                 Some(t) => {
                     counters = Arc::clone(&t.counters);
                     buffers = Arc::clone(&t.buffers);
+                    rows = Arc::clone(&t.rows);
                 }
             }
             // (1) stop accepting; reservations redistribute to the
@@ -2026,6 +2132,7 @@ impl Gateway {
                             r.trace,
                         );
                         buffers.release(r.out);
+                        rows.release(r.x_q);
                         let _ = r.resp.send(Err(ServeError::QueueFull));
                     } else {
                         kept.push_back(r);
@@ -2059,6 +2166,7 @@ impl Gateway {
                                 r.trace,
                             );
                             buffers.release(r.out);
+                            rows.release(r.x_q);
                             let _ = r.resp.send(Err(ServeError::QueueFull));
                         }
                     }
@@ -2116,6 +2224,7 @@ impl Gateway {
             stats = make_model_stats(t, st.submitted[id.0], st.shed[id.0]);
         }
         buffers.retire();
+        rows.retire();
         Ok(stats)
     }
 
@@ -2581,11 +2690,17 @@ fn serve_batch(
                         req.trace,
                     );
                     tenant.buffers.release(req.out);
+                    tenant.rows.release(req.x_q);
                     let _ = req.resp.send(Err(ServeError::DeadlineExceeded));
                     answered += 1;
                 }
                 _ => {
+                    let mut req = req;
                     staging.extend_from_slice(&req.x_q);
+                    // the row is copied into staging; hand the buffer
+                    // back to the admission-side pool immediately so a
+                    // steady-state submitter runs allocation-free
+                    tenant.rows.release(std::mem::take(&mut req.x_q));
                     live.push(req);
                 }
             }
@@ -2757,6 +2872,7 @@ mod tests {
                 name: Arc::clone(&t.name),
                 in_dim: t.in_dim,
                 out_dim: t.out_dim,
+                rows: Arc::clone(&t.rows),
             })
             .collect()
     }

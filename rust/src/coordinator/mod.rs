@@ -81,13 +81,23 @@
 //!   (admission→batch→serve→respond timelines);
 //! * [`pool`] keeps `Pool` as the 1-model special case (`PoolHandle` =
 //!   [`ModelHandle`], `PoolError` = [`ServeError`]) and [`server`] keeps
-//!   `Server` as the 1-model, 1-replica special case.
+//!   `Server` as the 1-model, 1-replica special case;
+//! * [`net`] is the **network front door**: a [`NetServer`] speaks a
+//!   length-prefixed framed binary protocol over TCP
+//!   (`kansas serve --listen`), decoding quantized request rows
+//!   straight into pooled gateway admission buffers
+//!   ([`ModelHandle::acquire_row`]) and answering with logits or typed
+//!   [`ServeError`] frames; a pipelined [`NetClient`] multiplexes
+//!   logical requests over one connection by correlation id
+//!   (`kansas load --connect`), and a `StatsRequest` frame serves
+//!   [`Telemetry::snapshot`] JSON to remote pollers.
 
 #![warn(missing_docs)]
 
 pub mod batcher;
 pub mod gateway;
 pub mod metrics;
+pub mod net;
 pub mod pool;
 pub mod server;
 pub mod telemetry;
@@ -95,8 +105,12 @@ pub mod telemetry;
 pub use batcher::{BatchPolicy, Batcher};
 pub use gateway::{
     BufferPool, Dispatch, DrainMode, Gateway, GatewayBuilder, GatewayConfig, GatewayStats,
-    ModelHandle, ModelId, ModelStats, Priority, QuotaPolicy, Request, Response, ServeError,
-    ShedPolicy, TenantDefaults, Ticket,
+    ModelHandle, ModelId, ModelStats, Priority, QuotaPolicy, Request, Response, RowPool,
+    ServeError, ShedPolicy, TenantDefaults, Ticket,
+};
+pub use net::{
+    NetClient, NetConfig, NetServer, NetStats, RemoteHandle, RemoteModel, RemoteResponse,
+    RemoteTicket,
 };
 pub use metrics::{jain_fairness, jain_fairness_normalized, LatencyStats, LogHistogram, Metrics};
 pub use telemetry::{

@@ -1,0 +1,1343 @@
+//! Network front door: a framed binary wire protocol over TCP.
+//!
+//! Everything below the gateway is reachable in-process only; this
+//! module is the socket. A [`NetServer`] accepts connections on a
+//! `std::net` listener (tokio is not available offline — the design is
+//! thread-per-connection: one reader + one writer thread each), speaks a
+//! length-prefixed framed protocol, and decodes request rows *straight
+//! into gateway admission slots*: the reader acquires a pooled row
+//! buffer from the target model's row pool
+//! ([`ModelHandle::acquire_row`]), reads the quantized payload into it,
+//! and submits — after warmup the decode path performs zero heap
+//! allocations (`tests/net_alloc.rs` gates the codec with the counting
+//! allocator). A pipelined [`NetClient`] multiplexes many logical
+//! requests over one connection via correlation ids.
+//!
+//! # Frame layout
+//!
+//! Every frame starts with a fixed 32-byte header (all integers
+//! little-endian):
+//!
+//! | offset | size | field |
+//! |-------:|-----:|-------|
+//! | 0      | 4    | magic `"KSN1"` |
+//! | 4      | 1    | protocol version (1) |
+//! | 5      | 1    | frame type |
+//! | 6      | 1    | request priority / error code |
+//! | 7      | 1    | reserved (0) |
+//! | 8      | 8    | correlation id |
+//! | 16     | 4    | model id |
+//! | 20     | 8    | relative deadline in microseconds (0 = none) |
+//! | 28     | 4    | payload length |
+//!
+//! Frame types: `1` InferRequest (payload = one quantized u8 row of the
+//! model's `in_dim`), `2` InferOk (payload = `queue_us` u64 +
+//! `service_us` u64 + `out_dim` i64 logits), `3` Error (payload = UTF-8
+//! message, typed by the header code byte), `4`/`5` StatsRequest /
+//! StatsResponse (payload = [`crate::coordinator::Telemetry::snapshot`]
+//! JSON), `6`/`7` ModelsRequest / ModelsResponse (payload = the model
+//! directory as JSON, so remote clients resolve names to wire ids and
+//! row widths).
+//!
+//! # Connection lifecycle and conservation
+//!
+//! The reader thread owns admission; the writer thread owns ticket
+//! resolution (in submission order per connection — correlation ids let
+//! the client match replies to requests). A malformed header (bad
+//! magic/version/type) with a sane length is answered with a typed
+//! `Malformed` error frame and the connection survives; an oversized
+//! length closes the connection after the error frame (framing can no
+//! longer be trusted). When a client disconnects mid-flight the reader
+//! exits and the writer *drains* every in-flight [`Ticket`] — the
+//! gateway still serves and counts each admitted request, so per-model
+//! `submitted == completed + shed + failed` holds across drops.
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use super::gateway::{Gateway, ModelHandle, Priority, Request, ServeError, Ticket};
+use super::telemetry::Telemetry;
+use crate::util::json::Value;
+
+/// First four bytes of every frame.
+pub const MAGIC: [u8; 4] = *b"KSN1";
+/// Wire protocol version carried in byte 4 of the header.
+pub const VERSION: u8 = 1;
+/// Fixed header size in bytes.
+pub const HEADER_LEN: usize = 32;
+
+/// Frame type tags (header byte 5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FrameType {
+    /// Client → server: one quantized input row for one model.
+    InferRequest = 1,
+    /// Server → client: logits + split timing for a served request.
+    InferOk = 2,
+    /// Server → client: a typed [`ServeError`] (code in header byte 6).
+    Error = 3,
+    /// Client → server: ask for a live telemetry snapshot.
+    StatsRequest = 4,
+    /// Server → client: `Telemetry::snapshot()` rendered as JSON.
+    StatsResponse = 5,
+    /// Client → server: ask for the model directory.
+    ModelsRequest = 6,
+    /// Server → client: registered models as JSON (`id`, `name`,
+    /// `in_dim`, `out_dim`).
+    ModelsResponse = 7,
+}
+
+impl FrameType {
+    fn from_u8(b: u8) -> Option<FrameType> {
+        Some(match b {
+            1 => FrameType::InferRequest,
+            2 => FrameType::InferOk,
+            3 => FrameType::Error,
+            4 => FrameType::StatsRequest,
+            5 => FrameType::StatsResponse,
+            6 => FrameType::ModelsRequest,
+            7 => FrameType::ModelsResponse,
+            _ => return None,
+        })
+    }
+}
+
+/// Wire error codes (header byte 6 of an [`FrameType::Error`] frame).
+/// Codes 1–6 map one-to-one onto [`ServeError`]; 7 is a protocol-level
+/// framing error the in-process API has no equivalent for.
+pub mod code {
+    /// Admission queue full ([`super::ServeError::QueueFull`]).
+    pub const QUEUE_FULL: u8 = 1;
+    /// Deadline lapsed ([`super::ServeError::DeadlineExceeded`]).
+    pub const DEADLINE: u8 = 2;
+    /// Gateway stopped ([`super::ServeError::Closed`]).
+    pub const CLOSED: u8 = 3;
+    /// Row validation failed ([`super::ServeError::InvalidInput`]).
+    pub const INVALID_INPUT: u8 = 4;
+    /// No such model ([`super::ServeError::UnknownModel`]).
+    pub const UNKNOWN_MODEL: u8 = 5;
+    /// Engine failure ([`super::ServeError::Inference`]).
+    pub const INFERENCE: u8 = 6;
+    /// Malformed frame (bad magic, version, type, or length).
+    pub const MALFORMED: u8 = 7;
+}
+
+/// The wire code for a [`ServeError`].
+pub fn error_to_code(e: &ServeError) -> u8 {
+    match e {
+        ServeError::QueueFull => code::QUEUE_FULL,
+        ServeError::DeadlineExceeded => code::DEADLINE,
+        ServeError::Closed => code::CLOSED,
+        ServeError::InvalidInput(_) => code::INVALID_INPUT,
+        ServeError::UnknownModel(_) => code::UNKNOWN_MODEL,
+        ServeError::Inference(_) => code::INFERENCE,
+    }
+}
+
+/// Reconstruct a typed [`ServeError`] from a wire error frame. The
+/// protocol-only `MALFORMED` code (and any unknown code) maps to
+/// [`ServeError::InvalidInput`] with the server's message.
+pub fn error_from_wire(c: u8, msg: &str) -> ServeError {
+    match c {
+        code::QUEUE_FULL => ServeError::QueueFull,
+        code::DEADLINE => ServeError::DeadlineExceeded,
+        code::CLOSED => ServeError::Closed,
+        code::INVALID_INPUT => ServeError::InvalidInput(msg.to_string()),
+        code::UNKNOWN_MODEL => ServeError::UnknownModel(msg.to_string()),
+        code::INFERENCE => ServeError::Inference(msg.to_string()),
+        _ => ServeError::InvalidInput(format!("protocol: {msg}")),
+    }
+}
+
+/// A decoded frame header.
+///
+/// ```
+/// use kan_sas::coordinator::net::{FrameHeader, FrameType, HEADER_LEN};
+///
+/// let h = FrameHeader {
+///     ty: FrameType::InferRequest,
+///     code: 0,
+///     corr: 42,
+///     model: 1,
+///     deadline_us: 2_000,
+///     len: 64,
+/// };
+/// let mut buf = [0u8; HEADER_LEN];
+/// h.encode(&mut buf);
+/// assert_eq!(FrameHeader::decode(&buf).unwrap(), h);
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FrameHeader {
+    /// Frame type tag.
+    pub ty: FrameType,
+    /// Request priority class (0 = tenant default, 1 = low, 2 = normal,
+    /// 3 = high) on requests; the error code on error frames; 0
+    /// otherwise.
+    pub code: u8,
+    /// Correlation id echoed on the matching response frame.
+    pub corr: u64,
+    /// Wire model id (the gateway registration slot).
+    pub model: u32,
+    /// Relative deadline in microseconds from admission (0 = none).
+    pub deadline_us: u64,
+    /// Payload length in bytes.
+    pub len: u32,
+}
+
+/// Why a frame header failed to decode.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FrameError {
+    /// The first four bytes are not [`MAGIC`].
+    BadMagic([u8; 4]),
+    /// Unsupported protocol version.
+    BadVersion(u8),
+    /// Unknown frame type tag.
+    BadType(u8),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::BadMagic(m) => write!(f, "bad magic {m:02x?} (want \"KSN1\")"),
+            FrameError::BadVersion(v) => write!(f, "unsupported protocol version {v} (want 1)"),
+            FrameError::BadType(t) => write!(f, "unknown frame type {t}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+impl FrameHeader {
+    /// Serialize into a fixed header buffer (no allocation).
+    pub fn encode(&self, out: &mut [u8; HEADER_LEN]) {
+        out[0..4].copy_from_slice(&MAGIC);
+        out[4] = VERSION;
+        out[5] = self.ty as u8;
+        out[6] = self.code;
+        out[7] = 0;
+        out[8..16].copy_from_slice(&self.corr.to_le_bytes());
+        out[16..20].copy_from_slice(&self.model.to_le_bytes());
+        out[20..28].copy_from_slice(&self.deadline_us.to_le_bytes());
+        out[28..32].copy_from_slice(&self.len.to_le_bytes());
+    }
+
+    /// Parse a fixed header buffer. The payload length is returned as
+    /// read — the caller enforces its own `max_frame` bound, because
+    /// whether an oversized frame is survivable depends on whether the
+    /// header itself was trusted.
+    pub fn decode(buf: &[u8; HEADER_LEN]) -> Result<FrameHeader, FrameError> {
+        if buf[0..4] != MAGIC {
+            return Err(FrameError::BadMagic([buf[0], buf[1], buf[2], buf[3]]));
+        }
+        if buf[4] != VERSION {
+            return Err(FrameError::BadVersion(buf[4]));
+        }
+        let ty = FrameType::from_u8(buf[5]).ok_or(FrameError::BadType(buf[5]))?;
+        Ok(FrameHeader {
+            ty,
+            code: buf[6],
+            corr: u64::from_le_bytes(buf[8..16].try_into().expect("8 bytes")),
+            model: u32::from_le_bytes(buf[16..20].try_into().expect("4 bytes")),
+            deadline_us: u64::from_le_bytes(buf[20..28].try_into().expect("8 bytes")),
+            len: u32::from_le_bytes(buf[28..32].try_into().expect("4 bytes")),
+        })
+    }
+}
+
+fn put_header(buf: &mut Vec<u8>, h: &FrameHeader) {
+    let mut hdr = [0u8; HEADER_LEN];
+    h.encode(&mut hdr);
+    buf.extend_from_slice(&hdr);
+}
+
+/// Encode an infer request into `buf` (cleared first). With a
+/// warmed-up `buf` the encode performs no allocations.
+pub fn encode_request(
+    buf: &mut Vec<u8>,
+    corr: u64,
+    model: u32,
+    row: &[u8],
+    deadline_us: u64,
+    priority: u8,
+) {
+    buf.clear();
+    put_header(
+        buf,
+        &FrameHeader {
+            ty: FrameType::InferRequest,
+            code: priority,
+            corr,
+            model,
+            deadline_us,
+            len: row.len() as u32,
+        },
+    );
+    buf.extend_from_slice(row);
+}
+
+/// Encode an [`FrameType::InferOk`] response into `buf` (cleared
+/// first): split timing followed by the logits row.
+pub fn encode_response(buf: &mut Vec<u8>, corr: u64, queue_us: u64, service_us: u64, t: &[i64]) {
+    buf.clear();
+    put_header(
+        buf,
+        &FrameHeader {
+            ty: FrameType::InferOk,
+            code: 0,
+            corr,
+            model: 0,
+            deadline_us: 0,
+            len: (16 + 8 * t.len()) as u32,
+        },
+    );
+    buf.extend_from_slice(&queue_us.to_le_bytes());
+    buf.extend_from_slice(&service_us.to_le_bytes());
+    for v in t {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Encode a typed error frame into `buf` (cleared first).
+pub fn encode_error(buf: &mut Vec<u8>, corr: u64, c: u8, msg: &str) {
+    buf.clear();
+    put_header(
+        buf,
+        &FrameHeader {
+            ty: FrameType::Error,
+            code: c,
+            corr,
+            model: 0,
+            deadline_us: 0,
+            len: msg.len() as u32,
+        },
+    );
+    buf.extend_from_slice(msg.as_bytes());
+}
+
+/// Encode a payload-free control frame (stats / models request).
+pub fn encode_control(buf: &mut Vec<u8>, ty: FrameType, corr: u64) {
+    buf.clear();
+    put_header(buf, &FrameHeader { ty, code: 0, corr, model: 0, deadline_us: 0, len: 0 });
+}
+
+/// Encode a JSON-payload response frame (stats / models response).
+pub fn encode_json(buf: &mut Vec<u8>, ty: FrameType, corr: u64, json: &str) {
+    buf.clear();
+    put_header(
+        buf,
+        &FrameHeader { ty, code: 0, corr, model: 0, deadline_us: 0, len: json.len() as u32 },
+    );
+    buf.extend_from_slice(json.as_bytes());
+}
+
+/// Decode an [`FrameType::InferOk`] payload into a logits buffer
+/// (cleared first; with sufficient capacity the decode performs no
+/// allocations). Returns `(queue_us, service_us)`.
+pub fn decode_ok_payload(payload: &[u8], t: &mut Vec<i64>) -> Result<(u64, u64), ServeError> {
+    if payload.len() < 16 || (payload.len() - 16) % 8 != 0 {
+        return Err(ServeError::InvalidInput(format!(
+            "protocol: InferOk payload of {} bytes (want 16 + 8*out_dim)",
+            payload.len()
+        )));
+    }
+    let queue_us = u64::from_le_bytes(payload[0..8].try_into().expect("8 bytes"));
+    let service_us = u64::from_le_bytes(payload[8..16].try_into().expect("8 bytes"));
+    t.clear();
+    for chunk in payload[16..].chunks_exact(8) {
+        t.push(i64::from_le_bytes(chunk.try_into().expect("8 bytes")));
+    }
+    Ok((queue_us, service_us))
+}
+
+/// Tuning for both ends of the wire (the config file's `net` stanza).
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Listen address for `kansas serve --listen` when the flag carries
+    /// no explicit address (`None` = the flag must name one).
+    pub listen: Option<String>,
+    /// Maximum accepted payload length; a header announcing more closes
+    /// the connection after a typed error frame.
+    pub max_frame: usize,
+    /// Maximum concurrently served connections; further accepts are
+    /// answered with an error frame and closed.
+    pub max_conns: usize,
+    /// Set `TCP_NODELAY` on every connection (both ends). On by
+    /// default: the protocol is request/response over small frames,
+    /// where Nagle-delayed acks dominate measured latency.
+    pub nodelay: bool,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        Self { listen: None, max_frame: 1 << 20, max_conns: 1024, nodelay: true }
+    }
+}
+
+/// Live counters for a [`NetServer`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NetStats {
+    /// Connections accepted over the server's lifetime.
+    pub accepted: u64,
+    /// Connections currently open.
+    pub active: usize,
+    /// Request/control frames fully decoded.
+    pub frames_in: u64,
+    /// Response/error frames written.
+    pub frames_out: u64,
+    /// Malformed frames answered with a `MALFORMED` error.
+    pub malformed: u64,
+}
+
+struct ServerShared {
+    /// Registered models indexed by wire id (the registration slot; a
+    /// removed tenant's slot is `None` and answers `UnknownModel`).
+    by_slot: Vec<Option<ModelHandle>>,
+    telemetry: Arc<Telemetry>,
+    stop: AtomicBool,
+    cfg: NetConfig,
+    accepted: AtomicU64,
+    active: AtomicUsize,
+    frames_in: AtomicU64,
+    frames_out: AtomicU64,
+    malformed: AtomicU64,
+}
+
+impl ServerShared {
+    fn handle(&self, wire_id: u32) -> Option<&ModelHandle> {
+        self.by_slot.get(wire_id as usize).and_then(|h| h.as_ref())
+    }
+
+    fn models_json(&self) -> String {
+        let models: Vec<Value> = self
+            .by_slot
+            .iter()
+            .flatten()
+            .map(|h| {
+                Value::obj([
+                    ("id", Value::num(h.model_id().0 as f64)),
+                    ("name", Value::str(h.name())),
+                    ("in_dim", Value::num(h.in_dim() as f64)),
+                    ("out_dim", Value::num(h.out_dim() as f64)),
+                ])
+            })
+            .collect();
+        Value::obj([("models", Value::Arr(models))]).render()
+    }
+}
+
+/// What the reader hands the writer thread, in submission order.
+enum Reply {
+    /// An admitted request: resolve the ticket, then answer.
+    Flight(u64, Ticket),
+    /// An immediate typed error (admission failure or protocol error).
+    Reject(u64, u8, String),
+    /// A JSON control response.
+    Json(u64, FrameType, String),
+}
+
+/// The TCP front door for a running [`Gateway`].
+///
+/// Start one with [`NetServer::start`]; it accepts connections until
+/// [`NetServer::shutdown`], which stops accepting, lets every open
+/// connection drain its in-flight requests, and joins all threads.
+/// Shut the server down *before* the gateway so drains can complete.
+///
+/// # Examples
+///
+/// ```
+/// use kan_sas::coordinator::net::{NetClient, NetConfig, NetServer};
+/// use kan_sas::coordinator::{GatewayBuilder, GatewayConfig};
+/// use kan_sas::kan::{Engine, QuantizedModel};
+///
+/// let mut b = GatewayBuilder::with_config(GatewayConfig {
+///     replicas: 1,
+///     ..Default::default()
+/// });
+/// b.register("demo", Engine::new(QuantizedModel::synthetic("demo", &[4, 6, 3], 5, 3, 9)));
+/// let gateway = b.start();
+///
+/// let server = NetServer::start("127.0.0.1:0", &gateway, NetConfig::default())?;
+/// let client = NetClient::connect(&server.local_addr().to_string())?;
+/// let demo = client.handle("demo")?;
+/// let resp = demo.infer_q(vec![10, 20, 30, 40])?;
+/// assert_eq!(resp.t.len(), 3);
+/// drop(client);
+/// server.shutdown();
+/// gateway.shutdown();
+/// # Ok::<(), Box<dyn std::error::Error>>(())
+/// ```
+pub struct NetServer {
+    shared: Arc<ServerShared>,
+    local: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start serving every model registered on `gateway` at call time.
+    /// Models hot-added later are not reachable over this server.
+    pub fn start(addr: &str, gateway: &Gateway, cfg: NetConfig) -> io::Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let mut by_slot: Vec<Option<ModelHandle>> = Vec::new();
+        for h in gateway.handles() {
+            let slot = h.model_id().0;
+            // keep wire id == registration slot; a removed tenant's
+            // hole stays `None` and answers UnknownModel
+            if by_slot.len() <= slot {
+                by_slot.resize_with(slot + 1, || None);
+            }
+            by_slot[slot] = Some(h);
+        }
+        let shared = Arc::new(ServerShared {
+            by_slot,
+            telemetry: gateway.telemetry(),
+            stop: AtomicBool::new(false),
+            cfg,
+            accepted: AtomicU64::new(0),
+            active: AtomicUsize::new(0),
+            frames_in: AtomicU64::new(0),
+            frames_out: AtomicU64::new(0),
+            malformed: AtomicU64::new(0),
+        });
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let shared = Arc::clone(&shared);
+            let conns = Arc::clone(&conns);
+            thread::Builder::new().name("net-accept".into()).spawn(move || {
+                accept_loop(listener, shared, conns);
+            })?
+        };
+        Ok(NetServer { shared, local, accept: Some(accept), conns })
+    }
+
+    /// The actually bound address (resolves an ephemeral `:0` port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Connections currently open.
+    pub fn connections(&self) -> usize {
+        self.shared.active.load(Ordering::Relaxed)
+    }
+
+    /// Live server counters.
+    pub fn stats(&self) -> NetStats {
+        NetStats {
+            accepted: self.shared.accepted.load(Ordering::Relaxed),
+            active: self.shared.active.load(Ordering::Relaxed),
+            frames_in: self.shared.frames_in.load(Ordering::Relaxed),
+            frames_out: self.shared.frames_out.load(Ordering::Relaxed),
+            malformed: self.shared.malformed.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Stop accepting, drain every open connection (in-flight requests
+    /// are still answered), and join all threads. Returns the final
+    /// counters.
+    pub fn shutdown(mut self) -> NetStats {
+        self.stop_and_join();
+        self.stats()
+    }
+
+    fn stop_and_join(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<_> = self.conns.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    shared: Arc<ServerShared>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+) {
+    while !shared.stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                shared.accepted.fetch_add(1, Ordering::Relaxed);
+                if shared.active.load(Ordering::Relaxed) >= shared.cfg.max_conns {
+                    refuse(stream, "connection limit reached");
+                    continue;
+                }
+                shared.active.fetch_add(1, Ordering::Relaxed);
+                let sh = Arc::clone(&shared);
+                let conn = thread::Builder::new()
+                    .name("net-conn".into())
+                    .spawn(move || {
+                        serve_connection(stream, &sh);
+                        sh.active.fetch_sub(1, Ordering::Relaxed);
+                    })
+                    .expect("spawn connection thread");
+                let mut cs = conns.lock().unwrap();
+                cs.retain(|h| !h.is_finished());
+                cs.push(conn);
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+/// Answer a refused connection with a single error frame, best-effort.
+fn refuse(mut stream: TcpStream, msg: &str) {
+    let mut buf = Vec::with_capacity(HEADER_LEN + msg.len());
+    encode_error(&mut buf, 0, code::CLOSED, msg);
+    let _ = stream.write_all(&buf);
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// `read_exact` against a read-timeout socket: keeps the fill offset
+/// across `WouldBlock`/`TimedOut` so a stop-flag poll never tears a
+/// frame. Returns `false` on EOF/error or when `stop` was raised before
+/// any byte of this read arrived (mid-frame reads keep going so a drain
+/// finishes cleanly).
+fn read_full(stream: &mut TcpStream, buf: &mut [u8], stop: &AtomicBool) -> bool {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        match stream.read(&mut buf[filled..]) {
+            Ok(0) => return false,
+            Ok(n) => filled += n,
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                if filled == 0 && stop.load(Ordering::SeqCst) {
+                    return false;
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => return false,
+        }
+    }
+    true
+}
+
+/// Skip `len` payload bytes after a frame whose payload is not wanted
+/// (malformed or rejected before admission).
+fn skip_payload(stream: &mut TcpStream, len: usize, scratch: &mut Vec<u8>, stop: &AtomicBool) -> bool {
+    let mut left = len;
+    while left > 0 {
+        let take = left.min(4096);
+        scratch.resize(take, 0);
+        if !read_full(stream, &mut scratch[..take], stop) {
+            return false;
+        }
+        left -= take;
+    }
+    true
+}
+
+/// One connection: this (reader) thread decodes frames into gateway
+/// admission; a paired writer thread resolves tickets and writes
+/// responses. Exits on EOF, socket error, protocol loss of sync, or
+/// server stop — then joins the writer, which drains all in-flight
+/// tickets first.
+fn serve_connection(mut stream: TcpStream, shared: &ServerShared) {
+    let _ = stream.set_nodelay(shared.cfg.nodelay);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let (tx, rx) = channel::<Reply>();
+    let writer = match thread::Builder::new()
+        .name("net-write".into())
+        .spawn(move || write_loop(write_half, rx))
+    {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+
+    let mut hdr = [0u8; HEADER_LEN];
+    let mut scratch: Vec<u8> = Vec::new();
+    let stop = &shared.stop;
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        if !read_full(&mut stream, &mut hdr, stop) {
+            break;
+        }
+        let h = match FrameHeader::decode(&hdr) {
+            Ok(h) => h,
+            Err(e) => {
+                // the length field sits at a fixed offset, so even a
+                // bad-magic header tells us how much to skip — if it is
+                // believable. Past max_frame the stream cannot be
+                // resynced; answer and close.
+                shared.malformed.fetch_add(1, Ordering::Relaxed);
+                let len = u32::from_le_bytes(hdr[28..32].try_into().expect("4 bytes")) as usize;
+                let corr = u64::from_le_bytes(hdr[8..16].try_into().expect("8 bytes"));
+                let survivable = len <= shared.cfg.max_frame;
+                let _ = tx.send(Reply::Reject(corr, code::MALFORMED, e.to_string()));
+                if !survivable || !skip_payload(&mut stream, len, &mut scratch, stop) {
+                    break;
+                }
+                continue;
+            }
+        };
+        let len = h.len as usize;
+        if len > shared.cfg.max_frame {
+            shared.malformed.fetch_add(1, Ordering::Relaxed);
+            let msg = format!("frame of {len} bytes exceeds max_frame {}", shared.cfg.max_frame);
+            let _ = tx.send(Reply::Reject(h.corr, code::MALFORMED, msg));
+            break;
+        }
+        shared.frames_in.fetch_add(1, Ordering::Relaxed);
+        match h.ty {
+            FrameType::InferRequest => {
+                let Some(handle) = shared.handle(h.model) else {
+                    let _ = tx.send(Reply::Reject(
+                        h.corr,
+                        code::UNKNOWN_MODEL,
+                        format!("unknown model id {}", h.model),
+                    ));
+                    if !skip_payload(&mut stream, len, &mut scratch, stop) {
+                        break;
+                    }
+                    continue;
+                };
+                if len != handle.in_dim() {
+                    let msg = format!(
+                        "input dim {len} != model '{}' dim {}",
+                        handle.name(),
+                        handle.in_dim()
+                    );
+                    let _ = tx.send(Reply::Reject(h.corr, code::INVALID_INPUT, msg));
+                    if !skip_payload(&mut stream, len, &mut scratch, stop) {
+                        break;
+                    }
+                    continue;
+                }
+                // decode straight into an admission slot: the payload
+                // lands in a pooled row buffer that `submit` hands to
+                // the gateway, and the serving worker recycles
+                let mut row = handle.acquire_row();
+                row.resize(len, 0);
+                if !read_full(&mut stream, &mut row, stop) {
+                    break;
+                }
+                let mut req = Request::from_q(row);
+                if h.deadline_us > 0 {
+                    req = req.with_deadline(Duration::from_micros(h.deadline_us));
+                }
+                req = match h.code {
+                    1 => req.with_priority(Priority::Low),
+                    2 => req.with_priority(Priority::Normal),
+                    3 => req.with_priority(Priority::High),
+                    _ => req,
+                };
+                match handle.submit(req) {
+                    Ok(t) => {
+                        let _ = tx.send(Reply::Flight(h.corr, t));
+                    }
+                    Err(e) => {
+                        let _ = tx.send(Reply::Reject(h.corr, error_to_code(&e), e.to_string()));
+                    }
+                }
+            }
+            FrameType::StatsRequest => {
+                let json = shared.telemetry.snapshot().to_value().render();
+                let _ = tx.send(Reply::Json(h.corr, FrameType::StatsResponse, json));
+            }
+            FrameType::ModelsRequest => {
+                let _ = tx.send(Reply::Json(
+                    h.corr,
+                    FrameType::ModelsResponse,
+                    shared.models_json(),
+                ));
+            }
+            FrameType::InferOk
+            | FrameType::Error
+            | FrameType::StatsResponse
+            | FrameType::ModelsResponse => {
+                // response types are server → client only
+                shared.malformed.fetch_add(1, Ordering::Relaxed);
+                let msg = format!("unexpected {:?} frame from a client", h.ty);
+                let _ = tx.send(Reply::Reject(h.corr, code::MALFORMED, msg));
+                if !skip_payload(&mut stream, len, &mut scratch, stop) {
+                    break;
+                }
+            }
+        }
+    }
+    // Reader is done: close the submit side. The writer drains every
+    // queued reply (waiting in-flight tickets out — the gateway counts
+    // them whether or not the peer still reads), then exits.
+    drop(tx);
+    let frames = writer.join().unwrap_or(0);
+    shared.frames_out.fetch_add(frames, Ordering::Relaxed);
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// Writer half of a connection: resolves replies in submission order
+/// into one reusable encode buffer. Write errors flip the connection to
+/// drain-only — remaining tickets are still waited (conservation), the
+/// bytes just go nowhere. Returns the frame count it wrote.
+fn write_loop(mut stream: TcpStream, rx: Receiver<Reply>) -> u64 {
+    let mut buf: Vec<u8> = Vec::with_capacity(4096);
+    let mut dead = false;
+    let mut frames = 0u64;
+    while let Ok(reply) = rx.recv() {
+        match reply {
+            Reply::Flight(corr, ticket) => match ticket.wait() {
+                Ok(resp) => {
+                    encode_response(&mut buf, corr, resp.queue_us, resp.service_us, &resp.t);
+                }
+                Err(e) => encode_error(&mut buf, corr, error_to_code(&e), &e.to_string()),
+            },
+            Reply::Reject(corr, c, msg) => encode_error(&mut buf, corr, c, &msg),
+            Reply::Json(corr, ty, json) => encode_json(&mut buf, ty, corr, &json),
+        }
+        if !dead {
+            if stream.write_all(&buf).is_err() {
+                dead = true;
+            } else {
+                frames += 1;
+            }
+        }
+    }
+    let _ = stream.flush();
+    frames
+}
+
+// ---------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------
+
+/// A response received over the wire.
+#[derive(Clone, Debug)]
+pub struct RemoteResponse {
+    /// Final-layer i64 accumulators for the row (argmax = class).
+    pub t: Vec<i64>,
+    /// Server-side queueing + batching delay in microseconds.
+    pub queue_us: u64,
+    /// Server-side compute + scatter time in microseconds.
+    pub service_us: u64,
+    /// Client-observed submit→receive latency in microseconds (wire
+    /// time included; stamped by the client's reader thread).
+    pub e2e_us: u64,
+}
+
+enum ClientReply {
+    Infer(RemoteResponse),
+    Json(String),
+}
+
+type PendingSlot = (Instant, Sender<Result<ClientReply, ServeError>>);
+
+struct ClientShared {
+    /// Write half + its reusable encode buffer, serialized under one
+    /// lock so frames never interleave.
+    writer: Mutex<(TcpStream, Vec<u8>)>,
+    pending: Mutex<HashMap<u64, PendingSlot>>,
+    next_corr: AtomicU64,
+    closed: AtomicBool,
+}
+
+impl ClientShared {
+    fn send_frame(&self, encode: impl FnOnce(&mut Vec<u8>)) -> Result<(), ServeError> {
+        if self.closed.load(Ordering::SeqCst) {
+            return Err(ServeError::Closed);
+        }
+        let mut w = self.writer.lock().unwrap();
+        let (stream, buf) = &mut *w;
+        encode(buf);
+        stream.write_all(buf).map_err(|_| {
+            self.closed.store(true, Ordering::SeqCst);
+            ServeError::Closed
+        })
+    }
+
+    fn register(&self) -> (u64, Receiver<Result<ClientReply, ServeError>>) {
+        let corr = self.next_corr.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        self.pending.lock().unwrap().insert(corr, (Instant::now(), tx));
+        (corr, rx)
+    }
+
+    fn unregister(&self, corr: u64) {
+        self.pending.lock().unwrap().remove(&corr);
+    }
+}
+
+/// A pipelined client for a [`NetServer`]: many logical requests share
+/// one TCP connection, matched to their replies by correlation id. All
+/// methods are callable from any thread; submissions from different
+/// threads interleave at frame granularity.
+///
+/// Clone [`RemoteHandle`]s (one per model, from [`NetClient::handle`] /
+/// [`NetClient::handles`]) to drive load; they stay valid for the
+/// client's lifetime. Dropping the client closes the connection — any
+/// unresolved tickets then answer [`ServeError::Closed`].
+pub struct NetClient {
+    shared: Arc<ClientShared>,
+    reader: Option<JoinHandle<()>>,
+    max_frame: usize,
+}
+
+impl NetClient {
+    /// Connect with default [`NetConfig`] tuning.
+    pub fn connect(addr: &str) -> io::Result<NetClient> {
+        Self::connect_with(addr, NetConfig::default())
+    }
+
+    /// Connect to a listening server.
+    pub fn connect_with(addr: &str, cfg: NetConfig) -> io::Result<NetClient> {
+        let mut last = io::Error::new(io::ErrorKind::AddrNotAvailable, "no address resolved");
+        let mut stream = None;
+        for a in addr.to_socket_addrs()? {
+            match TcpStream::connect(a) {
+                Ok(s) => {
+                    stream = Some(s);
+                    break;
+                }
+                Err(e) => last = e,
+            }
+        }
+        let stream = stream.ok_or(last)?;
+        let _ = stream.set_nodelay(cfg.nodelay);
+        let read_half = stream.try_clone()?;
+        let shared = Arc::new(ClientShared {
+            writer: Mutex::new((stream, Vec::with_capacity(4096))),
+            pending: Mutex::new(HashMap::new()),
+            next_corr: AtomicU64::new(1),
+            closed: AtomicBool::new(false),
+        });
+        let reader = {
+            let shared = Arc::clone(&shared);
+            let max_frame = cfg.max_frame;
+            thread::Builder::new()
+                .name("net-client-read".into())
+                .spawn(move || client_read_loop(read_half, &shared, max_frame))?
+        };
+        Ok(NetClient { shared, reader: Some(reader), max_frame: cfg.max_frame })
+    }
+
+    /// The server's model directory (a `ModelsRequest` round trip).
+    pub fn models(&self) -> Result<Vec<RemoteModel>, ServeError> {
+        let (corr, rx) = self.shared.register();
+        if let Err(e) =
+            self.shared.send_frame(|buf| encode_control(buf, FrameType::ModelsRequest, corr))
+        {
+            self.shared.unregister(corr);
+            return Err(e);
+        }
+        let json = match rx.recv().map_err(|_| ServeError::Closed)?? {
+            ClientReply::Json(j) => j,
+            ClientReply::Infer(_) => {
+                return Err(ServeError::InvalidInput("protocol: infer reply to models".into()))
+            }
+        };
+        let v = Value::parse(&json)
+            .map_err(|e| ServeError::InvalidInput(format!("protocol: models JSON: {e}")))?;
+        let arr = v
+            .get("models")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| ServeError::InvalidInput("protocol: models JSON shape".into()))?;
+        let mut out = Vec::with_capacity(arr.len());
+        for m in arr {
+            out.push(RemoteModel {
+                id: m.get("id").and_then(Value::as_usize).unwrap_or(0) as u32,
+                name: m.get("name").and_then(Value::as_str).unwrap_or("").to_string(),
+                in_dim: m.get("in_dim").and_then(Value::as_usize).unwrap_or(0),
+                out_dim: m.get("out_dim").and_then(Value::as_usize).unwrap_or(0),
+            });
+        }
+        Ok(out)
+    }
+
+    /// A submission handle for every registered model, in wire-id order.
+    pub fn handles(&self) -> Result<Vec<RemoteHandle>, ServeError> {
+        Ok(self.models()?.into_iter().map(|m| self.handle_for(&m)).collect())
+    }
+
+    /// A submission handle for the model registered as `name`.
+    pub fn handle(&self, name: &str) -> Result<RemoteHandle, ServeError> {
+        self.models()?
+            .into_iter()
+            .find(|m| m.name == name)
+            .map(|m| self.handle_for(&m))
+            .ok_or_else(|| ServeError::UnknownModel(name.to_string()))
+    }
+
+    /// A submission handle for an already-fetched directory entry.
+    pub fn handle_for(&self, model: &RemoteModel) -> RemoteHandle {
+        RemoteHandle {
+            shared: Arc::clone(&self.shared),
+            id: model.id,
+            name: Arc::from(model.name.as_str()),
+            in_dim: model.in_dim,
+            out_dim: model.out_dim,
+            rows: Arc::new(Mutex::new(Vec::new())),
+        }
+    }
+
+    /// A live [`Telemetry::snapshot`] from the server, as rendered JSON
+    /// (a `StatsRequest` round trip). Sampled trace spans are *moved*
+    /// into whichever snapshot claims them first, so a polling remote
+    /// client drains spans the serving process would otherwise print.
+    pub fn stats_json(&self) -> Result<String, ServeError> {
+        let (corr, rx) = self.shared.register();
+        if let Err(e) =
+            self.shared.send_frame(|buf| encode_control(buf, FrameType::StatsRequest, corr))
+        {
+            self.shared.unregister(corr);
+            return Err(e);
+        }
+        match rx.recv().map_err(|_| ServeError::Closed)?? {
+            ClientReply::Json(j) => Ok(j),
+            ClientReply::Infer(_) => {
+                Err(ServeError::InvalidInput("protocol: infer reply to stats".into()))
+            }
+        }
+    }
+
+    /// Maximum payload this client will accept on a response frame.
+    pub fn max_frame(&self) -> usize {
+        self.max_frame
+    }
+
+    /// Close the connection and join the reader thread. Outstanding
+    /// tickets resolve [`ServeError::Closed`].
+    pub fn close(mut self) {
+        self.close_inner();
+    }
+
+    fn close_inner(&mut self) {
+        self.shared.closed.store(true, Ordering::SeqCst);
+        if let Ok(w) = self.shared.writer.lock() {
+            let _ = w.0.shutdown(Shutdown::Both);
+        }
+        if let Some(r) = self.reader.take() {
+            let _ = r.join();
+        }
+    }
+}
+
+impl Drop for NetClient {
+    fn drop(&mut self) {
+        self.close_inner();
+    }
+}
+
+/// One entry of the server's model directory.
+#[derive(Clone, Debug)]
+pub struct RemoteModel {
+    /// Wire model id (the gateway registration slot).
+    pub id: u32,
+    /// Registered model name.
+    pub name: String,
+    /// Input row width in bytes.
+    pub in_dim: usize,
+    /// Logits row width.
+    pub out_dim: usize,
+}
+
+/// A cloneable, typed submission handle for one remote model — the
+/// wire twin of [`ModelHandle`]. Submissions multiplex over the owning
+/// [`NetClient`]'s connection.
+#[derive(Clone)]
+pub struct RemoteHandle {
+    shared: Arc<ClientShared>,
+    id: u32,
+    name: Arc<str>,
+    in_dim: usize,
+    out_dim: usize,
+    /// Client-side free-list of row buffers: a row is recycled as soon
+    /// as its bytes hit the socket, so a steady-state driver reuses the
+    /// same buffers instead of allocating per request.
+    rows: Arc<Mutex<Vec<Vec<u8>>>>,
+}
+
+impl RemoteHandle {
+    /// The registered model name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Wire model id.
+    pub fn id(&self) -> u32 {
+        self.id
+    }
+
+    /// Input row width (quantized activations).
+    pub fn in_dim(&self) -> usize {
+        self.in_dim
+    }
+
+    /// Logits row width.
+    pub fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+
+    /// An empty row buffer with `in_dim` capacity — recycled from this
+    /// handle's free-list when available.
+    pub fn acquire_row(&self) -> Vec<u8> {
+        self.rows.lock().unwrap().pop().unwrap_or_else(|| Vec::with_capacity(self.in_dim))
+    }
+
+    /// Submit one quantized row with optional deadline and priority;
+    /// returns a [`RemoteTicket`] without waiting. The row buffer is
+    /// recycled onto this handle's free-list once written to the wire.
+    pub fn submit(
+        &self,
+        mut row: Vec<u8>,
+        deadline: Option<Duration>,
+        priority: Option<Priority>,
+    ) -> Result<RemoteTicket, ServeError> {
+        if row.len() != self.in_dim {
+            return Err(ServeError::InvalidInput(format!(
+                "input dim {} != model '{}' dim {}",
+                row.len(),
+                self.name,
+                self.in_dim
+            )));
+        }
+        let deadline_us = deadline.map(|d| d.as_micros() as u64).unwrap_or(0);
+        let pri = match priority {
+            None => 0,
+            Some(Priority::Low) => 1,
+            Some(Priority::Normal) => 2,
+            Some(Priority::High) => 3,
+        };
+        let (corr, rx) = self.shared.register();
+        let submitted = Instant::now();
+        let sent = self
+            .shared
+            .send_frame(|buf| encode_request(buf, corr, self.id, &row, deadline_us, pri));
+        if let Err(e) = sent {
+            self.shared.unregister(corr);
+            return Err(e);
+        }
+        row.clear();
+        let mut rows = self.rows.lock().unwrap();
+        if rows.len() < 64 && row.capacity() >= self.in_dim {
+            rows.push(row);
+        }
+        drop(rows);
+        Ok(RemoteTicket { rx, submitted })
+    }
+
+    /// Submit with default options (no deadline, tenant-default
+    /// priority).
+    pub fn submit_q(&self, row: Vec<u8>) -> Result<RemoteTicket, ServeError> {
+        self.submit(row, None, None)
+    }
+
+    /// Blocking convenience: submit one row and wait for its response.
+    pub fn infer_q(&self, row: Vec<u8>) -> Result<RemoteResponse, ServeError> {
+        self.submit_q(row)?.wait()
+    }
+}
+
+/// A claim on one in-flight remote request. Dropping it abandons the
+/// answer client-side (the server still serves and counts it).
+pub struct RemoteTicket {
+    rx: Receiver<Result<ClientReply, ServeError>>,
+    /// When the request frame was written.
+    pub submitted: Instant,
+}
+
+impl RemoteTicket {
+    /// Block until the response frame arrives (or the connection dies,
+    /// which resolves [`ServeError::Closed`]).
+    pub fn wait(self) -> Result<RemoteResponse, ServeError> {
+        match self.rx.recv().map_err(|_| ServeError::Closed)?? {
+            ClientReply::Infer(r) => Ok(r),
+            ClientReply::Json(_) => {
+                Err(ServeError::InvalidInput("protocol: json reply to infer".into()))
+            }
+        }
+    }
+
+    /// Non-blocking poll; `None` while the response is still in flight.
+    pub fn try_wait(&self) -> Option<Result<RemoteResponse, ServeError>> {
+        match self.rx.try_recv() {
+            Ok(Ok(ClientReply::Infer(r))) => Some(Ok(r)),
+            Ok(Ok(ClientReply::Json(_))) => {
+                Some(Err(ServeError::InvalidInput("protocol: json reply to infer".into())))
+            }
+            Ok(Err(e)) => Some(Err(e)),
+            Err(std::sync::mpsc::TryRecvError::Empty) => None,
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => Some(Err(ServeError::Closed)),
+        }
+    }
+}
+
+/// Client reader: match response frames to pending correlation ids. On
+/// EOF or a framing error, fail every pending request with `Closed`.
+fn client_read_loop(mut stream: TcpStream, shared: &ClientShared, max_frame: usize) {
+    let mut hdr = [0u8; HEADER_LEN];
+    let mut payload: Vec<u8> = Vec::new();
+    let never = AtomicBool::new(false);
+    loop {
+        if !read_full(&mut stream, &mut hdr, &never) {
+            break;
+        }
+        let h = match FrameHeader::decode(&hdr) {
+            Ok(h) => h,
+            Err(_) => break, // server never sends garbage; lost sync
+        };
+        let len = h.len as usize;
+        if len > max_frame {
+            break;
+        }
+        payload.resize(len, 0);
+        if !read_full(&mut stream, &mut payload, &never) {
+            break;
+        }
+        let slot = shared.pending.lock().unwrap().remove(&h.corr);
+        let Some((submitted, tx)) = slot else { continue };
+        let reply = match h.ty {
+            FrameType::InferOk => {
+                let mut t = Vec::new();
+                match decode_ok_payload(&payload, &mut t) {
+                    Ok((queue_us, service_us)) => Ok(ClientReply::Infer(RemoteResponse {
+                        t,
+                        queue_us,
+                        service_us,
+                        e2e_us: submitted.elapsed().as_micros() as u64,
+                    })),
+                    Err(e) => Err(e),
+                }
+            }
+            FrameType::Error => {
+                let msg = String::from_utf8_lossy(&payload);
+                Err(error_from_wire(h.code, &msg))
+            }
+            FrameType::StatsResponse | FrameType::ModelsResponse => {
+                Ok(ClientReply::Json(String::from_utf8_lossy(&payload).into_owned()))
+            }
+            _ => Err(ServeError::InvalidInput(format!(
+                "protocol: unexpected {:?} frame from server",
+                h.ty
+            ))),
+        };
+        let _ = tx.send(reply);
+    }
+    shared.closed.store(true, Ordering::SeqCst);
+    let pending: Vec<PendingSlot> =
+        shared.pending.lock().unwrap().drain().map(|(_, slot)| slot).collect();
+    for (_, tx) in pending {
+        let _ = tx.send(Err(ServeError::Closed));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_round_trip_all_types() {
+        for (ty, c) in [
+            (FrameType::InferRequest, 3),
+            (FrameType::InferOk, 0),
+            (FrameType::Error, code::MALFORMED),
+            (FrameType::StatsRequest, 0),
+            (FrameType::StatsResponse, 0),
+            (FrameType::ModelsRequest, 0),
+            (FrameType::ModelsResponse, 0),
+        ] {
+            let h = FrameHeader {
+                ty,
+                code: c,
+                corr: 0xDEAD_BEEF_0BAD_CAFE,
+                model: 7,
+                deadline_us: 123_456,
+                len: 99,
+            };
+            let mut buf = [0u8; HEADER_LEN];
+            h.encode(&mut buf);
+            assert_eq!(FrameHeader::decode(&buf).unwrap(), h);
+        }
+    }
+
+    #[test]
+    fn decode_rejects_bad_magic_version_type() {
+        let h = FrameHeader {
+            ty: FrameType::InferRequest,
+            code: 0,
+            corr: 1,
+            model: 0,
+            deadline_us: 0,
+            len: 4,
+        };
+        let mut buf = [0u8; HEADER_LEN];
+        h.encode(&mut buf);
+        let mut bad = buf;
+        bad[0] = b'X';
+        assert!(matches!(FrameHeader::decode(&bad), Err(FrameError::BadMagic(_))));
+        let mut bad = buf;
+        bad[4] = 9;
+        assert_eq!(FrameHeader::decode(&bad), Err(FrameError::BadVersion(9)));
+        let mut bad = buf;
+        bad[5] = 200;
+        assert_eq!(FrameHeader::decode(&bad), Err(FrameError::BadType(200)));
+    }
+
+    #[test]
+    fn response_payload_round_trip() {
+        let logits = [5i64, -3, 1 << 40];
+        let mut buf = Vec::new();
+        encode_response(&mut buf, 9, 100, 250, &logits);
+        let h = FrameHeader::decode(buf[..HEADER_LEN].try_into().unwrap()).unwrap();
+        assert_eq!(h.ty, FrameType::InferOk);
+        assert_eq!(h.corr, 9);
+        assert_eq!(h.len as usize, buf.len() - HEADER_LEN);
+        let mut t = Vec::new();
+        let (q, s) = decode_ok_payload(&buf[HEADER_LEN..], &mut t).unwrap();
+        assert_eq!((q, s), (100, 250));
+        assert_eq!(t, logits);
+    }
+
+    #[test]
+    fn error_code_round_trip() {
+        let cases = [
+            ServeError::QueueFull,
+            ServeError::DeadlineExceeded,
+            ServeError::Closed,
+            ServeError::InvalidInput("dim".into()),
+            ServeError::UnknownModel("m".into()),
+            ServeError::Inference("boom".into()),
+        ];
+        for e in cases {
+            let c = error_to_code(&e);
+            let back = error_from_wire(c, &e.to_string());
+            assert_eq!(std::mem::discriminant(&back), std::mem::discriminant(&e));
+        }
+        assert!(matches!(
+            error_from_wire(code::MALFORMED, "bad magic"),
+            ServeError::InvalidInput(_)
+        ));
+    }
+
+    #[test]
+    fn truncated_ok_payload_is_typed() {
+        let mut t = Vec::new();
+        assert!(decode_ok_payload(&[0u8; 10], &mut t).is_err());
+        assert!(decode_ok_payload(&[0u8; 21], &mut t).is_err());
+    }
+}

@@ -26,6 +26,10 @@
 //! [`run_mix`] is the multi-tenant variant: a weighted model mix over
 //! one gateway — the serving-tier version of the paper's Fig. 8
 //! application mixes — reporting per-model *and* aggregate outcomes.
+//! Both are generic over a [`RowDriver`], so the same arrival process
+//! drives an in-process [`ModelHandle`] or a network [`RemoteHandle`]
+//! (`kansas load --connect`) — the latency gap between the two at the
+//! same sweep is the wire-protocol overhead.
 //! [`run_churn`] drives a **registry-churn** scenario: the same
 //! open-loop arrival process while a scripted [`ChurnEvent`] timeline
 //! hot-adds, re-weights, and removes tenants on the live gateway —
@@ -37,6 +41,7 @@ use std::sync::mpsc::channel;
 use std::thread;
 use std::time::{Duration, Instant};
 
+use crate::coordinator::net::{RemoteHandle, RemoteTicket};
 use crate::coordinator::{
     DrainMode, Gateway, LatencyStats, Metrics, ModelHandle, ServeError, Ticket,
 };
@@ -242,19 +247,85 @@ fn sleep_until(t: Instant) {
     }
 }
 
+/// What the generators need from a serving endpoint: acquire a row
+/// buffer, submit it, and later resolve the pending ticket to a
+/// `(queue_us, service_us)` latency split. Implemented by the
+/// in-process [`ModelHandle`] and by the network-front-door
+/// [`RemoteHandle`], so [`run`], [`run_mix`], and [`closed_loop`] drive
+/// either through identical arrival logic.
+///
+/// For the remote driver, "service" is everything after server-side
+/// queueing *as observed by the client* — engine time plus framing and
+/// wire time — so remote latency totals are end-to-end and the gap vs
+/// in-process rows at the same sweep is the protocol overhead.
+pub trait RowDriver: Clone + Send + 'static {
+    /// Pending-response token returned by [`RowDriver::submit_row`].
+    type Ticket: Send + 'static;
+    /// Model name for per-model report rows.
+    fn name(&self) -> &str;
+    /// Quantized input-row width.
+    fn in_dim(&self) -> usize;
+    /// An empty row buffer to fill (pooled where the driver supports it).
+    fn acquire_row(&self) -> Vec<u8>;
+    /// Submit one quantized `in_dim`-wide row without waiting.
+    fn submit_row(&self, row: Vec<u8>) -> Result<Self::Ticket, ServeError>;
+    /// Block until the ticket resolves; `Ok((queue_us, service_us))`.
+    fn wait(t: Self::Ticket) -> Result<(u64, u64), ServeError>;
+}
+
+impl RowDriver for ModelHandle {
+    type Ticket = Ticket;
+    fn name(&self) -> &str {
+        ModelHandle::name(self)
+    }
+    fn in_dim(&self) -> usize {
+        ModelHandle::in_dim(self)
+    }
+    fn acquire_row(&self) -> Vec<u8> {
+        ModelHandle::acquire_row(self)
+    }
+    fn submit_row(&self, row: Vec<u8>) -> Result<Ticket, ServeError> {
+        self.submit_q(row)
+    }
+    fn wait(t: Ticket) -> Result<(u64, u64), ServeError> {
+        t.wait().map(|r| (r.queue_us, r.service_us))
+    }
+}
+
+impl RowDriver for RemoteHandle {
+    type Ticket = RemoteTicket;
+    fn name(&self) -> &str {
+        RemoteHandle::name(self)
+    }
+    fn in_dim(&self) -> usize {
+        RemoteHandle::in_dim(self)
+    }
+    fn acquire_row(&self) -> Vec<u8> {
+        RemoteHandle::acquire_row(self)
+    }
+    fn submit_row(&self, row: Vec<u8>) -> Result<RemoteTicket, ServeError> {
+        self.submit_q(row)
+    }
+    fn wait(t: RemoteTicket) -> Result<(u64, u64), ServeError> {
+        // queue_us is the server's own split; the remainder of the
+        // client-observed E2E (service + framing + wire) is "service"
+        t.wait().map(|r| (r.queue_us, r.e2e_us.saturating_sub(r.queue_us)))
+    }
+}
+
 /// Drive `handle` with the scenario's open-loop Poisson arrivals; block
 /// until every in-flight ticket resolves. Deterministic per `seed` in
 /// which inputs are generated (arrival *times* are wall-clock, so counts
 /// are statistical).
-pub fn run(handle: &ModelHandle, scenario: &Scenario, seed: u64) -> LoadReport {
+pub fn run<H: RowDriver>(handle: &H, scenario: &Scenario, seed: u64) -> LoadReport {
     let mix = run_mix(&[MixEntry { handle: handle.clone(), weight: 1.0 }], scenario, seed);
     LoadReport { scenario: scenario.name.clone(), ..mix.total }
 }
 
 /// One tenant of a weighted multi-model mix.
 #[derive(Clone)]
-pub struct MixEntry {
-    pub handle: ModelHandle,
+pub struct MixEntry<H = ModelHandle> {
+    pub handle: H,
     /// Relative arrival weight (normalized over the mix).
     pub weight: f64,
 }
@@ -274,7 +345,12 @@ pub struct MixReport {
 /// for the arrival distribution — [`draw_model`] samples it and
 /// [`expected_arrivals_per_entry`] integrates it, so the generated
 /// stream and the reported per-model `offered_rps` cannot diverge.
-fn entry_share(entries: &[MixEntry], total_weight: f64, focus: Option<&Focus>, i: usize) -> f64 {
+fn entry_share<H>(
+    entries: &[MixEntry<H>],
+    total_weight: f64,
+    focus: Option<&Focus>,
+    i: usize,
+) -> f64 {
     let n = entries.len();
     if let Some(f) = focus {
         if n == 1 {
@@ -304,9 +380,9 @@ fn entry_share(entries: &[MixEntry], total_weight: f64, focus: Option<&Focus>, i
 /// distribution (with probability `focus.share` the focused entry,
 /// otherwise the other tenants at their relative weights — a skewed
 /// burst still trickles background traffic to the minority models).
-fn draw_model(
+fn draw_model<H>(
     rng: &mut Rng,
-    entries: &[MixEntry],
+    entries: &[MixEntry<H>],
     total_weight: f64,
     focus: Option<&Focus>,
 ) -> usize {
@@ -325,7 +401,7 @@ fn draw_model(
 /// Expected arrival count for each mix entry over the whole schedule:
 /// the per-phase [`entry_share`] integrated against the rate schedule
 /// (drives the per-model `offered_rps` in [`MixReport`]).
-fn expected_arrivals_per_entry(entries: &[MixEntry], scenario: &Scenario) -> Vec<f64> {
+fn expected_arrivals_per_entry<H>(entries: &[MixEntry<H>], scenario: &Scenario) -> Vec<f64> {
     let n = entries.len();
     let total_weight: f64 = entries.iter().map(|e| e.weight).sum();
     (0..n)
@@ -350,12 +426,12 @@ fn expected_arrivals_per_entry(entries: &[MixEntry], scenario: &Scenario) -> Vec
 /// tenant sees Poisson traffic at its share of the offered rate; all
 /// models contend for the same gateway admission queue and worker
 /// fleet. Blocks until every in-flight ticket resolves.
-pub fn run_mix(entries: &[MixEntry], scenario: &Scenario, seed: u64) -> MixReport {
+pub fn run_mix<H: RowDriver>(entries: &[MixEntry<H>], scenario: &Scenario, seed: u64) -> MixReport {
     assert!(!entries.is_empty(), "mix needs at least one model");
     let total_weight: f64 = entries.iter().map(|e| e.weight).sum();
     assert!(total_weight > 0.0, "mix needs positive total weight");
     let n = entries.len();
-    let (tick_tx, tick_rx) = channel::<(usize, Ticket)>();
+    let (tick_tx, tick_rx) = channel::<(usize, H::Ticket)>();
     // collector: resolves tickets concurrently so the generator never
     // waits on responses (open loop); tallies per model
     let collector = thread::spawn(move || {
@@ -363,12 +439,12 @@ pub fn run_mix(entries: &[MixEntry], scenario: &Scenario, seed: u64) -> MixRepor
             (0..n).map(|_| (Metrics::exact(), 0, 0, 0)).collect();
         while let Ok((m, t)) = tick_rx.recv() {
             let slot = &mut per[m];
-            match t.wait() {
-                Ok(resp) => {
+            match H::wait(t) {
+                Ok((queue_us, service_us)) => {
                     slot.1 += 1;
                     slot.0.record_request_split(
-                        Duration::from_micros(resp.queue_us),
-                        Duration::from_micros(resp.service_us),
+                        Duration::from_micros(queue_us),
+                        Duration::from_micros(service_us),
                     );
                 }
                 // the gateway counts deadline expiry inside `shed` (it
@@ -401,10 +477,10 @@ pub fn run_mix(entries: &[MixEntry], scenario: &Scenario, seed: u64) -> MixRepor
                 // model's input shape
                 let idx = draw_model(&mut rng, entries, total_weight, ph.focus.as_ref());
                 let handle = &entries[idx].handle;
-                let x_q: Vec<u8> =
-                    (0..handle.in_dim()).map(|_| rng.below(256) as u8).collect();
+                let mut row = handle.acquire_row();
+                row.extend((0..handle.in_dim()).map(|_| rng.below(256) as u8));
                 submitted[idx] += 1;
-                match handle.submit_q(x_q) {
+                match handle.submit_row(row) {
                     Ok(t) => {
                         let _ = tick_tx.send((idx, t));
                     }
@@ -704,10 +780,10 @@ pub fn run_churn(
                     continue;
                 };
                 let handle = &mix.entries[idx].handle;
-                let x_q: Vec<u8> =
-                    (0..handle.in_dim()).map(|_| rng.below(256) as u8).collect();
+                let mut row = handle.acquire_row();
+                row.extend((0..handle.in_dim()).map(|_| rng.below(256) as u8));
                 mix.submitted[idx] += 1;
-                match handle.submit_q(x_q) {
+                match handle.submit_q(row) {
                     Ok(t) => {
                         let _ = tick_tx.send((idx, t));
                     }
@@ -780,8 +856,8 @@ pub fn run_churn(
 /// capacity rather than behaviour at a fixed offered rate; `offered_rps`
 /// is the attempt rate (including shed), `achieved_rps` the completion
 /// rate.
-pub fn closed_loop(
-    handle: &ModelHandle,
+pub fn closed_loop<H: RowDriver>(
+    handle: &H,
     clients: usize,
     duration: Duration,
     per_client: Option<usize>,
@@ -801,13 +877,14 @@ pub fn closed_loop(
             let mut sent = 0usize;
             while sent < budget && Instant::now() < deadline {
                 sent += 1;
-                let x_q: Vec<u8> = (0..in_dim).map(|_| rng.below(256) as u8).collect();
-                match h.infer_q(x_q) {
-                    Ok(r) => {
+                let mut row = h.acquire_row();
+                row.extend((0..in_dim).map(|_| rng.below(256) as u8));
+                match h.submit_row(row).and_then(H::wait) {
+                    Ok((queue_us, service_us)) => {
                         ok += 1;
                         m.record_request_split(
-                            Duration::from_micros(r.queue_us),
-                            Duration::from_micros(r.service_us),
+                            Duration::from_micros(queue_us),
+                            Duration::from_micros(service_us),
                         );
                     }
                     Err(ServeError::QueueFull) | Err(ServeError::DeadlineExceeded) => shed += 1,

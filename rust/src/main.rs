@@ -12,6 +12,8 @@
 //! kansas accuracy [--model NAME]   # int8 vs fp32 accuracy (golden batch)
 //! kansas simulate [--rows R --cols C --pe N:M --bs B]   # one config
 //! kansas serve [--models a.kanq,b.kanq --mix 3,1 --replicas R] # gateway
+//! kansas serve --listen ADDR [...] # network front door (TCP)
+//! kansas load --connect ADDR [...] # remote load generator
 //! kansas quickstart                # minimal end-to-end smoke
 //! ```
 //!
@@ -47,12 +49,13 @@ use anyhow::{bail, Context, Result};
 use kan_sas::arch::{ArrayConfig, WeightLoad};
 use kan_sas::config::{parse_dispatch, parse_pe, parse_shed, parse_synth_spec, RunConfig};
 use kan_sas::coordinator::{
-    BatchPolicy, GatewayBuilder, QuotaPolicy, Span, Telemetry, TelemetrySnapshot,
+    BatchPolicy, GatewayBuilder, NetClient, NetServer, QuotaPolicy, RemoteHandle, Span, Telemetry,
+    TelemetrySnapshot,
 };
 use kan_sas::cost::array_area_mm2;
 use kan_sas::experiments;
 use kan_sas::kan::{Engine, Kernel, QuantizedModel};
-use kan_sas::loadgen::{self, MixEntry, Scenario};
+use kan_sas::loadgen::{self, LoadReport, MixEntry, Scenario};
 use kan_sas::report::Table;
 use kan_sas::sim::analytic;
 use kan_sas::util::container::Container;
@@ -114,6 +117,7 @@ fn main() -> Result<()> {
         "accuracy" => cmd_accuracy(&args)?,
         "simulate" => cmd_simulate(&args)?,
         "serve" => cmd_serve(&args)?,
+        "load" => cmd_load(&args)?,
         "quickstart" => cmd_quickstart()?,
         "help" | "--help" | "-h" => print_help(),
         other => {
@@ -141,6 +145,11 @@ fn print_help() {
                                --rate RPS --duration-ms MS]\n\
                               [--stats-every S] [--telemetry FILE]\n\
                               [--flight-every S] [--trace-sample N] [--no-telemetry]\n\
+                              [--listen ADDR]\n\
+         remote load:   load --connect ADDR [--model NAME] [--mix W1,W2,...]\n\
+                             [--scenario steady|diurnal|flash-crowd|skewed-burst\n\
+                              --rate RPS --duration-ms MS]\n\
+                             [--requests N --clients C] [--seed S] [--stats]\n\
          smoke:         quickstart\n\
          \n\
          serve runs the multi-tenant Gateway: one worker fleet + one bounded\n\
@@ -179,6 +188,15 @@ fn print_help() {
          --scenario) drive the open-loop Poisson generator. Replica\n\
          autosizing clamps cores to 8; raise with --max-replicas or\n\
          KANSAS_MAX_REPLICAS (explicit --replicas wins).\n\
+         --listen ADDR turns serve into the network front door: a TCP\n\
+         server speaking the framed binary protocol (see\n\
+         ARCHITECTURE.md), running until SIGINT (graceful drain + final\n\
+         report) or --duration-ms. ADDR like 127.0.0.1:0 picks an\n\
+         ephemeral port, printed as 'listening on ...'. Drive it from\n\
+         another process with kansas load --connect ADDR: closed-loop\n\
+         by default (--requests/--clients), open-loop with --scenario/\n\
+         --rate, --stats polls the server's telemetry snapshot JSON\n\
+         over the wire.\n\
          --config FILE (json) applies to simulate/serve; artifacts are read\n\
          from ./artifacts (override with KANSAS_ARTIFACTS).\n\
          \n\
@@ -510,7 +528,63 @@ fn cmd_serve(args: &Args) -> Result<()> {
     });
 
     let multi = handles.len() > 1;
-    let report = if args.get("--scenario") == Some("churn") {
+    let listen = args.get("--listen").map(str::to_string).or_else(|| base.net.listen.clone());
+    let report = if let Some(addr) = listen {
+        // network front door: serve remote `kansas load --connect`
+        // clients instead of generating local traffic; SIGINT (graceful
+        // drain) or a nonzero --duration-ms ends the run
+        let mut net_cfg = base.net.clone();
+        net_cfg.listen = Some(addr.clone());
+        let server = NetServer::start(&addr, &gateway, net_cfg)
+            .with_context(|| format!("binding {addr}"))?;
+        println!("listening on {}", server.local_addr());
+        install_sigint();
+        let dur_ms: u64 = args.parsed("--duration-ms", 0)?;
+        let t0 = Instant::now();
+        let until = (dur_ms > 0).then(|| t0 + Duration::from_millis(dur_ms));
+        loop {
+            if SIGINT_FLAG.load(Ordering::SeqCst) {
+                break;
+            }
+            if let Some(u) = until {
+                if Instant::now() >= u {
+                    break;
+                }
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        if SIGINT_FLAG.load(Ordering::SeqCst) {
+            println!("SIGINT: draining connections, flushing telemetry");
+        }
+        let net_stats = server.shutdown();
+        let wall = t0.elapsed();
+        println!(
+            "net: {} conns accepted, {} frames in, {} frames out, {} malformed",
+            net_stats.accepted, net_stats.frames_in, net_stats.frames_out, net_stats.malformed
+        );
+        // synthesize the run report from the gateway's own counters so
+        // the shared report block below applies unchanged
+        let stats = gateway.stats();
+        let (mut sub, mut ok, mut shed, mut failed) = (0u64, 0u64, 0u64, 0u64);
+        for m in &stats.per_model {
+            sub += m.submitted;
+            ok += m.completed;
+            shed += m.shed;
+            failed += m.failed;
+        }
+        let secs = wall.as_secs_f64().max(1e-9);
+        LoadReport {
+            scenario: "listen".to_string(),
+            submitted: sub,
+            ok,
+            shed,
+            failed,
+            wall,
+            offered_rps: sub as f64 / secs,
+            achieved_rps: ok as f64 / secs,
+            latency: stats.merged.latency(),
+        }
+    } else if args.get("--scenario") == Some("churn") {
         // registry churn demo: open-loop traffic while a scripted event
         // timeline (config `admin` stanza, or the default add → reweight
         // → remove cycle) mutates the live gateway
@@ -693,6 +767,127 @@ fn cmd_serve(args: &Args) -> Result<()> {
         if let Some(p) = &telemetry_path {
             println!("telemetry stream written to {}", p.display());
         }
+    }
+    Ok(())
+}
+
+/// Set by the SIGINT handler installed for `kansas serve --listen`.
+static SIGINT_FLAG: AtomicBool = AtomicBool::new(false);
+
+/// Install a minimal SIGINT handler (libc `signal`, already linked by
+/// std) so a listening server stops accepting, drains its connections,
+/// and prints the final report on ctrl-c instead of dying mid-flight.
+#[cfg(unix)]
+fn install_sigint() {
+    extern "C" fn on_sigint(_sig: i32) {
+        // only an atomic store: async-signal-safe
+        SIGINT_FLAG.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    unsafe {
+        signal(SIGINT, on_sigint as extern "C" fn(i32) as usize);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_sigint() {
+    // no portable handler without a signal API; --duration-ms still
+    // bounds the run
+}
+
+/// `kansas load --connect ADDR`: drive a remote `kansas serve --listen`
+/// server through the framed wire protocol. Closed-loop by default
+/// (`--requests`/`--clients` like in-process serve), open-loop Poisson
+/// with `--scenario`/`--rate`/`--duration-ms`; `--stats` polls the
+/// server's telemetry snapshot over the wire at the end.
+fn cmd_load(args: &Args) -> Result<()> {
+    let Some(addr) = args.get("--connect") else {
+        bail!("load needs --connect ADDR (start a server with `kansas serve --listen ADDR`)");
+    };
+    let client = NetClient::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    let mut handles = client.handles().map_err(|e| anyhow::anyhow!("listing models: {e}"))?;
+    if handles.is_empty() {
+        bail!("server at {addr} has no models registered");
+    }
+    if let Some(name) = args.get("--model") {
+        handles.retain(|h| h.name() == name);
+        if handles.is_empty() {
+            bail!("server has no model named '{name}'");
+        }
+    }
+    let names: Vec<String> =
+        handles.iter().map(|h| format!("{}:{}x{}", h.name(), h.in_dim(), h.out_dim())).collect();
+    println!("connected to {addr}: {} models [{}]", handles.len(), names.join(", "));
+    let weights: Vec<f64> = match args.get("--mix") {
+        Some(w) => {
+            let ws: Vec<f64> = w
+                .split(',')
+                .map(|s| s.trim().parse().with_context(|| format!("bad --mix weight '{s}'")))
+                .collect::<Result<_>>()?;
+            if ws.len() != handles.len() {
+                bail!("--mix has {} weights for {} models", ws.len(), handles.len());
+            }
+            if ws.iter().any(|w| !w.is_finite() || *w < 0.0) || ws.iter().sum::<f64>() <= 0.0 {
+                bail!("--mix weights must be finite, >= 0, with a positive total");
+            }
+            ws
+        }
+        None => vec![1.0; handles.len()],
+    };
+    let seed: u64 = args.parsed("--seed", 12345)?;
+    let open_loop =
+        args.get("--scenario").is_some() || args.get("--rate").is_some() || handles.len() > 1;
+    let report = if open_loop {
+        let name = args.get("--scenario").unwrap_or("steady");
+        let rate: f64 = args.parsed("--rate", 2000.0)?;
+        let dur_ms: u64 = args.parsed("--duration-ms", 2000)?;
+        let sc = Scenario::by_name(name, rate, Duration::from_millis(dur_ms)).with_context(
+            || format!("unknown scenario '{name}' (steady|diurnal|flash-crowd|skewed-burst)"),
+        )?;
+        let entries: Vec<MixEntry<RemoteHandle>> = handles
+            .iter()
+            .zip(&weights)
+            .map(|(h, &w)| MixEntry { handle: h.clone(), weight: w })
+            .collect();
+        let mix = loadgen::run_mix(&entries, &sc, seed);
+        for rep in &mix.per_model {
+            println!("  {}", rep.summary());
+        }
+        mix.total
+    } else {
+        let requests: usize = args.parsed("--requests", 256)?;
+        let clients: usize = args.parsed("--clients", 4)?;
+        let per_client = requests / clients.max(1);
+        loadgen::closed_loop(
+            &handles[0],
+            clients,
+            Duration::from_secs(3600),
+            Some(per_client),
+            seed,
+        )
+    };
+    println!("{}", report.summary());
+    let conserved = report.submitted == report.ok + report.shed + report.failed;
+    println!(
+        "client conservation: submitted {} == ok {} + shed {} + failed {} -> {}",
+        report.submitted,
+        report.ok,
+        report.shed,
+        report.failed,
+        if conserved { "yes" } else { "NO" }
+    );
+    if args.flag("--stats") {
+        match client.stats_json() {
+            Ok(s) => println!("server stats: {s}"),
+            Err(e) => println!("server stats unavailable: {e}"),
+        }
+    }
+    client.close();
+    if !conserved {
+        bail!("client-side conservation violated");
     }
     Ok(())
 }

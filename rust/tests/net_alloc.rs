@@ -1,0 +1,82 @@
+//! Hard acceptance gate for the network front door's zero-alloc
+//! steady state: after warmup, the frame codec (header encode/decode,
+//! request/response encode into a reusable buffer, InferOk payload
+//! decode into a reusable logits buffer) and the gateway-side
+//! [`RowPool`] that admission decodes into must run with ZERO heap
+//! allocations, measured by the counting global allocator (same
+//! technique as `tests/zero_alloc.rs` / `tests/gateway_alloc.rs`).
+//!
+//! Kept to a single `#[test]` on purpose — the counters are
+//! process-wide and the default harness runs tests of one binary
+//! concurrently, so a second test here could allocate inside the
+//! measured window.
+
+use kan_sas::coordinator::net::{
+    decode_ok_payload, encode_request, encode_response, FrameHeader, FrameType, HEADER_LEN,
+};
+use kan_sas::coordinator::RowPool;
+use kan_sas::util::alloc_count::{self, CountingAllocator};
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+#[test]
+fn codec_and_row_pool_are_allocation_free_after_warmup() {
+    let in_dim = 64usize;
+    let out_dim = 10usize;
+
+    // ---- frame codec, measured directly ----
+    // warmup: one encode/decode cycle grows each reusable buffer to its
+    // steady-state capacity
+    let row = [9u8; 64];
+    let logits = [123i64; 10];
+    let mut req_buf: Vec<u8> = Vec::new();
+    let mut resp_buf: Vec<u8> = Vec::new();
+    let mut t_buf: Vec<i64> = Vec::new();
+    encode_request(&mut req_buf, 1, 0, &row, 1_000, 2);
+    encode_response(&mut resp_buf, 1, 50, 200, &logits);
+    decode_ok_payload(&resp_buf[HEADER_LEN..], &mut t_buf).unwrap();
+
+    let before = alloc_count::events();
+    for i in 0..256u64 {
+        encode_request(&mut req_buf, i, 0, &row, 1_000, 2);
+        let hdr: &[u8; HEADER_LEN] = req_buf[..HEADER_LEN].try_into().expect("header slice");
+        let h = FrameHeader::decode(hdr).expect("well-formed header");
+        assert_eq!((h.ty, h.corr, h.len as usize), (FrameType::InferRequest, i, in_dim));
+
+        encode_response(&mut resp_buf, i, 50, 200, &logits);
+        let (q, s) = decode_ok_payload(&resp_buf[HEADER_LEN..], &mut t_buf).expect("payload");
+        assert_eq!((q, s), (50, 200));
+        assert_eq!(t_buf.len(), out_dim);
+    }
+    let events = alloc_count::events() - before;
+    assert_eq!(
+        events, 0,
+        "steady-state frame encode/decode must not touch the heap ({events} allocator events)"
+    );
+
+    // ---- the admission-side row pool, measured directly ----
+    // the server's reader acquires a pooled row, resizes it to in_dim,
+    // fills it from the socket, and submits; the serving worker releases
+    // it at gather — model that cycle here
+    let pool = RowPool::new(in_dim, 8);
+    let warm = pool.acquire();
+    pool.release(warm);
+    let before = alloc_count::events();
+    for _ in 0..256 {
+        let mut buf = pool.acquire(); // free-list hit: no allocation
+        buf.resize(in_dim, 0); // within pre-sized capacity
+        buf.copy_from_slice(&row);
+        pool.release(buf); // back to the list: no allocation
+    }
+    let events = alloc_count::events() - before;
+    assert_eq!(
+        events, 0,
+        "steady-state row acquire/fill/release must not touch the heap \
+         ({events} allocator events)"
+    );
+    let (created, recycled, free) = pool.counts();
+    assert_eq!(created, 1, "one warmup row serves the whole loop");
+    assert_eq!(recycled, 256);
+    assert_eq!(free, 1);
+}

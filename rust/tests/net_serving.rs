@@ -1,0 +1,241 @@
+//! Network front door integration: round-trip correctness vs the
+//! direct engine, malformed-frame handling (typed error frames, the
+//! connection survives what it can and closes when framing is lost),
+//! telemetry/models over the wire, and the drop-mid-flight conservation
+//! guarantee — a client that disconnects with requests in flight must
+//! not break per-model `submitted == completed + shed + failed`.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use kan_sas::arch::ArrayConfig;
+use kan_sas::coordinator::net::{
+    code, encode_control, encode_request, FrameHeader, FrameType, HEADER_LEN,
+};
+use kan_sas::coordinator::{
+    BatchPolicy, Dispatch, Gateway, GatewayBuilder, GatewayConfig, NetClient, NetConfig, NetServer,
+    QuotaPolicy, ServeError, ShedPolicy, TelemetryConfig,
+};
+use kan_sas::kan::{Engine, QuantizedModel};
+use kan_sas::util::json::Value;
+use kan_sas::util::rng::Rng;
+
+/// One-tenant gateway over a synthetic model built from `seed` —
+/// rebuilding with the same seed gives a bit-identical engine for
+/// direct-path comparison.
+fn gateway_with(name: &str, dims: &[usize], seed: u64, replicas: usize) -> Gateway {
+    let mut b = GatewayBuilder::with_config(GatewayConfig {
+        replicas,
+        queue_cap: 1024,
+        shed: ShedPolicy::RejectNew,
+        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+        sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
+        dispatch: Dispatch::FairSteal,
+        quota: QuotaPolicy::None,
+        telemetry: TelemetryConfig::default(),
+    });
+    b.register(name, Engine::new(QuantizedModel::synthetic(name, dims, 5, 3, seed)));
+    b.start()
+}
+
+fn read_frame(stream: &mut TcpStream) -> Option<(FrameHeader, Vec<u8>)> {
+    let mut hdr = [0u8; HEADER_LEN];
+    stream.read_exact(&mut hdr).ok()?;
+    let h = FrameHeader::decode(&hdr).expect("server frames are well-formed");
+    let mut payload = vec![0u8; h.len as usize];
+    stream.read_exact(&mut payload).ok()?;
+    Some((h, payload))
+}
+
+#[test]
+fn round_trip_matches_direct_engine() {
+    let dims = [6usize, 10, 4];
+    let gateway = gateway_with("rt", &dims, 71, 1);
+    let direct = Engine::new(QuantizedModel::synthetic("rt", &dims, 5, 3, 71));
+    let server = NetServer::start("127.0.0.1:0", &gateway, NetConfig::default()).unwrap();
+    let client = NetClient::connect(&server.local_addr().to_string()).unwrap();
+    let handle = client.handle("rt").unwrap();
+    assert_eq!(handle.in_dim(), 6);
+    assert_eq!(handle.out_dim(), 4);
+
+    let mut rng = Rng::new(5);
+    for _ in 0..32 {
+        let row: Vec<u8> = (0..handle.in_dim()).map(|_| rng.below(256) as u8).collect();
+        let resp = handle.infer_q(row.clone()).expect("remote inference");
+        let fwd = direct.forward_from_q(&row, 1).expect("direct inference");
+        assert_eq!(resp.t, fwd.t, "wire logits must match the direct engine");
+        assert!(resp.e2e_us >= resp.queue_us, "e2e includes the server's queueing share");
+    }
+
+    // wrong row width is rejected client-side with the typed error
+    match handle.submit_q(vec![1, 2, 3]) {
+        Err(ServeError::InvalidInput(_)) => {}
+        other => panic!("expected InvalidInput for a short row, got {other:?}"),
+    }
+
+    drop(client);
+    server.shutdown();
+    let stats = gateway.shutdown();
+    assert_eq!(stats.per_model[0].completed, 32);
+    assert!(stats.per_model[0].conserved());
+}
+
+#[test]
+fn stats_and_models_served_over_the_wire() {
+    let gateway = gateway_with("tele", &[4, 6, 3], 9, 1);
+    let server = NetServer::start("127.0.0.1:0", &gateway, NetConfig::default()).unwrap();
+    let client = NetClient::connect(&server.local_addr().to_string()).unwrap();
+
+    let models = client.models().unwrap();
+    assert_eq!(models.len(), 1);
+    assert_eq!(models[0].name, "tele");
+    assert_eq!((models[0].in_dim, models[0].out_dim), (4, 3));
+
+    // serve some traffic so the snapshot has content, then poll it
+    let handle = client.handle_for(&models[0]);
+    for i in 0..8u8 {
+        handle.infer_q(vec![i; 4]).unwrap();
+    }
+    let json = client.stats_json().expect("stats over the wire");
+    let v = Value::parse(&json).expect("snapshot renders as valid JSON");
+    let tenants = v.get("tenants").and_then(Value::as_arr).expect("snapshot has tenants");
+    assert_eq!(tenants.len(), 1);
+    assert_eq!(tenants[0].get("name").and_then(Value::as_str), Some("tele"));
+
+    drop(client);
+    server.shutdown();
+    let stats = gateway.shutdown();
+    assert_eq!(stats.per_model[0].completed, 8);
+}
+
+#[test]
+fn malformed_frames_answer_typed_errors_and_survive() {
+    let gateway = gateway_with("mf", &[4, 6, 3], 13, 1);
+    let server = NetServer::start("127.0.0.1:0", &gateway, NetConfig::default()).unwrap();
+    let mut raw = TcpStream::connect(server.local_addr()).unwrap();
+    let mut buf = Vec::new();
+
+    // 1) bad magic, zero length: typed MALFORMED error, connection lives
+    let mut hdr = [0u8; HEADER_LEN];
+    FrameHeader { ty: FrameType::InferRequest, code: 0, corr: 7, model: 0, deadline_us: 0, len: 0 }
+        .encode(&mut hdr);
+    hdr[0] = b'X';
+    raw.write_all(&hdr).unwrap();
+    let (h, payload) = read_frame(&mut raw).expect("error frame for bad magic");
+    assert_eq!(h.ty, FrameType::Error);
+    assert_eq!(h.code, code::MALFORMED);
+    assert_eq!(h.corr, 7);
+    assert!(std::str::from_utf8(&payload).unwrap().contains("magic"));
+
+    // 2) unknown model id: typed UNKNOWN_MODEL, payload skipped,
+    //    connection lives
+    encode_request(&mut buf, 8, 99, &[1, 2, 3, 4], 0, 0);
+    raw.write_all(&buf).unwrap();
+    let (h, _) = read_frame(&mut raw).expect("error frame for unknown model");
+    assert_eq!((h.ty, h.code, h.corr), (FrameType::Error, code::UNKNOWN_MODEL, 8));
+
+    // 3) wrong row width for a real model: typed INVALID_INPUT
+    encode_request(&mut buf, 9, 0, &[1, 2], 0, 0);
+    raw.write_all(&buf).unwrap();
+    let (h, _) = read_frame(&mut raw).expect("error frame for bad width");
+    assert_eq!((h.ty, h.code, h.corr), (FrameType::Error, code::INVALID_INPUT, 9));
+
+    // 4) the same connection still serves valid traffic after all that
+    encode_request(&mut buf, 10, 0, &[5, 6, 7, 8], 0, 0);
+    raw.write_all(&buf).unwrap();
+    let (h, payload) = read_frame(&mut raw).expect("InferOk after recovered errors");
+    assert_eq!((h.ty, h.corr), (FrameType::InferOk, 10));
+    assert_eq!(payload.len(), 16 + 8 * 3, "timing split + out_dim logits");
+
+    // 5) a response-type frame from a client is malformed but survivable
+    encode_control(&mut buf, FrameType::StatsResponse, 11);
+    raw.write_all(&buf).unwrap();
+    let (h, _) = read_frame(&mut raw).expect("error frame for reversed direction");
+    assert_eq!((h.ty, h.code, h.corr), (FrameType::Error, code::MALFORMED, 11));
+
+    // 6) an oversized length is unrecoverable: error frame, then close
+    let mut big = TcpStream::connect(server.local_addr()).unwrap();
+    let mut hdr = [0u8; HEADER_LEN];
+    FrameHeader {
+        ty: FrameType::InferRequest,
+        code: 0,
+        corr: 12,
+        model: 0,
+        deadline_us: 0,
+        len: (NetConfig::default().max_frame + 1) as u32,
+    }
+    .encode(&mut hdr);
+    big.write_all(&hdr).unwrap();
+    let (h, _) = read_frame(&mut big).expect("error frame before close");
+    assert_eq!((h.ty, h.code), (FrameType::Error, code::MALFORMED));
+    let mut probe = [0u8; 1];
+    assert_eq!(big.read(&mut probe).unwrap_or(0), 0, "server closes after losing sync");
+
+    drop(raw);
+    let net = server.shutdown();
+    assert!(net.malformed >= 3, "malformed counter tracks protocol errors, got {}", net.malformed);
+    let stats = gateway.shutdown();
+    assert_eq!(stats.per_model[0].completed, 1, "only the one valid frame reached the gateway");
+    assert!(stats.per_model[0].conserved());
+}
+
+#[test]
+fn client_drop_mid_flight_conserves_per_model() {
+    // one slow-ish replica so a burst is genuinely in flight at drop time
+    let gateway = gateway_with("drop", &[32, 48, 8], 23, 1);
+    let server = NetServer::start("127.0.0.1:0", &gateway, NetConfig::default()).unwrap();
+    let client = NetClient::connect(&server.local_addr().to_string()).unwrap();
+    let handle = client.handle("drop").unwrap();
+
+    let burst = 64usize;
+    let mut tickets = Vec::with_capacity(burst);
+    for i in 0..burst {
+        let row = vec![(i % 256) as u8; handle.in_dim()];
+        tickets.push(handle.submit_q(row).expect("burst submit"));
+    }
+    // disconnect with the burst in flight: the server's writer drains
+    // every admitted ticket (the bytes go nowhere), the gateway still
+    // serves and counts each one
+    drop(tickets);
+    drop(client);
+
+    // wait for the connection to fully drain (EOF consumes every frame
+    // the client wrote before the FIN) so `stop` can't race the reader
+    // out of admitting the tail of the burst
+    let t0 = Instant::now();
+    while server.connections() > 0 && t0.elapsed() < Duration::from_secs(10) {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    server.shutdown();
+    let stats = gateway.shutdown();
+    let ms = &stats.per_model[0];
+    assert_eq!(ms.submitted, burst as u64, "every frame admitted before the disconnect");
+    assert!(
+        ms.conserved(),
+        "drop-mid-flight must not leak outcomes: submitted {} completed {} shed {} failed {}",
+        ms.submitted,
+        ms.completed,
+        ms.shed,
+        ms.failed
+    );
+    assert_eq!(ms.completed + ms.shed + ms.failed, burst as u64);
+}
+
+#[test]
+fn abandoned_client_tickets_resolve_closed() {
+    let gateway = gateway_with("closed", &[4, 6, 3], 37, 1);
+    let server = NetServer::start("127.0.0.1:0", &gateway, NetConfig::default()).unwrap();
+    let client = NetClient::connect(&server.local_addr().to_string()).unwrap();
+    let handle = client.handle("closed").unwrap();
+    // a ticket held across server shutdown resolves (Ok if the drain
+    // served it, Closed if the connection died first) instead of hanging
+    let t = handle.submit_q(vec![1, 2, 3, 4]).unwrap();
+    server.shutdown();
+    match t.wait() {
+        Ok(resp) => assert_eq!(resp.t.len(), 3),
+        Err(ServeError::Closed) => {}
+        Err(e) => panic!("expected Ok or Closed after server shutdown, got {e:?}"),
+    }
+    gateway.shutdown();
+}
