@@ -34,6 +34,7 @@ fn pool_config(replicas: usize, shed: ShedPolicy) -> PoolConfig {
         dispatch: Dispatch::FairSteal,
         quota: QuotaPolicy::None,
         telemetry: TelemetryConfig::default(),
+        ..Default::default()
     }
 }
 
@@ -94,6 +95,7 @@ fn main() -> Result<()> {
         dispatch: Dispatch::FairSteal,
         quota: QuotaPolicy::None,
         telemetry: TelemetryConfig::default(),
+        ..Default::default()
     });
     let mnist = builder.register("mnist", engine.clone());
     let har = builder.register_weighted(

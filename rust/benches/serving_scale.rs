@@ -1,7 +1,7 @@
 //! Serving scale sweep: replica count x offered load x model mix x
 //! dispatch policy.
 //!
-//! Seven measurements, all on synthetic models (offline, no artifacts):
+//! Eight measurements, all on synthetic models (offline, no artifacts):
 //!
 //! 1. **Closed-loop saturation** per replica count — peak rows/sec with
 //!    16 hammering clients. The acceptance bar is >= 2x rows/sec at 4
@@ -42,6 +42,15 @@
 //!    count. The p50 delta between the two paths is the per-request
 //!    protocol cost: framing, two socket hops, and the client's
 //!    correlation-id bookkeeping.
+//! 8. **SLO-driven autoscaling** — time-varying arrivals (`diurnal` and
+//!    `flash-crowd`) served by an elastic `1..peak` fleet (the
+//!    `coordinator::autoscale` controller scaling on windowed telemetry
+//!    signals) vs a fixed peak-size fleet. Recorded per run: SLO
+//!    attainment (fraction of requests whose queueing delay met the p95
+//!    target), worker-seconds consumed, scale-event count, and shed
+//!    rate. The acceptance shape: on `diurnal`, the autoscaled fleet
+//!    attains >= 95% of the SLO while consuming measurably fewer
+//!    worker-seconds than the fixed peak fleet.
 //!
 //! ```bash
 //! cargo bench --bench serving_scale
@@ -51,12 +60,14 @@
 //!
 //! `KANSAS_BENCH_SECTIONS` takes a comma-separated list of section
 //! names (`closed_loop`, `open_loop`, `multi_model`, `fairness`,
-//! `quota`, `telemetry`, `net`); unset or empty runs everything.
+//! `quota`, `telemetry`, `net`, `autoscale`); unset or empty runs
+//! everything.
 //!
 //! Besides the printed tables, the run writes `BENCH_serving.json`
 //! (throughput per replica count, scenario shed rates, p50/p99 latency,
 //! multi-model mix rows, fairness rows, quota rows, telemetry overhead
-//! rows, wire-protocol overhead rows) so the serving perf trajectory is
+//! rows, wire-protocol overhead rows, autoscale SLO-vs-cost rows) so
+//! the serving perf trajectory is
 //! tracked across PRs instead of anecdotal. Sections are merge-appended
 //! through `bench::write_artifact` — a partial rerun refreshes only its
 //! own sections. The file is rendered by the deterministic `util::json`
@@ -68,8 +79,8 @@ use std::time::Duration;
 use kan_sas::arch::ArrayConfig;
 use kan_sas::bench;
 use kan_sas::coordinator::{
-    BatchPolicy, Dispatch, GatewayBuilder, GatewayConfig, NetClient, NetConfig, NetServer, Pool,
-    PoolConfig, QuotaPolicy, ShedPolicy, TelemetryConfig,
+    AutoscaleConfig, BatchPolicy, Dispatch, GatewayBuilder, GatewayConfig, NetClient, NetConfig,
+    NetServer, Pool, PoolConfig, QuotaPolicy, ShedPolicy, TelemetryConfig,
 };
 use kan_sas::kan::{Engine, QuantizedModel};
 use kan_sas::loadgen::{self, Focus, MixEntry, Scenario};
@@ -98,6 +109,7 @@ fn pool_config(replicas: usize, queue_cap: usize, shed: ShedPolicy) -> PoolConfi
         dispatch: Dispatch::FairSteal,
         quota: QuotaPolicy::None,
         telemetry: bench_telemetry(),
+        ..Default::default()
     }
 }
 
@@ -219,6 +231,7 @@ fn section_multi_model(rows_at: &BTreeMap<usize, f64>) -> Value {
                 dispatch: Dispatch::FairSteal,
                 quota: QuotaPolicy::None,
                 telemetry: bench_telemetry(),
+                ..Default::default()
             });
             let a = b.register("mnist_mix", mnist_like.clone());
             let h = b.register("har_mix", har_like.clone());
@@ -309,6 +322,7 @@ fn section_fairness(cores: usize, rows_at: &BTreeMap<usize, f64>) -> Value {
             dispatch,
             quota: QuotaPolicy::None,
             telemetry: bench_telemetry(),
+            ..Default::default()
         });
         let maj = b.register_weighted("majority", majority.clone(), w_major);
         let min = b.register_weighted("minority", minority.clone(), w_minor);
@@ -419,6 +433,7 @@ fn section_quota(cores: usize, rows_at: &BTreeMap<usize, f64>) -> Value {
             dispatch: Dispatch::FairSteal,
             quota,
             telemetry: bench_telemetry(),
+            ..Default::default()
         });
         let maj = b.register_weighted("majority", majority.clone(), 1);
         let min = b.register_weighted("minority", minority.clone(), 4);
@@ -578,6 +593,7 @@ fn section_net(engine: &Engine, cores: usize) -> Value {
                 dispatch: Dispatch::FairSteal,
                 quota: QuotaPolicy::None,
                 telemetry: bench_telemetry(),
+                ..Default::default()
             });
             let id = b.register("bench_kan", engine.clone());
             let gw = b.start();
@@ -631,6 +647,108 @@ fn section_net(engine: &Engine, cores: usize) -> Value {
     Value::arr(net_json)
 }
 
+/// 8. SLO-driven autoscaling: time-varying arrivals served by an
+/// elastic `1..peak` fleet vs a fixed peak-size fleet. The elastic
+/// fleet starts at one worker; the real-clock autoscaler thread reads
+/// 100ms telemetry windows every 50ms, doubles on a p95 queueing-delay
+/// breach, and drains one worker after two calm windows. Scored on SLO
+/// attainment (fraction of requests whose queueing delay was within the
+/// p95 target — exact samples, no histogram error) against the
+/// worker-seconds each fleet consumed.
+fn section_autoscale(engine: &Engine, cores: usize, rows_at: &BTreeMap<usize, f64>) -> Value {
+    let peak = cores.clamp(2, 4);
+    let slo_us: u64 = 10_000;
+    let sat = rows_at.get(&peak).copied().unwrap_or(4000.0);
+    let rate = sat * 0.45; // peaks stress the fleet, troughs let it shrink
+    println!(
+        "\nautoscale (elastic 1..{peak} workers vs fixed {peak}, SLO p95 queue <= {slo_us} us, base {rate:.0} rps):"
+    );
+    let mut t = Table::new(&[
+        "scenario", "fleet", "offered", "achieved", "shed %", "q p95 us", "SLO att %",
+        "worker-s", "events",
+    ])
+    .with_title("SLO attainment vs worker-seconds (fixed peak fleet vs autoscaled)");
+    let mut auto_json = Vec::new();
+    for name in ["diurnal", "flash-crowd"] {
+        let sc = Scenario::by_name(name, rate, Duration::from_millis(1500)).unwrap();
+        let mut fixed_ws = 0.0f64;
+        let mut auto_ws = 0.0f64;
+        let mut auto_att = 0.0f64;
+        for fleet in ["fixed-peak", "autoscaled"] {
+            let mut cfg = pool_config(peak, 1024, ShedPolicy::RejectNew);
+            // short windows + a fast evaluation interval so the
+            // controller sees the arrival shape inside a 1.5s run
+            cfg.telemetry = TelemetryConfig {
+                exact_samples: true,
+                window: Duration::from_millis(100),
+                ..TelemetryConfig::default()
+            };
+            if fleet == "autoscaled" {
+                cfg.autoscale = Some(AutoscaleConfig {
+                    min_workers: 1,
+                    max_workers: peak,
+                    slo_p95_us: slo_us,
+                    calm_windows: 2,
+                    interval: Duration::from_millis(50),
+                    ..AutoscaleConfig::default()
+                });
+            }
+            let mut b = GatewayBuilder::with_config(cfg);
+            let id = b.register("bench_kan", engine.clone());
+            let gw = b.start();
+            let rep = loadgen::run(&gw.handle(id), &sc, 29);
+            let worker_us = gw.worker_time_us();
+            let events = gw.scale_events();
+            let stats = gw.shutdown();
+            let attainment = stats.merged.queue_within_us(slo_us);
+            let q95 = stats.merged.queue_latency().map(|l| l.p95_us).unwrap_or(0);
+            let ws = worker_us as f64 / 1e6;
+            if fleet == "fixed-peak" {
+                fixed_ws = ws;
+            } else {
+                auto_ws = ws;
+                auto_att = attainment;
+            }
+            t.row(vec![
+                name.to_string(),
+                fleet.to_string(),
+                format!("{:.0}", rep.offered_rps),
+                format!("{:.0}", rep.achieved_rps),
+                format!("{:.1}", 100.0 * rep.shed_rate()),
+                q95.to_string(),
+                format!("{:.1}", 100.0 * attainment),
+                format!("{ws:.2}"),
+                events.len().to_string(),
+            ]);
+            auto_json.push(Value::obj([
+                ("scenario", Value::str(name)),
+                ("fleet", Value::str(fleet)),
+                ("min_workers", Value::num(if fleet == "autoscaled" { 1.0 } else { peak as f64 })),
+                ("max_workers", Value::num(peak as f64)),
+                ("slo_p95_us", Value::num(slo_us as f64)),
+                ("offered_rps", Value::num(rep.offered_rps)),
+                ("achieved_rps", Value::num(rep.achieved_rps)),
+                ("shed_rate", Value::num(rep.shed_rate())),
+                ("p95_queue_us", Value::num(q95 as f64)),
+                ("slo_attainment", Value::num(attainment)),
+                ("worker_seconds", Value::num(ws)),
+                ("scale_events", Value::num(events.len() as f64)),
+                ("conserved", Value::num(if stats.per_model[0].conserved() { 1.0 } else { 0.0 })),
+            ]));
+        }
+        println!(
+            "  {name:<12} autoscaled: {:.1}% SLO attainment, {auto_ws:.2} worker-s vs fixed {fixed_ws:.2} ({:.0}% saved)",
+            100.0 * auto_att,
+            100.0 * (fixed_ws - auto_ws) / fixed_ws.max(1e-9),
+        );
+    }
+    print!("{}", t.render());
+    println!(
+        "acceptance shape: diurnal autoscaled attainment >= 95% with worker-seconds < fixed peak"
+    );
+    Value::arr(auto_json)
+}
+
 fn main() {
     let engine = bench_engine();
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
@@ -671,6 +789,9 @@ fn main() {
     }
     if section_enabled("net") {
         sections.push(("net", section_net(&engine, cores)));
+    }
+    if section_enabled("autoscale") {
+        sections.push(("autoscale", section_autoscale(&engine, cores, &rows_at)));
     }
 
     let out = "BENCH_serving.json";

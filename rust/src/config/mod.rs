@@ -40,6 +40,18 @@
 //!           "max_conns": 1024, "nodelay": true}
 //! }
 //! ```
+//!
+//! An `autoscale` stanza makes the worker fleet elastic between `min`
+//! and `max` replicas, scaling against a p95 queueing-delay SLO (the
+//! CLI `kansas serve --autoscale min:max --slo-p95-us N` flags layer
+//! on top):
+//! ```json
+//! {
+//!   "autoscale": {"min": 1, "max": 8, "slo_p95_us": 10000,
+//!                 "max_shed_rate": 0.01, "calm_windows": 3,
+//!                 "interval_ms": 250, "pin_cores": false}
+//! }
+//! ```
 
 use std::path::Path;
 use std::time::Duration;
@@ -48,8 +60,8 @@ use anyhow::{bail, Context, Result};
 
 use crate::arch::{ArrayConfig, PeKind, WeightLoad};
 use crate::coordinator::{
-    BatchPolicy, Dispatch, DrainMode, NetConfig, PoolConfig, QuotaPolicy, ShedPolicy,
-    TelemetryConfig,
+    AutoscaleConfig, BatchPolicy, Dispatch, DrainMode, NetConfig, PoolConfig, QuotaPolicy,
+    ShedPolicy, TelemetryConfig,
 };
 use crate::loadgen::{ChurnAction, ChurnEvent};
 use crate::util::json::Value;
@@ -81,6 +93,9 @@ pub struct RunConfig {
     /// Network front door settings (the `net` stanza; `kansas serve
     /// --listen` / `kansas load --connect` use them on their ends).
     pub net: NetConfig,
+    /// SLO-driven worker autoscaling (the `autoscale` stanza; `None`
+    /// keeps a fixed fleet of `replicas` workers).
+    pub autoscale: Option<AutoscaleConfig>,
 }
 
 impl Default for RunConfig {
@@ -98,6 +113,7 @@ impl Default for RunConfig {
             admin_events: Vec::new(),
             telemetry: pool.telemetry,
             net: NetConfig::default(),
+            autoscale: None,
         }
     }
 }
@@ -322,6 +338,46 @@ impl RunConfig {
                 cfg.net.nodelay = b;
             }
         }
+        if let Some(a) = v.get("autoscale") {
+            let mut auto = AutoscaleConfig::default();
+            if let Some(m) = a.get("min").and_then(Value::as_usize) {
+                auto.min_workers = m;
+            }
+            if let Some(m) = a.get("max").and_then(Value::as_usize) {
+                auto.max_workers = m;
+            }
+            if auto.min_workers == 0 || auto.max_workers < auto.min_workers {
+                bail!("autoscale needs 1 <= min <= max");
+            }
+            if let Some(us) = a.get("slo_p95_us").and_then(Value::as_usize) {
+                if us == 0 {
+                    bail!("autoscale.slo_p95_us must be positive");
+                }
+                auto.slo_p95_us = us as u64;
+            }
+            if let Some(r) = a.get("max_shed_rate").and_then(Value::as_f64) {
+                if !r.is_finite() || !(0.0..=1.0).contains(&r) {
+                    bail!("autoscale.max_shed_rate must be in [0, 1]");
+                }
+                auto.max_shed_rate = r;
+            }
+            if let Some(k) = a.get("calm_windows").and_then(Value::as_usize) {
+                if k == 0 {
+                    bail!("autoscale.calm_windows must be positive");
+                }
+                auto.calm_windows = k;
+            }
+            if let Some(ms) = a.get("interval_ms").and_then(Value::as_f64) {
+                if !ms.is_finite() || ms <= 0.0 {
+                    bail!("autoscale.interval_ms must be positive");
+                }
+                auto.interval = Duration::from_micros((ms * 1000.0) as u64);
+            }
+            if let Some(b) = a.get("pin_cores").and_then(Value::as_bool) {
+                auto.pin_cores = b;
+            }
+            cfg.autoscale = Some(auto);
+        }
         if let Some(a) = v.get("admin") {
             let events = a
                 .get("events")
@@ -346,6 +402,8 @@ impl RunConfig {
             dispatch: self.dispatch,
             quota: self.quota,
             telemetry: self.telemetry,
+            autoscale: self.autoscale,
+            ..Default::default()
         }
     }
 }
@@ -534,6 +592,33 @@ mod tests {
         let mut f = tempfile("cfg16.json");
         write!(f, r#"{{"net": {{"max_conns": 0}}}}"#).unwrap();
         assert!(RunConfig::load(&path("cfg16.json")).is_err());
+    }
+
+    #[test]
+    fn load_autoscale_section() {
+        let mut f = tempfile("cfg17.json");
+        write!(
+            f,
+            r#"{{"autoscale": {{"min": 2, "max": 6, "slo_p95_us": 5000,
+                               "max_shed_rate": 0.02, "calm_windows": 4,
+                               "interval_ms": 100, "pin_cores": true}}}}"#
+        )
+        .unwrap();
+        let cfg = RunConfig::load(&path("cfg17.json")).unwrap();
+        let auto = cfg.autoscale.expect("autoscale stanza parsed");
+        assert_eq!((auto.min_workers, auto.max_workers), (2, 6));
+        assert_eq!(auto.slo_p95_us, 5000);
+        assert!((auto.max_shed_rate - 0.02).abs() < 1e-12);
+        assert_eq!(auto.calm_windows, 4);
+        assert_eq!(auto.interval, Duration::from_millis(100));
+        assert!(auto.pin_cores);
+        assert_eq!(cfg.to_pool_config().autoscale.map(|a| a.max_workers), Some(6));
+        // defaults: fixed fleet, no autoscaler
+        assert!(RunConfig::default().autoscale.is_none());
+        // inverted bounds rejected
+        let mut f = tempfile("cfg18.json");
+        write!(f, r#"{{"autoscale": {{"min": 4, "max": 2}}}}"#).unwrap();
+        assert!(RunConfig::load(&path("cfg18.json")).is_err());
     }
 
     #[test]

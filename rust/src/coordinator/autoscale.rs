@@ -1,0 +1,383 @@
+//! SLO-driven worker-fleet autoscaling.
+//!
+//! The paper's core argument is that *utilization*, not peak
+//! capability, decides efficiency — KAN-SAs wins by keeping the array
+//! busy. The serving tier has the same gap one level up: a fleet sized
+//! for peak traffic idles through the trough of a `diurnal` day, and a
+//! fleet sized for the trough sheds through a `flash-crowd`. This
+//! module closes it with a small control loop:
+//!
+//! - **Signals** ([`FleetSignals`]): the telemetry spine's windowed
+//!   per-tenant stats ([`Telemetry::snapshot`]) reduced to the
+//!   worst-tenant p95 queueing delay, shed rate, and queue depth. The
+//!   SLO is judged on *queueing* delay because that is the component
+//!   adding workers can fix — service time is the model's own cost.
+//! - **Policy** ([`Controller`]): a pure `(active, signals) →`
+//!   [`ScaleDecision`] function. Scale-up is fast (double, clamped to
+//!   `max_workers`) on any SLO breach; scale-down is slow — one worker
+//!   at a time, only after [`AutoscaleConfig::calm_windows`]
+//!   *consecutive* calm windows (hysteresis, so a breach→calm→breach
+//!   oscillation never thrashes the fleet).
+//! - **Actuation** (in [`gateway`](super::gateway)): scale-up spawns a
+//!   worker on a pre-sized shard slot; scale-down generalizes the
+//!   `remove_model` drain contract to replicas — stop dispatching to
+//!   the victim, let it (and stealing peers) flush its shard backlog,
+//!   then join the thread once nothing is left. No request is ever
+//!   dropped by a scaling action, so the per-model conservation
+//!   invariant (`submitted == completed + shed + failed`) holds
+//!   through arbitrary churn.
+//!
+//! Because every decision is a function of windowed time, the
+//! controller is driven by the gateway's injected
+//! [`Clock`](super::Clock): in production a thread evaluates every
+//! [`AutoscaleConfig::interval`]; under a manual test clock the same
+//! evaluation runs synchronously via `Gateway::autoscale_tick`, making
+//! scale-up latency and hysteresis exactly testable.
+//!
+//! [`Telemetry::snapshot`]: super::telemetry::Telemetry::snapshot
+
+use std::time::Duration;
+
+use super::telemetry::TelemetrySnapshot;
+
+/// Autoscaler policy knobs, carried in
+/// [`GatewayConfig::autoscale`](super::gateway::GatewayConfig).
+#[derive(Clone, Copy, Debug)]
+pub struct AutoscaleConfig {
+    /// Floor of the active fleet (the controller never drains below
+    /// this; also the initial fleet size).
+    pub min_workers: usize,
+    /// Ceiling of the active fleet. Shards, telemetry rings, and
+    /// per-replica metrics cells are pre-sized to this at gateway
+    /// start, so scale-up never reallocates shared state.
+    pub max_workers: usize,
+    /// The SLO: windowed p95 queueing delay (admission → serve start)
+    /// must stay at or below this many microseconds.
+    pub slo_p95_us: u64,
+    /// Shed rate above which a window counts as an SLO breach even if
+    /// the survivors' p95 looks healthy (shedding hides queue delay:
+    /// dropped requests never report latency).
+    pub max_shed_rate: f64,
+    /// Consecutive calm windows required before one worker is drained
+    /// (the hysteresis constant K).
+    pub calm_windows: u32,
+    /// A window only counts as calm when p95 queueing delay is below
+    /// `slo_p95_us * calm_fraction` and nothing was shed — the dead
+    /// band between the scale-up and scale-down thresholds.
+    pub calm_fraction: f64,
+    /// Evaluation period of the controller loop.
+    pub interval: Duration,
+    /// Pin each worker thread to a CPU core (slot index modulo the
+    /// core count) so scratch arenas and MAC tables stay core-local.
+    pub pin_cores: bool,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        Self {
+            min_workers: 1,
+            max_workers: super::pool::default_replicas(),
+            slo_p95_us: 10_000,
+            max_shed_rate: 0.01,
+            calm_windows: 3,
+            calm_fraction: 0.5,
+            interval: Duration::from_millis(250),
+            pin_cores: false,
+        }
+    }
+}
+
+impl AutoscaleConfig {
+    /// Parse a `min:max` fleet-bounds spec (the `--autoscale` CLI
+    /// argument) onto the default policy.
+    pub fn from_bounds_spec(spec: &str) -> Result<Self, String> {
+        let (lo, hi) = spec
+            .split_once(':')
+            .ok_or_else(|| format!("autoscale spec `{spec}`: expected min:max"))?;
+        let min_workers: usize =
+            lo.parse().map_err(|_| format!("autoscale min `{lo}`: not a number"))?;
+        let max_workers: usize =
+            hi.parse().map_err(|_| format!("autoscale max `{hi}`: not a number"))?;
+        if min_workers == 0 || max_workers < min_workers {
+            return Err(format!(
+                "autoscale bounds {min_workers}:{max_workers}: want 1 <= min <= max"
+            ));
+        }
+        Ok(Self { min_workers, max_workers, ..Self::default() })
+    }
+}
+
+/// The fleet-level control signals one evaluation reads: the telemetry
+/// snapshot's per-tenant windows reduced to worst-case scalars (the
+/// SLO is per-tenant, so the worst tenant governs).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FleetSignals {
+    /// Worst per-tenant windowed p95 queueing delay, µs (0 when no
+    /// tenant reported a queue distribution — an idle fleet is calm).
+    pub p95_queue_us: u64,
+    /// Worst per-tenant windowed shed rate.
+    pub shed_rate: f64,
+    /// Worst per-tenant queue depth after the window's last admission.
+    pub depth_last: u64,
+    /// Tenants that contributed a window to this evaluation.
+    pub windows: usize,
+}
+
+impl FleetSignals {
+    /// Reduce a telemetry snapshot to fleet-level signals.
+    pub fn from_snapshot(snap: &TelemetrySnapshot) -> Self {
+        let mut sig = FleetSignals::default();
+        for t in &snap.tenants {
+            let Some(w) = &t.window else { continue };
+            sig.windows += 1;
+            if let Some(q) = &w.queue {
+                sig.p95_queue_us = sig.p95_queue_us.max(q.p95_us);
+            }
+            if w.shed_rate > sig.shed_rate {
+                sig.shed_rate = w.shed_rate;
+            }
+            sig.depth_last = sig.depth_last.max(w.depth_last);
+        }
+        sig
+    }
+}
+
+/// One scaling verdict. `Up`/`Down` carry worker *deltas*.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleDecision {
+    /// Fleet stays as it is.
+    Hold,
+    /// Add this many workers (scale-up is fast: double, clamped).
+    Up(usize),
+    /// Drain this many workers (scale-down is slow: one per decision).
+    Down(usize),
+}
+
+/// The pure scaling policy: feed it the active worker count and the
+/// current [`FleetSignals`], get a [`ScaleDecision`]. It owns only the
+/// calm-streak counter, so deterministic tests drive it window by
+/// window with synthetic signals and no clock at all.
+///
+/// ```
+/// use kan_sas::coordinator::autoscale::{
+///     AutoscaleConfig, Controller, FleetSignals, ScaleDecision,
+/// };
+///
+/// let cfg = AutoscaleConfig { min_workers: 1, max_workers: 8, slo_p95_us: 1_000,
+///     calm_windows: 2, ..AutoscaleConfig::default() };
+/// let mut c = Controller::new(cfg);
+/// let breach = FleetSignals { p95_queue_us: 5_000, windows: 1, ..Default::default() };
+/// assert_eq!(c.evaluate(2, &breach), ScaleDecision::Up(2), "breach doubles the fleet");
+/// let calm = FleetSignals { p95_queue_us: 100, windows: 1, ..Default::default() };
+/// assert_eq!(c.evaluate(4, &calm), ScaleDecision::Hold, "one calm window is not enough");
+/// assert_eq!(c.evaluate(4, &calm), ScaleDecision::Down(1), "K consecutive calm windows drain one");
+/// ```
+#[derive(Debug)]
+pub struct Controller {
+    cfg: AutoscaleConfig,
+    calm: u32,
+}
+
+impl Controller {
+    /// A controller with zero calm-streak history.
+    pub fn new(cfg: AutoscaleConfig) -> Self {
+        Self { cfg, calm: 0 }
+    }
+
+    /// The policy this controller enforces.
+    pub fn config(&self) -> &AutoscaleConfig {
+        &self.cfg
+    }
+
+    /// Consecutive calm windows observed so far (resets on breach, on
+    /// any non-calm window, and after every scale-down).
+    pub fn calm_streak(&self) -> u32 {
+        self.calm
+    }
+
+    /// Evaluate one control window. Pure in (self.calm, active, sig).
+    pub fn evaluate(&mut self, active: usize, sig: &FleetSignals) -> ScaleDecision {
+        let breach =
+            sig.p95_queue_us > self.cfg.slo_p95_us || sig.shed_rate > self.cfg.max_shed_rate;
+        if breach {
+            self.calm = 0;
+            if active < self.cfg.max_workers {
+                // scale up fast: double the fleet, clamped to the
+                // ceiling (a flash crowd reaches max in O(log) windows)
+                let target = (active * 2).clamp(active + 1, self.cfg.max_workers);
+                return ScaleDecision::Up(target - active);
+            }
+            return ScaleDecision::Hold;
+        }
+        let calm_bar = (self.cfg.slo_p95_us as f64 * self.cfg.calm_fraction) as u64;
+        let calm = sig.p95_queue_us <= calm_bar && sig.shed_rate == 0.0;
+        if calm {
+            self.calm = self.calm.saturating_add(1);
+        } else {
+            // inside the dead band (above calm_bar, at or below the
+            // SLO): hold and restart the streak
+            self.calm = 0;
+        }
+        if self.calm >= self.cfg.calm_windows && active > self.cfg.min_workers {
+            self.calm = 0;
+            return ScaleDecision::Down(1);
+        }
+        ScaleDecision::Hold
+    }
+}
+
+/// One applied scaling action, recorded by the gateway's actuator (the
+/// log is bounded at [`SCALE_EVENT_CAP`]; older events are dropped).
+#[derive(Clone, Copy, Debug)]
+pub struct ScaleEvent {
+    /// When the action was applied, µs on the gateway clock.
+    pub at_us: u64,
+    /// Active workers before.
+    pub from: usize,
+    /// Active workers after.
+    pub to: usize,
+    /// The worst-tenant p95 queueing delay that drove the decision.
+    pub p95_queue_us: u64,
+    /// The worst-tenant shed rate that drove the decision.
+    pub shed_rate: f64,
+}
+
+/// Retention bound of the gateway's scale-event log.
+pub const SCALE_EVENT_CAP: usize = 256;
+
+/// Pin the calling thread to `core` (modulo the machine's core count)
+/// via `sched_setaffinity`. Best-effort: failures are ignored, and the
+/// call is a no-op off Linux. No external crate — the raw syscall
+/// binding is all we need.
+pub(crate) fn pin_current_thread(core: usize) {
+    #[cfg(target_os = "linux")]
+    {
+        let ncores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let core = core % ncores;
+        // 1024-bit CPU set, the kernel's default mask width
+        let mut mask = [0u64; 16];
+        mask[(core / 64) % mask.len()] |= 1u64 << (core % 64);
+        extern "C" {
+            fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+        }
+        // pid 0 = the calling thread; best-effort, ignore EINVAL/EPERM
+        unsafe {
+            let _unused = sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr());
+        }
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        let _unused = core;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AutoscaleConfig {
+        AutoscaleConfig {
+            min_workers: 1,
+            max_workers: 8,
+            slo_p95_us: 1_000,
+            max_shed_rate: 0.0,
+            calm_windows: 3,
+            calm_fraction: 0.5,
+            interval: Duration::from_millis(10),
+            pin_cores: false,
+        }
+    }
+
+    fn sig(p95: u64, shed: f64) -> FleetSignals {
+        FleetSignals { p95_queue_us: p95, shed_rate: shed, depth_last: 0, windows: 1 }
+    }
+
+    #[test]
+    fn breach_doubles_until_max() {
+        let mut c = Controller::new(cfg());
+        assert_eq!(c.evaluate(1, &sig(5_000, 0.0)), ScaleDecision::Up(1));
+        assert_eq!(c.evaluate(2, &sig(5_000, 0.0)), ScaleDecision::Up(2));
+        assert_eq!(c.evaluate(4, &sig(5_000, 0.0)), ScaleDecision::Up(4));
+        assert_eq!(c.evaluate(8, &sig(5_000, 0.0)), ScaleDecision::Hold, "already at max");
+    }
+
+    #[test]
+    fn shed_rate_alone_is_a_breach() {
+        let mut c = Controller::new(cfg());
+        assert_eq!(c.evaluate(2, &sig(0, 0.25)), ScaleDecision::Up(2));
+    }
+
+    #[test]
+    fn hysteresis_requires_k_consecutive_calm_windows() {
+        let mut c = Controller::new(cfg());
+        assert_eq!(c.evaluate(4, &sig(100, 0.0)), ScaleDecision::Hold);
+        assert_eq!(c.evaluate(4, &sig(100, 0.0)), ScaleDecision::Hold);
+        assert_eq!(c.calm_streak(), 2);
+        // a breach in the middle resets the streak
+        assert_eq!(c.evaluate(4, &sig(5_000, 0.0)), ScaleDecision::Up(4));
+        assert_eq!(c.calm_streak(), 0);
+        assert_eq!(c.evaluate(8, &sig(100, 0.0)), ScaleDecision::Hold);
+        assert_eq!(c.evaluate(8, &sig(100, 0.0)), ScaleDecision::Hold);
+        assert_eq!(c.evaluate(8, &sig(100, 0.0)), ScaleDecision::Down(1));
+        // the streak restarts after a drain: no double-dip
+        assert_eq!(c.evaluate(7, &sig(100, 0.0)), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn dead_band_neither_scales_nor_counts_calm() {
+        let mut c = Controller::new(cfg());
+        // 800µs is under the SLO (1000) but above the calm bar (500)
+        for _ in 0..10 {
+            assert_eq!(c.evaluate(4, &sig(800, 0.0)), ScaleDecision::Hold);
+        }
+        assert_eq!(c.calm_streak(), 0);
+    }
+
+    #[test]
+    fn never_drains_below_min() {
+        let mut c = Controller::new(cfg());
+        for _ in 0..10 {
+            assert_ne!(c.evaluate(1, &sig(0, 0.0)), ScaleDecision::Down(1));
+        }
+    }
+
+    #[test]
+    fn idle_windows_count_as_calm() {
+        // no tenant reported a window: p95 0, shed 0 — calm by design,
+        // so a fleet scaled up for a flash crowd shrinks after it ends
+        let mut c = Controller::new(cfg());
+        let idle = FleetSignals::default();
+        assert_eq!(c.evaluate(4, &idle), ScaleDecision::Hold);
+        assert_eq!(c.evaluate(4, &idle), ScaleDecision::Hold);
+        assert_eq!(c.evaluate(4, &idle), ScaleDecision::Down(1));
+    }
+
+    #[test]
+    fn bounds_spec_parses() {
+        let a = AutoscaleConfig::from_bounds_spec("2:12").unwrap();
+        assert_eq!((a.min_workers, a.max_workers), (2, 12));
+        assert!(AutoscaleConfig::from_bounds_spec("12").is_err());
+        assert!(AutoscaleConfig::from_bounds_spec("0:4").is_err());
+        assert!(AutoscaleConfig::from_bounds_spec("5:4").is_err());
+        assert!(AutoscaleConfig::from_bounds_spec("a:b").is_err());
+    }
+
+    #[test]
+    fn signals_take_the_worst_tenant() {
+        use crate::coordinator::telemetry::{TelemetrySnapshot, TenantSnapshot};
+        let snap = TelemetrySnapshot {
+            at_us: 0,
+            dropped_events: 0,
+            tenants: vec![TenantSnapshot {
+                name: "calm".into(),
+                live: true,
+                window: None,
+                totals: Default::default(),
+            }],
+            spans: Vec::new(),
+        };
+        let sig = FleetSignals::from_snapshot(&snap);
+        assert_eq!(sig.windows, 0);
+        assert_eq!(sig.p95_queue_us, 0);
+    }
+}

@@ -8,8 +8,15 @@
 //! path (the drain is splittable — a thief takes roughly half of an
 //! over-full backlog, leaving the rest with their original arrival
 //! times, so owner and thief serve the remainder concurrently).
+//!
+//! The batcher never reads the wall clock itself: arrivals are stamped
+//! in `u64` microseconds on the caller's [`Clock`](super::Clock) and
+//! every time-dependent query ([`Batcher::ready`],
+//! [`Batcher::time_left`], [`Batcher::oldest_age`]) takes the current
+//! `now_us` explicitly. That makes batching deadlines a pure function
+//! of (arrivals, now) — deterministic under a manual test clock.
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// When to close a batch.
 #[derive(Clone, Copy, Debug)]
@@ -28,6 +35,13 @@ impl Default for BatchPolicy {
     }
 }
 
+impl BatchPolicy {
+    /// `max_wait` in the µs unit the batcher computes in.
+    fn max_wait_us(&self) -> u64 {
+        self.max_wait.as_micros() as u64
+    }
+}
+
 /// Accumulates items with arrival timestamps and decides dispatch.
 ///
 /// Every item keeps its *true* arrival time: when a full drain leaves
@@ -39,9 +53,10 @@ impl Default for BatchPolicy {
 #[derive(Debug)]
 pub struct Batcher<T> {
     policy: BatchPolicy,
-    items: Vec<(Instant, T)>,
-    /// Earliest arrival among queued items (cached; recomputed on drain).
-    oldest: Option<Instant>,
+    items: Vec<(u64, T)>,
+    /// Earliest arrival (µs) among queued items (cached; recomputed on
+    /// drain).
+    oldest: Option<u64>,
 }
 
 impl<T> Batcher<T> {
@@ -51,20 +66,15 @@ impl<T> Batcher<T> {
         Self { policy, items: Vec::new(), oldest: None }
     }
 
-    /// Push an item that arrives now.
-    pub fn push(&mut self, item: T) {
-        self.push_arrived(Instant::now(), item);
-    }
-
-    /// Push an item that arrived at `at` (possibly before now: requests
-    /// that waited in an upstream admission queue keep that wait on
-    /// their deadline clock).
-    pub fn push_arrived(&mut self, at: Instant, item: T) {
+    /// Push an item that arrived at `at_us` on the owning gateway's
+    /// clock (possibly before now: requests that waited in an upstream
+    /// admission queue keep that wait on their deadline clock).
+    pub fn push_arrived(&mut self, at_us: u64, item: T) {
         self.oldest = Some(match self.oldest {
-            Some(t0) => t0.min(at),
-            None => at,
+            Some(t0) => t0.min(at_us),
+            None => at_us,
         });
-        self.items.push((at, item));
+        self.items.push((at_us, item));
     }
 
     /// Items currently queued.
@@ -85,35 +95,39 @@ impl<T> Batcher<T> {
         self.items.is_empty()
     }
 
-    /// Should the current batch be dispatched now?
-    pub fn ready(&self) -> bool {
+    /// Should the current batch be dispatched at `now_us`?
+    pub fn ready(&self, now_us: u64) -> bool {
         if self.items.len() >= self.policy.max_batch {
             return true;
         }
         match self.oldest {
-            Some(t0) => !self.items.is_empty() && t0.elapsed() >= self.policy.max_wait,
+            Some(t0) => {
+                !self.items.is_empty() && now_us.saturating_sub(t0) >= self.policy.max_wait_us()
+            }
             None => false,
         }
     }
 
     /// Time until this batch becomes due (for recv/steal wait timeouts):
     /// zero when already dispatchable — full to `max_batch` or past the
-    /// deadline — else the deadline remainder.
-    pub fn time_left(&self) -> Duration {
+    /// deadline — else the deadline remainder as of `now_us`.
+    pub fn time_left(&self, now_us: u64) -> Duration {
         if self.items.len() >= self.policy.max_batch {
             return Duration::ZERO;
         }
         match self.oldest {
-            Some(t0) => self.policy.max_wait.saturating_sub(t0.elapsed()),
+            Some(t0) => Duration::from_micros(
+                self.policy.max_wait_us().saturating_sub(now_us.saturating_sub(t0)),
+            ),
             None => self.policy.max_wait,
         }
     }
 
-    /// Age of the oldest queued item (`None` when empty) — how long the
-    /// head of this batch has been coalescing. The telemetry spine
-    /// stamps this on every batch-formed event.
-    pub fn oldest_age(&self) -> Option<Duration> {
-        self.oldest.map(|t0| t0.elapsed())
+    /// Age of the oldest queued item as of `now_us` (`None` when
+    /// empty) — how long the head of this batch has been coalescing.
+    /// The telemetry spine stamps this on every batch-formed event.
+    pub fn oldest_age(&self, now_us: u64) -> Option<Duration> {
+        self.oldest.map(|t0| Duration::from_micros(now_us.saturating_sub(t0)))
     }
 
     /// Take up to `max_batch` items (FIFO), leaving the rest queued with
@@ -151,26 +165,30 @@ impl<T> Batcher<T> {
 mod tests {
     use super::*;
 
+    const MS: u64 = 1_000;
+
     #[test]
     fn dispatches_on_size() {
         let mut b = Batcher::new(BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(9) });
-        b.push(1);
-        b.push(2);
-        assert!(!b.ready());
-        assert!(b.time_left() > Duration::ZERO);
-        b.push(3);
-        assert!(b.ready());
-        assert_eq!(b.time_left(), Duration::ZERO, "size-due batch waits for nothing");
+        b.push_arrived(0, 1);
+        b.push_arrived(0, 2);
+        assert!(!b.ready(0));
+        assert!(b.time_left(0) > Duration::ZERO);
+        b.push_arrived(0, 3);
+        assert!(b.ready(0));
+        assert_eq!(b.time_left(0), Duration::ZERO, "size-due batch waits for nothing");
         assert_eq!(b.drain(), vec![1, 2, 3]);
         assert!(b.is_empty());
     }
 
     #[test]
     fn dispatches_on_deadline() {
+        // pure virtual time: no thread::sleep, the deadline fires when
+        // the caller's clock passes arrival + max_wait
         let mut b = Batcher::new(BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(1) });
-        b.push(7);
-        std::thread::sleep(Duration::from_millis(3));
-        assert!(b.ready());
+        b.push_arrived(0, 7);
+        assert!(!b.ready(MS - 1));
+        assert!(b.ready(MS));
         assert_eq!(b.drain(), vec![7]);
     }
 
@@ -178,7 +196,7 @@ mod tests {
     fn drain_respects_max_batch_fifo() {
         let mut b = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(1) });
         for i in 0..5 {
-            b.push(i);
+            b.push_arrived(0, i);
         }
         assert_eq!(b.drain(), vec![0, 1]);
         assert_eq!(b.drain(), vec![2, 3]);
@@ -188,32 +206,34 @@ mod tests {
     #[test]
     fn empty_never_ready() {
         let b: Batcher<i32> = Batcher::new(BatchPolicy::default());
-        assert!(!b.ready());
+        assert!(!b.ready(u64::MAX));
     }
 
     #[test]
     fn drain_preserves_leftover_deadline() {
-        // regression: drain() used to stamp leftover items with a fresh
-        // Instant::now(), restarting their max_wait window on every drain
+        // regression: drain() used to restamp leftover items with the
+        // drain time, restarting their max_wait window on every drain
         let mut b = Batcher::new(BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(40) });
-        b.push(1);
-        b.push(2);
-        std::thread::sleep(Duration::from_millis(50));
-        assert!(b.ready());
+        b.push_arrived(0, 1);
+        b.push_arrived(0, 2);
+        let now = 50 * MS;
+        assert!(b.ready(now));
         assert_eq!(b.drain(), vec![1]);
         // item 2 arrived >40ms ago: already past its deadline
-        assert!(b.ready(), "leftover deadline was reset by drain");
-        assert_eq!(b.time_left(), Duration::ZERO);
+        assert!(b.ready(now), "leftover deadline was reset by drain");
+        assert_eq!(b.time_left(now), Duration::ZERO);
+        assert_eq!(b.oldest_age(now), Some(Duration::from_millis(50)));
         assert_eq!(b.drain(), vec![2]);
         assert!(b.is_empty());
-        assert_eq!(b.time_left(), Duration::from_millis(40));
+        assert_eq!(b.time_left(now), Duration::from_millis(40));
+        assert_eq!(b.oldest_age(now), None);
     }
 
     #[test]
     fn drain_into_reuses_one_vec() {
         let mut b = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(1) });
         for i in 0..5 {
-            b.push(i);
+            b.push_arrived(0, i);
         }
         let mut batch = Vec::new();
         assert_eq!(b.drain_into(&mut batch), 2);
@@ -231,17 +251,18 @@ mod tests {
     #[test]
     fn drain_upto_splits_and_preserves_leftover_arrivals() {
         let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(40) });
-        let t0 = Instant::now() - Duration::from_millis(200);
-        for i in 0..6 {
-            b.push_arrived(t0 + Duration::from_millis(i), i);
+        for i in 0..6u64 {
+            b.push_arrived(i * MS, i);
         }
+        let now = 200 * MS;
         let mut out = Vec::new();
         // a thief takes a split batch; the leftover keeps its clock
         assert_eq!(b.drain_upto(&mut out, 4), 4);
         assert_eq!(out, vec![0, 1, 2, 3], "oldest items stolen first (FIFO)");
         assert_eq!(b.len(), 2);
-        assert!(b.ready(), "leftover arrivals still past their deadline");
-        assert_eq!(b.time_left(), Duration::ZERO);
+        assert!(b.ready(now), "leftover arrivals still past their deadline");
+        assert_eq!(b.time_left(now), Duration::ZERO);
+        assert_eq!(b.oldest_age(now), Some(Duration::from_micros(196 * MS)));
         // limit above max_batch still caps at max_batch
         assert_eq!(b.drain_upto(&mut out, 99), 2);
         assert!(b.is_empty());
@@ -250,8 +271,20 @@ mod tests {
     #[test]
     fn push_arrived_backdates_deadline() {
         let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(50) });
-        b.push_arrived(Instant::now() - Duration::from_millis(200), 1);
-        assert!(b.ready(), "backdated arrival must count toward max_wait");
-        assert_eq!(b.time_left(), Duration::ZERO);
+        // arrival 200ms before the caller's now
+        b.push_arrived(0, 1);
+        assert!(b.ready(200 * MS), "backdated arrival must count toward max_wait");
+        assert_eq!(b.time_left(200 * MS), Duration::ZERO);
+    }
+
+    #[test]
+    fn now_before_arrival_saturates() {
+        // a thief's clock read can race an arrival stamped slightly
+        // later; age/deadline math must saturate, not underflow
+        let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(10) });
+        b.push_arrived(5 * MS, 1);
+        assert!(!b.ready(0));
+        assert_eq!(b.oldest_age(0), Some(Duration::ZERO));
+        assert_eq!(b.time_left(0), Duration::from_millis(10));
     }
 }

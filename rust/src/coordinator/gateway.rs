@@ -106,12 +106,17 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::arch::ArrayConfig;
 use crate::kan::{Engine, Scratch};
 
+use super::autoscale::{
+    pin_current_thread, AutoscaleConfig, Controller, FleetSignals, ScaleDecision, ScaleEvent,
+    SCALE_EVENT_CAP,
+};
 use super::batcher::{BatchPolicy, Batcher};
+use super::clock::Clock;
 use super::metrics::{jain_fairness, jain_fairness_normalized, Metrics};
 use super::telemetry::{ChurnKind, EventKind, Telemetry, TelemetryConfig, NO_TENANT};
 
@@ -238,6 +243,18 @@ pub struct GatewayConfig {
     /// flight recorder, trace sampling). On by default;
     /// [`TelemetryConfig::off`] removes even the ring writes.
     pub telemetry: TelemetryConfig,
+    /// SLO-driven worker autoscaling. `None` (the default) keeps the
+    /// fixed fleet of `replicas` workers; `Some` starts the fleet at
+    /// [`AutoscaleConfig::min_workers`], pre-sizes every per-worker
+    /// structure to `max_workers`, and runs the controller loop
+    /// (telemetry is force-enabled — the controller is blind without
+    /// its windowed signals).
+    pub autoscale: Option<AutoscaleConfig>,
+    /// The gateway's time source: request timestamps, batching
+    /// deadlines, telemetry windows, and autoscale decisions all read
+    /// it. Defaults to the monotonic wall clock; tests inject
+    /// [`Clock::manual`] and advance virtual time explicitly.
+    pub clock: Clock,
 }
 
 impl Default for GatewayConfig {
@@ -251,6 +268,8 @@ impl Default for GatewayConfig {
             dispatch: Dispatch::FairSteal,
             quota: QuotaPolicy::None,
             telemetry: TelemetryConfig::default(),
+            autoscale: None,
+            clock: Clock::real(),
         }
     }
 }
@@ -636,8 +655,10 @@ struct GwRequest {
     x_q: Vec<u8>,
     /// Pre-sized (capacity `out_dim`) pooled response buffer.
     out: Vec<i64>,
-    submitted: Instant,
-    deadline: Option<Instant>,
+    /// Admission stamp, µs on the gateway clock.
+    submitted: u64,
+    /// Absolute service deadline, µs on the gateway clock.
+    deadline: Option<u64>,
     priority: Priority,
     /// Telemetry span id (nonzero for 1-in-N sampled requests).
     trace: u64,
@@ -890,17 +911,73 @@ struct Shared {
     shed_policy: ShedPolicy,
     dispatch: Dispatch,
     quota: QuotaPolicy,
-    /// Fleet size (fixed at start; each tenant's metrics cells match).
+    /// Worker *slots* (the fleet ceiling). Shards, tenant metrics
+    /// cells, and telemetry rings are all sized to this at start; the
+    /// *active* subset (`fleet.active`) may be smaller under
+    /// autoscaling and moves at runtime.
     replicas: usize,
     /// Fleet-default batch policy for tenants registered without one.
     default_policy: BatchPolicy,
-    /// One batcher shard per worker. A shard is *owned* by its worker
-    /// (only the owner pulls admissions into it) but *shared* with the
-    /// fleet: idle peers steal due batches out of it.
+    /// One batcher shard per worker slot. A shard is *owned* by its
+    /// worker (only the owner pulls admissions into it) but *shared*
+    /// with the fleet: idle peers steal due batches out of it.
     shards: Vec<Shard>,
     /// The telemetry spine: per-worker event rings plus the admission
     /// ring (whose single producer is whoever holds `state`).
     telemetry: Arc<Telemetry>,
+    /// The time source every stamp in this gateway reads (batcher
+    /// deadlines, telemetry windows, autoscale evaluation).
+    clock: Clock,
+    /// Accelerator-sim geometry, kept past start so runtime scale-up
+    /// can spawn workers with the same config the initial fleet got.
+    sim_array: ArrayConfig,
+    /// Elastic-fleet state: which slots run, their thread handles, and
+    /// the worker-seconds ledger.
+    fleet: Fleet,
+}
+
+/// Runtime state of the elastic worker fleet. Slots `0..replicas` are
+/// pre-sized at start; slots `0..active` hold running (or draining)
+/// workers — the active set is always a contiguous prefix, so scale-up
+/// spawns slot `active` and scale-down drains slot `active - 1`.
+struct Fleet {
+    /// Running workers (slots `0..active`). Moves only under
+    /// `scale_lock`.
+    active: AtomicUsize,
+    /// Per-slot drain flag: a stopping worker pulls no admissions,
+    /// flush-serves its own shard, steals nothing, and exits when its
+    /// backlog hits zero (peers may steal the tail out from under it —
+    /// either way every queued request is answered).
+    stopping: Vec<AtomicBool>,
+    /// Per-slot thread handles (`None` = not running). Scale-down and
+    /// shutdown take and join.
+    handles: Mutex<Vec<Option<JoinHandle<()>>>>,
+    /// Per-slot start stamp, µs on the gateway clock **plus one** (0 =
+    /// not running) — the worker-seconds ledger for running slots.
+    started_us: Vec<AtomicU64>,
+    /// Accumulated worker-µs of slots that have already exited.
+    busy_us: AtomicU64,
+    /// Pin each worker thread to core `slot % ncores`.
+    pin_cores: bool,
+    /// Serializes scaling actions (the autoscaler thread and any
+    /// `Gateway::scale_to` callers).
+    scale_lock: Mutex<()>,
+}
+
+/// The autoscaler's mutable half, shared between the gateway handle
+/// (synchronous [`Gateway::autoscale_tick`]) and the controller thread.
+struct AutoRuntime {
+    ctl: Mutex<AutoCtl>,
+    /// Set by shutdown before the clock wake so the controller thread
+    /// exits instead of evaluating another window.
+    stop: AtomicBool,
+}
+
+struct AutoCtl {
+    controller: Controller,
+    /// Applied scaling actions, newest last, capped at
+    /// [`SCALE_EVENT_CAP`].
+    events: VecDeque<ScaleEvent>,
 }
 
 /// Wake blocked submitters whose tenant can now make progress. Called
@@ -1009,12 +1086,12 @@ impl ShardQueues {
         self.synced_epoch = reg.epoch;
     }
 
-    /// Is model `i`'s batcher due for dispatch? (`flush` = shutdown
-    /// drain: everything nonempty is due. A draining tenant's batches
-    /// are always due.)
-    fn due(&self, i: usize, flush: bool) -> bool {
+    /// Is model `i`'s batcher due for dispatch at `now_us`? (`flush` =
+    /// shutdown drain: everything nonempty is due. A draining tenant's
+    /// batches are always due.)
+    fn due(&self, i: usize, flush: bool, now_us: u64) -> bool {
         let b = &self.batchers[i];
-        !b.is_empty() && (flush || self.expedite[i] || b.ready())
+        !b.is_empty() && (flush || self.expedite[i] || b.ready(now_us))
     }
 
     /// Weighted deficit-round-robin pick: scan due batchers from the
@@ -1024,7 +1101,7 @@ impl ShardQueues {
     /// tenant overtakes a saturated low-weight one within a few rounds;
     /// a lone due tenant is always dispatched (work conservation).
     /// Returns the picked model with its deficit already charged.
-    fn next_drr(&mut self, weights: &[u32], flush: bool) -> Option<usize> {
+    fn next_drr(&mut self, weights: &[u32], flush: bool, now_us: u64) -> Option<usize> {
         let n = self.batchers.len();
         if n == 0 {
             return None;
@@ -1043,7 +1120,7 @@ impl ShardQueues {
                     self.deficit[i] = 0;
                     continue;
                 }
-                if !self.due(i, flush) {
+                if !self.due(i, flush, now_us) {
                     continue; // still coalescing; keeps its credit
                 }
                 any_due = true;
@@ -1065,19 +1142,19 @@ impl ShardQueues {
 
     /// The fixed-dispatch pick: lowest model index that is due,
     /// weight-blind (the pre-fair baseline).
-    fn next_fixed(&self, flush: bool) -> Option<usize> {
-        (0..self.batchers.len()).find(|&i| self.due(i, flush))
+    fn next_fixed(&self, flush: bool, now_us: u64) -> Option<usize> {
+        (0..self.batchers.len()).find(|&i| self.due(i, flush, now_us))
     }
 
     /// Smallest time-to-due across nonempty batchers (`None` when the
     /// shard is empty) — the owning worker's wait bound. An expedited
     /// (draining) batcher is due now.
-    fn soonest_due(&self) -> Option<Duration> {
+    fn soonest_due(&self, now_us: u64) -> Option<Duration> {
         self.batchers
             .iter()
             .enumerate()
             .filter(|(_, b)| !b.is_empty())
-            .map(|(i, b)| if self.expedite[i] { Duration::ZERO } else { b.time_left() })
+            .map(|(i, b)| if self.expedite[i] { Duration::ZERO } else { b.time_left(now_us) })
             .min()
     }
 }
@@ -1100,8 +1177,9 @@ fn steal_limit(len: usize, max_batch: usize) -> usize {
 /// still serves and counts the request).
 pub struct Ticket {
     rx: Receiver<Result<Response, ServeError>>,
-    /// When the request was submitted (admission-queue entry time).
-    pub submitted: Instant,
+    /// When the request was submitted (admission-queue entry time), µs
+    /// on the gateway's [`Clock`].
+    pub submitted: u64,
 }
 
 impl Ticket {
@@ -1224,7 +1302,7 @@ impl ModelHandle {
                 self.in_dim
             )));
         }
-        let submitted = Instant::now();
+        let submitted = self.shared.clock.now_us();
         let m = self.model.0;
         let mut st = self.shared.state.lock().unwrap();
         loop {
@@ -1241,7 +1319,9 @@ impl ModelHandle {
             // Registry defaults fill whatever the request left unset
             // (re-resolved per lap: a Block wake may span a swap that
             // changed the tenant's defaults).
-            let deadline = deadline.or(tenant.defaults.deadline).map(|d| submitted + d);
+            let deadline = deadline
+                .or(tenant.defaults.deadline)
+                .map(|d| submitted + d.as_micros() as u64);
             let priority = priority.or(tenant.defaults.priority).unwrap_or_default();
             // Full = the whole queue is at capacity, or (weighted
             // quotas) this tenant's reservation is exhausted AND the
@@ -1768,10 +1848,11 @@ impl GatewayBuilder {
 /// ```
 pub struct Gateway {
     shared: Arc<Shared>,
-    workers: Vec<JoinHandle<()>>,
     replicas: usize,
     telemetry: Arc<Telemetry>,
     collector: Option<JoinHandle<()>>,
+    auto: Option<Arc<AutoRuntime>>,
+    autoscaler: Option<JoinHandle<()>>,
 }
 
 impl Gateway {
@@ -1784,6 +1865,25 @@ impl Gateway {
         assert!(cfg.replicas >= 1, "gateway needs at least one replica");
         assert!(cfg.queue_cap >= 1, "admission queue needs capacity");
         assert!(!models.is_empty(), "gateway needs at least one registered model");
+        // Fleet geometry: a fixed fleet runs `replicas` workers forever;
+        // under autoscaling the *slots* (shards, metrics cells,
+        // telemetry rings) are pre-sized to `max_workers` so scaling
+        // never reallocates shared state, and only `min_workers` start.
+        if let Some(a) = &cfg.autoscale {
+            assert!(
+                a.min_workers >= 1 && a.min_workers <= a.max_workers,
+                "autoscale bounds need 1 <= min ({}) <= max ({})",
+                a.min_workers,
+                a.max_workers
+            );
+        }
+        let slots = cfg.autoscale.map_or(cfg.replicas, |a| a.max_workers);
+        let initial = cfg.autoscale.map_or(cfg.replicas, |a| a.min_workers);
+        let mut telemetry_cfg = cfg.telemetry;
+        if cfg.autoscale.is_some() {
+            // the controller is blind without windowed signals
+            telemetry_cfg.enabled = true;
+        }
         let tenants: Vec<Tenant> = models
             .into_iter()
             .map(|s| {
@@ -1794,20 +1894,25 @@ impl Gateway {
                     s.policy.unwrap_or(cfg.policy),
                     s.defaults,
                     cfg.queue_cap,
-                    cfg.replicas,
-                    cfg.telemetry.exact_samples,
+                    slots,
+                    telemetry_cfg.exact_samples,
                 )
             })
             .collect();
         let n_models = tenants.len();
         let names: Vec<&str> = tenants.iter().map(|t| &*t.name).collect();
-        let telemetry = Arc::new(Telemetry::new(cfg.telemetry, cfg.replicas, &names));
+        let telemetry = Arc::new(Telemetry::new_with_clock(
+            telemetry_cfg,
+            slots,
+            &names,
+            cfg.clock.clone(),
+        ));
         drop(names);
         for (i, t) in tenants.iter().enumerate() {
             telemetry.record_churn(ChurnKind::Registered, i as u32, &t.name, t.weight, 1);
         }
         let registry = build_snapshot(1, tenants, cfg.queue_cap, cfg.quota);
-        let shards = (0..cfg.replicas)
+        let shards = (0..slots)
             .map(|_| Shard {
                 queues: Mutex::new(ShardQueues::empty()),
                 backlog: AtomicUsize::new(0),
@@ -1833,21 +1938,26 @@ impl Gateway {
             shed_policy: cfg.shed,
             dispatch: cfg.dispatch,
             quota: cfg.quota,
-            replicas: cfg.replicas,
+            replicas: slots,
             default_policy: cfg.policy,
             shards,
             telemetry: Arc::clone(&telemetry),
+            clock: cfg.clock.clone(),
+            sim_array: cfg.sim_array,
+            fleet: Fleet {
+                active: AtomicUsize::new(0),
+                stopping: (0..slots).map(|_| AtomicBool::new(false)).collect(),
+                handles: Mutex::new((0..slots).map(|_| None).collect()),
+                started_us: (0..slots).map(|_| AtomicU64::new(0)).collect(),
+                busy_us: AtomicU64::new(0),
+                pin_cores: cfg.autoscale.is_some_and(|a| a.pin_cores),
+                scale_lock: Mutex::new(()),
+            },
         });
-        let mut workers = Vec::with_capacity(cfg.replicas);
-        for i in 0..cfg.replicas {
-            let shared_w = Arc::clone(&shared);
-            let sim_array = cfg.sim_array;
-            let w = std::thread::Builder::new()
-                .name(format!("kansas-gw-{i}"))
-                .spawn(move || worker_loop(i, sim_array, shared_w))
-                .expect("spawn gateway worker");
-            workers.push(w);
+        for slot in 0..initial {
+            spawn_worker(&shared, slot);
         }
+        shared.fleet.active.store(initial, Ordering::SeqCst);
         let collector = telemetry.enabled().then(|| {
             let tel = Arc::clone(&telemetry);
             std::thread::Builder::new()
@@ -1855,7 +1965,33 @@ impl Gateway {
                 .spawn(move || tel.run_collector())
                 .expect("spawn telemetry collector")
         });
-        Self { shared, workers, replicas: cfg.replicas, telemetry, collector }
+        let auto = cfg.autoscale.map(|a| {
+            Arc::new(AutoRuntime {
+                ctl: Mutex::new(AutoCtl {
+                    controller: Controller::new(a),
+                    events: VecDeque::new(),
+                }),
+                stop: AtomicBool::new(false),
+            })
+        });
+        // Under a manual clock no controller thread is spawned: tests
+        // drive evaluation synchronously through `autoscale_tick`, so a
+        // clock advance for a batching window never races a background
+        // scaling action.
+        let autoscaler = match &auto {
+            Some(rt) if !cfg.clock.is_manual() => {
+                let (shared_a, tel_a, rt_a) =
+                    (Arc::clone(&shared), Arc::clone(&telemetry), Arc::clone(rt));
+                Some(
+                    std::thread::Builder::new()
+                        .name("kansas-autoscale".into())
+                        .spawn(move || autoscale_loop(&shared_a, &tel_a, &rt_a))
+                        .expect("spawn autoscale controller"),
+                )
+            }
+            _ => None,
+        };
+        Self { shared, replicas: slots, telemetry, collector, auto, autoscaler }
     }
 
     /// The gateway's telemetry spine: live windowed stats, flight
@@ -2236,6 +2372,16 @@ impl Gateway {
     /// Stop admitting, serve everything already queued, join all
     /// workers, and return the final stats.
     pub fn shutdown(mut self) -> GatewayStats {
+        // Retire the autoscaler first so no scaling action races the
+        // drain (it holds no locks while parked; the clock wake cuts
+        // its interval sleep short).
+        if let Some(rt) = &self.auto {
+            rt.stop.store(true, Ordering::SeqCst);
+        }
+        self.shared.clock.wake_all();
+        if let Some(a) = self.autoscaler.take() {
+            let _ = a.join();
+        }
         {
             let mut st = self.shared.state.lock().unwrap();
             st.open = false;
@@ -2245,7 +2391,11 @@ impl Gateway {
             wake_space(&self.shared, &st);
         }
         self.shared.nonempty.notify_all();
-        for w in self.workers.drain(..) {
+        let workers: Vec<JoinHandle<()>> = {
+            let mut handles = self.shared.fleet.handles.lock().unwrap();
+            handles.iter_mut().filter_map(|h| h.take()).collect()
+        };
+        for w in workers {
             let _ = w.join();
         }
         self.telemetry.stop();
@@ -2253,6 +2403,74 @@ impl Gateway {
             let _ = c.join();
         }
         self.snapshot()
+    }
+
+    /// Workers currently running (scale actions move this between the
+    /// autoscale bounds; fixed fleets stay at `replicas`). A draining
+    /// victim counts until its thread is joined.
+    pub fn active_workers(&self) -> usize {
+        self.shared.fleet.active.load(Ordering::SeqCst)
+    }
+
+    /// Worker slots (the ceiling the gateway was pre-sized to).
+    pub fn worker_slots(&self) -> usize {
+        self.replicas
+    }
+
+    /// Total worker-µs the fleet has consumed: exited workers'
+    /// accumulated spans plus the running span of every live slot. The
+    /// autoscale bench divides this by wall time to report fleet cost
+    /// against a fixed peak-size fleet.
+    pub fn worker_time_us(&self) -> u64 {
+        let now = self.shared.clock.now_us();
+        let fleet = &self.shared.fleet;
+        let running: u64 = fleet
+            .started_us
+            .iter()
+            .map(|s| match s.load(Ordering::SeqCst) {
+                0 => 0,
+                stamp => now.saturating_sub(stamp - 1),
+            })
+            .sum();
+        fleet.busy_us.load(Ordering::SeqCst) + running
+    }
+
+    /// Scale the fleet to `target` active workers (clamped to
+    /// `1..=worker_slots`), synchronously: scale-up returns once the
+    /// new workers are spawned, scale-down once each drained victim is
+    /// joined (its backlog flushed — no request is dropped). Returns
+    /// the active count after the action. Serialized against the
+    /// background autoscaler's own actions.
+    pub fn scale_to(&self, target: usize) -> usize {
+        fleet_scale_to(&self.shared, target)
+    }
+
+    /// One synchronous autoscale evaluation over the *live* telemetry
+    /// snapshot: reduce it to [`FleetSignals`], ask the controller, and
+    /// apply the decision. Returns the applied event, or `None` on
+    /// hold / when the gateway has no autoscale policy. This is the
+    /// manual-clock path — tests advance the [`Clock`], let the
+    /// telemetry collector roll a window, then tick.
+    pub fn autoscale_tick(&self) -> Option<ScaleEvent> {
+        let sig = FleetSignals::from_snapshot(&self.telemetry.snapshot());
+        self.autoscale_apply(&sig)
+    }
+
+    /// Like [`Gateway::autoscale_tick`], but over caller-built signals —
+    /// the deterministic harness for controller-and-actuator tests (a
+    /// synthetic p95 breach scales the real fleet without any traffic).
+    pub fn autoscale_apply(&self, sig: &FleetSignals) -> Option<ScaleEvent> {
+        let rt = self.auto.as_ref()?;
+        apply_decision(&self.shared, rt, sig)
+    }
+
+    /// The applied scale actions, oldest first (bounded at
+    /// [`SCALE_EVENT_CAP`]). Empty for fixed fleets.
+    pub fn scale_events(&self) -> Vec<ScaleEvent> {
+        match &self.auto {
+            Some(rt) => rt.ctl.lock().unwrap().events.iter().copied().collect(),
+            None => Vec::new(),
+        }
     }
 
     fn snapshot(&self) -> GatewayStats {
@@ -2306,6 +2524,113 @@ fn refresh_tenants(
     *fitted = snap.tenants.len();
 }
 
+/// Spawn the worker thread for `slot` and store its handle in the
+/// fleet. The slot's shard, metrics cells, and telemetry ring were all
+/// pre-sized at gateway start, so this allocates nothing shared.
+fn spawn_worker(shared: &Arc<Shared>, slot: usize) {
+    shared.fleet.stopping[slot].store(false, Ordering::SeqCst);
+    let shared_w = Arc::clone(shared);
+    let sim_array = shared.sim_array;
+    let w = std::thread::Builder::new()
+        .name(format!("kansas-gw-{slot}"))
+        .spawn(move || worker_loop(slot, sim_array, shared_w))
+        .expect("spawn gateway worker");
+    shared.fleet.handles.lock().unwrap()[slot] = Some(w);
+}
+
+/// A worker's last act: fold its running span into the fleet's
+/// worker-seconds ledger and mark the slot not-running.
+fn worker_exit(shared: &Shared, me: usize) {
+    let stamp = shared.fleet.started_us[me].swap(0, Ordering::SeqCst);
+    if stamp > 0 {
+        let span = shared.clock.now_us().saturating_sub(stamp - 1);
+        shared.fleet.busy_us.fetch_add(span, Ordering::SeqCst);
+    }
+}
+
+/// Move the active fleet to `target` workers (clamped to
+/// `1..=replicas`), serially. Scale-up spawns slot `active` upward;
+/// scale-down generalizes the `remove_model` drain contract to
+/// replicas: flag slot `active - 1` as stopping (no new dispatch to
+/// it), wake the fleet so it and stealing peers flush its shard
+/// backlog, and join the thread — it exits only at backlog zero, so
+/// every queued request is answered and per-model conservation holds
+/// through the drain. Returns the resulting active count.
+fn fleet_scale_to(shared: &Arc<Shared>, target: usize) -> usize {
+    let fleet = &shared.fleet;
+    let _scale = fleet.scale_lock.lock().unwrap();
+    let target = target.clamp(1, shared.replicas);
+    let mut active = fleet.active.load(Ordering::SeqCst);
+    while active < target {
+        spawn_worker(shared, active);
+        active += 1;
+        fleet.active.store(active, Ordering::SeqCst);
+        // a new worker must observe any backlog that predates it
+        shared.nonempty.notify_all();
+    }
+    while active > target {
+        let victim = active - 1;
+        fleet.stopping[victim].store(true, Ordering::SeqCst);
+        // wake everyone: the victim to notice the flag (it may be
+        // parked on the admission condvar), peers to steal its tail
+        shared.nonempty.notify_all();
+        let handle = fleet.handles.lock().unwrap()[victim].take();
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+        fleet.stopping[victim].store(false, Ordering::SeqCst);
+        active -= 1;
+        fleet.active.store(active, Ordering::SeqCst);
+    }
+    active
+}
+
+/// One controller evaluation + actuation: ask the policy, move the
+/// fleet, record the applied [`ScaleEvent`]. Returns `None` on hold.
+fn apply_decision(
+    shared: &Arc<Shared>,
+    rt: &AutoRuntime,
+    sig: &FleetSignals,
+) -> Option<ScaleEvent> {
+    let from = shared.fleet.active.load(Ordering::SeqCst);
+    let decision = rt.ctl.lock().unwrap().controller.evaluate(from, sig);
+    let target = match decision {
+        ScaleDecision::Hold => return None,
+        ScaleDecision::Up(n) => from + n,
+        ScaleDecision::Down(n) => from.saturating_sub(n),
+    };
+    let to = fleet_scale_to(shared, target);
+    let event = ScaleEvent {
+        at_us: shared.clock.now_us(),
+        from,
+        to,
+        p95_queue_us: sig.p95_queue_us,
+        shed_rate: sig.shed_rate,
+    };
+    let mut ctl = rt.ctl.lock().unwrap();
+    ctl.events.push_back(event);
+    while ctl.events.len() > SCALE_EVENT_CAP {
+        ctl.events.pop_front();
+    }
+    Some(event)
+}
+
+/// The production controller loop (real clock only): every
+/// [`AutoscaleConfig::interval`], reduce the live telemetry snapshot to
+/// [`FleetSignals`] and apply the policy. Exits when the gateway's
+/// shutdown sets the stop flag and wakes the clock.
+fn autoscale_loop(shared: &Arc<Shared>, telemetry: &Telemetry, rt: &AutoRuntime) {
+    let interval = rt.ctl.lock().unwrap().controller.config().interval;
+    loop {
+        shared.clock.sleep(interval);
+        if rt.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let sig = FleetSignals::from_snapshot(&telemetry.snapshot());
+        apply_decision(shared, rt, &sig);
+    }
+}
+
 /// One fleet worker: serves every registered model through the registry
 /// snapshot, owns a fleet-visible shard of per-model batchers, one
 /// scratch arena sized to the widest model, two reusable batch Vecs.
@@ -2316,6 +2641,10 @@ fn refresh_tenants(
 /// repeat. The worker sleeps only when nothing is due anywhere it can
 /// reach, and exits only when the gateway is closed and fully drained.
 fn worker_loop(me: usize, sim_array: ArrayConfig, shared: Arc<Shared>) {
+    if shared.fleet.pin_cores {
+        pin_current_thread(me);
+    }
+    shared.fleet.started_us[me].store(shared.clock.now_us() + 1, Ordering::SeqCst);
     let mut scratch = Scratch::new();
     let mut batch: Vec<GwRequest> = Vec::new();
     let mut live: Vec<GwRequest> = Vec::new();
@@ -2326,8 +2655,11 @@ fn worker_loop(me: usize, sim_array: ArrayConfig, shared: Arc<Shared>) {
     loop {
         // Phase 1: adopt any registry change, then move admitted
         // requests into this worker's shard (the pull also grows the
-        // shard to the current snapshot under the same locks).
+        // shard to the current snapshot under the same locks). A
+        // *stopping* worker (scale-down victim) pulls nothing — new
+        // admissions belong to the survivors.
         let closed;
+        let stopping = shared.fleet.stopping[me].load(Ordering::SeqCst);
         let mut reloaded = false;
         {
             let mut st = shared.state.lock().unwrap();
@@ -2336,7 +2668,7 @@ fn worker_loop(me: usize, sim_array: ArrayConfig, shared: Arc<Shared>) {
                 reloaded = true;
             }
             closed = !st.open;
-            let admitted = pull_into(&mut st, &shared, me);
+            let admitted = if stopping { false } else { pull_into(&mut st, &shared, me) };
             let more_queued = !st.items.is_empty();
             if admitted {
                 // quota-aware: only tenants whose admission check can
@@ -2344,9 +2676,9 @@ fn worker_loop(me: usize, sim_array: ArrayConfig, shared: Arc<Shared>) {
                 wake_space(&shared, &st);
             }
             drop(st);
-            if admitted && more_queued {
-                // this shard can't hold the remainder (those models'
-                // batchers are full); wake a peer to pull it
+            if more_queued && (admitted || stopping) {
+                // this shard can't hold the remainder (batchers full, or
+                // this worker is draining out); wake a peer to pull it
                 shared.nonempty.notify_one();
             }
         }
@@ -2367,17 +2699,21 @@ fn worker_loop(me: usize, sim_array: ArrayConfig, shared: Arc<Shared>) {
         // Phase 2: dispatch one batch — own shard first, then steal.
         // Batches never mix models: each drain comes from one model's
         // batcher and runs on that model's registry engine (shared by
-        // the whole fleet, so stolen batches serve anywhere).
+        // the whole fleet, so stolen batches serve anywhere). A
+        // stopping worker *flushes*: its own batches are all due now
+        // (drain them out fast), and it never steals new work.
+        let flush = closed || stopping;
+        let now_us = shared.clock.now_us();
         let mut picked: Option<(usize, bool)> = None;
         {
             let shard = &shared.shards[me];
             let mut q = shard.queues.lock().unwrap();
             let pick = match shared.dispatch {
-                Dispatch::FairSteal => q.next_drr(&weights, closed),
-                Dispatch::Fixed => q.next_fixed(closed),
+                Dispatch::FairSteal => q.next_drr(&weights, flush, now_us),
+                Dispatch::Fixed => q.next_fixed(flush, now_us),
             };
             if let Some(m) = pick {
-                let age = q.batchers[m].oldest_age().unwrap_or_default();
+                let age = q.batchers[m].oldest_age(now_us).unwrap_or_default();
                 let took = q.batchers[m].drain_into(&mut batch);
                 shard.backlog.fetch_sub(took, Ordering::Relaxed);
                 shared.telemetry.emit_worker(
@@ -2392,7 +2728,7 @@ fn worker_loop(me: usize, sim_array: ArrayConfig, shared: Arc<Shared>) {
                 picked = Some((m, false));
             }
         }
-        if picked.is_none() && shared.dispatch == Dispatch::FairSteal {
+        if picked.is_none() && !stopping && shared.dispatch == Dispatch::FairSteal {
             picked = steal_batch(&shared, &snap, me, closed, &mut batch).map(|m| (m, true));
         }
         if let Some((m, stolen)) = picked {
@@ -2415,12 +2751,21 @@ fn worker_loop(me: usize, sim_array: ArrayConfig, shared: Arc<Shared>) {
             );
             continue;
         }
-        // Phase 3: nothing due anywhere. Exit when closed and fully
-        // drained; otherwise sleep, bounded by the soonest moment a
-        // batch this worker could serve comes due (its own shard's
-        // always, a backlogged peer's too when stealing is on) so
-        // straggler windows and steal opportunities are never overslept.
+        // Phase 3: nothing due anywhere. A drained stopping worker
+        // exits (scale-down join point); a closed-and-drained fleet
+        // exits; otherwise sleep, bounded by the soonest moment a batch
+        // this worker could serve comes due (its own shard's always, a
+        // backlogged peer's too when stealing is on) so straggler
+        // windows and steal opportunities are never overslept.
         let st = shared.state.lock().unwrap();
+        if stopping && shared.shards[me].backlog.load(Ordering::Relaxed) == 0 {
+            // own shard flushed (phase 2 serves it flush-due; peers may
+            // steal the tail) — admission-queue items are the
+            // survivors' to pull, never this worker's again
+            drop(st);
+            worker_exit(&shared, me);
+            return;
+        }
         if !st.items.is_empty() {
             continue; // arrivals raced in between phases
         }
@@ -2432,6 +2777,8 @@ fn worker_loop(me: usize, sim_array: ArrayConfig, shared: Arc<Shared>) {
                 }
             };
             if drained {
+                drop(st);
+                worker_exit(&shared, me);
                 return;
             }
             // a peer's shard still holds work this worker can steal on
@@ -2593,10 +2940,12 @@ fn try_steal_from(
     batch: &mut Vec<GwRequest>,
 ) -> Option<usize> {
     let shard = &shared.shards[victim];
+    let now_us = shared.clock.now_us();
     let mut q = shard.queues.lock().unwrap();
     let m = (0..q.batchers.len())
         .filter(|&i| {
-            snap.tenants.get(i).map(|t| t.engine.is_some()).unwrap_or(false) && q.due(i, flush)
+            snap.tenants.get(i).map(|t| t.engine.is_some()).unwrap_or(false)
+                && q.due(i, flush, now_us)
         })
         .max_by_key(|&i| q.batchers[i].len())?;
     let limit = steal_limit(q.batchers[m].len(), q.batchers[m].max_batch());
@@ -2614,6 +2963,7 @@ fn try_steal_from(
 /// [`Dispatch::FairSteal`] (it would steal those). `None` means nothing
 /// is queued anywhere reachable; sleep until an admission signal.
 fn wait_hint(shared: &Shared, me: usize) -> Option<Duration> {
+    let now_us = shared.clock.now_us();
     let mut hint: Option<Duration> = None;
     for (i, shard) in shared.shards.iter().enumerate() {
         if i != me
@@ -2622,7 +2972,7 @@ fn wait_hint(shared: &Shared, me: usize) -> Option<Duration> {
         {
             continue;
         }
-        if let Some(d) = shard.queues.lock().unwrap().soonest_due() {
+        if let Some(d) = shard.queues.lock().unwrap().soonest_due(now_us) {
             hint = Some(match hint {
                 Some(h) => h.min(d),
                 None => d,
@@ -2671,14 +3021,14 @@ fn serve_batch(
     let metrics = &tenant.cells[me];
     let in_dim = engine.in_dim();
     let out_dim = engine.out_dim();
-    let serve_start = Instant::now();
+    let serve_start_us = shared.clock.now_us();
     let mut answered = 0u64;
     live.clear();
     {
         let staging = scratch.stage_input(batch.len() * in_dim);
         for req in batch.drain(..) {
             match req.deadline {
-                Some(d) if d <= serve_start => {
+                Some(d) if d <= serve_start_us => {
                     counters.expired.fetch_add(1, Ordering::Relaxed);
                     shared.telemetry.emit_worker(
                         me,
@@ -2734,25 +3084,26 @@ fn serve_batch(
     }
     match result {
         Ok(t) => {
+            let service_us = shared.clock.now_us().saturating_sub(serve_start_us);
+            let service = Duration::from_micros(service_us);
             for (i, mut req) in live.drain(..).enumerate() {
-                let queue = serve_start.duration_since(req.submitted);
-                let service = serve_start.elapsed();
-                m.record_request_split(queue, service);
+                let queue_us = serve_start_us.saturating_sub(req.submitted);
+                m.record_request_split(Duration::from_micros(queue_us), service);
                 counters.completed.fetch_add(1, Ordering::Relaxed);
                 shared.telemetry.emit_worker(
                     me,
                     EventKind::Responded,
                     model as u32,
                     1,
-                    queue.as_micros() as u64,
-                    service.as_micros() as u64,
+                    queue_us,
+                    service_us,
                     req.trace,
                 );
                 req.out.extend_from_slice(&t[i * out_dim..(i + 1) * out_dim]);
                 let _ = req.resp.send(Ok(Response {
                     t: req.out,
-                    queue_us: queue.as_micros() as u64,
-                    service_us: service.as_micros() as u64,
+                    queue_us,
+                    service_us,
                     pool: Some(Arc::clone(&tenant.buffers)),
                 }));
                 answered += 1;
@@ -2787,6 +3138,7 @@ mod tests {
             dispatch: Dispatch::FairSteal,
             quota: QuotaPolicy::None,
             telemetry: TelemetryConfig::default(),
+            ..Default::default()
         });
         let ea = Engine::new(QuantizedModel::synthetic("a", &[4, 6, 3], 5, 3, 5));
         let eb = Engine::new(QuantizedModel::synthetic("b", &[6, 8, 5], 5, 3, 9));
@@ -2858,6 +3210,17 @@ mod tests {
             default_policy: policy,
             shards: Vec::new(),
             telemetry: Arc::new(Telemetry::new(TelemetryConfig::off(), 0, &[])),
+            clock: Clock::real(),
+            sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
+            fleet: Fleet {
+                active: AtomicUsize::new(0),
+                stopping: Vec::new(),
+                handles: Mutex::new(Vec::new()),
+                started_us: Vec::new(),
+                busy_us: AtomicU64::new(0),
+                pin_cores: false,
+                scale_lock: Mutex::new(()),
+            },
         })
     }
 
@@ -3089,13 +3452,17 @@ mod tests {
             model: ModelId(m),
             x_q: Vec::new(),
             out: Vec::new(),
-            submitted: Instant::now(),
+            submitted: 0,
             deadline: None,
             priority: Priority::Normal,
             resp: tx,
             trace: 0,
         }
     }
+
+    /// Virtual "now" far past every test arrival stamp (60s in µs) —
+    /// the dispatch tests run in pure virtual time, no clock reads.
+    const LATER_US: u64 = 60_000_000;
 
     #[test]
     fn drr_dispatch_tracks_weights_under_saturation() {
@@ -3104,16 +3471,15 @@ mod tests {
         let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10) };
         let mut q = ShardQueues::new(2, policy);
         let weights = [4u32, 1];
-        let backdated = Instant::now() - Duration::from_secs(60);
         let mut rows = [0usize; 2];
         let mut out = Vec::new();
         for _ in 0..100 {
             for m in 0..2 {
                 while q.batchers[m].len() < policy.max_batch {
-                    q.batchers[m].push_arrived(backdated, dummy_req(m));
+                    q.batchers[m].push_arrived(0, dummy_req(m));
                 }
             }
-            let pick = q.next_drr(&weights, false).expect("both tenants due");
+            let pick = q.next_drr(&weights, false, LATER_US).expect("both tenants due");
             rows[pick] += q.batchers[pick].drain_into(&mut out);
         }
         assert_eq!(rows[0] + rows[1], 400, "every dispatch drains a full batch");
@@ -3129,12 +3495,11 @@ mod tests {
         let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10) };
         let mut q = ShardQueues::new(2, policy);
         let weights = [1u32, 8];
-        let backdated = Instant::now() - Duration::from_secs(60);
         for _ in 0..4 {
-            q.batchers[0].push_arrived(backdated, dummy_req(0));
+            q.batchers[0].push_arrived(0, dummy_req(0));
         }
-        q.batchers[1].push_arrived(backdated, dummy_req(1));
-        let pick = q.next_drr(&weights, false);
+        q.batchers[1].push_arrived(0, dummy_req(1));
+        let pick = q.next_drr(&weights, false, LATER_US);
         assert_eq!(pick, Some(1), "starved weight-8 tenant beats the saturated weight-1 one");
     }
 
@@ -3146,18 +3511,18 @@ mod tests {
         let policy = BatchPolicy { max_batch: 32, max_wait: Duration::from_secs(10) };
         let mut q = ShardQueues::new(3, policy);
         let weights = [1u32, 1, 1];
-        let backdated = Instant::now() - Duration::from_secs(60);
         for _ in 0..32 {
-            q.batchers[2].push_arrived(backdated, dummy_req(2));
+            q.batchers[2].push_arrived(0, dummy_req(2));
         }
-        assert_eq!(q.next_drr(&weights, false), Some(2));
+        assert_eq!(q.next_drr(&weights, false, LATER_US), Some(2));
         let mut out = Vec::new();
         q.batchers[2].drain_into(&mut out);
-        assert_eq!(q.next_drr(&weights, false), None, "nothing due");
-        // not-yet-due items are not dispatched without flush, but are on flush
-        q.batchers[0].push(dummy_req(0));
-        assert_eq!(q.next_drr(&weights, false), None);
-        assert_eq!(q.next_drr(&weights, true), Some(0));
+        assert_eq!(q.next_drr(&weights, false, LATER_US), None, "nothing due");
+        // a fresh arrival is not due within its window without flush,
+        // but is on flush
+        q.batchers[0].push_arrived(LATER_US, dummy_req(0));
+        assert_eq!(q.next_drr(&weights, false, LATER_US), None);
+        assert_eq!(q.next_drr(&weights, true, LATER_US), Some(0));
     }
 
     #[test]
@@ -3174,16 +3539,17 @@ mod tests {
     fn split_steal_leaves_arrival_clocks_intact() {
         let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(40) };
         let mut b: Batcher<GwRequest> = Batcher::new(policy);
-        let t0 = Instant::now() - Duration::from_millis(200);
+        // arrivals 200ms before the thief's now, 1ms apart
         for i in 0..12u64 {
-            b.push_arrived(t0 + Duration::from_millis(i), dummy_req(0));
+            b.push_arrived(i * 1_000, dummy_req(0));
         }
+        let now_us = 200_000 + 11_000;
         let mut out = Vec::new();
         let took = b.drain_upto(&mut out, steal_limit(b.len(), b.max_batch()));
         assert_eq!(took, 6, "12 queued, cap 8: the thief takes half");
         assert_eq!(b.len(), 6);
-        assert!(b.ready(), "leftover items keep their (long past) arrival clocks");
-        assert_eq!(b.time_left(), Duration::ZERO);
+        assert!(b.ready(now_us), "leftover items keep their (long past) arrival clocks");
+        assert_eq!(b.time_left(now_us), Duration::ZERO);
     }
 
     #[test]
@@ -3195,11 +3561,11 @@ mod tests {
         let reg = build_snapshot(2, vec![t], 8, QuotaPolicy::None);
         let mut q = ShardQueues::empty();
         q.grow(&reg);
-        q.batchers[0].push(dummy_req(0));
-        assert!(!q.batchers[0].ready(), "a 60s window is not due on its own");
-        assert!(q.due(0, false), "draining tenant batches are expedited");
-        assert_eq!(q.soonest_due(), Some(Duration::ZERO));
-        assert_eq!(q.next_drr(&[1], false), Some(0));
+        q.batchers[0].push_arrived(0, dummy_req(0));
+        assert!(!q.batchers[0].ready(0), "a 60s window is not due on its own");
+        assert!(q.due(0, false, 0), "draining tenant batches are expedited");
+        assert_eq!(q.soonest_due(0), Some(Duration::ZERO));
+        assert_eq!(q.next_drr(&[1], false, 0), Some(0));
     }
 
     #[test]
@@ -3251,6 +3617,7 @@ mod tests {
             dispatch: Dispatch::Fixed,
             quota: QuotaPolicy::None,
             telemetry: TelemetryConfig::default(),
+            ..Default::default()
         });
         let ea = Engine::new(QuantizedModel::synthetic("a", &[4, 6, 3], 5, 3, 5));
         let eb = Engine::new(QuantizedModel::synthetic("b", &[6, 8, 5], 5, 3, 9));
@@ -3278,6 +3645,7 @@ mod tests {
             dispatch: Dispatch::FairSteal,
             quota: QuotaPolicy::None,
             telemetry: TelemetryConfig::default(),
+            ..Default::default()
         });
         let ea = Engine::new(QuantizedModel::synthetic("a", &[4, 6, 3], 5, 3, 5));
         let eb = Engine::new(QuantizedModel::synthetic("b", &[6, 8, 5], 5, 3, 9));
@@ -3307,6 +3675,7 @@ mod tests {
             dispatch: Dispatch::FairSteal,
             quota: QuotaPolicy::None,
             telemetry: TelemetryConfig::default(),
+            ..Default::default()
         });
         let ea = Engine::new(QuantizedModel::synthetic("a", &[4, 6, 3], 5, 3, 5));
         let eb = Engine::new(QuantizedModel::synthetic("b", &[6, 8, 5], 5, 3, 9));

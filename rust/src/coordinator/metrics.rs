@@ -159,6 +159,20 @@ impl LogHistogram {
         self.max
     }
 
+    /// Fraction of recorded samples `<= v` (1.0 when empty — a stream
+    /// with no samples violates no bound). Resolution is one bucket:
+    /// samples sharing `v`'s bucket all count as within, so the answer
+    /// carries the same ~3.2% relative-value error as the quantiles.
+    /// This is the SLO-attainment lens the autoscale bench reads.
+    pub fn fraction_le(&self, v: u64) -> f64 {
+        if self.count == 0 {
+            return 1.0;
+        }
+        let idx = bucket_index(v);
+        let within: u64 = self.counts[..=idx].iter().sum();
+        within as f64 / self.count as f64
+    }
+
     /// Percentile summary in [`LatencyStats`] form; `None` when empty.
     pub fn stats(&self) -> Option<LatencyStats> {
         if self.count == 0 {
@@ -450,6 +464,37 @@ impl Metrics {
             self.queue_hist.stats()
         }
     }
+
+    /// SLO attainment: the fraction of answered requests whose
+    /// end-to-end latency was `<= us` (1.0 before any request). Exact
+    /// in [`Metrics::exact`] mode, bucket-resolution otherwise.
+    pub fn latency_within_us(&self, us: u64) -> f64 {
+        if self.exact {
+            if self.latencies_us.is_empty() {
+                return 1.0;
+            }
+            let within = self.latencies_us.iter().filter(|&&v| v <= us).count();
+            within as f64 / self.latencies_us.len() as f64
+        } else {
+            self.latency_hist.fraction_le(us)
+        }
+    }
+
+    /// SLO attainment on the queueing-delay stream: the fraction of
+    /// split-recorded requests that waited `<= us` before service
+    /// (1.0 before any). The autoscale bench scores fleets on this —
+    /// queueing is what a too-small fleet inflates.
+    pub fn queue_within_us(&self, us: u64) -> f64 {
+        if self.exact {
+            if self.queue_samples_us.is_empty() {
+                return 1.0;
+            }
+            let within = self.queue_samples_us.iter().filter(|&&v| v <= us).count();
+            within as f64 / self.queue_samples_us.len() as f64
+        } else {
+            self.queue_hist.fraction_le(us)
+        }
+    }
 }
 
 #[cfg(test)]
@@ -647,6 +692,33 @@ mod tests {
         assert!(a.stats().is_none());
         a.record(42);
         assert_eq!(a.stats().unwrap().p50_us, 42);
+    }
+
+    #[test]
+    fn attainment_fractions() {
+        // empty streams violate no bound
+        assert_eq!(LogHistogram::new().fraction_le(0), 1.0);
+        assert_eq!(Metrics::default().latency_within_us(0), 1.0);
+        assert_eq!(Metrics::exact().queue_within_us(0), 1.0);
+        // exact mode: precise counting
+        let mut e = Metrics::exact();
+        for us in [10u64, 20, 30, 40] {
+            e.record_request_split(Duration::from_micros(us), Duration::ZERO);
+        }
+        assert!((e.latency_within_us(25) - 0.5).abs() < 1e-12);
+        assert!((e.queue_within_us(10) - 0.25).abs() < 1e-12);
+        assert_eq!(e.latency_within_us(1_000), 1.0);
+        assert_eq!(e.latency_within_us(5), 0.0);
+        // histogram mode: exact below the linear cutoff, monotone and
+        // saturating above it
+        let mut h = LogHistogram::new();
+        for v in [1u64, 2, 3, 10_000, 20_000] {
+            h.record(v);
+        }
+        assert!((h.fraction_le(3) - 0.6).abs() < 1e-12);
+        assert_eq!(h.fraction_le(u64::MAX / 2), 1.0);
+        assert!(h.fraction_le(5_000) >= 0.6);
+        assert!(h.fraction_le(5_000) < 1.0);
     }
 
     #[test]

@@ -79,6 +79,17 @@
 //!   N lifecycle events per tenant and every registry churn event) and
 //!   sampled full-request **span traces**
 //!   (admission→batch→serve→respond timelines);
+//! * the fleet is **elastic** under an SLO: [`autoscale`] evaluates the
+//!   telemetry spine's windowed signals (worst-tenant p95 queueing
+//!   delay, shed rate) against a target and scales workers between
+//!   configured bounds — doubling fast on breach, draining one at a
+//!   time after K consecutive calm windows (the `remove_model` drain
+//!   contract generalized to replicas, so no request is dropped by a
+//!   scaling action). Every time-dependent decision (batcher windows,
+//!   telemetry ticks, autoscale evaluation) reads an injectable
+//!   [`Clock`] — production runs the monotonic wall clock, tests drive
+//!   a manually-advanced one through [`GatewayConfig`] and step
+//!   virtual time deterministically;
 //! * [`pool`] keeps `Pool` as the 1-model special case (`PoolHandle` =
 //!   [`ModelHandle`], `PoolError` = [`ServeError`]) and [`server`] keeps
 //!   `Server` as the 1-model, 1-replica special case;
@@ -94,7 +105,9 @@
 
 #![warn(missing_docs)]
 
+pub mod autoscale;
 pub mod batcher;
+pub mod clock;
 pub mod gateway;
 pub mod metrics;
 pub mod net;
@@ -102,7 +115,9 @@ pub mod pool;
 pub mod server;
 pub mod telemetry;
 
+pub use autoscale::{AutoscaleConfig, Controller, FleetSignals, ScaleDecision, ScaleEvent};
 pub use batcher::{BatchPolicy, Batcher};
+pub use clock::Clock;
 pub use gateway::{
     BufferPool, Dispatch, DrainMode, Gateway, GatewayBuilder, GatewayConfig, GatewayStats,
     ModelHandle, ModelId, ModelStats, Priority, QuotaPolicy, Request, Response, RowPool,

@@ -189,6 +189,7 @@ mod tests {
                 dispatch: crate::coordinator::Dispatch::FairSteal,
                 quota: crate::coordinator::QuotaPolicy::None,
                 telemetry: crate::coordinator::TelemetryConfig::default(),
+                ..Default::default()
             },
         )
     }

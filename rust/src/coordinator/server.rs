@@ -87,6 +87,7 @@ impl Server {
                     // a single tenant needs no admission reservations
                     quota: QuotaPolicy::None,
                     telemetry: TelemetryConfig::default(),
+                    ..Default::default()
                 },
             ),
         }

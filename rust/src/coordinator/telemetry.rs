@@ -37,10 +37,11 @@ use std::collections::HashMap;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::util::json::Value;
 
+use super::clock::Clock;
 use super::metrics::{LatencyStats, LogHistogram};
 
 /// Telemetry spine configuration, carried inside
@@ -928,7 +929,7 @@ impl FlightDump {
 /// sampler, and the collector's control surface.
 pub struct Telemetry {
     cfg: TelemetryConfig,
-    origin: Instant,
+    clock: Clock,
     /// One ring per worker, plus the admission ring at index
     /// `workers` (its producer is the state-lock holder).
     rings: Vec<EventRing>,
@@ -940,9 +941,24 @@ pub struct Telemetry {
 
 impl Telemetry {
     /// Build the spine for `workers` worker threads and the given
-    /// initial tenants. When `cfg.enabled` is false no rings are
-    /// allocated and every emit reduces to one branch.
+    /// initial tenants, on the real wall clock. When `cfg.enabled` is
+    /// false no rings are allocated and every emit reduces to one
+    /// branch.
     pub fn new(cfg: TelemetryConfig, workers: usize, tenants: &[&str]) -> Self {
+        Self::new_with_clock(cfg, workers, tenants, Clock::real())
+    }
+
+    /// Like [`Telemetry::new`], but timestamping events and rolling
+    /// windows on an injected [`Clock`]. The gateway passes its own
+    /// clock here so that under a manual test clock the telemetry
+    /// windows (and everything the autoscaler reads from them) advance
+    /// only when the test advances time.
+    pub fn new_with_clock(
+        cfg: TelemetryConfig,
+        workers: usize,
+        tenants: &[&str],
+        clock: Clock,
+    ) -> Self {
         let rings = if cfg.enabled {
             (0..workers + 1).map(|_| EventRing::new(cfg.ring_capacity)).collect()
         } else {
@@ -965,7 +981,7 @@ impl Telemetry {
         };
         Self {
             cfg,
-            origin: Instant::now(),
+            clock,
             rings,
             workers,
             seq: AtomicU64::new(0),
@@ -985,10 +1001,11 @@ impl Telemetry {
         &self.cfg
     }
 
-    /// Microseconds since the spine was created (monotonic).
+    /// Microseconds on the spine's clock (monotonic; since process
+    /// start on the real clock, since 0 on a manual test clock).
     #[inline]
     pub fn clock_us(&self) -> u64 {
-        self.origin.elapsed().as_micros() as u64
+        self.clock.now_us()
     }
 
     /// Emit from worker `worker`'s ring (single producer: that worker's
@@ -1162,20 +1179,27 @@ impl Telemetry {
         }
     }
 
-    /// Ask the collector loop to exit after a final drain.
+    /// Ask the collector loop to exit after a final drain. Wakes any
+    /// thread parked in the clock (the collector's tick sleep) so
+    /// shutdown is prompt on the real clock and doesn't deadlock on a
+    /// manual one.
     pub(crate) fn stop(&self) {
         self.stop.store(true, Ordering::Release);
+        self.clock.wake_all();
     }
 
     /// The collector thread body: drain the rings at roughly a quarter
     /// of the window period (clamped to [1ms, 100ms]) until stopped,
     /// then run one final pass so shutdown snapshots see every event.
+    /// The tick sleeps on the spine's [`Clock`], so under a manual
+    /// clock the collector runs a pass per `advance` instead of
+    /// free-running.
     pub(crate) fn run_collector(&self) {
         let tick =
             (self.cfg.window / 4).clamp(Duration::from_millis(1), Duration::from_millis(100));
         while !self.stop.load(Ordering::Acquire) {
             self.collect();
-            std::thread::sleep(tick);
+            self.clock.sleep(tick);
         }
         self.collect();
     }

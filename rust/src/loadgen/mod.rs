@@ -941,6 +941,7 @@ mod tests {
                 dispatch: crate::coordinator::Dispatch::FairSteal,
                 quota: crate::coordinator::QuotaPolicy::None,
                 telemetry: crate::coordinator::TelemetryConfig::default(),
+                ..Default::default()
             },
         )
     }
@@ -986,6 +987,79 @@ mod tests {
         assert!((exp[0] - (40.0 * 0.75 + 40.0 * 0.1)).abs() < 1e-9, "got {}", exp[0]);
         assert!((exp[1] - (40.0 * 0.25 + 40.0 * 0.9)).abs() < 1e-9, "got {}", exp[1]);
         assert!((exp[0] + exp[1] - s.expected_arrivals()).abs() < 1e-9);
+    }
+
+    /// [`expected_arrivals_per_entry`] integrates the same
+    /// [`entry_share`] distribution [`draw_model`] samples — so the
+    /// empirical assignment frequencies of a phase-by-phase simulated
+    /// arrival stream must match the integral within chi-squared
+    /// tolerance, for a flat scenario, a focused burst, and a churned
+    /// (mid-run entry removal) schedule alike. Fixed seed: the check is
+    /// deterministic, not flake-budgeted.
+    #[test]
+    fn expected_arrivals_match_empirical_draw_frequencies() {
+        fn chi_squared<H>(
+            rng: &mut Rng,
+            entries: &[MixEntry<H>],
+            scenario: &Scenario,
+        ) -> (f64, Vec<f64>, Vec<f64>) {
+            let total_weight: f64 = entries.iter().map(|e| e.weight).sum();
+            let exp = expected_arrivals_per_entry(entries, scenario);
+            let mut obs = vec![0f64; entries.len()];
+            for ph in &scenario.phases {
+                let draws = (ph.rate_rps * ph.duration.as_secs_f64()).round() as usize;
+                for _ in 0..draws {
+                    obs[draw_model(rng, entries, total_weight, ph.focus.as_ref())] += 1.0;
+                }
+            }
+            let n_exp: f64 = exp.iter().sum();
+            let n_obs: f64 = obs.iter().sum();
+            assert!(
+                (n_exp - n_obs).abs() < 1.0,
+                "the integral and the simulated stream agree on total arrivals \
+                 ({n_exp} vs {n_obs})"
+            );
+            let stat = exp
+                .iter()
+                .zip(&obs)
+                .map(|(e, o)| (o - e).powi(2) / e.max(1e-9))
+                .sum();
+            (stat, exp, obs)
+        }
+
+        let pool = tiny_pool(1, 8, ShedPolicy::RejectNew);
+        let entries = [
+            MixEntry { handle: pool.handle(), weight: 5.0 },
+            MixEntry { handle: pool.handle(), weight: 2.0 },
+            MixEntry { handle: pool.handle(), weight: 1.0 },
+        ];
+        let mut rng = Rng::new(13);
+        let dur = Duration::from_millis(1000);
+        // chi-squared at 2 dof: 13.8 is the 99.9th percentile; double it
+        // so the fixed-seed check sits far from the boundary
+        const BOUND: f64 = 27.6;
+        for s in [
+            Scenario::steady(4_000.0, dur),
+            Scenario::skewed_burst(2_000.0, 4.0, dur, Focus { entry: 2, share: 0.8 }),
+        ] {
+            let (stat, exp, obs) = chi_squared(&mut rng, &entries, &s);
+            assert!(stat < BOUND, "{}: chi-squared {stat} (exp {exp:?}, obs {obs:?})", s.name);
+        }
+
+        // churn: the entry list itself changes mid-schedule (the third
+        // tenant removed halfway) — the integral applies per segment,
+        // and after the removal the survivors re-split by weight (5:2)
+        let seg = Scenario::steady(2_000.0, Duration::from_millis(500));
+        let (stat, exp, obs) = chi_squared(&mut rng, &entries, &seg);
+        assert!(stat < BOUND, "churn pre-removal: chi-squared {stat} (exp {exp:?}, obs {obs:?})");
+        let survivors = &entries[..2];
+        let (stat, exp, obs) = chi_squared(&mut rng, survivors, &seg);
+        assert!(stat < BOUND, "churn post-removal: chi-squared {stat} (exp {exp:?}, obs {obs:?})");
+        assert!(
+            (exp[0] / exp[1] - 2.5).abs() < 1e-9,
+            "survivors inherit the removed tenant's share by weight"
+        );
+        pool.shutdown();
     }
 
     #[test]
@@ -1043,6 +1117,7 @@ mod tests {
             dispatch: Dispatch::FairSteal,
             quota: QuotaPolicy::None,
             telemetry: crate::coordinator::TelemetryConfig::default(),
+            ..Default::default()
         });
         let eb = Engine::new(QuantizedModel::synthetic("big", &[4, 8, 3], 5, 3, 1));
         let es = Engine::new(QuantizedModel::synthetic("small", &[6, 4, 2], 5, 3, 2));
@@ -1100,6 +1175,7 @@ mod tests {
             dispatch: Dispatch::FairSteal,
             quota: QuotaPolicy::weighted(),
             telemetry: crate::coordinator::TelemetryConfig::default(),
+            ..Default::default()
         });
         let e0 = Engine::new(QuantizedModel::synthetic("base0", &[4, 8, 3], 5, 3, 1));
         let e1 = Engine::new(QuantizedModel::synthetic("base1", &[6, 4, 2], 5, 3, 2));

@@ -36,6 +36,9 @@
 //! experiment's A-side). Startup also reports the dispatched SIMD MAC
 //! kernel and each model's autotuned batch blocks (see `kan::kernel`),
 //! so serving numbers are attributable to a dispatch path.
+//! `--autoscale MIN:MAX` (with `--slo-p95-us`) makes the worker fleet
+//! elastic against a p95 queueing-delay SLO — see
+//! `coordinator::autoscale`.
 
 use std::fs::File;
 use std::io::Write;
@@ -49,8 +52,8 @@ use anyhow::{bail, Context, Result};
 use kan_sas::arch::{ArrayConfig, WeightLoad};
 use kan_sas::config::{parse_dispatch, parse_pe, parse_shed, parse_synth_spec, RunConfig};
 use kan_sas::coordinator::{
-    BatchPolicy, GatewayBuilder, NetClient, NetServer, QuotaPolicy, RemoteHandle, Span, Telemetry,
-    TelemetrySnapshot,
+    AutoscaleConfig, BatchPolicy, GatewayBuilder, NetClient, NetServer, QuotaPolicy, RemoteHandle,
+    Span, Telemetry, TelemetrySnapshot,
 };
 use kan_sas::cost::array_area_mm2;
 use kan_sas::experiments;
@@ -143,6 +146,7 @@ fn print_help() {
                                --requests N --clients C\n\
                                --scenario steady|diurnal|flash-crowd|skewed-burst|churn\n\
                                --rate RPS --duration-ms MS]\n\
+                              [--autoscale MIN:MAX --slo-p95-us US --pin-cores]\n\
                               [--stats-every S] [--telemetry FILE]\n\
                               [--flight-every S] [--trace-sample N] [--no-telemetry]\n\
                               [--listen ADDR]\n\
@@ -188,6 +192,14 @@ fn print_help() {
          --scenario) drive the open-loop Poisson generator. Replica\n\
          autosizing clamps cores to 8; raise with --max-replicas or\n\
          KANSAS_MAX_REPLICAS (explicit --replicas wins).\n\
+         --autoscale MIN:MAX makes the fleet elastic: an SLO controller\n\
+         watches the telemetry spine's windowed signals (worst-tenant\n\
+         p95 queueing delay vs --slo-p95-us, default 10000; shed rate)\n\
+         and doubles the fleet on breach, draining one worker at a time\n\
+         after consecutive calm windows — no request is dropped by a\n\
+         scale-down. --pin-cores pins each worker to a core. The final\n\
+         report lists every scale event and the worker-seconds consumed\n\
+         vs a fixed MAX-worker fleet.\n\
          --listen ADDR turns serve into the network front door: a TCP\n\
          server speaking the framed binary protocol (see\n\
          ARCHITECTURE.md), running until SIGINT (graceful drain + final\n\
@@ -380,6 +392,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
             _ => QuotaPolicy::weighted(),
         };
     }
+    // --autoscale MIN:MAX makes the worker fleet elastic against a p95
+    // queueing-delay SLO (--slo-p95-us, default 10000); layered over
+    // the config file's autoscale stanza (CLI bounds win)
+    if let Some(spec) = args.get("--autoscale") {
+        let bounds = AutoscaleConfig::from_bounds_spec(spec).map_err(|e| anyhow::anyhow!(e))?;
+        cfg.autoscale = Some(match cfg.autoscale {
+            Some(prev) => AutoscaleConfig {
+                min_workers: bounds.min_workers,
+                max_workers: bounds.max_workers,
+                ..prev
+            },
+            None => bounds,
+        });
+    }
+    if let Some(a) = cfg.autoscale.as_mut() {
+        a.slo_p95_us = args.parsed("--slo-p95-us", a.slo_p95_us)?;
+        if a.slo_p95_us == 0 {
+            bail!("--slo-p95-us must be positive");
+        }
+        if args.flag("--pin-cores") {
+            a.pin_cores = true;
+        }
+    } else if args.get("--slo-p95-us").is_some() {
+        bail!("--slo-p95-us needs --autoscale MIN:MAX (or a config autoscale stanza)");
+    }
+    let autoscale_cfg = cfg.autoscale;
     // telemetry spine controls: --no-telemetry is the overhead
     // experiment's A-side; any observability flag implies the spine on
     let stats_every: f64 = args.parsed("--stats-every", 0.0)?;
@@ -480,6 +518,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.quota,
         total_kib
     );
+    if let Some(a) = &autoscale_cfg {
+        println!(
+            "autoscale: {}..{} workers, SLO p95 queue <= {} us, shed <= {:.2}%, \
+             scale-down after {} calm windows @ {:?}{}",
+            a.min_workers,
+            a.max_workers,
+            a.slo_p95_us,
+            100.0 * a.max_shed_rate,
+            a.calm_windows,
+            a.interval,
+            if a.pin_cores { ", cores pinned" } else { "" }
+        );
+    }
     // attribute every serving number to a MAC dispatch path: the
     // resolved kernel (all plans in one process dispatch identically)
     // and each model's autotuned per-layer batch blocks
@@ -497,7 +548,6 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Kernel::available().iter().map(|k| k.name()).collect::<Vec<_>>().join("|"),
         blocks.join("  ")
     );
-    let replicas = cfg.replicas;
     let mut builder = GatewayBuilder::with_config(cfg);
     for ((name, engine), &w) in specs.into_iter().zip(&service_weights) {
         builder.register_weighted(&name, engine, w);
@@ -641,6 +691,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         None => (Vec::new(), None),
     };
+    let scale_events = gateway.scale_events();
+    let fleet_final = gateway.active_workers();
+    let worker_us = gateway.worker_time_us();
     let stats = gateway.shutdown();
     if tel.enabled() {
         let final_snap = tel.snapshot();
@@ -727,7 +780,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         stats.per_model.len()
     );
     let mut t = Table::new(&["replica", "rows", "batches", "stolen", "sim cycles", "sim util %"])
-        .with_title(format!("per-replica load balance ({replicas} replicas)").as_str());
+        .with_title(
+            format!("per-replica load balance ({} worker slots)", stats.per_replica.len()).as_str(),
+        );
     for (i, m) in stats.per_replica.iter().enumerate() {
         t.row(vec![
             i.to_string(),
@@ -739,6 +794,31 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ]);
     }
     print!("{}", t.render());
+    if let Some(a) = &autoscale_cfg {
+        let wall_s = report.wall.as_secs_f64().max(1e-9);
+        println!(
+            "autoscale: {} scale events, final fleet {} workers, worker-time {:.2}s \
+             (a fixed {}-worker fleet costs {:.2}s)",
+            scale_events.len(),
+            fleet_final,
+            worker_us as f64 / 1e6,
+            a.max_workers,
+            a.max_workers as f64 * wall_s
+        );
+        for e in scale_events.iter().take(16) {
+            println!(
+                "  t={}us workers {} -> {} (p95 queue {} us, shed {:.2}%)",
+                e.at_us,
+                e.from,
+                e.to,
+                e.p95_queue_us,
+                100.0 * e.shed_rate
+            );
+        }
+        if scale_events.len() > 16 {
+            println!("  ... {} more scale events", scale_events.len() - 16);
+        }
+    }
     if tel.enabled() {
         if tel.config().trace_sample > 0 && !spans.is_empty() {
             println!("trace spans: {} sampled (showing up to 10)", spans.len());

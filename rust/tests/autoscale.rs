@@ -1,0 +1,320 @@
+//! Deterministic autoscaler tests on the manual [`Clock`]: every
+//! controller assertion is driven by synthetic [`FleetSignals`] or
+//! explicit clock advances — zero wall-clock sleeps, so scale-up
+//! latency, hysteresis, and the drain contract are exact, not timed.
+//!
+//! The gateway never spawns its background controller thread under a
+//! manual clock; tests apply evaluations synchronously through
+//! `Gateway::autoscale_apply` / `Gateway::autoscale_tick`, so a scaling
+//! action can never race the assertion that observes it.
+
+mod common;
+
+use std::time::Duration;
+
+use kan_sas::arch::ArrayConfig;
+use kan_sas::coordinator::{
+    AutoscaleConfig, BatchPolicy, Clock, Dispatch, DrainMode, FleetSignals, GatewayBuilder,
+    GatewayConfig, QuotaPolicy, ServeError, ShedPolicy, TelemetryConfig,
+};
+use kan_sas::kan::{Engine, QuantizedModel};
+
+fn engine(name: &str) -> Engine {
+    Engine::new(QuantizedModel::synthetic(name, &[8, 12, 10], 5, 3, 31))
+}
+
+fn bounds(min: usize, max: usize, calm_windows: u32) -> AutoscaleConfig {
+    AutoscaleConfig {
+        min_workers: min,
+        max_workers: max,
+        slo_p95_us: 10_000,
+        calm_windows,
+        interval: Duration::from_millis(10),
+        ..AutoscaleConfig::default()
+    }
+}
+
+fn config(
+    autoscale: Option<AutoscaleConfig>,
+    clock: &Clock,
+    queue_cap: usize,
+    shed: ShedPolicy,
+) -> GatewayConfig {
+    GatewayConfig {
+        replicas: 2, // ignored when autoscale geometry governs
+        queue_cap,
+        shed,
+        // size-due batches: a manual clock never fires time-due windows
+        policy: BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) },
+        sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
+        dispatch: Dispatch::FairSteal,
+        quota: QuotaPolicy::None,
+        telemetry: TelemetryConfig::default(),
+        autoscale,
+        clock: clock.clone(),
+        ..Default::default()
+    }
+}
+
+/// A window whose worst-tenant p95 queueing delay is far over the SLO.
+fn breach() -> FleetSignals {
+    FleetSignals { p95_queue_us: 50_000, shed_rate: 0.0, depth_last: 0, windows: 1 }
+}
+
+/// An idle window: no queueing, no shedding — calm by definition.
+fn calm() -> FleetSignals {
+    FleetSignals::default()
+}
+
+/// Scale-up latency bound: from `min` the fleet reaches `max` within
+/// ceil(log2(max/min)) breach evaluations — doubling each window — and
+/// every applied event carries the manual clock's exact timestamp and
+/// the signal that drove it.
+#[test]
+fn breach_reaches_max_within_log2_evaluations() {
+    let clock = Clock::manual();
+    let cfg = config(Some(bounds(1, 8, 3)), &clock, 64, ShedPolicy::Block);
+    let mut b = GatewayBuilder::with_config(cfg);
+    b.register("t", engine("t"));
+    let gw = b.start();
+    assert_eq!(gw.active_workers(), 1, "autoscale fleets start at min_workers");
+    assert_eq!(gw.worker_slots(), 8, "slots are pre-sized to max_workers");
+
+    for (i, (from, to)) in [(1usize, 2usize), (2, 4), (4, 8)].into_iter().enumerate() {
+        clock.advance(Duration::from_micros(100));
+        let ev = gw.autoscale_apply(&breach()).expect("a breach below max must scale up");
+        assert_eq!((ev.from, ev.to), (from, to), "doubling, clamped to max");
+        assert_eq!(ev.at_us, 100 * (i as u64 + 1), "events are stamped on the gateway clock");
+        assert_eq!(ev.p95_queue_us, 50_000, "events record the driving signal");
+        assert_eq!(gw.active_workers(), to);
+    }
+    assert!(gw.autoscale_apply(&breach()).is_none(), "at max a breach holds");
+    assert_eq!(gw.active_workers(), 8);
+    assert_eq!(gw.scale_events().len(), 3, "holds are not logged as events");
+    assert!(gw.shutdown().conserved());
+}
+
+/// Hysteresis: K consecutive calm windows drain exactly one worker;
+/// K-1 hold; a breach anywhere in the streak both scales up and resets
+/// the count, so an oscillating load can never thrash the fleet.
+#[test]
+fn hysteresis_holds_through_k_minus_1_calm_windows() {
+    let clock = Clock::manual();
+    let cfg = config(Some(bounds(2, 4, 3)), &clock, 64, ShedPolicy::Block);
+    let mut b = GatewayBuilder::with_config(cfg);
+    b.register("t", engine("t"));
+    let gw = b.start();
+    assert_eq!(gw.active_workers(), 2);
+
+    let ev = gw.autoscale_apply(&breach()).expect("breach scales up");
+    assert_eq!((ev.from, ev.to), (2, 4));
+
+    // K-1 calm windows: hold
+    assert!(gw.autoscale_apply(&calm()).is_none());
+    assert!(gw.autoscale_apply(&calm()).is_none());
+    assert_eq!(gw.active_workers(), 4, "K-1 calm windows must not drain");
+    // the Kth drains exactly one
+    let ev = gw.autoscale_apply(&calm()).expect("K consecutive calm windows drain one");
+    assert_eq!((ev.from, ev.to), (4, 3));
+
+    // a breach mid-streak resets the counter: after it, K-1 calms are
+    // again not enough, even though 2 calms already preceded the breach
+    assert!(gw.autoscale_apply(&calm()).is_none());
+    assert!(gw.autoscale_apply(&calm()).is_none());
+    let ev = gw.autoscale_apply(&breach()).expect("below max, a breach scales up");
+    assert_eq!((ev.from, ev.to), (3, 4));
+    assert!(gw.autoscale_apply(&calm()).is_none());
+    assert!(gw.autoscale_apply(&calm()).is_none(), "streak was reset by the breach");
+    let ev = gw.autoscale_apply(&calm()).expect("fresh K-window streak drains again");
+    assert_eq!((ev.from, ev.to), (4, 3));
+    assert!(gw.shutdown().conserved());
+}
+
+/// `autoscale_tick` (the live-telemetry path) on an idle gateway: no
+/// tenant reports a window, idle counts as calm, and the fleet drains
+/// one worker every K ticks until it reaches `min_workers` — the
+/// flash-crowd fleet shrinks back on its own.
+#[test]
+fn idle_ticks_drain_to_min() {
+    let clock = Clock::manual();
+    let cfg = config(Some(bounds(1, 4, 2)), &clock, 64, ShedPolicy::Block);
+    let mut b = GatewayBuilder::with_config(cfg);
+    b.register("t", engine("t"));
+    let gw = b.start();
+    gw.autoscale_apply(&breach()); // 1 -> 2
+    gw.autoscale_apply(&breach()); // 2 -> 4
+    assert_eq!(gw.active_workers(), 4);
+
+    let mut drains = Vec::new();
+    for _ in 0..6 {
+        if let Some(ev) = gw.autoscale_tick() {
+            drains.push((ev.from, ev.to));
+        }
+    }
+    assert_eq!(drains, vec![(4, 3), (3, 2), (2, 1)], "one drain per K idle ticks");
+    assert_eq!(gw.active_workers(), 1, "never below min_workers");
+    assert!(gw.autoscale_tick().is_none(), "at min an idle tick holds");
+    assert!(gw.shutdown().conserved());
+}
+
+/// Manual `scale_to` clamps to `1..=worker_slots` and reports the
+/// resulting active count; a fixed (non-autoscale) gateway exposes no
+/// autoscale surface at all.
+#[test]
+fn scale_to_clamps_and_fixed_fleets_have_no_autoscale_surface() {
+    let clock = Clock::manual();
+    let cfg = config(Some(bounds(2, 6, 3)), &clock, 64, ShedPolicy::Block);
+    let mut b = GatewayBuilder::with_config(cfg);
+    b.register("t", engine("t"));
+    let gw = b.start();
+    assert_eq!(gw.scale_to(0), 1, "floor of one live worker");
+    assert_eq!(gw.scale_to(100), 6, "ceiling of worker_slots");
+    assert_eq!(gw.scale_to(3), 3);
+    assert_eq!(gw.active_workers(), 3);
+    assert!(gw.shutdown().conserved());
+
+    let clock = Clock::manual();
+    let mut b = GatewayBuilder::with_config(config(None, &clock, 64, ShedPolicy::Block));
+    b.register("t", engine("t"));
+    let gw = b.start();
+    assert_eq!(gw.active_workers(), 2, "fixed fleets run `replicas` workers");
+    assert_eq!(gw.worker_slots(), 2);
+    assert!(gw.autoscale_apply(&breach()).is_none(), "no policy, no scaling");
+    assert!(gw.autoscale_tick().is_none());
+    assert!(gw.scale_events().is_empty());
+    assert!(gw.shutdown().conserved());
+}
+
+/// The worker-seconds ledger on the manual clock: a clock advance grows
+/// `worker_time_us` by at least one full span (a proven-live worker)
+/// and at most `active x advance`; joining a drained victim moves its
+/// running span into the accumulator without changing the total.
+#[test]
+fn worker_time_ledger_is_conserved_across_drains() {
+    let clock = Clock::manual();
+    let cfg = config(Some(bounds(2, 4, 3)), &clock, 64, ShedPolicy::Block);
+    let mut b = GatewayBuilder::with_config(cfg);
+    let id = b.register("t", engine("t"));
+    let gw = b.start();
+    // a completed request proves at least one worker is live and has
+    // stamped its start time (stamping happens before any serving)
+    assert_eq!(gw.handle(id).infer_q(vec![1; 8]).unwrap().t.len(), 10);
+
+    let t1 = gw.worker_time_us();
+    clock.advance(Duration::from_micros(1_000));
+    let t2 = gw.worker_time_us();
+    let delta = t2 - t1;
+    assert!(
+        (1_000..=2_000).contains(&delta),
+        "2 active workers over a 1000us advance must bank 1000..=2000 worker-us, got {delta}"
+    );
+
+    // drain to one: the victim's running span moves into the exited
+    // accumulator; with time frozen the total is exactly unchanged
+    assert_eq!(gw.scale_to(1), 1);
+    assert_eq!(gw.worker_time_us(), t2, "a drain conserves banked worker-time");
+    assert_eq!(gw.active_workers(), 1);
+
+    // only the surviving slot can serve now, so a completed request
+    // proves it is stamped; with one live worker the ledger then grows
+    // by exactly the advance
+    assert_eq!(gw.handle(id).infer_q(vec![2; 8]).unwrap().t.len(), 10);
+    clock.advance(Duration::from_micros(500));
+    let t3 = gw.worker_time_us();
+    assert_eq!(t3, t2 + 500, "one live worker banks exactly the advance");
+    assert!(gw.shutdown().conserved());
+}
+
+/// The drain contract under fire: scale-downs race two `DropOldest`
+/// floods and add/remove model churn, and per-model conservation
+/// (`submitted == completed + shed + failed`) holds for every tenant —
+/// live, removed, and churned — with the gateway and the clients
+/// agreeing on every completion.
+#[test]
+fn scale_down_drain_conserves_counters_under_churn_and_flood() {
+    let clock = Clock::manual();
+    // calm_windows: 1 makes every calm evaluation drain one worker, so
+    // the test exercises the maximum scaling churn per applied signal
+    let cfg = config(Some(bounds(1, 4, 1)), &clock, 32, ShedPolicy::DropOldest);
+    let mut b = GatewayBuilder::with_config(cfg);
+    let anchor = b.register("anchor", engine("anchor"));
+    let gw = b.start();
+    gw.autoscale_apply(&breach()); // 1 -> 2
+    gw.autoscale_apply(&breach()); // 2 -> 4
+    assert_eq!(gw.active_workers(), 4);
+
+    let mut flood_ok = 0u64;
+    std::thread::scope(|s| {
+        let mut floods = Vec::new();
+        for seed in [0u8, 7] {
+            let h = gw.handle(anchor);
+            floods.push(s.spawn(move || {
+                let mut ok = 0u64;
+                let mut tickets = Vec::new();
+                for i in 0..300u16 {
+                    match h.submit_q(vec![(i as u8).wrapping_add(seed); 8]) {
+                        Ok(t) => tickets.push(t),
+                        Err(ServeError::QueueFull) => {}
+                        Err(e) => panic!("unexpected submit error {e}"),
+                    }
+                }
+                for t in tickets {
+                    match t.wait() {
+                        Ok(_) => ok += 1,
+                        Err(ServeError::QueueFull) => {} // DropOldest eviction
+                        Err(e) => panic!("unexpected ticket outcome {e}"),
+                    }
+                }
+                ok
+            }));
+        }
+        // registry churn riding alongside the floods: tenants come and
+        // go while the fleet is scaling underneath them
+        let churner = s.spawn(|| {
+            for i in 0..8u32 {
+                let name = format!("churn{i}");
+                let h = gw.add_model(&name, engine(&name)).unwrap();
+                let mut tickets = Vec::new();
+                for j in 0..20u8 {
+                    match h.submit_q(vec![j; 8]) {
+                        Ok(t) => tickets.push(t),
+                        Err(ServeError::QueueFull) => {}
+                        Err(e) => panic!("unexpected submit error {e}"),
+                    }
+                }
+                let mode = if i % 2 == 0 { DrainMode::Serve } else { DrainMode::Shed };
+                let removed = gw.remove_model(h.model_id(), mode).unwrap();
+                assert!(removed.conserved(), "{removed:?}");
+                for t in tickets {
+                    match t.wait() {
+                        Ok(_) | Err(ServeError::QueueFull) => {}
+                        Err(e) => panic!("unexpected ticket outcome {e}"),
+                    }
+                }
+            }
+        });
+        // scaling churn on the main thread: each calm application
+        // synchronously drains (and joins) a victim mid-flood, each
+        // breach re-spawns — the drain contract under live traffic
+        for _ in 0..6 {
+            gw.autoscale_apply(&calm());
+            gw.autoscale_apply(&breach());
+        }
+        while gw.active_workers() > 1 {
+            gw.autoscale_apply(&calm());
+        }
+        for f in floods {
+            flood_ok += f.join().unwrap();
+        }
+        churner.join().unwrap();
+    });
+    assert_eq!(gw.active_workers(), 1);
+    assert!(!gw.scale_events().is_empty());
+
+    let stats = gw.shutdown();
+    assert!(stats.conserved(), "{stats:?}");
+    let a = &stats.per_model[anchor.index()];
+    assert_eq!(a.submitted, 600, "every flood submission is accounted");
+    assert_eq!(a.completed, flood_ok, "gateway and clients agree on completions");
+    assert_eq!(a.submitted, a.completed + a.shed + a.failed);
+}

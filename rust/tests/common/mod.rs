@@ -1,0 +1,37 @@
+//! Shared integration-test utilities: bounded polling in place of fixed
+//! `thread::sleep` timing guesses (the classic flake source — a loaded
+//! CI box blows through any constant), and the `KANSAS_SEED` hook the
+//! seeded stress job uses to replay randomized tests.
+
+#![allow(dead_code)] // each test binary compiles this module; none uses all of it
+
+use std::time::{Duration, Instant};
+
+/// Poll `cond` every millisecond until it holds or `timeout` elapses.
+/// Returns whether the condition held — callers assert on the result
+/// with a message naming what they were waiting for. Replaces fixed
+/// sleeps: the wait ends as soon as the state is reached (fast machines
+/// don't stall) and only the pathological case pays the full timeout
+/// (loaded machines don't flake).
+pub fn poll_until(timeout: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + timeout;
+    loop {
+        if cond() {
+            return true;
+        }
+        if Instant::now() >= deadline {
+            return false;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// Base seed for randomized tests: the `KANSAS_SEED` environment
+/// variable when set (the CI stress matrix pins it), else `default`.
+/// Tests print the seed they ran with so a failure names its replay.
+pub fn base_seed(default: u64) -> u64 {
+    match std::env::var("KANSAS_SEED") {
+        Ok(s) => s.trim().parse().expect("KANSAS_SEED must parse as u64"),
+        Err(_) => default,
+    }
+}

@@ -159,6 +159,7 @@ fn pool_config(replicas: usize, queue_cap: usize, shed: ShedPolicy) -> PoolConfi
         dispatch: Dispatch::FairSteal,
         quota: QuotaPolicy::None,
         telemetry: TelemetryConfig::default(),
+        ..Default::default()
     }
 }
 
@@ -340,6 +341,7 @@ fn gateway_config(replicas: usize, queue_cap: usize, shed: ShedPolicy) -> Gatewa
         dispatch: Dispatch::FairSteal,
         quota: QuotaPolicy::None,
         telemetry: TelemetryConfig::default(),
+        ..Default::default()
     }
 }
 
@@ -480,6 +482,7 @@ fn gateway_drop_oldest_prefers_low_priority_victims() {
         dispatch: Dispatch::FairSteal,
         quota: QuotaPolicy::None,
         telemetry: TelemetryConfig::default(),
+        ..Default::default()
     });
     // heavy enough that service can't keep pace with the submit burst,
     // so the queue genuinely overflows and evicts

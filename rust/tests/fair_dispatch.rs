@@ -28,6 +28,7 @@ fn gateway_config(
         dispatch,
         quota: QuotaPolicy::None,
         telemetry: TelemetryConfig::default(),
+        ..Default::default()
     }
 }
 

@@ -100,6 +100,7 @@ fn response_buffer_pooling_is_allocation_free_after_warmup() {
         // the spine stays ON here: emits are two atomic ops into a
         // pre-sized ring, so serving with telemetry adds no allocations
         telemetry: TelemetryConfig::default(),
+        ..Default::default()
     });
     let id = builder.register(
         "alloc",

@@ -1,0 +1,276 @@
+//! Property fuzz over the framed wire protocol: random, truncated, and
+//! bit-flipped byte streams against [`FrameHeader::decode`] and against
+//! a live loopback [`NetServer`]. The decoder must never panic and must
+//! type every rejection; the connection state machine must answer
+//! survivable corruption with a `MALFORMED` error frame and keep
+//! serving, and must shrug off streams that die mid-frame.
+//!
+//! Every randomized test derives its seed from `KANSAS_SEED` (the CI
+//! stress matrix pins it) and prints it, so any failure names its
+//! exact replay.
+
+mod common;
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use kan_sas::arch::ArrayConfig;
+use kan_sas::coordinator::net::{
+    code, decode_ok_payload, encode_request, FrameError, FrameHeader, FrameType, HEADER_LEN,
+    MAGIC, VERSION,
+};
+use kan_sas::coordinator::{
+    BatchPolicy, Dispatch, Gateway, GatewayBuilder, GatewayConfig, NetClient, NetConfig, NetServer,
+    QuotaPolicy, ShedPolicy, TelemetryConfig,
+};
+use kan_sas::kan::{Engine, QuantizedModel};
+use kan_sas::util::rng::{check, Rng};
+
+fn gateway() -> Gateway {
+    let mut b = GatewayBuilder::with_config(GatewayConfig {
+        replicas: 1,
+        queue_cap: 256,
+        shed: ShedPolicy::RejectNew,
+        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+        sim_array: ArrayConfig::kan_sas(8, 8, 4, 8),
+        dispatch: Dispatch::FairSteal,
+        quota: QuotaPolicy::None,
+        telemetry: TelemetryConfig::default(),
+        ..Default::default()
+    });
+    b.register("fuzz", Engine::new(QuantizedModel::synthetic("fuzz", &[8, 12, 10], 5, 3, 31)));
+    b.start()
+}
+
+fn read_frame(stream: &mut TcpStream) -> Option<(FrameHeader, Vec<u8>)> {
+    let mut hdr = [0u8; HEADER_LEN];
+    stream.read_exact(&mut hdr).ok()?;
+    let h = FrameHeader::decode(&hdr).expect("server frames are well-formed");
+    let mut payload = vec![0u8; h.len as usize];
+    stream.read_exact(&mut payload).ok()?;
+    Some((h, payload))
+}
+
+/// Random 32-byte buffers: decode either accepts a genuinely
+/// well-formed header (and re-encodes it byte-identically, modulo the
+/// reserved byte) or returns the typed error matching the first bad
+/// field in validation order — never a panic.
+#[test]
+fn header_decode_never_panics_on_random_bytes() {
+    let seed = common::base_seed(0xF0A2);
+    println!("net_fuzz seed {seed}");
+    check(4_000, seed, |rng| {
+        let mut buf = [0u8; HEADER_LEN];
+        for b in buf.iter_mut() {
+            *b = rng.next_u64() as u8;
+        }
+        // bias some cases toward the deeper checks: random magic bytes
+        // almost never spell KSN1 on their own
+        match rng.below(4) {
+            0 => {}
+            1 => buf[0..4].copy_from_slice(&MAGIC),
+            _ => {
+                buf[0..4].copy_from_slice(&MAGIC);
+                buf[4] = VERSION;
+            }
+        }
+        match FrameHeader::decode(&buf) {
+            Ok(h) => {
+                assert_eq!(buf[0..4], MAGIC);
+                assert_eq!(buf[4], VERSION);
+                let mut re = [0u8; HEADER_LEN];
+                h.encode(&mut re);
+                assert_eq!(re[0..7], buf[0..7], "accepted headers round-trip");
+                assert_eq!(re[8..], buf[8..], "accepted headers round-trip");
+            }
+            Err(FrameError::BadMagic(m)) => {
+                assert_eq!(m, [buf[0], buf[1], buf[2], buf[3]]);
+            }
+            Err(FrameError::BadVersion(v)) => {
+                assert_eq!(buf[0..4], MAGIC);
+                assert_eq!(v, buf[4]);
+            }
+            Err(FrameError::BadType(t)) => {
+                assert_eq!(buf[0..4], MAGIC);
+                assert_eq!(buf[4], VERSION);
+                assert_eq!(t, buf[5]);
+            }
+        }
+    });
+}
+
+/// Single-bit corruption of a valid header: the decode outcome is fully
+/// determined by which byte the flip landed in, and a flip is never
+/// silently absorbed except in the reserved byte.
+#[test]
+fn single_bit_flips_decode_deterministically() {
+    const TYPES: [FrameType; 7] = [
+        FrameType::InferRequest,
+        FrameType::InferOk,
+        FrameType::Error,
+        FrameType::StatsRequest,
+        FrameType::StatsResponse,
+        FrameType::ModelsRequest,
+        FrameType::ModelsResponse,
+    ];
+    let seed = common::base_seed(0xB17F);
+    println!("net_fuzz seed {seed}");
+    check(4_000, seed, |rng| {
+        let h = FrameHeader {
+            ty: TYPES[rng.below(TYPES.len())],
+            code: rng.next_u64() as u8,
+            corr: rng.next_u64(),
+            model: rng.next_u64() as u32,
+            deadline_us: rng.next_u64(),
+            len: rng.next_u64() as u32,
+        };
+        let mut buf = [0u8; HEADER_LEN];
+        h.encode(&mut buf);
+        assert_eq!(FrameHeader::decode(&buf).unwrap(), h, "clean round-trip");
+        let bit = rng.below(HEADER_LEN * 8);
+        let byte = bit / 8;
+        buf[byte] ^= 1 << (bit % 8);
+        match FrameHeader::decode(&buf) {
+            Err(FrameError::BadMagic(_)) => assert!(byte < 4, "magic lives in bytes 0..4"),
+            Err(FrameError::BadVersion(_)) => assert_eq!(byte, 4),
+            Err(FrameError::BadType(_)) => assert_eq!(byte, 5),
+            Ok(h2) => {
+                assert!(byte >= 5, "flips in magic/version can never decode");
+                if byte == 7 {
+                    assert_eq!(h2, h, "the reserved byte is ignored");
+                } else {
+                    assert_ne!(h2, h, "a flip outside the reserved byte must be visible");
+                }
+            }
+        }
+    });
+}
+
+/// [`decode_ok_payload`] on random payload lengths and bytes: accepts
+/// exactly `16 + 8k` byte payloads, rejects everything else with a
+/// typed error, and never panics.
+#[test]
+fn ok_payload_decode_never_panics() {
+    let seed = common::base_seed(0x9E37);
+    println!("net_fuzz seed {seed}");
+    check(2_000, seed, |rng| {
+        let n = rng.below(120);
+        let payload: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+        let mut t = Vec::new();
+        match decode_ok_payload(&payload, &mut t) {
+            Ok(_) => {
+                assert!(n >= 16 && (n - 16) % 8 == 0);
+                assert_eq!(t.len(), (n - 16) / 8);
+            }
+            Err(_) => assert!(n < 16 || (n - 16) % 8 != 0),
+        }
+    });
+}
+
+/// Survivable corruption on a live connection: flip one bit somewhere
+/// in the magic/version/type bytes of a well-formed request, send it,
+/// then send a clean request on the same socket. Every round must
+/// answer a typed `MALFORMED` error (echoing the corrupted frame's
+/// correlation id — the id bytes are untouched) followed by a real
+/// `InferOk`, proving the reader resynced instead of dying.
+#[test]
+fn corrupted_headers_get_typed_errors_and_the_connection_survives() {
+    let seed = common::base_seed(0xC0DE);
+    println!("net_fuzz seed {seed}");
+    let gw = gateway();
+    let server = NetServer::start("127.0.0.1:0", &gw, NetConfig::default()).unwrap();
+    let addr = server.local_addr().to_string();
+    let mut rng = Rng::new(seed);
+
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut buf = Vec::new();
+    for round in 0..20u64 {
+        let bad_corr = rng.next_u64();
+        let row: Vec<u8> = (0..8).map(|_| rng.next_u64() as u8).collect();
+        encode_request(&mut buf, bad_corr, 0, &row, 0, 0);
+        // corrupt magic, version, or type — for an InferRequest any
+        // single-bit flip here is survivable (the length field stays
+        // trusted, so the reader can skip the payload and resync)
+        let bit = rng.below(6 * 8);
+        buf[bit / 8] ^= 1 << (bit % 8);
+        s.write_all(&buf).unwrap();
+
+        let good_corr = rng.next_u64();
+        encode_request(&mut buf, good_corr, 0, &row, 0, 0);
+        s.write_all(&buf).unwrap();
+
+        let (h1, p1) = read_frame(&mut s).expect("error frame for the corrupted request");
+        assert_eq!(h1.ty, FrameType::Error, "round {round}");
+        assert_eq!(h1.code, code::MALFORMED, "round {round}");
+        assert_eq!(h1.corr, bad_corr, "corr bytes were untouched, round {round}");
+        assert!(!p1.is_empty(), "the error message names the defect");
+
+        let (h2, p2) = read_frame(&mut s).expect("the clean request is served");
+        assert_eq!(h2.ty, FrameType::InferOk, "round {round}");
+        assert_eq!(h2.corr, good_corr, "round {round}");
+        let mut t = Vec::new();
+        decode_ok_payload(&p2, &mut t).unwrap();
+        assert_eq!(t.len(), 10, "round {round}");
+    }
+    drop(s);
+
+    let stats = server.shutdown();
+    assert_eq!(stats.malformed, 20, "one typed rejection per corrupted frame");
+    assert!(gw.shutdown().conserved());
+}
+
+/// Hostile streams — pure random bytes, frames truncated mid-header and
+/// mid-payload, and an untrusted oversized length — must never take the
+/// server down: after all of them, a fresh well-formed client still
+/// lists models and serves an inference.
+#[test]
+fn garbage_and_truncated_streams_never_kill_the_server() {
+    let seed = common::base_seed(0x6A5B);
+    println!("net_fuzz seed {seed}");
+    let gw = gateway();
+    let server = NetServer::start("127.0.0.1:0", &gw, NetConfig::default()).unwrap();
+    let addr = server.local_addr().to_string();
+    let mut rng = Rng::new(seed);
+
+    // pure random byte streams of random lengths, then hangup
+    for _ in 0..16 {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let n = rng.below(200);
+        let junk: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+        let _ = s.write_all(&junk);
+    }
+    // a frame truncated mid-header
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let mut buf = Vec::new();
+        encode_request(&mut buf, 1, 0, &[1u8; 8], 0, 0);
+        let _ = s.write_all(&buf[..HEADER_LEN / 2]);
+    }
+    // a valid header whose payload dies early
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let mut buf = Vec::new();
+        encode_request(&mut buf, 2, 0, &[2u8; 8], 0, 0);
+        let _ = s.write_all(&buf[..HEADER_LEN + 3]);
+    }
+    // bad magic with an untrusted oversized length: the server answers
+    // and closes, because framing can no longer be resynced
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let _ = s.write_all(&[0xFFu8; HEADER_LEN]);
+    }
+
+    // the server is still alive and serving
+    let client = NetClient::connect(&addr).unwrap();
+    let h = client.handle("fuzz").unwrap();
+    let r = h.infer_q(vec![3; 8]).unwrap();
+    assert_eq!(r.t.len(), 10);
+    client.close();
+
+    let stats = server.shutdown();
+    assert!(stats.malformed >= 1, "the all-0xFF header is always counted: {stats:?}");
+    assert!(stats.accepted >= 20, "every hostile connection was accepted: {stats:?}");
+    assert!(gw.shutdown().conserved());
+}

@@ -34,6 +34,7 @@ fn gateway_with(name: &str, dims: &[usize], seed: u64, replicas: usize) -> Gatew
         dispatch: Dispatch::FairSteal,
         quota: QuotaPolicy::None,
         telemetry: TelemetryConfig::default(),
+        ..Default::default()
     });
     b.register(name, Engine::new(QuantizedModel::synthetic(name, dims, 5, 3, seed)));
     b.start()

@@ -5,6 +5,8 @@
 //! epoch-swap machinery (workers adopt new snapshots at batch
 //! boundaries; a removed tenant's slot and counters stay visible).
 
+mod common;
+
 use std::time::{Duration, Instant};
 
 use kan_sas::arch::ArrayConfig;
@@ -31,6 +33,7 @@ fn config(
         dispatch: Dispatch::FairSteal,
         quota,
         telemetry: TelemetryConfig::default(),
+        ..Default::default()
     }
 }
 
@@ -97,7 +100,10 @@ fn set_weight_mid_burst_keeps_serving() {
     }
     // re-weight while both tenants are mid-burst; the change must not
     // drop, duplicate, or stall any in-flight request
-    std::thread::sleep(Duration::from_millis(20));
+    assert!(
+        common::poll_until(Duration::from_secs(5), || gw.stats().completed() > 0),
+        "bursts reach steady state before the re-weight"
+    );
     gw.set_weight(c, 8).unwrap();
     for t in threads {
         t.join().unwrap();
@@ -165,7 +171,10 @@ fn remove_shed_flushes_backlog_under_overload() {
     let tickets: Vec<_> = (0..96u8).map(|i| h.submit_q(vec![i; 128]).unwrap()).collect();
     // let the worker pull some of the backlog into its shard so the
     // flush exercises both locations (shared queue + shard batchers)
-    std::thread::sleep(Duration::from_millis(5));
+    assert!(
+        common::poll_until(Duration::from_secs(5), || gw.stats().queue_depth < 96),
+        "worker pulls part of the backlog into its shard"
+    );
     let removed = gw.remove_model(gone, DrainMode::Shed).unwrap();
     let mut ok = 0u64;
     let mut shed = 0u64;
@@ -229,7 +238,15 @@ fn remove_races_drop_oldest_overload() {
             outcomes
         }));
     }
-    std::thread::sleep(Duration::from_millis(30));
+    assert!(
+        common::poll_until(Duration::from_secs(5), || {
+            let s = gw.stats();
+            s.completed() > 0
+                && s.per_model[keep.index()].submitted > 0
+                && s.per_model[gone.index()].submitted > 0
+        }),
+        "both floods are mid-flight before the removal lands"
+    );
     let removed = gw.remove_model(gone, DrainMode::Shed).unwrap();
     assert!(removed.conserved(), "{removed:?}");
     let mut total_ok = 0;

@@ -5,6 +5,8 @@
 //! `trace_sample` produces complete admission→respond spans plus a
 //! flight recorder that remembers registration.
 
+mod common;
+
 use std::time::Duration;
 
 use kan_sas::arch::ArrayConfig;
@@ -28,6 +30,7 @@ fn config(telemetry: TelemetryConfig) -> GatewayConfig {
         dispatch: Dispatch::FairSteal,
         quota: QuotaPolicy::None,
         telemetry,
+        ..Default::default()
     }
 }
 
@@ -84,9 +87,25 @@ fn collector_totals_reconcile_with_gateway_counters() {
             let r = h.infer_q(vec![((burst * 40 + i) % 251) as u8; 8]).unwrap();
             assert_eq!(r.t.len(), 10);
         }
-        // idle past a window boundary so at least one roll happens
-        std::thread::sleep(Duration::from_millis(25));
+        // bounded-poll instead of a fixed idle: wait for the collector
+        // tick that drains this burst (the same tick rolls any window
+        // whose boundary has already passed)
+        let want = (burst + 1) * 40;
+        assert!(
+            common::poll_until(Duration::from_secs(2), || {
+                tel.snapshot().tenants.first().is_some_and(|t| t.totals.completed >= want)
+            }),
+            "collector drains burst {burst} within the poll bound"
+        );
     }
+    // served traffic must leave at least one *completed* window behind;
+    // wait for the roll rather than guessing an idle duration
+    assert!(
+        common::poll_until(Duration::from_secs(2), || {
+            tel.snapshot().tenants.first().is_some_and(|t| t.window.is_some())
+        }),
+        "a window boundary passes and rolls a summary"
+    );
     let stats = gw.shutdown();
     assert_eq!(tel.dropped_events(), 0, "default rings must absorb this load");
     let snap = tel.snapshot();
