@@ -957,6 +957,10 @@ struct Fleet {
     started_us: Vec<AtomicU64>,
     /// Accumulated worker-µs of slots that have already exited.
     busy_us: AtomicU64,
+    /// Orders worker-exit accounting (move span from `started_us` to
+    /// `busy_us`) against `worker_time_us` readers, so the ledger never
+    /// transiently drops or double-counts an exiting worker's span.
+    ledger: Mutex<()>,
     /// Pin each worker thread to core `slot % ncores`.
     pin_cores: bool,
     /// Serializes scaling actions (the autoscaler thread and any
@@ -1950,6 +1954,7 @@ impl Gateway {
                 handles: Mutex::new((0..slots).map(|_| None).collect()),
                 started_us: (0..slots).map(|_| AtomicU64::new(0)).collect(),
                 busy_us: AtomicU64::new(0),
+                ledger: Mutex::new(()),
                 pin_cores: cfg.autoscale.is_some_and(|a| a.pin_cores),
                 scale_lock: Mutex::new(()),
             },
@@ -2424,6 +2429,7 @@ impl Gateway {
     pub fn worker_time_us(&self) -> u64 {
         let now = self.shared.clock.now_us();
         let fleet = &self.shared.fleet;
+        let _ledger = fleet.ledger.lock().unwrap();
         let running: u64 = fleet
             .started_us
             .iter()
@@ -2541,6 +2547,11 @@ fn spawn_worker(shared: &Arc<Shared>, slot: usize) {
 /// A worker's last act: fold its running span into the fleet's
 /// worker-seconds ledger and mark the slot not-running.
 fn worker_exit(shared: &Shared, me: usize) {
+    // Under the ledger lock: swapping the stamp out and banking the
+    // span are two steps, and a worker_time_us reader landing between
+    // them would count this worker in neither sum (the ledger would
+    // appear to go backwards between two reads).
+    let _ledger = shared.fleet.ledger.lock().unwrap();
     let stamp = shared.fleet.started_us[me].swap(0, Ordering::SeqCst);
     if stamp > 0 {
         let span = shared.clock.now_us().saturating_sub(stamp - 1);
@@ -2557,8 +2568,13 @@ fn worker_exit(shared: &Shared, me: usize) {
 /// every queued request is answered and per-model conservation holds
 /// through the drain. Returns the resulting active count.
 fn fleet_scale_to(shared: &Arc<Shared>, target: usize) -> usize {
+    let _scale = shared.fleet.scale_lock.lock().unwrap();
+    fleet_scale_locked(shared, target)
+}
+
+/// [`fleet_scale_to`] body; the caller must hold `scale_lock`.
+fn fleet_scale_locked(shared: &Arc<Shared>, target: usize) -> usize {
     let fleet = &shared.fleet;
-    let _scale = fleet.scale_lock.lock().unwrap();
     let target = target.clamp(1, shared.replicas);
     let mut active = fleet.active.load(Ordering::SeqCst);
     while active < target {
@@ -2571,9 +2587,17 @@ fn fleet_scale_to(shared: &Arc<Shared>, target: usize) -> usize {
     while active > target {
         let victim = active - 1;
         fleet.stopping[victim].store(true, Ordering::SeqCst);
-        // wake everyone: the victim to notice the flag (it may be
-        // parked on the admission condvar), peers to steal its tail
-        shared.nonempty.notify_all();
+        // Wake everyone: the victim to notice the flag, peers to steal
+        // its tail. Notify under the state mutex — workers decide to
+        // park only while holding it and re-read the flag there, so
+        // the victim is either parked (receives this wakeup) or will
+        // see the flag before its next wait; without the lock the
+        // store+notify can land mid-iteration and the victim parks on
+        // an untimed wait forever, wedging this join.
+        {
+            let _st = shared.state.lock().unwrap();
+            shared.nonempty.notify_all();
+        }
         let handle = fleet.handles.lock().unwrap()[victim].take();
         if let Some(h) = handle {
             let _ = h.join();
@@ -2592,6 +2616,11 @@ fn apply_decision(
     rt: &AutoRuntime,
     sig: &FleetSignals,
 ) -> Option<ScaleEvent> {
+    // Hold scale_lock across read → evaluate → actuate so a concurrent
+    // `Gateway::scale_to` can't move the fleet between the decision
+    // and its application (a stale `from` would mis-size the doubling
+    // target and misreport ScaleEvent.from).
+    let _scale = shared.fleet.scale_lock.lock().unwrap();
     let from = shared.fleet.active.load(Ordering::SeqCst);
     let decision = rt.ctl.lock().unwrap().controller.evaluate(from, sig);
     let target = match decision {
@@ -2599,7 +2628,7 @@ fn apply_decision(
         ScaleDecision::Up(n) => from + n,
         ScaleDecision::Down(n) => from.saturating_sub(n),
     };
-    let to = fleet_scale_to(shared, target);
+    let to = fleet_scale_locked(shared, target);
     let event = ScaleEvent {
         at_us: shared.clock.now_us(),
         from,
@@ -2758,13 +2787,26 @@ fn worker_loop(me: usize, sim_array: ArrayConfig, shared: Arc<Shared>) {
         // backlogged peer's too when stealing is on) so straggler
         // windows and steal opportunities are never overslept.
         let st = shared.state.lock().unwrap();
-        if stopping && shared.shards[me].backlog.load(Ordering::Relaxed) == 0 {
-            // own shard flushed (phase 2 serves it flush-due; peers may
-            // steal the tail) — admission-queue items are the
-            // survivors' to pull, never this worker's again
-            drop(st);
-            worker_exit(&shared, me);
-            return;
+        // Re-read the drain flag under the state mutex: fleet_scale_to
+        // sets it and notifies while holding this lock, so a flip that
+        // landed after the loop-top read is observed here instead of
+        // being lost to the untimed wait below.
+        let stopping_now = shared.fleet.stopping[me].load(Ordering::SeqCst);
+        if stopping_now {
+            if shared.shards[me].backlog.load(Ordering::Relaxed) == 0 {
+                // own shard flushed (phase 2 serves it flush-due; peers
+                // may steal the tail) — admission-queue items are the
+                // survivors' to pull, never this worker's again
+                drop(st);
+                worker_exit(&shared, me);
+                return;
+            }
+            if !stopping {
+                // flagged mid-iteration with work still in the shard:
+                // spin again so phase 2 flush-serves it
+                drop(st);
+                continue;
+            }
         }
         if !st.items.is_empty() {
             continue; // arrivals raced in between phases
@@ -3218,6 +3260,7 @@ mod tests {
                 handles: Mutex::new(Vec::new()),
                 started_us: Vec::new(),
                 busy_us: AtomicU64::new(0),
+                ledger: Mutex::new(()),
                 pin_cores: false,
                 scale_lock: Mutex::new(()),
             },

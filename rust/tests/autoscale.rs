@@ -185,6 +185,28 @@ fn scale_to_clamps_and_fixed_fleets_have_no_autoscale_surface() {
     assert!(gw.shutdown().conserved());
 }
 
+/// Regression: draining an *idle* fleet must not lose the stop wakeup.
+/// An idle worker parks on an untimed wait; flagging it as stopping
+/// without ordering the store+notify against that park (via the state
+/// mutex) could land mid-iteration and leave the victim parked forever,
+/// wedging the join — and, through it, shutdown. Oscillating through
+/// many spawn-then-immediately-drain cycles maximizes the window; every
+/// join must return promptly and the survivor must still serve.
+#[test]
+fn idle_fleet_scale_oscillation_never_wedges() {
+    let clock = Clock::manual();
+    let cfg = config(Some(bounds(1, 6, 3)), &clock, 64, ShedPolicy::Block);
+    let mut b = GatewayBuilder::with_config(cfg);
+    let id = b.register("t", engine("t"));
+    let gw = b.start();
+    for round in 0..50 {
+        assert_eq!(gw.scale_to(6), 6, "scale-up stuck at round {round}");
+        assert_eq!(gw.scale_to(1), 1, "drain stuck at round {round}");
+    }
+    assert_eq!(gw.handle(id).infer_q(vec![1; 8]).unwrap().t.len(), 10);
+    assert!(gw.shutdown().conserved());
+}
+
 /// The worker-seconds ledger on the manual clock: a clock advance grows
 /// `worker_time_us` by at least one full span (a proven-live worker)
 /// and at most `active x advance`; joining a drained victim moves its
