@@ -85,6 +85,20 @@ def write_container(path: Path, magic: bytes, meta: dict, tensors: dict[str, np.
 # Quantized model + golden export
 # ---------------------------------------------------------------------------
 
+def pack_int4(a: np.ndarray) -> np.ndarray:
+    """Two's-complement int4 nibbles, two per byte along the last axis.
+
+    Element ``2i`` is the low nibble of byte ``i``, element ``2i+1`` the
+    high nibble; an odd last axis leaves the final high nibble zero.
+    Mirrors ``pack_i4``/``unpack_i4`` in ``rust/src/quant``.
+    """
+    a = np.asarray(a, dtype=np.int8)
+    if a.shape[-1] % 2:
+        a = np.pad(a, [(0, 0)] * (a.ndim - 1) + [(0, 1)])
+    nib = a.astype(np.uint8) & 0x0F
+    return (nib[..., 0::2] | (nib[..., 1::2] << 4)).astype(np.uint8)
+
+
 def export_kanq(qm: quantize.QuantizedModel, path: Path) -> None:
     spec = qm.spec
     meta = {
@@ -99,24 +113,31 @@ def export_kanq(qm: quantize.QuantizedModel, path: Path) -> None:
     }
     tensors = {}
     for i, layer in enumerate(qm.layers):
-        meta["layers"].append(
-            {
-                "in_dim": layer.spec.in_dim,
-                "out_dim": layer.spec.out_dim,
-                "grid": layer.spec.grid,
-                "degree": layer.spec.degree,
-                "s_b": layer.s_b,
-                "s_c": layer.s_c,
-                "s_w": layer.s_w,
-                "m1": layer.m1,
-                "m2": layer.m2,
-                "s1": layer.s1,
-                "s2": layer.s2,
-            }
-        )
+        lmeta = {
+            "in_dim": layer.spec.in_dim,
+            "out_dim": layer.spec.out_dim,
+            "grid": layer.spec.grid,
+            "degree": layer.spec.degree,
+            "s_b": layer.s_b,
+            "s_c": layer.s_c,
+            "s_w": layer.s_w,
+            "m1": layer.m1,
+            "m2": layer.m2,
+            "s1": layer.s1,
+            "s2": layer.s2,
+        }
+        # absent "precision" means int8 — readers of pre-int4 artifacts
+        # and this writer stay mutually compatible
+        if layer.precision != "int8":
+            lmeta["precision"] = layer.precision
+        meta["layers"].append(lmeta)
         tensors[f"l{i}.lut"] = layer.lut            # (256, P+1) u8
-        tensors[f"l{i}.coeff"] = layer.coeff_q      # (K, M, N)  i8
-        tensors[f"l{i}.base"] = layer.base_q        # (K, N)     i8
+        if layer.precision == "int4":
+            tensors[f"l{i}.coeff4"] = pack_int4(layer.coeff_q)  # (K, M, RB) u8
+            tensors[f"l{i}.base4"] = pack_int4(layer.base_q)    # (K, RB)    u8
+        else:
+            tensors[f"l{i}.coeff"] = layer.coeff_q  # (K, M, N)  i8
+            tensors[f"l{i}.base"] = layer.base_q    # (K, N)     i8
     write_container(path, MAGIC_KANQ, meta, tensors)
 
 
@@ -222,7 +243,24 @@ def export_hlo(
 # Orchestration
 # ---------------------------------------------------------------------------
 
-def build_model(name: str, retrain: bool, quant_metrics: dict) -> None:
+def choose_precisions(params: list[dict], budget: float | None) -> list[str] | None:
+    """Per-layer precision from an int4 quantization-error budget: a layer
+    whose native-int4 normalized RMS error (worst of coeff/base) stays
+    within the budget exports packed int4; the rest stay int8. ``None``
+    budget (the default) keeps every layer int8."""
+    if budget is None:
+        return None
+    precs = []
+    for p in params:
+        err = max(
+            quantize.int4_error(np.asarray(p["coeff"], dtype=np.float32)),
+            quantize.int4_error(np.asarray(p["base"], dtype=np.float32)),
+        )
+        precs.append("int4" if err <= budget else "int8")
+    return precs
+
+
+def build_model(name: str, retrain: bool, quant_metrics: dict, int4_budget: float | None = None) -> None:
     if name == "quickstart_kan":
         spec = model.quickstart_kan()
         datasets = train.blob_datasets()
@@ -254,22 +292,25 @@ def build_model(name: str, retrain: bool, quant_metrics: dict) -> None:
     logits = model.kan_forward(params, jnp.asarray(xte), spec, use_pallas=False)
     fp32_acc = float(model.accuracy(logits, jnp.asarray(yte)))
 
-    qm = quantize.QuantizedModel(params, spec)
+    precisions = choose_precisions(params, int4_budget)
+    qm = quantize.QuantizedModel(params, spec, precisions)
     int8_acc = qm.accuracy(xte, yte)
     export_kanq(qm, ARTIFACTS / f"{spec.name}.kanq")
     export_golden(qm, xte[:64], yte[:64], ARTIFACTS / f"{spec.name}_golden.kgld")
     hlos = export_hlo(params, spec, batch_sizes, ARTIFACTS)
 
+    layer_precs = [layer.precision for layer in qm.layers]
     quant_metrics[spec.name] = {
         "fp32_test_acc": fp32_acc,
         "int8_test_acc": int8_acc,
         "acc_drop": fp32_acc - int8_acc,
+        "precisions": layer_precs,
         "hlo_modules": hlos,
         "train": metrics if metrics.get("cached") else {k: v for k, v in metrics.items() if k != "history"},
     }
     print(
-        f"[{spec.name}] fp32 {fp32_acc:.4f}  int8 {int8_acc:.4f}  "
-        f"drop {fp32_acc - int8_acc:.4f}  hlo {hlos}"
+        f"[{spec.name}] fp32 {fp32_acc:.4f}  quant {int8_acc:.4f}  "
+        f"drop {fp32_acc - int8_acc:.4f}  precisions {layer_precs}  hlo {hlos}"
     )
 
 
@@ -281,11 +322,17 @@ def main() -> None:
         "--models", nargs="*", default=["quickstart_kan", "mnist_kan", "catch22_kan"],
         help="which models to build",
     )
+    ap.add_argument(
+        "--int4-budget", type=float, default=None, metavar="RMS",
+        help="per-layer normalized-RMS error budget for native int4 "
+        "quantization; layers within budget export packed int4 nibbles "
+        "(default: every layer int8)",
+    )
     args = ap.parse_args()
     ARTIFACTS.mkdir(exist_ok=True)
     quant_metrics = {}
     for name in args.models:
-        build_model(name, args.retrain, quant_metrics)
+        build_model(name, args.retrain, quant_metrics, args.int4_budget)
     path = ARTIFACTS / "quant_metrics.json"
     existing = json.loads(path.read_text()) if path.exists() else {}
     existing.update(quant_metrics)

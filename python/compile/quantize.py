@@ -71,6 +71,33 @@ def quantize_symmetric(w: np.ndarray) -> tuple[np.ndarray, float]:
     return q, scale
 
 
+def quantize_symmetric_int4(w: np.ndarray) -> tuple[np.ndarray, float]:
+    """Float tensor -> (int4-valued int8, scale), symmetric per-tensor.
+
+    Values land in the symmetric int4 range [-7, 7]; storage here stays
+    int8 — nibble packing happens at export (``aot.pack_int4``). The
+    coarser scale is absorbed into ``s_c``/``s_w``, so the requant
+    multiplier formulas are unchanged.
+    """
+    amax = float(np.abs(w).max())
+    scale = amax / 7.0 if amax > 0 else 1.0
+    q = np.clip(np.round(w / scale), -7, 7).astype(np.int8)
+    return q, scale
+
+
+def int4_error(w: np.ndarray) -> float:
+    """Normalized RMS reconstruction error of native int4 quantization:
+    ``sqrt(sum((w - s*q)^2) / sum(w^2))`` — the per-layer metric the
+    ``--int4-budget`` demotion policy thresholds against (mirrors
+    ``QuantizedModel::with_precision_budget`` on the rust side)."""
+    q, s = quantize_symmetric_int4(w)
+    e = w.astype(np.float64) - q.astype(np.float64) * s
+    denom = float(np.sum(w.astype(np.float64) ** 2))
+    if denom <= 0.0:
+        return 0.0
+    return float(np.sqrt(np.sum(e * e) / denom))
+
+
 def build_lut_q(p: int) -> tuple[np.ndarray, float]:
     """Quantized tabulation: ``LUT[a, j] = round(B_{0,P}(a/256 + P - j)/s_B)``.
 
@@ -103,13 +130,17 @@ def bspline_unit_q(x_q: np.ndarray, lut: np.ndarray, g: int, p: int) -> tuple[np
 class QuantizedLayer:
     """Integer-only KAN layer: LUT + int8 coeff/base + requant constants."""
 
-    def __init__(self, params: dict, spec: model.KanLayerSpec):
+    def __init__(self, params: dict, spec: model.KanLayerSpec, precision: str = "int8"):
+        if precision not in ("int8", "int4"):
+            raise ValueError(f"unknown precision {precision!r} (want int8|int4)")
         self.spec = spec
+        self.precision = precision
         self.lut, self.s_b = build_lut_q(spec.degree)
         coeff = np.asarray(params["coeff"], dtype=np.float32)  # (K, M, N)
         base = np.asarray(params["base"], dtype=np.float32)    # (K, N)
-        self.coeff_q, self.s_c = quantize_symmetric(coeff)
-        self.base_q, self.s_w = quantize_symmetric(base)
+        quant_w = quantize_symmetric_int4 if precision == "int4" else quantize_symmetric
+        self.coeff_q, self.s_c = quant_w(coeff)
+        self.base_q, self.s_w = quant_w(base)
         # requant multipliers: float-scale * 128 (next-layer act scale) * 2^SHIFT
         self.m1 = int(round(self.s_b * self.s_c * 128.0 * (1 << SHIFT)))
         self.m2 = int(round((1.0 / 128.0) * self.s_w * 128.0 * (1 << SHIFT)))
@@ -149,9 +180,21 @@ class QuantizedLayer:
 class QuantizedModel:
     """Integer-only KAN inference — the software twin of the rust engine."""
 
-    def __init__(self, params: list[dict], spec: model.KanModelSpec):
+    def __init__(
+        self,
+        params: list[dict],
+        spec: model.KanModelSpec,
+        precisions: list[str] | None = None,
+    ):
         self.spec = spec
-        self.layers = [QuantizedLayer(p, s) for p, s in zip(params, spec.layers)]
+        if precisions is None:
+            precisions = ["int8"] * len(spec.layers)
+        if len(precisions) != len(spec.layers):
+            raise ValueError(f"{len(precisions)} precisions for {len(spec.layers)} layers")
+        self.layers = [
+            QuantizedLayer(p, s, prec)
+            for p, s, prec in zip(params, spec.layers, precisions)
+        ]
 
     def forward_int(self, x: np.ndarray) -> np.ndarray:
         """Float inputs -> int64 logits-accumulator (BS, out_dim)."""

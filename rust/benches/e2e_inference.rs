@@ -23,7 +23,7 @@ use std::path::PathBuf;
 
 use kan_sas::arch::ArrayConfig;
 use kan_sas::bench::{bench, write_artifact, BenchStats};
-use kan_sas::kan::{Engine, Kernel, QuantizedModel, Scratch};
+use kan_sas::kan::{Engine, Kernel, Precision, QuantizedModel, Scratch};
 use kan_sas::util::alloc_count::{self, CountingAllocator};
 use kan_sas::util::json::Value;
 use kan_sas::util::rng::Rng;
@@ -126,6 +126,56 @@ fn main() {
         ]));
     }
 
+    // precision sweep: the SAME weights stored per layer as widened int8
+    // vs packed int4 (demoted, multipliers rescaled exactly) vs an
+    // alternating mixed plan, all at one serving batch size. rows/s +
+    // table bytes quantify the memory/throughput trade of the nibble
+    // packing; argmax agreement vs the int8 row bounds the accuracy cost
+    // of the demotion.
+    let sweep_bs = 32usize;
+    let x_q: Vec<u8> = (0..sweep_bs * in_dim).map(|_| rng.below(256) as u8).collect();
+    let n_layers = engine.model.layers.len();
+    let variants: Vec<(&str, Vec<Precision>)> = vec![
+        ("int8", vec![Precision::Int8; n_layers]),
+        ("int4", vec![Precision::Int4; n_layers]),
+        (
+            "mixed",
+            (0..n_layers)
+                .map(|i| if i % 2 == 0 { Precision::Int4 } else { Precision::Int8 })
+                .collect(),
+        ),
+    ];
+    let mut sweep = Vec::new();
+    let mut int8_preds: Vec<usize> = Vec::new();
+    for (vname, precs) in &variants {
+        let e = Engine::new(engine.model.as_ref().with_precisions(precs));
+        let mut s = Scratch::for_plan(e.plan(), sweep_bs);
+        let stats = bench(&format!("{} precision sweep [{vname}], bs={sweep_bs}", e.model.name), || {
+            let t = e.forward_into(&x_q, sweep_bs, &mut s).unwrap();
+            std::hint::black_box(t[t.len() - 1]);
+        });
+        let preds = e.forward_from_q(&x_q, sweep_bs).unwrap().predictions();
+        if *vname == "int8" {
+            int8_preds = preds.clone();
+        }
+        let agree = preds.iter().zip(&int8_preds).filter(|(a, b)| a == b).count();
+        let table_bytes = e.plan().derived_bytes();
+        println!(
+            "    -> [{vname}] {:.0} rows/s, {table_bytes} table bytes, \
+             argmax agreement {agree}/{sweep_bs} vs int8",
+            stats.per_second(sweep_bs as u64)
+        );
+        sweep.push(Value::obj([
+            ("precision", Value::str(*vname)),
+            ("rows_per_s", Value::num(stats.per_second(sweep_bs as u64))),
+            ("p50_us", Value::num(stats.median.as_secs_f64() * 1e6)),
+            ("p95_us", Value::num(stats.p95.as_secs_f64() * 1e6)),
+            ("table_bytes", Value::num(table_bytes as f64)),
+            ("param_bytes", Value::num(e.param_bytes() as f64)),
+            ("agree_vs_int8", Value::num(agree as f64 / sweep_bs as f64)),
+        ]));
+    }
+
     let doc = Value::obj([
         ("bench", Value::str("e2e_inference")),
         ("model", Value::str(engine.model.name.clone())),
@@ -137,6 +187,7 @@ fn main() {
             Value::arr(blocks.iter().map(|&bb| Value::num(bb as f64)).collect::<Vec<_>>()),
         ),
         ("batches", Value::arr(batches)),
+        ("precision_sweep", Value::arr(sweep)),
     ]);
     let out = "BENCH_engine.json";
     write_artifact(out, doc).expect("write bench artifact");

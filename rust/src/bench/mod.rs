@@ -76,6 +76,12 @@ fn bench_with<F: FnMut()>(name: &str, target: Duration, max_samples: usize, f: &
     stats
 }
 
+/// Version stamped as a top-level `schema_version` into every artifact
+/// [`write_artifact`] touches, so downstream parsers of the
+/// merge-append trail can detect section-layout changes. Bump when a
+/// section's row shape changes incompatibly.
+pub const SCHEMA_VERSION: u64 = 1;
+
 /// Merge `doc`'s top-level sections over `existing`: sections present
 /// in `doc` replace same-named ones, sections only in `existing`
 /// survive. A non-object (or absent / unparseable) `existing` is
@@ -97,11 +103,15 @@ pub fn merge_artifact(existing: Option<Value>, doc: Value) -> Value {
 
 /// Write a bench artifact, merge-appending `doc`'s top-level sections
 /// into whatever valid JSON object is already at `path` (see
-/// [`merge_artifact`]). A missing or corrupt file degrades to a plain
-/// write of `doc`.
+/// [`merge_artifact`]) and stamping the current [`SCHEMA_VERSION`]. A
+/// missing or corrupt file degrades to a plain write of `doc`.
 pub fn write_artifact(path: &str, doc: Value) -> std::io::Result<()> {
     let existing = std::fs::read_to_string(path).ok().and_then(|t| Value::parse(&t).ok());
-    std::fs::write(path, merge_artifact(existing, doc).render() + "\n")
+    let mut merged = merge_artifact(existing, doc);
+    if let Value::Obj(m) = &mut merged {
+        m.insert("schema_version".to_string(), Value::num(SCHEMA_VERSION as f64));
+    }
+    std::fs::write(path, merged.render() + "\n")
 }
 
 #[cfg(test)]
@@ -172,6 +182,11 @@ mod tests {
         assert_eq!(v.get("a").and_then(Value::as_f64), Some(1.0), "untouched section kept");
         assert_eq!(v.get("b").and_then(Value::as_f64), Some(7.0), "rerun section refreshed");
         assert_eq!(v.get("c").and_then(Value::as_f64), Some(3.0), "new section appended");
+        assert_eq!(
+            v.get("schema_version").and_then(Value::as_f64),
+            Some(SCHEMA_VERSION as f64),
+            "every written artifact carries the schema version"
+        );
         assert!(text.ends_with('\n'));
     }
 }

@@ -321,6 +321,7 @@ mod tests {
                 m2: 1,
                 s1: 1.0,
                 s2: 1.0,
+                precision: crate::kan::Precision::Int8,
             }],
         }
     }
@@ -415,6 +416,7 @@ mod tests {
                 m2: 0,
                 s1: 1.0,
                 s2: 1.0,
+                precision: crate::kan::Precision::Int8,
             };
             let e = Engine::new(model);
             let x_q: Vec<u8> = (0..bs * k).map(|_| rng.below(256) as u8).collect();
@@ -456,6 +458,28 @@ mod tests {
             // and the allocating wrapper agrees with the planned path
             assert_eq!(e.forward_from_q(&x_q, bs).unwrap().t, want);
         });
+    }
+
+    #[test]
+    fn packed_engine_matches_oracle() {
+        // a mixed-precision model runs the packed int4 kernel path for
+        // its first layer; the scalar dense-expansion oracle reads the
+        // model's UNPACKED tensors, so agreement proves the packed
+        // storage round-trips through the hot path bit for bit
+        use crate::kan::Precision;
+        let model = QuantizedModel::synthetic_mixed(
+            "pk",
+            &[5, 7, 4],
+            5,
+            3,
+            33,
+            &[Precision::Int4, Precision::Int8],
+        );
+        let x_q: Vec<u8> = (0..3 * 5).map(|i| (i * 67 % 256) as u8).collect();
+        let want = oracle_forward(&model, &x_q, 3);
+        let e = Engine::new(model);
+        let mut s = Scratch::new();
+        assert_eq!(e.forward_into(&x_q, 3, &mut s).unwrap(), &want[..]);
     }
 
     #[test]

@@ -14,6 +14,14 @@
 //! * [`Kernel::axpy`] — the single-row MAC (`acc[i] += v * w[i]`) used by
 //!   generic-degree spline windows and the ReLU·weight base path.
 //!
+//! Each has a packed-int4 twin ([`Kernel::mac4_p4`] /
+//! [`Kernel::axpy_p4`]) reading nibble-packed weight rows (two int4
+//! values per byte, `quant::pack_i4` layout) and sign-extending
+//! in-register — int4 layers stream half the weight bytes per MAC. The
+//! plan picks dense or packed per layer at compile from its
+//! `Precision`; both variants exist on every kernel kind (the scalar
+//! reference included).
+//!
 //! Implementations:
 //!
 //! | kind     | gate                                   | vector body |
@@ -89,11 +97,17 @@ impl fmt::Display for KernelKind {
 type Mac4Fn = unsafe fn(acc: &mut [i32], w: &[i16], v: [i16; 4]);
 /// Single-row MAC: `acc[i] += v * w[i]` with `w.len() == acc.len()`.
 type AxpyFn = unsafe fn(acc: &mut [i32], w: &[i16], v: i16);
+/// Packed-int4 fused 4-row MAC: as [`Mac4Fn`] but `w` holds four
+/// consecutive nibble-packed rows of `rb = packed4_len(n)` bytes each
+/// (`w.len() == 4 * rb`); weights are sign-extended in-register.
+type Mac4PackedFn = unsafe fn(acc: &mut [i32], w: &[u8], v: [i16; 4]);
+/// Packed-int4 single-row MAC: `w.len() == packed4_len(acc.len())`.
+type AxpyPackedFn = unsafe fn(acc: &mut [i32], w: &[u8], v: i16);
 
 /// A resolved kernel: the dispatch `kind` plus cached function pointers
-/// for the two MAC primitives. `Copy`, so every [`LayerPlan`]
-/// (`super::plan::LayerPlan`) embeds its own resolved copy and the hot
-/// path never re-detects CPU features.
+/// for the MAC primitives (dense i16 and packed-int4 variants). `Copy`,
+/// so every [`LayerPlan`] (`super::plan::LayerPlan`) embeds its own
+/// resolved copy and the hot path never re-detects CPU features.
 ///
 /// The only constructors are [`Kernel::dispatch`], [`Kernel::forced`],
 /// and [`Kernel::scalar`]; all three guarantee the invariant that the
@@ -104,6 +118,8 @@ pub struct Kernel {
     kind: KernelKind,
     mac4: Mac4Fn,
     axpy: AxpyFn,
+    mac4_p4: Mac4PackedFn,
+    axpy_p4: AxpyPackedFn,
 }
 
 impl fmt::Debug for Kernel {
@@ -115,7 +131,13 @@ impl fmt::Debug for Kernel {
 impl Kernel {
     /// The portable reference kernel (always available).
     pub fn scalar() -> Self {
-        Self { kind: KernelKind::Scalar, mac4: scalar::mac4, axpy: scalar::axpy }
+        Self {
+            kind: KernelKind::Scalar,
+            mac4: scalar::mac4,
+            axpy: scalar::axpy,
+            mac4_p4: scalar::mac4_p4,
+            axpy_p4: scalar::axpy_p4,
+        }
     }
 
     /// Every kernel kind compiled into this binary AND supported by the
@@ -145,13 +167,35 @@ impl Kernel {
         match kind {
             KernelKind::Scalar => Some(Self::scalar()),
             #[cfg(all(feature = "simd", target_arch = "x86_64"))]
-            KernelKind::Avx2 => std::arch::is_x86_feature_detected!("avx2")
-                .then(|| Self { kind, mac4: x86::mac4_avx2, axpy: x86::axpy_avx2 }),
+            KernelKind::Avx2 => std::arch::is_x86_feature_detected!("avx2").then(|| Self {
+                kind,
+                mac4: x86::mac4_avx2,
+                axpy: x86::axpy_avx2,
+                mac4_p4: x86::mac4_p4_avx2,
+                axpy_p4: x86::axpy_p4_avx2,
+            }),
+            // the packed nibble decode is 128/256-bit (no 512-bit madd
+            // analogue pays off at these row widths), so the avx512 kind
+            // carries the AVX2 packed variants — every avx512f CPU has
+            // avx2, but the dispatch invariant is verified, not assumed
             #[cfg(all(feature = "avx512", target_arch = "x86_64"))]
-            KernelKind::Avx512 => std::arch::is_x86_feature_detected!("avx512f")
-                .then(|| Self { kind, mac4: x86::mac4_avx512, axpy: x86::axpy_avx512 }),
+            KernelKind::Avx512 => (std::arch::is_x86_feature_detected!("avx512f")
+                && std::arch::is_x86_feature_detected!("avx2"))
+            .then(|| Self {
+                kind,
+                mac4: x86::mac4_avx512,
+                axpy: x86::axpy_avx512,
+                mac4_p4: x86::mac4_p4_avx2,
+                axpy_p4: x86::axpy_p4_avx2,
+            }),
             #[cfg(all(feature = "simd", target_arch = "aarch64"))]
-            KernelKind::Neon => Some(Self { kind, mac4: neon::mac4_neon, axpy: neon::axpy_neon }),
+            KernelKind::Neon => Some(Self {
+                kind,
+                mac4: neon::mac4_neon,
+                axpy: neon::axpy_neon,
+                mac4_p4: neon::mac4_p4_neon,
+                axpy_p4: neon::axpy_p4_neon,
+            }),
             #[allow(unreachable_patterns)]
             _ => None,
         }
@@ -206,6 +250,27 @@ impl Kernel {
         // SAFETY: as in `mac4`.
         unsafe { (self.axpy)(acc, w, v) }
     }
+
+    /// Packed-int4 fused 4-row MAC — the int4-layer twin of
+    /// [`Kernel::mac4`]. `w` holds four consecutive nibble-packed
+    /// coefficient rows, each `packed4_len(acc.len())` bytes (layout per
+    /// `quant::pack_i4`: element `2i` low nibble, `2i+1` high nibble);
+    /// weights are sign-extended and widened in-register.
+    #[inline(always)]
+    pub fn mac4_p4(&self, acc: &mut [i32], w: &[u8], v: [i16; 4]) {
+        debug_assert_eq!(w.len(), 4 * crate::quant::packed4_len(acc.len()));
+        // SAFETY: as in `mac4`.
+        unsafe { (self.mac4_p4)(acc, w, v) }
+    }
+
+    /// Packed-int4 single-row MAC — the int4-layer twin of
+    /// [`Kernel::axpy`], `w.len() == packed4_len(acc.len())`.
+    #[inline(always)]
+    pub fn axpy_p4(&self, acc: &mut [i32], w: &[u8], v: i16) {
+        debug_assert_eq!(w.len(), crate::quant::packed4_len(acc.len()));
+        // SAFETY: as in `mac4`.
+        unsafe { (self.axpy_p4)(acc, w, v) }
+    }
 }
 
 impl Default for Kernel {
@@ -236,6 +301,33 @@ mod scalar {
         let v = v as i32;
         for (a, &x) in acc.iter_mut().zip(w) {
             *a += v * x as i32;
+        }
+    }
+
+    use crate::quant::{packed4_len, sext4};
+
+    /// See [`Kernel::mac4_p4`](super::Kernel::mac4_p4): four packed rows
+    /// of `rb` bytes, nibbles decoded per element.
+    pub(super) unsafe fn mac4_p4(acc: &mut [i32], w: &[u8], v: [i16; 4]) {
+        let rb = packed4_len(acc.len());
+        let (v0, v1, v2, v3) = (v[0] as i32, v[1] as i32, v[2] as i32, v[3] as i32);
+        let (w0, rest) = w.split_at(rb);
+        let (w1, rest) = rest.split_at(rb);
+        let (w2, w3) = rest.split_at(rb);
+        for (i, a) in acc.iter_mut().enumerate() {
+            let (b, sh) = (i >> 1, (i & 1) * 4);
+            *a += v0 * sext4(w0[b] >> sh) as i32
+                + v1 * sext4(w1[b] >> sh) as i32
+                + v2 * sext4(w2[b] >> sh) as i32
+                + v3 * sext4(w3[b] >> sh) as i32;
+        }
+    }
+
+    /// See [`Kernel::axpy_p4`](super::Kernel::axpy_p4).
+    pub(super) unsafe fn axpy_p4(acc: &mut [i32], w: &[u8], v: i16) {
+        let v = v as i32;
+        for (i, a) in acc.iter_mut().enumerate() {
+            *a += v * sext4(w[i >> 1] >> ((i & 1) * 4)) as i32;
         }
     }
 }
@@ -328,6 +420,114 @@ mod x86 {
                 + v1 * w[n + i] as i32
                 + v2 * w[2 * n + i] as i32
                 + v3 * w[3 * n + i] as i32;
+        }
+    }
+
+    /// Decode 16 packed int4 weights (8 bytes at `p`) into a 256-bit
+    /// vector of 16 sign-extended i16 lanes, preserving element order.
+    ///
+    /// Per-byte nibble split: `srli_epi16` shifts 16-bit lanes, so after
+    /// the shift each byte's low nibble holds its own original high
+    /// nibble plus 4 bits bled in from the neighbour — the `& 0x0F` mask
+    /// kills the bleed. `unpacklo_epi8(lo, hi)` restores element order
+    /// (elements 2i / 2i+1 from byte i); `(x ^ 8) - 8` sign-extends the
+    /// 4-bit two's-complement values in 8-bit lanes.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn load_nib16(p: *const u8) -> __m256i {
+        let raw = _mm_loadl_epi64(p as *const __m128i);
+        let mask = _mm_set1_epi8(0x0F);
+        let lo = _mm_and_si128(raw, mask);
+        let hi = _mm_and_si128(_mm_srli_epi16::<4>(raw), mask);
+        let inter = _mm_unpacklo_epi8(lo, hi);
+        let k = _mm_set1_epi8(8);
+        let signed = _mm_sub_epi8(_mm_xor_si128(inter, k), k);
+        _mm256_cvtepi8_epi16(signed)
+    }
+
+    /// AVX2 packed-int4 fused 4-row MAC: nibble-decode each row with
+    /// [`load_nib16`], then the identical madd pair-MAC body as
+    /// [`mac4_avx2`] — 16 outputs per iteration from half the weight
+    /// load bandwidth. Bit-exact: decoded weights are the same i16
+    /// values the dense path widens from int8.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn mac4_p4_avx2(acc: &mut [i32], w: &[u8], v: [i16; 4]) {
+        let n = acc.len();
+        let rb = crate::quant::packed4_len(n);
+        let vv01 = _mm256_set1_epi32(((v[1] as i32) << 16) | (v[0] as u16 as i32));
+        let vv23 = _mm256_set1_epi32(((v[3] as i32) << 16) | (v[2] as u16 as i32));
+        let wp = w.as_ptr();
+        let ap = acc.as_mut_ptr();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            // i is a multiple of 16, so i/2 is byte-exact into each row
+            let w0 = load_nib16(wp.add(i / 2));
+            let w1 = load_nib16(wp.add(rb + i / 2));
+            let w2 = load_nib16(wp.add(2 * rb + i / 2));
+            let w3 = load_nib16(wp.add(3 * rb + i / 2));
+            let s_lo = _mm256_madd_epi16(_mm256_unpacklo_epi16(w0, w1), vv01);
+            let s_hi = _mm256_madd_epi16(_mm256_unpackhi_epi16(w0, w1), vv01);
+            let t_lo = _mm256_madd_epi16(_mm256_unpacklo_epi16(w2, w3), vv23);
+            let t_hi = _mm256_madd_epi16(_mm256_unpackhi_epi16(w2, w3), vv23);
+            let sum_lo = _mm256_add_epi32(s_lo, t_lo); // [0-3 | 8-11]
+            let sum_hi = _mm256_add_epi32(s_hi, t_hi); // [4-7 | 12-15]
+            let first = _mm256_permute2x128_si256(sum_lo, sum_hi, 0x20); // [0-7]
+            let second = _mm256_permute2x128_si256(sum_lo, sum_hi, 0x31); // [8-15]
+            let a0 = _mm256_loadu_si256(ap.add(i) as *const __m256i);
+            let a1 = _mm256_loadu_si256(ap.add(i + 8) as *const __m256i);
+            _mm256_storeu_si256(ap.add(i) as *mut __m256i, _mm256_add_epi32(a0, first));
+            _mm256_storeu_si256(ap.add(i + 8) as *mut __m256i, _mm256_add_epi32(a1, second));
+            i += 16;
+        }
+        if i < n {
+            tail_mac4_p4(&mut acc[i..], w, rb, i, v);
+        }
+    }
+
+    /// AVX2 packed-int4 single-row MAC: one [`load_nib16`] feeds two
+    /// widened `mullo_epi32` accumulates (16 outputs per iteration).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn axpy_p4_avx2(acc: &mut [i32], w: &[u8], v: i16) {
+        let n = acc.len();
+        let vv = _mm256_set1_epi32(v as i32);
+        let wp = w.as_ptr();
+        let ap = acc.as_mut_ptr();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let w16 = load_nib16(wp.add(i / 2));
+            let lo32 = _mm256_cvtepi16_epi32(_mm256_castsi256_si128(w16));
+            let hi32 = _mm256_cvtepi16_epi32(_mm256_extracti128_si256::<1>(w16));
+            let a0 = _mm256_loadu_si256(ap.add(i) as *const __m256i);
+            let a1 = _mm256_loadu_si256(ap.add(i + 8) as *const __m256i);
+            _mm256_storeu_si256(
+                ap.add(i) as *mut __m256i,
+                _mm256_add_epi32(a0, _mm256_mullo_epi32(lo32, vv)),
+            );
+            _mm256_storeu_si256(
+                ap.add(i + 8) as *mut __m256i,
+                _mm256_add_epi32(a1, _mm256_mullo_epi32(hi32, vv)),
+            );
+            i += 16;
+        }
+        while i < n {
+            acc[i] += v as i32 * crate::quant::sext4(w[i >> 1] >> ((i & 1) * 4)) as i32;
+            i += 1;
+        }
+    }
+
+    /// Scalar tail for the packed fused 4-row kernels: finishes outputs
+    /// `[done..n)` given the full 4-row packed `w` (row stride `rb`).
+    #[inline]
+    fn tail_mac4_p4(acc_tail: &mut [i32], w: &[u8], rb: usize, done: usize, v: [i16; 4]) {
+        let (v0, v1, v2, v3) = (v[0] as i32, v[1] as i32, v[2] as i32, v[3] as i32);
+        let nib =
+            |row: usize, i: usize| crate::quant::sext4(w[row * rb + (i >> 1)] >> ((i & 1) * 4));
+        for (off, a) in acc_tail.iter_mut().enumerate() {
+            let i = done + off;
+            *a += v0 * nib(0, i) as i32
+                + v1 * nib(1, i) as i32
+                + v2 * nib(2, i) as i32
+                + v3 * nib(3, i) as i32;
         }
     }
 
@@ -445,6 +645,94 @@ mod neon {
             i += 1;
         }
     }
+
+    /// Decode 16 packed int4 weights (8 bytes at `p`) into 16
+    /// sign-extended i8 lanes in element order: per-byte nibble split
+    /// (`vand`/`vshr_n_u8`), interleave (`vzip_u8`), then the
+    /// `(x ^ 8) - 8` two's-complement sign extension.
+    #[inline]
+    unsafe fn nib16(p: *const u8) -> int8x16_t {
+        let raw = vld1_u8(p);
+        let lo = vand_u8(raw, vdup_n_u8(0x0F));
+        let hi = vshr_n_u8::<4>(raw);
+        let z = vzip_u8(lo, hi);
+        let all = vreinterpretq_s8_u8(vcombine_u8(z.0, z.1));
+        let k = vdupq_n_s8(8);
+        vsubq_s8(veorq_s8(all, k), k)
+    }
+
+    /// NEON packed-int4 fused 4-row MAC: one [`nib16`] decode per row
+    /// feeds widening `vmlal_s16` accumulates — 16 outputs per iteration
+    /// across four accumulator registers.
+    pub(super) unsafe fn mac4_p4_neon(acc: &mut [i32], w: &[u8], v: [i16; 4]) {
+        let n = acc.len();
+        let rb = crate::quant::packed4_len(n);
+        let vd: [int16x4_t; 4] = [
+            vdup_n_s16(v[0]),
+            vdup_n_s16(v[1]),
+            vdup_n_s16(v[2]),
+            vdup_n_s16(v[3]),
+        ];
+        let wp = w.as_ptr();
+        let ap = acc.as_mut_ptr();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let mut a0 = vld1q_s32(ap.add(i));
+            let mut a1 = vld1q_s32(ap.add(i + 4));
+            let mut a2 = vld1q_s32(ap.add(i + 8));
+            let mut a3 = vld1q_s32(ap.add(i + 12));
+            for (row, vr) in vd.iter().enumerate() {
+                let w8 = nib16(wp.add(row * rb + i / 2));
+                let wlo = vmovl_s8(vget_low_s8(w8));
+                let whi = vmovl_s8(vget_high_s8(w8));
+                a0 = vmlal_s16(a0, vget_low_s16(wlo), *vr);
+                a1 = vmlal_s16(a1, vget_high_s16(wlo), *vr);
+                a2 = vmlal_s16(a2, vget_low_s16(whi), *vr);
+                a3 = vmlal_s16(a3, vget_high_s16(whi), *vr);
+            }
+            vst1q_s32(ap.add(i), a0);
+            vst1q_s32(ap.add(i + 4), a1);
+            vst1q_s32(ap.add(i + 8), a2);
+            vst1q_s32(ap.add(i + 12), a3);
+            i += 16;
+        }
+        while i < n {
+            let nib = |row: usize| {
+                crate::quant::sext4(w[row * rb + (i >> 1)] >> ((i & 1) * 4)) as i32
+            };
+            acc[i] += v[0] as i32 * nib(0)
+                + v[1] as i32 * nib(1)
+                + v[2] as i32 * nib(2)
+                + v[3] as i32 * nib(3);
+            i += 1;
+        }
+    }
+
+    /// NEON packed-int4 single-row MAC.
+    pub(super) unsafe fn axpy_p4_neon(acc: &mut [i32], w: &[u8], v: i16) {
+        let n = acc.len();
+        let vd = vdup_n_s16(v);
+        let wp = w.as_ptr();
+        let ap = acc.as_mut_ptr();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let w8 = nib16(wp.add(i / 2));
+            let wlo = vmovl_s8(vget_low_s8(w8));
+            let whi = vmovl_s8(vget_high_s8(w8));
+            vst1q_s32(ap.add(i), vmlal_s16(vld1q_s32(ap.add(i)), vget_low_s16(wlo), vd));
+            vst1q_s32(ap.add(i + 4), vmlal_s16(vld1q_s32(ap.add(i + 4)), vget_high_s16(wlo), vd));
+            vst1q_s32(ap.add(i + 8), vmlal_s16(vld1q_s32(ap.add(i + 8)), vget_low_s16(whi), vd));
+            vst1q_s32(
+                ap.add(i + 12),
+                vmlal_s16(vld1q_s32(ap.add(i + 12)), vget_high_s16(whi), vd),
+            );
+            i += 16;
+        }
+        while i < n {
+            acc[i] += v as i32 * crate::quant::sext4(w[i >> 1] >> ((i & 1) * 4)) as i32;
+            i += 1;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -521,6 +809,77 @@ mod tests {
                 assert_eq!(acc, a_want, "axpy {kind} n={n}");
             }
         });
+    }
+
+    /// Packed-path oracles: unpack the nibbles with the quant helpers
+    /// and run the dense oracle math.
+    fn want_mac4_p4(acc: &[i32], w: &[u8], v: [i16; 4]) -> Vec<i32> {
+        let n = acc.len();
+        let rb = crate::quant::packed4_len(n);
+        let rows: Vec<Vec<i8>> =
+            w.chunks_exact(rb).map(|r| crate::quant::unpack_i4(r, n)).collect();
+        (0..n)
+            .map(|i| {
+                acc[i]
+                    + v.iter()
+                        .zip(&rows)
+                        .map(|(&vr, row)| vr as i32 * row[i] as i32)
+                        .sum::<i32>()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn every_available_kernel_matches_packed_oracle() {
+        // widths crossing the 16-lane packed body plus odd tails (the
+        // final high nibble of an odd row must never contribute)
+        check(60, 7777, |rng: &mut Rng| {
+            let n = 1 + rng.below(50);
+            let rb = crate::quant::packed4_len(n);
+            let acc0: Vec<i32> = (0..n).map(|_| rng.range_i64(-1 << 20, 1 << 20) as i32).collect();
+            // pack per row so odd-width tails appear in every row
+            let w4: Vec<u8> = (0..4)
+                .flat_map(|_| {
+                    let row: Vec<i8> = (0..n).map(|_| rng.range_i64(-8, 7) as i8).collect();
+                    crate::quant::pack_i4(&row)
+                })
+                .collect();
+            assert_eq!(w4.len(), 4 * rb);
+            let v4 = [
+                rng.below(256) as i16,
+                rng.below(256) as i16,
+                rng.below(256) as i16,
+                rng.below(256) as i16,
+            ];
+            let v1 = rng.below(256) as i16;
+            let m_want = want_mac4_p4(&acc0, &w4, v4);
+            let a_want = want_mac4_p4(&acc0, &w4[..rb], [v1, 0, 0, 0]);
+            for kind in Kernel::available() {
+                let k = Kernel::forced(kind).unwrap();
+                let mut acc = acc0.clone();
+                k.mac4_p4(&mut acc, &w4, v4);
+                assert_eq!(acc, m_want, "mac4_p4 {kind} n={n}");
+                let mut acc = acc0.clone();
+                k.axpy_p4(&mut acc, &w4[..rb], v1);
+                assert_eq!(acc, a_want, "axpy_p4 {kind} n={n}");
+            }
+        });
+    }
+
+    #[test]
+    fn packed_kernels_handle_sign_boundaries() {
+        // every lane at the extremes -8/+7 through the vector body
+        let n = 37usize; // 2 full 16-lane iterations + 5-lane tail, odd
+        let row: Vec<i8> = (0..n).map(|i| if i % 2 == 0 { -8 } else { 7 }).collect();
+        let packed = crate::quant::pack_i4(&row);
+        let w4: Vec<u8> = (0..4).flat_map(|_| packed.clone()).collect();
+        let want = want_mac4_p4(&vec![0; n], &w4, [255, 1, 128, 3]);
+        for kind in Kernel::available() {
+            let k = Kernel::forced(kind).unwrap();
+            let mut acc = vec![0i32; n];
+            k.mac4_p4(&mut acc, &w4, [255, 1, 128, 3]);
+            assert_eq!(acc, want, "{kind}");
+        }
     }
 
     #[test]

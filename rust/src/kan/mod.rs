@@ -14,5 +14,5 @@ pub mod plan;
 
 pub use engine::Engine;
 pub use kernel::{Kernel, KernelKind};
-pub use model::{LayerParams, QuantizedModel};
+pub use model::{LayerParams, Precision, QuantizedModel};
 pub use plan::{ExecutionPlan, LayerPlan, Scratch};

@@ -1,13 +1,64 @@
-//! Quantized KAN model: .kanq loading and parameter layout.
+//! Quantized KAN model: .kanq loading, parameter layout, and per-layer
+//! storage precision (int8 or packed int4 — see `quant::pack_i4`).
 
+use std::fmt;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
 use crate::bspline::Lut;
+use crate::quant;
 use crate::tensor::Tensor;
 use crate::util::container::Container;
 use crate::util::json::Value;
+
+/// Per-layer weight storage precision. `Int8` is the classic format;
+/// `Int4` layers store coefficients/base weights as two's-complement
+/// nibbles (two per byte) in artifacts and compiled plans, halving table
+/// memory and doubling coefficients per SIMD load. In-memory
+/// `LayerParams` tensors always hold the *unpacked* int8 values (an int4
+/// layer's values simply stay within [-8, 7]); plan compile re-packs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// int8 symmetric weights (one byte per value).
+    Int8,
+    /// Packed int4 weights (two nibble values per byte).
+    Int4,
+}
+
+impl Precision {
+    /// Stable lowercase name — the artifact meta vocabulary and the
+    /// string reported by `kansas serve` / `BENCH_engine.json`.
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::Int8 => "int8",
+            Precision::Int4 => "int4",
+        }
+    }
+
+    /// Parse an artifact meta / `KANSAS_FORCE_PRECISION` value.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "int8" => Some(Precision::Int8),
+            "int4" => Some(Precision::Int4),
+            _ => None,
+        }
+    }
+
+    /// Bits per stored weight.
+    pub fn bits(self) -> usize {
+        match self {
+            Precision::Int8 => 8,
+            Precision::Int4 => 4,
+        }
+    }
+}
+
+impl fmt::Display for Precision {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
 
 /// One quantized KAN layer's parameters.
 #[derive(Clone, Debug)]
@@ -18,9 +69,10 @@ pub struct LayerParams {
     pub degree: usize,
     /// The B-spline unit's ROM (256 x (P+1) uint8 + scale).
     pub lut: Lut,
-    /// Spline coefficients `(K, M, N)` int8.
+    /// Spline coefficients `(K, M, N)` int8 (values within [-8, 7] when
+    /// `precision` is `Int4`).
     pub coeff: Tensor<i8>,
-    /// Base-path weights `(K, N)` int8.
+    /// Base-path weights `(K, N)` int8 (same range rule).
     pub base: Tensor<i8>,
     /// Requantization multipliers (fixed-point, SHIFT bits).
     pub m1: i64,
@@ -29,11 +81,46 @@ pub struct LayerParams {
     /// floats).
     pub s1: f64,
     pub s2: f64,
+    /// Storage precision of this layer's weight tables (artifact and
+    /// compiled-plan format; the tensors above are always unpacked).
+    pub precision: Precision,
 }
 
 impl LayerParams {
     pub fn num_bases(&self) -> usize {
         self.grid + self.degree
+    }
+
+    /// Normalized RMS error this layer would incur if demoted int8 ->
+    /// int4 (0 for an already-int4 layer). See `quant::demotion_error`.
+    pub fn demotion_error(&self) -> f64 {
+        if self.precision == Precision::Int4 {
+            return 0.0;
+        }
+        let mut all = Vec::with_capacity(self.coeff.len() + self.base.len());
+        all.extend_from_slice(self.coeff.data());
+        all.extend_from_slice(self.base.data());
+        quant::demotion_error(&all)
+    }
+
+    /// This layer demoted to int4: weights rounded to the nearest
+    /// multiple of 16 and divided by it, requant multipliers (and the
+    /// reporting scales) multiplied by exactly 16 to compensate.
+    pub fn demoted(&self) -> LayerParams {
+        let q = |t: &Tensor<i8>| {
+            let v: Vec<i8> = t.data().iter().map(|&w| quant::demote_i8_to_i4(w)).collect();
+            Tensor::from_vec(v, t.shape())
+        };
+        LayerParams {
+            coeff: q(&self.coeff),
+            base: q(&self.base),
+            m1: self.m1 * 16,
+            m2: self.m2 * 16,
+            s1: self.s1 * 16.0,
+            s2: self.s2 * 16.0,
+            precision: Precision::Int4,
+            ..self.clone()
+        }
     }
 }
 
@@ -47,7 +134,14 @@ pub struct QuantizedModel {
 
 impl QuantizedModel {
     pub fn load(path: &Path) -> Result<Self> {
-        let c = Container::open(path)?;
+        Self::from_container(&Container::open(path)?)
+    }
+
+    /// Parse a `KANQ0001` container — the body of
+    /// [`QuantizedModel::load`], callable on in-memory bytes (tests
+    /// fabricate packed-int4 artifacts through
+    /// `Container::from_bytes` without touching disk).
+    pub fn from_container(c: &Container) -> Result<Self> {
         c.expect_magic(b"KANQ0001")?;
         let h = &c.header;
         let name = h.get("name").and_then(Value::as_str).context("name")?.to_string();
@@ -75,30 +169,67 @@ impl QuantizedModel {
             let out_dim = lm.get("out_dim").and_then(Value::as_usize).context("out_dim")?;
             let s_b = lm.get("s_b").and_then(Value::as_f64).context("s_b")?;
 
+            // absent precision meta means int8 — every pre-existing
+            // artifact loads unchanged
+            let precision = match lm.get("precision").and_then(Value::as_str) {
+                None => Precision::Int8,
+                Some(s) => Precision::parse(s)
+                    .with_context(|| format!("layer {i} unknown precision {s:?}"))?,
+            };
+
             let (lut_raw, lut_shape) = c.u8(&format!("l{i}.lut"))?;
             if lut_shape != [256, degree + 1] {
                 bail!("layer {i} lut shape {lut_shape:?}");
             }
-            let (coeff_raw, cs) = c.i8(&format!("l{i}.coeff"))?;
-            if cs != [in_dim, grid + degree, out_dim] {
-                bail!("layer {i} coeff shape {cs:?}");
-            }
-            let (base_raw, bs) = c.i8(&format!("l{i}.base"))?;
-            if bs != [in_dim, out_dim] {
-                bail!("layer {i} base shape {bs:?}");
-            }
+            let (coeff, base) = match precision {
+                Precision::Int8 => {
+                    let (coeff_raw, cs) = c.i8(&format!("l{i}.coeff"))?;
+                    if cs != [in_dim, grid + degree, out_dim] {
+                        bail!("layer {i} coeff shape {cs:?}");
+                    }
+                    let (base_raw, bs) = c.i8(&format!("l{i}.base"))?;
+                    if bs != [in_dim, out_dim] {
+                        bail!("layer {i} base shape {bs:?}");
+                    }
+                    (Tensor::from_vec(coeff_raw, &cs), Tensor::from_vec(base_raw, &bs))
+                }
+                Precision::Int4 => {
+                    // packed nibbles on disk (row stride ceil(N/2) bytes);
+                    // unpack to int8 tensors — plan compile re-packs
+                    let rb = quant::packed4_len(out_dim);
+                    let (c4, cs) = c.u8(&format!("l{i}.coeff4"))?;
+                    if cs != [in_dim, grid + degree, rb] {
+                        bail!("layer {i} coeff4 shape {cs:?}");
+                    }
+                    let (b4, bsh) = c.u8(&format!("l{i}.base4"))?;
+                    if bsh != [in_dim, rb] {
+                        bail!("layer {i} base4 shape {bsh:?}");
+                    }
+                    let unpack = |packed: &[u8]| -> Vec<i8> {
+                        packed
+                            .chunks_exact(rb)
+                            .flat_map(|row| quant::unpack_i4(row, out_dim))
+                            .collect()
+                    };
+                    (
+                        Tensor::from_vec(unpack(&c4), &[in_dim, grid + degree, out_dim]),
+                        Tensor::from_vec(unpack(&b4), &[in_dim, out_dim]),
+                    )
+                }
+            };
             layers.push(LayerParams {
                 in_dim,
                 out_dim,
                 grid,
                 degree,
                 lut: Lut::from_raw(lut_raw, degree, s_b),
-                coeff: Tensor::from_vec(coeff_raw, &cs),
-                base: Tensor::from_vec(base_raw, &bs),
+                coeff,
+                base,
                 m1: lm.get("m1").and_then(Value::as_i64).context("m1")?,
                 m2: lm.get("m2").and_then(Value::as_i64).context("m2")?,
                 s1: lm.get("s1").and_then(Value::as_f64).context("s1")?,
                 s2: lm.get("s2").and_then(Value::as_f64).context("s2")?,
+                precision,
             });
         }
         Ok(Self { name, dims, layers })
@@ -110,17 +241,53 @@ impl QuantizedModel {
     /// same shape, which is all throughput/latency measurement needs.
     /// Requant multipliers are sized so mid-layer activations use a
     /// reasonable slice of the uint8 range instead of saturating.
+    ///
+    /// All layers are int8 unless `KANSAS_FORCE_PRECISION` (`int8|int4`)
+    /// forces a uniform precision — the hook the CI int4 legs use to run
+    /// every synthetic-model test through the packed kernel paths.
     pub fn synthetic(name: &str, dims: &[usize], grid: usize, degree: usize, seed: u64) -> Self {
         assert!(dims.len() >= 2, "need at least one layer");
+        let mut forced = Precision::Int8;
+        if let Ok(want) = std::env::var("KANSAS_FORCE_PRECISION") {
+            match Precision::parse(&want) {
+                Some(p) => forced = p,
+                None => eprintln!(
+                    "KANSAS_FORCE_PRECISION={want}: unknown precision (want int8|int4); \
+                     using int8"
+                ),
+            }
+        }
+        Self::synthetic_mixed(name, dims, grid, degree, seed, &vec![forced; dims.len() - 1])
+    }
+
+    /// [`QuantizedModel::synthetic`] with an explicit per-layer precision
+    /// vector (`precisions.len() == dims.len() - 1`). Int4 layers draw
+    /// weights natively in [-8, 7] with requant multipliers 16x the int8
+    /// ones, so activation magnitudes stay comparable across precisions.
+    pub fn synthetic_mixed(
+        name: &str,
+        dims: &[usize],
+        grid: usize,
+        degree: usize,
+        seed: u64,
+        precisions: &[Precision],
+    ) -> Self {
+        assert!(dims.len() >= 2, "need at least one layer");
+        assert_eq!(precisions.len(), dims.len() - 1, "one precision per layer");
         let mut rng = crate::util::rng::Rng::new(seed);
         let m = grid + degree;
         let layers = dims
             .windows(2)
-            .map(|w| {
+            .zip(precisions)
+            .map(|(w, &precision)| {
                 let (k, n) = (w[0], w[1]);
+                let (lo, hi, m1, m2) = match precision {
+                    Precision::Int8 => (-60i64, 60i64, 9000i64, 3000i64),
+                    Precision::Int4 => (-8, 7, 72000, 24000),
+                };
                 let coeff: Vec<i8> =
-                    (0..k * m * n).map(|_| rng.range_i64(-60, 60) as i8).collect();
-                let base: Vec<i8> = (0..k * n).map(|_| rng.range_i64(-60, 60) as i8).collect();
+                    (0..k * m * n).map(|_| rng.range_i64(lo, hi) as i8).collect();
+                let base: Vec<i8> = (0..k * n).map(|_| rng.range_i64(lo, hi) as i8).collect();
                 LayerParams {
                     in_dim: k,
                     out_dim: n,
@@ -129,14 +296,64 @@ impl QuantizedModel {
                     lut: Lut::build(degree),
                     coeff: Tensor::from_vec(coeff, &[k, m, n]),
                     base: Tensor::from_vec(base, &[k, n]),
-                    m1: 9000,
-                    m2: 3000,
+                    m1,
+                    m2,
                     s1: 1.0,
                     s2: 1.0,
+                    precision,
                 }
             })
             .collect();
         Self { name: name.to_string(), dims: dims.to_vec(), layers }
+    }
+
+    /// A copy of this model with the given per-layer precisions. Int8 ->
+    /// int4 demotes (see [`LayerParams::demoted`] — lossy by rounding to
+    /// multiples of 16); int4 -> int8 is a pure storage-format change
+    /// (same values dense, bit-exact outputs).
+    pub fn with_precisions(&self, precisions: &[Precision]) -> Self {
+        assert_eq!(precisions.len(), self.layers.len(), "one precision per layer");
+        let layers = self
+            .layers
+            .iter()
+            .zip(precisions)
+            .map(|(l, &p)| {
+                if l.precision == p {
+                    l.clone()
+                } else if p == Precision::Int4 {
+                    l.demoted()
+                } else {
+                    let mut widened = l.clone();
+                    widened.precision = Precision::Int8;
+                    widened
+                }
+            })
+            .collect();
+        Self { name: self.name.clone(), dims: self.dims.clone(), layers }
+    }
+
+    /// Per-layer mixed precision chosen from a quantization-error budget:
+    /// demote every layer whose normalized RMS demotion error (see
+    /// [`LayerParams::demotion_error`]) is within `budget`, keep the rest
+    /// int8. `budget >= 1.0` demotes everything; `budget < 0` nothing.
+    pub fn with_precision_budget(&self, budget: f64) -> Self {
+        let precisions: Vec<Precision> = self
+            .layers
+            .iter()
+            .map(|l| {
+                if l.precision == Precision::Int4 || l.demotion_error() <= budget {
+                    Precision::Int4
+                } else {
+                    Precision::Int8
+                }
+            })
+            .collect();
+        self.with_precisions(&precisions)
+    }
+
+    /// Per-layer storage precisions, in layer order.
+    pub fn precisions(&self) -> Vec<Precision> {
+        self.layers.iter().map(|l| l.precision).collect()
     }
 
     pub fn in_dim(&self) -> usize {
@@ -200,5 +417,200 @@ mod tests {
             return;
         };
         assert!(QuantizedModel::load(&path).is_err());
+    }
+
+    #[test]
+    fn precision_names_round_trip() {
+        for p in [Precision::Int8, Precision::Int4] {
+            assert_eq!(Precision::parse(p.name()), Some(p));
+            assert_eq!(p.to_string(), p.name());
+        }
+        assert_eq!(Precision::Int8.bits(), 8);
+        assert_eq!(Precision::Int4.bits(), 4);
+        assert_eq!(Precision::parse(" INT4 "), Some(Precision::Int4));
+        assert_eq!(Precision::parse("fp8"), None);
+    }
+
+    #[test]
+    fn synthetic_mixed_ranges_and_multipliers() {
+        use Precision::*;
+        let m = QuantizedModel::synthetic_mixed("mix", &[4, 8, 3], 5, 3, 7, &[Int4, Int8]);
+        assert_eq!(m.precisions(), vec![Int4, Int8]);
+        let l0 = &m.layers[0];
+        assert!(l0.coeff.data().iter().all(|&w| (-8..=7).contains(&w)));
+        assert!(l0.base.data().iter().all(|&w| (-8..=7).contains(&w)));
+        assert_eq!((l0.m1, l0.m2), (72000, 24000));
+        assert_eq!((m.layers[1].m1, m.layers[1].m2), (9000, 3000));
+        // deterministic
+        let m2 = QuantizedModel::synthetic_mixed("mix", &[4, 8, 3], 5, 3, 7, &[Int4, Int8]);
+        assert_eq!(m.layers[0].coeff.data(), m2.layers[0].coeff.data());
+    }
+
+    #[test]
+    fn demotion_scales_multipliers_exactly() {
+        let m = QuantizedModel::synthetic("d", &[4, 6, 3], 5, 3, 9);
+        let d = m.with_precisions(&[Precision::Int4, Precision::Int4]);
+        for (l8, l4) in m.layers.iter().zip(&d.layers) {
+            assert_eq!(l4.precision, Precision::Int4);
+            assert_eq!(l4.m1, l8.m1 * 16);
+            assert_eq!(l4.m2, l8.m2 * 16);
+            assert!(l4.coeff.data().iter().all(|&w| (-8..=7).contains(&w)));
+            for (&w8, &w4) in l8.coeff.data().iter().zip(l4.coeff.data()) {
+                assert_eq!(w4, crate::quant::demote_i8_to_i4(w8));
+            }
+        }
+        // widening back is a storage-format change only: values unchanged
+        let w = d.with_precisions(&[Precision::Int8, Precision::Int8]);
+        for (l4, l8) in d.layers.iter().zip(&w.layers) {
+            assert_eq!(l8.precision, Precision::Int8);
+            assert_eq!(l4.coeff.data(), l8.coeff.data());
+            assert_eq!((l4.m1, l4.m2), (l8.m1, l8.m2));
+        }
+    }
+
+    #[test]
+    fn precision_budget_selects_layers() {
+        let m = QuantizedModel::synthetic("b", &[4, 6, 3], 5, 3, 13);
+        // synthetic int8 weights (-60..60) demote with error in (0, 1)
+        for l in &m.layers {
+            let e = l.demotion_error();
+            assert!(e > 0.0 && e < 1.0, "err={e}");
+        }
+        let all4 = m.with_precision_budget(1.0);
+        assert!(all4.precisions().iter().all(|&p| p == Precision::Int4));
+        assert!(m.with_precision_budget(-1.0).precisions().iter().all(|&p| p == Precision::Int8));
+        // already-int4 layers stay int4 under any budget
+        assert!(all4.with_precision_budget(-1.0).precisions().iter().all(|&p| p
+            == Precision::Int4));
+    }
+
+    /// Serialize a model the way `python/compile/aot.py::export_kanq`
+    /// does — int4 layers as packed `coeff4`/`base4` uint8 tensors — so
+    /// the loader's nibble decode is pinned without needing `make
+    /// artifacts`.
+    fn container_bytes(m: &QuantizedModel) -> Vec<u8> {
+        use std::collections::BTreeMap;
+        let mut body: Vec<u8> = Vec::new();
+        let mut table: BTreeMap<String, Value> = BTreeMap::new();
+        let mut put = |table: &mut BTreeMap<String, Value>,
+                       body: &mut Vec<u8>,
+                       name: String,
+                       dtype: &str,
+                       shape: &[usize],
+                       bytes: Vec<u8>| {
+            let mut t = BTreeMap::new();
+            t.insert("dtype".to_string(), Value::str(dtype));
+            t.insert(
+                "shape".to_string(),
+                Value::arr(shape.iter().map(|&d| Value::num(d as f64))),
+            );
+            t.insert("offset".to_string(), Value::num(body.len() as f64));
+            t.insert("nbytes".to_string(), Value::num(bytes.len() as f64));
+            table.insert(name, Value::Obj(t));
+            body.extend_from_slice(&bytes);
+        };
+        let mut metas = Vec::new();
+        for (i, l) in m.layers.iter().enumerate() {
+            let rb = crate::quant::packed4_len(l.out_dim);
+            put(
+                &mut table,
+                &mut body,
+                format!("l{i}.lut"),
+                "uint8",
+                &[256, l.degree + 1],
+                l.lut.raw().to_vec(),
+            );
+            let pack = |t: &Tensor<i8>| -> Vec<u8> {
+                t.data()
+                    .chunks_exact(l.out_dim)
+                    .flat_map(|row| crate::quant::pack_i4(row))
+                    .collect()
+            };
+            match l.precision {
+                Precision::Int8 => {
+                    let as_bytes = |t: &Tensor<i8>| t.data().iter().map(|&v| v as u8).collect();
+                    put(
+                        &mut table,
+                        &mut body,
+                        format!("l{i}.coeff"),
+                        "int8",
+                        l.coeff.shape(),
+                        as_bytes(&l.coeff),
+                    );
+                    put(
+                        &mut table,
+                        &mut body,
+                        format!("l{i}.base"),
+                        "int8",
+                        l.base.shape(),
+                        as_bytes(&l.base),
+                    );
+                }
+                Precision::Int4 => {
+                    put(
+                        &mut table,
+                        &mut body,
+                        format!("l{i}.coeff4"),
+                        "uint8",
+                        &[l.in_dim, l.num_bases(), rb],
+                        pack(&l.coeff),
+                    );
+                    put(
+                        &mut table,
+                        &mut body,
+                        format!("l{i}.base4"),
+                        "uint8",
+                        &[l.in_dim, rb],
+                        pack(&l.base),
+                    );
+                }
+            }
+            let mut lm = BTreeMap::new();
+            lm.insert("grid".to_string(), Value::num(l.grid as f64));
+            lm.insert("degree".to_string(), Value::num(l.degree as f64));
+            lm.insert("in_dim".to_string(), Value::num(l.in_dim as f64));
+            lm.insert("out_dim".to_string(), Value::num(l.out_dim as f64));
+            lm.insert("s_b".to_string(), Value::num(l.lut.scale));
+            lm.insert("m1".to_string(), Value::num(l.m1 as f64));
+            lm.insert("m2".to_string(), Value::num(l.m2 as f64));
+            lm.insert("s1".to_string(), Value::num(l.s1));
+            lm.insert("s2".to_string(), Value::num(l.s2));
+            if l.precision != Precision::Int8 {
+                lm.insert("precision".to_string(), Value::str(l.precision.name()));
+            }
+            metas.push(Value::Obj(lm));
+        }
+        let mut h = BTreeMap::new();
+        h.insert("name".to_string(), Value::str(m.name.clone()));
+        h.insert("dims".to_string(), Value::arr(m.dims.iter().map(|&d| Value::num(d as f64))));
+        h.insert("shift".to_string(), Value::num(crate::quant::SHIFT as f64));
+        h.insert("layers".to_string(), Value::arr(metas));
+        h.insert("tensors".to_string(), Value::Obj(table));
+        let header = Value::Obj(h).render();
+        let mut raw = Vec::new();
+        raw.extend_from_slice(b"KANQ0001");
+        raw.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        raw.extend_from_slice(header.as_bytes());
+        raw.extend_from_slice(&body);
+        raw
+    }
+
+    #[test]
+    fn int4_artifact_roundtrip_in_memory() {
+        use Precision::*;
+        // odd out_dims force packed rows with tail nibbles
+        let m = QuantizedModel::synthetic_mixed("pk", &[4, 7, 3], 5, 3, 21, &[Int4, Int8]);
+        let c = Container::from_bytes(container_bytes(&m)).unwrap();
+        let got = QuantizedModel::from_container(&c).unwrap();
+        assert_eq!(got.precisions(), vec![Int4, Int8]);
+        assert_eq!(got.dims, m.dims);
+        for (a, b) in m.layers.iter().zip(&got.layers) {
+            assert_eq!(a.coeff.data(), b.coeff.data(), "coeff nibbles must decode exactly");
+            assert_eq!(a.base.data(), b.base.data());
+            assert_eq!((a.m1, a.m2), (b.m1, b.m2));
+        }
+        // and the loaded model computes: engine forward runs
+        let e = crate::kan::Engine::new(got);
+        assert_eq!(e.forward_from_q(&[0, 128, 37, 255], 1).unwrap().t.len(), 3);
     }
 }

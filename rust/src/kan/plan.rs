@@ -29,15 +29,17 @@
 
 use crate::bspline::BsplineUnit;
 use crate::quant;
+use crate::tensor::Tensor;
 
 use super::kernel::{Kernel, KernelKind};
-use super::model::{LayerParams, QuantizedModel};
+use super::model::{LayerParams, Precision, QuantizedModel};
 
 /// One layer, fully resolved for execution: the prebuilt B-spline unit,
-/// i16-widened coefficient/base tables (sign-extended int8 — the widening
-/// feeds the SIMD kernels' 16-bit multiplier lanes, see EXPERIMENTS.md
-/// §Perf), dims, degree window, requant multipliers, the resolved MAC
-/// kernel, and the autotuned batch block.
+/// the weight tables in their execution format — i16-widened for int8
+/// layers (the widening feeds the SIMD kernels' 16-bit multiplier
+/// lanes), nibble-packed for int4 layers (half the bytes per MAC; the
+/// kernels sign-extend in-register) — dims, degree window, requant
+/// multipliers, the resolved MAC kernel, and the autotuned batch block.
 #[derive(Clone, Debug)]
 pub struct LayerPlan {
     pub in_dim: usize,
@@ -52,10 +54,20 @@ pub struct LayerPlan {
     pub num_bases: usize,
     /// Prebuilt B-spline unit (owns its LUT ROM copy).
     pub unit: BsplineUnit,
-    /// `(K, M, N)` spline coefficients, widened to i16.
+    /// Weight storage precision — selects which table family below is
+    /// populated and which kernel entry points the hot loop calls.
+    pub precision: Precision,
+    /// `(K, M, N)` spline coefficients, widened to i16 (int8 layers;
+    /// empty on int4 layers).
     pub coeff16: Vec<i16>,
-    /// `(K, N)` base-path weights, widened to i16.
+    /// `(K, N)` base-path weights, widened to i16 (int8 layers).
     pub base16: Vec<i16>,
+    /// `(K, M, RB)` nibble-packed spline coefficients, `RB =
+    /// packed4_len(N)` bytes per output row (int4 layers; empty on int8
+    /// layers).
+    pub coeff4: Vec<u8>,
+    /// `(K, RB)` nibble-packed base-path weights (int4 layers).
+    pub base4: Vec<u8>,
     pub m1: i64,
     pub m2: i64,
     /// Resolved MAC kernel (cached function pointers; see
@@ -82,6 +94,25 @@ impl LayerPlan {
     /// differential kernel tests use to pin a path without touching the
     /// process environment.
     pub fn compile_with(l: &LayerParams, kernel: Kernel) -> Self {
+        // Exactly one table family is populated per layer: int8 layers
+        // widen to i16; int4 layers pack two's-complement nibbles per
+        // OUTPUT ROW (row stride `packed4_len(out_dim)` bytes, so every
+        // row starts byte-aligned and odd widths pad one zero nibble).
+        let packed = l.precision == Precision::Int4;
+        let widen = |t: &Tensor<i8>| -> Vec<i16> {
+            if packed {
+                Vec::new()
+            } else {
+                t.data().iter().map(|&w| w as i16).collect()
+            }
+        };
+        let pack = |t: &Tensor<i8>| -> Vec<u8> {
+            if packed {
+                t.data().chunks_exact(l.out_dim).flat_map(quant::pack_i4).collect()
+            } else {
+                Vec::new()
+            }
+        };
         let mut lp = Self {
             in_dim: l.in_dim,
             out_dim: l.out_dim,
@@ -89,8 +120,11 @@ impl LayerPlan {
             degree: l.degree,
             num_bases: l.num_bases(),
             unit: BsplineUnit::new(l.lut.clone(), l.grid),
-            coeff16: l.coeff.data().iter().map(|&w| w as i16).collect(),
-            base16: l.base.data().iter().map(|&w| w as i16).collect(),
+            precision: l.precision,
+            coeff16: widen(&l.coeff),
+            base16: widen(&l.base),
+            coeff4: pack(&l.coeff),
+            base4: pack(&l.base),
             m1: l.m1,
             m2: l.m2,
             kernel,
@@ -100,10 +134,11 @@ impl LayerPlan {
         lp
     }
 
-    /// Bytes of derived (widened) tables this plan layer adds on top of
-    /// the model's own storage.
+    /// Bytes of derived tables this plan layer adds on top of the
+    /// model's own storage: 2 bytes/weight widened for int8 layers, half
+    /// a byte/weight packed for int4 layers.
     pub fn derived_bytes(&self) -> usize {
-        (self.coeff16.len() + self.base16.len()) * 2
+        (self.coeff16.len() + self.base16.len()) * 2 + self.coeff4.len() + self.base4.len()
     }
 
     /// Steps 1-3 of the layer forward (B-spline unit, N:M spline MACs,
@@ -127,14 +162,30 @@ impl LayerPlan {
         acc: &mut [i32],
         acc_base: &mut [i32],
     ) {
-        let (kdim, n, p) = (self.in_dim, self.out_dim, self.degree);
-        let m = self.num_bases;
-        debug_assert_eq!(x_q.len(), bs * kdim);
-        debug_assert_eq!(acc.len(), bs * n);
-        debug_assert_eq!(acc_base.len(), bs * n);
+        debug_assert_eq!(x_q.len(), bs * self.in_dim);
+        debug_assert_eq!(acc.len(), bs * self.out_dim);
+        debug_assert_eq!(acc_base.len(), bs * self.out_dim);
         debug_assert!(bb >= 1);
         acc.fill(0);
         acc_base.fill(0);
+        match self.precision {
+            Precision::Int8 => self.accumulate_dense(bb, x_q, bs, acc, acc_base),
+            Precision::Int4 => self.accumulate_packed(bb, x_q, bs, acc, acc_base),
+        }
+    }
+
+    /// Int8 body of [`LayerPlan::accumulate_with_bb`]: i16-widened rows
+    /// through the dense kernel entry points.
+    fn accumulate_dense(
+        &self,
+        bb: usize,
+        x_q: &[u8],
+        bs: usize,
+        acc: &mut [i32],
+        acc_base: &mut [i32],
+    ) {
+        let (kdim, n, p) = (self.in_dim, self.out_dim, self.degree);
+        let m = self.num_bases;
         let (coeff, base) = (self.coeff16.as_slice(), self.base16.as_slice());
         let kernel = self.kernel;
         for b0 in (0..bs).step_by(bb) {
@@ -169,6 +220,56 @@ impl LayerPlan {
                     let r = quant::relu_q(xq);
                     if r != 0 {
                         kernel.axpy(&mut acc_base[b * n..(b + 1) * n], brow, r as i16);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Int4 twin of [`LayerPlan::accumulate_dense`]: identical loop
+    /// structure, but rows are nibble-packed at stride `RB =
+    /// packed4_len(N)` bytes and flow through the packed kernel entry
+    /// points, which sign-extend in-register. Bit-exact with the dense
+    /// body on a value-identical table (asserted by
+    /// `packed_layers_match_widened_dense`).
+    fn accumulate_packed(
+        &self,
+        bb: usize,
+        x_q: &[u8],
+        bs: usize,
+        acc: &mut [i32],
+        acc_base: &mut [i32],
+    ) {
+        let (kdim, n, p) = (self.in_dim, self.out_dim, self.degree);
+        let m = self.num_bases;
+        let rb = quant::packed4_len(n);
+        let (coeff, base) = (self.coeff4.as_slice(), self.base4.as_slice());
+        let kernel = self.kernel;
+        for b0 in (0..bs).step_by(bb) {
+            let bl = bb.min(bs - b0);
+            for feat in 0..kdim {
+                let crow = &coeff[feat * m * rb..(feat + 1) * m * rb];
+                let brow = &base[feat * rb..(feat + 1) * rb];
+                for b in b0..b0 + bl {
+                    let xq = x_q[b * kdim + feat];
+                    let (vals, k) = self.unit.eval_into(xq);
+                    let arow = &mut acc[b * n..(b + 1) * n];
+                    let wbase = (k - p) * rb;
+                    if p == 3 {
+                        let v = [vals[0] as i16, vals[1] as i16, vals[2] as i16, vals[3] as i16];
+                        kernel.mac4_p4(arow, &crow[wbase..wbase + 4 * rb], v);
+                    } else {
+                        for (j, &v) in vals.iter().enumerate() {
+                            if v == 0 {
+                                continue;
+                            }
+                            let wrow = &crow[wbase + j * rb..wbase + (j + 1) * rb];
+                            kernel.axpy_p4(arow, wrow, v as i16);
+                        }
+                    }
+                    let r = quant::relu_q(xq);
+                    if r != 0 {
+                        kernel.axpy_p4(&mut acc_base[b * n..(b + 1) * n], brow, r as i16);
                     }
                 }
             }
@@ -222,7 +323,9 @@ impl LayerPlan {
 
 /// Per-layer batch-block autotuning: time 2-3 candidate blockings at
 /// plan compile on synthetic rows, cache the winner process-wide per
-/// `(in_dim, out_dim, G, P, kernel)` shape. Replicas (`Engine::clone`)
+/// `(in_dim, out_dim, G, P, kernel, precision)` shape — precision is
+/// part of the key because packed int4 layers move half the bytes per
+/// feature pass and can prefer a different blocking. Replicas (`Engine::clone`)
 /// share the compiled plan outright; this cache additionally makes
 /// *recompiles* of an already-seen shape (`Engine::from_shared` on
 /// another model of the same architecture, test suites, churn re-adds)
@@ -233,7 +336,7 @@ mod autotune {
     use std::sync::{Mutex, OnceLock};
     use std::time::Instant;
 
-    use super::{KernelKind, LayerPlan, DEFAULT_BB};
+    use super::{KernelKind, LayerPlan, Precision, DEFAULT_BB};
 
     /// Candidate blockings. 16 is the measured pre-autotune default;
     /// 8 wins for wide accumulator rows (less L1 pressure per block),
@@ -247,7 +350,7 @@ mod autotune {
     /// plan compiles in shape-heavy test suites effectively free.
     const MIN_TUNE_MACS: usize = 1 << 14;
 
-    type ShapeKey = (usize, usize, usize, usize, KernelKind);
+    type ShapeKey = (usize, usize, usize, usize, KernelKind, Precision);
 
     fn cache() -> &'static Mutex<HashMap<ShapeKey, usize>> {
         static CACHE: OnceLock<Mutex<HashMap<ShapeKey, usize>>> = OnceLock::new();
@@ -270,7 +373,8 @@ mod autotune {
         if work < MIN_TUNE_MACS {
             return DEFAULT_BB;
         }
-        let key: ShapeKey = (lp.in_dim, lp.out_dim, lp.grid, lp.degree, lp.kernel.kind());
+        let key: ShapeKey =
+            (lp.in_dim, lp.out_dim, lp.grid, lp.degree, lp.kernel.kind(), lp.precision);
         if let Some(&bb) = cache().lock().unwrap().get(&key) {
             return bb;
         }
@@ -362,6 +466,13 @@ impl ExecutionPlan {
     /// (`BENCH_engine.json` rows, `kansas serve` startup).
     pub fn batch_blocks(&self) -> Vec<usize> {
         self.layers.iter().map(|l| l.bb).collect()
+    }
+
+    /// The storage precision of each layer, in layer order — the
+    /// mixed-precision companion of [`ExecutionPlan::batch_blocks`] for
+    /// serving reports.
+    pub fn precisions(&self) -> Vec<Precision> {
+        self.layers.iter().map(|l| l.precision).collect()
     }
 
     /// Bytes of derived per-layer tables (the plan's storage on top of
@@ -633,6 +744,81 @@ mod tests {
                 Some((wa, wb)) => {
                     assert_eq!(&acc, wa, "bb={bb} spline accumulators diverge");
                     assert_eq!(&acc_base, wb, "bb={bb} base accumulators diverge");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_layers_match_widened_dense() {
+        // Int4 -> Int8 widening via `with_precisions` is value-preserving
+        // (same weights, same multipliers — only the storage format
+        // changes), so the packed path must reproduce the dense path bit
+        // for bit on every kernel. Odd out_dims (9, 3) exercise the
+        // padded tail nibble.
+        let m4 =
+            QuantizedModel::synthetic_mixed("p4", &[6, 9, 4, 3], 5, 3, 11, &[Precision::Int4; 3]);
+        let m8 = m4.with_precisions(&[Precision::Int8; 3]);
+        let x_q: Vec<u8> = (0..5 * 6).map(|i| (i * 41 % 256) as u8).collect();
+        for kind in Kernel::available() {
+            let k = Kernel::forced(kind).unwrap();
+            let dense = ExecutionPlan::compile_with(&m8, k);
+            let packed = ExecutionPlan::compile_with(&m4, k);
+            let mut s1 = Scratch::new();
+            let mut s2 = Scratch::new();
+            let want = dense.execute(&x_q, 5, &mut s1).to_vec();
+            assert_eq!(packed.execute(&x_q, 5, &mut s2), &want[..], "kernel {kind}");
+        }
+    }
+
+    #[test]
+    fn mixed_plan_tables_and_bytes() {
+        let prec = [Precision::Int4, Precision::Int8, Precision::Int4];
+        let m = QuantizedModel::synthetic_mixed("mx", &[6, 9, 4, 3], 5, 3, 11, &prec);
+        let plan = ExecutionPlan::compile(&m);
+        assert_eq!(plan.precisions(), prec.to_vec());
+        for (lp, l) in plan.layers.iter().zip(&m.layers) {
+            let rb = quant::packed4_len(lp.out_dim);
+            match lp.precision {
+                Precision::Int4 => {
+                    assert!(lp.coeff16.is_empty() && lp.base16.is_empty());
+                    assert_eq!(lp.coeff4.len(), lp.in_dim * lp.num_bases * rb);
+                    assert_eq!(lp.base4.len(), lp.in_dim * rb);
+                    // packed rows decode back to the model's weights
+                    let row0 = quant::unpack_i4(&lp.coeff4[..rb], lp.out_dim);
+                    assert_eq!(&row0[..], &l.coeff.data()[..lp.out_dim]);
+                }
+                Precision::Int8 => {
+                    assert!(lp.coeff4.is_empty() && lp.base4.is_empty());
+                    assert_eq!(lp.coeff16.len(), l.coeff.len());
+                }
+            }
+        }
+        // packed layers hold their tables in strictly fewer derived bytes
+        let dense = ExecutionPlan::compile(&m.with_precisions(&[Precision::Int8; 3]));
+        assert!(plan.derived_bytes() < dense.derived_bytes());
+    }
+
+    #[test]
+    fn packed_bb_candidates_are_bit_exact() {
+        // blocking stays a pure scheduling choice on the packed path too
+        let m =
+            QuantizedModel::synthetic_mixed("pbb", &[6, 9, 4, 3], 5, 3, 11, &[Precision::Int4; 3]);
+        let plan = ExecutionPlan::compile(&m);
+        let lp = &plan.layers[0];
+        let bs = 37usize;
+        let x_q: Vec<u8> = (0..bs * lp.in_dim).map(|i| (i * 91 % 256) as u8).collect();
+        let n = lp.out_dim;
+        let mut want: Option<(Vec<i32>, Vec<i32>)> = None;
+        for bb in [1usize, 3, 8, 16, 32, 64] {
+            let mut acc = vec![0i32; bs * n];
+            let mut acc_base = vec![0i32; bs * n];
+            lp.accumulate_with_bb(bb, &x_q, bs, &mut acc, &mut acc_base);
+            match &want {
+                None => want = Some((acc, acc_base)),
+                Some((wa, wb)) => {
+                    assert_eq!(&acc, wa, "bb={bb} packed spline accumulators diverge");
+                    assert_eq!(&acc_base, wb, "bb={bb} packed base accumulators diverge");
                 }
             }
         }

@@ -57,7 +57,7 @@ use kan_sas::coordinator::{
 };
 use kan_sas::cost::array_area_mm2;
 use kan_sas::experiments;
-use kan_sas::kan::{Engine, Kernel, QuantizedModel};
+use kan_sas::kan::{Engine, Kernel, Precision, QuantizedModel};
 use kan_sas::loadgen::{self, LoadReport, MixEntry, Scenario};
 use kan_sas::report::Table;
 use kan_sas::sim::analytic;
@@ -160,7 +160,13 @@ fn print_help() {
          admission queue serving every registered model, per-model batchers\n\
          (batches never mix models), per-model + per-replica accounting.\n\
          Each --models SPEC is a .kanq path (model name = file stem) or a\n\
-         synthetic spec name:DIMxDIMx..DIM (e.g. mnist:64x32x10).\n\
+         synthetic spec name:DIMxDIMx..DIM (e.g. mnist:64x32x10), with an\n\
+         optional @int8|@int4|@mixed precision suffix: int4 packs two\n\
+         coefficients per byte (half the table memory per tenant — .kanq\n\
+         weights are demoted, synthetic models draw native int4; mixed\n\
+         alternates per layer). KANSAS_FORCE_PRECISION=int4 forces every\n\
+         synthetic model; startup prints per-model precisions and table\n\
+         bytes.\n\
          --mix weights the open-loop ARRIVAL split (default equal);\n\
          --weights sets each model's SERVICE share (integers >= 1, default\n\
          1) for the weighted fair scheduler: under contention, tenants are\n\
@@ -328,25 +334,55 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 /// One `--models` entry: `path/to/model.kanq` (name = file stem) or a
-/// synthetic spec `name:IN x HIDDEN x .. x OUT` (dims separated by `x`).
+/// synthetic spec `name:IN x HIDDEN x .. x OUT` (dims separated by `x`),
+/// optionally suffixed `@int8|@int4|@mixed` to pick the coefficient
+/// storage precision. Synthetic specs draw native int4 weights; `.kanq`
+/// artifacts are demoted layer-wise (`QuantizedModel::with_precisions`);
+/// `@mixed` alternates int4/int8 starting at the first layer.
 fn load_model_spec(spec: &str, seed: u64) -> Result<(String, Engine)> {
-    if spec.contains(':') {
-        let (name, dims) = parse_synth_spec(spec)?;
-        let engine = Engine::new(QuantizedModel::synthetic(&name, &dims, 5, 3, seed));
-        return Ok((name, engine));
+    let (body, prec) = match spec.rsplit_once('@') {
+        Some((b, p)) => (b, Some(p.trim().to_ascii_lowercase())),
+        None => (spec, None),
+    };
+    let layer_precisions = |n_layers: usize| -> Result<Vec<Precision>> {
+        match prec.as_deref() {
+            None | Some("int8") => Ok(vec![Precision::Int8; n_layers]),
+            Some("int4") => Ok(vec![Precision::Int4; n_layers]),
+            Some("mixed") => Ok((0..n_layers)
+                .map(|i| if i % 2 == 0 { Precision::Int4 } else { Precision::Int8 })
+                .collect()),
+            Some(other) => bail!("bad precision suffix '@{other}' (want int8|int4|mixed)"),
+        }
+    };
+    if body.contains(':') {
+        let (name, dims) = parse_synth_spec(body)?;
+        let qm = match &prec {
+            // no suffix: the plain synthetic path (honors
+            // KANSAS_FORCE_PRECISION for whole-process overrides)
+            None => QuantizedModel::synthetic(&name, &dims, 5, 3, seed),
+            Some(_) => {
+                let p = layer_precisions(dims.len() - 1)?;
+                QuantizedModel::synthetic_mixed(&name, &dims, 5, 3, seed, &p)
+            }
+        };
+        return Ok((name, Engine::new(qm)));
     }
-    let mut path = PathBuf::from(spec);
+    let mut path = PathBuf::from(body);
     if !path.exists() {
-        path = artifacts_dir().join(spec);
+        path = artifacts_dir().join(body);
     }
     let name = path
         .file_stem()
         .and_then(|s| s.to_str())
         .with_context(|| format!("model spec '{spec}' has no file stem"))?
         .to_string();
-    let qm = QuantizedModel::load(&path).with_context(|| {
+    let mut qm = QuantizedModel::load(&path).with_context(|| {
         format!("loading '{spec}' (run `make artifacts`, or use name:DIMxDIM syntax)")
     })?;
+    if prec.is_some() {
+        let p = layer_precisions(qm.layers.len())?;
+        qm = qm.with_precisions(&p);
+    }
     Ok((name, Engine::new(qm)))
 }
 
@@ -548,6 +584,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Kernel::available().iter().map(|k| k.name()).collect::<Vec<_>>().join("|"),
         blocks.join("  ")
     );
+    // per-model storage precisions and compiled coefficient-table bytes
+    // (ExecutionPlan::derived_bytes) — the memory the int4 packing saves
+    let precs: Vec<String> = specs
+        .iter()
+        .map(|(n, e)| {
+            let p: Vec<&str> = e.plan().precisions().iter().map(|p| p.name()).collect();
+            format!("{n}=[{}] {:.1} KiB", p.join(","), e.plan().derived_bytes() as f64 / 1024.0)
+        })
+        .collect();
+    println!("precision (coefficient tables): {}", precs.join("  "));
     let mut builder = GatewayBuilder::with_config(cfg);
     for ((name, engine), &w) in specs.into_iter().zip(&service_weights) {
         builder.register_weighted(&name, engine, w);

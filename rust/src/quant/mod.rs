@@ -90,6 +90,76 @@ pub fn requant_multiplier(scale: f64) -> i64 {
     crate::util::round_half_even(scale * 128.0 * (1u64 << SHIFT) as f64) as i64
 }
 
+// ---------------------------------------------------------------------------
+// Packed int4 ("nibble") storage — the sub-8-bit weight format.
+//
+// Layout contract (shared with `python/compile/aot.py` and the packed
+// kernel paths in `kan::kernel`): element `2i` lives in the LOW nibble of
+// byte `i`, element `2i+1` in the HIGH nibble; an odd-length row leaves
+// the final high nibble zero. Values are two's-complement int4 in
+// [-8, 7].
+// ---------------------------------------------------------------------------
+
+/// Bytes needed to hold `n` packed int4 values (two per byte, rounded up).
+#[inline(always)]
+pub const fn packed4_len(n: usize) -> usize {
+    n.div_ceil(2)
+}
+
+/// Sign-extend the low 4 bits of `nib` as two's-complement int4.
+#[inline(always)]
+pub fn sext4(nib: u8) -> i8 {
+    (((nib & 0x0F) ^ 8) as i8) - 8
+}
+
+/// Pack int4 values (each in [-8, 7]) two-per-byte, low nibble first.
+pub fn pack_i4(vals: &[i8]) -> Vec<u8> {
+    debug_assert!(vals.iter().all(|&v| (-8..=7).contains(&v)), "int4 range");
+    let mut out = Vec::with_capacity(packed4_len(vals.len()));
+    let mut chunks = vals.chunks_exact(2);
+    for pair in &mut chunks {
+        out.push((pair[0] as u8 & 0x0F) | ((pair[1] as u8 & 0x0F) << 4));
+    }
+    if let [last] = chunks.remainder() {
+        out.push(*last as u8 & 0x0F);
+    }
+    out
+}
+
+/// Unpack `n` int4 values from the packed-nibble layout of [`pack_i4`].
+pub fn unpack_i4(packed: &[u8], n: usize) -> Vec<i8> {
+    debug_assert_eq!(packed.len(), packed4_len(n));
+    (0..n).map(|i| sext4(packed[i >> 1] >> ((i & 1) * 4))).collect()
+}
+
+/// Demote one int8 weight to int4 by rounding to the nearest multiple of
+/// 16 (`floor((w + 8) / 16)`, clamped to the int4 range). Exact scale
+/// compensation is integer: a demoted layer's requant multipliers are
+/// multiplied by 16, so `w4 * (m * 16) ~= w8 * m`.
+#[inline(always)]
+pub fn demote_i8_to_i4(w: i8) -> i8 {
+    (((w as i32 + 8) >> 4).clamp(-8, 7)) as i8
+}
+
+/// Normalized RMS error of demoting an int8 tensor to int4:
+/// `sqrt(sum((w - 16*demote(w))^2) / sum(w^2))`, 0 for an all-zero
+/// tensor. The per-layer precision budget (`QuantizedModel::
+/// with_precision_budget`) compares against this.
+pub fn demotion_error(w: &[i8]) -> f64 {
+    let (mut e2, mut w2) = (0f64, 0f64);
+    for &v in w {
+        let q = demote_i8_to_i4(v) as f64 * 16.0;
+        let d = v as f64 - q;
+        e2 += d * d;
+        w2 += (v as f64) * (v as f64);
+    }
+    if w2 == 0.0 {
+        0.0
+    } else {
+        (e2 / w2).sqrt()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -162,6 +232,78 @@ mod tests {
             let t = combine(a1, a2, m1, m2);
             assert_eq!(t, a1 as i64 * m1 + a2 as i64 * m2);
             assert_eq!(requantize_combined(a1, a2, m1, m2), requantize(t));
+        });
+    }
+
+    #[test]
+    fn nibble_anchors() {
+        // sign boundaries and the zero row
+        assert_eq!(sext4(0x0), 0);
+        assert_eq!(sext4(0x7), 7);
+        assert_eq!(sext4(0x8), -8);
+        assert_eq!(sext4(0xF), -1);
+        // high bits beyond the nibble are ignored
+        assert_eq!(sext4(0xF8), -8);
+        assert_eq!(pack_i4(&[-8, 7]), vec![0x78]);
+        assert_eq!(pack_i4(&[-1]), vec![0x0F]);
+        assert_eq!(packed4_len(0), 0);
+        assert_eq!(packed4_len(1), 1);
+        assert_eq!(packed4_len(2), 1);
+        assert_eq!(packed4_len(7), 4);
+    }
+
+    #[test]
+    fn nibble_roundtrip_property() {
+        // pack -> unpack is the identity over random int4 tensors,
+        // including the -8/+7 sign boundaries and odd-length tails
+        check(200, 40, |rng: &mut Rng| {
+            let n = rng.below(65); // even, odd, and empty lengths
+            let mut vals: Vec<i8> = (0..n).map(|_| rng.range_i64(-8, 7) as i8).collect();
+            // force sign-boundary values into every non-empty tensor
+            if n >= 2 {
+                vals[0] = -8;
+                vals[n - 1] = 7;
+            }
+            let packed = pack_i4(&vals);
+            assert_eq!(packed.len(), packed4_len(n));
+            if n % 2 == 1 {
+                assert_eq!(packed[n / 2] >> 4, 0, "odd tail leaves high nibble zero");
+            }
+            assert_eq!(unpack_i4(&packed, n), vals);
+        });
+    }
+
+    #[test]
+    fn demotion_rounds_to_nearest_sixteen() {
+        assert_eq!(demote_i8_to_i4(0), 0);
+        assert_eq!(demote_i8_to_i4(7), 0);
+        assert_eq!(demote_i8_to_i4(8), 1);
+        assert_eq!(demote_i8_to_i4(-9), -1);
+        assert_eq!(demote_i8_to_i4(-8), 0);
+        assert_eq!(demote_i8_to_i4(127), 7); // clamped from 8
+        assert_eq!(demote_i8_to_i4(-128), -8);
+        check(300, 41, |rng: &mut Rng| {
+            let w = rng.range_i64(-128, 127) as i8;
+            let q = demote_i8_to_i4(w);
+            assert!((-8..=7).contains(&q));
+            // nearest multiple of 16 within the clamp
+            if (-120..=119).contains(&w) {
+                assert!((w as i32 - q as i32 * 16).abs() <= 8, "w={w} q={q}");
+            }
+        });
+    }
+
+    #[test]
+    fn demotion_error_bounds() {
+        assert_eq!(demotion_error(&[0i8; 16]), 0.0);
+        // exact multiples of 16 demote losslessly
+        assert_eq!(demotion_error(&[16, -32, 64, 112]), 0.0);
+        let e = demotion_error(&[3, -5, 7]);
+        assert!(e > 0.9, "tiny weights demote to zero: err ~ 1, got {e}");
+        check(50, 42, |rng: &mut Rng| {
+            let w: Vec<i8> = (0..64).map(|_| rng.range_i64(-127, 127) as i8).collect();
+            let e = demotion_error(&w);
+            assert!((0.0..=1.0 + 1e-9).contains(&e), "err={e}");
         });
     }
 

@@ -12,6 +12,7 @@
 //! the CI smoke step's) holds one valid object per line, each tagged
 //! with a known `kind`.
 
+use kan_sas::bench::{write_artifact, SCHEMA_VERSION};
 use kan_sas::util::json::Value;
 
 /// A miniature of the `serving_scale` output: one row per section,
@@ -83,7 +84,30 @@ fn bench_artifacts_on_disk_stay_valid_json() {
         let v = Value::parse(&text)
             .unwrap_or_else(|e| panic!("{name} is not valid JSON: {e}"));
         assert!(v.get("bench").is_some(), "{name} is missing its 'bench' tag");
+        assert_eq!(
+            v.get("schema_version").and_then(Value::as_f64),
+            Some(SCHEMA_VERSION as f64),
+            "{name} carries a stale or missing schema_version (rerun the bench)"
+        );
     }
+}
+
+/// `write_artifact` stamps the schema version on every write — including
+/// merge-appends over an existing artifact that predates the stamp.
+#[test]
+fn write_artifact_stamps_schema_version() {
+    let path =
+        std::env::temp_dir().join(format!("kan_sas_schema_stamp_{}.json", std::process::id()));
+    let path = path.to_str().expect("utf-8 temp path").to_string();
+    // simulate a pre-versioning artifact already on disk
+    std::fs::write(&path, "{\"bench\": \"engine\", \"old\": [1]}\n").expect("seed artifact");
+    write_artifact(&path, Value::obj([("fresh", Value::num(2.0))])).expect("merge write");
+    let text = std::fs::read_to_string(&path).expect("artifact readable");
+    std::fs::remove_file(&path).ok();
+    let v = Value::parse(&text).expect("artifact is valid JSON");
+    assert_eq!(v.get("schema_version").and_then(Value::as_f64), Some(SCHEMA_VERSION as f64));
+    assert_eq!(v.path("old/0").and_then(Value::as_f64), Some(1.0), "merge still appends");
+    assert_eq!(v.get("fresh").and_then(Value::as_f64), Some(2.0));
 }
 
 /// A miniature of the `kansas serve --telemetry` stream: one line of

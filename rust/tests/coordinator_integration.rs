@@ -15,7 +15,7 @@ use kan_sas::coordinator::{
     BatchPolicy, Dispatch, GatewayBuilder, GatewayConfig, Pool, PoolConfig, PoolError, Priority,
     QuotaPolicy, Request, Server, ServerConfig, ServeError, ShedPolicy, TelemetryConfig,
 };
-use kan_sas::kan::{Engine, LayerParams, QuantizedModel};
+use kan_sas::kan::{Engine, LayerParams, Precision, QuantizedModel};
 use kan_sas::tensor::Tensor;
 use kan_sas::util::rng::Rng;
 
@@ -40,6 +40,7 @@ fn tiny_engine() -> Engine {
             m2: 1000,
             s1: 1.0,
             s2: 1.0,
+            precision: Precision::Int8,
         }],
     })
 }
@@ -386,6 +387,54 @@ fn gateway_two_models_answer_correct_predictions() {
         assert!(ms.conserved(), "{}: {ms:?}", ms.name);
     }
     assert_eq!(stats.merged.batch_rows, 60);
+    assert!(stats.conserved());
+}
+
+/// Mixed-precision tenant set (acceptance criteria for the sub-8-bit
+/// engine): one int8 model and one packed-int4 model through the same
+/// gateway fleet, both answering bit-exact against direct engine
+/// forwards, per-model conservation intact, and the int4 tenant's
+/// compiled tables measurably smaller than its widened-int8 twin's.
+#[test]
+fn gateway_serves_mixed_precision_tenants() {
+    let engine_a = tiny_engine(); // int8
+    let model_b =
+        QuantizedModel::synthetic_mixed("nibble", &[6, 9, 5], 5, 3, 77, &[Precision::Int4; 2]);
+    assert_eq!(model_b.precisions(), vec![Precision::Int4; 2]);
+    let engine_b = Engine::new(model_b.clone());
+    let dense_twin = Engine::new(model_b.with_precisions(&[Precision::Int8; 2]));
+    assert!(
+        engine_b.plan().derived_bytes() < dense_twin.plan().derived_bytes(),
+        "int4 tenant must compile into fewer table bytes"
+    );
+    let (ref_a, ref_b) = (engine_a.clone(), engine_b.clone());
+    let mut builder = GatewayBuilder::with_config(gateway_config(3, 256, ShedPolicy::Block));
+    let id_a = builder.register("tiny", engine_a);
+    let id_b = builder.register("nibble", engine_b);
+    let gateway = builder.start();
+    let (ha, hb) = (gateway.handle(id_a), gateway.handle(id_b));
+    let mut rng = Rng::new(888);
+    for i in 0..60 {
+        let (h, reference, k) = if i % 2 == 0 { (&ha, &ref_a, 4) } else { (&hb, &ref_b, 6) };
+        let x_q: Vec<u8> = (0..k).map(|_| rng.below(256) as u8).collect();
+        let want = reference.forward_from_q(&x_q, 1).unwrap();
+        let got = h.infer_q(x_q).unwrap();
+        assert_eq!(got.t, want.t, "mixed-precision gateway answer diverged");
+        // the int4 tenant must also agree with its lossless int8 widening
+        if i % 2 == 1 {
+            let x_q2: Vec<u8> = (0..6).map(|_| rng.below(256) as u8).collect();
+            assert_eq!(
+                hb.infer_q(x_q2.clone()).unwrap().t,
+                dense_twin.forward_from_q(&x_q2, 1).unwrap().t,
+                "packed tenant diverged from its widened twin"
+            );
+        }
+    }
+    let stats = gateway.shutdown();
+    assert_eq!(stats.per_model.len(), 2);
+    for ms in &stats.per_model {
+        assert!(ms.conserved(), "{}: {ms:?}", ms.name);
+    }
     assert!(stats.conserved());
 }
 

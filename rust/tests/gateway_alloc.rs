@@ -19,7 +19,7 @@ use kan_sas::coordinator::{
     BatchPolicy, BufferPool, Dispatch, Event, EventKind, EventRing, GatewayBuilder, GatewayConfig,
     LogHistogram, QuotaPolicy, ShedPolicy, TelemetryConfig,
 };
-use kan_sas::kan::{Engine, QuantizedModel};
+use kan_sas::kan::{Engine, Precision, QuantizedModel};
 use kan_sas::util::alloc_count::{self, CountingAllocator};
 
 #[global_allocator]
@@ -102,9 +102,18 @@ fn response_buffer_pooling_is_allocation_free_after_warmup() {
         telemetry: TelemetryConfig::default(),
         ..Default::default()
     });
+    // a mixed-precision tenant: the packed int4 layer must not change
+    // the serving path's buffer-pooling profile
     let id = builder.register(
         "alloc",
-        Engine::new(QuantizedModel::synthetic("alloc", &[8, 12, 10], 5, 3, 31)),
+        Engine::new(QuantizedModel::synthetic_mixed(
+            "alloc",
+            &[8, 12, 10],
+            5,
+            3,
+            31,
+            &[Precision::Int4, Precision::Int8],
+        )),
     );
     let gateway = builder.start();
     let handle = gateway.handle(id);

@@ -130,6 +130,57 @@ fn golden_replays_exactly_on_every_kernel_path() {
     std::env::remove_var("KANSAS_FORCE_KERNEL");
 }
 
+/// Packed-precision replay, artifact-free: a deterministic synthetic
+/// mixed-precision model must produce identical final accumulators on
+/// every kernel path (the packed analogue of the golden replay above —
+/// CI also runs this binary with `KANSAS_FORCE_PRECISION=int4`, which
+/// pushes every synthetic-model test in the suite through the packed
+/// tables, including under `KANSAS_FORCE_KERNEL=scalar`).
+#[test]
+fn synthetic_mixed_precision_replays_on_every_kernel_path() {
+    use kan_sas::kan::Precision;
+    let precs = [Precision::Int4, Precision::Int8, Precision::Int4];
+    let model = QuantizedModel::synthetic_mixed("gold4", &[9, 14, 7, 5], 5, 3, 2024, &precs);
+    let bs = 13usize;
+    let x_q: Vec<u8> = (0..bs * 9).map(|i| (i * 71 % 256) as u8).collect();
+    let scalar = Engine::with_kernel(model.clone(), Kernel::scalar());
+    let mut s = Scratch::new();
+    let want = scalar.forward_into(&x_q, bs, &mut s).unwrap().to_vec();
+    for kind in Kernel::available() {
+        let e = Engine::with_kernel(model.clone(), Kernel::forced(kind).unwrap());
+        let mut s = Scratch::new();
+        assert_eq!(e.forward_into(&x_q, bs, &mut s).unwrap(), &want[..], "kernel {kind}");
+    }
+}
+
+/// Artifact-gated: demoting the mnist artifact to int4 produces a
+/// DIFFERENT model than the int8 golden vectors — but it must be the
+/// SAME model on every kernel path, and its losslessly widened int8
+/// twin must reproduce it bit for bit (storage format, not values).
+#[test]
+fn demoted_artifact_model_is_kernel_invariant() {
+    use kan_sas::kan::Precision;
+    let Some((model, golden)) = open_pair("mnist_kan") else { return };
+    let (x_q, xs) = golden.u8("x_q").unwrap();
+    let n = model.layers.len();
+    let m4 = model.with_precisions(&vec![Precision::Int4; n]);
+    let scalar = Engine::with_kernel(m4.clone(), Kernel::scalar());
+    let mut s = Scratch::new();
+    let want = scalar.forward_into(&x_q, xs[0], &mut s).unwrap().to_vec();
+    let widened = Engine::new(m4.with_precisions(&vec![Precision::Int8; n]));
+    let mut sw = Scratch::new();
+    assert_eq!(
+        widened.forward_into(&x_q, xs[0], &mut sw).unwrap(),
+        &want[..],
+        "widened int8 twin diverged from the packed int4 model"
+    );
+    for kind in Kernel::available() {
+        let e = Engine::with_kernel(m4.clone(), Kernel::forced(kind).unwrap());
+        let mut s = Scratch::new();
+        assert_eq!(e.forward_into(&x_q, xs[0], &mut s).unwrap(), &want[..], "kernel {kind}");
+    }
+}
+
 #[test]
 fn golden_labels_give_reasonable_accuracy() {
     // the golden batch carries true labels; the quantized engine should

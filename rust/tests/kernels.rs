@@ -7,7 +7,7 @@
 //! mac4/axpy vs independent oracles) by exercising whole plans, and
 //! `tests/golden_replay.rs` (each path vs the python golden vectors).
 
-use kan_sas::kan::{Engine, ExecutionPlan, Kernel, KernelKind, QuantizedModel, Scratch};
+use kan_sas::kan::{Engine, ExecutionPlan, Kernel, KernelKind, Precision, QuantizedModel, Scratch};
 use kan_sas::quant;
 use kan_sas::util::rng::{check, Rng};
 
@@ -48,6 +48,75 @@ fn every_kernel_path_matches_scalar_over_random_shapes() {
 #[test]
 fn remainder_lane_shapes_bit_exact() {
     let model = QuantizedModel::synthetic("rem", &[23, 33, 17, 10], 5, 3, 9);
+    let bs = 37usize;
+    let x_q: Vec<u8> = (0..bs * 23).map(|i| (i * 101 % 256) as u8).collect();
+    let scalar = Engine::with_kernel(model.clone(), Kernel::scalar());
+    let mut s = Scratch::new();
+    let want = scalar.forward_into(&x_q, bs, &mut s).unwrap().to_vec();
+    for kind in Kernel::available() {
+        let e = Engine::with_kernel(model.clone(), Kernel::forced(kind).unwrap());
+        assert_eq!(e.plan().kernel_kind(), kind);
+        let mut s = Scratch::new();
+        assert_eq!(e.forward_into(&x_q, bs, &mut s).unwrap(), &want[..], "kernel {kind}");
+    }
+}
+
+/// Packed-int4 full-plan differential: random mixed-precision models
+/// (always at least one int4 layer) must match BOTH the scalar packed
+/// reference and the dense int8 plan of the losslessly widened twin —
+/// the widening changes only the storage format, so any divergence is a
+/// nibble decode bug, not quantization. Multi-layer models drive the
+/// fused inter-layer requantize through the packed accumulators too.
+#[test]
+fn every_kernel_path_matches_scalar_on_packed_models() {
+    check(20, 4044, |rng: &mut Rng| {
+        let g = 1 + rng.below(8);
+        let p = 1 + rng.below(3);
+        let n_layers = 1 + rng.below(3);
+        let dims: Vec<usize> = (0..=n_layers).map(|_| 1 + rng.below(34)).collect();
+        let bs = 1 + rng.below(40);
+        let mut precs: Vec<Precision> = (0..n_layers)
+            .map(|_| if rng.below(2) == 0 { Precision::Int4 } else { Precision::Int8 })
+            .collect();
+        precs[rng.below(n_layers)] = Precision::Int4;
+        let seed = rng.below(1 << 30) as u64;
+        let model = QuantizedModel::synthetic_mixed("kp4", &dims, g, p, seed, &precs);
+        let x_q: Vec<u8> = (0..bs * dims[0]).map(|_| rng.below(256) as u8).collect();
+        let scalar = Engine::with_kernel(model.clone(), Kernel::scalar());
+        let mut s = Scratch::new();
+        let want = scalar.forward_into(&x_q, bs, &mut s).unwrap().to_vec();
+        let widened = Engine::with_kernel(
+            model.with_precisions(&vec![Precision::Int8; n_layers]),
+            Kernel::scalar(),
+        );
+        let mut sw = Scratch::new();
+        assert_eq!(
+            widened.forward_into(&x_q, bs, &mut sw).unwrap(),
+            &want[..],
+            "packed scalar != dense scalar on identical values: g={g} p={p} dims={dims:?}"
+        );
+        for kind in Kernel::available() {
+            if kind == KernelKind::Scalar {
+                continue;
+            }
+            let e = Engine::with_kernel(model.clone(), Kernel::forced(kind).unwrap());
+            let mut s = Scratch::new();
+            assert_eq!(
+                e.forward_into(&x_q, bs, &mut s).unwrap(),
+                &want[..],
+                "kernel {kind}: g={g} p={p} dims={dims:?} bs={bs} precs={precs:?}"
+            );
+        }
+    });
+}
+
+/// Deterministic packed worst-case remainders: odd out_dims (33, 17)
+/// pad a tail nibble in every row; 10 crosses the 16-lane body with a
+/// 10-lane tail; bs=37 stays coprime to the batch-block candidates.
+#[test]
+fn packed_remainder_lane_shapes_bit_exact() {
+    let precs = [Precision::Int4, Precision::Int4, Precision::Int8, Precision::Int4];
+    let model = QuantizedModel::synthetic_mixed("rem4", &[23, 33, 17, 10], 5, 3, 9, &precs);
     let bs = 37usize;
     let x_q: Vec<u8> = (0..bs * 23).map(|i| (i * 101 % 256) as u8).collect();
     let scalar = Engine::with_kernel(model.clone(), Kernel::scalar());

@@ -7,7 +7,7 @@
 //! and the default harness runs tests of one binary concurrently, so a
 //! second test here could allocate inside the measured window.
 
-use kan_sas::kan::{Engine, QuantizedModel, Scratch};
+use kan_sas::kan::{Engine, Precision, QuantizedModel, Scratch};
 use kan_sas::util::alloc_count::{self, CountingAllocator};
 
 #[global_allocator]
@@ -57,4 +57,29 @@ fn planned_forward_is_allocation_free_after_warmup() {
     let t = engine.forward_staged(16, &mut sized).unwrap();
     assert_eq!(t, &want16[..]);
     assert_eq!(alloc_count::events() - before, 0, "Scratch::for_plan must pre-size everything");
+
+    // mixed-precision plans route through the packed int4 kernel entry
+    // points; they must hit the same zero-allocation bar in steady state
+    let e4 = Engine::new(QuantizedModel::synthetic_mixed(
+        "zero_alloc4",
+        &[in_dim, 48, 24, 10],
+        5,
+        3,
+        7,
+        &[Precision::Int4, Precision::Int8, Precision::Int4],
+    ));
+    let mut s4 = Scratch::new();
+    let want4 = e4.forward_into(&x16, 16, &mut s4).unwrap().to_vec();
+    e4.forward_into(&x3, 3, &mut s4).unwrap();
+    let before = alloc_count::events();
+    for _ in 0..16 {
+        let t = e4.forward_into(&x16, 16, &mut s4).unwrap();
+        assert_eq!(t, &want4[..]);
+        e4.forward_into(&x3, 3, &mut s4).unwrap();
+    }
+    let events = alloc_count::events() - before;
+    assert_eq!(
+        events, 0,
+        "packed int4 layers must not touch the heap in steady state ({events} allocator events)"
+    );
 }
